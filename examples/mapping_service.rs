@@ -1,0 +1,141 @@
+//! End-to-end driver: the rank-reordering **service** under a real batched
+//! workload, proving all layers compose (recorded in EXPERIMENTS.md §E2E).
+//!
+//! * Layer 1/2: the AOT Pallas/JAX artifacts score candidate mappings and
+//!   verify final objectives (loaded through PJRT, Python not running).
+//! * Layer 3: the coordinator serves concurrent mapping jobs over TCP with
+//!   a bounded queue and a worker pool.
+//!
+//! Workload: a mix of mapping jobs (different instance families, sizes,
+//! algorithms, repetition counts) submitted by concurrent clients, like an
+//! MPI launcher fleet would at job-start time. Reports per-job results and
+//! service latency/throughput.
+//!
+//! Run: `cargo run --release --offline --example mapping_service`
+
+use qapmap::coordinator::{wire, Coordinator, MapRequest};
+use qapmap::mapping::algorithms::AlgorithmSpec;
+use qapmap::mapping::Hierarchy;
+use qapmap::model::build_instance;
+use qapmap::runtime::RuntimeHandle;
+use qapmap::util::{Rng, Timer};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+fn main() {
+    let mut rng = Rng::new(7);
+
+    // --- service bring-up -------------------------------------------------
+    let runtime = match RuntimeHandle::spawn_default() {
+        Ok(rt) => {
+            println!("[service] XLA artifacts loaded (batched scoring + verification ON)");
+            Some(rt)
+        }
+        Err(e) => {
+            println!("[service] XLA runtime unavailable ({e}); exact-only scoring");
+            None
+        }
+    };
+    let coordinator = Arc::new(Coordinator::start(2, 16, runtime));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let (c, s) = (Arc::clone(&coordinator), Arc::clone(&stop));
+        std::thread::spawn(move || wire::serve(listener, c, s))
+    };
+    println!("[service] listening on {addr}\n");
+
+    // --- workload ----------------------------------------------------------
+    // jobs: (family, app size exp, blocks, S, D, algorithm, reps, verify)
+    let job_specs: Vec<(&str, usize, usize, &str, &str, &str, u32)> = vec![
+        ("rgg", 12, 64, "4:16", "1:10", "topdown+Nc10", 4),
+        ("del", 12, 128, "4:16:2", "1:10:100", "topdown+Nc10", 4),
+        ("rgg", 13, 256, "4:16:4", "1:10:100", "topdown+Nc2", 2),
+        ("band", 12, 128, "4:16:2", "1:10:100", "mm+Np", 1),
+        ("del", 13, 256, "4:16:4", "1:10:100", "bottomup+Nc1", 2),
+        ("rgg", 12, 128, "4:16:2", "1:10:100", "gac", 1),
+        ("grid", 12, 64, "4:16", "1:10", "rcb+Nc2", 2),
+        ("rgg", 14, 512, "4:16:8", "1:10:100", "topdown+Nc10", 2),
+    ];
+
+    println!("[driver] building {} mapping jobs (the §4.1 pipeline)...", job_specs.len());
+    let mut requests = Vec::new();
+    for (i, (family, exp, blocks, s, d, algo, reps)) in job_specs.iter().enumerate() {
+        let name = match *family {
+            "grid" => format!("grid{}", 1usize << (exp / 2)),
+            f => format!("{f}{exp}"),
+        };
+        let app = qapmap::gen::by_name(&name, &mut rng).unwrap();
+        let comm = build_instance(&app, *blocks, &mut rng);
+        requests.push(MapRequest {
+            id: i as u64,
+            comm,
+            hierarchy: Hierarchy::parse(s, d).unwrap(),
+            algorithm: AlgorithmSpec::parse(algo).unwrap(),
+            repetitions: *reps,
+            seed: 1000 + i as u64,
+            verify: *blocks <= 256, // artifacts go up to n=256
+        });
+    }
+
+    // --- concurrent clients over TCP ---------------------------------------
+    let t = Timer::start();
+    let handles: Vec<_> = requests
+        .into_iter()
+        .map(|req| {
+            std::thread::spawn(move || {
+                let spec = req.algorithm.name();
+                let n = req.comm.n();
+                let resp = wire::request(addr, &req).expect("request failed");
+                (spec, n, resp)
+            })
+        })
+        .collect();
+
+    println!("[driver] jobs submitted by {} concurrent clients\n", handles.len());
+    println!(
+        "{:>4} {:>18} {:>6} {:>12} {:>12} {:>8} {:>9} {:>9}",
+        "id", "algorithm", "n", "J initial", "J final", "impr%", "time[s]", "verified"
+    );
+    let mut ok = 0usize;
+    for h in handles {
+        let (spec, n, resp) = h.join().unwrap();
+        match &resp.error {
+            Some(e) => println!("{:>4} {spec:>18} {n:>6}  FAILED: {e}", resp.id),
+            None => {
+                ok += 1;
+                println!(
+                    "{:>4} {:>18} {:>6} {:>12} {:>12} {:>8.1} {:>9.3} {:>9}",
+                    resp.id,
+                    spec,
+                    n,
+                    resp.objective_initial,
+                    resp.objective,
+                    100.0 * (1.0 - resp.objective as f64 / resp.objective_initial.max(1) as f64),
+                    resp.construct_secs + resp.ls_secs,
+                    match resp.verified {
+                        Some(true) => "OK",
+                        Some(false) => "MISMATCH",
+                        None => "-",
+                    }
+                );
+                assert_ne!(resp.verified, Some(false), "XLA cross-check must never mismatch");
+            }
+        }
+    }
+    let wall = t.secs();
+
+    // --- service report ------------------------------------------------------
+    let snap = coordinator.metrics();
+    println!("\n[service] {snap}");
+    println!(
+        "[driver] {ok} jobs ok in {wall:.2}s wall -> throughput {:.2} jobs/s",
+        ok as f64 / wall
+    );
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+    println!("[service] shut down cleanly");
+}

@@ -1,0 +1,52 @@
+//! Quickstart: the paper's pipeline in ~40 lines of library calls.
+//!
+//! 1. Generate an application graph (random geometric, DIMACS-style).
+//! 2. Partition it into 256 blocks and build the communication graph.
+//! 3. Map the 256 processes onto a 4:16:4 machine with several algorithms.
+//! 4. Compare objectives and running times.
+//!
+//! Run: `cargo run --release --offline --example quickstart`
+
+use qapmap::bench::Table;
+use qapmap::mapping::algorithms::{run, AlgorithmSpec};
+use qapmap::mapping::{DistanceOracle, Hierarchy};
+use qapmap::model::build_instance;
+use qapmap::partition::PartitionConfig;
+use qapmap::util::{timer::fmt_secs, Rng};
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    // 1. application graph: rgg14 (16384 vertices)
+    let app = qapmap::gen::random_geometric_graph(1 << 14, &mut rng);
+    println!("application graph: n={} m={}", app.n(), app.m());
+
+    // 2. communication model: partition into 256 blocks (fast config)
+    let comm = build_instance(&app, 256, &mut rng);
+    println!("communication graph: n={} m={} (m/n={:.1})\n", comm.n(), comm.m(), comm.density());
+
+    // 3. machine: 4 cores/processor, 16 processors/node, 4 nodes
+    //    distances: 1 within processor, 10 within node, 100 across
+    let h = Hierarchy::parse("4:16:4", "1:10:100").unwrap();
+    let oracle = DistanceOracle::implicit(h.clone());
+    let cfg = PartitionConfig::perfectly_balanced();
+
+    // 4. run the algorithm zoo
+    let table = Table::new(&["algorithm", "J(C,D,Pi)", "vs random", "time"], &[16, 12, 10, 12]);
+    let mut j_random = 0u64;
+    for name in ["random", "identity", "mm", "gac", "rcb", "bottomup", "topdown", "topdown+Nc10"] {
+        let spec = AlgorithmSpec::parse(name).unwrap();
+        let r = run(&comm, &h, &oracle, &spec, &cfg, &mut rng);
+        if name == "random" {
+            j_random = r.objective;
+        }
+        table.row(&[
+            name.to_string(),
+            r.objective.to_string(),
+            format!("{:.2}x", j_random as f64 / r.objective as f64),
+            fmt_secs(r.construct_secs + r.ls_secs),
+        ]);
+    }
+    println!("\n(the paper's headline: Top-Down beats the greedy constructions by ~50%,");
+    println!(" and +Nc10 local search adds a further ~5% at a fraction of N²'s cost)");
+}

@@ -1,0 +1,66 @@
+"""AOT lowering: JAX -> HLO text artifacts for the Rust/PJRT runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from ``python/``).
+Run by ``make artifacts`` only — never on the request path.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, entry point, sizes, batch)
+ARTIFACTS = [
+    ("qap_obj", model.objective, [64, 128, 256], None),
+    ("qap_batch", model.objective_batch, [64, 128], 16),
+    ("swap_gain", model.swap_gains, [64, 128, 256], 32),
+]
+
+
+def to_hlo_text(fn, args) -> str:
+    """Lower a jitted function at concrete avals and emit HLO text."""
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_all(out_dir: str) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+    for name, fn, sizes, batch in ARTIFACTS:
+        for n in sizes:
+            spec = model.example_args(n, batch or 16)
+            key = {
+                "qap_obj": "objective",
+                "qap_batch": "objective_batch",
+                "swap_gain": "swap_gains",
+            }[name]
+            text = to_hlo_text(fn, spec[key])
+            path = os.path.join(out_dir, f"{name}_n{n}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            written.append(path)
+            print(f"wrote {path} ({len(text)} chars)")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,189 @@
+"""Layer-1 Pallas kernels: dense QAP objective and batched swap gains.
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): the paper targets CPU
+clusters; there is no GPU artifact to port. We reformulate its objective for
+the TPU MXU instead: the permuted distance matrix ``R = P D P^T`` is two
+``n x n`` matmuls over a one-hot permutation matrix (systolic-array food),
+and the sparse-weighted reduction ``sum(C * R)`` fuses into the same kernel
+on the VPU. BlockSpec expresses the HBM<->VMEM schedule: ``BLOCK x BLOCK``
+tiles (128x128 at production sizes — the native MXU tile), a k-loop as the
+innermost grid dimension, and an accumulator tile that lives in VMEM across
+the k-steps.
+
+All ``pallas_call``s use ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that the Rust
+runtime executes byte-identically (see /opt/xla-example/README.md).
+
+VMEM footprint per grid step (production 128x128 f32 tiles): 3 input tiles +
+1 accumulator = 4 * 64 KiB = 256 KiB << 16 MiB VMEM, leaving ~60x headroom
+for double buffering; the analysis lives in DESIGN.md §7.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int) -> int:
+    """Largest MXU-friendly tile that divides n (artifact sizes are powers
+    of two, so this is 128 for n >= 128, else n itself)."""
+    for b in (128, 64, 32, 16, 8):
+        if n % b == 0 and b <= n:
+            return b
+    return n
+
+
+# --------------------------------------------------------------------------
+# Tiled matmul kernel: out = A @ B
+# --------------------------------------------------------------------------
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """Grid (i, j, k): accumulate A[i,k] @ B[k,j] into O[i,j]."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def matmul(a, b, block: int | None = None):
+    """Blocked Pallas matmul; block defaults to the MXU-friendly divisor."""
+    n, k = a.shape
+    k2, m = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    bn = block or _pick_block(n)
+    bk = block or _pick_block(k)
+    bm = block or _pick_block(m)
+    grid = (n // bn, m // bm, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+# --------------------------------------------------------------------------
+# Fused weighted-sum kernel: scalar = sum(C * R) over tiles
+# --------------------------------------------------------------------------
+
+def _wsum_kernel(c_ref, r_ref, o_ref):
+    """Grid (i, j): accumulate sum(C_tile * R_tile) into a (1,1) scalar."""
+    @pl.when((pl.program_id(0) == 0) & (pl.program_id(1) == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0, 0] += jnp.sum(c_ref[...] * r_ref[...])
+
+
+def weighted_sum(c, r, block: int | None = None):
+    """``sum(C * R)`` as a tiled Pallas reduction."""
+    n, m = c.shape
+    bn = block or _pick_block(n)
+    bm = block or _pick_block(m)
+    grid = (n // bn, m // bm)
+    out = pl.pallas_call(
+        _wsum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), c.dtype),
+        interpret=True,
+    )(c, r)
+    return out[0, 0]
+
+
+# --------------------------------------------------------------------------
+# QAP objective: J = 0.5 * sum(C * (P D P^T))
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def qap_objective(C, D, sigma, block: int | None = None):
+    """Dense QAP objective with the one-hot matmul formulation.
+
+    Args:
+      C: (n, n) f32 symmetric communication matrix, zero diagonal.
+      D: (n, n) f32 symmetric PE-distance matrix, zero diagonal.
+      sigma: (n,) i32, process -> PE assignment (a permutation).
+    Returns: scalar f32, counting each undirected edge once.
+    """
+    n = C.shape[0]
+    P = jax.nn.one_hot(sigma, n, dtype=C.dtype)  # (n, n)
+    T = matmul(P, D, block)                      # T[u, q]  = D[sigma[u], q]
+    R = matmul(T, P.T, block)                    # R[u, v]  = D[sigma[u], sigma[v]]
+    return 0.5 * weighted_sum(C, R, block)
+
+
+# --------------------------------------------------------------------------
+# Batched swap gains
+# --------------------------------------------------------------------------
+
+def _gain_kernel(cu_ref, cv_ref, dpu_ref, dpv_ref, corr_ref, o_ref):
+    """Grid (b, j): row-blocked fused gain reduction for a batch of pairs.
+
+    Per pair row: gain = -(sum_x (Cu-Cv)*(Dpv-Dpu) + corr).
+    """
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = -corr_ref[...]
+
+    o_ref[...] += -jnp.sum(
+        (cu_ref[...] - cv_ref[...]) * (dpv_ref[...] - dpu_ref[...]),
+        axis=1,
+    )
+
+
+@jax.jit
+def swap_gains(C, D, sigma, pairs):
+    """Gains for a batch of candidate swaps (positive = improvement).
+
+    Args:
+      C, D: as in :func:`qap_objective`.
+      sigma: (n,) i32 permutation.
+      pairs: (B, 2) i32 process pairs.
+    Returns: (B,) f32 gains.
+
+    The gathers (rows of C, permuted rows of D) run in plain XLA (L2); the
+    Pallas kernel fuses the subtract/multiply/reduce over row blocks.
+    """
+    n = C.shape[0]
+    B = pairs.shape[0]
+    u = pairs[:, 0]
+    v = pairs[:, 1]
+    pu = sigma[u]
+    pv = sigma[v]
+    Cu = C[u]              # (B, n)
+    Cv = C[v]
+    Dpu = D[pu][:, sigma]  # (B, n)
+    Dpv = D[pv][:, sigma]
+    corr = 2.0 * C[u, v] * D[pu, pv]  # (B,)
+
+    bb = _pick_block(B)
+    bn = _pick_block(n)
+    grid = (B // bb, n // bn)
+    return pl.pallas_call(
+        _gain_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bn), lambda b, j: (b, j)),
+            pl.BlockSpec((bb, bn), lambda b, j: (b, j)),
+            pl.BlockSpec((bb, bn), lambda b, j: (b, j)),
+            pl.BlockSpec((bb, bn), lambda b, j: (b, j)),
+            pl.BlockSpec((bb,), lambda b, j: (b,)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda b, j: (b,)),
+        out_shape=jax.ShapeDtypeStruct((B,), C.dtype),
+        interpret=True,
+    )(Cu, Cv, Dpu, Dpv, corr)

@@ -1,0 +1,63 @@
+"""Pure-jnp reference oracle for the dense QAP objective and swap gains.
+
+This is the correctness anchor for the Pallas kernels (Layer 1): every
+kernel in :mod:`compile.kernels.qap` must match these functions to float
+tolerance, enforced by ``python/tests`` (pytest + hypothesis).
+
+Conventions (matching the Rust side, see ``rust/src/mapping/objective.rs``):
+
+* ``C`` is the symmetric dense communication matrix with zero diagonal.
+* ``D`` is the symmetric dense PE-distance matrix with zero diagonal.
+* ``sigma`` maps process ``u`` to PE ``sigma[u]`` (the paper's ``Pi^-1``).
+* The objective counts every undirected edge once:
+  ``J = 1/2 * sum_{u,v} C[u,v] * D[sigma[u], sigma[v]]``.
+"""
+
+import jax.numpy as jnp
+
+
+def objective_ref(C, D, sigma):
+    """QAP objective via direct gather: ``0.5 * sum(C * D[sigma][:, sigma])``."""
+    Dp = D[sigma][:, sigma]
+    return 0.5 * jnp.sum(C * Dp)
+
+
+def objective_onehot_ref(C, D, sigma):
+    """Same objective via the one-hot-permutation matmul formulation
+    ``R = P D P^T`` — the MXU-shaped path the Pallas kernel implements."""
+    n = C.shape[0]
+    P = jnp.eye(n, dtype=C.dtype)[sigma]  # P[u, pe] = 1 iff sigma[u] == pe
+    R = P @ D @ P.T
+    return 0.5 * jnp.sum(C * R)
+
+
+def swap_gains_ref(C, D, sigma, pairs):
+    """Exact gains for a batch of candidate swaps.
+
+    For pair ``(u, v)``: the change of ``J`` if processes ``u`` and ``v``
+    exchange PEs; positive gain = objective decreases. The ``(u, v)`` edge
+    itself is invariant under the swap (D symmetric), hence the correction
+    term.
+    """
+    u = pairs[:, 0]
+    v = pairs[:, 1]
+    pu = sigma[u]
+    pv = sigma[v]
+    Cu = C[u]                      # (B, n)
+    Cv = C[v]
+    Dpu = D[pu][:, sigma]          # (B, n): D[pu, sigma[x]]
+    Dpv = D[pv][:, sigma]
+    # sum over ALL x of (C[u,x]-C[v,x]) (D[pv,px]-D[pu,px]); the x in {u,v}
+    # terms contribute -2*C[u,v]*D[pu,pv] which must be added back.
+    dense = jnp.sum((Cu - Cv) * (Dpv - Dpu), axis=1)
+    corr = 2.0 * C[u, v] * D[pu, pv]
+    delta = dense + corr
+    return -delta
+
+
+def swap_gain_bruteforce(C, D, sigma, u, v):
+    """O(n^2) brute force: recompute J before and after the swap."""
+    j_before = objective_ref(C, D, sigma)
+    swapped = sigma.at[u].set(sigma[v]).at[v].set(sigma[u])
+    j_after = objective_ref(C, D, swapped)
+    return j_before - j_after

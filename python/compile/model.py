@@ -1,0 +1,53 @@
+"""Layer-2 JAX model: the dense-QAP compute graph the Rust runtime executes.
+
+Exports three entry points, each AOT-lowered by :mod:`compile.aot` to HLO
+text that ``rust/src/runtime`` loads through PJRT:
+
+* :func:`objective` — scalar QAP objective of one assignment.
+* :func:`objective_batch` — objectives of a batch of candidate assignments
+  (the coordinator's batched verification/scoring path).
+* :func:`swap_gains` — gains of a batch of candidate swaps.
+
+Everything calls the Layer-1 Pallas kernels in :mod:`compile.kernels.qap`,
+so the whole stack lowers into one fused HLO module per entry point; Python
+never runs at request time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import qap
+
+
+def objective(C, D, sigma):
+    """Scalar objective; see :func:`compile.kernels.qap.qap_objective`."""
+    return qap.qap_objective(C, D, sigma)
+
+
+def objective_batch(C, D, sigmas):
+    """Objectives of ``sigmas`` (B, n) under shared ``C``/``D`` — vmapped
+    over the Pallas kernel so the lowered module contains a single batched
+    computation."""
+    return jax.vmap(lambda s: qap.qap_objective(C, D, s))(sigmas)
+
+
+def swap_gains(C, D, sigma, pairs):
+    """Batched swap gains; see :func:`compile.kernels.qap.swap_gains`."""
+    return qap.swap_gains(C, D, sigma, pairs)
+
+
+def example_args(n: int, batch: int = 16):
+    """ShapeDtypeStructs for AOT lowering at size ``n``."""
+    f = jnp.float32
+    i = jnp.int32
+    mat = jax.ShapeDtypeStruct((n, n), f)
+    return {
+        "objective": (mat, mat, jax.ShapeDtypeStruct((n,), i)),
+        "objective_batch": (mat, mat, jax.ShapeDtypeStruct((batch, n), i)),
+        "swap_gains": (
+            mat,
+            mat,
+            jax.ShapeDtypeStruct((n,), i),
+            jax.ShapeDtypeStruct((batch, 2), i),
+        ),
+    }

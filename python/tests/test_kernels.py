@@ -1,0 +1,193 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps sizes, dtype-representable weight ranges, seeds and
+permutations; this is the CORE correctness signal for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import qap, ref
+
+
+def random_instance(n: int, seed: int, max_w: int = 50):
+    """Symmetric zero-diagonal C and hierarchy-like D, plus a permutation."""
+    rng = np.random.default_rng(seed)
+    C = rng.integers(0, max_w, size=(n, n)).astype(np.float32)
+    C = np.triu(C, 1)
+    C = C + C.T
+    # hierarchy-ish distances: distance by top bits, symmetric, zero diag
+    levels = rng.choice([1.0, 10.0, 100.0], size=(n, n)).astype(np.float32)
+    D = np.triu(levels, 1)
+    D = D + D.T
+    sigma = rng.permutation(n).astype(np.int32)
+    return jnp.asarray(C), jnp.asarray(D), jnp.asarray(sigma)
+
+
+# ---------------------------------------------------------------- matmul --
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_jnp(n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((n, n)), dtype=jnp.float32)
+    b = jnp.asarray(rng.standard_normal((n, n)), dtype=jnp.float32)
+    got = qap.matmul(a, b)
+    want = a @ b
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rectangular():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((32, 64)), dtype=jnp.float32)
+    b = jnp.asarray(rng.standard_normal((64, 16)), dtype=jnp.float32)
+    np.testing.assert_allclose(qap.matmul(a, b), a @ b, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_explicit_small_block():
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.standard_normal((64, 64)), dtype=jnp.float32)
+    b = jnp.asarray(rng.standard_normal((64, 64)), dtype=jnp.float32)
+    np.testing.assert_allclose(qap.matmul(a, b, block=16), a @ b, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------- weighted sum --
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([8, 16, 64]), seed=st.integers(0, 2**31 - 1))
+def test_weighted_sum_matches_jnp(n, seed):
+    rng = np.random.default_rng(seed)
+    c = jnp.asarray(rng.standard_normal((n, n)), dtype=jnp.float32)
+    r = jnp.asarray(rng.standard_normal((n, n)), dtype=jnp.float32)
+    np.testing.assert_allclose(
+        qap.weighted_sum(c, r), jnp.sum(c * r), rtol=1e-4, atol=1e-4
+    )
+
+
+# -------------------------------------------------------------- objective --
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_objective_kernel_matches_ref(n, seed):
+    C, D, sigma = random_instance(n, seed)
+    got = qap.qap_objective(C, D, sigma)
+    want = ref.objective_ref(C, D, sigma)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_objective_onehot_formulation_equivalent():
+    C, D, sigma = random_instance(32, 7)
+    a = ref.objective_ref(C, D, sigma)
+    b = ref.objective_onehot_ref(C, D, sigma)
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_objective_identity_vs_manual():
+    # 4-node path graph, unit distances except one far pair
+    C = np.zeros((4, 4), np.float32)
+    for (u, v, w) in [(0, 1, 3), (1, 2, 5), (2, 3, 2)]:
+        C[u, v] = C[v, u] = w
+    D = np.full((4, 4), 10.0, np.float32)
+    D[np.arange(4), np.arange(4)] = 0
+    D[0, 1] = D[1, 0] = 1.0
+    D[2, 3] = D[3, 2] = 1.0
+    sigma = jnp.arange(4, dtype=jnp.int32)
+    got = qap.qap_objective(jnp.asarray(C), jnp.asarray(D), sigma)
+    # edges: (0,1): 3*1, (1,2): 5*10, (2,3): 2*1
+    np.testing.assert_allclose(got, 3 + 50 + 2, rtol=1e-6)
+
+
+def test_objective_invariant_under_sigma_relabel():
+    # applying the same extra permutation to rows/cols of D compensated by
+    # composing sigma leaves J unchanged
+    C, D, sigma = random_instance(16, 3)
+    tau = np.random.default_rng(4).permutation(16).astype(np.int32)
+    Dp = D[tau][:, tau]
+    inv = np.empty(16, np.int32)
+    inv[tau] = np.arange(16, dtype=np.int32)
+    j1 = qap.qap_objective(C, D, sigma)
+    j2 = qap.qap_objective(C, jnp.asarray(Dp), jnp.asarray(inv)[sigma])
+    np.testing.assert_allclose(j1, j2, rtol=1e-5)
+
+
+# -------------------------------------------------------------- batching --
+
+def test_objective_batch_matches_singles():
+    from compile import model
+    C, D, _ = random_instance(16, 5)
+    rng = np.random.default_rng(6)
+    sigmas = jnp.asarray(
+        np.stack([rng.permutation(16) for _ in range(8)]).astype(np.int32)
+    )
+    batch = model.objective_batch(C, D, sigmas)
+    singles = jnp.stack([qap.qap_objective(C, D, s) for s in sigmas])
+    np.testing.assert_allclose(batch, singles, rtol=1e-5)
+
+
+# ------------------------------------------------------------ swap gains --
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_swap_gains_match_bruteforce(n, seed):
+    C, D, sigma = random_instance(n, seed)
+    rng = np.random.default_rng(seed ^ 0xABCD)
+    B = 8
+    pairs = np.stack(
+        [rng.choice(n, size=2, replace=False) for _ in range(B)]
+    ).astype(np.int32)
+    got = qap.swap_gains(C, D, sigma, jnp.asarray(pairs))
+    want = np.array([
+        ref.swap_gain_bruteforce(C, D, sigma, int(u), int(v)) for u, v in pairs
+    ])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+
+def test_swap_gains_ref_matches_bruteforce():
+    C, D, sigma = random_instance(24, 11)
+    pairs = jnp.asarray([[0, 1], [2, 20], [5, 13]], dtype=jnp.int32)
+    fast = ref.swap_gains_ref(C, D, sigma, pairs)
+    slow = np.array([
+        ref.swap_gain_bruteforce(C, D, sigma, int(u), int(v)) for u, v in pairs
+    ])
+    np.testing.assert_allclose(fast, slow, rtol=1e-5, atol=1e-3)
+
+
+def test_swap_gain_antisymmetric_after_swap():
+    # applying a swap then evaluating the reverse swap gives the negated gain
+    C, D, sigma = random_instance(16, 12)
+    u, v = 3, 9
+    g1 = float(ref.swap_gains_ref(C, D, sigma, jnp.asarray([[u, v]], dtype=jnp.int32))[0])
+    swapped = sigma.at[u].set(sigma[v]).at[v].set(sigma[u])
+    g2 = float(ref.swap_gains_ref(C, D, swapped, jnp.asarray([[u, v]], dtype=jnp.int32))[0])
+    np.testing.assert_allclose(g1, -g2, rtol=1e-4, atol=1e-3)
+
+
+# --------------------------------------------------------------- dtypes ---
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_objective_dtypes(dtype):
+    if dtype == jnp.float64:
+        jax.config.update("jax_enable_x64", True)
+    try:
+        C, D, sigma = random_instance(16, 13)
+        C = C.astype(dtype)
+        D = D.astype(dtype)
+        got = qap.qap_objective(C, D, sigma)
+        want = ref.objective_ref(C, D, sigma)
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+        assert got.dtype == dtype
+    finally:
+        if dtype == jnp.float64:
+            jax.config.update("jax_enable_x64", False)

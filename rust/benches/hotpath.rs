@@ -1,0 +1,128 @@
+//! Hot-path micro-benchmarks (the §Perf deliverable's measurement tool):
+//!
+//! * swap gain: fast sparse O(d_u+d_v) vs slow dense O(n), ns/op
+//! * swap apply (Γ update) ns/op
+//! * distance oracle: implicit O(k) vs explicit O(1) lookup, ns/query
+//! * objective initialization O(n+m)
+//! * partitioner throughput (vertices/s)
+//! * XLA runtime objective-call latency (if artifacts are built)
+
+use qapmap::gen::random_geometric_graph;
+use qapmap::mapping::objective::{DenseEngine, Mapping, SwapEngine};
+use qapmap::mapping::{objective, DistanceOracle, Hierarchy};
+use qapmap::model::build_instance;
+use qapmap::partition::{partition_kway, PartitionConfig};
+use qapmap::util::timer::{bench_secs, black_box, fmt_secs};
+use qapmap::util::{Rng, Timer};
+
+fn main() {
+    let n: usize = 4096;
+    let mut rng = Rng::new(600);
+    let app = random_geometric_graph(n * 8, &mut rng);
+    let comm = build_instance(&app, n, &mut rng);
+    let h = Hierarchy::new(vec![4, 16, (n / 64) as u64], vec![1, 10, 100]).unwrap();
+    let implicit = DistanceOracle::implicit(h.clone());
+    let explicit = DistanceOracle::explicit(&h);
+    println!("== hot-path micro-benchmarks (n={n}, m={}, m/n={:.1}) ==\n", comm.m(), comm.density());
+
+    // -- distance oracle ---------------------------------------------------
+    let queries: Vec<(u32, u32)> =
+        (0..1024).map(|_| (rng.index(n) as u32, rng.index(n) as u32)).collect();
+    let t_imp = bench_secs(0.2, 50, || {
+        let mut acc = 0u64;
+        for &(p, q) in &queries {
+            acc += implicit.distance(p, q);
+        }
+        black_box(acc);
+    }) / queries.len() as f64;
+    let t_exp = bench_secs(0.2, 50, || {
+        let mut acc = 0u64;
+        for &(p, q) in &queries {
+            acc += explicit.distance(p, q);
+        }
+        black_box(acc);
+    }) / queries.len() as f64;
+    println!("oracle   implicit : {:>12}/query", fmt_secs(t_imp));
+    println!("oracle   explicit : {:>12}/query  ({:.1}x of implicit)\n", fmt_secs(t_exp), t_exp / t_imp);
+
+    // -- objective init ----------------------------------------------------
+    let m0 = Mapping { sigma: rng.permutation(n) };
+    let t_obj = bench_secs(0.2, 20, || {
+        black_box(objective(&comm, &implicit, &m0));
+    });
+    println!("objective O(n+m)  : {:>12}/init  ({:.1} M edge-terms/s)\n", fmt_secs(t_obj), comm.m() as f64 / t_obj / 1e6);
+
+    // -- swap gain: fast vs slow --------------------------------------------
+    let eng = SwapEngine::new(&comm, &implicit, m0.clone());
+    let pairs: Vec<(u32, u32)> = (0..1024)
+        .map(|_| {
+            let u = rng.index(n) as u32;
+            let v = (u as usize + 1 + rng.index(n - 1)) as u32 % n as u32;
+            (u, v)
+        })
+        .filter(|&(u, v)| u != v)
+        .collect();
+    let t_fast = bench_secs(0.3, 20, || {
+        let mut acc = 0i64;
+        for &(u, v) in &pairs {
+            acc += eng.swap_gain(u, v);
+        }
+        black_box(acc);
+    }) / pairs.len() as f64;
+    let dense = DenseEngine::new(&comm, &implicit, m0.clone());
+    let t_slow = bench_secs(0.3, 5, || {
+        let mut acc = 0i64;
+        for &(u, v) in &pairs[..128] {
+            acc += dense.swap_gain(u, v);
+        }
+        black_box(acc);
+    }) / 128.0;
+    println!("swap gain  fast   : {:>12}/op", fmt_secs(t_fast));
+    println!("swap gain  slow   : {:>12}/op   (speedup {:.0}x at n={n})\n", fmt_secs(t_slow), t_slow / t_fast);
+
+    // -- swap apply ----------------------------------------------------------
+    let mut eng2 = SwapEngine::new(&comm, &implicit, m0.clone());
+    let t_apply = bench_secs(0.3, 20, || {
+        for &(u, v) in &pairs[..256] {
+            eng2.do_swap(u, v);
+        }
+        for &(u, v) in pairs[..256].iter().rev() {
+            eng2.do_swap(u, v); // undo to keep state bounded
+        }
+    }) / 512.0;
+    println!("swap apply (Γ upd): {:>12}/op\n", fmt_secs(t_apply));
+
+    // -- partitioner ----------------------------------------------------------
+    let g = random_geometric_graph(1 << 15, &mut rng);
+    let (p, secs) = qapmap::util::timer::time(|| {
+        partition_kway(&g, 64, &PartitionConfig::fast(), &mut rng)
+    });
+    println!(
+        "partitioner fast  : {:>12}  ({:.2} M vertices/s, cut {})",
+        fmt_secs(secs),
+        g.n() as f64 / secs / 1e6,
+        p.cut(&g)
+    );
+
+    // -- XLA runtime ------------------------------------------------------------
+    match qapmap::runtime::RuntimeHandle::spawn_default() {
+        Ok(rt) => {
+            let small_comm = build_instance(&app, 256, &mut rng);
+            let hh = Hierarchy::new(vec![4, 16, 4], vec![1, 10, 100]).unwrap();
+            let oo = DistanceOracle::implicit(hh);
+            let mm = Mapping { sigma: rng.permutation(256) };
+            // warm-up (compile already done at load; first exec warms buffers)
+            let _ = rt.objective(&small_comm, &oo, &mm).unwrap();
+            let t = Timer::start();
+            let iters = 20;
+            for _ in 0..iters {
+                black_box(rt.objective(&small_comm, &oo, &mm).unwrap());
+            }
+            println!(
+                "xla objective n256: {:>12}/call (densify + PJRT execute)",
+                fmt_secs(t.secs() / iters as f64)
+            );
+        }
+        Err(_) => println!("xla objective     : artifacts not built, skipped"),
+    }
+}

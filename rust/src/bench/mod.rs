@@ -1,0 +1,123 @@
+//! Shared benchmark harness (criterion is unavailable offline).
+//!
+//! Provides the instance suite of the paper's §4.1 pipeline, simple table /
+//! CSV output helpers, and the `--full` switch: by default the benches run a
+//! laptop-scale version of each experiment (this container has one core);
+//! `QAPMAP_BENCH_FULL=1` (set by `make bench-full`) runs paper-scale sizes.
+
+use crate::graph::Graph;
+use crate::model::build_instance;
+use crate::util::Rng;
+use std::io::Write;
+use std::path::Path;
+
+/// True when paper-scale sizes were requested.
+pub fn full_mode() -> bool {
+    std::env::var("QAPMAP_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// A mapping-problem instance: the communication graph of a partition of an
+/// application graph (the paper's §4.1 pipeline), labelled for reporting.
+#[derive(Debug, Clone)]
+pub struct Instance {
+    pub name: String,
+    /// Communication graph (n = number of processes = number of PEs).
+    pub comm: Graph,
+}
+
+/// Build the §4.1 instance suite: partition each application graph of the
+/// generator catalogue into `n_blocks` blocks and take the communication
+/// graph. `families` are generator names understood by [`crate::gen::by_name`]
+/// minus the size (e.g. "rgg", "del"); the application graphs are sized
+/// `scale_factor * n_blocks` vertices (>= 64x keeps cut weights meaningful).
+pub fn instance_suite(
+    families: &[&str],
+    n_blocks: usize,
+    scale_factor: usize,
+    rng: &mut Rng,
+) -> Vec<Instance> {
+    let app_n = (n_blocks * scale_factor).max(256);
+    let exp = (usize::BITS - app_n.leading_zeros()) as usize; // ceil log2
+    families
+        .iter()
+        .map(|family| {
+            let name = match *family {
+                "grid" | "torus" => {
+                    let side = (app_n as f64).sqrt().ceil() as usize;
+                    format!("{family}{side}")
+                }
+                "band" | "gnp" => format!("{family}{app_n}"),
+                _ => format!("{family}{exp}"),
+            };
+            let app = crate::gen::by_name(&name, rng)
+                .unwrap_or_else(|e| panic!("building {name}: {e}"));
+            let comm = build_instance(&app, n_blocks, rng);
+            Instance { name: format!("{name}/k{n_blocks}"), comm }
+        })
+        .collect()
+}
+
+/// Default instance families used across the experiments (mirrors the
+/// paper's mix: meshes `rgg`/`del`, matrix-like `band`, structured `grid`).
+pub const FAMILIES: &[&str] = &["rgg", "del", "band", "grid"];
+
+/// Append rows to a CSV file under `out/` (created if needed).
+pub fn write_csv(path: &str, header: &str, rows: &[String]) {
+    let p = Path::new(path);
+    if let Some(dir) = p.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    let mut f = std::fs::File::create(p).expect("create csv");
+    writeln!(f, "{header}").unwrap();
+    for r in rows {
+        writeln!(f, "{r}").unwrap();
+    }
+    eprintln!("  [csv] wrote {} rows to {}", rows.len(), path);
+}
+
+/// Fixed-width table printer.
+pub struct Table {
+    widths: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str], widths: &[usize]) -> Table {
+        let mut line = String::new();
+        for (h, w) in headers.iter().zip(widths) {
+            line.push_str(&format!("{h:>w$}  ", w = *w));
+        }
+        println!("{line}");
+        println!("{}", "-".repeat(line.len()));
+        Table { widths: widths.to_vec() }
+    }
+
+    pub fn row(&self, cells: &[String]) {
+        let mut line = String::new();
+        for (c, w) in cells.iter().zip(&self.widths) {
+            line.push_str(&format!("{c:>w$}  ", w = *w));
+        }
+        println!("{line}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_produces_right_sizes() {
+        let mut rng = Rng::new(1);
+        let suite = instance_suite(&["rgg", "grid"], 64, 16, &mut rng);
+        assert_eq!(suite.len(), 2);
+        for inst in &suite {
+            assert_eq!(inst.comm.n(), 64, "{}", inst.name);
+            assert!(inst.comm.m() > 0);
+        }
+    }
+
+    #[test]
+    fn full_mode_env() {
+        // can't mutate env safely in parallel tests; just exercise the call
+        let _ = full_mode();
+    }
+}

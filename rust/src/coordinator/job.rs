@@ -1,0 +1,120 @@
+//! Job types exchanged between clients and the coordinator.
+
+use crate::graph::Graph;
+use crate::mapping::algorithms::AlgorithmSpec;
+use crate::mapping::local_search::SearchStats;
+use crate::mapping::Hierarchy;
+
+/// A mapping job: find a good assignment of the processes of `comm` onto
+/// the PEs of `hierarchy` with the named algorithm.
+#[derive(Debug, Clone)]
+pub struct MapRequest {
+    /// Client-chosen id, echoed in the response.
+    pub id: u64,
+    /// Sparse communication graph (`n` processes).
+    pub comm: Graph,
+    /// Machine hierarchy; `hierarchy.n_pes()` must equal `comm.n()`.
+    pub hierarchy: Hierarchy,
+    /// Algorithm (see [`AlgorithmSpec::parse`] for names).
+    pub algorithm: AlgorithmSpec,
+    /// Seeds to try; the best-scoring mapping wins. Multiple repetitions
+    /// are scored in one batched XLA call when the runtime is attached.
+    pub repetitions: u32,
+    /// Base RNG seed.
+    pub seed: u64,
+    /// Cross-check the winning objective against the dense XLA artifact.
+    pub verify: bool,
+}
+
+impl MapRequest {
+    /// Validate the request invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.comm.n() != self.hierarchy.n_pes() {
+            return Err(format!(
+                "processes ({}) != PEs ({})",
+                self.comm.n(),
+                self.hierarchy.n_pes()
+            ));
+        }
+        if self.repetitions == 0 {
+            return Err("repetitions must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// The coordinator's answer.
+#[derive(Debug, Clone)]
+pub struct MapResponse {
+    pub id: u64,
+    /// Winning assignment (process -> PE).
+    pub sigma: Vec<u32>,
+    /// Objective of the winning assignment (exact integer arithmetic).
+    pub objective: u64,
+    /// Objective after construction, before local search.
+    pub objective_initial: u64,
+    /// Dense XLA objective, if verification ran (f32 path).
+    pub xla_objective: Option<f32>,
+    /// True if verification ran and agreed within f32 tolerance.
+    pub verified: Option<bool>,
+    pub construct_secs: f64,
+    pub ls_secs: f64,
+    /// Total service time including queueing.
+    pub total_secs: f64,
+    pub stats: SearchStats,
+    /// Error message if the job failed (other fields zeroed).
+    pub error: Option<String>,
+}
+
+impl MapResponse {
+    /// An error response for a failed job.
+    pub fn failure(id: u64, error: String) -> MapResponse {
+        MapResponse {
+            id,
+            sigma: Vec::new(),
+            objective: 0,
+            objective_initial: 0,
+            xla_objective: None,
+            verified: None,
+            construct_secs: 0.0,
+            ls_secs: 0.0,
+            total_secs: 0.0,
+            stats: SearchStats::default(),
+            error: Some(error),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::from_edges;
+
+    #[test]
+    fn validate_size_mismatch() {
+        let req = MapRequest {
+            id: 1,
+            comm: from_edges(4, &[(0, 1, 1)]),
+            hierarchy: Hierarchy::new(vec![2, 4], vec![1, 10]).unwrap(),
+            algorithm: AlgorithmSpec::parse("identity").unwrap(),
+            repetitions: 1,
+            seed: 0,
+            verify: false,
+        };
+        assert!(req.validate().is_err());
+    }
+
+    #[test]
+    fn validate_ok() {
+        let req = MapRequest {
+            id: 1,
+            comm: from_edges(8, &[(0, 1, 1)]),
+            hierarchy: Hierarchy::new(vec![2, 4], vec![1, 10]).unwrap(),
+            algorithm: AlgorithmSpec::parse("random").unwrap(),
+            repetitions: 2,
+            seed: 0,
+            verify: false,
+        };
+        assert!(req.validate().is_ok());
+    }
+}

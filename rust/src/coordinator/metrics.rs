@@ -1,0 +1,168 @@
+//! Service metrics: throughput counters and a latency histogram.
+//!
+//! Lock-free on the hot path where possible (atomics); the histogram uses
+//! coarse log-scale buckets so a snapshot never needs to walk raw samples.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-scale latency histogram: bucket `i` counts latencies in
+/// `[2^i, 2^(i+1)) µs`, up to ~34 s.
+const BUCKETS: usize = 25;
+
+/// Shared metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    jobs_submitted: AtomicU64,
+    jobs_completed: AtomicU64,
+    jobs_failed: AtomicU64,
+    verifications: AtomicU64,
+    verification_mismatches: AtomicU64,
+    total_service_us: AtomicU64,
+    latency_buckets: [AtomicU64; BUCKETS],
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn on_submit(&self) {
+        self.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_complete(&self, service_secs: f64, failed: bool) {
+        if failed {
+            self.jobs_failed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        }
+        let us = (service_secs * 1e6) as u64;
+        self.total_service_us.fetch_add(us, Ordering::Relaxed);
+        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.latency_buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_verification(&self, ok: bool) {
+        self.verifications.fetch_add(1, Ordering::Relaxed);
+        if !ok {
+            self.verification_mismatches.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Consistent-enough snapshot for reporting.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let completed = self.jobs_completed.load(Ordering::Relaxed);
+        let failed = self.jobs_failed.load(Ordering::Relaxed);
+        let total_us = self.total_service_us.load(Ordering::Relaxed);
+        let buckets: Vec<u64> =
+            self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        MetricsSnapshot {
+            jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
+            jobs_completed: completed,
+            jobs_failed: failed,
+            verifications: self.verifications.load(Ordering::Relaxed),
+            verification_mismatches: self.verification_mismatches.load(Ordering::Relaxed),
+            mean_latency_secs: if completed + failed > 0 {
+                total_us as f64 / 1e6 / (completed + failed) as f64
+            } else {
+                0.0
+            },
+            p50_latency_secs: percentile_from_buckets(&buckets, 0.50),
+            p99_latency_secs: percentile_from_buckets(&buckets, 0.99),
+        }
+    }
+}
+
+fn percentile_from_buckets(buckets: &[u64], q: f64) -> f64 {
+    let total: u64 = buckets.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let target = (total as f64 * q).ceil() as u64;
+    let mut seen = 0u64;
+    for (i, &c) in buckets.iter().enumerate() {
+        seen += c;
+        if seen >= target {
+            // upper edge of bucket i in seconds
+            return (1u64 << (i + 1)) as f64 / 1e6;
+        }
+    }
+    (1u64 << buckets.len()) as f64 / 1e6
+}
+
+/// Point-in-time metrics view.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub verifications: u64,
+    pub verification_mismatches: u64,
+    pub mean_latency_secs: f64,
+    pub p50_latency_secs: f64,
+    pub p99_latency_secs: f64,
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "jobs: {} submitted, {} ok, {} failed | verify: {}/{} ok | latency mean {:.1} ms p50 {:.1} ms p99 {:.1} ms",
+            self.jobs_submitted,
+            self.jobs_completed,
+            self.jobs_failed,
+            self.verifications - self.verification_mismatches,
+            self.verifications,
+            self.mean_latency_secs * 1e3,
+            self.p50_latency_secs * 1e3,
+            self.p99_latency_secs * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_complete(0.010, false);
+        m.on_complete(0.100, true);
+        let s = m.snapshot();
+        assert_eq!(s.jobs_submitted, 2);
+        assert_eq!(s.jobs_completed, 1);
+        assert_eq!(s.jobs_failed, 1);
+        assert!((s.mean_latency_secs - 0.055).abs() < 0.001);
+    }
+
+    #[test]
+    fn percentiles_monotone() {
+        let m = Metrics::new();
+        for i in 0..100 {
+            m.on_complete(0.001 * (i + 1) as f64, false);
+        }
+        let s = m.snapshot();
+        assert!(s.p50_latency_secs <= s.p99_latency_secs);
+        assert!(s.p50_latency_secs > 0.0);
+    }
+
+    #[test]
+    fn verification_counts() {
+        let m = Metrics::new();
+        m.on_verification(true);
+        m.on_verification(false);
+        let s = m.snapshot();
+        assert_eq!(s.verifications, 2);
+        assert_eq!(s.verification_mismatches, 1);
+    }
+
+    #[test]
+    fn empty_snapshot() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.mean_latency_secs, 0.0);
+        assert_eq!(s.p50_latency_secs, 0.0);
+    }
+}

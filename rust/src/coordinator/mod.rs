@@ -1,0 +1,24 @@
+//! The mapping **service** coordinator (Layer 3).
+//!
+//! Models the deployment the paper motivates: a cluster-wide rank-reordering
+//! service that MPI launchers call at `MPI_Init` time. Clients submit
+//! mapping jobs (communication graph + machine hierarchy + algorithm); the
+//! leader schedules them on a worker pool, optionally runs several seeds and
+//! scores the candidates in one *batched* XLA call through the PJRT runtime
+//! (independent cross-validation of the sparse incremental objective), and
+//! returns the permutation with timings and metrics.
+//!
+//! * [`job`] — request/response types.
+//! * [`service`] — worker pool, queue, batched verification.
+//! * [`metrics`] — latency/throughput accounting.
+//! * [`wire`] — line-oriented TCP protocol (no external serialization
+//!   crates are available offline) + a blocking client.
+
+pub mod job;
+pub mod metrics;
+pub mod service;
+pub mod wire;
+
+pub use job::{MapRequest, MapResponse};
+pub use metrics::MetricsSnapshot;
+pub use service::Coordinator;

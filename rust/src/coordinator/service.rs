@@ -1,0 +1,339 @@
+//! The coordinator proper: bounded job queue, worker pool, batched XLA
+//! scoring/verification.
+//!
+//! Architecture (single process, std threads — tokio is unavailable
+//! offline, and the workload is CPU-bound, so blocking workers are the
+//! right shape anyway):
+//!
+//! ```text
+//!   submit() ──► bounded queue ──► worker 0..W ──► per-job pipeline:
+//!                                        run `repetitions` seeds
+//!                                        batched XLA scoring (≤16/call)
+//!                                        pick best, verify, respond
+//! ```
+//!
+//! Backpressure: `submit` blocks when the queue is full (the launcher-side
+//! contract of a rank-reordering service); `try_submit` refuses instead.
+
+use super::job::{MapRequest, MapResponse};
+use super::metrics::{Metrics, MetricsSnapshot};
+use crate::mapping::algorithms::{run, Construction};
+use crate::mapping::{objective, DistanceOracle, Mapping};
+use crate::partition::PartitionConfig;
+use crate::runtime::{RuntimeHandle, BATCH};
+use crate::util::{Rng, Timer};
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Relative tolerance for the f32 XLA cross-check.
+pub const VERIFY_RTOL: f32 = 1e-4;
+
+struct Queue {
+    jobs: Mutex<VecDeque<(MapRequest, Sender<MapResponse>, Timer)>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+    shutdown: Mutex<bool>,
+}
+
+/// The mapping service. Dropping it drains the queue and joins the workers.
+pub struct Coordinator {
+    queue: Arc<Queue>,
+    workers: Vec<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Start `workers` worker threads. `runtime` (if provided) enables
+    /// batched XLA scoring and verification for problems that fit the
+    /// AOT artifact sizes.
+    pub fn start(workers: usize, capacity: usize, runtime: Option<RuntimeHandle>) -> Coordinator {
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new(VecDeque::new()),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+            shutdown: Mutex::new(false),
+        });
+        let metrics = Arc::new(Metrics::new());
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let q = Arc::clone(&queue);
+                let rt = runtime.clone();
+                let m = Arc::clone(&metrics);
+                std::thread::spawn(move || worker_loop(q, rt, m))
+            })
+            .collect();
+        Coordinator { queue, workers: handles, metrics }
+    }
+
+    /// Submit a job; blocks while the queue is full (backpressure).
+    /// The response arrives on the returned channel.
+    pub fn submit(&self, req: MapRequest) -> std::sync::mpsc::Receiver<MapResponse> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.metrics.on_submit();
+        let mut jobs = self.queue.jobs.lock().unwrap();
+        while jobs.len() >= self.queue.capacity {
+            jobs = self.queue.not_full.wait(jobs).unwrap();
+        }
+        jobs.push_back((req, tx, Timer::start()));
+        drop(jobs);
+        self.queue.not_empty.notify_one();
+        rx
+    }
+
+    /// Submit without blocking; `Err(req)` if the queue is full.
+    pub fn try_submit(
+        &self,
+        req: MapRequest,
+    ) -> Result<std::sync::mpsc::Receiver<MapResponse>, MapRequest> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut jobs = self.queue.jobs.lock().unwrap();
+        if jobs.len() >= self.queue.capacity {
+            return Err(req);
+        }
+        self.metrics.on_submit();
+        jobs.push_back((req, tx, Timer::start()));
+        drop(jobs);
+        self.queue.not_empty.notify_one();
+        Ok(rx)
+    }
+
+    /// Submit and wait for the answer.
+    pub fn submit_blocking(&self, req: MapRequest) -> MapResponse {
+        self.submit(req).recv().expect("worker dropped response channel")
+    }
+
+    /// Current metrics.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        *self.queue.shutdown.lock().unwrap() = true;
+        self.queue.not_empty.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(queue: Arc<Queue>, runtime: Option<RuntimeHandle>, metrics: Arc<Metrics>) {
+    loop {
+        let (req, tx, timer) = {
+            let mut jobs = queue.jobs.lock().unwrap();
+            loop {
+                if let Some(job) = jobs.pop_front() {
+                    queue.not_full.notify_one();
+                    break job;
+                }
+                if *queue.shutdown.lock().unwrap() {
+                    return;
+                }
+                jobs = queue.not_empty.wait(jobs).unwrap();
+            }
+        };
+        let resp = process_job(&req, runtime.as_ref(), &metrics, &timer);
+        let failed = resp.error.is_some();
+        metrics.on_complete(resp.total_secs, failed);
+        let _ = tx.send(resp); // client may have gone away; fine
+    }
+}
+
+/// Run one job end-to-end: `repetitions` seeds, batched scoring, verify.
+fn process_job(
+    req: &MapRequest,
+    runtime: Option<&RuntimeHandle>,
+    metrics: &Metrics,
+    timer: &Timer,
+) -> MapResponse {
+    if let Err(e) = req.validate() {
+        return MapResponse::failure(req.id, e);
+    }
+    let oracle = DistanceOracle::implicit(req.hierarchy.clone());
+    let part_cfg = PartitionConfig::perfectly_balanced();
+
+    // deterministic constructions never benefit from repetitions
+    let deterministic = matches!(
+        req.algorithm.construction,
+        Construction::Identity | Construction::MuellerMerbach | Construction::GreedyAllC
+    ) && matches!(
+        req.algorithm.neighborhood,
+        crate::mapping::algorithms::Neighborhood::None
+    );
+    let reps = if deterministic { 1 } else { req.repetitions.max(1) } as usize;
+
+    let mut results = Vec::with_capacity(reps);
+    for r in 0..reps {
+        let mut rng = Rng::new(req.seed.wrapping_add(r as u64));
+        results.push(run(&req.comm, &req.hierarchy, &oracle, &req.algorithm, &part_cfg, &mut rng));
+    }
+
+    // batched XLA scoring when possible (≤ BATCH per call); otherwise the
+    // exact integer objectives decide directly.
+    let best_idx = if results.len() > 1 {
+        if let Some(rt) = runtime {
+            score_with_runtime(rt, req, &oracle, &results)
+        } else {
+            argmin_exact(&results)
+        }
+    } else {
+        0
+    };
+    let best = &results[best_idx];
+
+    let (xla_objective, verified) = if req.verify {
+        match runtime.and_then(|rt| rt.objective(&req.comm, &oracle, &best.mapping).transpose()) {
+            Some(Ok(xj)) => {
+                let exact = best.objective as f32;
+                let ok = (xj - exact).abs() <= VERIFY_RTOL * exact.max(1.0);
+                metrics.on_verification(ok);
+                (Some(xj), Some(ok))
+            }
+            Some(Err(_)) | None => (None, None),
+        }
+    } else {
+        (None, None)
+    };
+
+    debug_assert_eq!(best.objective, objective(&req.comm, &oracle, &best.mapping));
+    MapResponse {
+        id: req.id,
+        sigma: best.mapping.sigma.clone(),
+        objective: best.objective,
+        objective_initial: best.objective_initial,
+        xla_objective,
+        verified,
+        construct_secs: best.construct_secs,
+        ls_secs: best.ls_secs,
+        total_secs: timer.secs(),
+        stats: best.stats.clone(),
+        error: None,
+    }
+}
+
+fn argmin_exact(results: &[crate::mapping::algorithms::MapResult]) -> usize {
+    results
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, r)| r.objective)
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Score candidates through the batched XLA artifact (16 per call); fall
+/// back to the exact integers if the problem does not fit any artifact.
+fn score_with_runtime(
+    rt: &RuntimeHandle,
+    req: &MapRequest,
+    oracle: &DistanceOracle,
+    results: &[crate::mapping::algorithms::MapResult],
+) -> usize {
+    let mappings: Vec<Mapping> = results.iter().map(|r| r.mapping.clone()).collect();
+    let mut scores: Vec<f32> = Vec::with_capacity(mappings.len());
+    for chunk in mappings.chunks(BATCH) {
+        match rt.objective_batch(&req.comm, oracle, chunk) {
+            Ok(Some(mut s)) => scores.append(&mut s),
+            _ => return argmin_exact(results),
+        }
+    }
+    scores
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random_geometric_graph;
+    use crate::mapping::algorithms::AlgorithmSpec;
+    use crate::mapping::Hierarchy;
+
+    fn request(id: u64, algo: &str, reps: u32) -> MapRequest {
+        let mut rng = Rng::new(id);
+        MapRequest {
+            id,
+            comm: random_geometric_graph(128, &mut rng),
+            hierarchy: Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap(),
+            algorithm: AlgorithmSpec::parse(algo).unwrap(),
+            repetitions: reps,
+            seed: id * 100,
+            verify: false,
+        }
+    }
+
+    #[test]
+    fn single_job_roundtrip() {
+        let coord = Coordinator::start(2, 8, None);
+        let resp = coord.submit_blocking(request(7, "topdown", 1));
+        assert_eq!(resp.id, 7);
+        assert!(resp.error.is_none());
+        assert_eq!(resp.sigma.len(), 128);
+        Mapping { sigma: resp.sigma.clone() }.validate().unwrap();
+        let snap = coord.metrics();
+        assert_eq!(snap.jobs_completed, 1);
+    }
+
+    #[test]
+    fn concurrent_jobs_all_complete() {
+        let coord = Coordinator::start(3, 4, None);
+        let rxs: Vec<_> = (0..10)
+            .map(|i| coord.submit(request(i, if i % 2 == 0 { "topdown+Nc1" } else { "mm" }, 1)))
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.id, i as u64);
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+        }
+        assert_eq!(coord.metrics().jobs_completed, 10);
+    }
+
+    #[test]
+    fn repetitions_pick_best() {
+        let coord = Coordinator::start(1, 2, None);
+        let single = coord.submit_blocking(request(1, "random", 1));
+        let multi = coord.submit_blocking(request(1, "random", 8));
+        assert!(multi.objective <= single.objective);
+    }
+
+    #[test]
+    fn invalid_request_fails_gracefully() {
+        let coord = Coordinator::start(1, 2, None);
+        let mut req = request(9, "topdown", 1);
+        req.repetitions = 0;
+        let resp = coord.submit_blocking(req);
+        assert!(resp.error.is_some());
+        assert_eq!(coord.metrics().jobs_failed, 1);
+    }
+
+    #[test]
+    fn try_submit_backpressure() {
+        // 1 worker busy with a slow job, capacity 1: the 3rd submit refuses.
+        let coord = Coordinator::start(1, 1, None);
+        let _rx1 = coord.submit(request(1, "mm+N2", 1));
+        let _rx2 = coord.submit(request(2, "mm", 1));
+        // queue now possibly full (worker may have taken one); submit until refused
+        let mut refused = false;
+        for i in 3..40 {
+            if coord.try_submit(request(i, "mm+N2", 1)).is_err() {
+                refused = true;
+                break;
+            }
+        }
+        assert!(refused, "bounded queue never refused");
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let coord = Coordinator::start(4, 8, None);
+        let _ = coord.submit_blocking(request(1, "identity", 1));
+        drop(coord); // must not hang
+    }
+}

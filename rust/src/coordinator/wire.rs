@@ -1,0 +1,311 @@
+//! Line-oriented TCP protocol for the mapping service.
+//!
+//! No serialization crates exist in the offline vendor set, so the wire
+//! format is a simple, versioned text protocol (one request / one response
+//! per connection — the launcher-side usage pattern):
+//!
+//! ```text
+//! C->S:  MAP v1 <id> <algo> <S> <D> <reps> <seed> <verify:0|1> <n> <m>
+//!        <u> <v> <w>          (m edge lines)
+//!        END
+//! S->C:  OK <id> <objective> <j_initial> <construct_secs> <ls_secs>
+//!           <xla_obj|-> <verified:0|1|->
+//!        SIGMA <n space-separated PE ids>
+//!   or:  ERR <id> <message...>
+//! ```
+
+use super::job::{MapRequest, MapResponse};
+use super::service::Coordinator;
+use crate::graph::{Builder, NodeId};
+use crate::mapping::algorithms::AlgorithmSpec;
+use crate::mapping::Hierarchy;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Serialize a request.
+pub fn write_request<W: Write>(w: &mut W, req: &MapRequest) -> Result<()> {
+    let s: Vec<String> = req.hierarchy.s.iter().map(|x| x.to_string()).collect();
+    let d: Vec<String> = req.hierarchy.d.iter().map(|x| x.to_string()).collect();
+    writeln!(
+        w,
+        "MAP v1 {} {} {} {} {} {} {} {} {}",
+        req.id,
+        req.algorithm.name(),
+        s.join(":"),
+        d.join(":"),
+        req.repetitions,
+        req.seed,
+        if req.verify { 1 } else { 0 },
+        req.comm.n(),
+        req.comm.m(),
+    )?;
+    for u in 0..req.comm.n() as NodeId {
+        for (v, wt) in req.comm.edges(u) {
+            if v > u {
+                writeln!(w, "{u} {v} {wt}")?;
+            }
+        }
+    }
+    writeln!(w, "END")?;
+    Ok(())
+}
+
+/// Parse a request from a line reader.
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<MapRequest> {
+    let mut header = String::new();
+    r.read_line(&mut header).context("reading header")?;
+    let toks: Vec<&str> = header.split_whitespace().collect();
+    if toks.len() != 11 || toks[0] != "MAP" || toks[1] != "v1" {
+        bail!("bad header: {header:?}");
+    }
+    let id: u64 = toks[2].parse()?;
+    let algorithm = AlgorithmSpec::parse(toks[3]).map_err(|e| anyhow!(e))?;
+    let hierarchy = Hierarchy::parse(toks[4], toks[5]).map_err(|e| anyhow!(e))?;
+    let repetitions: u32 = toks[6].parse()?;
+    let seed: u64 = toks[7].parse()?;
+    let verify = toks[8] == "1";
+    let n: usize = toks[9].parse()?;
+    // header token 10 is m — trailing; recount while reading
+    let mut b = Builder::new(n);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            bail!("connection closed before END");
+        }
+        let t = line.trim();
+        if t == "END" {
+            break;
+        }
+        let mut it = t.split_whitespace();
+        let (u, v, w) = (
+            it.next().ok_or_else(|| anyhow!("bad edge line {t:?}"))?,
+            it.next().ok_or_else(|| anyhow!("bad edge line {t:?}"))?,
+            it.next().ok_or_else(|| anyhow!("bad edge line {t:?}"))?,
+        );
+        b.add_edge(u.parse()?, v.parse()?, w.parse()?);
+    }
+    Ok(MapRequest { id, comm: b.build(), hierarchy, algorithm, repetitions, seed, verify })
+}
+
+/// Serialize a response.
+pub fn write_response<W: Write>(w: &mut W, resp: &MapResponse) -> Result<()> {
+    if let Some(e) = &resp.error {
+        writeln!(w, "ERR {} {}", resp.id, e.replace('\n', " "))?;
+        return Ok(());
+    }
+    writeln!(
+        w,
+        "OK {} {} {} {:.6} {:.6} {} {}",
+        resp.id,
+        resp.objective,
+        resp.objective_initial,
+        resp.construct_secs,
+        resp.ls_secs,
+        resp.xla_objective.map(|x| x.to_string()).unwrap_or_else(|| "-".into()),
+        resp.verified.map(|v| if v { "1" } else { "0" }.to_string()).unwrap_or_else(|| "-".into()),
+    )?;
+    let sigma: Vec<String> = resp.sigma.iter().map(|x| x.to_string()).collect();
+    writeln!(w, "SIGMA {}", sigma.join(" "))?;
+    Ok(())
+}
+
+/// Parse a response.
+pub fn read_response<R: BufRead>(r: &mut R) -> Result<MapResponse> {
+    let mut line = String::new();
+    r.read_line(&mut line)?;
+    let toks: Vec<&str> = line.split_whitespace().collect();
+    match toks.first() {
+        Some(&"ERR") => {
+            let id: u64 = toks.get(1).unwrap_or(&"0").parse()?;
+            Ok(MapResponse::failure(id, toks[2..].join(" ")))
+        }
+        Some(&"OK") => {
+            if toks.len() != 8 {
+                bail!("bad OK line: {line:?}");
+            }
+            let mut sig_line = String::new();
+            r.read_line(&mut sig_line)?;
+            let sig_toks: Vec<&str> = sig_line.split_whitespace().collect();
+            if sig_toks.first() != Some(&"SIGMA") {
+                bail!("expected SIGMA line, got {sig_line:?}");
+            }
+            let sigma: Vec<u32> =
+                sig_toks[1..].iter().map(|t| t.parse()).collect::<Result<_, _>>()?;
+            Ok(MapResponse {
+                id: toks[1].parse()?,
+                objective: toks[2].parse()?,
+                objective_initial: toks[3].parse()?,
+                construct_secs: toks[4].parse()?,
+                ls_secs: toks[5].parse()?,
+                xla_objective: if toks[6] == "-" { None } else { Some(toks[6].parse()?) },
+                verified: match toks[7] {
+                    "-" => None,
+                    "1" => Some(true),
+                    _ => Some(false),
+                },
+                total_secs: 0.0,
+                stats: Default::default(),
+                sigma,
+                error: None,
+            })
+        }
+        _ => bail!("bad response line: {line:?}"),
+    }
+}
+
+/// Serve the coordinator over TCP until `stop` becomes true. One thread per
+/// connection; one request per connection.
+pub fn serve(
+    listener: TcpListener,
+    coordinator: Arc<Coordinator>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let mut handles = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let coord = Arc::clone(&coordinator);
+                handles.push(std::thread::spawn(move || {
+                    let _ = handle_connection(stream, &coord);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+fn handle_connection(stream: TcpStream, coord: &Coordinator) -> Result<()> {
+    stream.set_nonblocking(false)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let resp = match read_request(&mut reader) {
+        Ok(req) => coord.submit_blocking(req),
+        Err(e) => MapResponse::failure(0, format!("protocol error: {e}")),
+    };
+    write_response(&mut writer, &resp)?;
+    writer.flush()?;
+    Ok(())
+}
+
+/// Blocking client: one request, one response.
+pub fn request<A: ToSocketAddrs>(addr: A, req: &MapRequest) -> Result<MapResponse> {
+    let stream = TcpStream::connect(addr)?;
+    let mut writer = BufWriter::new(stream.try_clone()?);
+    write_request(&mut writer, req)?;
+    writer.flush()?;
+    let mut reader = BufReader::new(stream);
+    read_response(&mut reader)
+}
+
+/// Helper for tests: consume the rest of a reader (drain).
+pub fn drain<R: Read>(r: &mut R) {
+    let mut buf = [0u8; 1024];
+    while matches!(r.read(&mut buf), Ok(n) if n > 0) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random_geometric_graph;
+    use crate::util::Rng;
+
+    fn sample_request() -> MapRequest {
+        let mut rng = Rng::new(5);
+        MapRequest {
+            id: 42,
+            comm: random_geometric_graph(128, &mut rng),
+            hierarchy: Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap(),
+            algorithm: AlgorithmSpec::parse("topdown+Nc2").unwrap(),
+            repetitions: 2,
+            seed: 99,
+            verify: false,
+        }
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let req = sample_request();
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req).unwrap();
+        let back = read_request(&mut BufReader::new(&buf[..])).unwrap();
+        assert_eq!(back.id, req.id);
+        assert_eq!(back.comm, req.comm);
+        assert_eq!(back.hierarchy, req.hierarchy);
+        assert_eq!(back.algorithm.name(), "topdown+Nc2");
+        assert_eq!(back.repetitions, 2);
+        assert_eq!(back.seed, 99);
+        assert!(!back.verify);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resp = MapResponse {
+            id: 7,
+            sigma: vec![2, 0, 1],
+            objective: 1234,
+            objective_initial: 2000,
+            xla_objective: Some(1234.0),
+            verified: Some(true),
+            construct_secs: 0.5,
+            ls_secs: 0.25,
+            total_secs: 1.0,
+            stats: Default::default(),
+            error: None,
+        };
+        let mut buf = Vec::new();
+        write_response(&mut buf, &resp).unwrap();
+        let back = read_response(&mut BufReader::new(&buf[..])).unwrap();
+        assert_eq!(back.id, 7);
+        assert_eq!(back.sigma, vec![2, 0, 1]);
+        assert_eq!(back.objective, 1234);
+        assert_eq!(back.xla_objective, Some(1234.0));
+        assert_eq!(back.verified, Some(true));
+    }
+
+    #[test]
+    fn error_roundtrip() {
+        let resp = MapResponse::failure(3, "something\nbad".into());
+        let mut buf = Vec::new();
+        write_response(&mut buf, &resp).unwrap();
+        let back = read_response(&mut BufReader::new(&buf[..])).unwrap();
+        assert_eq!(back.id, 3);
+        assert!(back.error.unwrap().contains("something bad"));
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        for bad in ["", "MAP v0 1 mm 4 1 1 0 0 4 0\nEND\n", "HELLO\n", "MAP v1 x\n"] {
+            assert!(read_request(&mut BufReader::new(bad.as_bytes())).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn tcp_end_to_end() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let coord = Arc::new(Coordinator::start(2, 4, None));
+        let stop = Arc::new(AtomicBool::new(false));
+        let server = {
+            let (c, s) = (Arc::clone(&coord), Arc::clone(&stop));
+            std::thread::spawn(move || serve(listener, c, s))
+        };
+        let resp = request(addr, &sample_request()).unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.id, 42);
+        assert_eq!(resp.sigma.len(), 128);
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap().unwrap();
+    }
+}

@@ -1,0 +1,83 @@
+//! Banded "sparse-matrix" graphs, standing in for the UF sparse-matrix
+//! instances (cop20k_A, cfd2, boneS01, ... in the paper's Table 3): vertices
+//! are matrix rows, each row connects to a random subset of nearby rows
+//! within a bandwidth, mimicking the locality of FEM/circuit matrices.
+
+use crate::graph::{connect_components, Builder, Graph, NodeId};
+use crate::util::Rng;
+
+/// Banded matrix-like graph: `n` rows, expected `avg_deg` neighbors per row,
+/// all within a band of width `8 * avg_deg` (plus a few long-range fill-ins,
+/// like factorization fill).
+pub fn band_matrix_graph(n: usize, avg_deg: usize, rng: &mut Rng) -> Graph {
+    let mut b = Builder::new(n);
+    if n < 2 {
+        return b.build();
+    }
+    let band = (8 * avg_deg).max(2).min(n - 1);
+    for v in 0..n {
+        // within-band couplings
+        for _ in 0..avg_deg {
+            let off = 1 + rng.index(band);
+            if v + off < n {
+                b.add_edge(v as NodeId, (v + off) as NodeId, 1 + rng.next_bounded(4));
+            }
+        }
+        // occasional long-range fill-in (~2% of rows)
+        if rng.chance(0.02) {
+            let u = rng.index(n);
+            if u != v {
+                b.add_edge(v as NodeId, u as NodeId, 1);
+            }
+        }
+    }
+    connect_components(&b.build())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::is_connected;
+
+    #[test]
+    fn basic_properties() {
+        let mut rng = Rng::new(21);
+        let g = band_matrix_graph(2000, 8, &mut rng);
+        assert_eq!(g.n(), 2000);
+        assert!(is_connected(&g));
+        assert_eq!(g.validate(), Ok(()));
+        let mn = g.density();
+        assert!(mn > 4.0 && mn < 10.0, "density {mn}");
+    }
+
+    #[test]
+    fn bandedness() {
+        let mut rng = Rng::new(22);
+        let avg = 4usize;
+        let g = band_matrix_graph(1000, avg, &mut rng);
+        let band = 8 * avg;
+        let mut far = 0usize;
+        let mut total = 0usize;
+        for v in 0..g.n() as NodeId {
+            for &u in g.neighbors(v) {
+                if u > v {
+                    total += 1;
+                    if (u - v) as usize > band {
+                        far += 1;
+                    }
+                }
+            }
+        }
+        // only the ~2% fill-ins + connectivity patches may exceed the band
+        assert!((far as f64) < 0.05 * total as f64, "far={far} total={total}");
+    }
+
+    #[test]
+    fn tiny() {
+        let mut rng = Rng::new(1);
+        assert_eq!(band_matrix_graph(0, 4, &mut rng).n(), 0);
+        assert_eq!(band_matrix_graph(1, 4, &mut rng).n(), 1);
+        let g = band_matrix_graph(2, 4, &mut rng);
+        assert!(is_connected(&g));
+    }
+}

@@ -1,0 +1,318 @@
+//! Delaunay triangulation — the DIMACS `delX` family.
+//!
+//! Bowyer–Watson incremental insertion with remembering walk point location.
+//! Points are pre-sorted in Morton (Z-curve) order so consecutive insertions
+//! are spatially close and each walk is O(1) expected, giving ~O(n log n)
+//! behaviour in practice — good enough to generate `del17` in seconds.
+//!
+//! The triangulation uses a large enclosing super-triangle; triangles
+//! touching its vertices are dropped when the edge list is emitted. For
+//! uniform random points in the unit square the hull distortion this
+//! introduces is negligible for benchmarking purposes.
+
+use crate::graph::{connect_components, Builder, Graph, NodeId};
+use crate::util::Rng;
+
+/// Generate `delX`-style instance: Delaunay triangulation of `n` uniform
+/// random points in the unit square, unit edge weights.
+pub fn delaunay_graph(n: usize, rng: &mut Rng) -> Graph {
+    let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.f64(), rng.f64())).collect();
+    delaunay_of_points(&pts)
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Tri {
+    /// Vertex indices, counter-clockwise.
+    v: [u32; 3],
+    /// `nbr[i]` is the triangle opposite `v[i]` (shares edge
+    /// `(v[i+1], v[i+2])`); `u32::MAX` on the boundary.
+    nbr: [u32; 3],
+    alive: bool,
+}
+
+const NONE: u32 = u32::MAX;
+
+#[inline]
+fn orient(a: (f64, f64), b: (f64, f64), c: (f64, f64)) -> f64 {
+    (b.0 - a.0) * (c.1 - a.1) - (b.1 - a.1) * (c.0 - a.0)
+}
+
+/// > 0 iff `p` lies strictly inside the circumcircle of CCW triangle (a,b,c).
+#[inline]
+fn in_circle(a: (f64, f64), b: (f64, f64), c: (f64, f64), p: (f64, f64)) -> f64 {
+    let (ax, ay) = (a.0 - p.0, a.1 - p.1);
+    let (bx, by) = (b.0 - p.0, b.1 - p.1);
+    let (cx, cy) = (c.0 - p.0, c.1 - p.1);
+    let a2 = ax * ax + ay * ay;
+    let b2 = bx * bx + by * by;
+    let c2 = cx * cx + cy * cy;
+    ax * (by * c2 - b2 * cy) - ay * (bx * c2 - b2 * cx) + a2 * (bx * cy - by * cx)
+}
+
+/// Interleave bits for a 2D Morton key (16 bits per axis).
+fn morton(x: f64, y: f64) -> u64 {
+    #[inline]
+    fn spread(mut v: u64) -> u64 {
+        v &= 0xFFFF;
+        v = (v | (v << 8)) & 0x00FF_00FF;
+        v = (v | (v << 4)) & 0x0F0F_0F0F;
+        v = (v | (v << 2)) & 0x3333_3333;
+        v = (v | (v << 1)) & 0x5555_5555;
+        v
+    }
+    let xi = (x.clamp(0.0, 1.0) * 65535.0) as u64;
+    let yi = (y.clamp(0.0, 1.0) * 65535.0) as u64;
+    spread(xi) | (spread(yi) << 1)
+}
+
+/// Delaunay triangulation of explicit points; returns the induced graph
+/// (unit weights), post-connected in case of degenerate duplicates.
+pub fn delaunay_of_points(pts: &[(f64, f64)]) -> Graph {
+    let n = pts.len();
+    if n < 2 {
+        return Builder::new(n).build();
+    }
+    if n == 2 {
+        let mut b = Builder::new(2);
+        b.add_edge(0, 1, 1);
+        return b.build();
+    }
+
+    // Insertion order: Morton-sorted for walk locality.
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_by_key(|&i| morton(pts[i as usize].0, pts[i as usize].1));
+
+    // Point array with the 3 super-triangle vertices appended.
+    let mut p: Vec<(f64, f64)> = pts.to_vec();
+    let s0 = n as u32;
+    p.push((-1000.0, -1000.0));
+    p.push((3000.0, -1000.0));
+    p.push((-1000.0, 3000.0));
+
+    let mut tris: Vec<Tri> = vec![Tri { v: [s0, s0 + 1, s0 + 2], nbr: [NONE; 3], alive: true }];
+    let mut last = 0u32; // walk start
+    let mut cavity: Vec<u32> = Vec::new();
+    let mut stack: Vec<u32> = Vec::new();
+    // boundary edges of the cavity: (a, b, outside-triangle)
+    let mut boundary: Vec<(u32, u32, u32)> = Vec::new();
+
+    for &pi in &order {
+        let pp = p[pi as usize];
+
+        // --- locate by walking ------------------------------------------
+        let mut t = if tris[last as usize].alive { last } else { 0 };
+        if !tris[t as usize].alive {
+            t = tris.iter().position(|t| t.alive).unwrap() as u32;
+        }
+        let mut steps = 0usize;
+        'walk: loop {
+            steps += 1;
+            if steps > tris.len() * 2 + 16 {
+                // numerical stall: fall back to exhaustive scan
+                t = tris
+                    .iter()
+                    .enumerate()
+                    .position(|(_, tr)| {
+                        tr.alive && {
+                            let [a, b, c] = tr.v;
+                            orient(p[a as usize], p[b as usize], pp) >= 0.0
+                                && orient(p[b as usize], p[c as usize], pp) >= 0.0
+                                && orient(p[c as usize], p[a as usize], pp) >= 0.0
+                        }
+                    })
+                    .expect("point not in any triangle") as u32;
+                break 'walk;
+            }
+            let tr = tris[t as usize];
+            let mut moved = false;
+            for i in 0..3 {
+                let a = tr.v[(i + 1) % 3];
+                let b = tr.v[(i + 2) % 3];
+                if orient(p[a as usize], p[b as usize], pp) < 0.0 {
+                    let nb = tr.nbr[i];
+                    if nb != NONE {
+                        t = nb;
+                        moved = true;
+                        break;
+                    }
+                }
+            }
+            if !moved {
+                break 'walk;
+            }
+        }
+
+        // --- grow cavity of circumcircle violations ----------------------
+        cavity.clear();
+        stack.clear();
+        boundary.clear();
+        stack.push(t);
+        tris[t as usize].alive = false;
+        cavity.push(t);
+        while let Some(ct) = stack.pop() {
+            let tr = tris[ct as usize];
+            for i in 0..3 {
+                let nb = tr.nbr[i];
+                let a = tr.v[(i + 1) % 3];
+                let b = tr.v[(i + 2) % 3];
+                if nb == NONE {
+                    boundary.push((a, b, NONE));
+                } else if tris[nb as usize].alive {
+                    let nv = tris[nb as usize].v;
+                    if in_circle(p[nv[0] as usize], p[nv[1] as usize], p[nv[2] as usize], pp)
+                        > 0.0
+                    {
+                        tris[nb as usize].alive = false;
+                        cavity.push(nb);
+                        stack.push(nb);
+                    } else {
+                        boundary.push((a, b, nb));
+                    }
+                }
+            }
+        }
+
+        // --- retriangulate the cavity as a fan around pi -----------------
+        // New triangle per boundary edge (pi, a, b); adjacency fan links via
+        // first-vertex matching.
+        let base = tris.len() as u32;
+        let mut reuse = cavity.clone(); // recycle dead slots
+        let mut new_ids: Vec<u32> = Vec::with_capacity(boundary.len());
+        for _ in 0..boundary.len() {
+            if let Some(slot) = reuse.pop() {
+                new_ids.push(slot);
+            } else {
+                new_ids.push(base + (new_ids.len() as u32 - cavity.len() as u32));
+            }
+        }
+        // Map from fan edge start vertex -> new triangle id (each boundary
+        // edge (a,b): new tri has directed hull edge a->b).
+        // Link across shared fan vertices: triangle with edge (a,b) neighbors
+        // the one with edge (b,c) along the spoke (pi,b).
+        let mut start_of: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+        for (k, &(a, _b, _o)) in boundary.iter().enumerate() {
+            start_of.insert(a, new_ids[k]);
+        }
+        for (k, &(a, b, outside)) in boundary.iter().enumerate() {
+            let id = new_ids[k];
+            let tri = Tri {
+                v: [pi, a, b],
+                // nbr[0] opposite pi = edge (a,b) -> outside triangle
+                // nbr[1] opposite a  = edge (b,pi) -> fan tri starting at b
+                // nbr[2] opposite b  = edge (pi,a) -> fan tri ending at a
+                nbr: [
+                    outside,
+                    *start_of.get(&b).expect("fan closed"),
+                    {
+                        // triangle whose edge is (?, a): its start vertex is
+                        // the predecessor; find via boundary: edge ending at a
+                        // We build a second map lazily below; placeholder.
+                        NONE
+                    },
+                ],
+                alive: true,
+            };
+            if (id as usize) < tris.len() {
+                tris[id as usize] = tri;
+            } else {
+                debug_assert_eq!(id as usize, tris.len());
+                tris.push(tri);
+            }
+            // fix the outside triangle's back-pointer
+            if outside != NONE {
+                let ot = &mut tris[outside as usize];
+                for i in 0..3 {
+                    let oa = ot.v[(i + 1) % 3];
+                    let ob = ot.v[(i + 2) % 3];
+                    if (oa == b && ob == a) || (oa == a && ob == b) {
+                        ot.nbr[i] = id;
+                    }
+                }
+            }
+        }
+        // second pass: nbr[2] = fan triangle whose edge ends at a, i.e. the
+        // one whose edge starts at the predecessor vertex: the triangle with
+        // start vertex `x` has edge (x, y); the tri with edge ending at `a`
+        // is the one whose *end* is a — equivalently, nbr[2] of (pi,a,b) is
+        // the triangle whose edge starts at some x with end a. Build end map.
+        let mut end_of: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+        for (k, &(_a, b, _o)) in boundary.iter().enumerate() {
+            end_of.insert(b, new_ids[k]);
+        }
+        for (k, &(a, _b, _o)) in boundary.iter().enumerate() {
+            let id = new_ids[k];
+            tris[id as usize].nbr[2] = *end_of.get(&a).expect("fan closed");
+        }
+        last = new_ids[0];
+    }
+
+    // --- emit edges among real vertices ----------------------------------
+    let mut b = Builder::new(n);
+    for tr in tris.iter().filter(|t| t.alive) {
+        for i in 0..3 {
+            let u = tr.v[i];
+            let v = tr.v[(i + 1) % 3];
+            if u < v && (u as usize) < n && (v as usize) < n {
+                b.add_edge(u as NodeId, v as NodeId, 1);
+            }
+        }
+    }
+    connect_components(&b.build())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::is_connected;
+
+    #[test]
+    fn square_gives_four_or_five_edges() {
+        // 4 corner points: Delaunay = square + one diagonal.
+        let pts = [(0.1, 0.1), (0.9, 0.1), (0.9, 0.9), (0.1, 0.9)];
+        let g = delaunay_of_points(&pts);
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 5);
+        assert!(is_connected(&g));
+    }
+
+    #[test]
+    fn inner_point_connects_to_all_triangle_corners() {
+        let pts = [(0.1, 0.1), (0.9, 0.1), (0.5, 0.9), (0.5, 0.4)];
+        let g = delaunay_of_points(&pts);
+        assert_eq!(g.degree(3), 3);
+        assert_eq!(g.m(), 6);
+    }
+
+    #[test]
+    fn delaunay_empty_circumcircle_property() {
+        // For a random set, verify no point lies strictly inside the
+        // circumcircle of any produced triangle — checked indirectly via
+        // edge count: a triangulation of n points with h hull points has
+        // 3n - 3 - h edges. We only sanity-check bounds + planarity here.
+        let mut rng = Rng::new(5);
+        let g = delaunay_graph(200, &mut rng);
+        assert_eq!(g.n(), 200);
+        assert!(g.m() <= 3 * 200 - 6, "planarity violated: m={}", g.m());
+        assert!(g.m() >= 2 * 200 - 5, "too few edges for a triangulation: m={}", g.m());
+        assert!(is_connected(&g));
+        assert_eq!(g.validate(), Ok(()));
+    }
+
+    #[test]
+    fn average_degree_near_six() {
+        let mut rng = Rng::new(8);
+        let g = delaunay_graph(1 << 11, &mut rng);
+        let avg = 2.0 * g.m() as f64 / g.n() as f64;
+        assert!(avg > 5.3 && avg < 6.0, "avg degree {avg}");
+    }
+
+    #[test]
+    fn tiny_inputs() {
+        assert_eq!(delaunay_of_points(&[]).n(), 0);
+        assert_eq!(delaunay_of_points(&[(0.5, 0.5)]).m(), 0);
+        let g2 = delaunay_of_points(&[(0.2, 0.2), (0.8, 0.8)]);
+        assert_eq!(g2.m(), 1);
+        let g3 = delaunay_of_points(&[(0.1, 0.1), (0.9, 0.2), (0.4, 0.8)]);
+        assert_eq!(g3.m(), 3);
+    }
+}

@@ -1,0 +1,115 @@
+//! Structured meshes: 2D/3D grids and tori (Walshaw-archive-style
+//! finite-element meshes are grid-like; these are their regular cousins).
+
+use crate::graph::{Builder, Graph, NodeId};
+
+/// `rows x cols` 2D grid, 4-neighborhood, unit weights.
+pub fn grid2d(rows: usize, cols: usize) -> Graph {
+    let mut b = Builder::new(rows * cols);
+    let id = |r: usize, c: usize| (r * cols + c) as NodeId;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                b.add_edge(id(r, c), id(r, c + 1), 1);
+            }
+            if r + 1 < rows {
+                b.add_edge(id(r, c), id(r + 1, c), 1);
+            }
+        }
+    }
+    b.build()
+}
+
+/// `rows x cols` 2D torus (wrap-around grid).
+pub fn torus2d(rows: usize, cols: usize) -> Graph {
+    let mut b = Builder::new(rows * cols);
+    let id = |r: usize, c: usize| ((r % rows) * cols + (c % cols)) as NodeId;
+    for r in 0..rows {
+        for c in 0..cols {
+            if cols > 1 {
+                b.add_edge(id(r, c), id(r, c + 1), 1);
+            }
+            if rows > 1 {
+                b.add_edge(id(r, c), id(r + 1, c), 1);
+            }
+        }
+    }
+    b.build()
+}
+
+/// `x*y*z` 3D grid, 6-neighborhood.
+pub fn grid3d(x: usize, y: usize, z: usize) -> Graph {
+    let mut b = Builder::new(x * y * z);
+    let id = |i: usize, j: usize, k: usize| ((i * y + j) * z + k) as NodeId;
+    for i in 0..x {
+        for j in 0..y {
+            for k in 0..z {
+                if i + 1 < x {
+                    b.add_edge(id(i, j, k), id(i + 1, j, k), 1);
+                }
+                if j + 1 < y {
+                    b.add_edge(id(i, j, k), id(i, j + 1, k), 1);
+                }
+                if k + 1 < z {
+                    b.add_edge(id(i, j, k), id(i, j, k + 1), 1);
+                }
+            }
+        }
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::is_connected;
+
+    #[test]
+    fn grid_edge_count() {
+        // rows*(cols-1) + cols*(rows-1)
+        let g = grid2d(3, 4);
+        assert_eq!(g.n(), 12);
+        assert_eq!(g.m(), 3 * 3 + 4 * 2);
+        assert!(is_connected(&g));
+    }
+
+    #[test]
+    fn grid_corner_degrees() {
+        let g = grid2d(3, 3);
+        assert_eq!(g.degree(0), 2); // corner
+        assert_eq!(g.degree(1), 3); // edge
+        assert_eq!(g.degree(4), 4); // center
+    }
+
+    #[test]
+    fn torus_regular_degree_four() {
+        let g = torus2d(4, 5);
+        for v in 0..g.n() as NodeId {
+            assert_eq!(g.degree(v), 4);
+        }
+        assert_eq!(g.m(), 2 * 4 * 5);
+    }
+
+    #[test]
+    fn torus_small_dims() {
+        // 2xN torus: wrap edges coincide -> deduplicated, not doubled.
+        let g = torus2d(2, 4);
+        assert_eq!(g.validate(), Ok(()));
+        assert!(is_connected(&g));
+    }
+
+    #[test]
+    fn grid3d_count() {
+        let g = grid3d(2, 3, 4);
+        assert_eq!(g.n(), 24);
+        // x-dir: 1*3*4, y-dir: 2*2*4, z-dir: 2*3*3
+        assert_eq!(g.m(), 12 + 16 + 18);
+        assert!(is_connected(&g));
+    }
+
+    #[test]
+    fn degenerate_1x1() {
+        assert_eq!(grid2d(1, 1).m(), 0);
+        assert_eq!(torus2d(1, 1).m(), 0);
+    }
+}

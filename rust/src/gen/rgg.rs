@@ -1,0 +1,130 @@
+//! Random geometric graphs — the DIMACS `rggX` family.
+//!
+//! `n` points uniform in the unit square; edge between two points iff their
+//! Euclidean distance is below `0.55 * sqrt(ln n / n)` (paper §4,
+//! Instances). Built with a uniform grid of buckets of side = radius, so
+//! expected work is `O(n + m)` rather than `O(n²)`.
+
+use crate::graph::{connect_components, Builder, Graph, NodeId};
+use crate::util::Rng;
+
+/// Generate `rgg` with the DIMACS radius. The result is post-connected
+/// (isolated satellites happen at small n) so partitioning is well-defined.
+pub fn random_geometric_graph(n: usize, rng: &mut Rng) -> Graph {
+    random_geometric_graph_with_radius(n, dimacs_radius(n), rng)
+}
+
+/// The DIMACS radius `0.55 * sqrt(ln n / n)`.
+pub fn dimacs_radius(n: usize) -> f64 {
+    if n < 2 {
+        return 0.0;
+    }
+    0.55 * ((n as f64).ln() / n as f64).sqrt()
+}
+
+/// Generate a random geometric graph with an explicit radius.
+pub fn random_geometric_graph_with_radius(n: usize, radius: f64, rng: &mut Rng) -> Graph {
+    let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.f64(), rng.f64())).collect();
+    let g = geometric_graph_of_points(&pts, radius);
+    connect_components(&g)
+}
+
+/// Build the geometric graph of explicit points (unit square assumed).
+pub fn geometric_graph_of_points(pts: &[(f64, f64)], radius: f64) -> Graph {
+    let n = pts.len();
+    let mut b = Builder::new(n);
+    if n == 0 || radius <= 0.0 {
+        return b.build();
+    }
+    // Bucket grid with cells of side >= radius.
+    let cells = ((1.0 / radius).floor() as usize).clamp(1, 1 << 14);
+    let cell_of = |x: f64| ((x * cells as f64) as usize).min(cells - 1);
+    let mut bucket_heads = vec![u32::MAX; cells * cells];
+    let mut next = vec![u32::MAX; n];
+    for (i, &(x, y)) in pts.iter().enumerate() {
+        let c = cell_of(y) * cells + cell_of(x);
+        next[i] = bucket_heads[c];
+        bucket_heads[c] = i as u32;
+    }
+    let r2 = radius * radius;
+    for (i, &(x, y)) in pts.iter().enumerate() {
+        let cx = cell_of(x) as isize;
+        let cy = cell_of(y) as isize;
+        for dy in -1..=1isize {
+            for dx in -1..=1isize {
+                let (nx, ny) = (cx + dx, cy + dy);
+                if nx < 0 || ny < 0 || nx >= cells as isize || ny >= cells as isize {
+                    continue;
+                }
+                let mut j = bucket_heads[ny as usize * cells + nx as usize];
+                while j != u32::MAX {
+                    if (j as usize) > i {
+                        let (px, py) = pts[j as usize];
+                        let (ddx, ddy) = (px - x, py - y);
+                        if ddx * ddx + ddy * ddy < r2 {
+                            b.add_edge(i as NodeId, j, 1);
+                        }
+                    }
+                    j = next[j as usize];
+                }
+            }
+        }
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::is_connected;
+
+    #[test]
+    fn small_rgg_valid_and_connected() {
+        let mut rng = Rng::new(42);
+        let g = random_geometric_graph(256, &mut rng);
+        assert_eq!(g.n(), 256);
+        assert_eq!(g.validate(), Ok(()));
+        assert!(is_connected(&g));
+    }
+
+    #[test]
+    fn bucket_grid_matches_bruteforce() {
+        let mut rng = Rng::new(7);
+        let pts: Vec<(f64, f64)> = (0..300).map(|_| (rng.f64(), rng.f64())).collect();
+        let r = 0.08;
+        let fast = geometric_graph_of_points(&pts, r);
+        // brute force
+        let mut b = Builder::new(pts.len());
+        for i in 0..pts.len() {
+            for j in (i + 1)..pts.len() {
+                let dx = pts[i].0 - pts[j].0;
+                let dy = pts[i].1 - pts[j].1;
+                if dx * dx + dy * dy < r * r {
+                    b.add_edge(i as NodeId, j as NodeId, 1);
+                }
+            }
+        }
+        let slow = b.build();
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn density_grows_slowly_like_dimacs() {
+        // DIMACS radius gives expected degree ≈ π·0.55²·ln n ≈ ln n — the
+        // paper's Table 1 shows m/n from 6.7 (n=64) to 12.5 (n=32K).
+        let mut rng = Rng::new(9);
+        let g = random_geometric_graph(1 << 12, &mut rng);
+        let mn = g.density();
+        assert!(mn > 2.0 && mn < 12.0, "unexpected density {mn}");
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        let mut rng = Rng::new(1);
+        assert_eq!(random_geometric_graph(0, &mut rng).n(), 0);
+        assert_eq!(random_geometric_graph(1, &mut rng).n(), 1);
+        let g2 = random_geometric_graph(2, &mut rng);
+        assert_eq!(g2.n(), 2);
+        assert!(is_connected(&g2));
+    }
+}

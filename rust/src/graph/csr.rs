@@ -1,0 +1,364 @@
+//! Compressed sparse row (CSR) graph — the core data structure.
+//!
+//! All algorithms in the crate (partitioner, mapping constructions, local
+//! search) operate on this representation. Following the paper (§2/§3), the
+//! sparse communication matrix `C` is stored as an undirected weighted graph
+//! `G_C` with both edge directions materialized, so `adjacency(u)` iterates
+//! the row `C[u][*]` directly.
+//!
+//! Weights are unsigned integers (`u64`): communication volumes are edge-cut
+//! sums and hierarchy distances are small integers, so the QAP objective and
+//! all swap gains are computed in *exact* integer arithmetic. This makes the
+//! central correctness invariant of the paper's §3.2 — "delta-gain update
+//! equals full recomputation" — exactly testable, with the XLA f32 path used
+//! as an independent approximate cross-check.
+
+/// Node identifier. `u32` supports the paper's largest instances (n = 2^19)
+/// with headroom while keeping the CSR arrays compact.
+pub type NodeId = u32;
+
+/// Edge/node weight type (exact integer arithmetic end-to-end).
+pub type Weight = u64;
+
+/// An immutable undirected weighted graph in CSR form.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Graph {
+    /// Row offsets, length `n + 1`.
+    xadj: Vec<u32>,
+    /// Concatenated adjacency lists, length `2m` (both directions stored).
+    adjncy: Vec<NodeId>,
+    /// Edge weights parallel to `adjncy`.
+    adjwgt: Vec<Weight>,
+    /// Node weights, length `n` (used by the balanced partitioner and the
+    /// Bottom-Up construction, where a vertex stands for a set of tasks).
+    vwgt: Vec<Weight>,
+}
+
+impl Graph {
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.vwgt.len()
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.adjncy.len() / 2
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: NodeId) -> usize {
+        (self.xadj[v as usize + 1] - self.xadj[v as usize]) as usize
+    }
+
+    /// Neighbor ids of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: NodeId) -> &[NodeId] {
+        &self.adjncy[self.xadj[v as usize] as usize..self.xadj[v as usize + 1] as usize]
+    }
+
+    /// Edge weights parallel to [`Self::neighbors`].
+    #[inline]
+    pub fn neighbor_weights(&self, v: NodeId) -> &[Weight] {
+        &self.adjwgt[self.xadj[v as usize] as usize..self.xadj[v as usize + 1] as usize]
+    }
+
+    /// Iterate `(neighbor, weight)` pairs of `v`.
+    #[inline]
+    pub fn edges(&self, v: NodeId) -> impl Iterator<Item = (NodeId, Weight)> + '_ {
+        self.neighbors(v)
+            .iter()
+            .copied()
+            .zip(self.neighbor_weights(v).iter().copied())
+    }
+
+    /// Node weight of `v`.
+    #[inline]
+    pub fn node_weight(&self, v: NodeId) -> Weight {
+        self.vwgt[v as usize]
+    }
+
+    /// All node weights.
+    #[inline]
+    pub fn node_weights(&self) -> &[Weight] {
+        &self.vwgt
+    }
+
+    /// Sum of all node weights.
+    pub fn total_node_weight(&self) -> Weight {
+        self.vwgt.iter().sum()
+    }
+
+    /// Sum of all edge weights (each undirected edge counted once).
+    pub fn total_edge_weight(&self) -> Weight {
+        self.adjwgt.iter().sum::<Weight>() / 2
+    }
+
+    /// Average density `m/n` as reported in the paper's Table 1.
+    pub fn density(&self) -> f64 {
+        if self.n() == 0 {
+            0.0
+        } else {
+            self.m() as f64 / self.n() as f64
+        }
+    }
+
+    /// Weight of edge `(u, v)` if present (linear scan of the shorter list).
+    pub fn edge_weight(&self, u: NodeId, v: NodeId) -> Option<Weight> {
+        let (a, b) = if self.degree(u) <= self.degree(v) { (u, v) } else { (v, u) };
+        self.edges(a).find(|&(w, _)| w == b).map(|(_, w)| w)
+    }
+
+    /// Maximum degree.
+    pub fn max_degree(&self) -> usize {
+        (0..self.n() as NodeId).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    /// Internal consistency check (used by tests and debug assertions):
+    /// sorted adjacency, no self-loops, symmetric edges with equal weights.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.xadj.len() != self.n() + 1 {
+            return Err("xadj length mismatch".into());
+        }
+        if *self.xadj.last().unwrap() as usize != self.adjncy.len() {
+            return Err("xadj last != adjncy len".into());
+        }
+        if self.adjncy.len() != self.adjwgt.len() {
+            return Err("adjncy/adjwgt length mismatch".into());
+        }
+        for v in 0..self.n() as NodeId {
+            let ns = self.neighbors(v);
+            for w in ns.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("adjacency of {v} not strictly sorted"));
+                }
+            }
+            for (u, wt) in self.edges(v) {
+                if u == v {
+                    return Err(format!("self-loop at {v}"));
+                }
+                if u as usize >= self.n() {
+                    return Err(format!("edge ({v},{u}) out of range"));
+                }
+                match self.edge_weight(u, v) {
+                    Some(back) if back == wt => {}
+                    _ => return Err(format!("asymmetric edge ({v},{u})")),
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Construct directly from CSR parts (must satisfy [`Self::validate`];
+    /// checked in debug builds).
+    pub fn from_csr(
+        xadj: Vec<u32>,
+        adjncy: Vec<NodeId>,
+        adjwgt: Vec<Weight>,
+        vwgt: Vec<Weight>,
+    ) -> Graph {
+        let g = Graph { xadj, adjncy, adjwgt, vwgt };
+        debug_assert_eq!(g.validate(), Ok(()));
+        g
+    }
+
+    /// Raw CSR parts (xadj, adjncy, adjwgt, vwgt) — used by the runtime
+    /// bridge to densify small graphs for the XLA cross-check.
+    pub fn csr_parts(&self) -> (&[u32], &[NodeId], &[Weight], &[Weight]) {
+        (&self.xadj, &self.adjncy, &self.adjwgt, &self.vwgt)
+    }
+}
+
+/// Incremental builder: accumulate (possibly duplicated) undirected edges,
+/// then [`Builder::build`] into a deduplicated, sorted CSR graph. Duplicate
+/// edges have their weights summed — this is exactly the parallel-edge rule
+/// of the paper's Bottom-Up contraction (§3.1).
+#[derive(Debug, Clone)]
+pub struct Builder {
+    n: usize,
+    vwgt: Vec<Weight>,
+    /// One directed copy per undirected edge; mirrored in `build`.
+    edges: Vec<(NodeId, NodeId, Weight)>,
+}
+
+impl Builder {
+    /// A builder for `n` vertices with unit node weights.
+    pub fn new(n: usize) -> Builder {
+        Builder { n, vwgt: vec![1; n], edges: Vec::new() }
+    }
+
+    /// Number of vertices.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Set the weight of node `v`.
+    pub fn set_node_weight(&mut self, v: NodeId, w: Weight) {
+        self.vwgt[v as usize] = w;
+    }
+
+    /// Add undirected edge `{u, v}` with weight `w`. Self-loops are ignored
+    /// (they never contribute to cut or QAP objectives); duplicates sum.
+    pub fn add_edge(&mut self, u: NodeId, v: NodeId, w: Weight) {
+        debug_assert!((u as usize) < self.n && (v as usize) < self.n);
+        if u == v {
+            return;
+        }
+        let (a, b) = if u < v { (u, v) } else { (v, u) };
+        self.edges.push((a, b, w));
+    }
+
+    /// Finalize into a CSR [`Graph`].
+    pub fn build(mut self) -> Graph {
+        // Deduplicate: sort canonical (min,max) pairs and sum weights.
+        self.edges.sort_unstable_by_key(|&(a, b, _)| (a, b));
+        let mut dedup: Vec<(NodeId, NodeId, Weight)> = Vec::with_capacity(self.edges.len());
+        for (a, b, w) in self.edges {
+            match dedup.last_mut() {
+                Some(last) if last.0 == a && last.1 == b => last.2 += w,
+                _ => dedup.push((a, b, w)),
+            }
+        }
+        // Counting pass for degrees.
+        let mut deg = vec![0u32; self.n];
+        for &(a, b, _) in &dedup {
+            deg[a as usize] += 1;
+            deg[b as usize] += 1;
+        }
+        let mut xadj = vec![0u32; self.n + 1];
+        for v in 0..self.n {
+            xadj[v + 1] = xadj[v] + deg[v];
+        }
+        let total = xadj[self.n] as usize;
+        let mut adjncy = vec![0 as NodeId; total];
+        let mut adjwgt = vec![0 as Weight; total];
+        let mut cursor = xadj[..self.n].to_vec();
+        // dedup is sorted by (a,b); writing (a -> b) in that order keeps each
+        // row sorted. The mirrored direction (b -> a) is also written in
+        // sorted order because `a` increases monotonically within each `b`
+        // bucket... which is NOT guaranteed by the pair sort; fix with a
+        // per-row sort below only if needed.
+        for &(a, b, w) in &dedup {
+            let ca = cursor[a as usize] as usize;
+            adjncy[ca] = b;
+            adjwgt[ca] = w;
+            cursor[a as usize] += 1;
+            let cb = cursor[b as usize] as usize;
+            adjncy[cb] = a;
+            adjwgt[cb] = w;
+            cursor[b as usize] += 1;
+        }
+        // Ensure each row is sorted (mirror insertions can interleave).
+        for v in 0..self.n {
+            let lo = xadj[v] as usize;
+            let hi = xadj[v + 1] as usize;
+            let row = &mut adjncy[lo..hi];
+            if !row.windows(2).all(|w| w[0] < w[1]) {
+                let mut pairs: Vec<(NodeId, Weight)> = adjncy[lo..hi]
+                    .iter()
+                    .copied()
+                    .zip(adjwgt[lo..hi].iter().copied())
+                    .collect();
+                pairs.sort_unstable_by_key(|&(id, _)| id);
+                for (i, (id, w)) in pairs.into_iter().enumerate() {
+                    adjncy[lo + i] = id;
+                    adjwgt[lo + i] = w;
+                }
+            }
+        }
+        Graph::from_csr(xadj, adjncy, adjwgt, self.vwgt)
+    }
+}
+
+/// Convenience constructor from an undirected edge list with unit node
+/// weights.
+pub fn from_edges(n: usize, edges: &[(NodeId, NodeId, Weight)]) -> Graph {
+    let mut b = Builder::new(n);
+    for &(u, v, w) in edges {
+        b.add_edge(u, v, w);
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_graph() {
+        let g = from_edges(0, &[]);
+        assert_eq!(g.n(), 0);
+        assert_eq!(g.m(), 0);
+        assert_eq!(g.validate(), Ok(()));
+    }
+
+    #[test]
+    fn singleton() {
+        let g = from_edges(1, &[]);
+        assert_eq!(g.n(), 1);
+        assert_eq!(g.degree(0), 0);
+    }
+
+    #[test]
+    fn triangle() {
+        let g = from_edges(3, &[(0, 1, 5), (1, 2, 7), (0, 2, 11)]);
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 3);
+        assert_eq!(g.edge_weight(0, 1), Some(5));
+        assert_eq!(g.edge_weight(1, 0), Some(5));
+        assert_eq!(g.edge_weight(2, 1), Some(7));
+        assert_eq!(g.total_edge_weight(), 23);
+        assert_eq!(g.validate(), Ok(()));
+    }
+
+    #[test]
+    fn duplicate_edges_sum() {
+        let g = from_edges(2, &[(0, 1, 3), (1, 0, 4)]);
+        assert_eq!(g.m(), 1);
+        assert_eq!(g.edge_weight(0, 1), Some(7));
+    }
+
+    #[test]
+    fn self_loops_dropped() {
+        let mut b = Builder::new(2);
+        b.add_edge(0, 0, 9);
+        b.add_edge(0, 1, 1);
+        let g = b.build();
+        assert_eq!(g.m(), 1);
+        assert_eq!(g.edge_weight(0, 1), Some(1));
+    }
+
+    #[test]
+    fn adjacency_sorted() {
+        let g = from_edges(5, &[(4, 0, 1), (2, 0, 1), (3, 0, 1), (1, 0, 1)]);
+        assert_eq!(g.neighbors(0), &[1, 2, 3, 4]);
+        assert_eq!(g.degree(0), 4);
+        assert_eq!(g.validate(), Ok(()));
+    }
+
+    #[test]
+    fn node_weights() {
+        let mut b = Builder::new(3);
+        b.set_node_weight(1, 10);
+        b.add_edge(0, 1, 1);
+        let g = b.build();
+        assert_eq!(g.node_weight(0), 1);
+        assert_eq!(g.node_weight(1), 10);
+        assert_eq!(g.total_node_weight(), 12);
+    }
+
+    #[test]
+    fn density_matches() {
+        let g = from_edges(4, &[(0, 1, 1), (1, 2, 1), (2, 3, 1), (3, 0, 1)]);
+        assert!((g.density() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn edges_iterator_consistent() {
+        let g = from_edges(3, &[(0, 1, 5), (0, 2, 6)]);
+        let collected: Vec<_> = g.edges(0).collect();
+        assert_eq!(collected, vec![(1, 5), (2, 6)]);
+    }
+}

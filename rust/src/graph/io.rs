@@ -1,0 +1,171 @@
+//! METIS-format graph I/O.
+//!
+//! The format used by Chris Walshaw's archive, the DIMACS challenge and
+//! KaHIP: first line `n m [fmt]`, then one line per vertex listing
+//! `[vwgt] (neighbor weight?)*` with 1-based neighbor ids. We support fmt
+//! codes 0 (plain), 1 (edge weights), 10 (node weights), 11 (both) — enough
+//! to exchange instances with the original tooling.
+
+use super::csr::{Builder, Graph, NodeId, Weight};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+/// Parse a graph from a METIS-format reader.
+pub fn read_metis<R: Read>(r: R) -> Result<Graph, String> {
+    let reader = BufReader::new(r);
+    let mut lines = reader
+        .lines()
+        .map(|l| l.map_err(|e| e.to_string()))
+        .filter(|l| match l {
+            Ok(s) => {
+                let t = s.trim();
+                !t.is_empty() && !t.starts_with('%')
+            }
+            Err(_) => true,
+        });
+
+    let header = lines.next().ok_or("empty file")??;
+    let head: Vec<&str> = header.split_whitespace().collect();
+    if head.len() < 2 {
+        return Err("header must be `n m [fmt]`".into());
+    }
+    let n: usize = head[0].parse().map_err(|e| format!("bad n: {e}"))?;
+    let m: usize = head[1].parse().map_err(|e| format!("bad m: {e}"))?;
+    let fmt = if head.len() > 2 { head[2] } else { "0" };
+    let (has_vwgt, has_ewgt) = match fmt {
+        "0" | "00" => (false, false),
+        "1" | "01" => (false, true),
+        "10" => (true, false),
+        "11" => (true, true),
+        other => return Err(format!("unsupported fmt code {other}")),
+    };
+
+    let mut b = Builder::new(n);
+    let mut v = 0 as NodeId;
+    for line in lines {
+        let line = line?;
+        if v as usize >= n {
+            return Err("more vertex lines than n".into());
+        }
+        let mut toks = line.split_whitespace();
+        if has_vwgt {
+            let w: Weight = toks
+                .next()
+                .ok_or_else(|| format!("line {v}: missing vertex weight"))?
+                .parse()
+                .map_err(|e| format!("line {v}: bad vertex weight: {e}"))?;
+            b.set_node_weight(v, w);
+        }
+        loop {
+            let Some(tok) = toks.next() else { break };
+            let u: usize = tok.parse().map_err(|e| format!("line {v}: bad neighbor: {e}"))?;
+            if u == 0 || u > n {
+                return Err(format!("line {v}: neighbor {u} out of range (1-based)"));
+            }
+            let w: Weight = if has_ewgt {
+                toks.next()
+                    .ok_or_else(|| format!("line {v}: missing edge weight"))?
+                    .parse()
+                    .map_err(|e| format!("line {v}: bad edge weight: {e}"))?
+            } else {
+                1
+            };
+            let u = (u - 1) as NodeId;
+            if u > v {
+                // each undirected edge appears in both lines; keep one copy
+                b.add_edge(v, u, w);
+            }
+        }
+        v += 1;
+    }
+    if (v as usize) != n {
+        return Err(format!("expected {n} vertex lines, got {v}"));
+    }
+    let g = b.build();
+    if g.m() != m {
+        return Err(format!("header says m={m}, file has m={}", g.m()));
+    }
+    Ok(g)
+}
+
+/// Serialize a graph in METIS format (fmt 11: node + edge weights).
+pub fn write_metis<W: Write>(g: &Graph, mut w: W) -> std::io::Result<()> {
+    writeln!(w, "{} {} 11", g.n(), g.m())?;
+    for v in 0..g.n() as NodeId {
+        let mut line = String::new();
+        line.push_str(&g.node_weight(v).to_string());
+        for (u, wt) in g.edges(v) {
+            line.push(' ');
+            line.push_str(&(u + 1).to_string());
+            line.push(' ');
+            line.push_str(&wt.to_string());
+        }
+        writeln!(w, "{line}")?;
+    }
+    Ok(())
+}
+
+/// Read a graph from a METIS file on disk.
+pub fn read_metis_file(path: &Path) -> Result<Graph, String> {
+    let f = std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    read_metis(f)
+}
+
+/// Write a graph to a METIS file on disk.
+pub fn write_metis_file(g: &Graph, path: &Path) -> std::io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    write_metis(g, std::io::BufWriter::new(f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::from_edges;
+
+    #[test]
+    fn roundtrip() {
+        let g = from_edges(4, &[(0, 1, 5), (1, 2, 2), (2, 3, 7), (0, 3, 1)]);
+        let mut buf = Vec::new();
+        write_metis(&g, &mut buf).unwrap();
+        let h = read_metis(&buf[..]).unwrap();
+        assert_eq!(g, h);
+    }
+
+    #[test]
+    fn roundtrip_with_node_weights() {
+        let mut b = crate::graph::csr::Builder::new(3);
+        b.set_node_weight(0, 3);
+        b.set_node_weight(2, 9);
+        b.add_edge(0, 2, 4);
+        let g = b.build();
+        let mut buf = Vec::new();
+        write_metis(&g, &mut buf).unwrap();
+        let h = read_metis(&buf[..]).unwrap();
+        assert_eq!(g, h);
+    }
+
+    #[test]
+    fn plain_format() {
+        let text = "3 2\n2 3\n1\n1\n";
+        let g = read_metis(text.as_bytes()).unwrap();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 2);
+        assert_eq!(g.edge_weight(0, 1), Some(1));
+        assert_eq!(g.edge_weight(0, 2), Some(1));
+    }
+
+    #[test]
+    fn comments_skipped() {
+        let text = "% a comment\n2 1\n%another\n2\n1\n";
+        let g = read_metis(text.as_bytes()).unwrap();
+        assert_eq!(g.m(), 1);
+    }
+
+    #[test]
+    fn errors_reported() {
+        assert!(read_metis("".as_bytes()).is_err());
+        assert!(read_metis("2 1\n3\n1\n".as_bytes()).is_err()); // id out of range
+        assert!(read_metis("2 5\n2\n1\n".as_bytes()).is_err()); // m mismatch
+        assert!(read_metis("3 1 99\n\n\n\n".as_bytes()).is_err()); // bad fmt
+    }
+}

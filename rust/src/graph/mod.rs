@@ -1,0 +1,13 @@
+//! Graph substrate: CSR representation, operations, and METIS I/O.
+//!
+//! Everything above this module (partitioner, mapping algorithms, the
+//! communication-model builder) treats [`Graph`] as its universal currency.
+
+pub mod csr;
+pub mod io;
+pub mod ops;
+
+pub use csr::{from_edges, Builder, Graph, NodeId, Weight};
+pub use ops::{
+    bfs_ball, connect_components, connected_components, contract, induced_subgraph, is_connected,
+};

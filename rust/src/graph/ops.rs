@@ -1,0 +1,257 @@
+//! Graph operations: induced subgraphs, contraction, BFS balls, components.
+//!
+//! Contraction implements the parallel-edge rule of the paper's §3.1: when
+//! replacing `{u,w}` and `{v,w}` would create two parallel edges `{x,w}`, a
+//! single edge with summed weight is inserted, "so the correct sum of the
+//! distances is accounted for in later stages".
+
+use super::csr::{Builder, Graph, NodeId, Weight};
+
+/// The subgraph of `g` induced by `nodes`, plus the mapping from new local
+/// ids (positions in `nodes`) back to the original ids.
+pub fn induced_subgraph(g: &Graph, nodes: &[NodeId]) -> (Graph, Vec<NodeId>) {
+    let mut local = vec![u32::MAX; g.n()];
+    for (i, &v) in nodes.iter().enumerate() {
+        debug_assert!(local[v as usize] == u32::MAX, "duplicate node in selection");
+        local[v as usize] = i as u32;
+    }
+    let mut b = Builder::new(nodes.len());
+    for (i, &v) in nodes.iter().enumerate() {
+        b.set_node_weight(i as NodeId, g.node_weight(v));
+        for (u, w) in g.edges(v) {
+            let lu = local[u as usize];
+            if lu != u32::MAX && lu > i as u32 {
+                b.add_edge(i as NodeId, lu, w);
+            }
+        }
+    }
+    (b.build(), nodes.to_vec())
+}
+
+/// Contract `g` according to `cluster` (a value in `0..num_clusters` per
+/// node). Vertex weights are summed per cluster; parallel edges are merged
+/// with summed weights; intra-cluster edges vanish (self-loops).
+pub fn contract(g: &Graph, cluster: &[u32], num_clusters: usize) -> Graph {
+    debug_assert_eq!(cluster.len(), g.n());
+    let mut b = Builder::new(num_clusters);
+    let mut cw = vec![0 as Weight; num_clusters];
+    for v in 0..g.n() {
+        cw[cluster[v] as usize] += g.node_weight(v as NodeId);
+    }
+    for (c, &w) in cw.iter().enumerate() {
+        b.set_node_weight(c as NodeId, w);
+    }
+    for v in 0..g.n() as NodeId {
+        let cv = cluster[v as usize];
+        for (u, w) in g.edges(v) {
+            let cu = cluster[u as usize];
+            if cv < cu {
+                // each undirected edge visited once in canonical direction
+                b.add_edge(cv, cu, w);
+            }
+        }
+    }
+    b.build()
+}
+
+/// Breadth-first search from `src`, up to (and including) distance `max_d`.
+/// Returns the visited nodes in BFS order, excluding `src` itself.
+/// `scratch` must be an all-`u32::MAX` array of length `g.n()`; it is
+/// restored before returning (allocation-free reuse in the hot loop of the
+/// `N_C^d` neighborhood construction).
+pub fn bfs_ball(
+    g: &Graph,
+    src: NodeId,
+    max_d: u32,
+    scratch: &mut [u32],
+    queue: &mut Vec<NodeId>,
+) -> Vec<NodeId> {
+    debug_assert!(scratch.iter().all(|&x| x == u32::MAX));
+    queue.clear();
+    queue.push(src);
+    scratch[src as usize] = 0;
+    let mut head = 0;
+    while head < queue.len() {
+        let v = queue[head];
+        head += 1;
+        let dv = scratch[v as usize];
+        if dv == max_d {
+            continue;
+        }
+        for &u in g.neighbors(v) {
+            if scratch[u as usize] == u32::MAX {
+                scratch[u as usize] = dv + 1;
+                queue.push(u);
+            }
+        }
+    }
+    let out: Vec<NodeId> = queue[1..].to_vec();
+    for &v in queue.iter() {
+        scratch[v as usize] = u32::MAX;
+    }
+    out
+}
+
+/// Connected components; returns (component id per node, number of components).
+pub fn connected_components(g: &Graph) -> (Vec<u32>, usize) {
+    let mut comp = vec![u32::MAX; g.n()];
+    let mut num = 0u32;
+    let mut stack = Vec::new();
+    for s in 0..g.n() as NodeId {
+        if comp[s as usize] != u32::MAX {
+            continue;
+        }
+        comp[s as usize] = num;
+        stack.push(s);
+        while let Some(v) = stack.pop() {
+            for &u in g.neighbors(v) {
+                if comp[u as usize] == u32::MAX {
+                    comp[u as usize] = num;
+                    stack.push(u);
+                }
+            }
+        }
+        num += 1;
+    }
+    (comp, num as usize)
+}
+
+/// True iff `g` is connected (the empty graph counts as connected).
+pub fn is_connected(g: &Graph) -> bool {
+    g.n() == 0 || connected_components(g).1 == 1
+}
+
+/// Add minimum-weight edges to connect all components (chains component
+/// representatives). Generators use this to guarantee connected benchmark
+/// instances, mirroring how the DIMACS instances are connected.
+pub fn connect_components(g: &Graph) -> Graph {
+    let (comp, num) = connected_components(g);
+    if num <= 1 {
+        return g.clone();
+    }
+    let mut reps = vec![NodeId::MAX; num];
+    for v in 0..g.n() {
+        let c = comp[v] as usize;
+        if reps[c] == NodeId::MAX {
+            reps[c] = v as NodeId;
+        }
+    }
+    let mut b = Builder::new(g.n());
+    for v in 0..g.n() as NodeId {
+        b.set_node_weight(v, g.node_weight(v));
+        for (u, w) in g.edges(v) {
+            if v < u {
+                b.add_edge(v, u, w);
+            }
+        }
+    }
+    for pair in reps.windows(2) {
+        b.add_edge(pair[0], pair[1], 1);
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::from_edges;
+
+    fn path4() -> Graph {
+        from_edges(4, &[(0, 1, 1), (1, 2, 2), (2, 3, 3)])
+    }
+
+    #[test]
+    fn induced_subgraph_keeps_internal_edges() {
+        let g = path4();
+        let (s, map) = induced_subgraph(&g, &[1, 2, 3]);
+        assert_eq!(s.n(), 3);
+        assert_eq!(s.m(), 2);
+        assert_eq!(map, vec![1, 2, 3]);
+        assert_eq!(s.edge_weight(0, 1), Some(2)); // old (1,2)
+        assert_eq!(s.edge_weight(1, 2), Some(3)); // old (2,3)
+        assert_eq!(s.edge_weight(0, 2), None);
+    }
+
+    #[test]
+    fn induced_subgraph_preserves_node_weights() {
+        let mut b = Builder::new(3);
+        b.set_node_weight(2, 42);
+        b.add_edge(0, 2, 1);
+        let g = b.build();
+        let (s, _) = induced_subgraph(&g, &[2]);
+        assert_eq!(s.node_weight(0), 42);
+    }
+
+    #[test]
+    fn contract_merges_parallel_edges() {
+        // square 0-1-2-3-0; contract {0,1} and {2,3}:
+        // edges (1,2) and (0,3) become parallel -> single edge weight 2+4.
+        let g = from_edges(4, &[(0, 1, 1), (1, 2, 2), (2, 3, 3), (3, 0, 4)]);
+        let c = contract(&g, &[0, 0, 1, 1], 2);
+        assert_eq!(c.n(), 2);
+        assert_eq!(c.m(), 1);
+        assert_eq!(c.edge_weight(0, 1), Some(6));
+        assert_eq!(c.node_weight(0), 2);
+        assert_eq!(c.node_weight(1), 2);
+    }
+
+    #[test]
+    fn contract_drops_intra_cluster_edges() {
+        let g = from_edges(3, &[(0, 1, 5), (1, 2, 1)]);
+        let c = contract(&g, &[0, 0, 1], 2);
+        assert_eq!(c.m(), 1);
+        assert_eq!(c.edge_weight(0, 1), Some(1));
+    }
+
+    #[test]
+    fn contract_preserves_inter_cluster_weight() {
+        let g = from_edges(6, &[(0, 3, 1), (1, 4, 2), (2, 5, 3), (0, 1, 9)]);
+        let c = contract(&g, &[0, 0, 0, 1, 1, 1], 2);
+        assert_eq!(c.edge_weight(0, 1), Some(6));
+        assert_eq!(c.total_edge_weight(), 6);
+    }
+
+    #[test]
+    fn bfs_ball_distances() {
+        let g = path4();
+        let mut scratch = vec![u32::MAX; 4];
+        let mut q = Vec::new();
+        let ball1 = bfs_ball(&g, 0, 1, &mut scratch, &mut q);
+        assert_eq!(ball1, vec![1]);
+        assert!(scratch.iter().all(|&x| x == u32::MAX)); // restored
+        let ball2 = bfs_ball(&g, 0, 2, &mut scratch, &mut q);
+        assert_eq!(ball2, vec![1, 2]);
+        let ball9 = bfs_ball(&g, 0, 9, &mut scratch, &mut q);
+        assert_eq!(ball9, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn components_counted() {
+        let g = from_edges(5, &[(0, 1, 1), (2, 3, 1)]);
+        let (comp, num) = connected_components(&g);
+        assert_eq!(num, 3);
+        assert_eq!(comp[0], comp[1]);
+        assert_eq!(comp[2], comp[3]);
+        assert_ne!(comp[0], comp[2]);
+        assert_ne!(comp[4], comp[0]);
+    }
+
+    #[test]
+    fn connect_components_connects() {
+        let g = from_edges(5, &[(0, 1, 1), (2, 3, 1)]);
+        assert!(!is_connected(&g));
+        let c = connect_components(&g);
+        assert!(is_connected(&c));
+        assert_eq!(c.n(), 5);
+        // original edges preserved
+        assert_eq!(c.edge_weight(0, 1), Some(1));
+        assert_eq!(c.edge_weight(2, 3), Some(1));
+    }
+
+    #[test]
+    fn connected_graph_unchanged() {
+        let g = path4();
+        let c = connect_components(&g);
+        assert_eq!(g, c);
+    }
+}

@@ -1,0 +1,30 @@
+//! # qapmap — Better Process Mapping and Sparse Quadratic Assignment
+//!
+//! A full reproduction of Schulz & Träff, *Better Process Mapping and Sparse
+//! Quadratic Assignment* (2017), as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the sparse-QAP mapping library: multilevel
+//!   graph partitioner substrate, hierarchy distance oracle, construction
+//!   algorithms (Top-Down, Bottom-Up, Müller-Merbach, GreedyAllC, recursive
+//!   bisection), fast `O(d_u + d_v)` swap local search over the `N²`, `N_p`
+//!   and `N_C^d` neighborhoods, plus a rank-reordering *service* coordinator.
+//! * **Layer 2 (python/compile/model.py)** — a JAX dense-QAP objective model,
+//!   AOT-lowered to HLO text at build time.
+//! * **Layer 1 (python/compile/kernels/)** — a Pallas kernel evaluating the
+//!   dense QAP objective with MXU-shaped blocked matmuls.
+//!
+//! The Rust binary loads the AOT artifacts through PJRT ([`runtime`]) to
+//! cross-check and batch-score objectives; Python never runs at request time.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bench;
+pub mod coordinator;
+pub mod gen;
+pub mod graph;
+pub mod mapping;
+pub mod model;
+pub mod partition;
+pub mod runtime;
+pub mod util;

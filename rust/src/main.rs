@@ -1,0 +1,316 @@
+//! `qapmap` — CLI for the process-mapping library and service.
+//!
+//! Subcommands:
+//!
+//! * `map`        — run one mapping job from a METIS file or a generator.
+//! * `serve`      — start the rank-reordering TCP service.
+//! * `client`     — submit a job to a running service.
+//! * `gen`        — generate a benchmark instance to a METIS file.
+//! * `partition`  — partition a graph (the §4.1 instance pipeline).
+//! * `verify`     — cross-check the sparse objective against the XLA path.
+//!
+//! Examples:
+//!
+//! ```text
+//! qapmap map --inst rgg12 --blocks 256 --S 4:16:4 --D 1:10:100 --algo topdown+Nc10
+//! qapmap serve --addr 127.0.0.1:7447 --workers 2
+//! qapmap client --addr 127.0.0.1:7447 --inst rgg10 --blocks 128 --S 4:16:2 --D 1:10:100
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+use qapmap::coordinator::{wire, Coordinator, MapRequest};
+use qapmap::graph::{io as gio, Graph};
+use qapmap::mapping::algorithms::AlgorithmSpec;
+use qapmap::mapping::{objective, DistanceOracle, Hierarchy, Mapping};
+use qapmap::model::build_instance;
+use qapmap::partition::{partition_kway, PartitionConfig};
+use qapmap::runtime::{QapRuntime, RuntimeHandle};
+use qapmap::util::{Args, Rng, Timer};
+use std::net::TcpListener;
+use std::path::Path;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+fn main() {
+    let mut raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() {
+        usage();
+        std::process::exit(2);
+    }
+    let cmd = raw.remove(0);
+    let args = Args::parse_from(raw);
+    let result = match cmd.as_str() {
+        "map" => cmd_map(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
+        "gen" => cmd_gen(&args),
+        "partition" => cmd_partition(&args),
+        "verify" => cmd_verify(&args),
+        "infer" => cmd_infer(&args),
+        "help" | "--help" | "-h" => {
+            usage();
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command {other:?} — try `qapmap help`")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "qapmap — process mapping & sparse quadratic assignment\n\
+         commands:\n  \
+         map        --inst <name>|--graph <file.metis> --blocks <k> --S a:b:c --D x:y:z\n             \
+         [--algo topdown+Nc10] [--seed 1] [--reps 1] [--verify] [--explicit-distances]\n  \
+         serve      [--addr 127.0.0.1:7447] [--workers N] [--queue 64] [--no-xla]\n  \
+         client     --addr host:port (same instance options as map)\n  \
+         gen        --inst rgg12 --out file.metis [--seed 1]\n  \
+         partition  --graph file.metis --blocks k [--out part.txt] [--epsilon 0.0]\n  \
+         verify     --inst rgg8 --blocks 64 --S 4:16 --D 1:10 [--algo topdown]\n  \
+         infer      --matrix dist.txt   (whitespace-separated n*n matrix) — recover S/D"
+    );
+}
+
+/// Load or build the communication graph named by --graph / --inst+--blocks.
+fn load_comm(args: &Args, rng: &mut Rng) -> Result<Graph> {
+    if let Some(path) = args.options.get("graph") {
+        let g = gio::read_metis_file(Path::new(path)).map_err(|e| anyhow!(e))?;
+        return Ok(g);
+    }
+    let inst = args.get("inst", "rgg12");
+    let blocks: usize = args.get_as("blocks", 256);
+    let app = qapmap::gen::by_name(inst, rng).map_err(|e| anyhow!(e))?;
+    if app.n() < blocks {
+        bail!("instance {inst} has {} vertices < {blocks} blocks", app.n());
+    }
+    Ok(build_instance(&app, blocks, rng))
+}
+
+fn hierarchy_for(args: &Args, n: usize) -> Result<Hierarchy> {
+    let s = args.get("S", "");
+    let d = args.get("D", "");
+    let h = if s.is_empty() {
+        // default: 4 cores/proc, 16 procs/node, rest nodes
+        if n % 64 != 0 {
+            bail!("--S not given and n={n} not divisible by 64");
+        }
+        Hierarchy::new(vec![4, 16, (n / 64) as u64], vec![1, 10, 100]).map_err(|e| anyhow!(e))?
+    } else {
+        Hierarchy::parse(s, if d.is_empty() { "1:10:100" } else { d }).map_err(|e| anyhow!(e))?
+    };
+    if h.n_pes() != n {
+        bail!("hierarchy has {} PEs but the instance has {n} processes", h.n_pes());
+    }
+    Ok(h)
+}
+
+fn cmd_map(args: &Args) -> Result<()> {
+    let seed: u64 = args.get_as("seed", 1);
+    let mut rng = Rng::new(seed);
+    let comm = load_comm(args, &mut rng)?;
+    let h = hierarchy_for(args, comm.n())?;
+    let spec = AlgorithmSpec::parse(args.get("algo", "topdown+Nc10")).map_err(|e| anyhow!(e))?;
+    let oracle = if args.flag("explicit-distances") {
+        DistanceOracle::explicit(&h)
+    } else {
+        DistanceOracle::implicit(h.clone())
+    };
+    let t = Timer::start();
+    let r = qapmap::mapping::algorithms::run(
+        &comm,
+        &h,
+        &oracle,
+        &spec,
+        &PartitionConfig::perfectly_balanced(),
+        &mut rng,
+    );
+    println!(
+        "instance: n={} m={} (m/n={:.1})  algorithm: {}",
+        comm.n(),
+        comm.m(),
+        comm.density(),
+        spec.name()
+    );
+    println!(
+        "objective: {} (initial {}, improvement {:.1}%)",
+        r.objective,
+        r.objective_initial,
+        100.0 * (1.0 - r.objective as f64 / r.objective_initial.max(1) as f64)
+    );
+    println!(
+        "time: construct {:.3}s + local search {:.3}s = {:.3}s (swaps: {} applied / {} evaluated)",
+        r.construct_secs,
+        r.ls_secs,
+        t.secs(),
+        r.stats.improved,
+        r.stats.evaluated
+    );
+    if args.flag("verify") {
+        let rt = RuntimeHandle::spawn_default().context("loading artifacts")?;
+        match rt.objective(&comm, &oracle, &r.mapping)? {
+            Some(xj) => {
+                let exact = r.objective as f32;
+                let ok = (xj - exact).abs() <= 1e-4 * exact.max(1.0);
+                println!("xla verification: {xj} vs exact {exact} -> {}", if ok { "OK" } else { "MISMATCH" });
+            }
+            None => println!("xla verification: instance larger than all artifacts (skipped)"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.get("addr", "127.0.0.1:7447");
+    let workers: usize = args.get_as("workers", 2);
+    let queue: usize = args.get_as("queue", 64);
+    let runtime = if args.flag("no-xla") {
+        None
+    } else {
+        match RuntimeHandle::spawn_default() {
+            Ok(rt) => {
+                println!("loaded XLA artifacts from {}", QapRuntime::artifact_dir().display());
+                Some(rt)
+            }
+            Err(e) => {
+                eprintln!("warning: XLA runtime unavailable ({e:#}); serving without verification");
+                None
+            }
+        }
+    };
+    let coordinator = Arc::new(Coordinator::start(workers, queue, runtime));
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    println!("qapmap service listening on {addr} with {workers} workers");
+    let stop = Arc::new(AtomicBool::new(false));
+    wire::serve(listener, coordinator, stop)
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get("addr", "127.0.0.1:7447");
+    let seed: u64 = args.get_as("seed", 1);
+    let mut rng = Rng::new(seed);
+    let comm = load_comm(args, &mut rng)?;
+    let h = hierarchy_for(args, comm.n())?;
+    let req = MapRequest {
+        id: seed,
+        comm,
+        hierarchy: h,
+        algorithm: AlgorithmSpec::parse(args.get("algo", "topdown+Nc10")).map_err(|e| anyhow!(e))?,
+        repetitions: args.get_as("reps", 1),
+        seed,
+        verify: args.flag("verify"),
+    };
+    let resp = wire::request(addr, &req)?;
+    match &resp.error {
+        Some(e) => bail!("service error: {e}"),
+        None => {
+            println!(
+                "id={} objective={} initial={} construct={:.3}s ls={:.3}s verified={:?}",
+                resp.id,
+                resp.objective,
+                resp.objective_initial,
+                resp.construct_secs,
+                resp.ls_secs,
+                resp.verified
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let seed: u64 = args.get_as("seed", 1);
+    let mut rng = Rng::new(seed);
+    let inst = args.get("inst", "rgg12");
+    let out = args.get("out", "instance.metis");
+    let g = qapmap::gen::by_name(inst, &mut rng).map_err(|e| anyhow!(e))?;
+    gio::write_metis_file(&g, Path::new(out))?;
+    println!("wrote {inst} (n={} m={}) to {out}", g.n(), g.m());
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let seed: u64 = args.get_as("seed", 1);
+    let mut rng = Rng::new(seed);
+    let path = args.options.get("graph").ok_or_else(|| anyhow!("--graph required"))?;
+    let g = gio::read_metis_file(Path::new(path)).map_err(|e| anyhow!(e))?;
+    let k: usize = args.get_as("blocks", 2);
+    let epsilon: f64 = args.get_as("epsilon", 0.0);
+    let cfg = PartitionConfig { epsilon, ..PartitionConfig::default() };
+    let (p, secs) = qapmap::util::timer::time(|| partition_kway(&g, k, &cfg, &mut rng));
+    println!(
+        "partitioned n={} into k={k}: cut={} balanced={} in {:.3}s",
+        g.n(),
+        p.cut(&g),
+        p.is_balanced(&g, epsilon, true),
+        secs
+    );
+    if let Some(out) = args.options.get("out") {
+        let body: String = p.block.iter().map(|b| format!("{b}\n")).collect();
+        std::fs::write(out, body)?;
+        println!("wrote block vector to {out}");
+    }
+    Ok(())
+}
+
+/// Recover a hierarchy description from an explicit distance matrix
+/// (paper §5 future work; see `mapping::infer`).
+fn cmd_infer(args: &Args) -> Result<()> {
+    let path = args.options.get("matrix").ok_or_else(|| anyhow!("--matrix required"))?;
+    let text = std::fs::read_to_string(path)?;
+    let vals: Vec<u64> = text
+        .split_whitespace()
+        .map(|t| t.parse::<u64>().map_err(|e| anyhow!("bad entry {t:?}: {e}")))
+        .collect::<Result<_>>()?;
+    let n = (vals.len() as f64).sqrt() as usize;
+    if n * n != vals.len() {
+        bail!("{} entries is not a square matrix", vals.len());
+    }
+    match qapmap::mapping::infer::infer_hierarchy(n, &vals) {
+        Ok(h) => {
+            let s: Vec<String> = h.s.iter().map(|x| x.to_string()).collect();
+            let d: Vec<String> = h.d.iter().map(|x| x.to_string()).collect();
+            println!("S = {}", s.join(":"));
+            println!("D = {}", d.join(":"));
+            println!("({} PEs, {} levels)", h.n_pes(), h.levels());
+            Ok(())
+        }
+        Err(e) => bail!("inference failed: {e:?} — use --explicit-distances instead"),
+    }
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let seed: u64 = args.get_as("seed", 1);
+    let mut rng = Rng::new(seed);
+    let comm = load_comm(args, &mut rng)?;
+    let h = hierarchy_for(args, comm.n())?;
+    let oracle = DistanceOracle::implicit(h.clone());
+    let spec = AlgorithmSpec::parse(args.get("algo", "topdown")).map_err(|e| anyhow!(e))?;
+    let r = qapmap::mapping::algorithms::run(
+        &comm,
+        &h,
+        &oracle,
+        &spec,
+        &PartitionConfig::perfectly_balanced(),
+        &mut rng,
+    );
+    let rt = RuntimeHandle::spawn_default()?;
+    let exact = objective(&comm, &oracle, &r.mapping);
+    match rt.objective(&comm, &oracle, &r.mapping)? {
+        Some(xj) => {
+            let ok = (xj - exact as f32).abs() <= 1e-4 * (exact as f32).max(1.0);
+            println!("sparse (exact integer): {exact}");
+            println!("dense  (XLA f32):       {xj}");
+            println!("{}", if ok { "MATCH" } else { "MISMATCH" });
+            if !ok {
+                bail!("verification failed");
+            }
+        }
+        None => bail!("instance (n={}) larger than all artifacts", comm.n()),
+    }
+    let m = Mapping { sigma: r.mapping.sigma };
+    m.validate().map_err(|e| anyhow!(e))?;
+    Ok(())
+}

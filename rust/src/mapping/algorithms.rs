@@ -1,0 +1,290 @@
+//! Named end-to-end mapping algorithms: construction ⊕ local search.
+//!
+//! This registry is shared by the CLI, the coordinator service and the
+//! benchmark harness, so every experiment in EXPERIMENTS.md refers to
+//! algorithms by the same names the paper uses: `identity`, `random`, `mm`
+//! (Müller-Merbach), `gac` (GreedyAllC), `rcb` (LibTopoMap-like),
+//! `bottomup`, `topdown`, with optional `+N2`, `+Np`, `+Nc<d>` local-search
+//! suffixes (e.g. the paper's best trade-off `topdown+Nc10`).
+
+use super::construct;
+use super::hierarchy::{DistanceOracle, Hierarchy};
+use super::local_search::{cycle3_search, n2_cyclic, nc_neighborhood, np_blocks, SearchStats};
+use super::objective::{DenseEngine, Mapping, SwapEngine};
+use crate::graph::Graph;
+use crate::partition::PartitionConfig;
+use crate::util::{Rng, Timer};
+
+/// Initial-solution algorithm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Construction {
+    Identity,
+    Random,
+    MuellerMerbach,
+    GreedyAllC,
+    TopDown,
+    BottomUp,
+    Rcb,
+}
+
+/// Local-search neighborhood (§2, §3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Neighborhood {
+    /// No local search.
+    None,
+    /// Heider's full pair exchange `N²`.
+    N2,
+    /// Brandfass et al.'s pruned index blocks `N_p` with this block length.
+    Np { block_len: usize },
+    /// This paper's communication-graph neighborhood `N_C^d`.
+    Nc { d: u32 },
+    /// `N_C^d` followed by triangle rotations (§5 future work, implemented
+    /// in [`super::local_search::cycle3_search`]). Fast engine only.
+    NcCycle { d: u32 },
+}
+
+/// Gain-computation mode: the paper's fast sparse engine or the dense
+/// `O(n)`-per-swap baseline (Table 1's comparison).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GainMode {
+    Fast,
+    SlowDense,
+}
+
+/// A full algorithm specification.
+#[derive(Debug, Clone, Copy)]
+pub struct AlgorithmSpec {
+    pub construction: Construction,
+    pub neighborhood: Neighborhood,
+    pub gain_mode: GainMode,
+    /// Max sweeps for the cyclic neighborhoods (safety bound).
+    pub max_sweeps: usize,
+}
+
+impl AlgorithmSpec {
+    /// Construction-only spec.
+    pub fn construction_only(c: Construction) -> AlgorithmSpec {
+        AlgorithmSpec {
+            construction: c,
+            neighborhood: Neighborhood::None,
+            gain_mode: GainMode::Fast,
+            max_sweeps: 100,
+        }
+    }
+
+    /// Parse names like `topdown`, `mm+Np`, `topdown+Nc10`, `random+N2`.
+    pub fn parse(name: &str) -> Result<AlgorithmSpec, String> {
+        let (cname, ls) = match name.split_once('+') {
+            Some((c, l)) => (c, Some(l)),
+            None => (name, None),
+        };
+        let construction = match cname {
+            "identity" => Construction::Identity,
+            "random" => Construction::Random,
+            "mm" | "muellermerbach" => Construction::MuellerMerbach,
+            "gac" | "greedyallc" => Construction::GreedyAllC,
+            "topdown" | "td" => Construction::TopDown,
+            "bottomup" | "bu" => Construction::BottomUp,
+            "rcb" | "libtopomap" => Construction::Rcb,
+            other => return Err(format!("unknown construction {other:?}")),
+        };
+        let neighborhood = match ls {
+            None => Neighborhood::None,
+            Some("N2") | Some("n2") => Neighborhood::N2,
+            Some("Np") | Some("np") => Neighborhood::Np { block_len: 64 },
+            Some(s) if s.to_ascii_lowercase().starts_with("nccyc") => {
+                let d: u32 = s[5..]
+                    .parse()
+                    .map_err(|e| format!("bad NcCyc distance {s:?}: {e}"))?;
+                Neighborhood::NcCycle { d }
+            }
+            Some(s) if s.to_ascii_lowercase().starts_with("nc") => {
+                let d: u32 = s[2..]
+                    .parse()
+                    .map_err(|e| format!("bad Nc distance {s:?}: {e}"))?;
+                Neighborhood::Nc { d }
+            }
+            Some(other) => return Err(format!("unknown neighborhood {other:?}")),
+        };
+        Ok(AlgorithmSpec {
+            construction,
+            neighborhood,
+            gain_mode: GainMode::Fast,
+            max_sweeps: 100,
+        })
+    }
+
+    /// Canonical name (inverse of [`Self::parse`]).
+    pub fn name(&self) -> String {
+        let c = match self.construction {
+            Construction::Identity => "identity",
+            Construction::Random => "random",
+            Construction::MuellerMerbach => "mm",
+            Construction::GreedyAllC => "gac",
+            Construction::TopDown => "topdown",
+            Construction::BottomUp => "bottomup",
+            Construction::Rcb => "rcb",
+        };
+        match self.neighborhood {
+            Neighborhood::None => c.to_string(),
+            Neighborhood::N2 => format!("{c}+N2"),
+            Neighborhood::Np { .. } => format!("{c}+Np"),
+            Neighborhood::Nc { d } => format!("{c}+Nc{d}"),
+            Neighborhood::NcCycle { d } => format!("{c}+NcCyc{d}"),
+        }
+    }
+}
+
+/// Result of one end-to-end mapping run.
+#[derive(Debug, Clone)]
+pub struct MapResult {
+    pub mapping: Mapping,
+    /// Objective after construction (before local search).
+    pub objective_initial: u64,
+    /// Final objective.
+    pub objective: u64,
+    /// Construction wall time (seconds).
+    pub construct_secs: f64,
+    /// Local-search wall time (seconds).
+    pub ls_secs: f64,
+    /// Local-search statistics.
+    pub stats: SearchStats,
+}
+
+/// Run a complete algorithm on a communication graph + hierarchy.
+pub fn run(
+    comm: &Graph,
+    hierarchy: &Hierarchy,
+    oracle: &DistanceOracle,
+    spec: &AlgorithmSpec,
+    part_cfg: &PartitionConfig,
+    rng: &mut Rng,
+) -> MapResult {
+    let t = Timer::start();
+    let mapping = match spec.construction {
+        Construction::Identity => construct::identity(comm.n()),
+        Construction::Random => construct::random(comm.n(), rng),
+        Construction::MuellerMerbach => construct::mueller_merbach(comm, oracle),
+        Construction::GreedyAllC => construct::greedy_all_c(comm, hierarchy),
+        Construction::TopDown => construct::top_down(comm, hierarchy, part_cfg, rng),
+        Construction::BottomUp => construct::bottom_up(comm, hierarchy, part_cfg, rng),
+        Construction::Rcb => construct::rcb(comm, part_cfg, rng),
+    };
+    let construct_secs = t.secs();
+
+    let t = Timer::start();
+    let (mapping, objective_initial, objective, stats) = match spec.gain_mode {
+        GainMode::Fast => {
+            let mut eng = SwapEngine::new(comm, oracle, mapping);
+            let j0 = eng.objective();
+            let stats = run_ls(&mut eng, comm, hierarchy, spec, rng);
+            (eng.mapping(), j0, eng.objective(), stats)
+        }
+        GainMode::SlowDense => {
+            let mut eng = DenseEngine::new(comm, oracle, mapping);
+            let j0 = eng.objective();
+            let stats = run_ls_dense(&mut eng, comm, hierarchy, spec, rng);
+            (eng.mapping(), j0, eng.objective(), stats)
+        }
+    };
+    let ls_secs = t.secs();
+
+    MapResult { mapping, objective_initial, objective, construct_secs, ls_secs, stats }
+}
+
+fn run_ls(
+    eng: &mut SwapEngine,
+    comm: &Graph,
+    h: &Hierarchy,
+    spec: &AlgorithmSpec,
+    rng: &mut Rng,
+) -> SearchStats {
+    match spec.neighborhood {
+        Neighborhood::None => SearchStats::default(),
+        Neighborhood::N2 => n2_cyclic(eng, comm.n(), spec.max_sweeps),
+        Neighborhood::Np { block_len } => {
+            np_blocks(eng, comm.n(), block_len, Some(h), |e, u| e.pe_of(u), spec.max_sweeps)
+        }
+        Neighborhood::Nc { d } => nc_neighborhood(eng, comm, d, rng, u64::MAX),
+        Neighborhood::NcCycle { d } => {
+            let mut stats = nc_neighborhood(eng, comm, d, rng, u64::MAX);
+            let cyc = cycle3_search(eng, comm, rng, spec.max_sweeps);
+            stats.evaluated += cyc.evaluated;
+            stats.improved += cyc.improved;
+            stats.rounds += cyc.rounds;
+            stats
+        }
+    }
+}
+
+fn run_ls_dense(
+    eng: &mut DenseEngine,
+    comm: &Graph,
+    h: &Hierarchy,
+    spec: &AlgorithmSpec,
+    rng: &mut Rng,
+) -> SearchStats {
+    match spec.neighborhood {
+        Neighborhood::None => SearchStats::default(),
+        Neighborhood::N2 => n2_cyclic(eng, comm.n(), spec.max_sweeps),
+        Neighborhood::Np { block_len } => np_blocks(
+            eng,
+            comm.n(),
+            block_len,
+            Some(h),
+            |e, u| e.mapping().sigma[u as usize],
+            spec.max_sweeps,
+        ),
+        Neighborhood::Nc { d } => nc_neighborhood(eng, comm, d, rng, u64::MAX),
+        // rotations need the Γ machinery of the fast engine; the dense
+        // baseline (Table 1 only) runs the pair-swap part alone
+        Neighborhood::NcCycle { d } => nc_neighborhood(eng, comm, d, rng, u64::MAX),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random_geometric_graph;
+
+    #[test]
+    fn parse_roundtrip() {
+        for name in ["identity", "random", "mm", "gac", "topdown", "bottomup", "rcb",
+                     "topdown+Nc10", "mm+Np", "random+N2", "mm+Nc1", "topdown+NcCyc1"] {
+            let spec = AlgorithmSpec::parse(name).unwrap();
+            assert_eq!(spec.name(), *name, "roundtrip {name}");
+        }
+        assert!(AlgorithmSpec::parse("bogus").is_err());
+        assert!(AlgorithmSpec::parse("mm+Nq3").is_err());
+        assert!(AlgorithmSpec::parse("mm+Ncx").is_err());
+    }
+
+    #[test]
+    fn run_end_to_end_improves() {
+        let mut rng = Rng::new(1);
+        let g = random_geometric_graph(256, &mut rng);
+        let h = Hierarchy::new(vec![4, 16, 4], vec![1, 10, 100]).unwrap();
+        let o = DistanceOracle::implicit(h.clone());
+        let spec = AlgorithmSpec::parse("mm+Nc2").unwrap();
+        let r = run(&g, &h, &o, &spec, &PartitionConfig::fast(), &mut rng);
+        r.mapping.validate().unwrap();
+        assert!(r.objective <= r.objective_initial);
+        assert!(r.stats.evaluated > 0);
+    }
+
+    #[test]
+    fn slow_and_fast_same_final_objective() {
+        let mut rng = Rng::new(2);
+        let g = random_geometric_graph(128, &mut rng);
+        let h = Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap();
+        let o = DistanceOracle::implicit(h.clone());
+        let mut spec = AlgorithmSpec::parse("mm+Np").unwrap();
+        let mut r1 = Rng::new(3);
+        let fast = run(&g, &h, &o, &spec, &PartitionConfig::fast(), &mut r1);
+        spec.gain_mode = GainMode::SlowDense;
+        let mut r2 = Rng::new(3);
+        let slow = run(&g, &h, &o, &spec, &PartitionConfig::fast(), &mut r2);
+        assert_eq!(fast.objective, slow.objective);
+        assert_eq!(fast.mapping.sigma, slow.mapping.sigma);
+    }
+}

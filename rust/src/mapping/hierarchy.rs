@@ -1,0 +1,265 @@
+//! Hardware hierarchy and the constant-time distance oracle (paper §3.4).
+//!
+//! A machine is described by `S = a1:a2:...:ak` (each processor has `a1`
+//! cores, each node `a2` processors, ...) and `D = d1:...:dk` where `d_i` is
+//! the distance between two PEs whose lowest common subsystem is at level
+//! `i` (same level-`i'` subsystem for all `i' > i`... paper: "d_i describes
+//! the distance of two cores that are in the same subsystems for i' < i and
+//! in different subsystems for i' >= i" — i.e. the *innermost differing*
+//! level determines the distance).
+//!
+//! The implicit oracle answers `distance(p, q)` with a top-to-bottom scan of
+//! the precomputed interval sizes — "a few simple division operations"
+//! (O(k), k ≤ 4 in all experiments). The explicit variant materializes the
+//! full `n×n` matrix; the paper's scalability section measures exactly this
+//! trade-off (memory blow-up and cache behaviour vs. online computation).
+
+use crate::graph::Weight;
+
+/// A homogeneous machine hierarchy.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hierarchy {
+    /// `a_1..a_k`: fan-out per level, innermost first.
+    pub s: Vec<u64>,
+    /// `d_1..d_k`: distance of PEs whose paths diverge at level i (1-based
+    /// as in the paper; `d[0]` = same innermost group).
+    pub d: Vec<Weight>,
+    /// `ext[i] = a_1 * ... * a_{i+1}`: number of PEs in a level-(i+1)
+    /// subsystem. `ext[k-1] = n`.
+    ext: Vec<u64>,
+    /// When every `ext[i]` is a power of two (the common case: S = 4:16:k
+    /// with k a power of two), `shift[i] = log2(ext[i])` enables a
+    /// division-free distance query (§Perf: ~3x faster oracle). Empty
+    /// otherwise.
+    shift: Vec<u32>,
+}
+
+impl Hierarchy {
+    /// Build a hierarchy; `s` and `d` must have equal, non-zero length and
+    /// positive fan-outs.
+    pub fn new(s: Vec<u64>, d: Vec<Weight>) -> Result<Hierarchy, String> {
+        if s.is_empty() || s.len() != d.len() {
+            return Err(format!("S and D must be non-empty and equal length, got {} and {}", s.len(), d.len()));
+        }
+        if s.iter().any(|&a| a == 0) {
+            return Err("all fan-outs must be positive".into());
+        }
+        let mut ext = Vec::with_capacity(s.len());
+        let mut prod: u64 = 1;
+        for &a in &s {
+            prod = prod
+                .checked_mul(a)
+                .ok_or_else(|| "hierarchy size overflows u64".to_string())?;
+            ext.push(prod);
+        }
+        let shift = if ext.iter().all(|e| e.is_power_of_two()) {
+            ext.iter().map(|e| e.trailing_zeros()).collect()
+        } else {
+            Vec::new()
+        };
+        Ok(Hierarchy { s, d, ext, shift })
+    }
+
+    /// Parse from the paper's notation, e.g. `"4:16:8"` / `"1:10:100"`.
+    pub fn parse(s: &str, d: &str) -> Result<Hierarchy, String> {
+        Hierarchy::new(
+            crate::util::cli::parse_colon_list(s)?,
+            crate::util::cli::parse_colon_list(d)?,
+        )
+    }
+
+    /// Total number of PEs `n = Π a_i`.
+    pub fn n_pes(&self) -> usize {
+        *self.ext.last().unwrap() as usize
+    }
+
+    /// Number of hierarchy levels `k`.
+    pub fn levels(&self) -> usize {
+        self.s.len()
+    }
+
+    /// Distance between PEs `p` and `q`: zero if equal, else `d_i` where `i`
+    /// is the innermost level whose subsystem still separates them.
+    #[inline]
+    pub fn distance(&self, p: u32, q: u32) -> Weight {
+        if p == q {
+            return 0;
+        }
+        if !self.shift.is_empty() {
+            // division-free fast path: the divergence level is determined by
+            // the highest set bit of p XOR q (all ext are powers of two).
+            let msb = 63 - (p ^ q).leading_zeros() as u32 - 32; // bit index in u32
+            // first level whose shift exceeds the highest differing bit
+            for (i, &sh) in self.shift.iter().enumerate() {
+                if sh > msb {
+                    return self.d[i];
+                }
+            }
+            return *self.d.last().unwrap();
+        }
+        let (p, q) = (p as u64, q as u64);
+        // scan from innermost: first level whose interval contains both
+        for (i, &e) in self.ext.iter().enumerate() {
+            if p / e == q / e {
+                return self.d[i];
+            }
+        }
+        // diverge even at the outermost level
+        *self.d.last().unwrap()
+    }
+
+    /// True iff `p` and `q` share the innermost subsystem — swapping two
+    /// processes assigned there can never change the objective (the
+    /// Brandfass et al. pair-skip rule, §2).
+    #[inline]
+    pub fn same_leaf_group(&self, p: u32, q: u32) -> bool {
+        (p as u64) / self.ext[0] == (q as u64) / self.ext[0]
+    }
+
+    /// Number of PEs in the level-`i` subsystem (1-based level as in `S`).
+    pub fn subsystem_size(&self, level: usize) -> u64 {
+        self.ext[level - 1]
+    }
+}
+
+/// Distance oracle: implicit (O(k) per query, O(1) memory) or explicit
+/// (O(1) per query, O(n²) memory). The scalability experiment (§4.1)
+/// compares the two.
+#[derive(Debug, Clone)]
+pub enum DistanceOracle {
+    /// Query the hierarchy online — "computing distances online enables a
+    /// potential user to tackle larger mapping problems".
+    Implicit(Hierarchy),
+    /// Full precomputed matrix (the traditional representation that OOMs at
+    /// n = 2^17 on the paper's 512 GB machine).
+    Explicit { n: usize, matrix: Vec<Weight> },
+}
+
+impl DistanceOracle {
+    /// Implicit oracle over a hierarchy.
+    pub fn implicit(h: Hierarchy) -> DistanceOracle {
+        DistanceOracle::Implicit(h)
+    }
+
+    /// Materialize the full distance matrix of a hierarchy.
+    pub fn explicit(h: &Hierarchy) -> DistanceOracle {
+        let n = h.n_pes();
+        let mut matrix = vec![0 as Weight; n * n];
+        for p in 0..n as u32 {
+            for q in 0..n as u32 {
+                matrix[p as usize * n + q as usize] = h.distance(p, q);
+            }
+        }
+        DistanceOracle::Explicit { n, matrix }
+    }
+
+    /// Distance between PEs `p` and `q`.
+    #[inline]
+    pub fn distance(&self, p: u32, q: u32) -> Weight {
+        match self {
+            DistanceOracle::Implicit(h) => h.distance(p, q),
+            DistanceOracle::Explicit { n, matrix } => matrix[p as usize * n + q as usize],
+        }
+    }
+
+    /// Number of PEs covered.
+    pub fn n_pes(&self) -> usize {
+        match self {
+            DistanceOracle::Implicit(h) => h.n_pes(),
+            DistanceOracle::Explicit { n, .. } => *n,
+        }
+    }
+
+    /// Bytes of memory held (the scalability experiment's reported metric).
+    pub fn memory_bytes(&self) -> usize {
+        match self {
+            DistanceOracle::Implicit(h) => (h.s.len() + h.d.len() + h.ext.len()) * 8,
+            DistanceOracle::Explicit { matrix, .. } => matrix.len() * std::mem::size_of::<Weight>(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn h_4_16_2() -> Hierarchy {
+        Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap()
+    }
+
+    #[test]
+    fn n_pes_product() {
+        assert_eq!(h_4_16_2().n_pes(), 128);
+        assert_eq!(Hierarchy::new(vec![7], vec![3]).unwrap().n_pes(), 7);
+    }
+
+    #[test]
+    fn distance_levels() {
+        let h = h_4_16_2();
+        assert_eq!(h.distance(0, 0), 0);
+        assert_eq!(h.distance(0, 1), 1); // same core-group of 4
+        assert_eq!(h.distance(0, 3), 1);
+        assert_eq!(h.distance(0, 4), 10); // same node (64), different proc
+        assert_eq!(h.distance(0, 63), 10);
+        assert_eq!(h.distance(0, 64), 100); // different node
+        assert_eq!(h.distance(63, 64), 100);
+        assert_eq!(h.distance(127, 0), 100);
+    }
+
+    #[test]
+    fn distance_symmetric() {
+        let h = h_4_16_2();
+        for p in [0u32, 3, 17, 63, 64, 100] {
+            for q in [1u32, 5, 16, 62, 65, 127] {
+                assert_eq!(h.distance(p, q), h.distance(q, p));
+            }
+        }
+    }
+
+    #[test]
+    fn same_leaf_group_rule() {
+        let h = h_4_16_2();
+        assert!(h.same_leaf_group(0, 3));
+        assert!(!h.same_leaf_group(3, 4));
+        assert!(h.same_leaf_group(124, 127));
+    }
+
+    #[test]
+    fn explicit_matches_implicit() {
+        let h = Hierarchy::new(vec![2, 3, 2], vec![1, 7, 42]).unwrap();
+        let imp = DistanceOracle::implicit(h.clone());
+        let exp = DistanceOracle::explicit(&h);
+        assert_eq!(imp.n_pes(), 12);
+        for p in 0..12u32 {
+            for q in 0..12u32 {
+                assert_eq!(imp.distance(p, q), exp.distance(p, q), "({p},{q})");
+            }
+        }
+        assert!(exp.memory_bytes() > imp.memory_bytes());
+    }
+
+    #[test]
+    fn parse_notation() {
+        let h = Hierarchy::parse("4:16:8", "1:10:100").unwrap();
+        assert_eq!(h.n_pes(), 512);
+        assert!(Hierarchy::parse("4:x", "1:2").is_err());
+        assert!(Hierarchy::parse("4:16", "1").is_err());
+        assert!(Hierarchy::parse("0:16", "1:10").is_err());
+    }
+
+    #[test]
+    fn single_level() {
+        let h = Hierarchy::new(vec![8], vec![5]).unwrap();
+        assert_eq!(h.distance(0, 7), 5);
+        assert_eq!(h.distance(2, 2), 0);
+        assert!(h.same_leaf_group(0, 7));
+    }
+
+    #[test]
+    fn subsystem_sizes() {
+        let h = h_4_16_2();
+        assert_eq!(h.subsystem_size(1), 4);
+        assert_eq!(h.subsystem_size(2), 64);
+        assert_eq!(h.subsystem_size(3), 128);
+    }
+}

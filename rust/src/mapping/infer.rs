@@ -1,0 +1,292 @@
+//! Hierarchy inference — the paper's §5 future work: "we want to
+//! investigate algorithms to create a hierarchy of the system if it is not
+//! provided as an input to our algorithm".
+//!
+//! Given an explicit PE-distance matrix that *is* (close to) ultrametric —
+//! what `MPI_Comm` latency probing of a hierarchical machine produces — we
+//! recover a hierarchy description `S = a1:…:ak`, `D = d1:…:dk`:
+//!
+//! 1. collect the distinct off-diagonal distance values, sorted ascending —
+//!    these are the candidate level distances `d1 < d2 < … < dk`;
+//! 2. for each prefix threshold `d_i`, group PEs into equivalence classes
+//!    by "distance ≤ d_i" (union-find); ultrametricity makes these classes
+//!    well-defined and nested;
+//! 3. uniform class sizes at every level yield the fan-outs `a_i`.
+//!
+//! If the matrix is not ultrametric or the classes are not uniform, the
+//! inference reports a structured error instead of guessing — callers fall
+//! back to the explicit oracle.
+
+use super::hierarchy::Hierarchy;
+use crate::graph::Weight;
+
+/// Union-find with path halving.
+struct Dsu {
+    parent: Vec<u32>,
+}
+
+impl Dsu {
+    fn new(n: usize) -> Dsu {
+        Dsu { parent: (0..n as u32).collect() }
+    }
+    fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            self.parent[x as usize] = self.parent[self.parent[x as usize] as usize];
+            x = self.parent[x as usize];
+        }
+        x
+    }
+    fn union(&mut self, a: u32, b: u32) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            self.parent[ra as usize] = rb;
+        }
+    }
+}
+
+/// Why inference failed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InferError {
+    /// Matrix has a non-zero diagonal or asymmetry.
+    NotADistanceMatrix(String),
+    /// Classes at some level have different sizes (machine not homogeneous).
+    NonUniformLevel { level: usize, sizes: Vec<usize> },
+    /// Grouping by a larger threshold failed to merge whole classes
+    /// (matrix is not ultrametric).
+    NotUltrametric(String),
+    /// Degenerate input (n < 2 or a single distance value of 0).
+    Degenerate(String),
+}
+
+/// Infer `Hierarchy` from a row-major `n x n` distance matrix.
+pub fn infer_hierarchy(n: usize, matrix: &[Weight]) -> Result<Hierarchy, InferError> {
+    if n < 2 {
+        return Err(InferError::Degenerate(format!("n = {n}")));
+    }
+    assert_eq!(matrix.len(), n * n, "matrix must be n*n");
+    for p in 0..n {
+        if matrix[p * n + p] != 0 {
+            return Err(InferError::NotADistanceMatrix(format!("D[{p}][{p}] != 0")));
+        }
+        for q in (p + 1)..n {
+            if matrix[p * n + q] != matrix[q * n + p] {
+                return Err(InferError::NotADistanceMatrix(format!("D[{p}][{q}] asymmetric")));
+            }
+            if matrix[p * n + q] == 0 {
+                return Err(InferError::NotADistanceMatrix(format!(
+                    "distinct PEs {p},{q} at distance 0"
+                )));
+            }
+        }
+    }
+    // distinct distances, ascending = candidate d1 < d2 < ... < dk
+    let mut levels: Vec<Weight> = matrix
+        .iter()
+        .copied()
+        .filter(|&d| d > 0)
+        .collect();
+    levels.sort_unstable();
+    levels.dedup();
+
+    let mut s: Vec<u64> = Vec::with_capacity(levels.len());
+    let mut prev_class_count = n; // level 0: singletons
+    let mut class_of: Vec<u32> = (0..n as u32).collect();
+
+    for (li, &d) in levels.iter().enumerate() {
+        // group PEs with pairwise distance <= d
+        let mut dsu = Dsu::new(n);
+        for p in 0..n {
+            for q in (p + 1)..n {
+                if matrix[p * n + q] <= d {
+                    dsu.union(p as u32, q as u32);
+                }
+            }
+        }
+        // ultrametricity check: union-find transitively closes, so a chain
+        // 0—1—2 with d(0,2) > d would silently merge; verify every
+        // intra-class pair is actually within the threshold.
+        for p in 0..n {
+            for q in (p + 1)..n {
+                if dsu.find(p as u32) == dsu.find(q as u32) && matrix[p * n + q] > d {
+                    return Err(InferError::NotUltrametric(format!(
+                        "PEs {p},{q} grouped at threshold {d} but D = {}",
+                        matrix[p * n + q]
+                    )));
+                }
+            }
+        }
+        // canonicalize classes + check nesting (every previous class maps
+        // into exactly one new class — ultrametricity)
+        let mut new_class = vec![u32::MAX; n];
+        let mut count = 0u32;
+        for p in 0..n {
+            let r = dsu.find(p as u32) as usize;
+            if new_class[r] == u32::MAX {
+                new_class[r] = count;
+                count += 1;
+            }
+        }
+        let mut prev_to_new: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+        for p in 0..n {
+            let nc = new_class[dsu.find(p as u32) as usize];
+            match prev_to_new.entry(class_of[p]) {
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(nc);
+                }
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    if *e.get() != nc {
+                        return Err(InferError::NotUltrametric(format!(
+                            "class containing PE {p} splits at distance {d}"
+                        )));
+                    }
+                }
+            }
+        }
+        // uniform sizes?
+        let mut sizes = vec![0usize; count as usize];
+        for p in 0..n {
+            sizes[new_class[dsu.find(p as u32) as usize] as usize] += 1;
+        }
+        let first = sizes[0];
+        if sizes.iter().any(|&x| x != first) {
+            return Err(InferError::NonUniformLevel { level: li + 1, sizes });
+        }
+        let fanout = (prev_class_count / count as usize) as u64;
+        if fanout * count as u64 != prev_class_count as u64 {
+            return Err(InferError::NonUniformLevel { level: li + 1, sizes });
+        }
+        s.push(fanout);
+        prev_class_count = count as usize;
+        for p in 0..n {
+            class_of[p] = new_class[dsu.find(p as u32) as usize];
+        }
+    }
+    if prev_class_count != 1 {
+        return Err(InferError::NotUltrametric(format!(
+            "{prev_class_count} components at the largest distance"
+        )));
+    }
+    Hierarchy::new(s, levels).map_err(InferError::Degenerate)
+}
+
+/// Convenience: infer from an explicit oracle (used by the CLI to accept
+/// raw distance matrices).
+pub fn infer_from_oracle(oracle: &super::hierarchy::DistanceOracle) -> Result<Hierarchy, InferError> {
+    let n = oracle.n_pes();
+    let mut m = vec![0 as Weight; n * n];
+    for p in 0..n as u32 {
+        for q in 0..n as u32 {
+            m[p as usize * n + q as usize] = oracle.distance(p, q);
+        }
+    }
+    infer_hierarchy(n, &m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::hierarchy::DistanceOracle;
+
+    fn matrix_of(h: &Hierarchy) -> (usize, Vec<Weight>) {
+        let n = h.n_pes();
+        let mut m = vec![0; n * n];
+        for p in 0..n as u32 {
+            for q in 0..n as u32 {
+                m[p as usize * n + q as usize] = h.distance(p, q);
+            }
+        }
+        (n, m)
+    }
+
+    #[test]
+    fn roundtrip_standard_hierarchy() {
+        for (s, d) in [
+            (vec![4u64, 16, 2], vec![1u64, 10, 100]),
+            (vec![2, 2, 2, 2], vec![1, 2, 3, 4]),
+            (vec![3, 5], vec![7, 42]),
+            (vec![8], vec![5]),
+        ] {
+            let h = Hierarchy::new(s.clone(), d.clone()).unwrap();
+            let (n, m) = matrix_of(&h);
+            let inferred = infer_hierarchy(n, &m).unwrap();
+            assert_eq!(inferred.s, s, "S for {s:?}");
+            assert_eq!(inferred.d, d, "D for {s:?}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_via_oracle() {
+        let h = Hierarchy::new(vec![4, 4, 4], vec![1, 10, 100]).unwrap();
+        let o = DistanceOracle::explicit(&h);
+        let inferred = infer_from_oracle(&o).unwrap();
+        assert_eq!(inferred, h);
+    }
+
+    #[test]
+    fn collapses_equal_distance_levels() {
+        // two levels with the SAME distance are indistinguishable from one
+        // level with the product fan-out — inference returns the canonical
+        // (coarser) form
+        let h = Hierarchy::new(vec![2, 3], vec![5, 5]).unwrap();
+        let (n, m) = matrix_of(&h);
+        let inferred = infer_hierarchy(n, &m).unwrap();
+        assert_eq!(inferred.s, vec![6]);
+        assert_eq!(inferred.d, vec![5]);
+    }
+
+    #[test]
+    fn rejects_non_ultrametric() {
+        // a path metric: d(0,2) = 2 violates grouping
+        let m = vec![
+            0, 1, 2, //
+            1, 0, 1, //
+            2, 1, 0,
+        ];
+        assert!(matches!(infer_hierarchy(3, &m), Err(InferError::NotUltrametric(_))));
+    }
+
+    #[test]
+    fn rejects_non_uniform() {
+        // ultrametric but classes of different sizes: {0,1} and {2} at d=1
+        // then both at d=10: level sizes 2 and 1 -> non-homogeneous
+        let m = vec![
+            0, 1, 10, //
+            1, 0, 10, //
+            10, 10, 0,
+        ];
+        assert!(matches!(
+            infer_hierarchy(3, &m),
+            Err(InferError::NonUniformLevel { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_bad_matrices() {
+        assert!(matches!(infer_hierarchy(1, &[0]), Err(InferError::Degenerate(_))));
+        // asymmetric
+        let m = vec![0, 1, 2, 0];
+        assert!(matches!(infer_hierarchy(2, &m), Err(InferError::NotADistanceMatrix(_))));
+        // zero distance between distinct PEs
+        let m = vec![0, 0, 0, 0];
+        assert!(matches!(infer_hierarchy(2, &m), Err(InferError::NotADistanceMatrix(_))));
+    }
+
+    #[test]
+    fn inferred_hierarchy_is_usable_end_to_end() {
+        // map with an inferred hierarchy: same result as with the original
+        use crate::mapping::algorithms::{run, AlgorithmSpec};
+        use crate::partition::PartitionConfig;
+        use crate::util::Rng;
+        let h = Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap();
+        let (_, m) = matrix_of(&h);
+        let inferred = infer_hierarchy(h.n_pes(), &m).unwrap();
+        assert_eq!(inferred, h);
+        let mut rng = Rng::new(1);
+        let app = crate::gen::random_geometric_graph(2048, &mut rng);
+        let comm = crate::model::build_instance(&app, 128, &mut rng);
+        let oracle = DistanceOracle::implicit(inferred.clone());
+        let spec = AlgorithmSpec::parse("topdown").unwrap();
+        let r = run(&comm, &inferred, &oracle, &spec, &PartitionConfig::default(), &mut rng);
+        r.mapping.validate().unwrap();
+    }
+}

@@ -1,0 +1,432 @@
+//! Local search over swap neighborhoods (paper §2, §3.3).
+//!
+//! * [`n2_cyclic`] — Heider's full pair-exchange neighborhood `N²`: all
+//!   `O(n²)` pairs visited cyclically; a swap is applied whenever it has
+//!   positive gain; terminates when a full cycle applies no swap.
+//! * [`np_blocks`] — Brandfass et al.'s pruned neighborhood `N_p`: the index
+//!   space is partitioned into `s` consecutive blocks and only pairs inside
+//!   a block are considered (`O(n·s)` pairs), with the same-leaf-group pairs
+//!   skipped ("pairs for which the objective cannot change").
+//! * [`nc_neighborhood`] — this paper's communication-graph neighborhoods
+//!   `N_C^d`: only pairs of processes within graph distance `d` in `G_C` may
+//!   swap; pairs are tried in random order and the search stops after a full
+//!   round of consecutive unsuccessful attempts.
+//!
+//! All engines work on either the fast [`SwapEngine`] or the slow
+//! [`DenseEngine`] through the [`Swapper`] trait, so Table 1 can time the
+//! identical search trajectory under both gain computations.
+
+use super::objective::{DenseEngine, SwapEngine};
+use crate::graph::{bfs_ball, Graph, NodeId};
+use crate::mapping::hierarchy::Hierarchy;
+use crate::util::Rng;
+
+/// Common interface over the fast (sparse, `O(d_u+d_v)`) and slow (dense,
+/// `O(n)`) swap engines.
+pub trait Swapper {
+    /// Apply the swap iff it strictly improves the objective.
+    fn try_swap(&mut self, u: NodeId, v: NodeId) -> Option<i64>;
+    /// Current objective value.
+    fn objective(&self) -> u64;
+}
+
+impl Swapper for SwapEngine<'_> {
+    fn try_swap(&mut self, u: NodeId, v: NodeId) -> Option<i64> {
+        SwapEngine::try_swap(self, u, v)
+    }
+    fn objective(&self) -> u64 {
+        SwapEngine::objective(self)
+    }
+}
+
+impl Swapper for DenseEngine {
+    fn try_swap(&mut self, u: NodeId, v: NodeId) -> Option<i64> {
+        DenseEngine::try_swap(self, u, v)
+    }
+    fn objective(&self) -> u64 {
+        DenseEngine::objective(self)
+    }
+}
+
+/// Search statistics returned by every local search.
+#[derive(Debug, Clone, Default)]
+pub struct SearchStats {
+    /// Pairs evaluated (gain computations).
+    pub evaluated: u64,
+    /// Swaps applied.
+    pub improved: u64,
+    /// Full sweeps/rounds executed.
+    pub rounds: u64,
+}
+
+/// Heider's cyclic `N²` pair-exchange search. `max_sweeps` bounds the number
+/// of full passes (the algorithm converges when a sweep applies no swap).
+pub fn n2_cyclic<S: Swapper>(engine: &mut S, n: usize, max_sweeps: usize) -> SearchStats {
+    let mut stats = SearchStats::default();
+    for _ in 0..max_sweeps {
+        stats.rounds += 1;
+        let mut any = false;
+        for i in 0..n as NodeId {
+            for j in (i + 1)..n as NodeId {
+                stats.evaluated += 1;
+                if engine.try_swap(i, j).is_some() {
+                    stats.improved += 1;
+                    any = true;
+                }
+            }
+        }
+        if !any {
+            break;
+        }
+    }
+    stats
+}
+
+/// Brandfass et al.'s pruned neighborhood `N_p`: `s` consecutive index
+/// blocks, pairs only within a block, same-leaf-group pairs skipped.
+/// The original chooses `s` so each block spans a few compute nodes; we
+/// default to blocks of `4 × a₁·a₂`-ish — callers pass `block_len`.
+pub fn np_blocks<S: Swapper>(
+    engine: &mut S,
+    n: usize,
+    block_len: usize,
+    hierarchy: Option<&Hierarchy>,
+    pe_of: impl Fn(&S, NodeId) -> u32,
+    max_sweeps: usize,
+) -> SearchStats {
+    let mut stats = SearchStats::default();
+    let block_len = block_len.max(2);
+    for _ in 0..max_sweeps {
+        stats.rounds += 1;
+        let mut any = false;
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + block_len).min(n);
+            for i in start..end {
+                for j in (i + 1)..end {
+                    let (u, v) = (i as NodeId, j as NodeId);
+                    if let Some(h) = hierarchy {
+                        // skip pairs that cannot change the objective
+                        if h.same_leaf_group(pe_of(engine, u), pe_of(engine, v)) {
+                            continue;
+                        }
+                    }
+                    stats.evaluated += 1;
+                    if engine.try_swap(u, v).is_some() {
+                        stats.improved += 1;
+                        any = true;
+                    }
+                }
+            }
+            start = end;
+        }
+        if !any {
+            break;
+        }
+    }
+    stats
+}
+
+/// Materialize the pair set of the `N_C^d` neighborhood: all unordered pairs
+/// of distinct processes within communication-graph distance `d`.
+/// For `d = 1` this is exactly the edge set (size `m`).
+pub fn nc_pairs(comm: &Graph, d: u32) -> Vec<(NodeId, NodeId)> {
+    let n = comm.n();
+    let mut pairs = Vec::new();
+    if d <= 1 {
+        for u in 0..n as NodeId {
+            for &v in comm.neighbors(u) {
+                if v > u {
+                    pairs.push((u, v));
+                }
+            }
+        }
+        return pairs;
+    }
+    let mut scratch = vec![u32::MAX; n];
+    let mut queue = Vec::new();
+    for u in 0..n as NodeId {
+        for v in bfs_ball(comm, u, d, &mut scratch, &mut queue) {
+            if v > u {
+                pairs.push((u, v));
+            }
+        }
+    }
+    pairs
+}
+
+/// `N_C^d` local search: random order over the pair set, terminating after
+/// `pairs.len()` consecutive unsuccessful swaps (§3.3).
+pub fn nc_neighborhood<S: Swapper>(
+    engine: &mut S,
+    comm: &Graph,
+    d: u32,
+    rng: &mut Rng,
+    max_evaluations: u64,
+) -> SearchStats {
+    let mut pairs = nc_pairs(comm, d);
+    let mut stats = SearchStats::default();
+    if pairs.is_empty() {
+        return stats;
+    }
+    rng.shuffle(&mut pairs);
+    let threshold = pairs.len() as u64;
+    let mut consecutive_failures = 0u64;
+    let mut idx = 0usize;
+    while consecutive_failures < threshold && stats.evaluated < max_evaluations {
+        let (u, v) = pairs[idx];
+        stats.evaluated += 1;
+        if engine.try_swap(u, v).is_some() {
+            stats.improved += 1;
+            consecutive_failures = 0;
+        } else {
+            consecutive_failures += 1;
+        }
+        idx += 1;
+        if idx == pairs.len() {
+            idx = 0;
+            stats.rounds += 1;
+            rng.shuffle(&mut pairs);
+        }
+    }
+    stats
+}
+
+/// Cyclic-exchange local search over communication-graph *triangles*
+/// (the paper's §5 future work: "allow swapping along cycles in the
+/// communication graph"). Enumerates triangles `u < v < w` of `G_C`, tries
+/// both rotation directions, applies strictly improving ones; repeats until
+/// a full pass finds nothing (or `max_rounds`).
+///
+/// Runs on the fast engine only (the rotation machinery lives there).
+pub fn cycle3_search(
+    engine: &mut SwapEngine,
+    comm: &Graph,
+    rng: &mut Rng,
+    max_rounds: usize,
+) -> SearchStats {
+    // enumerate triangles once: for each edge (u,v), intersect adjacencies
+    let mut triangles: Vec<(NodeId, NodeId, NodeId)> = Vec::new();
+    for u in 0..comm.n() as NodeId {
+        for &v in comm.neighbors(u) {
+            if v <= u {
+                continue;
+            }
+            // sorted adjacency intersection
+            let (mut i, mut j) = (0usize, 0usize);
+            let nu = comm.neighbors(u);
+            let nv = comm.neighbors(v);
+            while i < nu.len() && j < nv.len() {
+                match nu[i].cmp(&nv[j]) {
+                    std::cmp::Ordering::Less => i += 1,
+                    std::cmp::Ordering::Greater => j += 1,
+                    std::cmp::Ordering::Equal => {
+                        if nu[i] > v {
+                            triangles.push((u, v, nu[i]));
+                        }
+                        i += 1;
+                        j += 1;
+                    }
+                }
+            }
+        }
+    }
+    let mut stats = SearchStats::default();
+    if triangles.is_empty() {
+        return stats;
+    }
+    rng.shuffle(&mut triangles);
+    for _ in 0..max_rounds {
+        stats.rounds += 1;
+        let mut any = false;
+        for &(u, v, w) in &triangles {
+            // both rotation directions
+            stats.evaluated += 2;
+            if engine.try_rotate3(u, v, w).is_some()
+                || engine.try_rotate3(u, w, v).is_some()
+            {
+                stats.improved += 1;
+                any = true;
+            }
+        }
+        if !any {
+            break;
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random_geometric_graph;
+    use crate::mapping::hierarchy::DistanceOracle;
+    use crate::mapping::objective::Mapping;
+
+    fn setup(nexp: usize, seed: u64) -> (Graph, DistanceOracle) {
+        let mut rng = Rng::new(seed);
+        let g = random_geometric_graph(1 << nexp, &mut rng);
+        let h = Hierarchy::new(vec![4, 16, (1 << nexp) / 64], vec![1, 10, 100]).unwrap();
+        (g, DistanceOracle::implicit(h))
+    }
+
+    #[test]
+    fn nc_pairs_d1_is_edge_set() {
+        let (g, _) = setup(7, 1);
+        let pairs = nc_pairs(&g, 1);
+        assert_eq!(pairs.len(), g.m());
+    }
+
+    #[test]
+    fn nc_pairs_nested_growth() {
+        let (g, _) = setup(7, 2);
+        let p1 = nc_pairs(&g, 1).len();
+        let p2 = nc_pairs(&g, 2).len();
+        let p3 = nc_pairs(&g, 3).len();
+        assert!(p1 <= p2 && p2 <= p3, "{p1} {p2} {p3}");
+        assert!(p3 > p1);
+    }
+
+    #[test]
+    fn n2_reduces_objective_and_converges() {
+        let (g, o) = setup(7, 3);
+        let mut rng = Rng::new(4);
+        let mut eng = SwapEngine::new(&g, &o, Mapping { sigma: rng.permutation(g.n()) });
+        let before = eng.objective();
+        let stats = n2_cyclic(&mut eng, g.n(), 50);
+        let after = eng.objective();
+        assert!(after < before, "{before} -> {after}");
+        assert!(stats.rounds < 50, "did not converge");
+        assert_eq!(after, eng.recompute_objective());
+        // converged: no improving pair remains in the last sweep
+        let final_stats = n2_cyclic(&mut eng, g.n(), 1);
+        assert_eq!(final_stats.improved, 0);
+    }
+
+    #[test]
+    fn np_reduces_objective() {
+        let (g, o) = setup(8, 5);
+        let mut rng = Rng::new(6);
+        let mut eng = SwapEngine::new(&g, &o, Mapping { sigma: rng.permutation(g.n()) });
+        let before = eng.objective();
+        let h = Hierarchy::new(vec![4, 16, 4], vec![1, 10, 100]).unwrap();
+        np_blocks(&mut eng, g.n(), 64, Some(&h), |e, u| e.pe_of(u), 50);
+        assert!(eng.objective() < before);
+        assert!(eng.gamma_invariant_holds());
+    }
+
+    #[test]
+    fn nc_d1_improves_random_mapping() {
+        let (g, o) = setup(8, 7);
+        let mut rng = Rng::new(8);
+        let mut eng = SwapEngine::new(&g, &o, Mapping { sigma: rng.permutation(g.n()) });
+        let before = eng.objective();
+        let stats = nc_neighborhood(&mut eng, &g, 1, &mut rng, u64::MAX);
+        assert!(eng.objective() < before);
+        assert!(stats.improved > 0);
+    }
+
+    #[test]
+    fn quality_ordering_n2_best_nc1_worst() {
+        // the paper's Table 2 ordering: N² >= N_10 >= N_2 >= N_1 (quality).
+        // On a single random instance we just require N² <= N_1 final J.
+        let (g, o) = setup(7, 9);
+        let mut rng = Rng::new(10);
+        let m = Mapping { sigma: rng.permutation(g.n()) };
+
+        let mut e_n2 = SwapEngine::new(&g, &o, m.clone());
+        n2_cyclic(&mut e_n2, g.n(), 100);
+
+        let mut rng2 = Rng::new(11);
+        let mut e_n1 = SwapEngine::new(&g, &o, m);
+        nc_neighborhood(&mut e_n1, &g, 1, &mut rng2, u64::MAX);
+
+        assert!(e_n2.objective() <= e_n1.objective());
+    }
+
+    #[test]
+    fn np_skips_same_leaf_pairs() {
+        // engine on identity mapping: processes 0..3 sit on PEs 0..3 — the
+        // same leaf group of a1=4; with block_len=4 and the hierarchy given,
+        // every pair in the first block is skipped.
+        let (g, o) = setup(6, 12);
+        let mut eng = SwapEngine::new(&g, &o, Mapping::identity(g.n()));
+        let h = Hierarchy::new(vec![64], vec![1]).unwrap(); // all PEs one group
+        let stats = np_blocks(&mut eng, g.n(), 8, Some(&h), |e, u| e.pe_of(u), 3);
+        assert_eq!(stats.evaluated, 0, "all pairs share the single leaf group");
+        assert_eq!(stats.improved, 0);
+    }
+
+    #[test]
+    fn rotate3_gain_matches_recompute() {
+        let (g, o) = setup(7, 15);
+        let mut rng = Rng::new(16);
+        let mut eng = SwapEngine::new(&g, &o, Mapping { sigma: rng.permutation(g.n()) });
+        for _ in 0..300 {
+            let n = g.n();
+            let u = rng.index(n) as u32;
+            let mut v = rng.index(n) as u32;
+            let mut w = rng.index(n) as u32;
+            if v == u {
+                v = (v + 1) % n as u32;
+            }
+            while w == u || w == v {
+                w = (w + 1) % n as u32;
+            }
+            let before = eng.objective();
+            let gain = eng.rotate3_gain(u, v, w);
+            eng.do_rotate3(u, v, w);
+            assert_eq!(
+                eng.objective() as i64,
+                before as i64 - gain,
+                "rotation ({u},{v},{w})"
+            );
+            assert_eq!(eng.objective(), eng.recompute_objective());
+        }
+        assert!(eng.gamma_invariant_holds());
+        eng.mapping().validate().unwrap();
+    }
+
+    #[test]
+    fn cycle3_search_improves_beyond_pair_swaps() {
+        // after N_C^1 pair-swap convergence, triangle rotations may still
+        // find gains (a strictly larger move class); never worsen.
+        let (g, o) = setup(8, 17);
+        let mut rng = Rng::new(18);
+        let mut eng = SwapEngine::new(&g, &o, Mapping { sigma: rng.permutation(g.n()) });
+        nc_neighborhood(&mut eng, &g, 1, &mut rng, u64::MAX);
+        let after_pairs = eng.objective();
+        let stats = cycle3_search(&mut eng, &g, &mut rng, 50);
+        assert!(eng.objective() <= after_pairs);
+        assert!(stats.evaluated > 0, "rgg comm graphs contain triangles");
+        assert_eq!(eng.objective(), eng.recompute_objective());
+    }
+
+    #[test]
+    fn cycle3_on_triangle_free_graph_is_noop() {
+        // a path graph has no triangles
+        let g = crate::graph::from_edges(6, &[(0, 1, 1), (1, 2, 1), (2, 3, 1), (3, 4, 1), (4, 5, 1)]);
+        let h = Hierarchy::new(vec![2, 3], vec![1, 10]).unwrap();
+        let o = DistanceOracle::implicit(h);
+        let mut rng = Rng::new(19);
+        let mut eng = SwapEngine::new(&g, &o, Mapping::identity(6));
+        let stats = cycle3_search(&mut eng, &g, &mut rng, 10);
+        assert_eq!(stats.evaluated, 0);
+    }
+
+    #[test]
+    fn dense_and_sparse_follow_identical_trajectory() {
+        // Table 1's premise: same visit order => same swaps => same final
+        // objective, only the running time differs.
+        let (g, o) = setup(6, 13);
+        let mut rng = Rng::new(14);
+        let m = Mapping { sigma: rng.permutation(g.n()) };
+        let mut fast = SwapEngine::new(&g, &o, m.clone());
+        let mut slow = DenseEngine::new(&g, &o, m);
+        let sf = n2_cyclic(&mut fast, g.n(), 10);
+        let ss = n2_cyclic(&mut slow, g.n(), 10);
+        assert_eq!(fast.objective(), slow.objective());
+        assert_eq!(sf.improved, ss.improved);
+        assert_eq!(sf.evaluated, ss.evaluated);
+    }
+}

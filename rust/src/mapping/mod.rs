@@ -1,0 +1,21 @@
+//! Process mapping as sparse quadratic assignment — the paper's core.
+//!
+//! * [`hierarchy`] — machine model `S = a1:…:ak`, `D = d1:…:dk` and the
+//!   implicit/explicit distance oracles (§3.4).
+//! * [`objective`] — `J(C,D,Π)`, vertex contributions `Γ`, the fast
+//!   `O(d_u+d_v)` swap engine (§3.2) and the dense `O(n)` baseline.
+//! * [`construct`] — initial mappings: Top-Down, Bottom-Up (§3.1) and all
+//!   compared baselines (Müller-Merbach, GreedyAllC, RCB, identity, random).
+//! * [`local_search`] — the `N²`, `N_p` and `N_C^d` neighborhoods (§3.3).
+//! * [`algorithms`] — a registry tying the above into named end-to-end
+//!   configurations for the CLI / coordinator / bench harness.
+
+pub mod algorithms;
+pub mod construct;
+pub mod hierarchy;
+pub mod infer;
+pub mod local_search;
+pub mod objective;
+
+pub use hierarchy::{DistanceOracle, Hierarchy};
+pub use objective::{objective, DenseEngine, Mapping, SwapEngine};

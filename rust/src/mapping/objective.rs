@@ -1,0 +1,560 @@
+//! QAP objective, vertex contributions, and the fast swap engine (§3.2).
+//!
+//! The objective is evaluated in the inverse-permutation form
+//!
+//! ```text
+//! J(C, D, Π) = Σ_{(u,v) ∈ E[C]} C_{u,v} · D_{σ(u), σ(v)},     σ = Π⁻¹
+//! ```
+//!
+//! where `σ(u)` is the PE hosting process `u`. [`SwapEngine`] maintains the
+//! per-vertex contributions `Γ_σ(u) = Σ_{v ∈ Γ(u)} C_{u,v} D_{σ(u),σ(v)}`
+//! so that a swap evaluates and applies in `O(d_u + d_v)` time — the paper's
+//! central speed contribution. [`DenseEngine`] reimplements the *slow*
+//! baseline of Brandfass et al. (dense matrices, `O(n)` per update) used as
+//! the comparison point of Table 1/Figure 1.
+
+use super::hierarchy::DistanceOracle;
+use crate::graph::{Graph, NodeId};
+
+/// An assignment of processes to PEs: `sigma[u]` = PE of process `u`
+/// (the paper's `Π⁻¹`). Always a bijection `0..n -> 0..n`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mapping {
+    pub sigma: Vec<u32>,
+}
+
+impl Mapping {
+    /// The identity assignment.
+    pub fn identity(n: usize) -> Mapping {
+        Mapping { sigma: (0..n as u32).collect() }
+    }
+
+    /// Number of processes.
+    pub fn n(&self) -> usize {
+        self.sigma.len()
+    }
+
+    /// Verify bijectivity.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.sigma.len();
+        let mut seen = vec![false; n];
+        for &p in &self.sigma {
+            if p as usize >= n {
+                return Err(format!("PE {p} out of range (n={n})"));
+            }
+            if seen[p as usize] {
+                return Err(format!("PE {p} assigned twice"));
+            }
+            seen[p as usize] = true;
+        }
+        Ok(())
+    }
+
+    /// The inverse map (PE -> process), the paper's `Π`.
+    pub fn inverse(&self) -> Vec<u32> {
+        let mut inv = vec![0u32; self.sigma.len()];
+        for (u, &p) in self.sigma.iter().enumerate() {
+            inv[p as usize] = u as u32;
+        }
+        inv
+    }
+}
+
+/// `J(C, D, σ)` from scratch in `O(n + m)` oracle queries (§3.2: "we can
+/// compute the initial objective in O(n+m) time").
+pub fn objective(comm: &Graph, oracle: &DistanceOracle, mapping: &Mapping) -> u64 {
+    let mut j = 0u64;
+    for u in 0..comm.n() as NodeId {
+        let pu = mapping.sigma[u as usize];
+        for (v, c) in comm.edges(u) {
+            if v > u {
+                j += c * oracle.distance(pu, mapping.sigma[v as usize]);
+            }
+        }
+    }
+    j
+}
+
+/// The fast sparse swap engine (the paper's contribution, §3.2).
+pub struct SwapEngine<'a> {
+    comm: &'a Graph,
+    oracle: &'a DistanceOracle,
+    sigma: Vec<u32>,
+    /// `Γ_σ(u)`: contribution of vertex `u` to the objective (each edge is
+    /// counted in both endpoints' Γ, so `Σ Γ = 2J`).
+    gamma: Vec<u64>,
+    /// Current objective value.
+    j: u64,
+    /// Number of swaps applied (statistics for the harness).
+    pub swaps_applied: u64,
+}
+
+impl<'a> SwapEngine<'a> {
+    /// Build the engine in `O(n + m)`: compute all `Γ` and `J`.
+    pub fn new(comm: &'a Graph, oracle: &'a DistanceOracle, mapping: Mapping) -> SwapEngine<'a> {
+        debug_assert_eq!(comm.n(), mapping.n());
+        let sigma = mapping.sigma;
+        let mut gamma = vec![0u64; comm.n()];
+        let mut j = 0u64;
+        for u in 0..comm.n() as NodeId {
+            let pu = sigma[u as usize];
+            let mut gu = 0u64;
+            for (v, c) in comm.edges(u) {
+                let contrib = c * oracle.distance(pu, sigma[v as usize]);
+                gu += contrib;
+                if v > u {
+                    j += contrib;
+                }
+            }
+            gamma[u as usize] = gu;
+        }
+        SwapEngine { comm, oracle, sigma, gamma, j, swaps_applied: 0 }
+    }
+
+    /// Current objective `J`.
+    #[inline]
+    pub fn objective(&self) -> u64 {
+        self.j
+    }
+
+    /// Current assignment.
+    pub fn mapping(&self) -> Mapping {
+        Mapping { sigma: self.sigma.clone() }
+    }
+
+    /// PE of process `u`.
+    #[inline]
+    pub fn pe_of(&self, u: NodeId) -> u32 {
+        self.sigma[u as usize]
+    }
+
+    /// Γ value of `u` (exposed for invariant tests).
+    #[inline]
+    pub fn gamma_of(&self, u: NodeId) -> u64 {
+        self.gamma[u as usize]
+    }
+
+    /// Gain of swapping the PEs of processes `u` and `v` (positive = the
+    /// objective decreases by that amount). `O(d_u + d_v)` oracle queries.
+    ///
+    /// §Perf: the oracle enum is matched once per *call*, not once per edge
+    /// — the inner loops are monomorphized over the concrete oracle.
+    pub fn swap_gain(&self, u: NodeId, v: NodeId) -> i64 {
+        match self.oracle {
+            DistanceOracle::Implicit(ref h) => self.swap_gain_with(u, v, |p, q| h.distance(p, q)),
+            DistanceOracle::Explicit { n, ref matrix } => {
+                self.swap_gain_with(u, v, |p, q| matrix[p as usize * n + q as usize])
+            }
+        }
+    }
+
+    #[inline]
+    fn swap_gain_with(&self, u: NodeId, v: NodeId, dist: impl Fn(u32, u32) -> u64) -> i64 {
+        debug_assert_ne!(u, v);
+        let pu = self.sigma[u as usize];
+        let pv = self.sigma[v as usize];
+        if pu == pv {
+            return 0;
+        }
+        let mut delta = 0i64; // new - old cost over affected edges
+        for (x, c) in self.comm.edges(u) {
+            if x == v {
+                continue; // the (u,v) edge cost is invariant under the swap
+            }
+            let px = self.sigma[x as usize];
+            delta += c as i64 * (dist(pv, px) as i64 - dist(pu, px) as i64);
+        }
+        for (x, c) in self.comm.edges(v) {
+            if x == u {
+                continue;
+            }
+            let px = self.sigma[x as usize];
+            delta += c as i64 * (dist(pu, px) as i64 - dist(pv, px) as i64);
+        }
+        -delta
+    }
+
+    /// Apply the swap, updating `σ`, all affected `Γ` and `J` in
+    /// `O(d_u + d_v)` (§3.2's update procedure).
+    pub fn do_swap(&mut self, u: NodeId, v: NodeId) {
+        debug_assert_ne!(u, v);
+        let pu = self.sigma[u as usize];
+        let pv = self.sigma[v as usize];
+        // subtract old contributions of u and v from J (each edge (u,x)
+        // appears once in Γ(u); J counts undirected edges once, and the
+        // (u,v) edge sits in both Γs).
+        let cuv = self.comm.edge_weight(u, v); // rarely present; degree-bounded scan
+        let duv_old = cuv.map(|c| c * self.oracle.distance(pu, pv)).unwrap_or(0);
+        self.j -= self.gamma[u as usize] + self.gamma[v as usize] - duv_old;
+
+        // retract edge contributions from the neighbors' Γ
+        for (x, c) in self.comm.edges(u) {
+            if x != v {
+                self.gamma[x as usize] -= c * self.oracle.distance(pu, self.sigma[x as usize]);
+            }
+        }
+        for (x, c) in self.comm.edges(v) {
+            if x != u {
+                self.gamma[x as usize] -= c * self.oracle.distance(pv, self.sigma[x as usize]);
+            }
+        }
+
+        // the swap itself
+        self.sigma[u as usize] = pv;
+        self.sigma[v as usize] = pu;
+
+        // recompute Γ(u), Γ(v); push new edge contributions to neighbors
+        let mut gu = 0u64;
+        for (x, c) in self.comm.edges(u) {
+            let contrib = c * self.oracle.distance(pv, self.sigma[x as usize]);
+            gu += contrib;
+            if x != v {
+                self.gamma[x as usize] += contrib;
+            }
+        }
+        let mut gv = 0u64;
+        for (x, c) in self.comm.edges(v) {
+            let contrib = c * self.oracle.distance(pu, self.sigma[x as usize]);
+            gv += contrib;
+            if x != u {
+                self.gamma[x as usize] += contrib;
+            }
+        }
+        self.gamma[u as usize] = gu;
+        self.gamma[v as usize] = gv;
+
+        // add new contributions to J (the (u,v) edge again counted once)
+        let duv_new = cuv.map(|c| c * self.oracle.distance(pu, pv)).unwrap_or(0);
+        debug_assert_eq!(duv_new, duv_old, "swap must not change the (u,v) edge cost");
+        self.j += gu + gv - duv_new;
+        self.swaps_applied += 1;
+    }
+
+    /// Gain of rotating the PEs of three processes along the cycle
+    /// `u -> v -> w -> u` (u gets v's PE, v gets w's, w gets u's). The
+    /// paper's §5 names cyclic exchanges as future work; this implements
+    /// them with the same Γ machinery in `O(d_u + d_v + d_w)`.
+    pub fn rotate3_gain(&self, u: NodeId, v: NodeId, w: NodeId) -> i64 {
+        debug_assert!(u != v && v != w && u != w);
+        let pu = self.sigma[u as usize];
+        let pv = self.sigma[v as usize];
+        let pw = self.sigma[w as usize];
+        // new PE of each rotated vertex
+        let np = [(u, pv), (v, pw), (w, pu)];
+        let mut delta = 0i64;
+        for &(a, pa_new) in &np {
+            let pa_old = self.sigma[a as usize];
+            for (x, c) in self.comm.edges(a) {
+                if x == u || x == v || x == w {
+                    continue; // intra-triple edges handled separately
+                }
+                let px = self.sigma[x as usize];
+                delta += c as i64
+                    * (self.oracle.distance(pa_new, px) as i64
+                        - self.oracle.distance(pa_old, px) as i64);
+            }
+        }
+        // intra-triple edges: each unordered pair once, old vs new distance
+        for (a, b, pa_new, pb_new) in
+            [(u, v, pv, pw), (u, w, pv, pu), (v, w, pw, pu)]
+        {
+            if let Some(c) = self.comm.edge_weight(a, b) {
+                let old = self.oracle.distance(self.sigma[a as usize], self.sigma[b as usize]);
+                let new = self.oracle.distance(pa_new, pb_new);
+                delta += c as i64 * (new as i64 - old as i64);
+            }
+        }
+        -delta
+    }
+
+    /// Apply the 3-cycle rotation `u -> v -> w -> u` (Γ and J updated in
+    /// `O(d_u + d_v + d_w)` by decomposing into two swaps).
+    pub fn do_rotate3(&mut self, u: NodeId, v: NodeId, w: NodeId) {
+        // (u v w) = swap(u, v) then swap(v, w):
+        //   after swap(u,v): u has pv, v has pu
+        //   after swap(v,w): v has pw, w has pu  => u:pv, v:pw, w:pu ✓
+        self.do_swap(u, v);
+        self.do_swap(v, w);
+        self.swaps_applied -= 1; // count the rotation as one move
+    }
+
+    /// Apply the rotation only if it strictly improves; returns the gain.
+    pub fn try_rotate3(&mut self, u: NodeId, v: NodeId, w: NodeId) -> Option<i64> {
+        let gain = self.rotate3_gain(u, v, w);
+        if gain > 0 {
+            self.do_rotate3(u, v, w);
+            Some(gain)
+        } else {
+            None
+        }
+    }
+
+    /// Apply the swap only if it strictly improves; returns the gain if so.
+    pub fn try_swap(&mut self, u: NodeId, v: NodeId) -> Option<i64> {
+        let gain = self.swap_gain(u, v);
+        if gain > 0 {
+            self.do_swap(u, v);
+            Some(gain)
+        } else {
+            None
+        }
+    }
+
+    /// Recompute everything from scratch (test oracle; O(n+m)).
+    pub fn recompute_objective(&self) -> u64 {
+        objective(self.comm, self.oracle, &Mapping { sigma: self.sigma.clone() })
+    }
+
+    /// Γ-sum invariant: `Σ_u Γ(u) == 2·J` (test oracle).
+    pub fn gamma_invariant_holds(&self) -> bool {
+        let sum: u64 = self.gamma.iter().sum();
+        sum == 2 * self.j
+    }
+}
+
+/// The *slow* dense engine of Brandfass et al.: `C` and `D` stored as full
+/// `n×n` matrices, objective initialization in `O(n²)`, gain and update in
+/// `O(n)`. Only used as the Table 1 baseline; weights are `u32` to keep the
+/// quadratic memory in check at the larger benchmark sizes.
+pub struct DenseEngine {
+    n: usize,
+    c: Vec<u32>,
+    d: Vec<u32>,
+    sigma: Vec<u32>,
+    j: u64,
+    pub swaps_applied: u64,
+}
+
+impl DenseEngine {
+    /// Densify the sparse inputs — this is exactly what the original codes
+    /// did ("both the communication pattern as well as the distances between
+    /// the PEs are given as complete matrices", §3.2).
+    pub fn new(comm: &Graph, oracle: &DistanceOracle, mapping: Mapping) -> DenseEngine {
+        let n = comm.n();
+        let mut c = vec![0u32; n * n];
+        for u in 0..n as NodeId {
+            for (v, w) in comm.edges(u) {
+                c[u as usize * n + v as usize] = w as u32;
+            }
+        }
+        let mut d = vec![0u32; n * n];
+        for p in 0..n as u32 {
+            for q in 0..n as u32 {
+                d[p as usize * n + q as usize] = oracle.distance(p, q) as u32;
+            }
+        }
+        let sigma = mapping.sigma;
+        // O(n²) objective initialization
+        let mut j = 0u64;
+        for u in 0..n {
+            let pu = sigma[u] as usize;
+            for v in (u + 1)..n {
+                let cuv = c[u * n + v];
+                if cuv != 0 {
+                    j += cuv as u64 * d[pu * n + sigma[v] as usize] as u64;
+                }
+            }
+        }
+        DenseEngine { n, c, d, sigma, j, swaps_applied: 0 }
+    }
+
+    /// Current objective.
+    pub fn objective(&self) -> u64 {
+        self.j
+    }
+
+    /// Current assignment.
+    pub fn mapping(&self) -> Mapping {
+        Mapping { sigma: self.sigma.clone() }
+    }
+
+    /// Gain of swapping processes `u`, `v` — scans the full rows: `O(n)`.
+    pub fn swap_gain(&self, u: NodeId, v: NodeId) -> i64 {
+        let (u, v) = (u as usize, v as usize);
+        let pu = self.sigma[u] as usize;
+        let pv = self.sigma[v] as usize;
+        if pu == pv {
+            return 0;
+        }
+        let n = self.n;
+        let mut delta = 0i64;
+        // full-row scan, including the zero entries — exactly what the
+        // original dense implementation does and the point of Table 1
+        // (no != 0 shortcut: the dense code pays for every element).
+        for x in 0..n {
+            if x == u || x == v {
+                continue;
+            }
+            let px = self.sigma[x] as usize;
+            let dd = self.d[pv * n + px] as i64 - self.d[pu * n + px] as i64;
+            delta += self.c[u * n + x] as i64 * dd;
+            delta -= self.c[v * n + x] as i64 * dd;
+        }
+        -delta
+    }
+
+    /// Apply the swap (`O(n)` bookkeeping as in the original).
+    pub fn do_swap(&mut self, u: NodeId, v: NodeId) {
+        let gain = self.swap_gain(u, v);
+        self.sigma.swap(u as usize, v as usize);
+        self.j = (self.j as i64 - gain) as u64;
+        self.swaps_applied += 1;
+    }
+
+    /// Apply only on strict improvement.
+    pub fn try_swap(&mut self, u: NodeId, v: NodeId) -> Option<i64> {
+        let gain = self.swap_gain(u, v);
+        if gain > 0 {
+            self.sigma.swap(u as usize, v as usize);
+            self.j = (self.j as i64 - gain) as u64;
+            self.swaps_applied += 1;
+            Some(gain)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random_geometric_graph;
+    use crate::mapping::hierarchy::Hierarchy;
+    use crate::util::Rng;
+
+    fn setup(n_exp: usize, seed: u64) -> (Graph, DistanceOracle) {
+        let mut rng = Rng::new(seed);
+        let g = random_geometric_graph(1 << n_exp, &mut rng);
+        let h = Hierarchy::new(vec![4, 16, (1 << n_exp) / 64], vec![1, 10, 100]).unwrap();
+        (g, DistanceOracle::implicit(h))
+    }
+
+    #[test]
+    fn identity_objective_matches_manual() {
+        let g = crate::graph::from_edges(4, &[(0, 1, 3), (1, 2, 5), (2, 3, 2)]);
+        let h = Hierarchy::new(vec![2, 2], vec![1, 10]).unwrap();
+        let o = DistanceOracle::implicit(h);
+        let m = Mapping::identity(4);
+        // edges: (0,1): d(0,1)=1 -> 3; (1,2): d(1,2)=10 -> 50; (2,3): d=1 -> 2
+        assert_eq!(objective(&g, &o, &m), 3 + 50 + 2);
+    }
+
+    #[test]
+    fn gain_matches_recompute_random_swaps() {
+        let (g, o) = setup(8, 1);
+        let mut rng = Rng::new(2);
+        let m = Mapping { sigma: rng.permutation(g.n()) };
+        let mut eng = SwapEngine::new(&g, &o, m);
+        for _ in 0..500 {
+            let u = rng.index(g.n()) as NodeId;
+            let mut v = rng.index(g.n()) as NodeId;
+            if u == v {
+                v = (v + 1) % g.n() as NodeId;
+            }
+            let before = eng.objective();
+            let gain = eng.swap_gain(u, v);
+            eng.do_swap(u, v);
+            let after = eng.objective();
+            assert_eq!(after as i64, before as i64 - gain, "swap ({u},{v})");
+            assert_eq!(after, eng.recompute_objective(), "incremental J diverged");
+        }
+        assert!(eng.gamma_invariant_holds());
+    }
+
+    #[test]
+    fn gamma_invariant_after_many_swaps() {
+        let (g, o) = setup(7, 3);
+        let mut rng = Rng::new(4);
+        let mut eng = SwapEngine::new(&g, &o, Mapping::identity(g.n()));
+        for _ in 0..200 {
+            let u = rng.index(g.n()) as NodeId;
+            let v = (u as usize + 1 + rng.index(g.n() - 1)) as u32 % g.n() as u32;
+            if u != v {
+                eng.do_swap(u, v);
+            }
+        }
+        assert!(eng.gamma_invariant_holds());
+        for u in 0..g.n() as NodeId {
+            // each Γ(u) individually correct
+            let pu = eng.pe_of(u);
+            let expect: u64 = g
+                .edges(u)
+                .map(|(x, c)| c * o.distance(pu, eng.pe_of(x)))
+                .sum();
+            assert_eq!(eng.gamma_of(u), expect, "gamma({u})");
+        }
+    }
+
+    #[test]
+    fn dense_engine_agrees_with_sparse() {
+        let (g, o) = setup(6, 5);
+        let mut rng = Rng::new(6);
+        let m = Mapping { sigma: rng.permutation(g.n()) };
+        let mut fast = SwapEngine::new(&g, &o, m.clone());
+        let mut slow = DenseEngine::new(&g, &o, m);
+        assert_eq!(fast.objective(), slow.objective());
+        for _ in 0..200 {
+            let u = rng.index(g.n()) as NodeId;
+            let mut v = rng.index(g.n()) as NodeId;
+            if u == v {
+                v = (v + 1) % g.n() as NodeId;
+            }
+            assert_eq!(fast.swap_gain(u, v), slow.swap_gain(u, v), "gain ({u},{v})");
+            fast.do_swap(u, v);
+            slow.do_swap(u, v);
+            assert_eq!(fast.objective(), slow.objective());
+        }
+    }
+
+    #[test]
+    fn swap_same_pe_is_noop_gain() {
+        let (g, o) = setup(6, 7);
+        let eng = SwapEngine::new(&g, &o, Mapping::identity(g.n()));
+        // gain of swapping u with itself is undefined; same-PE can't occur in
+        // a bijection, but adjacent identical PEs can't either — check the
+        // (u,v) edge invariance instead: swapping two connected processes
+        // leaves their mutual term unchanged.
+        let u = 0 as NodeId;
+        let v = g.neighbors(0)[0];
+        let mut e2 = SwapEngine::new(&g, &o, Mapping::identity(g.n()));
+        let before_edge_cost = g.edge_weight(u, v).unwrap() * o.distance(e2.pe_of(u), e2.pe_of(v));
+        e2.do_swap(u, v);
+        let after_edge_cost = g.edge_weight(u, v).unwrap() * o.distance(e2.pe_of(u), e2.pe_of(v));
+        assert_eq!(before_edge_cost, after_edge_cost);
+        drop(eng);
+    }
+
+    #[test]
+    fn try_swap_only_improves() {
+        let (g, o) = setup(7, 8);
+        let mut rng = Rng::new(9);
+        let mut eng = SwapEngine::new(&g, &o, Mapping { sigma: rng.permutation(g.n()) });
+        let mut last = eng.objective();
+        let mut applied = 0;
+        for _ in 0..2000 {
+            let u = rng.index(g.n()) as NodeId;
+            let mut v = rng.index(g.n()) as NodeId;
+            if u == v {
+                v = (v + 1) % g.n() as NodeId;
+            }
+            if eng.try_swap(u, v).is_some() {
+                assert!(eng.objective() < last);
+                applied += 1;
+            } else {
+                assert_eq!(eng.objective(), last);
+            }
+            last = eng.objective();
+        }
+        assert!(applied > 0, "random swaps on a random mapping should find improvements");
+        assert_eq!(applied, eng.swaps_applied);
+    }
+
+    #[test]
+    fn mapping_validate() {
+        assert!(Mapping::identity(5).validate().is_ok());
+        assert!(Mapping { sigma: vec![0, 0, 2] }.validate().is_err());
+        assert!(Mapping { sigma: vec![0, 3] }.validate().is_err());
+        let m = Mapping { sigma: vec![2, 0, 1] };
+        assert_eq!(m.inverse(), vec![1, 2, 0]);
+    }
+}

@@ -1,0 +1,85 @@
+//! Communication-model construction (the paper's §4.1 instance pipeline).
+//!
+//! "Take the input graph, partition it into n blocks using the fast
+//! configuration of KaHIP, compute the communication graph induced by that
+//! (vertices represent blocks, edges are induced by connectivity between
+//! blocks, edge cut between two blocks is used as communication volume)."
+
+use crate::graph::{Builder, Graph, NodeId};
+use crate::partition::{partition_kway, Partition, PartitionConfig};
+use crate::util::Rng;
+
+/// Build the communication graph of a partition: one vertex per block, edge
+/// weight = total cut weight between the two blocks.
+pub fn comm_graph(app: &Graph, partition: &Partition) -> Graph {
+    let mut b = Builder::new(partition.k);
+    for v in 0..app.n() as NodeId {
+        let bv = partition.block[v as usize];
+        for (u, w) in app.edges(v) {
+            let bu = partition.block[u as usize];
+            if v < u && bv != bu {
+                b.add_edge(bv, bu, w);
+            }
+        }
+    }
+    b.build()
+}
+
+/// The full §4.1 pipeline: partition `app` into `n_blocks` with the fast
+/// configuration, return the induced communication graph (the mapping
+/// problem instance).
+pub fn build_instance(app: &Graph, n_blocks: usize, rng: &mut Rng) -> Graph {
+    let p = partition_kway(app, n_blocks, &PartitionConfig::fast(), rng);
+    comm_graph(app, &p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{grid2d, random_geometric_graph};
+    use crate::graph::is_connected;
+
+    #[test]
+    fn comm_graph_of_grid_halves() {
+        // 4x4 grid split into left/right 2 columns each: cut = 4
+        let g = grid2d(4, 4);
+        let block: Vec<u32> = (0..16).map(|v| if v % 4 < 2 { 0 } else { 1 }).collect();
+        let p = Partition { block, k: 2 };
+        let c = comm_graph(&g, &p);
+        assert_eq!(c.n(), 2);
+        assert_eq!(c.m(), 1);
+        assert_eq!(c.edge_weight(0, 1), Some(4));
+    }
+
+    #[test]
+    fn comm_graph_total_weight_equals_total_cut() {
+        let mut rng = Rng::new(1);
+        let g = random_geometric_graph(512, &mut rng);
+        let p = partition_kway(&g, 16, &PartitionConfig::fast(), &mut rng);
+        let c = comm_graph(&g, &p);
+        assert_eq!(c.n(), 16);
+        assert_eq!(c.total_edge_weight(), p.cut(&g));
+    }
+
+    #[test]
+    fn instance_pipeline_produces_sparse_connected_model() {
+        let mut rng = Rng::new(2);
+        let g = random_geometric_graph(1 << 12, &mut rng);
+        let c = build_instance(&g, 128, &mut rng);
+        assert_eq!(c.n(), 128);
+        assert!(is_connected(&c), "comm graphs of contiguous partitions connect");
+        // sparse: Table 1 reports m/n between ~6 and ~13
+        let density = c.density();
+        assert!(density < 40.0, "density {density}");
+    }
+
+    #[test]
+    fn isolated_blocks_allowed() {
+        // partition an edgeless graph: comm graph has no edges
+        let g = crate::graph::from_edges(8, &[]);
+        let p = Partition { block: (0..8u32).map(|v| v / 2).collect(), k: 4 };
+        let c = comm_graph(&g, &p);
+        assert_eq!(c.n(), 4);
+        assert_eq!(c.m(), 0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Coarsening: heavy-edge matching (HEM) + contraction.
+//!
+//! Vertices are visited in random order; each unmatched vertex matches its
+//! unmatched neighbor with the heaviest connecting edge (ties: lower degree
+//! preferred, mirroring the "sorted HEM" heuristic of multilevel
+//! partitioners). Matched pairs are contracted via [`crate::graph::contract`]
+//! which sums parallel edges — the invariant the paper's Bottom-Up
+//! construction relies on (§3.1).
+
+use crate::graph::{contract, Graph, NodeId};
+use crate::util::Rng;
+
+/// One coarsening level: the coarse graph and the cluster map
+/// (`fine vertex -> coarse vertex`).
+#[derive(Debug, Clone)]
+pub struct Level {
+    pub coarse: Graph,
+    pub map: Vec<u32>,
+}
+
+/// Compute a heavy-edge matching and contract it. Returns `None` if the
+/// matching would shrink the graph by less than 10% (coarsening stalled,
+/// e.g. on star graphs), signalling the caller to stop.
+pub fn coarsen_once(g: &Graph, rng: &mut Rng) -> Option<Level> {
+    let n = g.n();
+    let mut mate: Vec<u32> = vec![u32::MAX; n];
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    for &v in &order {
+        if mate[v as usize] != u32::MAX {
+            continue;
+        }
+        let mut best: Option<(NodeId, u64, usize)> = None;
+        for (u, w) in g.edges(v) {
+            if mate[u as usize] != u32::MAX {
+                continue;
+            }
+            let du = g.degree(u);
+            let better = match best {
+                None => true,
+                Some((_, bw, bd)) => w > bw || (w == bw && du < bd),
+            };
+            if better {
+                best = Some((u, w, du));
+            }
+        }
+        if let Some((u, _, _)) = best {
+            mate[v as usize] = u;
+            mate[u as usize] = v;
+        } else {
+            mate[v as usize] = v; // matched with itself
+        }
+    }
+    // Assign cluster ids: one per matched pair / singleton.
+    let mut map = vec![u32::MAX; n];
+    let mut next = 0u32;
+    for v in 0..n {
+        if map[v] != u32::MAX {
+            continue;
+        }
+        map[v] = next;
+        let m = mate[v] as usize;
+        if m != v && m != u32::MAX as usize {
+            map[m] = next;
+        }
+        next += 1;
+    }
+    let coarse_n = next as usize;
+    if coarse_n as f64 > 0.9 * n as f64 {
+        return None;
+    }
+    let coarse = contract(g, &map, coarse_n);
+    Some(Level { coarse, map })
+}
+
+/// Coarsen until at most `limit` vertices remain or the matching stalls.
+/// Returns the levels from finest to coarsest (empty if `g` is small).
+pub fn coarsen_to(g: &Graph, limit: usize, rng: &mut Rng) -> Vec<Level> {
+    let mut levels = Vec::new();
+    let mut current = g.clone();
+    while current.n() > limit {
+        match coarsen_once(&current, rng) {
+            Some(level) => {
+                current = level.coarse.clone();
+                levels.push(level);
+            }
+            None => break,
+        }
+    }
+    levels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::grid2d;
+    use crate::graph::from_edges;
+
+    #[test]
+    fn coarsen_halves_grid() {
+        let g = grid2d(8, 8);
+        let mut rng = Rng::new(1);
+        let level = coarsen_once(&g, &mut rng).unwrap();
+        assert!(level.coarse.n() <= 40, "coarse n = {}", level.coarse.n());
+        assert!(level.coarse.n() >= 32); // perfect matching halves exactly
+        // total node weight preserved
+        assert_eq!(level.coarse.total_node_weight(), 64);
+        assert_eq!(level.coarse.validate(), Ok(()));
+    }
+
+    #[test]
+    fn map_is_consistent() {
+        let g = grid2d(6, 6);
+        let mut rng = Rng::new(2);
+        let level = coarsen_once(&g, &mut rng).unwrap();
+        for &c in &level.map {
+            assert!((c as usize) < level.coarse.n());
+        }
+        // every coarse vertex has 1 or 2 fine vertices
+        let mut counts = vec![0usize; level.coarse.n()];
+        for &c in &level.map {
+            counts[c as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 1 || c == 2));
+    }
+
+    #[test]
+    fn coarsen_to_limit() {
+        let g = grid2d(16, 16);
+        let mut rng = Rng::new(3);
+        let levels = coarsen_to(&g, 32, &mut rng);
+        assert!(!levels.is_empty());
+        assert!(levels.last().unwrap().coarse.n() <= 64); // ~halving steps
+        // weights preserved through the whole hierarchy
+        assert_eq!(levels.last().unwrap().coarse.total_node_weight(), 256);
+    }
+
+    #[test]
+    fn star_graph_stalls_gracefully() {
+        // star: center matches one leaf, others stay singletons -> poor ratio
+        let edges: Vec<(u32, u32, u64)> = (1..16u32).map(|i| (0, i, 1)).collect();
+        let g = from_edges(16, &edges);
+        let mut rng = Rng::new(4);
+        let levels = coarsen_to(&g, 2, &mut rng);
+        // must terminate (possibly early) without panicking
+        for l in &levels {
+            assert_eq!(l.coarse.validate(), Ok(()));
+        }
+    }
+
+    #[test]
+    fn edgeless_graph_stops() {
+        let g = from_edges(10, &[]);
+        let mut rng = Rng::new(5);
+        assert!(coarsen_once(&g, &mut rng).is_none());
+    }
+}

@@ -1,0 +1,232 @@
+//! Fiduccia–Mattheyses-style refinement for bisections, with a strict
+//! balancing stage that restores *exact* block weights (the perfectly
+//! balanced regime the paper's constructions require, ε = 0).
+//!
+//! A pass repeatedly moves the highest-gain unlocked boundary vertex from
+//! the side that is at-or-over its target (so the weight deviation never
+//! exceeds one vertex), records the cumulative gain, and finally rolls back
+//! to the best prefix that ends in a *balanced* state. Classic hill-climbing
+//! with bounded negative excursions; gains are kept incrementally.
+
+use crate::graph::{Graph, NodeId, Weight};
+use crate::util::Rng;
+use std::collections::BinaryHeap;
+
+/// gain(v) = (weight to other block) - (weight to own block)
+fn gain_of(g: &Graph, block: &[u32], v: NodeId) -> i64 {
+    let bv = block[v as usize];
+    let mut gain = 0i64;
+    for (u, w) in g.edges(v) {
+        if block[u as usize] == bv {
+            gain -= w as i64;
+        } else {
+            gain += w as i64;
+        }
+    }
+    gain
+}
+
+/// One FM pass. `t0` is the exact target weight of block 0. Returns the
+/// achieved cut improvement (0 if no improving balanced prefix was found).
+pub fn fm_pass(g: &Graph, block: &mut [u32], t0: Weight, rng: &mut Rng) -> i64 {
+    let n = g.n();
+    if n == 0 {
+        return 0;
+    }
+    let mut gain: Vec<i64> = (0..n as NodeId).map(|v| gain_of(g, block, v)).collect();
+    let mut locked = vec![false; n];
+    // heaps per side with lazy invalidation: (gain, tiebreak, v)
+    let mut heaps: [BinaryHeap<(i64, u32, u32)>; 2] = [BinaryHeap::new(), BinaryHeap::new()];
+    let mut w0: Weight = (0..n)
+        .filter(|&v| block[v] == 0)
+        .map(|v| g.node_weight(v as NodeId))
+        .sum();
+    for v in 0..n as NodeId {
+        // seed with boundary vertices only (interior ones enter when touched)
+        if g.edges(v).any(|(u, _)| block[u as usize] != block[v as usize]) {
+            heaps[block[v as usize] as usize].push((gain[v as usize], rng.next_u64() as u32, v));
+        }
+    }
+
+    // move log for rollback
+    let mut moves: Vec<NodeId> = Vec::new();
+    let mut cumulative = 0i64;
+    let mut best_gain = 0i64;
+    let mut best_len = 0usize;
+    let max_moves = n.min(4096); // bounded excursion per pass
+    let mut stall = 0usize;
+
+    while moves.len() < max_moves && stall < 64 {
+        // move from the side at/over target; if balanced, try richer side
+        let from = if w0 >= t0 { 0usize } else { 1usize };
+        let v = loop {
+            match heaps[from].pop() {
+                None => break None,
+                Some((gv, _, v)) => {
+                    let vu = v as usize;
+                    if !locked[vu] && block[vu] == from as u32 && gain[vu] == gv {
+                        break Some(v);
+                    }
+                }
+            }
+        };
+        let Some(v) = v else { break };
+        let vu = v as usize;
+        // apply move
+        block[vu] = 1 - from as u32;
+        locked[vu] = true;
+        cumulative += gain[vu];
+        if from == 0 {
+            w0 -= g.node_weight(v);
+        } else {
+            w0 += g.node_weight(v);
+        }
+        moves.push(v);
+        // update neighbor gains
+        for (u, w) in g.edges(v) {
+            let uu = u as usize;
+            if block[uu] == block[vu] {
+                gain[uu] -= 2 * w as i64;
+            } else {
+                gain[uu] += 2 * w as i64;
+            }
+            if !locked[uu] {
+                heaps[block[uu] as usize].push((gain[uu], rng.next_u64() as u32, u));
+            }
+        }
+        gain[vu] = -gain[vu];
+        // record best prefix that is exactly balanced
+        if w0 == t0 {
+            if cumulative > best_gain {
+                best_gain = cumulative;
+                best_len = moves.len();
+                stall = 0;
+            } else {
+                stall += 1;
+            }
+        }
+    }
+    // roll back to best prefix
+    for &v in moves[best_len..].iter() {
+        block[v as usize] = 1 - block[v as usize];
+    }
+    best_gain
+}
+
+/// Force block 0 to weigh exactly `t0` by moving least-damaging vertices
+/// across. Needed after projecting a coarse partition (coarse vertices are
+/// heavy, exact balance may be unreachable there) and as a final safety net.
+pub fn rebalance_exact(g: &Graph, block: &mut [u32], t0: Weight) {
+    let n = g.n();
+    let mut w0: Weight = (0..n)
+        .filter(|&v| block[v] == 0)
+        .map(|v| g.node_weight(v as NodeId))
+        .sum();
+    let mut guard = 0usize;
+    while w0 != t0 && guard <= 2 * n {
+        guard += 1;
+        let from = if w0 > t0 { 0u32 } else { 1u32 };
+        let need = if w0 > t0 { w0 - t0 } else { t0 - w0 };
+        // pick the movable vertex with max gain whose weight <= need,
+        // preferring exact fits (unit weights always fit)
+        let mut best: Option<(i64, NodeId)> = None;
+        for v in 0..n as NodeId {
+            if block[v as usize] != from || g.node_weight(v) > need || g.node_weight(v) == 0 {
+                continue;
+            }
+            let gv = gain_of(g, block, v);
+            if best.map(|(bg, _)| gv > bg).unwrap_or(true) {
+                best = Some((gv, v));
+            }
+        }
+        let Some((_, v)) = best else { break };
+        block[v as usize] = 1 - from;
+        if from == 0 {
+            w0 -= g.node_weight(v);
+        } else {
+            w0 += g.node_weight(v);
+        }
+    }
+}
+
+/// Refine a bisection: alternate FM passes and exact rebalancing.
+pub fn refine_bisection(
+    g: &Graph,
+    block: &mut [u32],
+    t0: Weight,
+    passes: usize,
+    rng: &mut Rng,
+) {
+    rebalance_exact(g, block, t0);
+    for _ in 0..passes {
+        if fm_pass(g, block, t0, rng) <= 0 {
+            break;
+        }
+    }
+    rebalance_exact(g, block, t0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::grid2d;
+    use crate::partition::initial::cut_of;
+
+    fn w0(g: &Graph, block: &[u32]) -> Weight {
+        (0..g.n()).filter(|&v| block[v] == 0).map(|v| g.node_weight(v as NodeId)).sum()
+    }
+
+    #[test]
+    fn fm_improves_bad_bisection() {
+        // stripes: even/odd columns - a terrible cut on a grid
+        let g = grid2d(8, 8);
+        let mut block: Vec<u32> = (0..64).map(|v| ((v % 8) % 2) as u32).collect();
+        let before = cut_of(&g, &block);
+        let mut rng = Rng::new(1);
+        refine_bisection(&g, &mut block, 32, 8, &mut rng);
+        let after = cut_of(&g, &block);
+        assert_eq!(w0(&g, &block), 32);
+        assert!(after < before, "FM failed to improve: {before} -> {after}");
+    }
+
+    #[test]
+    fn fm_preserves_exact_balance() {
+        let g = grid2d(10, 10);
+        let mut rng = Rng::new(2);
+        let mut block: Vec<u32> = (0..100).map(|_| rng.index(2) as u32).collect();
+        refine_bisection(&g, &mut block, 50, 5, &mut rng);
+        assert_eq!(w0(&g, &block), 50);
+    }
+
+    #[test]
+    fn rebalance_reaches_target() {
+        let g = grid2d(6, 6);
+        let mut block = vec![0u32; 36]; // all in block 0
+        rebalance_exact(&g, &mut block, 12);
+        assert_eq!(w0(&g, &block), 12);
+    }
+
+    #[test]
+    fn rebalance_noop_when_balanced() {
+        let g = grid2d(4, 4);
+        let block_orig: Vec<u32> = (0..16).map(|v| (v / 8) as u32).collect();
+        let mut block = block_orig.clone();
+        rebalance_exact(&g, &mut block, 8);
+        assert_eq!(block, block_orig);
+    }
+
+    #[test]
+    fn fm_never_worsens_cut() {
+        let g = grid2d(12, 12);
+        for seed in 0..5u64 {
+            let mut rng = Rng::new(seed);
+            let mut block: Vec<u32> = (0..144).map(|_| rng.index(2) as u32).collect();
+            rebalance_exact(&g, &mut block, 72);
+            let before = cut_of(&g, &block);
+            fm_pass(&g, &mut block, 72, &mut rng);
+            let after = cut_of(&g, &block);
+            assert!(after <= before, "seed {seed}: {before} -> {after}");
+            assert_eq!(w0(&g, &block), 72);
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Initial bisection by greedy graph growing.
+//!
+//! Grow block 0 from a random seed vertex, always absorbing the frontier
+//! vertex with the largest connection to the grown region (breaking ties
+//! towards smaller external degree), until the target weight is reached.
+//! Several attempts are made; the best cut that satisfies the target wins.
+
+use crate::graph::{Graph, NodeId, Weight};
+use crate::util::Rng;
+
+/// Grow a bisection where block 0 has total vertex weight as close to `t0`
+/// as achievable by whole-vertex moves (exactly `t0` for unit weights).
+/// Returns the block array (0/1 per vertex).
+pub fn grow_bisection(g: &Graph, t0: Weight, rng: &mut Rng) -> Vec<u32> {
+    let n = g.n();
+    let mut block = vec![1u32; n];
+    if n == 0 || t0 == 0 {
+        return block;
+    }
+    // gain[v] = weight of edges into block 0 (for frontier ordering)
+    let mut conn = vec![0 as Weight; n];
+    let mut in0 = vec![false; n];
+    let mut frontier: std::collections::BinaryHeap<(Weight, u32)> = std::collections::BinaryHeap::new();
+    let mut grown: Weight = 0;
+
+    let mut seed = rng.index(n) as NodeId;
+    loop {
+        // absorb `seed` (restart point for disconnected graphs)
+        if !in0[seed as usize] {
+            in0[seed as usize] = true;
+            block[seed as usize] = 0;
+            grown += g.node_weight(seed);
+            for (u, w) in g.edges(seed) {
+                if !in0[u as usize] {
+                    conn[u as usize] += w;
+                    frontier.push((conn[u as usize], u));
+                }
+            }
+        }
+        while grown < t0 {
+            // pop best valid frontier vertex (lazy invalidation)
+            let v = loop {
+                match frontier.pop() {
+                    None => break None,
+                    Some((c, v)) => {
+                        if !in0[v as usize] && conn[v as usize] == c {
+                            break Some(v);
+                        }
+                    }
+                }
+            };
+            let Some(v) = v else { break };
+            // don't overshoot the target if avoidable (unit weights never do)
+            if grown + g.node_weight(v) > t0 && g.node_weight(v) > 1 {
+                continue;
+            }
+            in0[v as usize] = true;
+            block[v as usize] = 0;
+            grown += g.node_weight(v);
+            for (u, w) in g.edges(v) {
+                if !in0[u as usize] {
+                    conn[u as usize] += w;
+                    frontier.push((conn[u as usize], u));
+                }
+            }
+        }
+        if grown >= t0 {
+            break;
+        }
+        // frontier exhausted (disconnected component filled): restart from a
+        // random unassigned vertex.
+        match (0..n).cycle().skip(rng.index(n)).take(n).find(|&v| !in0[v]) {
+            Some(v) => seed = v as NodeId,
+            None => break,
+        }
+    }
+    block
+}
+
+/// Best of `attempts` grown bisections by cut weight.
+pub fn best_grown_bisection(g: &Graph, t0: Weight, attempts: usize, rng: &mut Rng) -> Vec<u32> {
+    let mut best: Option<(Weight, Vec<u32>)> = None;
+    for _ in 0..attempts.max(1) {
+        let block = grow_bisection(g, t0, rng);
+        let cut = cut_of(g, &block);
+        if best.as_ref().map(|(bc, _)| cut < *bc).unwrap_or(true) {
+            best = Some((cut, block));
+        }
+    }
+    best.unwrap().1
+}
+
+/// Cut weight of a two-block assignment.
+pub fn cut_of(g: &Graph, block: &[u32]) -> Weight {
+    let mut cut = 0;
+    for v in 0..g.n() as NodeId {
+        for (u, w) in g.edges(v) {
+            if u > v && block[u as usize] != block[v as usize] {
+                cut += w;
+            }
+        }
+    }
+    cut
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::grid2d;
+    use crate::graph::from_edges;
+
+    fn weight0(g: &Graph, block: &[u32]) -> Weight {
+        (0..g.n()).filter(|&v| block[v] == 0).map(|v| g.node_weight(v as NodeId)).sum()
+    }
+
+    #[test]
+    fn exact_target_unit_weights() {
+        let g = grid2d(8, 8);
+        let mut rng = Rng::new(1);
+        for t0 in [1u64, 13, 32, 63] {
+            let b = grow_bisection(&g, t0, &mut rng);
+            assert_eq!(weight0(&g, &b), t0);
+        }
+    }
+
+    #[test]
+    fn grown_region_is_compact_on_grid() {
+        // growing half a grid should cut far less than a random half would
+        let g = grid2d(16, 16);
+        let mut rng = Rng::new(2);
+        let b = best_grown_bisection(&g, 128, 4, &mut rng);
+        assert!(cut_of(&g, &b) < 80, "cut = {}", cut_of(&g, &b));
+    }
+
+    #[test]
+    fn disconnected_graph_restarts() {
+        // two 4-cliques, no inter-edges; request 5 vertices in block 0
+        let mut edges = Vec::new();
+        for base in [0u32, 4] {
+            for i in 0..4 {
+                for j in (i + 1)..4 {
+                    edges.push((base + i, base + j, 1u64));
+                }
+            }
+        }
+        let g = from_edges(8, &edges);
+        let mut rng = Rng::new(3);
+        let b = grow_bisection(&g, 5, &mut rng);
+        assert_eq!(weight0(&g, &b), 5);
+    }
+
+    #[test]
+    fn zero_target() {
+        let g = grid2d(3, 3);
+        let mut rng = Rng::new(4);
+        let b = grow_bisection(&g, 0, &mut rng);
+        assert_eq!(weight0(&g, &b), 0);
+        assert!(b.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn full_target() {
+        let g = grid2d(3, 3);
+        let mut rng = Rng::new(5);
+        let b = grow_bisection(&g, 9, &mut rng);
+        assert_eq!(weight0(&g, &b), 9);
+        assert_eq!(cut_of(&g, &b), 0);
+    }
+}

@@ -1,0 +1,162 @@
+//! k-way partitioning via multilevel recursive bisection.
+//!
+//! Each bisection problem is solved multilevel: coarsen with HEM, grow an
+//! initial bisection on the coarsest graph, then project back up refining
+//! with FM and restoring exact balance at every level. k-way partitions are
+//! assembled by recursing on the induced block subgraphs with per-block
+//! exact size prescriptions (`⌈n/k⌉`/`⌊n/k⌋`).
+
+use super::coarsen::coarsen_to;
+use super::fm::{rebalance_exact, refine_bisection};
+use super::initial::best_grown_bisection;
+use super::{Partition, PartitionConfig};
+use crate::graph::{induced_subgraph, Builder, Graph, NodeId, Weight};
+use crate::util::Rng;
+
+/// Multilevel bisection: block 0 gets total vertex weight exactly `t0`
+/// (always achievable for unit weights).
+pub fn bisect_multilevel(g: &Graph, t0: Weight, cfg: &PartitionConfig, rng: &mut Rng) -> Vec<u32> {
+    if g.n() <= cfg.coarse_limit {
+        let mut block = best_grown_bisection(g, t0, cfg.initial_attempts, rng);
+        refine_bisection(g, &mut block, t0, cfg.fm_passes, rng);
+        return block;
+    }
+    let levels = coarsen_to(g, cfg.coarse_limit, rng);
+    // initial solution on the coarsest graph
+    let coarsest = levels.last().map(|l| &l.coarse).unwrap_or(g);
+    let mut block = best_grown_bisection(coarsest, t0, cfg.initial_attempts, rng);
+    refine_bisection(coarsest, &mut block, t0, cfg.fm_passes, rng);
+    // uncoarsen: project through each level, refine
+    for i in (0..levels.len()).rev() {
+        let fine: &Graph = if i == 0 { g } else { &levels[i - 1].coarse };
+        let map = &levels[i].map;
+        let mut fine_block = vec![0u32; fine.n()];
+        for v in 0..fine.n() {
+            fine_block[v] = block[map[v] as usize];
+        }
+        block = fine_block;
+        refine_bisection(fine, &mut block, t0, cfg.fm_passes, rng);
+    }
+    block
+}
+
+/// Per-block exact sizes for splitting `total` into `k` blocks:
+/// `total/k + 1` for the first `total % k` blocks, `total/k` for the rest.
+pub fn exact_block_sizes(total: usize, k: usize) -> Vec<Weight> {
+    let base = (total / k) as Weight;
+    let extra = total % k;
+    (0..k).map(|i| base + if i < extra { 1 } else { 0 }).collect()
+}
+
+/// Recursive bisection into `k` blocks with exact sizes.
+pub fn recursive_bisection(g: &Graph, k: usize, cfg: &PartitionConfig, rng: &mut Rng) -> Partition {
+    assert!(k >= 1, "k must be positive");
+    // Balance by count: strip node weights once at the top if requested.
+    let owned;
+    let g = if cfg.by_count && g.node_weights().iter().any(|&w| w != 1) {
+        let mut b = Builder::new(g.n());
+        for v in 0..g.n() as NodeId {
+            for (u, w) in g.edges(v) {
+                if v < u {
+                    b.add_edge(v, u, w);
+                }
+            }
+        }
+        owned = b.build();
+        &owned
+    } else {
+        g
+    };
+    let sizes = exact_block_sizes(g.n(), k);
+    let mut block = vec![0u32; g.n()];
+    let nodes: Vec<NodeId> = (0..g.n() as NodeId).collect();
+    split_recursive(g, &nodes, &sizes, 0, &mut block, cfg, rng);
+    Partition { block, k }
+}
+
+/// Recursively split the subgraph induced by `nodes` into blocks
+/// `first_block..first_block + sizes.len()` with the given exact sizes.
+fn split_recursive(
+    orig: &Graph,
+    nodes: &[NodeId],
+    sizes: &[Weight],
+    first_block: u32,
+    block: &mut [u32],
+    cfg: &PartitionConfig,
+    rng: &mut Rng,
+) {
+    let k = sizes.len();
+    if k == 1 {
+        for &v in nodes {
+            block[v as usize] = first_block;
+        }
+        return;
+    }
+    let (sub, map) = induced_subgraph(orig, nodes);
+    let k0 = k.div_ceil(2);
+    let t0: Weight = sizes[..k0].iter().sum();
+    let mut bis = bisect_multilevel(&sub, t0, cfg, rng);
+    // ensure exactness even on pathological instances
+    rebalance_exact(&sub, &mut bis, t0);
+    let left: Vec<NodeId> = (0..sub.n()).filter(|&v| bis[v] == 0).map(|v| map[v]).collect();
+    let right: Vec<NodeId> = (0..sub.n()).filter(|&v| bis[v] == 1).map(|v| map[v]).collect();
+    debug_assert_eq!(left.len() as Weight, t0);
+    split_recursive(orig, &left, &sizes[..k0], first_block, block, cfg, rng);
+    split_recursive(orig, &right, &sizes[k0..], first_block + k0 as u32, block, cfg, rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{grid2d, random_geometric_graph};
+
+    #[test]
+    fn exact_sizes_helper() {
+        assert_eq!(exact_block_sizes(10, 3), vec![4, 3, 3]);
+        assert_eq!(exact_block_sizes(9, 3), vec![3, 3, 3]);
+        assert_eq!(exact_block_sizes(2, 4), vec![1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn bisect_exact_on_rgg() {
+        let mut rng = Rng::new(1);
+        let g = random_geometric_graph(500, &mut rng);
+        let b = bisect_multilevel(&g, 250, &PartitionConfig::default(), &mut rng);
+        let w0 = b.iter().filter(|&&x| x == 0).count();
+        assert_eq!(w0, 250);
+    }
+
+    #[test]
+    fn kway_seven_blocks() {
+        let g = grid2d(10, 7); // 70 vertices, k=7 -> 10 each
+        let mut rng = Rng::new(2);
+        let p = recursive_bisection(&g, 7, &PartitionConfig::default(), &mut rng);
+        let w = p.block_weights(&g, true);
+        assert!(w.iter().all(|&x| x == 10), "{w:?}");
+    }
+
+    #[test]
+    fn by_count_ignores_node_weights() {
+        let mut b = Builder::new(8);
+        for v in 0..8u32 {
+            b.set_node_weight(v, (v as u64 + 1) * 10);
+            if v > 0 {
+                b.add_edge(v - 1, v, 1);
+            }
+        }
+        let g = b.build();
+        let mut rng = Rng::new(3);
+        let cfg = PartitionConfig { by_count: true, ..Default::default() };
+        let p = recursive_bisection(&g, 2, &cfg, &mut rng);
+        let counts = p.block_weights(&g, true);
+        assert_eq!(counts, vec![4, 4]);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let g = grid2d(12, 12);
+        let p1 = recursive_bisection(&g, 4, &PartitionConfig::default(), &mut Rng::new(9));
+        let p2 = recursive_bisection(&g, 4, &PartitionConfig::default(), &mut Rng::new(9));
+        assert_eq!(p1.block, p2.block);
+    }
+}

@@ -1,0 +1,79 @@
+//! Densification helpers: sparse CSR graph / distance oracle → padded dense
+//! f32 matrices in the layout the AOT artifacts expect.
+//!
+//! Padding semantics: padding processes (indices `comm.n()..size`) have no
+//! communication (zero C rows/columns) and padding PEs have arbitrary
+//! distances — their products are always zero, so the dense objective equals
+//! the sparse integer objective exactly (up to f32 rounding of the real
+//! entries).
+
+use crate::graph::{Graph, NodeId};
+use crate::mapping::DistanceOracle;
+
+/// Dense symmetric communication matrix, zero diagonal, padded to
+/// `size >= comm.n()`. Row-major `size * size`.
+pub fn densify_comm(comm: &Graph, size: usize) -> Vec<f32> {
+    assert!(size >= comm.n());
+    let mut c = vec![0f32; size * size];
+    for u in 0..comm.n() as NodeId {
+        for (v, w) in comm.edges(u) {
+            c[u as usize * size + v as usize] = w as f32;
+        }
+    }
+    c
+}
+
+/// Dense symmetric distance matrix padded to `size >= oracle.n_pes()`.
+/// Padding PEs sit at distance 0 from everything.
+pub fn densify_distance(oracle: &DistanceOracle, size: usize) -> Vec<f32> {
+    let n = oracle.n_pes();
+    assert!(size >= n);
+    let mut d = vec![0f32; size * size];
+    for p in 0..n as u32 {
+        for q in 0..n as u32 {
+            d[p as usize * size + q as usize] = oracle.distance(p, q) as f32;
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::from_edges;
+    use crate::mapping::Hierarchy;
+
+    #[test]
+    fn comm_dense_symmetric_padded() {
+        let g = from_edges(3, &[(0, 1, 5), (1, 2, 7)]);
+        let c = densify_comm(&g, 4);
+        assert_eq!(c.len(), 16);
+        assert_eq!(c[0 * 4 + 1], 5.0);
+        assert_eq!(c[1 * 4 + 0], 5.0);
+        assert_eq!(c[1 * 4 + 2], 7.0);
+        assert_eq!(c[0 * 4 + 2], 0.0);
+        // padding row/col all zero
+        for i in 0..4 {
+            assert_eq!(c[3 * 4 + i], 0.0);
+            assert_eq!(c[i * 4 + 3], 0.0);
+        }
+        // zero diagonal
+        for i in 0..4 {
+            assert_eq!(c[i * 4 + i], 0.0);
+        }
+    }
+
+    #[test]
+    fn distance_dense_matches_oracle() {
+        let h = Hierarchy::new(vec![2, 2], vec![1, 10]).unwrap();
+        let o = DistanceOracle::implicit(h);
+        let d = densify_distance(&o, 6);
+        assert_eq!(d[0 * 6 + 1], 1.0);
+        assert_eq!(d[0 * 6 + 2], 10.0);
+        assert_eq!(d[2 * 6 + 3], 1.0);
+        assert_eq!(d[0 * 6 + 0], 0.0);
+        // padding PEs at distance zero
+        assert_eq!(d[4 * 6 + 0], 0.0);
+        assert_eq!(d[5 * 6 + 4], 0.0);
+    }
+}

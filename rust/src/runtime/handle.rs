@@ -1,0 +1,146 @@
+//! Thread-safe handle to the PJRT runtime.
+//!
+//! The `xla` crate's client/executable types are `!Send` (internal `Rc` +
+//! raw PJRT pointers), so the runtime lives on a dedicated owner thread and
+//! the rest of the system talks to it through an mpsc request channel. This
+//! doubles as the coordinator's *batcher*: requests from all workers
+//! serialize through one queue in front of the single CPU PJRT device,
+//! which is the right shape on this host anyway.
+
+use super::QapRuntime;
+use crate::graph::Graph;
+use crate::mapping::{DistanceOracle, Mapping};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+
+enum Request {
+    Objective {
+        comm: Graph,
+        oracle: DistanceOracle,
+        mapping: Mapping,
+        reply: Sender<Result<Option<f32>>>,
+    },
+    ObjectiveBatch {
+        comm: Graph,
+        oracle: DistanceOracle,
+        mappings: Vec<Mapping>,
+        reply: Sender<Result<Option<Vec<f32>>>>,
+    },
+    SwapGains {
+        comm: Graph,
+        oracle: DistanceOracle,
+        mapping: Mapping,
+        pairs: Vec<(u32, u32)>,
+        reply: Sender<Result<Option<Vec<f32>>>>,
+    },
+}
+
+/// Cloneable, `Send` handle to the runtime owner thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Sender<Request>,
+}
+
+impl RuntimeHandle {
+    /// Spawn the owner thread and load artifacts from `dir`. Fails eagerly
+    /// if the artifacts cannot be loaded/compiled.
+    pub fn spawn(dir: PathBuf) -> Result<RuntimeHandle> {
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("qap-runtime".into())
+            .spawn(move || {
+                let rt = match QapRuntime::load(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Objective { comm, oracle, mapping, reply } => {
+                            let _ = reply.send(rt.objective(&comm, &oracle, &mapping));
+                        }
+                        Request::ObjectiveBatch { comm, oracle, mappings, reply } => {
+                            let _ = reply.send(rt.objective_batch(&comm, &oracle, &mappings));
+                        }
+                        Request::SwapGains { comm, oracle, mapping, pairs, reply } => {
+                            let _ = reply.send(rt.swap_gains(&comm, &oracle, &mapping, &pairs));
+                        }
+                    }
+                }
+            })
+            .expect("spawning runtime thread");
+        ready_rx.recv().map_err(|_| anyhow!("runtime thread died during startup"))??;
+        Ok(RuntimeHandle { tx })
+    }
+
+    /// Spawn with the default artifact directory.
+    pub fn spawn_default() -> Result<RuntimeHandle> {
+        Self::spawn(QapRuntime::artifact_dir())
+    }
+
+    /// Dense objective via the artifact (None if no artifact fits).
+    pub fn objective(
+        &self,
+        comm: &Graph,
+        oracle: &DistanceOracle,
+        mapping: &Mapping,
+    ) -> Result<Option<f32>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Objective {
+                comm: comm.clone(),
+                oracle: oracle.clone(),
+                mapping: mapping.clone(),
+                reply,
+            })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread gone"))?
+    }
+
+    /// Batched objectives (≤ [`super::BATCH`] mappings).
+    pub fn objective_batch(
+        &self,
+        comm: &Graph,
+        oracle: &DistanceOracle,
+        mappings: &[Mapping],
+    ) -> Result<Option<Vec<f32>>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::ObjectiveBatch {
+                comm: comm.clone(),
+                oracle: oracle.clone(),
+                mappings: mappings.to_vec(),
+                reply,
+            })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread gone"))?
+    }
+
+    /// Batched swap gains (≤ [`super::GAIN_BATCH`] pairs).
+    pub fn swap_gains(
+        &self,
+        comm: &Graph,
+        oracle: &DistanceOracle,
+        mapping: &Mapping,
+        pairs: &[(u32, u32)],
+    ) -> Result<Option<Vec<f32>>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::SwapGains {
+                comm: comm.clone(),
+                oracle: oracle.clone(),
+                mapping: mapping.clone(),
+                pairs: pairs.to_vec(),
+                reply,
+            })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread gone"))?
+    }
+}

@@ -1,0 +1,210 @@
+//! PJRT runtime: load and execute the AOT-compiled HLO artifacts.
+//!
+//! The bridge follows /opt/xla-example/load_hlo: HLO **text** (written by
+//! `python/compile/aot.py`) is parsed by `HloModuleProto::from_text_file`,
+//! compiled once per artifact on the PJRT CPU client, and executed from the
+//! Rust request path. Python never runs here.
+//!
+//! The runtime exposes the three Layer-2 entry points at the AOT sizes
+//! (n ∈ {64, 128, 256}): scalar QAP objective, batched objectives, and
+//! batched swap gains. Smaller problems are zero-padded to the next
+//! artifact size — padding processes are isolated (no communication) and
+//! mapped to padding PEs, so the objective is unchanged.
+
+pub mod densify;
+pub mod handle;
+
+use crate::graph::Graph;
+use crate::mapping::{DistanceOracle, Mapping};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+pub use densify::{densify_comm, densify_distance};
+pub use handle::RuntimeHandle;
+
+/// Artifact sizes produced by `make artifacts`.
+pub const OBJ_SIZES: &[usize] = &[64, 128, 256];
+/// Batch width of the `qap_batch` artifacts.
+pub const BATCH: usize = 16;
+/// Pair-batch width of the `swap_gain` artifacts.
+pub const GAIN_BATCH: usize = 32;
+
+/// A PJRT client with the compiled QAP executables.
+pub struct QapRuntime {
+    client: xla::PjRtClient,
+    objective: HashMap<usize, xla::PjRtLoadedExecutable>,
+    objective_batch: HashMap<usize, xla::PjRtLoadedExecutable>,
+    swap_gains: HashMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+impl QapRuntime {
+    /// Load every artifact found in `dir` (missing sizes are skipped so the
+    /// runtime degrades gracefully if only some artifacts were built).
+    pub fn load(dir: &Path) -> Result<QapRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut rt = QapRuntime {
+            client,
+            objective: HashMap::new(),
+            objective_batch: HashMap::new(),
+            swap_gains: HashMap::new(),
+        };
+        let mut loaded = 0usize;
+        for &n in OBJ_SIZES {
+            for prefix in ["qap_obj", "qap_batch", "swap_gain"] {
+                let path = dir.join(format!("{prefix}_n{n}.hlo.txt"));
+                if !path.exists() {
+                    continue;
+                }
+                let exe = compile_artifact(&rt.client, &path)
+                    .with_context(|| format!("compiling {}", path.display()))?;
+                match prefix {
+                    "qap_obj" => rt.objective.insert(n, exe),
+                    "qap_batch" => rt.objective_batch.insert(n, exe),
+                    _ => rt.swap_gains.insert(n, exe),
+                };
+                loaded += 1;
+            }
+        }
+        if loaded == 0 {
+            return Err(anyhow!(
+                "no artifacts found in {} — run `make artifacts` first",
+                dir.display()
+            ));
+        }
+        Ok(rt)
+    }
+
+    /// Default artifact directory (`$QAPMAP_ARTIFACTS` or `./artifacts`).
+    pub fn artifact_dir() -> PathBuf {
+        std::env::var_os("QAPMAP_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Smallest loaded artifact size that fits a problem of size `n`.
+    pub fn fit_size(&self, n: usize) -> Option<usize> {
+        OBJ_SIZES.iter().copied().find(|&s| s >= n && self.objective.contains_key(&s))
+    }
+
+    /// Dense QAP objective of `mapping` via the XLA artifact, padding to the
+    /// next artifact size. Returns `None` if the problem is too large for
+    /// every loaded artifact (callers fall back to the sparse Rust path).
+    pub fn objective(
+        &self,
+        comm: &Graph,
+        oracle: &DistanceOracle,
+        mapping: &Mapping,
+    ) -> Result<Option<f32>> {
+        let n = comm.n();
+        let Some(size) = self.fit_size(n) else { return Ok(None) };
+        let exe = &self.objective[&size];
+        let c = densify_comm(comm, size);
+        let d = densify_distance(oracle, size);
+        let mut sigma: Vec<i32> = mapping.sigma.iter().map(|&p| p as i32).collect();
+        sigma.extend(n as i32..size as i32); // padding PEs host padding procs
+        let c_lit = xla::Literal::vec1(&c).reshape(&[size as i64, size as i64])?;
+        let d_lit = xla::Literal::vec1(&d).reshape(&[size as i64, size as i64])?;
+        let s_lit = xla::Literal::vec1(&sigma).reshape(&[size as i64])?;
+        let result = exe.execute::<xla::Literal>(&[c_lit, d_lit, s_lit])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(Some(out.to_vec::<f32>()?[0]))
+    }
+
+    /// Batched objectives for up to [`BATCH`] assignments. Returns one value
+    /// per input assignment.
+    pub fn objective_batch(
+        &self,
+        comm: &Graph,
+        oracle: &DistanceOracle,
+        mappings: &[Mapping],
+    ) -> Result<Option<Vec<f32>>> {
+        let n = comm.n();
+        let size = OBJ_SIZES
+            .iter()
+            .copied()
+            .find(|&s| s >= n && self.objective_batch.contains_key(&s));
+        let Some(size) = size else { return Ok(None) };
+        if mappings.len() > BATCH {
+            return Err(anyhow!("batch too large: {} > {BATCH}", mappings.len()));
+        }
+        let exe = &self.objective_batch[&size];
+        let c = densify_comm(comm, size);
+        let d = densify_distance(oracle, size);
+        let mut sig = Vec::with_capacity(BATCH * size);
+        for m in mappings {
+            sig.extend(m.sigma.iter().map(|&p| p as i32));
+            sig.extend(n as i32..size as i32);
+        }
+        for _ in mappings.len()..BATCH {
+            sig.extend(0..size as i32); // identity padding rows
+        }
+        let c_lit = xla::Literal::vec1(&c).reshape(&[size as i64, size as i64])?;
+        let d_lit = xla::Literal::vec1(&d).reshape(&[size as i64, size as i64])?;
+        let s_lit = xla::Literal::vec1(&sig).reshape(&[BATCH as i64, size as i64])?;
+        let result = exe.execute::<xla::Literal>(&[c_lit, d_lit, s_lit])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let all = out.to_vec::<f32>()?;
+        Ok(Some(all[..mappings.len()].to_vec()))
+    }
+
+    /// Batched swap gains for up to [`GAIN_BATCH`] candidate pairs.
+    pub fn swap_gains(
+        &self,
+        comm: &Graph,
+        oracle: &DistanceOracle,
+        mapping: &Mapping,
+        pairs: &[(u32, u32)],
+    ) -> Result<Option<Vec<f32>>> {
+        let n = comm.n();
+        let size = OBJ_SIZES
+            .iter()
+            .copied()
+            .find(|&s| s >= n && self.swap_gains.contains_key(&s));
+        let Some(size) = size else { return Ok(None) };
+        if pairs.len() > GAIN_BATCH {
+            return Err(anyhow!("pair batch too large: {} > {GAIN_BATCH}", pairs.len()));
+        }
+        if size < 2 {
+            return Ok(None);
+        }
+        let exe = &self.swap_gains[&size];
+        let c = densify_comm(comm, size);
+        let d = densify_distance(oracle, size);
+        let mut sigma: Vec<i32> = mapping.sigma.iter().map(|&p| p as i32).collect();
+        sigma.extend(n as i32..size as i32);
+        let mut pr = Vec::with_capacity(GAIN_BATCH * 2);
+        for &(u, v) in pairs {
+            pr.push(u as i32);
+            pr.push(v as i32);
+        }
+        for _ in pairs.len()..GAIN_BATCH {
+            // padding pairs swap two padding-or-last processes: gain 0 and
+            // harmless because results are truncated to `pairs.len()`
+            pr.push((size - 1) as i32);
+            pr.push((size - 2) as i32);
+        }
+        let c_lit = xla::Literal::vec1(&c).reshape(&[size as i64, size as i64])?;
+        let d_lit = xla::Literal::vec1(&d).reshape(&[size as i64, size as i64])?;
+        let s_lit = xla::Literal::vec1(&sigma).reshape(&[size as i64])?;
+        let p_lit = xla::Literal::vec1(&pr).reshape(&[GAIN_BATCH as i64, 2])?;
+        let result = exe.execute::<xla::Literal>(&[c_lit, d_lit, s_lit, p_lit])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let all = out.to_vec::<f32>()?;
+        Ok(Some(all[..pairs.len()].to_vec()))
+    }
+}
+
+fn compile_artifact(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}

@@ -1,0 +1,130 @@
+//! Minimal command-line argument parsing (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+//!
+//! Ambiguity rule: a bare `--key` consumes the following token as its value
+//! unless that token starts with `--` (or is the last token). Boolean flags
+//! followed by a positional must therefore be written `--flag=true`, or the
+//! positional placed first.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// `--key value` / `--key=value` pairs; bare `--flag` maps to "true".
+    pub options: BTreeMap<String, String>,
+    /// Positional arguments, in order.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw argument strings (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.options.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment (skips argv[0]).
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    /// String option with default.
+    pub fn get<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.options.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    /// Typed option with default; panics with a clear message on parse error.
+    pub fn get_as<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(key) {
+            None => default,
+            Some(s) => s
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key}={s}: invalid value ({e})")),
+        }
+    }
+
+    /// Boolean flag (present without value, or explicit true/1/yes).
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(
+            self.options.get(key).map(|s| s.as_str()),
+            Some("true") | Some("1") | Some("yes")
+        )
+    }
+}
+
+/// Parse a colon-separated list of positive integers such as `4:16:8`
+/// (used for hierarchy `S` and distance `D` descriptions throughout the
+/// paper's experiments).
+pub fn parse_colon_list(s: &str) -> Result<Vec<u64>, String> {
+    s.split(':')
+        .map(|p| {
+            p.trim()
+                .parse::<u64>()
+                .map_err(|e| format!("invalid component {p:?} in {s:?}: {e}"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse_from(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["pos1", "--n", "128", "--seed=7", "--verbose"]);
+        assert_eq!(a.get("n", ""), "128");
+        assert_eq!(a.get_as::<u64>("seed", 0), 7);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get("missing", "d"), "d");
+        assert_eq!(a.get_as::<usize>("missing", 42), 42);
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = parse(&["--fast", "--n", "4"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get_as::<u32>("n", 0), 4);
+    }
+
+    #[test]
+    fn colon_list() {
+        assert_eq!(parse_colon_list("4:16:8").unwrap(), vec![4, 16, 8]);
+        assert_eq!(parse_colon_list("1").unwrap(), vec![1]);
+        assert!(parse_colon_list("4:x").is_err());
+    }
+}

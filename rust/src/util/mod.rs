@@ -1,0 +1,14 @@
+//! Cross-cutting utilities: deterministic RNG, timing, statistics, CLI.
+//!
+//! The build is fully offline with no access to crates beyond the vendored
+//! XLA set, so the usual ecosystem crates (`rand`, `clap`, `criterion`) are
+//! replaced by the small, dependency-free implementations in this module.
+
+pub mod cli;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use cli::Args;
+pub use rng::Rng;
+pub use timer::Timer;

@@ -1,0 +1,137 @@
+//! Small statistics helpers used by the experiment harness.
+//!
+//! The paper reports geometric means "in order to give every instance the
+//! same influence on the final score" (§4 Methodology); we follow that
+//! convention everywhere.
+
+/// Geometric mean of strictly positive values. Returns 0.0 for empty input.
+pub fn geometric_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let log_sum: f64 = xs
+        .iter()
+        .map(|&x| {
+            debug_assert!(x > 0.0, "geometric mean needs positive values, got {x}");
+            x.ln()
+        })
+        .sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+/// Arithmetic mean. Returns 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation (n-1 denominator). 0.0 for fewer than 2 values.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+    var.sqrt()
+}
+
+/// Median (averages the middle pair for even length). 0.0 for empty input.
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Percentile in `[0, 100]` using nearest-rank on a sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Performance-plot series (paper Fig. 2/3): for algorithm X, the sorted
+/// per-instance ratios best/X (quality) or X/best... The paper defines:
+/// "for each instance, calculate the ratio between the objective obtained by
+/// any of the considered algorithms and the objective of algorithm X", then
+/// sort. `rows[i][a]` is the objective of algorithm `a` on instance `i`;
+/// returns one sorted ratio curve per algorithm.
+pub fn performance_plot(rows: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    if rows.is_empty() {
+        return Vec::new();
+    }
+    let nalg = rows[0].len();
+    let mut curves = vec![Vec::with_capacity(rows.len()); nalg];
+    for row in rows {
+        debug_assert_eq!(row.len(), nalg);
+        let best = row.iter().cloned().fold(f64::INFINITY, f64::min);
+        for (a, &val) in row.iter().enumerate() {
+            // ratio best/val in (0,1]; 1.0 means X was the best algorithm.
+            curves[a].push(if val > 0.0 { best / val } else { 1.0 });
+        }
+    }
+    for c in &mut curves {
+        c.sort_by(|a, b| b.partial_cmp(a).unwrap()); // descending: best first
+    }
+    curves
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert_eq!(geometric_mean(&[]), 0.0);
+        assert!((geometric_mean(&[4.0]) - 4.0).abs() < 1e-12);
+        assert!((geometric_mean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geometric_mean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_less_than_arithmetic_mean() {
+        let xs = [1.0, 10.0, 100.0];
+        assert!(geometric_mean(&xs) < mean(&xs));
+    }
+
+    #[test]
+    fn median_even_odd() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn stddev_constant_is_zero() {
+        assert_eq!(stddev(&[5.0, 5.0, 5.0]), 0.0);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+
+    #[test]
+    fn perfplot_best_algorithm_has_ratio_one() {
+        // two instances, two algorithms; algorithm 0 always best.
+        let rows = vec![vec![10.0, 20.0], vec![5.0, 6.0]];
+        let curves = performance_plot(&rows);
+        assert!(curves[0].iter().all(|&r| (r - 1.0).abs() < 1e-12));
+        assert!(curves[1].iter().all(|&r| r < 1.0));
+    }
+}

@@ -1,0 +1,97 @@
+//! Wall-clock timing helpers for the experiment harness (criterion is not
+//! available offline; the bench binaries use these directly).
+
+use std::time::{Duration, Instant};
+
+/// A simple start/stop timer.
+#[derive(Debug, Clone, Copy)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start a new timer.
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed time since start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed seconds as f64.
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.secs())
+}
+
+/// Run `f` repeatedly until `min_time` seconds have accumulated (at least
+/// `min_iters` times), returning the mean seconds per iteration. A black-box
+/// style helper for micro-benchmarks.
+pub fn bench_secs(min_time: f64, min_iters: usize, mut f: impl FnMut()) -> f64 {
+    let mut iters = 0usize;
+    let t = Timer::start();
+    loop {
+        f();
+        iters += 1;
+        if iters >= min_iters && t.secs() >= min_time {
+            break;
+        }
+    }
+    t.secs() / iters as f64
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box is
+/// stable since 1.66; thin wrapper for call-site clarity).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Human-readable duration, e.g. "1.234 s", "56.7 ms", "890 ns".
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_returns_result() {
+        let (v, s) = time(|| 2 + 2);
+        assert_eq!(v, 4);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn bench_runs_min_iters() {
+        let mut count = 0;
+        bench_secs(0.0, 5, || count += 1);
+        assert!(count >= 5);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(2.5).ends_with(" s"));
+        assert!(fmt_secs(0.002).ends_with(" ms"));
+        assert!(fmt_secs(2e-6).ends_with(" µs"));
+        assert!(fmt_secs(2e-9).ends_with(" ns"));
+    }
+}

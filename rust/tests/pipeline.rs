@@ -1,0 +1,133 @@
+//! Integration: the full §4.1 pipeline — generator → partitioner →
+//! communication model → construction → local search — across instance
+//! families, hierarchy shapes and algorithms.
+
+use qapmap::gen;
+use qapmap::mapping::algorithms::{run, AlgorithmSpec};
+use qapmap::mapping::{objective, DistanceOracle, Hierarchy};
+use qapmap::model::{build_instance, comm_graph};
+use qapmap::partition::{partition_kway, PartitionConfig};
+use qapmap::util::Rng;
+
+#[test]
+fn full_pipeline_all_families_all_algorithms() {
+    let mut rng = Rng::new(1);
+    for family in ["rgg11", "del11", "band2048", "grid48", "gnp2048"] {
+        let app = gen::by_name(family, &mut rng).unwrap();
+        let comm = build_instance(&app, 128, &mut rng);
+        assert_eq!(comm.n(), 128, "{family}");
+        let h = Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap();
+        let oracle = DistanceOracle::implicit(h.clone());
+        for algo in ["identity", "random", "mm", "gac", "rcb", "bottomup", "topdown", "topdown+Nc2"] {
+            let spec = AlgorithmSpec::parse(algo).unwrap();
+            let r = run(&comm, &h, &oracle, &spec, &PartitionConfig::perfectly_balanced(), &mut rng);
+            r.mapping.validate().unwrap_or_else(|e| panic!("{family}/{algo}: {e}"));
+            assert_eq!(
+                r.objective,
+                objective(&comm, &oracle, &r.mapping),
+                "{family}/{algo}: reported objective != recompute"
+            );
+            assert!(r.objective <= r.objective_initial, "{family}/{algo}: LS worsened");
+        }
+    }
+}
+
+#[test]
+fn pipeline_respects_cut_equivalence() {
+    // the comm graph's total weight equals the partition cut; a mapping onto
+    // a flat machine (single level) has J = totalweight * d for ANY mapping
+    let mut rng = Rng::new(2);
+    let app = gen::random_geometric_graph(4096, &mut rng);
+    let p = partition_kway(&app, 64, &PartitionConfig::fast(), &mut rng);
+    let comm = comm_graph(&app, &p);
+    assert_eq!(comm.total_edge_weight(), p.cut(&app));
+
+    let h = Hierarchy::new(vec![64], vec![7]).unwrap();
+    let oracle = DistanceOracle::implicit(h.clone());
+    let expect = comm.total_edge_weight() * 7;
+    for algo in ["identity", "random", "topdown"] {
+        let spec = AlgorithmSpec::parse(algo).unwrap();
+        let r = run(&comm, &h, &oracle, &spec, &PartitionConfig::default(), &mut rng);
+        assert_eq!(r.objective, expect, "{algo}: flat machine makes all mappings equal");
+    }
+}
+
+#[test]
+fn deeper_hierarchies_work() {
+    let mut rng = Rng::new(3);
+    let app = gen::random_geometric_graph(8192, &mut rng);
+    let comm = build_instance(&app, 512, &mut rng);
+    // 4 levels: 2 cores, 4 procs, 8 nodes, 8 racks = 512 PEs
+    let h = Hierarchy::new(vec![2, 4, 8, 8], vec![1, 10, 100, 1000]).unwrap();
+    let oracle = DistanceOracle::implicit(h.clone());
+    let td = run(
+        &comm,
+        &h,
+        &oracle,
+        &AlgorithmSpec::parse("topdown").unwrap(),
+        &PartitionConfig::perfectly_balanced(),
+        &mut rng,
+    );
+    let rd = run(
+        &comm,
+        &h,
+        &oracle,
+        &AlgorithmSpec::parse("random").unwrap(),
+        &PartitionConfig::perfectly_balanced(),
+        &mut rng,
+    );
+    assert!(
+        (td.objective as f64) < 0.6 * rd.objective as f64,
+        "topdown {} vs random {}",
+        td.objective,
+        rd.objective
+    );
+}
+
+#[test]
+fn asymmetric_hierarchy_levels() {
+    // uneven fan-outs, non-power-of-two: 3 * 5 * 7 = 105 PEs
+    let mut rng = Rng::new(4);
+    let app = gen::random_geometric_graph(4096, &mut rng);
+    let comm = build_instance(&app, 105, &mut rng);
+    let h = Hierarchy::new(vec![3, 5, 7], vec![2, 11, 101]).unwrap();
+    let oracle = DistanceOracle::implicit(h.clone());
+    for algo in ["mm", "topdown", "bottomup", "rcb"] {
+        let spec = AlgorithmSpec::parse(algo).unwrap();
+        let r = run(&comm, &h, &oracle, &spec, &PartitionConfig::perfectly_balanced(), &mut rng);
+        r.mapping.validate().unwrap_or_else(|e| panic!("{algo}: {e}"));
+    }
+}
+
+#[test]
+fn explicit_and_implicit_oracles_agree_end_to_end() {
+    let mut rng = Rng::new(5);
+    let app = gen::delaunay_graph(2048, &mut rng);
+    let comm = build_instance(&app, 128, &mut rng);
+    let h = Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap();
+    let imp = DistanceOracle::implicit(h.clone());
+    let exp = DistanceOracle::explicit(&h);
+    let spec = AlgorithmSpec::parse("mm+Np").unwrap();
+    let r1 = run(&comm, &h, &imp, &spec, &PartitionConfig::default(), &mut Rng::new(9));
+    let r2 = run(&comm, &h, &exp, &spec, &PartitionConfig::default(), &mut Rng::new(9));
+    assert_eq!(r1.mapping.sigma, r2.mapping.sigma);
+    assert_eq!(r1.objective, r2.objective);
+}
+
+#[test]
+fn metis_roundtrip_through_pipeline() {
+    // write an instance to METIS, read it back, map it — results identical
+    let mut rng = Rng::new(6);
+    let app = gen::random_geometric_graph(2048, &mut rng);
+    let comm = build_instance(&app, 64, &mut rng);
+    let mut buf = Vec::new();
+    qapmap::graph::io::write_metis(&comm, &mut buf).unwrap();
+    let comm2 = qapmap::graph::io::read_metis(&buf[..]).unwrap();
+    assert_eq!(comm, comm2);
+    let h = Hierarchy::new(vec![4, 16], vec![1, 10]).unwrap();
+    let oracle = DistanceOracle::implicit(h.clone());
+    let spec = AlgorithmSpec::parse("topdown+Nc1").unwrap();
+    let r1 = run(&comm, &h, &oracle, &spec, &PartitionConfig::default(), &mut Rng::new(3));
+    let r2 = run(&comm2, &h, &oracle, &spec, &PartitionConfig::default(), &mut Rng::new(3));
+    assert_eq!(r1.objective, r2.objective);
+}

@@ -1,0 +1,213 @@
+//! Randomized property tests (proptest is unavailable offline; the same
+//! invariants are swept over many seeded random instances).
+//!
+//! Invariants under test:
+//! * swap-gain == objective delta, for every engine and thousands of swaps
+//! * Γ-sum invariant `Σ Γ(u) = 2J` survives arbitrary swap sequences
+//! * local search is monotone and terminates
+//! * partitioner always returns exact block sizes (ε = 0)
+//! * contraction preserves inter-cluster weight (§3.1 parallel-edge rule)
+//! * implicit oracle == explicit matrix on random hierarchies
+//! * neighborhood nesting: N_C ⊆ N_C² ⊆ … (pair-set sizes monotone)
+
+use qapmap::gen::{gnp, random_geometric_graph};
+use qapmap::graph::{contract, Graph};
+use qapmap::mapping::local_search::{nc_neighborhood, nc_pairs};
+use qapmap::mapping::objective::{Mapping, SwapEngine};
+use qapmap::mapping::{DistanceOracle, Hierarchy};
+use qapmap::partition::{partition_kway, PartitionConfig};
+use qapmap::util::Rng;
+
+fn random_hierarchy(rng: &mut Rng, target_n: usize) -> Hierarchy {
+    // random factorization of target_n into 2..4 levels
+    let mut n = target_n as u64;
+    let mut s = Vec::new();
+    let mut d = Vec::new();
+    let mut dist = 1u64;
+    while n > 1 && s.len() < 3 {
+        let mut a = [2u64, 4, 8, 16][rng.index(4)];
+        while n % a != 0 {
+            a /= 2;
+        }
+        let a = a.max(2);
+        if n % a != 0 {
+            break;
+        }
+        s.push(a);
+        d.push(dist);
+        dist *= 1 + rng.next_bounded(20);
+        n /= a;
+    }
+    if n > 1 {
+        s.push(n);
+        d.push(dist);
+    }
+    Hierarchy::new(s, d).unwrap()
+}
+
+fn random_comm(rng: &mut Rng, n: usize) -> Graph {
+    if rng.chance(0.5) {
+        random_geometric_graph(n, rng)
+    } else {
+        gnp(n, 6.0 / n as f64, rng)
+    }
+}
+
+#[test]
+fn prop_swap_gain_equals_objective_delta() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed);
+        let n = 64 << rng.index(3); // 64..256
+        let comm = random_comm(&mut rng, n);
+        let h = random_hierarchy(&mut rng, n);
+        let oracle = if rng.chance(0.5) {
+            DistanceOracle::implicit(h)
+        } else {
+            DistanceOracle::explicit(&h)
+        };
+        let mut eng = SwapEngine::new(&comm, &oracle, Mapping { sigma: rng.permutation(n) });
+        for _ in 0..200 {
+            let u = rng.index(n) as u32;
+            let v = (u as usize + 1 + rng.index(n - 1)) as u32 % n as u32;
+            let before = eng.objective();
+            let gain = eng.swap_gain(u, v);
+            eng.do_swap(u, v);
+            assert_eq!(
+                eng.objective() as i64,
+                before as i64 - gain,
+                "seed {seed}: gain mismatch"
+            );
+        }
+        assert!(eng.gamma_invariant_holds(), "seed {seed}: gamma invariant");
+        assert_eq!(eng.objective(), eng.recompute_objective(), "seed {seed}: J drift");
+        eng.mapping().validate().unwrap();
+    }
+}
+
+#[test]
+fn prop_local_search_monotone_and_terminates() {
+    for seed in 20..35u64 {
+        let mut rng = Rng::new(seed);
+        let n = 128;
+        let comm = random_comm(&mut rng, n);
+        let h = random_hierarchy(&mut rng, n);
+        let oracle = DistanceOracle::implicit(h);
+        let mut eng = SwapEngine::new(&comm, &oracle, Mapping { sigma: rng.permutation(n) });
+        let before = eng.objective();
+        let d = 1 + rng.index(3) as u32;
+        let stats = nc_neighborhood(&mut eng, &comm, d, &mut rng, 2_000_000);
+        assert!(eng.objective() <= before, "seed {seed}");
+        assert!(stats.evaluated < 2_000_000, "seed {seed}: did not converge");
+        assert_eq!(eng.objective(), eng.recompute_objective(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_partitioner_exact_sizes() {
+    for seed in 35..55u64 {
+        let mut rng = Rng::new(seed);
+        let n = 100 + rng.index(900);
+        let g = random_comm(&mut rng, n);
+        let k = 2 + rng.index(14);
+        let p = partition_kway(&g, k, &PartitionConfig::perfectly_balanced(), &mut rng);
+        p.validate(&g).unwrap();
+        let w = p.block_weights(&g, true);
+        let (lo, hi) = ((n / k) as u64, n.div_ceil(k) as u64);
+        for (b, &x) in w.iter().enumerate() {
+            assert!(
+                x == lo || x == hi,
+                "seed {seed}: n={n} k={k} block {b} has {x}, expected {lo} or {hi}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_contraction_preserves_intercluster_weight() {
+    for seed in 55..70u64 {
+        let mut rng = Rng::new(seed);
+        let n = 64 + rng.index(192);
+        let g = random_comm(&mut rng, n);
+        let k = 2 + rng.index(8);
+        let cluster: Vec<u32> = (0..n).map(|_| rng.index(k) as u32).collect();
+        let coarse = contract(&g, &cluster, k);
+        // manual inter-cluster weight
+        let mut expect = 0u64;
+        for v in 0..n as u32 {
+            for (u, w) in g.edges(v) {
+                if u > v && cluster[u as usize] != cluster[v as usize] {
+                    expect += w;
+                }
+            }
+        }
+        assert_eq!(coarse.total_edge_weight(), expect, "seed {seed}");
+        assert_eq!(coarse.total_node_weight(), g.total_node_weight(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_oracles_agree() {
+    for seed in 70..85u64 {
+        let mut rng = Rng::new(seed);
+        let n = 24 * (1 + rng.index(8)); // up to 192
+        let h = random_hierarchy(&mut rng, n);
+        let imp = DistanceOracle::implicit(h.clone());
+        let exp = DistanceOracle::explicit(&h);
+        for _ in 0..500 {
+            let p = rng.index(n) as u32;
+            let q = rng.index(n) as u32;
+            assert_eq!(imp.distance(p, q), exp.distance(p, q), "seed {seed} ({p},{q})");
+        }
+        // metric sanity: identity + symmetry (ultrametric triangle holds by
+        // construction: d(p,q) <= max(d(p,r), d(r,q)))
+        for _ in 0..100 {
+            let p = rng.index(n) as u32;
+            let q = rng.index(n) as u32;
+            let r = rng.index(n) as u32;
+            assert_eq!(imp.distance(p, p), 0);
+            assert_eq!(imp.distance(p, q), imp.distance(q, p));
+            assert!(imp.distance(p, q) <= imp.distance(p, r).max(imp.distance(r, q)));
+        }
+    }
+}
+
+#[test]
+fn prop_neighborhood_nesting() {
+    for seed in 85..95u64 {
+        let mut rng = Rng::new(seed);
+        let comm = random_comm(&mut rng, 128);
+        let mut last = 0usize;
+        for d in 1..=5u32 {
+            let pairs = nc_pairs(&comm, d).len();
+            assert!(pairs >= last, "seed {seed}: N_C^{d} smaller than N_C^{}", d - 1);
+            last = pairs;
+        }
+        // N_C^n == N² (all pairs of the same connected component); on a
+        // connected graph that's exactly n(n-1)/2
+        if qapmap::graph::is_connected(&comm) {
+            let all = nc_pairs(&comm, 127).len();
+            assert_eq!(all, 128 * 127 / 2, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_constructions_always_bijective() {
+    use qapmap::mapping::construct;
+    for seed in 95..105u64 {
+        let mut rng = Rng::new(seed);
+        let h = random_hierarchy(&mut rng, 96);
+        let comm = random_comm(&mut rng, 96);
+        let oracle = DistanceOracle::implicit(h.clone());
+        let cfg = PartitionConfig::perfectly_balanced();
+        for m in [
+            construct::mueller_merbach(&comm, &oracle),
+            construct::greedy_all_c(&comm, &h),
+            construct::top_down(&comm, &h, &cfg, &mut rng),
+            construct::bottom_up(&comm, &h, &cfg, &mut rng),
+            construct::rcb(&comm, &cfg, &mut rng),
+        ] {
+            m.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        }
+    }
+}

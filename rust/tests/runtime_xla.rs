@@ -1,0 +1,163 @@
+//! Integration: the Rust/PJRT runtime loads the AOT artifacts and its dense
+//! f32 objective agrees with the exact sparse integer objective — the
+//! cross-layer correctness contract of the whole stack.
+//!
+//! Requires `make artifacts` to have run (skips gracefully otherwise so
+//! `cargo test` stays green on a fresh checkout).
+
+use qapmap::gen::random_geometric_graph;
+use qapmap::mapping::algorithms::AlgorithmSpec;
+use qapmap::mapping::{construct, objective, DistanceOracle, Hierarchy, Mapping};
+use qapmap::partition::PartitionConfig;
+use qapmap::runtime::{QapRuntime, RuntimeHandle, BATCH, GAIN_BATCH};
+use qapmap::util::Rng;
+
+fn artifacts_available() -> bool {
+    QapRuntime::artifact_dir().join("qap_obj_n64.hlo.txt").exists()
+}
+
+fn handle() -> Option<RuntimeHandle> {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(RuntimeHandle::spawn_default().expect("loading artifacts"))
+}
+
+fn setup(n: usize, seed: u64) -> (qapmap::graph::Graph, Hierarchy, DistanceOracle) {
+    let mut rng = Rng::new(seed);
+    let g = random_geometric_graph(n, &mut rng);
+    let h = Hierarchy::new(vec![4, 16, (n / 64) as u64], vec![1, 10, 100]).unwrap();
+    let o = DistanceOracle::implicit(h.clone());
+    (g, h, o)
+}
+
+#[test]
+fn xla_objective_matches_sparse_exact() {
+    let Some(rt) = handle() else { return };
+    for (n, seed) in [(64usize, 1u64), (128, 2), (256, 3)] {
+        let (g, _h, o) = setup(n, seed);
+        let mut rng = Rng::new(seed + 10);
+        for _ in 0..3 {
+            let m = Mapping { sigma: rng.permutation(n) };
+            let exact = objective(&g, &o, &m) as f32;
+            let xla = rt
+                .objective(&g, &o, &m)
+                .expect("xla call")
+                .expect("size must fit an artifact");
+            assert!(
+                (xla - exact).abs() <= 1e-4 * exact.max(1.0),
+                "n={n}: xla {xla} vs exact {exact}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_objective_with_padding() {
+    // n = 100 pads to the 128 artifact; padding must not change J
+    let Some(rt) = handle() else { return };
+    let mut rng = Rng::new(5);
+    let g = random_geometric_graph(100, &mut rng);
+    let h = Hierarchy::new(vec![4, 25], vec![1, 10]).unwrap();
+    let o = DistanceOracle::implicit(h);
+    let m = Mapping { sigma: rng.permutation(100) };
+    let exact = objective(&g, &o, &m) as f32;
+    let xla = rt.objective(&g, &o, &m).unwrap().unwrap();
+    assert!((xla - exact).abs() <= 1e-4 * exact.max(1.0), "xla {xla} vs exact {exact}");
+}
+
+#[test]
+fn xla_batch_matches_singles() {
+    let Some(rt) = handle() else { return };
+    let (g, _h, o) = setup(64, 7);
+    let mut rng = Rng::new(8);
+    let mappings: Vec<Mapping> =
+        (0..BATCH.min(6)).map(|_| Mapping { sigma: rng.permutation(64) }).collect();
+    let batch = rt.objective_batch(&g, &o, &mappings).unwrap().unwrap();
+    assert_eq!(batch.len(), mappings.len());
+    for (m, &bj) in mappings.iter().zip(&batch) {
+        let sj = rt.objective(&g, &o, m).unwrap().unwrap();
+        assert!((bj - sj).abs() <= 1e-3 * sj.max(1.0), "batch {bj} vs single {sj}");
+    }
+}
+
+#[test]
+fn xla_swap_gains_match_sparse_engine() {
+    let Some(rt) = handle() else { return };
+    let (g, _h, o) = setup(128, 9);
+    let mut rng = Rng::new(10);
+    let m = Mapping { sigma: rng.permutation(128) };
+    let eng = qapmap::mapping::SwapEngine::new(&g, &o, m.clone());
+    let pairs: Vec<(u32, u32)> = (0..GAIN_BATCH.min(12))
+        .map(|_| {
+            let u = rng.index(128) as u32;
+            let mut v = rng.index(128) as u32;
+            if u == v {
+                v = (v + 1) % 128;
+            }
+            (u, v)
+        })
+        .collect();
+    let gains = rt.swap_gains(&g, &o, &m, &pairs).unwrap().unwrap();
+    for (&(u, v), &xg) in pairs.iter().zip(&gains) {
+        let eg = eng.swap_gain(u, v) as f32;
+        assert!(
+            (xg - eg).abs() <= 1e-3 * eg.abs().max(1.0),
+            "pair ({u},{v}): xla {xg} vs sparse {eg}"
+        );
+    }
+}
+
+#[test]
+fn xla_tracks_local_search_trajectory() {
+    // run a real algorithm, verify its claimed objective via XLA
+    let Some(rt) = handle() else { return };
+    let (g, h, o) = setup(128, 11);
+    let mut rng = Rng::new(12);
+    let spec = AlgorithmSpec::parse("topdown+Nc2").unwrap();
+    let r = qapmap::mapping::algorithms::run(
+        &g,
+        &h,
+        &o,
+        &spec,
+        &PartitionConfig::perfectly_balanced(),
+        &mut rng,
+    );
+    let xla = rt.objective(&g, &o, &r.mapping).unwrap().unwrap();
+    assert!(
+        (xla - r.objective as f32).abs() <= 1e-4 * (r.objective as f32).max(1.0),
+        "xla {xla} vs engine {}",
+        r.objective
+    );
+}
+
+#[test]
+fn oversize_problem_returns_none() {
+    let Some(rt) = handle() else { return };
+    let (g, _h, o) = setup(512, 13); // larger than the biggest artifact (256)
+    let m = construct::identity(512);
+    assert!(rt.objective(&g, &o, &m).unwrap().is_none());
+}
+
+#[test]
+fn coordinator_with_xla_verification() {
+    let Some(rt) = handle() else { return };
+    use qapmap::coordinator::{Coordinator, MapRequest};
+    let (g, h, _o) = setup(128, 14);
+    let coord = Coordinator::start(2, 4, Some(rt));
+    let resp = coord.submit_blocking(MapRequest {
+        id: 1,
+        comm: g,
+        hierarchy: h,
+        algorithm: AlgorithmSpec::parse("topdown+Nc1").unwrap(),
+        repetitions: 4,
+        seed: 42,
+        verify: true,
+    });
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(resp.verified, Some(true), "xla verification should agree: {resp:?}");
+    let snap = coord.metrics();
+    assert_eq!(snap.verifications, 1);
+    assert_eq!(snap.verification_mismatches, 0);
+}

@@ -1,0 +1,160 @@
+//! Integration: the coordinator service under concurrency, backpressure and
+//! failure injection (malformed requests, protocol errors, client drops).
+
+use qapmap::coordinator::{wire, Coordinator, MapRequest};
+use qapmap::gen::random_geometric_graph;
+use qapmap::mapping::algorithms::AlgorithmSpec;
+use qapmap::mapping::{Hierarchy, Mapping};
+use qapmap::util::Rng;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+fn request(id: u64, n: usize, algo: &str) -> MapRequest {
+    let mut rng = Rng::new(id);
+    MapRequest {
+        id,
+        comm: random_geometric_graph(n, &mut rng),
+        hierarchy: Hierarchy::new(vec![4, 16, (n / 64) as u64], vec![1, 10, 100]).unwrap(),
+        algorithm: AlgorithmSpec::parse(algo).unwrap(),
+        repetitions: 1,
+        seed: id,
+        verify: false,
+    }
+}
+
+#[test]
+fn many_concurrent_jobs_through_tcp() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Arc::new(Coordinator::start(3, 8, None));
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let (c, s) = (Arc::clone(&coord), Arc::clone(&stop));
+        std::thread::spawn(move || wire::serve(listener, c, s))
+    };
+
+    let clients: Vec<_> = (0..12u64)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let algo = ["topdown", "mm", "rcb+Nc1", "bottomup"][i as usize % 4];
+                let req = request(i, 128, algo);
+                wire::request(addr, &req).unwrap()
+            })
+        })
+        .collect();
+    for (i, c) in clients.into_iter().enumerate() {
+        let resp = c.join().unwrap();
+        assert!(resp.error.is_none(), "job {i}: {:?}", resp.error);
+        assert_eq!(resp.id, i as u64);
+        Mapping { sigma: resp.sigma }.validate().unwrap();
+    }
+    let snap = coord.metrics();
+    assert_eq!(snap.jobs_completed, 12);
+    assert_eq!(snap.jobs_failed, 0);
+    assert!(snap.p50_latency_secs > 0.0);
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn malformed_wire_data_gets_error_response() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Arc::new(Coordinator::start(1, 2, None));
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let (c, s) = (Arc::clone(&coord), Arc::clone(&stop));
+        std::thread::spawn(move || wire::serve(listener, c, s))
+    };
+
+    for garbage in ["HELLO WORLD\n", "MAP v1 oops\n", "MAP v2 1 mm 4 1 1 0 0 4 0\nEND\n"] {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(garbage.as_bytes()).unwrap();
+        stream.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut reader = std::io::BufReader::new(stream);
+        let resp = wire::read_response(&mut reader).unwrap();
+        assert!(resp.error.is_some(), "garbage {garbage:?} must produce ERR");
+    }
+
+    // service still healthy afterwards
+    let ok = wire::request(addr, &request(99, 64, "topdown")).unwrap();
+    assert!(ok.error.is_none());
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn client_disconnect_does_not_poison_service() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Arc::new(Coordinator::start(2, 4, None));
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let (c, s) = (Arc::clone(&coord), Arc::clone(&stop));
+        std::thread::spawn(move || wire::serve(listener, c, s))
+    };
+
+    // connect, send a valid job, drop immediately without reading
+    {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = std::io::BufWriter::new(stream);
+        wire::write_request(&mut w, &request(1, 128, "mm+N2")).unwrap();
+        w.flush().unwrap();
+        // dropped here
+    }
+    // subsequent jobs still work
+    for i in 2..5u64 {
+        let resp = wire::request(addr, &request(i, 64, "topdown")).unwrap();
+        assert!(resp.error.is_none());
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn mismatched_size_job_fails_cleanly() {
+    let coord = Coordinator::start(1, 2, None);
+    let mut req = request(1, 128, "topdown");
+    req.hierarchy = Hierarchy::new(vec![4, 8], vec![1, 10]).unwrap(); // 32 != 128
+    let resp = coord.submit_blocking(req);
+    assert!(resp.error.is_some());
+    assert!(resp.error.unwrap().contains("PEs"));
+}
+
+#[test]
+fn repetitions_with_exact_scoring() {
+    let coord = Coordinator::start(2, 4, None);
+    let mut req = request(5, 128, "random+Nc1");
+    req.repetitions = 6;
+    let resp = coord.submit_blocking(req);
+    assert!(resp.error.is_none());
+    // with 6 seeds the winner must be at least as good as seed 0 alone
+    let mut single = request(5, 128, "random+Nc1");
+    single.repetitions = 1;
+    let r1 = coord.submit_blocking(single);
+    assert!(resp.objective <= r1.objective);
+}
+
+#[test]
+fn throughput_under_sustained_load() {
+    let coord = Coordinator::start(2, 32, None);
+    let t = qapmap::util::Timer::start();
+    let rxs: Vec<_> = (0..40u64).map(|i| coord.submit(request(i, 64, "topdown"))).collect();
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv().unwrap().error.is_none() {
+            ok += 1;
+        }
+    }
+    let wall = t.secs();
+    assert_eq!(ok, 40);
+    let snap = coord.metrics();
+    assert_eq!(snap.jobs_completed, 40);
+    // sanity: this host maps 64-process jobs way faster than 1s each
+    assert!(wall < 30.0, "throughput collapsed: {wall}s for 40 jobs");
+}
