@@ -6,9 +6,9 @@
 //! 2 FM passes), default (4/3), and strong (8/6 + deeper coarsening stop),
 //! measuring mapping objective and construction time.
 
+use qapmap::api::{MapJobBuilder, MapSession};
 use qapmap::bench::{full_mode, instance_suite, write_csv, Table, FAMILIES};
-use qapmap::mapping::algorithms::{run, AlgorithmSpec};
-use qapmap::mapping::{DistanceOracle, Hierarchy};
+use qapmap::mapping::Hierarchy;
 use qapmap::partition::PartitionConfig;
 use qapmap::util::stats::geometric_mean;
 use qapmap::util::Rng;
@@ -37,7 +37,6 @@ fn main() {
     for &k in &ks {
         let n = 64 * k as usize;
         let h = Hierarchy::new(vec![4, 16, k], vec![1, 10, 100]).unwrap();
-        let oracle = DistanceOracle::implicit(h.clone());
         let mut rng = Rng::new(400 + k);
         let suite = instance_suite(FAMILIES, n, 32, &mut rng);
         let mut fast_j = 0.0;
@@ -45,9 +44,14 @@ fn main() {
             let mut js = Vec::new();
             let mut ts = Vec::new();
             for inst in &suite {
-                let spec = AlgorithmSpec::parse("topdown").unwrap();
-                let mut r = Rng::new(11);
-                let res = run(&inst.comm, &h, &oracle, &spec, cfg, &mut r);
+                let job = MapJobBuilder::new(inst.comm.clone(), h.clone())
+                    .algorithm_name("topdown")
+                    .unwrap()
+                    .partition_config(*cfg)
+                    .seed(11)
+                    .build()
+                    .unwrap();
+                let res = MapSession::new(job).run();
                 js.push(res.objective as f64);
                 ts.push(res.construct_secs.max(1e-9));
             }

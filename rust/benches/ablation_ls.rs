@@ -5,8 +5,8 @@
 //! 2. **Termination threshold**: stop after `m` consecutive failures
 //!    (paper) vs `m/2` (earlier stop) vs `2m` (later stop).
 
+use qapmap::api::{MapJobBuilder, MapSession};
 use qapmap::bench::{full_mode, instance_suite, write_csv, Table, FAMILIES};
-use qapmap::mapping::algorithms::{run, AlgorithmSpec};
 use qapmap::mapping::local_search::nc_pairs;
 use qapmap::mapping::objective::{Mapping, SwapEngine};
 use qapmap::mapping::{DistanceOracle, Hierarchy};
@@ -85,9 +85,17 @@ fn main() {
         let mut js = Vec::new();
         let mut evals = Vec::new();
         for inst in &suite {
-            let spec = AlgorithmSpec::parse("mm").unwrap();
-            let mut r = Rng::new(13);
-            let base = run(&inst.comm, &h, &oracle, &spec, &PartitionConfig::fast(), &mut r);
+            // shared MM construction through the api front door; the custom
+            // search variants below then drive the engine directly (they ARE
+            // the ablation, not a repetition loop)
+            let job = MapJobBuilder::new(inst.comm.clone(), h.clone())
+                .algorithm_name("mm")
+                .unwrap()
+                .partition_config(PartitionConfig::fast())
+                .seed(13)
+                .build()
+                .unwrap();
+            let base = MapSession::new(job).run();
             let mut eng =
                 SwapEngine::new(&inst.comm, &oracle, Mapping { sigma: base.mapping.sigma.clone() });
             let mut r2 = Rng::new(17);

@@ -9,15 +9,27 @@
 //! Emits `out/fig3_improvement.csv` (mean improvement % per k) and
 //! `out/fig3_perfplot.csv`, plus construction-time ratios vs MM.
 
+use qapmap::api::{MapJobBuilder, MapReport, MapSession};
 use qapmap::bench::{full_mode, instance_suite, write_csv, Table, FAMILIES};
-use qapmap::mapping::algorithms::{run, AlgorithmSpec};
-use qapmap::mapping::{DistanceOracle, Hierarchy};
+use qapmap::graph::Graph;
+use qapmap::mapping::Hierarchy;
 use qapmap::partition::PartitionConfig;
 use qapmap::util::stats::{geometric_mean, mean, performance_plot};
 use qapmap::util::Rng;
 
 const ALGOS: &[&str] =
     &["random", "identity", "gac", "rcb", "bottomup", "topdown", "topdown+Nc10"];
+
+fn run_one(comm: &Graph, h: &Hierarchy, algo: &str, seed: u64) -> MapReport {
+    let job = MapJobBuilder::new(comm.clone(), h.clone())
+        .algorithm_name(algo)
+        .unwrap()
+        .partition_config(PartitionConfig::perfectly_balanced())
+        .seed(seed)
+        .build()
+        .unwrap();
+    MapSession::new(job).run()
+}
 
 fn main() {
     // k values: powers of two AND odd values (paper: k in 1..128)
@@ -44,22 +56,13 @@ fn main() {
     for &k in &ks {
         let n = 64 * k as usize;
         let h = Hierarchy::new(vec![4, 16, k], vec![1, 10, 100]).unwrap();
-        let oracle = DistanceOracle::implicit(h.clone());
         let mut rng = Rng::new(200 + k);
         let suite = instance_suite(FAMILIES, n, 32, &mut rng);
 
         let mut per_algo: Vec<Vec<f64>> = vec![Vec::new(); ALGOS.len()];
         let mut td_ratio_here = Vec::new();
         for inst in &suite {
-            let mut r = Rng::new(9);
-            let base = run(
-                &inst.comm,
-                &h,
-                &oracle,
-                &AlgorithmSpec::parse("mm").unwrap(),
-                &PartitionConfig::perfectly_balanced(),
-                &mut r,
-            );
+            let base = run_one(&inst.comm, &h, "mm", 9);
             let mut qrow = Vec::new();
             for (a, name) in ALGOS.iter().enumerate() {
                 if *name == "bottomup" && k > bottomup_max_k {
@@ -67,10 +70,7 @@ fn main() {
                     qrow.push(f64::INFINITY);
                     continue;
                 }
-                let spec = AlgorithmSpec::parse(name).unwrap();
-                let mut r = Rng::new(9);
-                let res =
-                    run(&inst.comm, &h, &oracle, &spec, &PartitionConfig::perfectly_balanced(), &mut r);
+                let res = run_one(&inst.comm, &h, name, 9);
                 let improvement =
                     100.0 * (1.0 - res.objective as f64 / base.objective.max(1) as f64);
                 per_algo[a].push(improvement);

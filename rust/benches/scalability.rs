@@ -11,12 +11,23 @@
 //! (the container has ~1 core and a few GB of RAM — the *crossover shape*
 //! is the target, not the absolute wall).
 
+use qapmap::api::{MapJobBuilder, MapReport, MapSession, OracleMode};
 use qapmap::bench::{full_mode, write_csv, Table};
-use qapmap::mapping::algorithms::{run, AlgorithmSpec};
-use qapmap::mapping::{DistanceOracle, Hierarchy};
+use qapmap::graph::Graph;
+use qapmap::mapping::Hierarchy;
 use qapmap::model::build_instance;
-use qapmap::partition::PartitionConfig;
 use qapmap::util::Rng;
+
+fn run_one(comm: &Graph, h: &Hierarchy, algo: &str, mode: OracleMode, seed: u64) -> MapReport {
+    let job = MapJobBuilder::new(comm.clone(), h.clone())
+        .algorithm_name(algo)
+        .unwrap()
+        .oracle_mode(mode)
+        .seed(seed)
+        .build()
+        .unwrap();
+    MapSession::new(job).run()
+}
 
 fn main() {
     let exps: Vec<usize> = if full_mode() { vec![10, 12, 14, 16] } else { vec![10, 12, 14] };
@@ -35,25 +46,19 @@ fn main() {
         let mut rng = Rng::new(300 + e as u64);
         let app = qapmap::gen::random_geometric_graph(n * 8, &mut rng);
         let comm = build_instance(&app, n, &mut rng);
-        let cfg = PartitionConfig::perfectly_balanced();
-        let implicit = DistanceOracle::implicit(h.clone());
 
         let fits = n * n * std::mem::size_of::<u64>() <= explicit_budget;
-        let explicit = fits.then(|| DistanceOracle::explicit(&h));
 
-        let mm = AlgorithmSpec::parse("mm").unwrap();
-        let ls = AlgorithmSpec::parse("mm+Nc1").unwrap();
-        let td = AlgorithmSpec::parse("topdown").unwrap();
-
-        let mm_onl = run(&comm, &h, &implicit, &mm, &cfg, &mut Rng::new(1));
-        let ls_onl = run(&comm, &h, &implicit, &ls, &cfg, &mut Rng::new(1));
-        let td_res = run(&comm, &h, &implicit, &td, &cfg, &mut Rng::new(1));
-        let (mm_expl_t, ls_expl_t) = match &explicit {
-            Some(o) => (
-                run(&comm, &h, o, &mm, &cfg, &mut Rng::new(1)).construct_secs,
-                run(&comm, &h, o, &ls, &cfg, &mut Rng::new(1)).ls_secs,
-            ),
-            None => (f64::NAN, f64::NAN),
+        let mm_onl = run_one(&comm, &h, "mm", OracleMode::Implicit, 1);
+        let ls_onl = run_one(&comm, &h, "mm+Nc1", OracleMode::Implicit, 1);
+        let td_res = run_one(&comm, &h, "topdown", OracleMode::Implicit, 1);
+        let (mm_expl_t, ls_expl_t) = if fits {
+            (
+                run_one(&comm, &h, "mm", OracleMode::Explicit, 1).construct_secs,
+                run_one(&comm, &h, "mm+Nc1", OracleMode::Explicit, 1).ls_secs,
+            )
+        } else {
+            (f64::NAN, f64::NAN)
         };
 
         let slowdown = mm_onl.construct_secs / mm_expl_t;

@@ -12,9 +12,10 @@
 //! panels. Default scale: n ≤ 2048 (single-core container); paper scale
 //! via `QAPMAP_BENCH_FULL=1` (`make bench-full`).
 
+use qapmap::api::{MapJobBuilder, MapSession};
 use qapmap::bench::{full_mode, instance_suite, write_csv, Table, FAMILIES};
-use qapmap::mapping::algorithms::{run, AlgorithmSpec, GainMode};
-use qapmap::mapping::{DistanceOracle, Hierarchy};
+use qapmap::mapping::algorithms::{AlgorithmSpec, GainMode};
+use qapmap::mapping::Hierarchy;
 use qapmap::partition::PartitionConfig;
 use qapmap::util::stats::geometric_mean;
 use qapmap::util::Rng;
@@ -33,7 +34,6 @@ fn main() {
         let k = 1u64 << i;
         let n = 64 * k as usize;
         let h = Hierarchy::new(vec![4, 16, k], vec![1, 10, 100]).unwrap();
-        let oracle = DistanceOracle::implicit(h.clone());
         let mut rng = Rng::new(42 + i as u64);
         let suite = instance_suite(FAMILIES, n, 32, &mut rng);
 
@@ -42,12 +42,24 @@ fn main() {
         let mut fast_times = Vec::new();
         let mut speedups = Vec::new();
         for inst in &suite {
+            // both engines run from the same seed, so the search trajectory
+            // is identical and only the gain computation differs
             let mut spec = AlgorithmSpec::parse("mm+Np").unwrap();
-            let mut r1 = Rng::new(7);
-            let fast = run(&inst.comm, &h, &oracle, &spec, &PartitionConfig::fast(), &mut r1);
+            let job = MapJobBuilder::new(inst.comm.clone(), h.clone())
+                .algorithm(spec)
+                .partition_config(PartitionConfig::fast())
+                .seed(7)
+                .build()
+                .unwrap();
+            let fast = MapSession::new(job).run();
             spec.gain_mode = GainMode::SlowDense;
-            let mut r2 = Rng::new(7);
-            let slow = run(&inst.comm, &h, &oracle, &spec, &PartitionConfig::fast(), &mut r2);
+            let job = MapJobBuilder::new(inst.comm.clone(), h.clone())
+                .algorithm(spec)
+                .partition_config(PartitionConfig::fast())
+                .seed(7)
+                .build()
+                .unwrap();
+            let slow = MapSession::new(job).run();
             assert_eq!(
                 fast.objective, slow.objective,
                 "{}: identical trajectories must yield identical objectives",

@@ -7,14 +7,29 @@
 //! running-time ratios (geometric means). Figure 2 is the performance-plot
 //! view, emitted to `out/fig2_quality.csv` / `out/fig2_time.csv`.
 
+use qapmap::api::{MapJob, MapJobBuilder, MapReport, MapSession};
 use qapmap::bench::{full_mode, instance_suite, write_csv, Table, FAMILIES};
-use qapmap::mapping::algorithms::{run, AlgorithmSpec};
-use qapmap::mapping::{DistanceOracle, Hierarchy};
+use qapmap::graph::Graph;
+use qapmap::mapping::Hierarchy;
 use qapmap::partition::PartitionConfig;
 use qapmap::util::stats::{geometric_mean, performance_plot};
 use qapmap::util::Rng;
 
 const NEIGHBORHOODS: &[&str] = &["N2", "Np", "Nc1", "Nc2", "Nc10"];
+
+fn job(comm: &Graph, h: &Hierarchy, algo: &str, seed: u64) -> MapJob {
+    MapJobBuilder::new(comm.clone(), h.clone())
+        .algorithm_name(algo)
+        .unwrap()
+        .partition_config(PartitionConfig::fast())
+        .seed(seed)
+        .build()
+        .unwrap()
+}
+
+fn run_one(comm: &Graph, h: &Hierarchy, algo: &str, seed: u64) -> MapReport {
+    MapSession::new(job(comm, h, algo, seed)).run()
+}
 
 fn main() {
     let max_i = if full_mode() { 9 } else { 5 };
@@ -36,7 +51,6 @@ fn main() {
         let k = 1u64 << i;
         let n = 64 * k as usize;
         let h = Hierarchy::new(vec![4, 16, k], vec![1, 10, 100]).unwrap();
-        let oracle = DistanceOracle::implicit(h.clone());
         let mut rng = Rng::new(100 + i as u64);
         let suite = instance_suite(FAMILIES, n, 32, &mut rng);
 
@@ -44,15 +58,11 @@ fn main() {
         let mut tratio: Vec<Vec<f64>> = vec![Vec::new(); NEIGHBORHOODS.len()];
         for inst in &suite {
             // baseline: construction only
-            let base_spec = AlgorithmSpec::parse("mm").unwrap();
-            let mut r = Rng::new(7);
-            let base = run(&inst.comm, &h, &oracle, &base_spec, &PartitionConfig::fast(), &mut r);
+            let base = run_one(&inst.comm, &h, "mm", 7);
             let mut qrow = Vec::new();
             let mut trow = Vec::new();
             for (a, nb) in NEIGHBORHOODS.iter().enumerate() {
-                let spec = AlgorithmSpec::parse(&format!("mm+{nb}")).unwrap();
-                let mut r = Rng::new(7);
-                let res = run(&inst.comm, &h, &oracle, &spec, &PartitionConfig::fast(), &mut r);
+                let res = run_one(&inst.comm, &h, &format!("mm+{nb}"), 7);
                 let q = 100.0 * (1.0 - res.objective as f64 / base.objective.max(1) as f64);
                 let t = res.ls_secs / base.construct_secs.max(1e-9);
                 impr[a].push((q).max(0.01)); // geometric mean needs positives

@@ -1,20 +1,21 @@
 //! End-to-end driver: the rank-reordering **service** under a real batched
-//! workload, proving all layers compose (recorded in EXPERIMENTS.md §E2E).
+//! workload, proving all layers compose.
 //!
 //! * Layer 1/2: the AOT Pallas/JAX artifacts score candidate mappings and
 //!   verify final objectives (loaded through PJRT, Python not running).
 //! * Layer 3: the coordinator serves concurrent mapping jobs over TCP with
-//!   a bounded queue and a worker pool.
+//!   a bounded queue and a worker pool; each worker executes jobs through
+//!   an `api::MapSession`.
 //!
 //! Workload: a mix of mapping jobs (different instance families, sizes,
-//! algorithms, repetition counts) submitted by concurrent clients, like an
-//! MPI launcher fleet would at job-start time. Reports per-job results and
-//! service latency/throughput.
+//! algorithms, repetition counts) built with `api::MapJobBuilder` and
+//! submitted by concurrent clients, like an MPI launcher fleet would at
+//! job-start time. Reports per-job results and service latency/throughput.
 //!
 //! Run: `cargo run --release --offline --example mapping_service`
 
-use qapmap::coordinator::{wire, Coordinator, MapRequest};
-use qapmap::mapping::algorithms::AlgorithmSpec;
+use qapmap::api::{MapJobBuilder, VerifyPolicy};
+use qapmap::coordinator::{wire, Coordinator};
 use qapmap::mapping::Hierarchy;
 use qapmap::model::build_instance;
 use qapmap::runtime::RuntimeHandle;
@@ -48,7 +49,7 @@ fn main() {
     println!("[service] listening on {addr}\n");
 
     // --- workload ----------------------------------------------------------
-    // jobs: (family, app size exp, blocks, S, D, algorithm, reps, verify)
+    // jobs: (family, app size exp, blocks, S, D, algorithm, reps)
     let job_specs: Vec<(&str, usize, usize, &str, &str, &str, u32)> = vec![
         ("rgg", 12, 64, "4:16", "1:10", "topdown+Nc10", 4),
         ("del", 12, 128, "4:16:2", "1:10:100", "topdown+Nc10", 4),
@@ -69,15 +70,20 @@ fn main() {
         };
         let app = qapmap::gen::by_name(&name, &mut rng).unwrap();
         let comm = build_instance(&app, *blocks, &mut rng);
-        requests.push(MapRequest {
-            id: i as u64,
-            comm,
-            hierarchy: Hierarchy::parse(s, d).unwrap(),
-            algorithm: AlgorithmSpec::parse(algo).unwrap(),
-            repetitions: *reps,
-            seed: 1000 + i as u64,
-            verify: *blocks <= 256, // artifacts go up to n=256
-        });
+        let job = MapJobBuilder::new(comm, Hierarchy::parse(s, d).unwrap())
+            .algorithm_name(algo)
+            .unwrap()
+            .repetitions(*reps)
+            .seed(1000 + i as u64)
+            .verify(if *blocks <= 256 {
+                // artifacts go up to n=256
+                VerifyPolicy::IfAvailable
+            } else {
+                VerifyPolicy::Skip
+            })
+            .build()
+            .unwrap();
+        requests.push(job.to_request(i as u64));
     }
 
     // --- concurrent clients over TCP ---------------------------------------
@@ -96,8 +102,8 @@ fn main() {
 
     println!("[driver] jobs submitted by {} concurrent clients\n", handles.len());
     println!(
-        "{:>4} {:>18} {:>6} {:>12} {:>12} {:>8} {:>9} {:>9}",
-        "id", "algorithm", "n", "J initial", "J final", "impr%", "time[s]", "verified"
+        "{:>4} {:>18} {:>6} {:>5} {:>12} {:>12} {:>8} {:>9} {:>9}",
+        "id", "algorithm", "n", "reps", "J initial", "J final", "impr%", "time[s]", "verified"
     );
     let mut ok = 0usize;
     for h in handles {
@@ -107,10 +113,11 @@ fn main() {
             None => {
                 ok += 1;
                 println!(
-                    "{:>4} {:>18} {:>6} {:>12} {:>12} {:>8.1} {:>9.3} {:>9}",
+                    "{:>4} {:>18} {:>6} {:>5} {:>12} {:>12} {:>8.1} {:>9.3} {:>9}",
                     resp.id,
                     spec,
                     n,
+                    resp.reps.len(),
                     resp.objective_initial,
                     resp.objective,
                     100.0 * (1.0 - resp.objective as f64 / resp.objective_initial.max(1) as f64),

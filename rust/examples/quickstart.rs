@@ -2,17 +2,18 @@
 //!
 //! 1. Generate an application graph (random geometric, DIMACS-style).
 //! 2. Partition it into 256 blocks and build the communication graph.
-//! 3. Map the 256 processes onto a 4:16:4 machine with several algorithms.
+//! 3. Map the 256 processes onto a 4:16:4 machine with several algorithms,
+//!    each configured through the `api::MapJobBuilder` front door.
 //! 4. Compare objectives and running times.
 //!
 //! Run: `cargo run --release --offline --example quickstart`
 
+use qapmap::api::{MapJobBuilder, MapSession};
 use qapmap::bench::Table;
-use qapmap::mapping::algorithms::{run, AlgorithmSpec};
-use qapmap::mapping::{DistanceOracle, Hierarchy};
+use qapmap::mapping::Hierarchy;
 use qapmap::model::build_instance;
-use qapmap::partition::PartitionConfig;
-use qapmap::util::{timer::fmt_secs, Rng};
+use qapmap::util::timer::fmt_secs;
+use qapmap::util::Rng;
 
 fn main() {
     let mut rng = Rng::new(1);
@@ -28,15 +29,18 @@ fn main() {
     // 3. machine: 4 cores/processor, 16 processors/node, 4 nodes
     //    distances: 1 within processor, 10 within node, 100 across
     let h = Hierarchy::parse("4:16:4", "1:10:100").unwrap();
-    let oracle = DistanceOracle::implicit(h.clone());
-    let cfg = PartitionConfig::perfectly_balanced();
 
-    // 4. run the algorithm zoo
+    // 4. run the algorithm zoo — one frozen job per algorithm
     let table = Table::new(&["algorithm", "J(C,D,Pi)", "vs random", "time"], &[16, 12, 10, 12]);
     let mut j_random = 0u64;
     for name in ["random", "identity", "mm", "gac", "rcb", "bottomup", "topdown", "topdown+Nc10"] {
-        let spec = AlgorithmSpec::parse(name).unwrap();
-        let r = run(&comm, &h, &oracle, &spec, &cfg, &mut rng);
+        let job = MapJobBuilder::new(comm.clone(), h.clone())
+            .algorithm_name(name)
+            .unwrap()
+            .seed(1)
+            .build()
+            .unwrap();
+        let r = MapSession::new(job).run();
         if name == "random" {
             j_random = r.objective;
         }

@@ -1,6 +1,7 @@
 //! The paper's §4.1 *Scalability* experiment as a runnable example: scale
 //! the mapping problem towards `n = 2^19` processes and compare the
-//! explicit `O(n²)` distance matrix against online (implicit) distances.
+//! explicit `O(n²)` distance matrix against online (implicit) distances —
+//! selected per job via `api::OracleMode`.
 //!
 //! Paper findings to reproduce in shape:
 //! * the explicit matrix becomes infeasible as n grows (O(n²) memory —
@@ -13,11 +14,22 @@
 //!
 //! Run: `cargo run --release --offline --example scaling [-- --max-exp 15]`
 
-use qapmap::mapping::algorithms::{run, AlgorithmSpec};
-use qapmap::mapping::{DistanceOracle, Hierarchy};
+use qapmap::api::{MapJobBuilder, MapReport, MapSession, OracleMode};
+use qapmap::graph::Graph;
+use qapmap::mapping::Hierarchy;
 use qapmap::model::build_instance;
-use qapmap::partition::PartitionConfig;
 use qapmap::util::{Args, Rng};
+
+fn run_one(comm: &Graph, h: &Hierarchy, algo: &str, mode: OracleMode) -> MapReport {
+    let job = MapJobBuilder::new(comm.clone(), h.clone())
+        .algorithm_name(algo)
+        .unwrap()
+        .oracle_mode(mode)
+        .seed(3)
+        .build()
+        .unwrap();
+    MapSession::new(job).run()
+}
 
 fn main() {
     let args = Args::parse();
@@ -36,32 +48,22 @@ fn main() {
         let h = Hierarchy::new(vec![4, 16, (n / 64) as u64], vec![1, 10, 100]).unwrap();
         let app = qapmap::gen::random_geometric_graph(n * 8, &mut rng);
         let comm = build_instance(&app, n, &mut rng);
-        let cfg = PartitionConfig::perfectly_balanced();
-
-        let implicit = DistanceOracle::implicit(h.clone());
         let matrix_bytes = n * n * std::mem::size_of::<u64>();
 
         // Müller-Merbach with the explicit matrix (the traditional layout)
         let mm_explicit = if matrix_bytes <= explicit_budget_bytes {
-            let explicit = DistanceOracle::explicit(&h);
-            let spec = AlgorithmSpec::parse("mm").unwrap();
-            let r = run(&comm, &h, &explicit, &spec, &cfg, &mut rng);
+            let r = run_one(&comm, &h, "mm", OracleMode::Explicit);
             format!("{:.2}s", r.construct_secs)
         } else {
             "OOM-guard".to_string()
         };
 
         // Müller-Merbach with online distances
-        let spec = AlgorithmSpec::parse("mm").unwrap();
-        let r_mm = run(&comm, &h, &implicit, &spec, &cfg, &mut rng);
-
+        let r_mm = run_one(&comm, &h, "mm", OracleMode::Implicit);
         // Top-Down (never touches the distance matrix)
-        let spec = AlgorithmSpec::parse("topdown").unwrap();
-        let r_td = run(&comm, &h, &implicit, &spec, &cfg, &mut rng);
-
+        let r_td = run_one(&comm, &h, "topdown", OracleMode::Implicit);
         // Top-Down + N_C^1 local search with online distances
-        let spec = AlgorithmSpec::parse("topdown+Nc1").unwrap();
-        let r_tdls = run(&comm, &h, &implicit, &spec, &cfg, &mut rng);
+        let r_tdls = run_one(&comm, &h, "topdown+Nc1", OracleMode::Implicit);
 
         println!(
             "{:>7} {:>9.1} {:>10} {:>9.2}s {:>9.2}s {:>9.2}s {:>12}",

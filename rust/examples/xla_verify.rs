@@ -1,15 +1,15 @@
 //! Cross-layer verification demo: the sparse exact-integer objective (L3
 //! Rust) against the dense f32 objective computed by the AOT Pallas/JAX
 //! artifact through PJRT (L1/L2) — for every construction algorithm and a
-//! local-search trajectory.
+//! local-search trajectory, with the cross-check driven by the session's
+//! `VerifyPolicy::Required`.
 //!
 //! Run: `cargo run --release --offline --example xla_verify`
 //! (requires `make artifacts`)
 
-use qapmap::mapping::algorithms::{run, AlgorithmSpec};
-use qapmap::mapping::{objective, DistanceOracle, Hierarchy};
+use qapmap::api::{MapJobBuilder, MapSession, VerifyPolicy};
+use qapmap::mapping::Hierarchy;
 use qapmap::model::build_instance;
-use qapmap::partition::PartitionConfig;
 use qapmap::runtime::RuntimeHandle;
 use qapmap::util::Rng;
 
@@ -25,25 +25,33 @@ fn main() {
     let app = qapmap::gen::delaunay_graph(1 << 13, &mut rng);
     let comm = build_instance(&app, 256, &mut rng);
     let h = Hierarchy::parse("4:16:4", "1:10:100").unwrap();
-    let oracle = DistanceOracle::implicit(h.clone());
-    let cfg = PartitionConfig::perfectly_balanced();
 
-    println!("instance: del13 -> 256 blocks (m/n = {:.1}); machine 4:16:4 / 1:10:100\n", comm.density());
+    println!(
+        "instance: del13 -> 256 blocks (m/n = {:.1}); machine 4:16:4 / 1:10:100\n",
+        comm.density()
+    );
     println!("{:>16} {:>14} {:>16} {:>10}", "algorithm", "sparse exact", "dense XLA f32", "rel err");
     let mut worst: f64 = 0.0;
-    for name in ["identity", "random", "mm", "gac", "rcb", "bottomup", "topdown", "topdown+Nc10"] {
-        let spec = AlgorithmSpec::parse(name).unwrap();
-        let r = run(&comm, &h, &oracle, &spec, &cfg, &mut rng);
-        let exact = objective(&comm, &oracle, &r.mapping);
-        assert_eq!(exact, r.objective, "engine bookkeeping must match recompute");
-        let xla = rt
-            .objective(&comm, &oracle, &r.mapping)
-            .expect("xla call failed")
-            .expect("n=256 fits the largest artifact");
+    for (i, name) in ["identity", "random", "mm", "gac", "rcb", "bottomup", "topdown", "topdown+Nc10"]
+        .iter()
+        .enumerate()
+    {
+        let job = MapJobBuilder::new(comm.clone(), h.clone())
+            .algorithm_name(name)
+            .unwrap()
+            .seed(11 + i as u64)
+            .verify(VerifyPolicy::Required)
+            .build()
+            .unwrap();
+        let r = MapSession::with_runtime(job, Some(rt.clone()))
+            .run_checked()
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let exact = r.objective;
+        let xla = r.xla_objective.expect("n=256 fits the largest artifact");
         let rel = ((xla as f64 - exact as f64) / exact.max(1) as f64).abs();
         worst = worst.max(rel);
         println!("{name:>16} {exact:>14} {xla:>16.1} {rel:>10.2e}");
-        assert!(rel < 1e-4, "{name}: relative error {rel} too large");
+        assert_eq!(r.verified, Some(true), "{name}: XLA cross-check disagreed (rel err {rel})");
     }
     println!("\nall objectives agree (worst relative error {worst:.2e}) — the three layers compose");
 }

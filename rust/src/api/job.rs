@@ -1,0 +1,410 @@
+//! Job configuration: the builder that validates and freezes everything a
+//! mapping run needs, and translation to/from the service wire types.
+
+use crate::coordinator::{MapRequest, MapResponse};
+use crate::graph::Graph;
+use crate::mapping::algorithms::{AlgorithmSpec, Neighborhood};
+use crate::mapping::Hierarchy;
+use crate::partition::PartitionConfig;
+
+use super::report::MapReport;
+
+/// How the session materializes the distance oracle (§3.4): query the
+/// hierarchy online (O(1) memory) or precompute the full `n×n` matrix
+/// (O(1) per query, the traditional layout that OOMs at scale).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OracleMode {
+    #[default]
+    Implicit,
+    Explicit,
+}
+
+/// Whether the winning mapping is cross-checked against the dense XLA
+/// objective (requires a runtime handle and an artifact that fits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum VerifyPolicy {
+    /// Never verify.
+    #[default]
+    Skip,
+    /// Verify when a runtime is attached and an artifact fits; otherwise the
+    /// report's `verified` stays `None`.
+    IfAvailable,
+    /// Verification must run: `MapSession::run_checked` returns an error
+    /// when it could not (no runtime, no artifact fits, runtime failure).
+    /// Plain `run` behaves like [`Self::IfAvailable`] and leaves the
+    /// enforcement to the caller via `MapReport::{verified, verify_error}`.
+    Required,
+}
+
+/// Builder for a [`MapJob`]: collects configuration, applies the library
+/// defaults (the paper's best trade-off `topdown+Nc10`, perfectly balanced
+/// partitions, one repetition), and validates on [`Self::build`].
+#[derive(Debug, Clone)]
+pub struct MapJobBuilder {
+    comm: Graph,
+    hierarchy: Hierarchy,
+    spec: AlgorithmSpec,
+    oracle_mode: OracleMode,
+    repetitions: u32,
+    seed: u64,
+    part_cfg: PartitionConfig,
+    verify: VerifyPolicy,
+}
+
+impl MapJobBuilder {
+    /// Start a job for mapping the processes of `comm` onto the PEs of
+    /// `hierarchy`.
+    pub fn new(comm: Graph, hierarchy: Hierarchy) -> MapJobBuilder {
+        MapJobBuilder {
+            comm,
+            hierarchy,
+            spec: AlgorithmSpec::parse("topdown+Nc10").expect("default spec parses"),
+            oracle_mode: OracleMode::Implicit,
+            repetitions: 1,
+            seed: 1,
+            part_cfg: PartitionConfig::perfectly_balanced(),
+            verify: VerifyPolicy::Skip,
+        }
+    }
+
+    /// Algorithm to run (see [`AlgorithmSpec::parse`] for names).
+    pub fn algorithm(mut self, spec: AlgorithmSpec) -> Self {
+        self.spec = spec;
+        self
+    }
+
+    /// Parse and set the algorithm by name (e.g. `"topdown+Nc10"`).
+    pub fn algorithm_name(self, name: &str) -> Result<Self, String> {
+        Ok(self.algorithm(AlgorithmSpec::parse(name)?))
+    }
+
+    /// Oracle representation (implicit hierarchy queries vs explicit matrix).
+    pub fn oracle_mode(mut self, mode: OracleMode) -> Self {
+        self.oracle_mode = mode;
+        self
+    }
+
+    /// Number of seeds to try; the best-scoring mapping wins. Must be ≥ 1.
+    pub fn repetitions(mut self, reps: u32) -> Self {
+        self.repetitions = reps;
+        self
+    }
+
+    /// Base RNG seed; repetition `r` runs with seed `seed + r`.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Partitioner configuration used inside Top-Down / Bottom-Up / RCB.
+    pub fn partition_config(mut self, cfg: PartitionConfig) -> Self {
+        self.part_cfg = cfg;
+        self
+    }
+
+    /// XLA cross-check policy for the winning mapping.
+    pub fn verify(mut self, policy: VerifyPolicy) -> Self {
+        self.verify = policy;
+        self
+    }
+
+    /// Validate and freeze the configuration.
+    pub fn build(self) -> Result<MapJob, String> {
+        if self.comm.n() != self.hierarchy.n_pes() {
+            return Err(format!(
+                "processes ({}) != PEs ({})",
+                self.comm.n(),
+                self.hierarchy.n_pes()
+            ));
+        }
+        if self.repetitions == 0 {
+            return Err("repetitions must be >= 1".into());
+        }
+        Ok(MapJob {
+            comm: self.comm,
+            hierarchy: self.hierarchy,
+            spec: self.spec,
+            oracle_mode: self.oracle_mode,
+            repetitions: self.repetitions,
+            seed: self.seed,
+            part_cfg: self.part_cfg,
+            verify: self.verify,
+        })
+    }
+}
+
+/// A validated, frozen mapping job. Construct through [`MapJobBuilder`] (or
+/// [`MapJob::from_request`] at the service boundary), then hand it to a
+/// [`super::MapSession`] to execute.
+#[derive(Debug, Clone)]
+pub struct MapJob {
+    pub(crate) comm: Graph,
+    pub(crate) hierarchy: Hierarchy,
+    pub(crate) spec: AlgorithmSpec,
+    pub(crate) oracle_mode: OracleMode,
+    pub(crate) repetitions: u32,
+    pub(crate) seed: u64,
+    pub(crate) part_cfg: PartitionConfig,
+    pub(crate) verify: VerifyPolicy,
+}
+
+impl MapJob {
+    /// The communication graph (`n` processes).
+    pub fn comm(&self) -> &Graph {
+        &self.comm
+    }
+
+    /// The machine hierarchy (`n` PEs).
+    pub fn hierarchy(&self) -> &Hierarchy {
+        &self.hierarchy
+    }
+
+    /// The frozen algorithm specification.
+    pub fn algorithm(&self) -> &AlgorithmSpec {
+        &self.spec
+    }
+
+    /// Oracle representation.
+    pub fn oracle_mode(&self) -> OracleMode {
+        self.oracle_mode
+    }
+
+    /// Requested repetitions (before deterministic short-circuiting).
+    pub fn repetitions(&self) -> u32 {
+        self.repetitions
+    }
+
+    /// Base RNG seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Partitioner configuration.
+    pub fn partition_config(&self) -> &PartitionConfig {
+        &self.part_cfg
+    }
+
+    /// Verification policy.
+    pub fn verify_policy(&self) -> VerifyPolicy {
+        self.verify
+    }
+
+    /// True iff the whole pipeline is deterministic: repeated runs cannot
+    /// differ, so repetitions are pointless. Identity, Müller-Merbach and
+    /// GreedyAllC never consult the RNG; every local search does (except
+    /// "none").
+    pub fn is_deterministic(&self) -> bool {
+        super::session::construction_is_deterministic(self.spec.construction)
+            && matches!(self.spec.neighborhood, Neighborhood::None)
+    }
+
+    /// Repetitions actually executed: deterministic jobs short-circuit to 1
+    /// (previously duplicated ad hoc in the coordinator).
+    pub fn effective_repetitions(&self) -> u32 {
+        if self.is_deterministic() {
+            1
+        } else {
+            self.repetitions
+        }
+    }
+
+    /// Translate a service request into a job (the coordinator's
+    /// request→job boundary). Error messages match `MapRequest::validate`.
+    pub fn from_request(req: &MapRequest) -> Result<MapJob, String> {
+        req.validate()?;
+        MapJobBuilder::new(req.comm.clone(), req.hierarchy.clone())
+            .algorithm(req.algorithm)
+            .repetitions(req.repetitions)
+            .seed(req.seed)
+            .verify(if req.verify { VerifyPolicy::IfAvailable } else { VerifyPolicy::Skip })
+            .build()
+    }
+
+    /// Build the wire request a client sends for this job.
+    ///
+    /// Lossy by design: `oracle_mode` and `partition_config` are
+    /// session-local execution knobs, not part of the protocol — the server
+    /// always runs with its own defaults (implicit oracle, perfectly
+    /// balanced partitions), and `VerifyPolicy::Required` degrades to the
+    /// wire's plain `verify` flag. A job with non-default session-local
+    /// settings can therefore produce different (still valid) mappings
+    /// remotely than locally.
+    pub fn to_request(&self, id: u64) -> MapRequest {
+        MapRequest {
+            id,
+            comm: self.comm.clone(),
+            hierarchy: self.hierarchy.clone(),
+            algorithm: self.spec,
+            repetitions: self.repetitions,
+            seed: self.seed,
+            verify: !matches!(self.verify, VerifyPolicy::Skip),
+        }
+    }
+}
+
+impl MapResponse {
+    /// Assemble the service answer from a session report (the winning
+    /// mapping is moved, per-repetition stats are carried verbatim).
+    pub fn from_report(id: u64, report: MapReport, total_secs: f64) -> MapResponse {
+        let stats = report
+            .reps
+            .get(report.best_rep)
+            .map(|r| r.search_stats())
+            .unwrap_or_default();
+        MapResponse {
+            id,
+            sigma: report.mapping.sigma,
+            objective: report.objective,
+            objective_initial: report.objective_initial,
+            xla_objective: report.xla_objective,
+            verified: report.verified,
+            construct_secs: report.construct_secs,
+            ls_secs: report.ls_secs,
+            total_secs,
+            stats,
+            best_rep: report.best_rep,
+            reps: report.reps,
+            error: None,
+        }
+    }
+}
+
+/// The default machine shape used when the CLI gets no `--S`: 4 cores per
+/// processor, 16 processors per node, `n/64` nodes (`D = 1:10:100`). When
+/// `n` is not divisible by 64 this falls back to a flat single-level
+/// hierarchy `S = n`, `D = 1` with a warning instead of bailing — every
+/// mapping is then cost-equal, but the pipeline still runs end-to-end.
+/// Shared by the CLI and the service examples.
+pub fn hierarchy_for(n: usize, s: &str, d: &str) -> Result<Hierarchy, String> {
+    let h = if s.is_empty() {
+        if n >= 64 && n % 64 == 0 {
+            Hierarchy::new(vec![4, 16, (n / 64) as u64], vec![1, 10, 100])?
+        } else {
+            if n == 0 {
+                return Err("instance has no processes".into());
+            }
+            eprintln!(
+                "warning: --S not given and n={n} is not divisible by 64; \
+                 falling back to the flat hierarchy S={n}, D=1 (all PEs equidistant)"
+            );
+            Hierarchy::new(vec![n as u64], vec![1])?
+        }
+    } else {
+        Hierarchy::parse(s, if d.is_empty() { "1:10:100" } else { d })?
+    };
+    if h.n_pes() != n {
+        return Err(format!(
+            "hierarchy has {} PEs but the instance has {n} processes",
+            h.n_pes()
+        ));
+    }
+    Ok(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random_geometric_graph;
+    use crate::util::Rng;
+
+    fn sample(n: usize) -> (Graph, Hierarchy) {
+        let mut rng = Rng::new(1);
+        let g = random_geometric_graph(n, &mut rng);
+        let h = Hierarchy::new(vec![4, 16, (n / 64) as u64], vec![1, 10, 100]).unwrap();
+        (g, h)
+    }
+
+    #[test]
+    fn builder_validates_sizes_and_reps() {
+        let (g, _) = sample(128);
+        let wrong_h = Hierarchy::new(vec![4, 8], vec![1, 10]).unwrap(); // 32 PEs
+        let err = MapJobBuilder::new(g.clone(), wrong_h).build().unwrap_err();
+        assert!(err.contains("PEs"), "{err}");
+
+        let (_, h) = sample(128);
+        let err = MapJobBuilder::new(g.clone(), h.clone()).repetitions(0).build().unwrap_err();
+        assert!(err.contains("repetitions"), "{err}");
+
+        let job = MapJobBuilder::new(g, h).repetitions(3).seed(9).build().unwrap();
+        assert_eq!(job.repetitions(), 3);
+        assert_eq!(job.seed(), 9);
+        assert_eq!(job.algorithm().name(), "topdown+Nc10");
+    }
+
+    #[test]
+    fn deterministic_short_circuit_rules() {
+        let (g, h) = sample(128);
+        let det = MapJobBuilder::new(g.clone(), h.clone())
+            .algorithm_name("mm")
+            .unwrap()
+            .repetitions(8)
+            .build()
+            .unwrap();
+        assert!(det.is_deterministic());
+        assert_eq!(det.effective_repetitions(), 1);
+
+        // randomized construction keeps its repetitions
+        let rand = MapJobBuilder::new(g.clone(), h.clone())
+            .algorithm_name("topdown")
+            .unwrap()
+            .repetitions(8)
+            .build()
+            .unwrap();
+        assert!(!rand.is_deterministic());
+        assert_eq!(rand.effective_repetitions(), 8);
+
+        // deterministic construction + randomized local search too
+        let ls = MapJobBuilder::new(g, h)
+            .algorithm_name("mm+Nc1")
+            .unwrap()
+            .repetitions(8)
+            .build()
+            .unwrap();
+        assert!(!ls.is_deterministic());
+        assert_eq!(ls.effective_repetitions(), 8);
+    }
+
+    #[test]
+    fn request_job_roundtrip() {
+        let (g, h) = sample(128);
+        let job = MapJobBuilder::new(g, h)
+            .algorithm_name("topdown+Nc2")
+            .unwrap()
+            .repetitions(4)
+            .seed(77)
+            .verify(VerifyPolicy::IfAvailable)
+            .build()
+            .unwrap();
+        let req = job.to_request(5);
+        assert_eq!(req.id, 5);
+        assert!(req.verify);
+        let back = MapJob::from_request(&req).unwrap();
+        assert_eq!(back.algorithm().name(), "topdown+Nc2");
+        assert_eq!(back.repetitions(), 4);
+        assert_eq!(back.seed(), 77);
+        assert_eq!(back.comm(), job.comm());
+        assert_eq!(back.hierarchy(), job.hierarchy());
+    }
+
+    #[test]
+    fn hierarchy_for_divisible_and_fallback() {
+        let h = hierarchy_for(128, "", "").unwrap();
+        assert_eq!(h.n_pes(), 128);
+        assert_eq!(h.levels(), 3);
+
+        // non-divisible: flat single-level fallback instead of an error
+        let h = hierarchy_for(100, "", "").unwrap();
+        assert_eq!(h.n_pes(), 100);
+        assert_eq!(h.levels(), 1);
+        assert_eq!(h.distance(0, 99), 1);
+
+        // explicit S wins; three-level D defaults when omitted
+        let h = hierarchy_for(12, "3:4", "1:10").unwrap();
+        assert_eq!(h.n_pes(), 12);
+        let h = hierarchy_for(128, "4:16:2", "").unwrap();
+        assert_eq!(h.d, vec![1, 10, 100]);
+
+        assert!(hierarchy_for(64, "4:4", "1:10").is_err()); // 16 != 64
+        assert!(hierarchy_for(0, "", "").is_err());
+    }
+}

@@ -1,0 +1,50 @@
+//! The crate's public front door: configure a mapping job once, run it many
+//! times, reuse every expensive intermediate.
+//!
+//! The paper's pipeline (construct → fast `O(d_u+d_v)` swap local search →
+//! score, §3) used to be re-orchestrated by hand at five call sites — the
+//! CLI, the coordinator workers, the benches, the tests and the examples.
+//! This module centers that orchestration on three types:
+//!
+//! * [`MapJobBuilder`] — validates and freezes configuration: graph,
+//!   [`crate::mapping::Hierarchy`], algorithm, oracle mode (§3.4),
+//!   repetitions, seed, partition config, verification policy.
+//! * [`MapJob`] — the frozen job; translates to/from the service wire types
+//!   ([`MapJob::from_request`], [`MapJob::to_request`]).
+//! * [`MapSession`] — owns all reusable state: the cached
+//!   [`crate::mapping::DistanceOracle`], the [`crate::mapping::SwapEngine`]
+//!   `Γ` buffer, `N_C^d` pair sets and triangle sets, the dense baseline
+//!   engine's matrices, and deterministic-construction results. Repetitions
+//!   therefore stop reallocating (and stop recomputing) from scratch, the
+//!   deterministic short-circuit lives in exactly one place, and best-of-N
+//!   selection optionally scores through one batched XLA call.
+//!
+//! Results come back as a structured [`MapReport`] (per-repetition
+//! [`RepStat`]s, timings, verification verdict).
+//!
+//! ```no_run
+//! use qapmap::api::{MapJobBuilder, MapSession};
+//! use qapmap::mapping::Hierarchy;
+//!
+//! # let comm = qapmap::graph::from_edges(128, &[(0, 1, 3)]);
+//! let h = Hierarchy::parse("4:16:2", "1:10:100").unwrap();
+//! let job = MapJobBuilder::new(comm, h)
+//!     .algorithm_name("topdown+Nc10").unwrap()
+//!     .repetitions(8)
+//!     .seed(42)
+//!     .build()
+//!     .unwrap();
+//! let report = MapSession::new(job).run();
+//! println!("J = {} ({} reps)", report.objective, report.reps.len());
+//! ```
+//!
+//! The legacy free function `mapping::algorithms::run` survives as a
+//! `#[deprecated]` single-repetition shim over this module.
+
+pub mod job;
+pub mod report;
+pub mod session;
+
+pub use job::{hierarchy_for, MapJob, MapJobBuilder, OracleMode, VerifyPolicy};
+pub use report::{MapReport, RepStat};
+pub use session::{MapSession, VERIFY_RTOL};

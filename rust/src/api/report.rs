@@ -1,0 +1,92 @@
+//! Structured results: per-repetition statistics and the session report.
+
+use crate::mapping::local_search::SearchStats;
+use crate::mapping::Mapping;
+
+/// One repetition's outcome, flattened to wire-friendly scalars (these
+/// travel over the service protocol verbatim).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RepStat {
+    /// The RNG seed this repetition ran with (`job seed + rep index`).
+    pub seed: u64,
+    /// Objective after construction, before local search.
+    pub objective_initial: u64,
+    /// Final objective.
+    pub objective: u64,
+    /// Construction wall time (seconds). Repetitions that reuse a cached
+    /// deterministic construction report the shared one-time cost, so the
+    /// values stay comparable across repetitions (the sum can therefore
+    /// exceed the session's wall time — use `MapReport::total_secs` for
+    /// end-to-end accounting).
+    pub construct_secs: f64,
+    /// Local-search wall time (seconds).
+    pub ls_secs: f64,
+    /// Pair/rotation gain evaluations.
+    pub evaluated: u64,
+    /// Moves applied.
+    pub improved: u64,
+    /// Full sweeps/rounds executed.
+    pub rounds: u64,
+}
+
+impl RepStat {
+    /// Re-assemble the local-search statistics struct.
+    pub fn search_stats(&self) -> SearchStats {
+        SearchStats {
+            evaluated: self.evaluated,
+            improved: self.improved,
+            rounds: self.rounds,
+        }
+    }
+}
+
+/// The structured result of one [`super::MapSession`] run: the winning
+/// mapping, every repetition's statistics, and the verification verdict.
+/// Replaces the loosely-assembled field soup that each call site used to
+/// build by hand around `algorithms::run`.
+#[derive(Debug, Clone)]
+pub struct MapReport {
+    /// Winning assignment (process → PE).
+    pub mapping: Mapping,
+    /// Canonical algorithm name (`AlgorithmSpec::name`).
+    pub algorithm: String,
+    /// Index into [`Self::reps`] of the winning repetition.
+    pub best_rep: usize,
+    /// Per-repetition statistics, in execution order.
+    pub reps: Vec<RepStat>,
+    /// Objective of the winning mapping (exact integer arithmetic).
+    pub objective: u64,
+    /// Winning repetition's objective after construction.
+    pub objective_initial: u64,
+    /// Winning repetition's construction time (seconds).
+    pub construct_secs: f64,
+    /// Winning repetition's local-search time (seconds).
+    pub ls_secs: f64,
+    /// Whole-session wall time: all repetitions + scoring + verification.
+    pub total_secs: f64,
+    /// Dense XLA objective of the winner, if verification ran.
+    pub xla_objective: Option<f32>,
+    /// `Some(true)` iff verification ran and agreed within f32 tolerance;
+    /// `None` means it did not run (policy `Skip`, no runtime, no artifact
+    /// fits, or a runtime error — see [`Self::verify_error`]).
+    pub verified: Option<bool>,
+    /// Why verification errored, when it was requested and the runtime call
+    /// itself failed (distinct from "no artifact fits", which is a clean
+    /// skip with `verify_error: None`).
+    pub verify_error: Option<String>,
+    /// True when a deterministic job collapsed `repetitions > 1` into one.
+    pub short_circuited: bool,
+}
+
+impl MapReport {
+    /// Relative improvement of local search over the initial construction,
+    /// in percent (the number every harness used to recompute by hand).
+    pub fn improvement_pct(&self) -> f64 {
+        100.0 * (1.0 - self.objective as f64 / self.objective_initial.max(1) as f64)
+    }
+
+    /// Winning repetition's statistics.
+    pub fn best(&self) -> &RepStat {
+        &self.reps[self.best_rep]
+    }
+}

@@ -1,5 +1,11 @@
 //! Job types exchanged between clients and the coordinator.
+//!
+//! These are the *wire* types. Execution happens through the [`crate::api`]
+//! layer: the service translates a [`MapRequest`] into an
+//! [`crate::api::MapJob`] (`MapJob::from_request`), runs it in a session,
+//! and answers with [`MapResponse::from_report`].
 
+use crate::api::RepStat;
 use crate::graph::Graph;
 use crate::mapping::algorithms::AlgorithmSpec;
 use crate::mapping::local_search::SearchStats;
@@ -61,7 +67,14 @@ pub struct MapResponse {
     pub ls_secs: f64,
     /// Total service time including queueing.
     pub total_secs: f64,
+    /// Winning repetition's local-search statistics.
     pub stats: SearchStats,
+    /// Index into [`Self::reps`] of the winning repetition (the winner may
+    /// not be the exact-integer argmin when batched XLA scoring picked it).
+    pub best_rep: usize,
+    /// Per-repetition statistics (`MapReport::reps`), in execution order.
+    /// Deterministic jobs short-circuit to a single entry.
+    pub reps: Vec<RepStat>,
     /// Error message if the job failed (other fields zeroed).
     pub error: Option<String>,
 }
@@ -80,6 +93,8 @@ impl MapResponse {
             ls_secs: 0.0,
             total_secs: 0.0,
             stats: SearchStats::default(),
+            best_rep: 0,
+            reps: Vec::new(),
             error: Some(error),
         }
     }

@@ -1,34 +1,36 @@
-//! The coordinator proper: bounded job queue, worker pool, batched XLA
-//! scoring/verification.
+//! The coordinator proper: bounded job queue and worker pool.
 //!
 //! Architecture (single process, std threads — tokio is unavailable
 //! offline, and the workload is CPU-bound, so blocking workers are the
 //! right shape anyway):
 //!
 //! ```text
-//!   submit() ──► bounded queue ──► worker 0..W ──► per-job pipeline:
+//!   submit() ──► bounded queue ──► worker 0..W ──► api::MapSession:
 //!                                        run `repetitions` seeds
 //!                                        batched XLA scoring (≤16/call)
 //!                                        pick best, verify, respond
 //! ```
+//!
+//! The per-job pipeline (repetition loop, scratch reuse, best-of-N, XLA
+//! verification) lives entirely in [`crate::api`]; [`process_job`] is just
+//! the request→job translation plus metrics.
 //!
 //! Backpressure: `submit` blocks when the queue is full (the launcher-side
 //! contract of a rank-reordering service); `try_submit` refuses instead.
 
 use super::job::{MapRequest, MapResponse};
 use super::metrics::{Metrics, MetricsSnapshot};
-use crate::mapping::algorithms::{run, Construction};
-use crate::mapping::{objective, DistanceOracle, Mapping};
-use crate::partition::PartitionConfig;
-use crate::runtime::{RuntimeHandle, BATCH};
-use crate::util::{Rng, Timer};
+use crate::api::{MapJob, MapSession};
+use crate::runtime::RuntimeHandle;
+use crate::util::Timer;
 use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-/// Relative tolerance for the f32 XLA cross-check.
-pub const VERIFY_RTOL: f32 = 1e-4;
+/// Relative tolerance for the f32 XLA cross-check (canonical definition in
+/// [`crate::api`]; re-exported here for backwards compatibility).
+pub use crate::api::VERIFY_RTOL;
 
 struct Queue {
     jobs: Mutex<VecDeque<(MapRequest, Sender<MapResponse>, Timer)>>,
@@ -144,109 +146,25 @@ fn worker_loop(queue: Arc<Queue>, runtime: Option<RuntimeHandle>, metrics: Arc<M
     }
 }
 
-/// Run one job end-to-end: `repetitions` seeds, batched scoring, verify.
+/// Run one job end-to-end: translate the request into an [`MapJob`], execute
+/// it in a fresh [`MapSession`] (which owns the repetition loop, scratch
+/// reuse, best-of-N selection and XLA verification), record metrics.
 fn process_job(
     req: &MapRequest,
     runtime: Option<&RuntimeHandle>,
     metrics: &Metrics,
     timer: &Timer,
 ) -> MapResponse {
-    if let Err(e) = req.validate() {
-        return MapResponse::failure(req.id, e);
-    }
-    let oracle = DistanceOracle::implicit(req.hierarchy.clone());
-    let part_cfg = PartitionConfig::perfectly_balanced();
-
-    // deterministic constructions never benefit from repetitions
-    let deterministic = matches!(
-        req.algorithm.construction,
-        Construction::Identity | Construction::MuellerMerbach | Construction::GreedyAllC
-    ) && matches!(
-        req.algorithm.neighborhood,
-        crate::mapping::algorithms::Neighborhood::None
-    );
-    let reps = if deterministic { 1 } else { req.repetitions.max(1) } as usize;
-
-    let mut results = Vec::with_capacity(reps);
-    for r in 0..reps {
-        let mut rng = Rng::new(req.seed.wrapping_add(r as u64));
-        results.push(run(&req.comm, &req.hierarchy, &oracle, &req.algorithm, &part_cfg, &mut rng));
-    }
-
-    // batched XLA scoring when possible (≤ BATCH per call); otherwise the
-    // exact integer objectives decide directly.
-    let best_idx = if results.len() > 1 {
-        if let Some(rt) = runtime {
-            score_with_runtime(rt, req, &oracle, &results)
-        } else {
-            argmin_exact(&results)
-        }
-    } else {
-        0
+    let job = match MapJob::from_request(req) {
+        Ok(job) => job,
+        Err(e) => return MapResponse::failure(req.id, e),
     };
-    let best = &results[best_idx];
-
-    let (xla_objective, verified) = if req.verify {
-        match runtime.and_then(|rt| rt.objective(&req.comm, &oracle, &best.mapping).transpose()) {
-            Some(Ok(xj)) => {
-                let exact = best.objective as f32;
-                let ok = (xj - exact).abs() <= VERIFY_RTOL * exact.max(1.0);
-                metrics.on_verification(ok);
-                (Some(xj), Some(ok))
-            }
-            Some(Err(_)) | None => (None, None),
-        }
-    } else {
-        (None, None)
-    };
-
-    debug_assert_eq!(best.objective, objective(&req.comm, &oracle, &best.mapping));
-    MapResponse {
-        id: req.id,
-        sigma: best.mapping.sigma.clone(),
-        objective: best.objective,
-        objective_initial: best.objective_initial,
-        xla_objective,
-        verified,
-        construct_secs: best.construct_secs,
-        ls_secs: best.ls_secs,
-        total_secs: timer.secs(),
-        stats: best.stats.clone(),
-        error: None,
+    let mut session = MapSession::with_runtime(job, runtime.cloned());
+    let report = session.run();
+    if let Some(ok) = report.verified {
+        metrics.on_verification(ok);
     }
-}
-
-fn argmin_exact(results: &[crate::mapping::algorithms::MapResult]) -> usize {
-    results
-        .iter()
-        .enumerate()
-        .min_by_key(|(_, r)| r.objective)
-        .map(|(i, _)| i)
-        .unwrap_or(0)
-}
-
-/// Score candidates through the batched XLA artifact (16 per call); fall
-/// back to the exact integers if the problem does not fit any artifact.
-fn score_with_runtime(
-    rt: &RuntimeHandle,
-    req: &MapRequest,
-    oracle: &DistanceOracle,
-    results: &[crate::mapping::algorithms::MapResult],
-) -> usize {
-    let mappings: Vec<Mapping> = results.iter().map(|r| r.mapping.clone()).collect();
-    let mut scores: Vec<f32> = Vec::with_capacity(mappings.len());
-    for chunk in mappings.chunks(BATCH) {
-        match rt.objective_batch(&req.comm, oracle, chunk) {
-            Ok(Some(mut s)) => scores.append(&mut s),
-            _ => return argmin_exact(results),
-        }
-    }
-    scores
-        .iter()
-        .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap_or(0)
+    MapResponse::from_report(req.id, report, timer.secs())
 }
 
 #[cfg(test)]
@@ -254,7 +172,8 @@ mod tests {
     use super::*;
     use crate::gen::random_geometric_graph;
     use crate::mapping::algorithms::AlgorithmSpec;
-    use crate::mapping::Hierarchy;
+    use crate::mapping::{Hierarchy, Mapping};
+    use crate::util::Rng;
 
     fn request(id: u64, algo: &str, reps: u32) -> MapRequest {
         let mut rng = Rng::new(id);
@@ -301,6 +220,19 @@ mod tests {
         let single = coord.submit_blocking(request(1, "random", 1));
         let multi = coord.submit_blocking(request(1, "random", 8));
         assert!(multi.objective <= single.objective);
+        // per-repetition stats surface in the response, best is the winner
+        assert_eq!(multi.reps.len(), 8);
+        assert_eq!(multi.reps.iter().map(|r| r.objective).min(), Some(multi.objective));
+        assert_eq!(single.reps.len(), 1);
+    }
+
+    #[test]
+    fn deterministic_jobs_short_circuit_repetitions() {
+        // "mm" is deterministic: 8 requested repetitions collapse to 1
+        let coord = Coordinator::start(1, 2, None);
+        let resp = coord.submit_blocking(request(3, "mm", 8));
+        assert!(resp.error.is_none());
+        assert_eq!(resp.reps.len(), 1);
     }
 
     #[test]

@@ -9,13 +9,20 @@
 //!        <u> <v> <w>          (m edge lines)
 //!        END
 //! S->C:  OK <id> <objective> <j_initial> <construct_secs> <ls_secs>
-//!           <xla_obj|-> <verified:0|1|->
+//!           <xla_obj|-> <verified:0|1|-> <best_rep> <nreps>
+//!        REP <seed> <j_initial> <j> <construct_secs> <ls_secs>
+//!            <evaluated> <improved> <rounds>     (nreps lines)
 //!        SIGMA <n space-separated PE ids>
 //!   or:  ERR <id> <message...>
 //! ```
+//!
+//! The per-repetition `REP` lines carry `api::RepStat` verbatim, so clients
+//! see every seed's objective/timing, not just the winner's. Error messages
+//! are newline-escaped (`\n` → `\\n`) so multi-line failures round-trip.
 
 use super::job::{MapRequest, MapResponse};
 use super::service::Coordinator;
+use crate::api::RepStat;
 use crate::graph::{Builder, NodeId};
 use crate::mapping::algorithms::AlgorithmSpec;
 use crate::mapping::Hierarchy;
@@ -91,15 +98,44 @@ pub fn read_request<R: BufRead>(r: &mut R) -> Result<MapRequest> {
     Ok(MapRequest { id, comm: b.build(), hierarchy, algorithm, repetitions, seed, verify })
 }
 
+/// Escape an error message for the single-line `ERR` frame (`\r` too —
+/// the reader strips trailing CR/LF from the frame itself).
+fn escape_msg(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n").replace('\r', "\\r")
+}
+
+/// Inverse of [`escape_msg`].
+fn unescape_msg(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut it = s.chars();
+    while let Some(c) = it.next() {
+        if c == '\\' {
+            match it.next() {
+                Some('n') => out.push('\n'),
+                Some('r') => out.push('\r'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
 /// Serialize a response.
 pub fn write_response<W: Write>(w: &mut W, resp: &MapResponse) -> Result<()> {
     if let Some(e) = &resp.error {
-        writeln!(w, "ERR {} {}", resp.id, e.replace('\n', " "))?;
+        writeln!(w, "ERR {} {}", resp.id, escape_msg(e))?;
         return Ok(());
     }
     writeln!(
         w,
-        "OK {} {} {} {:.6} {:.6} {} {}",
+        "OK {} {} {} {:.6} {:.6} {} {} {} {}",
         resp.id,
         resp.objective,
         resp.objective_initial,
@@ -107,7 +143,23 @@ pub fn write_response<W: Write>(w: &mut W, resp: &MapResponse) -> Result<()> {
         resp.ls_secs,
         resp.xla_objective.map(|x| x.to_string()).unwrap_or_else(|| "-".into()),
         resp.verified.map(|v| if v { "1" } else { "0" }.to_string()).unwrap_or_else(|| "-".into()),
+        resp.best_rep,
+        resp.reps.len(),
     )?;
+    for rep in &resp.reps {
+        writeln!(
+            w,
+            "REP {} {} {} {:.6} {:.6} {} {} {}",
+            rep.seed,
+            rep.objective_initial,
+            rep.objective,
+            rep.construct_secs,
+            rep.ls_secs,
+            rep.evaluated,
+            rep.improved,
+            rep.rounds,
+        )?;
+    }
     let sigma: Vec<String> = resp.sigma.iter().map(|x| x.to_string()).collect();
     writeln!(w, "SIGMA {}", sigma.join(" "))?;
     Ok(())
@@ -121,11 +173,42 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<MapResponse> {
     match toks.first() {
         Some(&"ERR") => {
             let id: u64 = toks.get(1).unwrap_or(&"0").parse()?;
-            Ok(MapResponse::failure(id, toks[2..].join(" ")))
+            // take the raw remainder (not the re-joined tokens) so escaped
+            // newlines and inner spacing survive the round-trip
+            let raw = line.trim_end_matches(&['\n', '\r'][..]);
+            let msg = raw.splitn(3, ' ').nth(2).unwrap_or("");
+            Ok(MapResponse::failure(id, unescape_msg(msg)))
         }
         Some(&"OK") => {
-            if toks.len() != 8 {
+            if toks.len() != 10 {
                 bail!("bad OK line: {line:?}");
+            }
+            let best_rep: usize = toks[8].parse()?;
+            let nreps: usize = toks[9].parse()?;
+            if nreps > 0 && best_rep >= nreps {
+                bail!("best_rep {best_rep} out of range ({nreps} reps)");
+            }
+            let mut reps = Vec::with_capacity(nreps.min(1024));
+            let mut rep_line = String::new();
+            for i in 0..nreps {
+                rep_line.clear();
+                if r.read_line(&mut rep_line)? == 0 {
+                    bail!("connection closed inside REP block ({i}/{nreps})");
+                }
+                let rt: Vec<&str> = rep_line.split_whitespace().collect();
+                if rt.len() != 9 || rt[0] != "REP" {
+                    bail!("bad REP line: {rep_line:?}");
+                }
+                reps.push(RepStat {
+                    seed: rt[1].parse()?,
+                    objective_initial: rt[2].parse()?,
+                    objective: rt[3].parse()?,
+                    construct_secs: rt[4].parse()?,
+                    ls_secs: rt[5].parse()?,
+                    evaluated: rt[6].parse()?,
+                    improved: rt[7].parse()?,
+                    rounds: rt[8].parse()?,
+                });
             }
             let mut sig_line = String::new();
             r.read_line(&mut sig_line)?;
@@ -135,6 +218,8 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<MapResponse> {
             }
             let sigma: Vec<u32> =
                 sig_toks[1..].iter().map(|t| t.parse()).collect::<Result<_, _>>()?;
+            let stats =
+                reps.get(best_rep).map(|rep: &RepStat| rep.search_stats()).unwrap_or_default();
             Ok(MapResponse {
                 id: toks[1].parse()?,
                 objective: toks[2].parse()?,
@@ -148,7 +233,9 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<MapResponse> {
                     _ => Some(false),
                 },
                 total_secs: 0.0,
-                stats: Default::default(),
+                stats,
+                best_rep,
+                reps,
                 sigma,
                 error: None,
             })
@@ -250,7 +337,29 @@ mod tests {
     }
 
     #[test]
-    fn response_roundtrip() {
+    fn response_roundtrip_preserves_per_rep_stats() {
+        let reps = vec![
+            RepStat {
+                seed: 99,
+                objective_initial: 2100,
+                objective: 1500,
+                construct_secs: 0.25,
+                ls_secs: 0.125,
+                evaluated: 640,
+                improved: 17,
+                rounds: 3,
+            },
+            RepStat {
+                seed: 100,
+                objective_initial: 2000,
+                objective: 1234,
+                construct_secs: 0.5,
+                ls_secs: 0.25,
+                evaluated: 512,
+                improved: 31,
+                rounds: 2,
+            },
+        ];
         let resp = MapResponse {
             id: 7,
             sigma: vec![2, 0, 1],
@@ -261,7 +370,9 @@ mod tests {
             construct_secs: 0.5,
             ls_secs: 0.25,
             total_secs: 1.0,
-            stats: Default::default(),
+            stats: reps[1].search_stats(),
+            best_rep: 1,
+            reps: reps.clone(),
             error: None,
         };
         let mut buf = Vec::new();
@@ -272,16 +383,50 @@ mod tests {
         assert_eq!(back.objective, 1234);
         assert_eq!(back.xla_objective, Some(1234.0));
         assert_eq!(back.verified, Some(true));
+        // every repetition's stats survive serialization exactly
+        assert_eq!(back.reps, reps);
+        // the winner index travels explicitly; its stats are reconstructed
+        assert_eq!(back.best_rep, 1);
+        assert_eq!(back.stats.evaluated, 512);
+        assert_eq!(back.stats.improved, 31);
+        assert_eq!(back.stats.rounds, 2);
     }
 
     #[test]
-    fn error_roundtrip() {
-        let resp = MapResponse::failure(3, "something\nbad".into());
+    fn response_roundtrip_no_reps() {
+        let resp = MapResponse {
+            id: 1,
+            sigma: vec![0, 1],
+            objective: 10,
+            objective_initial: 10,
+            xla_objective: None,
+            verified: None,
+            construct_secs: 0.0,
+            ls_secs: 0.0,
+            total_secs: 0.0,
+            stats: Default::default(),
+            best_rep: 0,
+            reps: Vec::new(),
+            error: None,
+        };
         let mut buf = Vec::new();
         write_response(&mut buf, &resp).unwrap();
         let back = read_response(&mut BufReader::new(&buf[..])).unwrap();
+        assert_eq!(back.sigma, vec![0, 1]);
+        assert!(back.reps.is_empty());
+    }
+
+    #[test]
+    fn error_roundtrip_preserves_newlines() {
+        let msg = "something\nbad\r\nwith a \\backslash and a trailing CR\r";
+        let resp = MapResponse::failure(3, msg.into());
+        let mut buf = Vec::new();
+        write_response(&mut buf, &resp).unwrap();
+        // the frame itself stays a single line
+        assert_eq!(buf.iter().filter(|&&b| b == b'\n').count(), 1);
+        let back = read_response(&mut BufReader::new(&buf[..])).unwrap();
         assert_eq!(back.id, 3);
-        assert!(back.error.unwrap().contains("something bad"));
+        assert_eq!(back.error.as_deref(), Some(msg));
     }
 
     #[test]

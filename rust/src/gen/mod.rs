@@ -4,7 +4,7 @@
 //! sparse-matrix collection and the 10th DIMACS challenge (Table 3). Those
 //! archives are not reachable from this offline build, so we generate the
 //! same instance families from their published definitions (substitution
-//! documented in DESIGN.md §5):
+//! documented in DESIGN.md §4):
 //!
 //! * `rggX` — random geometric graph on `2^X` uniform points in the unit
 //!   square, edge iff Euclidean distance `< 0.55 * sqrt(ln n / n)` (the

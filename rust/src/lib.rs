@@ -16,9 +16,15 @@
 //! The Rust binary loads the AOT artifacts through PJRT ([`runtime`]) to
 //! cross-check and batch-score objectives; Python never runs at request time.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index, and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! Entry point for library users: [`api`] — build a job with
+//! [`api::MapJobBuilder`], execute it with [`api::MapSession`]. The legacy
+//! free function [`mapping::algorithms::run`] is deprecated in its favor.
+//!
+//! See `DESIGN.md` (repo root) for the system inventory, the layer map and
+//! the api-module lifecycle; the paper-vs-measured experiments are produced
+//! by the bench harness under `rust/benches/` (outputs land in `out/`).
 
+pub mod api;
 pub mod bench;
 pub mod coordinator;
 pub mod gen;

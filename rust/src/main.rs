@@ -18,14 +18,15 @@
 //! ```
 
 use anyhow::{anyhow, bail, Context, Result};
-use qapmap::coordinator::{wire, Coordinator, MapRequest};
+use qapmap::api::{MapJobBuilder, MapSession, OracleMode, VerifyPolicy};
+use qapmap::coordinator::{wire, Coordinator};
 use qapmap::graph::{io as gio, Graph};
 use qapmap::mapping::algorithms::AlgorithmSpec;
-use qapmap::mapping::{objective, DistanceOracle, Hierarchy, Mapping};
+use qapmap::mapping::Hierarchy;
 use qapmap::model::build_instance;
 use qapmap::partition::{partition_kway, PartitionConfig};
 use qapmap::runtime::{QapRuntime, RuntimeHandle};
-use qapmap::util::{Args, Rng, Timer};
+use qapmap::util::{Args, Rng};
 use std::net::TcpListener;
 use std::path::Path;
 use std::sync::atomic::AtomicBool;
@@ -89,22 +90,11 @@ fn load_comm(args: &Args, rng: &mut Rng) -> Result<Graph> {
     Ok(build_instance(&app, blocks, rng))
 }
 
+/// Resolve `--S`/`--D` into a hierarchy for an `n`-process instance; the
+/// shared logic (including the flat-hierarchy fallback when `--S` is omitted
+/// and `n % 64 != 0`) lives in [`qapmap::api::hierarchy_for`].
 fn hierarchy_for(args: &Args, n: usize) -> Result<Hierarchy> {
-    let s = args.get("S", "");
-    let d = args.get("D", "");
-    let h = if s.is_empty() {
-        // default: 4 cores/proc, 16 procs/node, rest nodes
-        if n % 64 != 0 {
-            bail!("--S not given and n={n} not divisible by 64");
-        }
-        Hierarchy::new(vec![4, 16, (n / 64) as u64], vec![1, 10, 100]).map_err(|e| anyhow!(e))?
-    } else {
-        Hierarchy::parse(s, if d.is_empty() { "1:10:100" } else { d }).map_err(|e| anyhow!(e))?
-    };
-    if h.n_pes() != n {
-        bail!("hierarchy has {} PEs but the instance has {n} processes", h.n_pes());
-    }
-    Ok(h)
+    qapmap::api::hierarchy_for(n, args.get("S", ""), args.get("D", "")).map_err(|e| anyhow!(e))
 }
 
 fn cmd_map(args: &Args) -> Result<()> {
@@ -113,50 +103,74 @@ fn cmd_map(args: &Args) -> Result<()> {
     let comm = load_comm(args, &mut rng)?;
     let h = hierarchy_for(args, comm.n())?;
     let spec = AlgorithmSpec::parse(args.get("algo", "topdown+Nc10")).map_err(|e| anyhow!(e))?;
-    let oracle = if args.flag("explicit-distances") {
-        DistanceOracle::explicit(&h)
+    let verify = args.flag("verify");
+    let job = MapJobBuilder::new(comm, h)
+        .algorithm(spec)
+        .oracle_mode(if args.flag("explicit-distances") {
+            OracleMode::Explicit
+        } else {
+            OracleMode::Implicit
+        })
+        .repetitions(args.get_as("reps", 1))
+        .seed(seed)
+        .partition_config(PartitionConfig::perfectly_balanced())
+        .verify(if verify { VerifyPolicy::IfAvailable } else { VerifyPolicy::Skip })
+        .build()
+        .map_err(|e| anyhow!(e))?;
+    let runtime = if verify {
+        Some(RuntimeHandle::spawn_default().context("loading artifacts")?)
     } else {
-        DistanceOracle::implicit(h.clone())
+        None
     };
-    let t = Timer::start();
-    let r = qapmap::mapping::algorithms::run(
-        &comm,
-        &h,
-        &oracle,
-        &spec,
-        &PartitionConfig::perfectly_balanced(),
-        &mut rng,
-    );
+    let mut session = MapSession::with_runtime(job, runtime);
+    let report = session.run();
+    let job = session.job();
     println!(
         "instance: n={} m={} (m/n={:.1})  algorithm: {}",
-        comm.n(),
-        comm.m(),
-        comm.density(),
-        spec.name()
+        job.comm().n(),
+        job.comm().m(),
+        job.comm().density(),
+        report.algorithm
     );
     println!(
         "objective: {} (initial {}, improvement {:.1}%)",
-        r.objective,
-        r.objective_initial,
-        100.0 * (1.0 - r.objective as f64 / r.objective_initial.max(1) as f64)
+        report.objective,
+        report.objective_initial,
+        report.improvement_pct()
     );
     println!(
         "time: construct {:.3}s + local search {:.3}s = {:.3}s (swaps: {} applied / {} evaluated)",
-        r.construct_secs,
-        r.ls_secs,
-        t.secs(),
-        r.stats.improved,
-        r.stats.evaluated
+        report.construct_secs,
+        report.ls_secs,
+        report.total_secs,
+        report.best().improved,
+        report.best().evaluated
     );
-    if args.flag("verify") {
-        let rt = RuntimeHandle::spawn_default().context("loading artifacts")?;
-        match rt.objective(&comm, &oracle, &r.mapping)? {
-            Some(xj) => {
-                let exact = r.objective as f32;
-                let ok = (xj - exact).abs() <= 1e-4 * exact.max(1.0);
-                println!("xla verification: {xj} vs exact {exact} -> {}", if ok { "OK" } else { "MISMATCH" });
-            }
-            None => println!("xla verification: instance larger than all artifacts (skipped)"),
+    if report.reps.len() > 1 {
+        for (i, rep) in report.reps.iter().enumerate() {
+            println!(
+                "  rep {i}: seed={} J={} (initial {}) in {:.3}s{}",
+                rep.seed,
+                rep.objective,
+                rep.objective_initial,
+                rep.construct_secs + rep.ls_secs,
+                if i == report.best_rep { "  <- best" } else { "" }
+            );
+        }
+    } else if report.short_circuited {
+        println!("(deterministic algorithm: repetitions short-circuited to 1)");
+    }
+    if verify {
+        match (report.xla_objective, report.verified) {
+            (Some(xj), Some(ok)) => println!(
+                "xla verification: {xj} vs exact {} -> {}",
+                report.objective,
+                if ok { "OK" } else { "MISMATCH" }
+            ),
+            _ => match &report.verify_error {
+                Some(e) => bail!("xla verification failed to run: {e}"),
+                None => println!("xla verification: instance larger than all artifacts (skipped)"),
+            },
         }
     }
     Ok(())
@@ -193,27 +207,27 @@ fn cmd_client(args: &Args) -> Result<()> {
     let mut rng = Rng::new(seed);
     let comm = load_comm(args, &mut rng)?;
     let h = hierarchy_for(args, comm.n())?;
-    let req = MapRequest {
-        id: seed,
-        comm,
-        hierarchy: h,
-        algorithm: AlgorithmSpec::parse(args.get("algo", "topdown+Nc10")).map_err(|e| anyhow!(e))?,
-        repetitions: args.get_as("reps", 1),
-        seed,
-        verify: args.flag("verify"),
-    };
-    let resp = wire::request(addr, &req)?;
+    let job = MapJobBuilder::new(comm, h)
+        .algorithm_name(args.get("algo", "topdown+Nc10"))
+        .map_err(|e| anyhow!(e))?
+        .repetitions(args.get_as("reps", 1))
+        .seed(seed)
+        .verify(if args.flag("verify") { VerifyPolicy::IfAvailable } else { VerifyPolicy::Skip })
+        .build()
+        .map_err(|e| anyhow!(e))?;
+    let resp = wire::request(addr, &job.to_request(seed))?;
     match &resp.error {
         Some(e) => bail!("service error: {e}"),
         None => {
             println!(
-                "id={} objective={} initial={} construct={:.3}s ls={:.3}s verified={:?}",
+                "id={} objective={} initial={} construct={:.3}s ls={:.3}s verified={:?} reps={}",
                 resp.id,
                 resp.objective,
                 resp.objective_initial,
                 resp.construct_secs,
                 resp.ls_secs,
-                resp.verified
+                resp.verified,
+                resp.reps.len()
             );
             Ok(())
         }
@@ -285,32 +299,32 @@ fn cmd_verify(args: &Args) -> Result<()> {
     let seed: u64 = args.get_as("seed", 1);
     let mut rng = Rng::new(seed);
     let comm = load_comm(args, &mut rng)?;
-    let h = hierarchy_for(args, comm.n())?;
-    let oracle = DistanceOracle::implicit(h.clone());
-    let spec = AlgorithmSpec::parse(args.get("algo", "topdown")).map_err(|e| anyhow!(e))?;
-    let r = qapmap::mapping::algorithms::run(
-        &comm,
-        &h,
-        &oracle,
-        &spec,
-        &PartitionConfig::perfectly_balanced(),
-        &mut rng,
-    );
+    let n = comm.n();
+    let h = hierarchy_for(args, n)?;
+    let job = MapJobBuilder::new(comm, h)
+        .algorithm_name(args.get("algo", "topdown"))
+        .map_err(|e| anyhow!(e))?
+        .seed(seed)
+        .partition_config(PartitionConfig::perfectly_balanced())
+        .verify(VerifyPolicy::Required)
+        .build()
+        .map_err(|e| anyhow!(e))?;
     let rt = RuntimeHandle::spawn_default()?;
-    let exact = objective(&comm, &oracle, &r.mapping);
-    match rt.objective(&comm, &oracle, &r.mapping)? {
-        Some(xj) => {
-            let ok = (xj - exact as f32).abs() <= 1e-4 * (exact as f32).max(1.0);
-            println!("sparse (exact integer): {exact}");
+    let mut session = MapSession::with_runtime(job, Some(rt));
+    // run_checked distinguishes "could not verify" (runtime error, nothing
+    // fits) from a clean verdict; both MATCH and MISMATCH come back Ok
+    let report = session.run_checked().map_err(|e| anyhow!(e))?;
+    report.mapping.validate().map_err(|e| anyhow!(e))?;
+    match (report.xla_objective, report.verified) {
+        (Some(xj), Some(ok)) => {
+            println!("sparse (exact integer): {}", report.objective);
             println!("dense  (XLA f32):       {xj}");
             println!("{}", if ok { "MATCH" } else { "MISMATCH" });
             if !ok {
                 bail!("verification failed");
             }
         }
-        None => bail!("instance (n={}) larger than all artifacts", comm.n()),
+        _ => bail!("instance (n={n}) larger than all artifacts"),
     }
-    let m = Mapping { sigma: r.mapping.sigma };
-    m.validate().map_err(|e| anyhow!(e))?;
     Ok(())
 }

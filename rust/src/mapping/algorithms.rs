@@ -1,19 +1,23 @@
-//! Named end-to-end mapping algorithms: construction ⊕ local search.
+//! Named end-to-end mapping algorithms: the specification registry.
 //!
 //! This registry is shared by the CLI, the coordinator service and the
-//! benchmark harness, so every experiment in EXPERIMENTS.md refers to
-//! algorithms by the same names the paper uses: `identity`, `random`, `mm`
-//! (Müller-Merbach), `gac` (GreedyAllC), `rcb` (LibTopoMap-like),
-//! `bottomup`, `topdown`, with optional `+N2`, `+Np`, `+Nc<d>` local-search
-//! suffixes (e.g. the paper's best trade-off `topdown+Nc10`).
+//! benchmark harness, so every experiment refers to algorithms by the same
+//! names the paper uses: `identity`, `random`, `mm` (Müller-Merbach), `gac`
+//! (GreedyAllC), `rcb` (LibTopoMap-like), `bottomup`, `topdown`, with
+//! optional `+N2`, `+Np`, `+Nc<d>`, `+NcCyc<d>` local-search suffixes (e.g.
+//! the paper's best trade-off `topdown+Nc10`).
+//!
+//! Execution lives in [`crate::api`]: build a [`crate::api::MapJobBuilder`]
+//! with a spec from this registry and run it through a
+//! [`crate::api::MapSession`]. The free function [`run`] survives only as a
+//! deprecated single-repetition shim.
 
-use super::construct;
 use super::hierarchy::{DistanceOracle, Hierarchy};
-use super::local_search::{cycle3_search, n2_cyclic, nc_neighborhood, np_blocks, SearchStats};
-use super::objective::{DenseEngine, Mapping, SwapEngine};
+use super::local_search::SearchStats;
+use super::objective::Mapping;
 use crate::graph::Graph;
 use crate::partition::PartitionConfig;
-use crate::util::{Rng, Timer};
+use crate::util::Rng;
 
 /// Initial-solution algorithm.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -151,7 +155,19 @@ pub struct MapResult {
     pub stats: SearchStats,
 }
 
-/// Run a complete algorithm on a communication graph + hierarchy.
+/// Run a complete algorithm on a communication graph + hierarchy, once.
+///
+/// Deprecated: this free function forces every caller to hand-roll oracle
+/// construction, repetition loops and best-of-N selection. Use
+/// [`crate::api::MapJobBuilder`] + [`crate::api::MapSession`] instead, which
+/// also reuse engine scratch, pair sets and deterministic constructions
+/// across repetitions. This shim executes a single repetition through the
+/// same session machinery (with throwaway scratch), so trajectories are
+/// bit-identical to the pre-api behavior for a given RNG.
+#[deprecated(
+    since = "0.2.0",
+    note = "use api::MapJobBuilder + api::MapSession (this shim runs one repetition with no scratch reuse)"
+)]
 pub fn run(
     comm: &Graph,
     hierarchy: &Hierarchy,
@@ -160,86 +176,15 @@ pub fn run(
     part_cfg: &PartitionConfig,
     rng: &mut Rng,
 ) -> MapResult {
-    let t = Timer::start();
-    let mapping = match spec.construction {
-        Construction::Identity => construct::identity(comm.n()),
-        Construction::Random => construct::random(comm.n(), rng),
-        Construction::MuellerMerbach => construct::mueller_merbach(comm, oracle),
-        Construction::GreedyAllC => construct::greedy_all_c(comm, hierarchy),
-        Construction::TopDown => construct::top_down(comm, hierarchy, part_cfg, rng),
-        Construction::BottomUp => construct::bottom_up(comm, hierarchy, part_cfg, rng),
-        Construction::Rcb => construct::rcb(comm, part_cfg, rng),
-    };
-    let construct_secs = t.secs();
-
-    let t = Timer::start();
-    let (mapping, objective_initial, objective, stats) = match spec.gain_mode {
-        GainMode::Fast => {
-            let mut eng = SwapEngine::new(comm, oracle, mapping);
-            let j0 = eng.objective();
-            let stats = run_ls(&mut eng, comm, hierarchy, spec, rng);
-            (eng.mapping(), j0, eng.objective(), stats)
-        }
-        GainMode::SlowDense => {
-            let mut eng = DenseEngine::new(comm, oracle, mapping);
-            let j0 = eng.objective();
-            let stats = run_ls_dense(&mut eng, comm, hierarchy, spec, rng);
-            (eng.mapping(), j0, eng.objective(), stats)
-        }
-    };
-    let ls_secs = t.secs();
-
-    MapResult { mapping, objective_initial, objective, construct_secs, ls_secs, stats }
-}
-
-fn run_ls(
-    eng: &mut SwapEngine,
-    comm: &Graph,
-    h: &Hierarchy,
-    spec: &AlgorithmSpec,
-    rng: &mut Rng,
-) -> SearchStats {
-    match spec.neighborhood {
-        Neighborhood::None => SearchStats::default(),
-        Neighborhood::N2 => n2_cyclic(eng, comm.n(), spec.max_sweeps),
-        Neighborhood::Np { block_len } => {
-            np_blocks(eng, comm.n(), block_len, Some(h), |e, u| e.pe_of(u), spec.max_sweeps)
-        }
-        Neighborhood::Nc { d } => nc_neighborhood(eng, comm, d, rng, u64::MAX),
-        Neighborhood::NcCycle { d } => {
-            let mut stats = nc_neighborhood(eng, comm, d, rng, u64::MAX);
-            let cyc = cycle3_search(eng, comm, rng, spec.max_sweeps);
-            stats.evaluated += cyc.evaluated;
-            stats.improved += cyc.improved;
-            stats.rounds += cyc.rounds;
-            stats
-        }
-    }
-}
-
-fn run_ls_dense(
-    eng: &mut DenseEngine,
-    comm: &Graph,
-    h: &Hierarchy,
-    spec: &AlgorithmSpec,
-    rng: &mut Rng,
-) -> SearchStats {
-    match spec.neighborhood {
-        Neighborhood::None => SearchStats::default(),
-        Neighborhood::N2 => n2_cyclic(eng, comm.n(), spec.max_sweeps),
-        Neighborhood::Np { block_len } => np_blocks(
-            eng,
-            comm.n(),
-            block_len,
-            Some(h),
-            |e, u| e.mapping().sigma[u as usize],
-            spec.max_sweeps,
-        ),
-        Neighborhood::Nc { d } => nc_neighborhood(eng, comm, d, rng, u64::MAX),
-        // rotations need the Γ machinery of the fast engine; the dense
-        // baseline (Table 1 only) runs the pair-swap part alone
-        Neighborhood::NcCycle { d } => nc_neighborhood(eng, comm, d, rng, u64::MAX),
-    }
+    crate::api::session::execute_once(
+        comm,
+        hierarchy,
+        oracle,
+        spec,
+        part_cfg,
+        rng,
+        &mut Default::default(),
+    )
 }
 
 #[cfg(test)]
@@ -260,7 +205,91 @@ mod tests {
     }
 
     #[test]
-    fn run_end_to_end_improves() {
+    fn parse_name_roundtrip_every_combination() {
+        // every construction × every neighborhood shape (including NcCyc<d>)
+        let constructions = [
+            (Construction::Identity, "identity"),
+            (Construction::Random, "random"),
+            (Construction::MuellerMerbach, "mm"),
+            (Construction::GreedyAllC, "gac"),
+            (Construction::TopDown, "topdown"),
+            (Construction::BottomUp, "bottomup"),
+            (Construction::Rcb, "rcb"),
+        ];
+        let neighborhoods = [
+            (Neighborhood::None, String::new()),
+            (Neighborhood::N2, "+N2".to_string()),
+            (Neighborhood::Np { block_len: 64 }, "+Np".to_string()),
+            (Neighborhood::Nc { d: 1 }, "+Nc1".to_string()),
+            (Neighborhood::Nc { d: 2 }, "+Nc2".to_string()),
+            (Neighborhood::Nc { d: 10 }, "+Nc10".to_string()),
+            (Neighborhood::Nc { d: 37 }, "+Nc37".to_string()),
+            (Neighborhood::NcCycle { d: 1 }, "+NcCyc1".to_string()),
+            (Neighborhood::NcCycle { d: 10 }, "+NcCyc10".to_string()),
+        ];
+        for (c, cname) in &constructions {
+            for (nb, suffix) in &neighborhoods {
+                let name = format!("{cname}{suffix}");
+                let spec = AlgorithmSpec::parse(&name)
+                    .unwrap_or_else(|e| panic!("parsing {name:?}: {e}"));
+                assert_eq!(spec.construction, *c, "{name}");
+                assert_eq!(spec.neighborhood, *nb, "{name}");
+                assert_eq!(spec.gain_mode, GainMode::Fast, "{name}");
+                assert_eq!(spec.name(), name, "name() must invert parse()");
+                // name() output parses back to the same spec (idempotence)
+                let again = AlgorithmSpec::parse(&spec.name()).unwrap();
+                assert_eq!(again.name(), spec.name());
+            }
+        }
+    }
+
+    #[test]
+    fn parse_aliases_normalize() {
+        for (alias, canonical) in [
+            ("muellermerbach", "mm"),
+            ("greedyallc", "gac"),
+            ("td", "topdown"),
+            ("bu", "bottomup"),
+            ("libtopomap", "rcb"),
+            ("mm+n2", "mm+N2"),
+            ("mm+np", "mm+Np"),
+            ("td+nc3", "topdown+Nc3"),
+            ("td+NC3", "topdown+Nc3"),
+            ("td+nccyc2", "topdown+NcCyc2"),
+            ("td+NcCyc2", "topdown+NcCyc2"),
+        ] {
+            let spec = AlgorithmSpec::parse(alias).unwrap();
+            assert_eq!(spec.name(), canonical, "alias {alias}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "+N2",
+            "mm+",
+            "mm+Nq",
+            "mm+Nq3",
+            "mm+Nc",
+            "mm+Ncx",
+            "mm+Nc-1",
+            "mm+Nc 1",
+            "mm+NcCyc",
+            "mm+NcCycx",
+            "mm+NcCyc-2",
+            "nope",
+            "nope+Nc1",
+            "MM",
+            "mm+Nc1+Nc2",
+        ] {
+            assert!(AlgorithmSpec::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_run_shim_end_to_end_improves() {
         let mut rng = Rng::new(1);
         let g = random_geometric_graph(256, &mut rng);
         let h = Hierarchy::new(vec![4, 16, 4], vec![1, 10, 100]).unwrap();
@@ -273,6 +302,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn slow_and_fast_same_final_objective() {
         let mut rng = Rng::new(2);
         let g = random_geometric_graph(128, &mut rng);

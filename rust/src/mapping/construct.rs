@@ -106,7 +106,7 @@ pub fn mueller_merbach(comm: &Graph, oracle: &DistanceOracle) -> Mapping {
 /// oracle the inner sum is bucketed per hierarchy level, so each step costs
 /// `O(d_u·k + n·k)` instead of `O(n·d_u)`.
 ///
-/// Reproduction note (EXPERIMENTS.md §Fig3): on *ultrametric* distances —
+/// Reproduction note (`benches/fig3.rs`): on *ultrametric* distances —
 /// a homogeneous hierarchy, as in all of the paper's experiments — with
 /// deterministic lowest-id tie-breaking, GreedyAllC provably coincides with
 /// Müller-Merbach: PEs fill contiguously, so at any time only one subsystem

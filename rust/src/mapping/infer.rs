@@ -274,8 +274,7 @@ mod tests {
     #[test]
     fn inferred_hierarchy_is_usable_end_to_end() {
         // map with an inferred hierarchy: same result as with the original
-        use crate::mapping::algorithms::{run, AlgorithmSpec};
-        use crate::partition::PartitionConfig;
+        use crate::api::{MapJobBuilder, MapSession};
         use crate::util::Rng;
         let h = Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap();
         let (_, m) = matrix_of(&h);
@@ -284,9 +283,13 @@ mod tests {
         let mut rng = Rng::new(1);
         let app = crate::gen::random_geometric_graph(2048, &mut rng);
         let comm = crate::model::build_instance(&app, 128, &mut rng);
-        let oracle = DistanceOracle::implicit(inferred.clone());
-        let spec = AlgorithmSpec::parse("topdown").unwrap();
-        let r = run(&comm, &inferred, &oracle, &spec, &PartitionConfig::default(), &mut rng);
+        let job = MapJobBuilder::new(comm, inferred)
+            .algorithm_name("topdown")
+            .unwrap()
+            .seed(1)
+            .build()
+            .unwrap();
+        let r = MapSession::new(job).run();
         r.mapping.validate().unwrap();
     }
 }

@@ -165,11 +165,25 @@ pub fn nc_neighborhood<S: Swapper>(
     max_evaluations: u64,
 ) -> SearchStats {
     let mut pairs = nc_pairs(comm, d);
+    nc_search_in(engine, &mut pairs, rng, max_evaluations)
+}
+
+/// The search loop of [`nc_neighborhood`] over a caller-provided pair set.
+/// Materializing `N_C^d` costs a BFS ball per vertex; callers that run many
+/// repetitions on one instance ([`crate::api::MapSession`]) compute the pair
+/// set once and pass a reusable working copy here. The slice is shuffled in
+/// place (identical trajectory to [`nc_neighborhood`] for the same RNG).
+pub fn nc_search_in<S: Swapper>(
+    engine: &mut S,
+    pairs: &mut [(NodeId, NodeId)],
+    rng: &mut Rng,
+    max_evaluations: u64,
+) -> SearchStats {
     let mut stats = SearchStats::default();
     if pairs.is_empty() {
         return stats;
     }
-    rng.shuffle(&mut pairs);
+    rng.shuffle(pairs);
     let threshold = pairs.len() as u64;
     let mut consecutive_failures = 0u64;
     let mut idx = 0usize;
@@ -186,7 +200,7 @@ pub fn nc_neighborhood<S: Swapper>(
         if idx == pairs.len() {
             idx = 0;
             stats.rounds += 1;
-            rng.shuffle(&mut pairs);
+            rng.shuffle(pairs);
         }
     }
     stats
@@ -205,7 +219,14 @@ pub fn cycle3_search(
     rng: &mut Rng,
     max_rounds: usize,
 ) -> SearchStats {
-    // enumerate triangles once: for each edge (u,v), intersect adjacencies
+    let mut triangles = comm_triangles(comm);
+    cycle3_search_in(engine, &mut triangles, rng, max_rounds)
+}
+
+/// Enumerate the triangles `u < v < w` of `comm` (for each edge `(u,v)`,
+/// intersect the sorted adjacencies). Exposed so sessions can cache the
+/// triangle set across repetitions.
+pub fn comm_triangles(comm: &Graph) -> Vec<(NodeId, NodeId, NodeId)> {
     let mut triangles: Vec<(NodeId, NodeId, NodeId)> = Vec::new();
     for u in 0..comm.n() as NodeId {
         for &v in comm.neighbors(u) {
@@ -231,15 +252,26 @@ pub fn cycle3_search(
             }
         }
     }
+    triangles
+}
+
+/// The search loop of [`cycle3_search`] over a caller-provided triangle set
+/// (see [`comm_triangles`]); the slice is shuffled in place.
+pub fn cycle3_search_in(
+    engine: &mut SwapEngine,
+    triangles: &mut [(NodeId, NodeId, NodeId)],
+    rng: &mut Rng,
+    max_rounds: usize,
+) -> SearchStats {
     let mut stats = SearchStats::default();
     if triangles.is_empty() {
         return stats;
     }
-    rng.shuffle(&mut triangles);
+    rng.shuffle(triangles);
     for _ in 0..max_rounds {
         stats.rounds += 1;
         let mut any = false;
-        for &(u, v, w) in &triangles {
+        for &(u, v, w) in triangles.iter() {
             // both rotation directions
             stats.evaluated += 2;
             if engine.try_rotate3(u, v, w).is_some()
@@ -412,6 +444,50 @@ mod tests {
         let mut eng = SwapEngine::new(&g, &o, Mapping::identity(6));
         let stats = cycle3_search(&mut eng, &g, &mut rng, 10);
         assert_eq!(stats.evaluated, 0);
+    }
+
+    #[test]
+    fn cached_pair_search_matches_uncached() {
+        // nc_search_in over a precomputed pair set must follow exactly the
+        // trajectory of nc_neighborhood for the same RNG (the api session's
+        // scratch-reuse correctness contract)
+        let (g, o) = setup(7, 30);
+        let m = {
+            let mut r = Rng::new(32);
+            Mapping { sigma: r.permutation(g.n()) }
+        };
+        let mut rng_a = Rng::new(31);
+        let mut e1 = SwapEngine::new(&g, &o, m.clone());
+        let s1 = nc_neighborhood(&mut e1, &g, 2, &mut rng_a, u64::MAX);
+
+        let mut rng_b = Rng::new(31);
+        let mut e2 = SwapEngine::new(&g, &o, m);
+        let mut work = nc_pairs(&g, 2);
+        let s2 = nc_search_in(&mut e2, &mut work, &mut rng_b, u64::MAX);
+
+        assert_eq!(e1.objective(), e2.objective());
+        assert_eq!(s1.evaluated, s2.evaluated);
+        assert_eq!(s1.improved, s2.improved);
+    }
+
+    #[test]
+    fn cached_triangle_search_matches_uncached() {
+        let (g, o) = setup(7, 33);
+        let m = {
+            let mut r = Rng::new(34);
+            Mapping { sigma: r.permutation(g.n()) }
+        };
+        let mut rng_a = Rng::new(35);
+        let mut e1 = SwapEngine::new(&g, &o, m.clone());
+        let s1 = cycle3_search(&mut e1, &g, &mut rng_a, 20);
+
+        let mut rng_b = Rng::new(35);
+        let mut e2 = SwapEngine::new(&g, &o, m);
+        let mut tris = comm_triangles(&g);
+        let s2 = cycle3_search_in(&mut e2, &mut tris, &mut rng_b, 20);
+
+        assert_eq!(e1.objective(), e2.objective());
+        assert_eq!(s1.evaluated, s2.evaluated);
     }
 
     #[test]

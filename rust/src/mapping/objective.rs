@@ -92,9 +92,23 @@ pub struct SwapEngine<'a> {
 impl<'a> SwapEngine<'a> {
     /// Build the engine in `O(n + m)`: compute all `Γ` and `J`.
     pub fn new(comm: &'a Graph, oracle: &'a DistanceOracle, mapping: Mapping) -> SwapEngine<'a> {
+        Self::with_gamma_buf(comm, oracle, mapping, Vec::new())
+    }
+
+    /// Like [`Self::new`], but reuse a previously-allocated `Γ` buffer
+    /// instead of allocating a fresh one. [`crate::api::MapSession`] passes
+    /// its per-repetition scratch here so best-of-N jobs stop reallocating;
+    /// recover the buffer afterwards with [`Self::into_parts`].
+    pub fn with_gamma_buf(
+        comm: &'a Graph,
+        oracle: &'a DistanceOracle,
+        mapping: Mapping,
+        mut gamma: Vec<u64>,
+    ) -> SwapEngine<'a> {
         debug_assert_eq!(comm.n(), mapping.n());
         let sigma = mapping.sigma;
-        let mut gamma = vec![0u64; comm.n()];
+        gamma.clear();
+        gamma.resize(comm.n(), 0);
         let mut j = 0u64;
         for u in 0..comm.n() as NodeId {
             let pu = sigma[u as usize];
@@ -109,6 +123,12 @@ impl<'a> SwapEngine<'a> {
             gamma[u as usize] = gu;
         }
         SwapEngine { comm, oracle, sigma, gamma, j, swaps_applied: 0 }
+    }
+
+    /// Decompose into the final assignment and the `Γ` scratch buffer (for
+    /// reuse by the next repetition; see [`Self::with_gamma_buf`]).
+    pub fn into_parts(self) -> (Mapping, Vec<u64>) {
+        (Mapping { sigma: self.sigma }, self.gamma)
     }
 
     /// Current objective `J`.
@@ -344,18 +364,24 @@ impl DenseEngine {
             }
         }
         let sigma = mapping.sigma;
-        // O(n²) objective initialization
-        let mut j = 0u64;
-        for u in 0..n {
-            let pu = sigma[u] as usize;
-            for v in (u + 1)..n {
-                let cuv = c[u * n + v];
-                if cuv != 0 {
-                    j += cuv as u64 * d[pu * n + sigma[v] as usize] as u64;
-                }
-            }
-        }
+        let j = dense_objective(&c, &d, &sigma, n);
         DenseEngine { n, c, d, sigma, j, swaps_applied: 0 }
+    }
+
+    /// Number of processes the dense matrices were built for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Re-initialize for a new start mapping, reusing the dense `C` and `D`
+    /// matrices — the `O(n²)` memory fills are the expensive part of
+    /// construction, and they only depend on the (fixed) instance.
+    /// [`crate::api::MapSession`] uses this across repetitions.
+    pub fn reset(&mut self, mapping: Mapping) {
+        debug_assert_eq!(mapping.n(), self.n);
+        self.sigma = mapping.sigma;
+        self.j = dense_objective(&self.c, &self.d, &self.sigma, self.n);
+        self.swaps_applied = 0;
     }
 
     /// Current objective.
@@ -366,6 +392,13 @@ impl DenseEngine {
     /// Current assignment.
     pub fn mapping(&self) -> Mapping {
         Mapping { sigma: self.sigma.clone() }
+    }
+
+    /// PE of process `u` (cheap accessor — `mapping()` clones the whole
+    /// assignment and must not be used for per-pair position lookups).
+    #[inline]
+    pub fn pe_of(&self, u: NodeId) -> u32 {
+        self.sigma[u as usize]
     }
 
     /// Gain of swapping processes `u`, `v` — scans the full rows: `O(n)`.
@@ -413,6 +446,22 @@ impl DenseEngine {
             None
         }
     }
+}
+
+/// `O(n²)` dense objective initialization shared by [`DenseEngine::new`] and
+/// [`DenseEngine::reset`].
+fn dense_objective(c: &[u32], d: &[u32], sigma: &[u32], n: usize) -> u64 {
+    let mut j = 0u64;
+    for u in 0..n {
+        let pu = sigma[u] as usize;
+        for v in (u + 1)..n {
+            let cuv = c[u * n + v];
+            if cuv != 0 {
+                j += cuv as u64 * d[pu * n + sigma[v] as usize] as u64;
+            }
+        }
+    }
+    j
 }
 
 #[cfg(test)]
@@ -556,5 +605,41 @@ mod tests {
         assert!(Mapping { sigma: vec![0, 3] }.validate().is_err());
         let m = Mapping { sigma: vec![2, 0, 1] };
         assert_eq!(m.inverse(), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn gamma_buffer_reuse_is_equivalent() {
+        // with_gamma_buf over a dirty, wrongly-sized buffer must behave
+        // exactly like a fresh engine, and into_parts must return the buffer
+        let (g, o) = setup(7, 20);
+        let mut rng = Rng::new(21);
+        let m = Mapping { sigma: rng.permutation(g.n()) };
+        let fresh = SwapEngine::new(&g, &o, m.clone());
+        let dirty = vec![0xdeadbeefu64; 3];
+        let mut reused = SwapEngine::with_gamma_buf(&g, &o, m, dirty);
+        assert_eq!(fresh.objective(), reused.objective());
+        for u in 0..g.n() as NodeId {
+            assert_eq!(fresh.gamma_of(u), reused.gamma_of(u), "gamma({u})");
+        }
+        reused.do_swap(0, 1);
+        let (mapping, gamma) = reused.into_parts();
+        mapping.validate().unwrap();
+        assert_eq!(gamma.len(), g.n());
+    }
+
+    #[test]
+    fn dense_reset_matches_fresh_engine() {
+        let (g, o) = setup(6, 22);
+        let mut rng = Rng::new(23);
+        let m1 = Mapping { sigma: rng.permutation(g.n()) };
+        let m2 = Mapping { sigma: rng.permutation(g.n()) };
+        let mut eng = DenseEngine::new(&g, &o, m1);
+        eng.do_swap(0, 1);
+        eng.reset(m2.clone());
+        let fresh = DenseEngine::new(&g, &o, m2);
+        assert_eq!(eng.objective(), fresh.objective());
+        assert_eq!(eng.mapping(), fresh.mapping());
+        assert_eq!(eng.swaps_applied, 0);
+        assert_eq!(eng.n(), g.n());
     }
 }

@@ -1,0 +1,269 @@
+//! Integration: the `api` front door — builder validation, session
+//! execution, scratch-reuse correctness (sessions must be bit-identical to
+//! independent legacy runs), deterministic short-circuiting, best-of-N.
+
+use qapmap::api::{hierarchy_for, MapJob, MapJobBuilder, MapSession, OracleMode, VerifyPolicy};
+use qapmap::gen::random_geometric_graph;
+use qapmap::mapping::algorithms::{AlgorithmSpec, GainMode};
+use qapmap::mapping::{DistanceOracle, Hierarchy};
+use qapmap::partition::PartitionConfig;
+use qapmap::util::Rng;
+
+fn instance(n: usize, seed: u64) -> (qapmap::graph::Graph, Hierarchy) {
+    let mut rng = Rng::new(seed);
+    let g = random_geometric_graph(n, &mut rng);
+    let h = Hierarchy::new(vec![4, 16, (n / 64) as u64], vec![1, 10, 100]).unwrap();
+    (g, h)
+}
+
+#[test]
+fn session_repetitions_match_independent_runs() {
+    // the scratch-reuse contract: a session's per-rep results must be
+    // bit-identical to independent legacy runs with the same seeds
+    let (g, h) = instance(128, 1);
+    for algo in ["random+Nc1", "topdown+Nc2", "mm+Nc1", "topdown+NcCyc1", "rcb+N2"] {
+        let spec = AlgorithmSpec::parse(algo).unwrap();
+        let job = MapJobBuilder::new(g.clone(), h.clone())
+            .algorithm(spec)
+            .repetitions(3)
+            .seed(50)
+            .build()
+            .unwrap();
+        let report = MapSession::new(job).run();
+        assert_eq!(report.reps.len(), 3, "{algo}");
+
+        let oracle = DistanceOracle::implicit(h.clone());
+        for (r, rep) in report.reps.iter().enumerate() {
+            let mut rng = Rng::new(50 + r as u64);
+            #[allow(deprecated)]
+            let legacy = qapmap::mapping::algorithms::run(
+                &g,
+                &h,
+                &oracle,
+                &spec,
+                &PartitionConfig::perfectly_balanced(),
+                &mut rng,
+            );
+            assert_eq!(rep.seed, 50 + r as u64);
+            assert_eq!(rep.objective, legacy.objective, "{algo} rep {r}");
+            assert_eq!(rep.objective_initial, legacy.objective_initial, "{algo} rep {r}");
+            assert_eq!(rep.evaluated, legacy.stats.evaluated, "{algo} rep {r}");
+            assert_eq!(rep.improved, legacy.stats.improved, "{algo} rep {r}");
+        }
+        // the report's winner is the argmin over repetitions
+        assert_eq!(
+            report.objective,
+            report.reps.iter().map(|r| r.objective).min().unwrap(),
+            "{algo}"
+        );
+        assert_eq!(report.reps[report.best_rep].objective, report.objective, "{algo}");
+        report.mapping.validate().unwrap();
+    }
+}
+
+#[test]
+fn repeated_session_runs_reuse_scratch_deterministically() {
+    // running the same session twice must give identical results: the
+    // cached oracle, pair sets, Γ buffer and construction are all pure
+    // functions of the frozen job
+    let (g, h) = instance(128, 2);
+    let job = MapJobBuilder::new(g, h)
+        .algorithm_name("topdown+Nc10")
+        .unwrap()
+        .repetitions(2)
+        .seed(7)
+        .build()
+        .unwrap();
+    let mut session = MapSession::new(job);
+    let first = session.run();
+    let second = session.run();
+    assert_eq!(first.objective, second.objective);
+    assert_eq!(first.mapping.sigma, second.mapping.sigma);
+    assert_eq!(first.reps.len(), second.reps.len());
+    for (a, b) in first.reps.iter().zip(&second.reps) {
+        assert_eq!(a.objective, b.objective);
+        assert_eq!(a.evaluated, b.evaluated);
+    }
+}
+
+#[test]
+fn deterministic_jobs_short_circuit() {
+    let (g, h) = instance(128, 3);
+    let job = MapJobBuilder::new(g, h)
+        .algorithm_name("mm")
+        .unwrap()
+        .repetitions(8)
+        .build()
+        .unwrap();
+    let report = MapSession::new(job).run();
+    assert!(report.short_circuited);
+    assert_eq!(report.reps.len(), 1);
+    assert_eq!(report.best_rep, 0);
+}
+
+#[test]
+fn best_of_n_never_worse_than_single() {
+    let (g, h) = instance(128, 4);
+    let single = MapSession::new(
+        MapJobBuilder::new(g.clone(), h.clone())
+            .algorithm_name("random+Nc1")
+            .unwrap()
+            .repetitions(1)
+            .seed(100)
+            .build()
+            .unwrap(),
+    )
+    .run();
+    let multi = MapSession::new(
+        MapJobBuilder::new(g, h)
+            .algorithm_name("random+Nc1")
+            .unwrap()
+            .repetitions(8)
+            .seed(100)
+            .build()
+            .unwrap(),
+    )
+    .run();
+    assert!(multi.objective <= single.objective);
+    assert_eq!(multi.reps[0].objective, single.objective, "rep 0 shares the seed");
+}
+
+#[test]
+fn explicit_oracle_session_matches_implicit() {
+    let (g, h) = instance(128, 5);
+    let mut reports = Vec::new();
+    for mode in [OracleMode::Implicit, OracleMode::Explicit] {
+        let job = MapJobBuilder::new(g.clone(), h.clone())
+            .algorithm_name("mm+Nc1")
+            .unwrap()
+            .oracle_mode(mode)
+            .seed(31)
+            .build()
+            .unwrap();
+        let session = MapSession::new(job);
+        assert_eq!(session.oracle().n_pes(), 128);
+        let mut session = session;
+        reports.push(session.run());
+    }
+    assert_eq!(reports[0].objective, reports[1].objective);
+    assert_eq!(reports[0].mapping.sigma, reports[1].mapping.sigma);
+}
+
+#[test]
+fn slow_dense_session_reuses_engine_across_reps() {
+    // SlowDense repetitions share the session's cached dense matrices; the
+    // trajectory must still equal the fast engine's (Table 1's premise)
+    let (g, h) = instance(128, 6);
+    let mut spec = AlgorithmSpec::parse("random+Np").unwrap();
+    spec.gain_mode = GainMode::SlowDense;
+    let slow = MapSession::new(
+        MapJobBuilder::new(g.clone(), h.clone())
+            .algorithm(spec)
+            .repetitions(3)
+            .seed(60)
+            .build()
+            .unwrap(),
+    )
+    .run();
+    let fast = MapSession::new(
+        MapJobBuilder::new(g, h)
+            .algorithm_name("random+Np")
+            .unwrap()
+            .repetitions(3)
+            .seed(60)
+            .build()
+            .unwrap(),
+    )
+    .run();
+    assert_eq!(slow.objective, fast.objective);
+    assert_eq!(slow.mapping.sigma, fast.mapping.sigma);
+    for (s, f) in slow.reps.iter().zip(&fast.reps) {
+        assert_eq!(s.objective, f.objective);
+    }
+}
+
+#[test]
+fn verify_policy_without_runtime_reports_none() {
+    let (g, h) = instance(128, 7);
+    let job = MapJobBuilder::new(g, h)
+        .algorithm_name("topdown")
+        .unwrap()
+        .verify(VerifyPolicy::IfAvailable)
+        .build()
+        .unwrap();
+    let report = MapSession::new(job).run();
+    assert_eq!(report.verified, None);
+    assert_eq!(report.xla_objective, None);
+    assert_eq!(report.verify_error, None);
+}
+
+#[test]
+fn required_verification_without_runtime_is_an_error() {
+    let (g, h) = instance(128, 7);
+    let job = MapJobBuilder::new(g, h)
+        .algorithm_name("topdown")
+        .unwrap()
+        .verify(VerifyPolicy::Required)
+        .build()
+        .unwrap();
+    let err = MapSession::new(job.clone()).run_checked().unwrap_err();
+    assert!(err.contains("could not run"), "{err}");
+    // plain run() stays infallible and reports the gap instead
+    let report = MapSession::new(job).run();
+    assert_eq!(report.verified, None);
+}
+
+#[test]
+fn job_accessors_and_report_shape() {
+    let (g, h) = instance(128, 8);
+    let job = MapJobBuilder::new(g, h)
+        .algorithm_name("topdown+Nc2")
+        .unwrap()
+        .repetitions(2)
+        .seed(9)
+        .build()
+        .unwrap();
+    assert_eq!(job.comm().n(), 128);
+    assert_eq!(job.hierarchy().n_pes(), 128);
+    assert_eq!(job.algorithm().name(), "topdown+Nc2");
+    assert_eq!(job.oracle_mode(), OracleMode::Implicit);
+    assert_eq!(job.verify_policy(), VerifyPolicy::Skip);
+    let report = MapSession::new(job).run();
+    assert_eq!(report.algorithm, "topdown+Nc2");
+    assert!(report.total_secs >= 0.0);
+    assert!(!report.short_circuited);
+    assert!(report.improvement_pct() >= 0.0);
+    assert_eq!(report.best().objective, report.objective);
+}
+
+#[test]
+fn request_translation_preserves_session_results() {
+    // service boundary: job -> request -> job must execute identically
+    let (g, h) = instance(128, 9);
+    let job = MapJobBuilder::new(g, h)
+        .algorithm_name("topdown+Nc1")
+        .unwrap()
+        .repetitions(2)
+        .seed(12)
+        .build()
+        .unwrap();
+    let direct = MapSession::new(job.clone()).run();
+    let roundtripped = MapJob::from_request(&job.to_request(1)).unwrap();
+    let via_wire_types = MapSession::new(roundtripped).run();
+    assert_eq!(direct.objective, via_wire_types.objective);
+    assert_eq!(direct.mapping.sigma, via_wire_types.mapping.sigma);
+}
+
+#[test]
+fn hierarchy_for_matches_cli_semantics() {
+    // divisible by 64: the default 4:16:(n/64) machine
+    let h = hierarchy_for(256, "", "").unwrap();
+    assert_eq!(h.n_pes(), 256);
+    assert_eq!(h.s, vec![4, 16, 4]);
+    // not divisible: flat fallback instead of an error
+    let h = hierarchy_for(77, "", "").unwrap();
+    assert_eq!(h.n_pes(), 77);
+    assert_eq!(h.levels(), 1);
+    // explicit hierarchy must still match the instance size
+    assert!(hierarchy_for(77, "4:16:2", "1:10:100").is_err());
+}

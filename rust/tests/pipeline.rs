@@ -1,13 +1,26 @@
 //! Integration: the full §4.1 pipeline — generator → partitioner →
 //! communication model → construction → local search — across instance
-//! families, hierarchy shapes and algorithms.
+//! families, hierarchy shapes and algorithms, driven through the
+//! `api::MapJobBuilder` front door.
 
+use qapmap::api::{MapJobBuilder, MapReport, MapSession, OracleMode};
 use qapmap::gen;
-use qapmap::mapping::algorithms::{run, AlgorithmSpec};
+use qapmap::graph::Graph;
 use qapmap::mapping::{objective, DistanceOracle, Hierarchy};
 use qapmap::model::{build_instance, comm_graph};
 use qapmap::partition::{partition_kway, PartitionConfig};
 use qapmap::util::Rng;
+
+fn run_algo(comm: &Graph, h: &Hierarchy, algo: &str, cfg: PartitionConfig, seed: u64) -> MapReport {
+    let job = MapJobBuilder::new(comm.clone(), h.clone())
+        .algorithm_name(algo)
+        .unwrap()
+        .partition_config(cfg)
+        .seed(seed)
+        .build()
+        .unwrap();
+    MapSession::new(job).run()
+}
 
 #[test]
 fn full_pipeline_all_families_all_algorithms() {
@@ -18,9 +31,9 @@ fn full_pipeline_all_families_all_algorithms() {
         assert_eq!(comm.n(), 128, "{family}");
         let h = Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap();
         let oracle = DistanceOracle::implicit(h.clone());
-        for algo in ["identity", "random", "mm", "gac", "rcb", "bottomup", "topdown", "topdown+Nc2"] {
-            let spec = AlgorithmSpec::parse(algo).unwrap();
-            let r = run(&comm, &h, &oracle, &spec, &PartitionConfig::perfectly_balanced(), &mut rng);
+        for algo in ["identity", "random", "mm", "gac", "rcb", "bottomup", "topdown", "topdown+Nc2"]
+        {
+            let r = run_algo(&comm, &h, algo, PartitionConfig::perfectly_balanced(), 5);
             r.mapping.validate().unwrap_or_else(|e| panic!("{family}/{algo}: {e}"));
             assert_eq!(
                 r.objective,
@@ -43,11 +56,9 @@ fn pipeline_respects_cut_equivalence() {
     assert_eq!(comm.total_edge_weight(), p.cut(&app));
 
     let h = Hierarchy::new(vec![64], vec![7]).unwrap();
-    let oracle = DistanceOracle::implicit(h.clone());
     let expect = comm.total_edge_weight() * 7;
     for algo in ["identity", "random", "topdown"] {
-        let spec = AlgorithmSpec::parse(algo).unwrap();
-        let r = run(&comm, &h, &oracle, &spec, &PartitionConfig::default(), &mut rng);
+        let r = run_algo(&comm, &h, algo, PartitionConfig::default(), 3);
         assert_eq!(r.objective, expect, "{algo}: flat machine makes all mappings equal");
     }
 }
@@ -59,23 +70,8 @@ fn deeper_hierarchies_work() {
     let comm = build_instance(&app, 512, &mut rng);
     // 4 levels: 2 cores, 4 procs, 8 nodes, 8 racks = 512 PEs
     let h = Hierarchy::new(vec![2, 4, 8, 8], vec![1, 10, 100, 1000]).unwrap();
-    let oracle = DistanceOracle::implicit(h.clone());
-    let td = run(
-        &comm,
-        &h,
-        &oracle,
-        &AlgorithmSpec::parse("topdown").unwrap(),
-        &PartitionConfig::perfectly_balanced(),
-        &mut rng,
-    );
-    let rd = run(
-        &comm,
-        &h,
-        &oracle,
-        &AlgorithmSpec::parse("random").unwrap(),
-        &PartitionConfig::perfectly_balanced(),
-        &mut rng,
-    );
+    let td = run_algo(&comm, &h, "topdown", PartitionConfig::perfectly_balanced(), 7);
+    let rd = run_algo(&comm, &h, "random", PartitionConfig::perfectly_balanced(), 8);
     assert!(
         (td.objective as f64) < 0.6 * rd.objective as f64,
         "topdown {} vs random {}",
@@ -91,10 +87,8 @@ fn asymmetric_hierarchy_levels() {
     let app = gen::random_geometric_graph(4096, &mut rng);
     let comm = build_instance(&app, 105, &mut rng);
     let h = Hierarchy::new(vec![3, 5, 7], vec![2, 11, 101]).unwrap();
-    let oracle = DistanceOracle::implicit(h.clone());
     for algo in ["mm", "topdown", "bottomup", "rcb"] {
-        let spec = AlgorithmSpec::parse(algo).unwrap();
-        let r = run(&comm, &h, &oracle, &spec, &PartitionConfig::perfectly_balanced(), &mut rng);
+        let r = run_algo(&comm, &h, algo, PartitionConfig::perfectly_balanced(), 11);
         r.mapping.validate().unwrap_or_else(|e| panic!("{algo}: {e}"));
     }
 }
@@ -105,13 +99,20 @@ fn explicit_and_implicit_oracles_agree_end_to_end() {
     let app = gen::delaunay_graph(2048, &mut rng);
     let comm = build_instance(&app, 128, &mut rng);
     let h = Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap();
-    let imp = DistanceOracle::implicit(h.clone());
-    let exp = DistanceOracle::explicit(&h);
-    let spec = AlgorithmSpec::parse("mm+Np").unwrap();
-    let r1 = run(&comm, &h, &imp, &spec, &PartitionConfig::default(), &mut Rng::new(9));
-    let r2 = run(&comm, &h, &exp, &spec, &PartitionConfig::default(), &mut Rng::new(9));
-    assert_eq!(r1.mapping.sigma, r2.mapping.sigma);
-    assert_eq!(r1.objective, r2.objective);
+    let mut results = Vec::new();
+    for mode in [OracleMode::Implicit, OracleMode::Explicit] {
+        let job = MapJobBuilder::new(comm.clone(), h.clone())
+            .algorithm_name("mm+Np")
+            .unwrap()
+            .oracle_mode(mode)
+            .partition_config(PartitionConfig::default())
+            .seed(9)
+            .build()
+            .unwrap();
+        results.push(MapSession::new(job).run());
+    }
+    assert_eq!(results[0].mapping.sigma, results[1].mapping.sigma);
+    assert_eq!(results[0].objective, results[1].objective);
 }
 
 #[test]
@@ -125,9 +126,7 @@ fn metis_roundtrip_through_pipeline() {
     let comm2 = qapmap::graph::io::read_metis(&buf[..]).unwrap();
     assert_eq!(comm, comm2);
     let h = Hierarchy::new(vec![4, 16], vec![1, 10]).unwrap();
-    let oracle = DistanceOracle::implicit(h.clone());
-    let spec = AlgorithmSpec::parse("topdown+Nc1").unwrap();
-    let r1 = run(&comm, &h, &oracle, &spec, &PartitionConfig::default(), &mut Rng::new(3));
-    let r2 = run(&comm2, &h, &oracle, &spec, &PartitionConfig::default(), &mut Rng::new(3));
+    let r1 = run_algo(&comm, &h, "topdown+Nc1", PartitionConfig::default(), 3);
+    let r2 = run_algo(&comm2, &h, "topdown+Nc1", PartitionConfig::default(), 3);
     assert_eq!(r1.objective, r2.objective);
 }

@@ -8,7 +8,6 @@
 use qapmap::gen::random_geometric_graph;
 use qapmap::mapping::algorithms::AlgorithmSpec;
 use qapmap::mapping::{construct, objective, DistanceOracle, Hierarchy, Mapping};
-use qapmap::partition::PartitionConfig;
 use qapmap::runtime::{QapRuntime, RuntimeHandle, BATCH, GAIN_BATCH};
 use qapmap::util::Rng;
 
@@ -111,19 +110,17 @@ fn xla_swap_gains_match_sparse_engine() {
 
 #[test]
 fn xla_tracks_local_search_trajectory() {
-    // run a real algorithm, verify its claimed objective via XLA
+    // run a real algorithm through the api session, verify its claimed
+    // objective via XLA
     let Some(rt) = handle() else { return };
     let (g, h, o) = setup(128, 11);
-    let mut rng = Rng::new(12);
-    let spec = AlgorithmSpec::parse("topdown+Nc2").unwrap();
-    let r = qapmap::mapping::algorithms::run(
-        &g,
-        &h,
-        &o,
-        &spec,
-        &PartitionConfig::perfectly_balanced(),
-        &mut rng,
-    );
+    let job = qapmap::api::MapJobBuilder::new(g.clone(), h)
+        .algorithm_name("topdown+Nc2")
+        .unwrap()
+        .seed(12)
+        .build()
+        .unwrap();
+    let r = qapmap::api::MapSession::new(job).run();
     let xla = rt.objective(&g, &o, &r.mapping).unwrap().unwrap();
     assert!(
         (xla - r.objective as f32).abs() <= 1e-4 * (r.objective as f32).max(1.0),

@@ -1,0 +1,135 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! This build has no access to crates.io, so the small slice of the anyhow
+//! API that the workspace uses is reimplemented here: an opaque string-backed
+//! [`Error`], the [`Result`] alias, the [`Context`] extension trait, and the
+//! `anyhow!` / `bail!` macros. Errors are flattened to their display form
+//! (no source chain, no backtraces); context is prepended `"context: cause"`
+//! exactly as anyhow's `{:#}` formatting renders it. Swapping in the real
+//! crate is a one-line change in the parent `Cargo.toml`.
+
+use std::fmt;
+
+/// An opaque error: the rendered message of whatever was thrown.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prepend context, anyhow-style (`"context: cause"`).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like the real anyhow::Error, this type deliberately does NOT implement
+// std::error::Error — that is what makes the blanket conversion below
+// coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to results.
+pub trait Context<T> {
+    /// Wrap the error with a static context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Wrap the error with a lazily-evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a format string, or any
+/// displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an error built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, "disk on fire")
+    }
+
+    #[test]
+    fn conversion_and_context() {
+        let e: Error = io_err().into();
+        assert_eq!(e.to_string(), "disk on fire");
+        let r: Result<()> = Err(io_err()).context("reading header");
+        assert_eq!(r.unwrap_err().to_string(), "reading header: disk on fire");
+        let r: Result<()> = Err(io_err()).with_context(|| format!("file {}", 7));
+        assert_eq!(r.unwrap_err().to_string(), "file 7: disk on fire");
+    }
+
+    #[test]
+    fn macros() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let n = 3;
+        let e = anyhow!("got {n} items");
+        assert_eq!(e.to_string(), "got 3 items");
+        let e = anyhow!("got {} items", 4);
+        assert_eq!(e.to_string(), "got 4 items");
+        let e = anyhow!(String::from("owned"));
+        assert_eq!(e.to_string(), "owned");
+        fn fails() -> Result<()> {
+            bail!("nope {}", 1)
+        }
+        assert_eq!(fails().unwrap_err().to_string(), "nope 1");
+    }
+
+    #[test]
+    fn alternate_format_is_plain() {
+        let e = anyhow!("ctx").context("outer");
+        assert_eq!(format!("{e:#}"), "outer: ctx");
+    }
+}
