@@ -7,8 +7,8 @@
 
 use qapmap::api::{MapJobBuilder, MapSession};
 use qapmap::bench::{full_mode, instance_suite, write_csv, Table, FAMILIES};
-use qapmap::mapping::local_search::nc_pairs;
 use qapmap::mapping::objective::{Mapping, SwapEngine};
+use qapmap::mapping::refine::{nc_pairs, Cycle3, Refiner};
 use qapmap::mapping::{DistanceOracle, Hierarchy};
 use qapmap::partition::PartitionConfig;
 use qapmap::util::stats::geometric_mean;
@@ -36,7 +36,12 @@ fn nc1_heavy_first(eng: &mut SwapEngine, comm: &qapmap::graph::Graph) -> u64 {
 }
 
 /// N_C^1 with custom termination threshold multiplier.
-fn nc1_threshold(eng: &mut SwapEngine, comm: &qapmap::graph::Graph, mult: f64, rng: &mut Rng) -> u64 {
+fn nc1_threshold(
+    eng: &mut SwapEngine,
+    comm: &qapmap::graph::Graph,
+    mult: f64,
+    rng: &mut Rng,
+) -> u64 {
     let mut pairs = nc_pairs(comm, 1);
     rng.shuffle(&mut pairs);
     let threshold = ((pairs.len() as f64) * mult) as usize;
@@ -69,7 +74,8 @@ fn main() {
     let mut lines = Vec::new();
 
     // construction shared by all variants
-    let variants: Vec<(&str, Box<dyn Fn(&mut SwapEngine, &qapmap::graph::Graph, &mut Rng) -> u64>)> = vec![
+    type Variant = Box<dyn Fn(&mut SwapEngine, &qapmap::graph::Graph, &mut Rng) -> u64>;
+    let variants: Vec<(&str, Variant)> = vec![
         ("random (paper)", Box::new(|e, c, r| nc1_threshold(e, c, 1.0, r))),
         ("heavy-first", Box::new(|e, c, _r| nc1_heavy_first(e, c))),
         ("threshold m/2", Box::new(|e, c, r| nc1_threshold(e, c, 0.5, r))),
@@ -77,7 +83,7 @@ fn main() {
         // §5 future work: pair swaps followed by triangle rotations
         ("+3-cycles", Box::new(|e, c, r| {
             let evals = nc1_threshold(e, c, 1.0, r);
-            evals + qapmap::mapping::local_search::cycle3_search(e, c, r, 50).evaluated
+            evals + Cycle3::new(50).refine(e, c, r).evaluated
         })),
     ];
 

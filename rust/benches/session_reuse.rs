@@ -1,22 +1,23 @@
 //! Acceptance benchmark for the `api` layer: one `MapSession` with
-//! `repetitions = 8` versus 8 independent legacy `run` calls, on the
-//! ISSUE's reference instance (rgg12 partitioned into 256 blocks).
+//! `repetitions = 8` versus 8 independent one-repetition sessions, on the
+//! reference instance (rgg12 partitioned into 256 blocks).
 //!
-//! What the session amortizes across repetitions (allocated/computed once):
+//! What the long-lived session amortizes across repetitions
+//! (allocated/computed once instead of 8×):
 //! * the `DistanceOracle` (O(n²) matrix fill in `--explicit` mode),
-//! * the `N_C^d` pair set (a BFS ball per vertex — dominant for d = 10),
-//! * the triangle set of the cyclic search,
+//! * the `N_C^d` pair set inside the session's `Refiner` (a BFS ball per
+//!   vertex — dominant for d = 10) and the triangle set of the cyclic
+//!   search,
 //! * the `SwapEngine` Γ buffer and the dense baseline's C/D matrices,
-//! * deterministic constructions (MM is O(n²) per rep in the legacy path).
+//! * deterministic constructions (MM is O(n²) per repetition otherwise).
 //!
 //! Both sides use identical seeds, so the winning objective must be
 //! identical — the bench asserts it.
 
 use qapmap::api::{MapJobBuilder, MapSession, OracleMode};
 use qapmap::mapping::algorithms::AlgorithmSpec;
-use qapmap::mapping::{DistanceOracle, Hierarchy};
+use qapmap::mapping::Hierarchy;
 use qapmap::model::build_instance;
-use qapmap::partition::PartitionConfig;
 use qapmap::util::{Rng, Timer};
 
 const REPS: u64 = 8;
@@ -28,7 +29,7 @@ fn main() {
     let comm = build_instance(&app, 256, &mut rng);
     let h = Hierarchy::parse("4:16:4", "1:10:100").unwrap();
     println!(
-        "== session scratch reuse: 1 session x {REPS} reps vs {REPS} independent runs ==\n\
+        "== session scratch reuse: 1 session x {REPS} reps vs {REPS} one-rep sessions ==\n\
          instance: rgg12 -> 256 blocks (m/n = {:.1})\n",
         comm.density()
     );
@@ -44,27 +45,21 @@ fn main() {
     ] {
         let spec = AlgorithmSpec::parse(algo).unwrap();
 
-        // legacy shape: oracle built once per job (as the old coordinator
-        // did), then one free-function call per repetition — every call
-        // rebuilds pair sets, Γ buffers and deterministic constructions
+        // independent shape: a fresh one-repetition session per seed —
+        // every run rebuilds the oracle, pair sets, Γ buffers and
+        // deterministic constructions from scratch
         let t = Timer::start();
-        let oracle = match mode {
-            OracleMode::Implicit => DistanceOracle::implicit(h.clone()),
-            OracleMode::Explicit => DistanceOracle::explicit(&h),
-        };
         let mut best_independent = u64::MAX;
         for r in 0..REPS {
-            let mut rng = Rng::new(SEED + r);
-            #[allow(deprecated)]
-            let res = qapmap::mapping::algorithms::run(
-                &comm,
-                &h,
-                &oracle,
-                &spec,
-                &PartitionConfig::perfectly_balanced(),
-                &mut rng,
-            );
-            best_independent = best_independent.min(res.objective);
+            let job = MapJobBuilder::new(comm.clone(), h.clone())
+                .algorithm(spec)
+                .oracle_mode(mode)
+                .repetitions(1)
+                .seed(SEED + r)
+                .build()
+                .unwrap();
+            let report = MapSession::new(job).run();
+            best_independent = best_independent.min(report.objective);
         }
         let t_independent = t.secs();
 
@@ -90,6 +85,6 @@ fn main() {
         );
     }
     println!("\n(positive delta = session faster; the win comes from reusing the");
-    println!(" oracle, N_C pair/triangle sets, engine buffers and deterministic");
-    println!(" constructions across repetitions instead of rebuilding them 8x)");
+    println!(" oracle, the refiners' N_C pair/triangle sets, engine buffers and");
+    println!(" deterministic constructions across repetitions instead of 8x)");
 }

@@ -4,8 +4,10 @@
 use crate::coordinator::{MapRequest, MapResponse};
 use crate::graph::Graph;
 use crate::mapping::algorithms::{AlgorithmSpec, Neighborhood};
+use crate::mapping::multilevel::MlConfig;
 use crate::mapping::Hierarchy;
 use crate::partition::PartitionConfig;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::report::MapReport;
 
@@ -49,6 +51,7 @@ pub struct MapJobBuilder {
     seed: u64,
     part_cfg: PartitionConfig,
     verify: VerifyPolicy,
+    ml_cfg: MlConfig,
 }
 
 impl MapJobBuilder {
@@ -64,6 +67,7 @@ impl MapJobBuilder {
             seed: 1,
             part_cfg: PartitionConfig::perfectly_balanced(),
             verify: VerifyPolicy::Skip,
+            ml_cfg: MlConfig::default(),
         }
     }
 
@@ -108,6 +112,20 @@ impl MapJobBuilder {
         self
     }
 
+    /// Maximum V-cycle depth for `ml:` algorithms (number of halving
+    /// coarsening levels). Ignored by single-level specs.
+    pub fn levels(mut self, levels: usize) -> Self {
+        self.ml_cfg.max_levels = levels;
+        self
+    }
+
+    /// Stop coarsening once the coarse communication graph has at most this
+    /// many vertices (`ml:` algorithms only; clamped to ≥ 2).
+    pub fn coarsen_limit(mut self, limit: usize) -> Self {
+        self.ml_cfg.coarsen_limit = limit;
+        self
+    }
+
     /// Validate and freeze the configuration.
     pub fn build(self) -> Result<MapJob, String> {
         if self.comm.n() != self.hierarchy.n_pes() {
@@ -129,6 +147,7 @@ impl MapJobBuilder {
             seed: self.seed,
             part_cfg: self.part_cfg,
             verify: self.verify,
+            ml_cfg: self.ml_cfg,
         })
     }
 }
@@ -146,6 +165,7 @@ pub struct MapJob {
     pub(crate) seed: u64,
     pub(crate) part_cfg: PartitionConfig,
     pub(crate) verify: VerifyPolicy,
+    pub(crate) ml_cfg: MlConfig,
 }
 
 impl MapJob {
@@ -189,6 +209,11 @@ impl MapJob {
         self.verify
     }
 
+    /// Multilevel V-cycle knobs (only consulted by `ml:` algorithms).
+    pub fn ml_config(&self) -> &MlConfig {
+        &self.ml_cfg
+    }
+
     /// True iff the whole pipeline is deterministic: repeated runs cannot
     /// differ, so repetitions are pointless. Identity, Müller-Merbach and
     /// GreedyAllC never consult the RNG; every local search does (except
@@ -222,8 +247,12 @@ impl MapJob {
 
     /// Build the wire request a client sends for this job.
     ///
-    /// Lossy by design: `oracle_mode` and `partition_config` are
+    /// Lossy by design: `oracle_mode`, `partition_config` and the
+    /// multilevel depth knobs (`levels`/`coarsen_limit`) are
     /// session-local execution knobs, not part of the protocol — the server
+    /// runs `ml:` specs with its default V-cycle depth. The algorithm spec
+    /// string itself (including the `ml:` prefix) crosses the wire
+    /// unchanged, so remote execution runs the same algorithm. The server
     /// always runs with its own defaults (implicit oracle, perfectly
     /// balanced partitions), and `VerifyPolicy::Required` degrades to the
     /// wire's plain `verify` flag. A job with non-default session-local
@@ -269,12 +298,24 @@ impl MapResponse {
     }
 }
 
+/// How often the flat-hierarchy fallback warning has been *printed* in this
+/// process — always 0 or 1, since [`hierarchy_for`] emits it exactly once
+/// no matter how many repetitions or jobs hit the fallback. Exposed so
+/// tests can assert the once-only contract.
+pub fn flat_fallback_warning_count() -> u64 {
+    FLAT_FALLBACK_WARNINGS.load(Ordering::Relaxed)
+}
+
+static FLAT_FALLBACK_WARNINGS: AtomicU64 = AtomicU64::new(0);
+
 /// The default machine shape used when the CLI gets no `--S`: 4 cores per
 /// processor, 16 processors per node, `n/64` nodes (`D = 1:10:100`). When
 /// `n` is not divisible by 64 this falls back to a flat single-level
 /// hierarchy `S = n`, `D = 1` with a warning instead of bailing — every
 /// mapping is then cost-equal, but the pipeline still runs end-to-end.
-/// Shared by the CLI and the service examples.
+/// The warning is emitted once per process (the first offending instance),
+/// not once per job or repetition. Shared by the CLI and the service
+/// examples.
 pub fn hierarchy_for(n: usize, s: &str, d: &str) -> Result<Hierarchy, String> {
     let h = if s.is_empty() {
         if n >= 64 && n % 64 == 0 {
@@ -283,10 +324,18 @@ pub fn hierarchy_for(n: usize, s: &str, d: &str) -> Result<Hierarchy, String> {
             if n == 0 {
                 return Err("instance has no processes".into());
             }
-            eprintln!(
-                "warning: --S not given and n={n} is not divisible by 64; \
-                 falling back to the flat hierarchy S={n}, D=1 (all PEs equidistant)"
-            );
+            // one atomic is both the once-guard and the test-observable
+            // count: only the thread that wins the 0 -> 1 transition prints
+            if FLAT_FALLBACK_WARNINGS
+                .compare_exchange(0, 1, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                eprintln!(
+                    "warning: --S not given and n={n} is not divisible by 64; \
+                     falling back to the flat hierarchy S={n}, D=1 (all PEs \
+                     equidistant; warned once per process)"
+                );
+            }
             Hierarchy::new(vec![n as u64], vec![1])?
         }
     } else {

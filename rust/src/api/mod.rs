@@ -13,14 +13,23 @@
 //!   ([`MapJob::from_request`], [`MapJob::to_request`]).
 //! * [`MapSession`] — owns all reusable state: the cached
 //!   [`crate::mapping::DistanceOracle`], the [`crate::mapping::SwapEngine`]
-//!   `Γ` buffer, `N_C^d` pair sets and triangle sets, the dense baseline
-//!   engine's matrices, and deterministic-construction results. Repetitions
-//!   therefore stop reallocating (and stop recomputing) from scratch, the
-//!   deterministic short-circuit lives in exactly one place, and best-of-N
-//!   selection optionally scores through one batched XLA call.
+//!   `Γ` buffer, the [`crate::mapping::refine::Refiner`]s (which own the
+//!   `N_C^d` pair sets, triangle sets and shuffle buffers), the dense
+//!   baseline engine's matrices, deterministic-construction results, and —
+//!   for `ml:` jobs — the multilevel coarsening hierarchy with one refiner
+//!   per level. Repetitions therefore stop reallocating (and stop
+//!   recomputing) from scratch, the deterministic short-circuit lives in
+//!   exactly one place, and best-of-N selection optionally scores through
+//!   one batched XLA call.
 //!
 //! Results come back as a structured [`MapReport`] (per-repetition
-//! [`RepStat`]s, timings, verification verdict).
+//! [`RepStat`]s — including per-level [`LevelStat`]s for V-cycle runs —
+//! timings, verification verdict).
+//!
+//! Multilevel (`ml:`) jobs expose two extra builder knobs:
+//! [`MapJobBuilder::levels`] caps the V-cycle depth and
+//! [`MapJobBuilder::coarsen_limit`] stops coarsening at a minimum coarse
+//! size; see [`crate::mapping::multilevel`] for the algorithm.
 //!
 //! ```no_run
 //! use qapmap::api::{MapJobBuilder, MapSession};
@@ -38,13 +47,13 @@
 //! println!("J = {} ({} reps)", report.objective, report.reps.len());
 //! ```
 //!
-//! The legacy free function `mapping::algorithms::run` survives as a
-//! `#[deprecated]` single-repetition shim over this module.
-
 pub mod job;
 pub mod report;
 pub mod session;
 
-pub use job::{hierarchy_for, MapJob, MapJobBuilder, OracleMode, VerifyPolicy};
+pub use crate::mapping::multilevel::LevelStat;
+pub use job::{
+    flat_fallback_warning_count, hierarchy_for, MapJob, MapJobBuilder, OracleMode, VerifyPolicy,
+};
 pub use report::{MapReport, RepStat};
 pub use session::{MapSession, VERIFY_RTOL};

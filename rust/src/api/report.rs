@@ -1,6 +1,7 @@
 //! Structured results: per-repetition statistics and the session report.
 
-use crate::mapping::local_search::SearchStats;
+use crate::mapping::multilevel::LevelStat;
+use crate::mapping::refine::SearchStats;
 use crate::mapping::Mapping;
 
 /// One repetition's outcome, flattened to wire-friendly scalars (these
@@ -9,7 +10,9 @@ use crate::mapping::Mapping;
 pub struct RepStat {
     /// The RNG seed this repetition ran with (`job seed + rep index`).
     pub seed: u64,
-    /// Objective after construction, before local search.
+    /// Objective after construction, before local search. Multilevel runs
+    /// report the coarsest construction projected to the finest level
+    /// without refinement.
     pub objective_initial: u64,
     /// Final objective.
     pub objective: u64,
@@ -21,12 +24,16 @@ pub struct RepStat {
     pub construct_secs: f64,
     /// Local-search wall time (seconds).
     pub ls_secs: f64,
-    /// Pair/rotation gain evaluations.
+    /// Pair/rotation gain evaluations (multilevel: summed over all levels).
     pub evaluated: u64,
-    /// Moves applied.
+    /// Moves applied (multilevel: summed over all levels).
     pub improved: u64,
-    /// Full sweeps/rounds executed.
+    /// Full sweeps/rounds executed (multilevel: summed over all levels).
     pub rounds: u64,
+    /// Per-level V-cycle statistics, coarsest level first (empty for
+    /// single-level runs). Travels over the wire protocol as trailing
+    /// `REP`-line groups.
+    pub levels: Vec<LevelStat>,
 }
 
 impl RepStat {
@@ -42,8 +49,6 @@ impl RepStat {
 
 /// The structured result of one [`super::MapSession`] run: the winning
 /// mapping, every repetition's statistics, and the verification verdict.
-/// Replaces the loosely-assembled field soup that each call site used to
-/// build by hand around `algorithms::run`.
 #[derive(Debug, Clone)]
 pub struct MapReport {
     /// Winning assignment (process → PE).

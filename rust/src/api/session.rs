@@ -1,16 +1,12 @@
 //! Session execution: repetition loop, scratch reuse, best-of-N selection,
 //! batched XLA scoring and verification.
 
-use crate::graph::{Graph, NodeId};
-use crate::mapping::algorithms::{
-    AlgorithmSpec, Construction, GainMode, MapResult, Neighborhood,
-};
-use crate::mapping::local_search::{
-    comm_triangles, cycle3_search_in, n2_cyclic, nc_pairs, nc_search_in, np_blocks, SearchStats,
-};
+use crate::graph::Graph;
+use crate::mapping::algorithms::{Construction, GainMode, MapResult};
+use crate::mapping::multilevel::{level_refiners, vcycle_refine, MlHierarchy};
 use crate::mapping::objective::{objective, DenseEngine, Mapping, SwapEngine};
-use crate::mapping::{construct, DistanceOracle, Hierarchy};
-use crate::partition::PartitionConfig;
+use crate::mapping::refine::{refiner_for, Refiner};
+use crate::mapping::{construct, DistanceOracle};
 use crate::runtime::{RuntimeHandle, BATCH};
 use crate::util::{Rng, Timer};
 
@@ -23,20 +19,20 @@ pub const VERIFY_RTOL: f32 = 1e-4;
 /// Reusable per-session state: everything that is a pure function of the
 /// frozen job and therefore identical across repetitions. The invariant is
 /// that a scratch value is only ever used with one `(comm, oracle, spec,
-/// part_cfg)` tuple — the session guarantees this by owning both the job
-/// and the scratch.
+/// part_cfg, ml_cfg)` tuple — the session guarantees this by owning both
+/// the job and the scratch.
 #[derive(Default)]
 pub(crate) struct SessionScratch {
-    /// `Γ` buffer handed to each repetition's [`SwapEngine`].
+    /// `Γ` buffer handed to each repetition's [`SwapEngine`] (and threaded
+    /// through every V-cycle level).
     gamma: Vec<u64>,
-    /// Canonical `N_C^d` pair set, keyed by the distance it was built for.
-    nc_pairs: Option<(u32, Vec<(NodeId, NodeId)>)>,
-    /// Working copy of the pair set (shuffled by the search).
-    nc_work: Vec<(NodeId, NodeId)>,
-    /// Canonical triangle set for the cyclic-exchange search.
-    triangles: Option<Vec<(NodeId, NodeId, NodeId)>>,
-    /// Working copy of the triangle set.
-    tri_work: Vec<(NodeId, NodeId, NodeId)>,
+    /// The single-level refiner. Owns its reusable pair/triangle sets and
+    /// shuffle buffers (see [`crate::mapping::refine`]), so keeping it here
+    /// amortizes their construction across repetitions.
+    refiner: Option<Box<dyn Refiner>>,
+    /// Multilevel state for `ml:` jobs: the coarsening hierarchy (built
+    /// once, from the job seed) and one refiner per level.
+    ml: Option<MlState>,
     /// Cached dense engine (Table 1 baseline): the `O(n²)` C/D matrices are
     /// rebuilt only when absent, re-seeded via [`DenseEngine::reset`].
     dense: Option<DenseEngine>,
@@ -45,6 +41,30 @@ pub(crate) struct SessionScratch {
     /// one-time construction cost (reported by every repetition that reuses
     /// it, so timing stats stay meaningful).
     construction: Option<(Mapping, f64)>,
+}
+
+/// The session-cached half of the multilevel V-cycle.
+pub(crate) struct MlState {
+    hierarchy: MlHierarchy,
+    refiners: Vec<Box<dyn Refiner>>,
+    /// One-time hierarchy construction cost, reported in every repetition's
+    /// `construct_secs` (same shared-cost convention as [`construct_cached`]
+    /// — per-rep timings stay comparable).
+    build_secs: f64,
+}
+
+impl MlState {
+    /// Build the coarsening hierarchy and its per-level refiners. The RNG
+    /// that drives the heavy-edge matchings is derived from the *job* seed
+    /// (not the repetition seed), so all repetitions share one hierarchy and
+    /// repeated `run` calls on a session are bit-identical.
+    fn build(job: &MapJob) -> MlState {
+        let t = Timer::start();
+        let mut rng = Rng::new(job.seed ^ 0x6d6c_5f68_6965_7261); // "ml_hiera"
+        let hierarchy = MlHierarchy::build(&job.comm, &job.hierarchy, &job.ml_cfg, &mut rng);
+        let refiners = level_refiners(&hierarchy, &job.hierarchy, &job.spec);
+        MlState { hierarchy, refiners, build_secs: t.secs() }
+    }
 }
 
 /// A mapping session: owns the frozen [`MapJob`], the distance oracle, and
@@ -95,7 +115,9 @@ impl MapSession {
 
     /// Like [`Self::run`] with an explicit base seed (repetition `r` uses
     /// `base_seed + r`). Scratch carries over, so repeated calls on one
-    /// session amortize the oracle, pair sets and engine buffers.
+    /// session amortize the oracle, pair sets, engine buffers and — for
+    /// `ml:` jobs — the coarsening hierarchy (which is always derived from
+    /// the *job* seed, regardless of `base_seed`).
     pub fn run_with_seed(&mut self, base_seed: u64) -> MapReport {
         let timer = Timer::start();
         let requested = self.job.repetitions;
@@ -106,15 +128,7 @@ impl MapSession {
         for r in 0..reps {
             let seed = base_seed.wrapping_add(r as u64);
             let mut rng = Rng::new(seed);
-            let res = execute_once(
-                &self.job.comm,
-                &self.job.hierarchy,
-                &self.oracle,
-                &self.job.spec,
-                &self.job.part_cfg,
-                &mut rng,
-                &mut self.scratch,
-            );
+            let res = execute_once(&self.job, &self.oracle, &mut rng, &mut self.scratch);
             seeds.push(seed);
             results.push(res);
         }
@@ -140,10 +154,9 @@ impl MapSession {
         let (xla_objective, verified, verify_error) = match self.job.verify {
             VerifyPolicy::Skip => (None, None, None),
             VerifyPolicy::IfAvailable | VerifyPolicy::Required => {
-                let attempt = self
-                    .runtime
-                    .as_ref()
-                    .and_then(|rt| rt.objective(&self.job.comm, &self.oracle, &best.mapping).transpose());
+                let attempt = self.runtime.as_ref().and_then(|rt| {
+                    rt.objective(&self.job.comm, &self.oracle, &best.mapping).transpose()
+                });
                 match attempt {
                     Some(Ok(xj)) => {
                         let exact = best.objective as f32;
@@ -170,6 +183,7 @@ impl MapSession {
                 evaluated: r.stats.evaluated,
                 improved: r.stats.improved,
                 rounds: r.stats.rounds,
+                levels: r.level_stats.clone(),
             })
             .collect();
 
@@ -252,7 +266,10 @@ fn score_with_runtime(
 /// True for constructions that never consult the RNG: their result is a pure
 /// function of the instance, so a session computes them once. Single source
 /// of truth — `MapJob::is_deterministic` delegates here so the repetition
-/// short-circuit and the construction cache can never disagree.
+/// short-circuit and the construction cache can never disagree. (The rule
+/// extends to `ml:` jobs: the coarsening hierarchy is derived from the job
+/// seed, so a deterministic construction plus no refinement stays a pure
+/// function of the job.)
 pub(crate) fn construction_is_deterministic(c: Construction) -> bool {
     matches!(
         c,
@@ -260,53 +277,54 @@ pub(crate) fn construction_is_deterministic(c: Construction) -> bool {
     )
 }
 
-/// Dispatch the initial construction (§3.1 + baselines).
-fn construct_initial(
-    comm: &Graph,
-    hierarchy: &Hierarchy,
-    oracle: &DistanceOracle,
-    spec: &AlgorithmSpec,
-    part_cfg: &PartitionConfig,
+/// Construct the initial mapping, caching it in the scratch slot when the
+/// construction is deterministic (MM/GreedyAllC/identity never consult the
+/// RNG). Cache hits report the shared one-time construction cost, not the
+/// ~0s clone time, so repetition timings stay comparable. Shared by the
+/// flat path and the V-cycle (whose slot holds the *coarsest* mapping — a
+/// session only ever runs one spec, so the two uses cannot mix).
+fn construct_cached(
+    cache: &mut Option<(Mapping, f64)>,
+    construction: Construction,
     rng: &mut Rng,
-) -> Mapping {
-    match spec.construction {
-        Construction::Identity => construct::identity(comm.n()),
-        Construction::Random => construct::random(comm.n(), rng),
-        Construction::MuellerMerbach => construct::mueller_merbach(comm, oracle),
-        Construction::GreedyAllC => construct::greedy_all_c(comm, hierarchy),
-        Construction::TopDown => construct::top_down(comm, hierarchy, part_cfg, rng),
-        Construction::BottomUp => construct::bottom_up(comm, hierarchy, part_cfg, rng),
-        Construction::Rcb => construct::rcb(comm, part_cfg, rng),
+    build: impl FnOnce(&mut Rng) -> Mapping,
+) -> (Mapping, f64) {
+    let t = Timer::start();
+    if construction_is_deterministic(construction) {
+        if cache.is_none() {
+            let m = build(rng);
+            *cache = Some((m, t.secs()));
+        }
+        let (m, secs) = cache.as_ref().unwrap();
+        (m.clone(), *secs)
+    } else {
+        (build(rng), t.secs())
     }
 }
 
 /// Run one complete repetition: construction (cached when deterministic),
-/// then local search with the scratch-backed engines. This is the single
-/// execution path behind both [`MapSession`] and the deprecated
-/// `mapping::algorithms::run` shim (which passes a throwaway scratch).
+/// then refinement with the scratch-backed engines — flat or, for `ml:`
+/// specs, as a multilevel V-cycle. The single execution path behind
+/// [`MapSession`].
 pub(crate) fn execute_once(
-    comm: &Graph,
-    hierarchy: &Hierarchy,
+    job: &MapJob,
     oracle: &DistanceOracle,
-    spec: &AlgorithmSpec,
-    part_cfg: &PartitionConfig,
     rng: &mut Rng,
     scratch: &mut SessionScratch,
 ) -> MapResult {
-    let t = Timer::start();
-    let (mapping, construct_secs) = if construction_is_deterministic(spec.construction) {
-        if scratch.construction.is_none() {
-            let m = construct_initial(comm, hierarchy, oracle, spec, part_cfg, rng);
-            scratch.construction = Some((m, t.secs()));
-        }
-        // cache hits report the shared one-time construction cost, not the
-        // ~0s clone time — repetition timings stay comparable
-        let (m, secs) = scratch.construction.as_ref().unwrap();
-        (m.clone(), *secs)
-    } else {
-        let m = construct_initial(comm, hierarchy, oracle, spec, part_cfg, rng);
-        (m, t.secs())
-    };
+    if job.spec.multilevel {
+        return execute_multilevel(job, oracle, rng, scratch);
+    }
+    let comm = &job.comm;
+    let spec = &job.spec;
+    let (mapping, construct_secs) =
+        construct_cached(&mut scratch.construction, spec.construction, rng, |rng| {
+            construct::initial(comm, &job.hierarchy, oracle, spec.construction, &job.part_cfg, rng)
+        });
+
+    let refiner = scratch
+        .refiner
+        .get_or_insert_with(|| refiner_for(spec.neighborhood, spec.max_sweeps, &job.hierarchy));
 
     let t = Timer::start();
     let (mapping, objective_initial, objective, stats) = match spec.gain_mode {
@@ -314,7 +332,7 @@ pub(crate) fn execute_once(
             let gamma = std::mem::take(&mut scratch.gamma);
             let mut eng = SwapEngine::with_gamma_buf(comm, oracle, mapping, gamma);
             let j0 = eng.objective();
-            let stats = run_ls_fast(&mut eng, comm, hierarchy, spec, rng, scratch);
+            let stats = refiner.refine(&mut eng, comm, rng);
             let j = eng.objective();
             let (mapping, gamma) = eng.into_parts();
             scratch.gamma = gamma;
@@ -329,7 +347,7 @@ pub(crate) fn execute_once(
                 _ => DenseEngine::new(comm, oracle, mapping),
             };
             let j0 = eng.objective();
-            let stats = run_ls_dense(&mut eng, comm, hierarchy, spec, rng, scratch);
+            let stats = refiner.refine(&mut eng, comm, rng);
             let j = eng.objective();
             let mapping = eng.mapping();
             scratch.dense = Some(eng);
@@ -338,87 +356,65 @@ pub(crate) fn execute_once(
     };
     let ls_secs = t.secs();
 
-    MapResult { mapping, objective_initial, objective, construct_secs, ls_secs, stats }
-}
-
-/// Ensure the canonical `N_C^d` pair set is cached, then fill the working
-/// copy (the search shuffles the working copy, the canonical order is what
-/// keeps trajectories identical to the un-cached path).
-fn fill_nc_work(scratch: &mut SessionScratch, comm: &Graph, d: u32) {
-    let SessionScratch { nc_pairs: cache, nc_work, .. } = scratch;
-    let stale = match cache {
-        Some((cached_d, _)) => *cached_d != d,
-        None => true,
-    };
-    if stale {
-        *cache = Some((d, nc_pairs(comm, d)));
+    MapResult {
+        mapping,
+        objective_initial,
+        objective,
+        construct_secs,
+        ls_secs,
+        stats,
+        level_stats: Vec::new(),
     }
-    let canonical = &cache.as_ref().unwrap().1;
-    nc_work.clear();
-    nc_work.extend_from_slice(canonical);
 }
 
-/// Ensure the canonical triangle set is cached, then fill the working copy.
-fn fill_tri_work(scratch: &mut SessionScratch, comm: &Graph) {
-    let SessionScratch { triangles: cache, tri_work, .. } = scratch;
-    if cache.is_none() {
-        *cache = Some(comm_triangles(comm));
-    }
-    let canonical = cache.as_ref().unwrap();
-    tri_work.clear();
-    tri_work.extend_from_slice(canonical);
-}
-
-fn run_ls_fast(
-    eng: &mut SwapEngine,
-    comm: &Graph,
-    h: &Hierarchy,
-    spec: &AlgorithmSpec,
+/// One multilevel repetition: get-or-build the cached coarsening hierarchy,
+/// construct at the coarsest level, then uncoarsen with per-level
+/// refinement ([`crate::mapping::multilevel::vcycle_refine`]). Always
+/// drives the fast engine; `GainMode::SlowDense` is a Table-1-only knob and
+/// is ignored here.
+fn execute_multilevel(
+    job: &MapJob,
+    oracle: &DistanceOracle,
     rng: &mut Rng,
     scratch: &mut SessionScratch,
-) -> SearchStats {
-    match spec.neighborhood {
-        Neighborhood::None => SearchStats::default(),
-        Neighborhood::N2 => n2_cyclic(eng, comm.n(), spec.max_sweeps),
-        Neighborhood::Np { block_len } => {
-            np_blocks(eng, comm.n(), block_len, Some(h), |e, u| e.pe_of(u), spec.max_sweeps)
-        }
-        Neighborhood::Nc { d } => {
-            fill_nc_work(scratch, comm, d);
-            nc_search_in(eng, &mut scratch.nc_work, rng, u64::MAX)
-        }
-        Neighborhood::NcCycle { d } => {
-            fill_nc_work(scratch, comm, d);
-            let mut stats = nc_search_in(eng, &mut scratch.nc_work, rng, u64::MAX);
-            fill_tri_work(scratch, comm);
-            let cyc = cycle3_search_in(eng, &mut scratch.tri_work, rng, spec.max_sweeps);
-            stats.evaluated += cyc.evaluated;
-            stats.improved += cyc.improved;
-            stats.rounds += cyc.rounds;
-            stats
-        }
-    }
-}
+) -> MapResult {
+    let SessionScratch { gamma, ml, construction, .. } = scratch;
+    let MlState { hierarchy, refiners, build_secs } =
+        ml.get_or_insert_with(|| MlState::build(job));
+    let (coarse, coarse_secs) =
+        construct_cached(construction, job.spec.construction, rng, |rng| {
+            match hierarchy.coarsest() {
+                Some(l) => construct::initial(
+                    &l.graph,
+                    &l.hierarchy,
+                    &l.oracle,
+                    job.spec.construction,
+                    &job.part_cfg,
+                    rng,
+                ),
+                None => construct::initial(
+                    &job.comm,
+                    &job.hierarchy,
+                    oracle,
+                    job.spec.construction,
+                    &job.part_cfg,
+                    rng,
+                ),
+            }
+        });
+    let construct_secs = *build_secs + coarse_secs;
 
-fn run_ls_dense(
-    eng: &mut DenseEngine,
-    comm: &Graph,
-    h: &Hierarchy,
-    spec: &AlgorithmSpec,
-    rng: &mut Rng,
-    scratch: &mut SessionScratch,
-) -> SearchStats {
-    match spec.neighborhood {
-        Neighborhood::None => SearchStats::default(),
-        Neighborhood::N2 => n2_cyclic(eng, comm.n(), spec.max_sweeps),
-        Neighborhood::Np { block_len } => {
-            np_blocks(eng, comm.n(), block_len, Some(h), |e, u| e.pe_of(u), spec.max_sweeps)
-        }
-        // rotations need the Γ machinery of the fast engine; the dense
-        // baseline (Table 1 only) runs the pair-swap part alone
-        Neighborhood::Nc { d } | Neighborhood::NcCycle { d } => {
-            fill_nc_work(scratch, comm, d);
-            nc_search_in(eng, &mut scratch.nc_work, rng, u64::MAX)
-        }
+    let t = Timer::start();
+    let outcome = vcycle_refine(&job.comm, oracle, hierarchy, coarse, refiners, rng, gamma);
+    let ls_secs = t.secs();
+
+    MapResult {
+        mapping: outcome.mapping,
+        objective_initial: outcome.objective_initial,
+        objective: outcome.objective,
+        construct_secs,
+        ls_secs,
+        stats: outcome.stats,
+        level_stats: outcome.levels,
     }
 }

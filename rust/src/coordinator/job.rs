@@ -8,7 +8,7 @@
 use crate::api::RepStat;
 use crate::graph::Graph;
 use crate::mapping::algorithms::AlgorithmSpec;
-use crate::mapping::local_search::SearchStats;
+use crate::mapping::refine::SearchStats;
 use crate::mapping::Hierarchy;
 
 /// A mapping job: find a good assignment of the processes of `comm` onto

@@ -11,18 +11,25 @@
 //! S->C:  OK <id> <objective> <j_initial> <construct_secs> <ls_secs>
 //!           <xla_obj|-> <verified:0|1|-> <best_rep> <nreps>
 //!        REP <seed> <j_initial> <j> <construct_secs> <ls_secs>
-//!            <evaluated> <improved> <rounds>     (nreps lines)
+//!            <evaluated> <improved> <rounds>
+//!            [<nlevels> (<n>:<j_init>:<j>:<evaluated>:<improved>:<rounds>)*]
 //!        SIGMA <n space-separated PE ids>
 //!   or:  ERR <id> <message...>
 //! ```
 //!
 //! The per-repetition `REP` lines carry `api::RepStat` verbatim, so clients
-//! see every seed's objective/timing, not just the winner's. Error messages
-//! are newline-escaped (`\n` → `\\n`) so multi-line failures round-trip.
+//! see every seed's objective/timing, not just the winner's — including the
+//! per-level V-cycle statistics of `ml:` algorithms as trailing
+//! colon-joined groups. Single-level repetitions keep the pre-multilevel
+//! 9-token line (no `<nlevels>`), and readers accept both forms, so mixed
+//! old/new deployments interoperate for all non-`ml:` traffic. The `ml:`
+//! prefix itself travels inside the `<algo>` token unchanged. Error
+//! messages are newline-escaped (`\n` → `\\n`) so multi-line failures
+//! round-trip.
 
 use super::job::{MapRequest, MapResponse};
 use super::service::Coordinator;
-use crate::api::RepStat;
+use crate::api::{LevelStat, RepStat};
 use crate::graph::{Builder, NodeId};
 use crate::mapping::algorithms::AlgorithmSpec;
 use crate::mapping::Hierarchy;
@@ -147,7 +154,7 @@ pub fn write_response<W: Write>(w: &mut W, resp: &MapResponse) -> Result<()> {
         resp.reps.len(),
     )?;
     for rep in &resp.reps {
-        writeln!(
+        write!(
             w,
             "REP {} {} {} {:.6} {:.6} {} {} {}",
             rep.seed,
@@ -159,6 +166,20 @@ pub fn write_response<W: Write>(w: &mut W, resp: &MapResponse) -> Result<()> {
             rep.improved,
             rep.rounds,
         )?;
+        // level groups (ml: runs) extend the line; single-level REP lines
+        // stay in the pre-multilevel 9-token form so old readers still
+        // parse every non-ml response
+        if !rep.levels.is_empty() {
+            write!(w, " {}", rep.levels.len())?;
+            for l in &rep.levels {
+                write!(
+                    w,
+                    " {}:{}:{}:{}:{}:{}",
+                    l.n, l.objective_initial, l.objective, l.evaluated, l.improved, l.rounds
+                )?;
+            }
+        }
+        writeln!(w)?;
     }
     let sigma: Vec<String> = resp.sigma.iter().map(|x| x.to_string()).collect();
     writeln!(w, "SIGMA {}", sigma.join(" "))?;
@@ -196,8 +217,33 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<MapResponse> {
                     bail!("connection closed inside REP block ({i}/{nreps})");
                 }
                 let rt: Vec<&str> = rep_line.split_whitespace().collect();
-                if rt.len() != 9 || rt[0] != "REP" {
+                if rt.len() < 9 || rt[0] != "REP" {
                     bail!("bad REP line: {rep_line:?}");
+                }
+                // 9 tokens = a pre-multilevel peer's REP line (no level
+                // count); tolerated as "no level stats" so old servers keep
+                // interoperating with new clients
+                let nlevels: usize = if rt.len() == 9 { 0 } else { rt[9].parse()? };
+                if rt.len() > 9 && rt.len() != 10 + nlevels {
+                    bail!(
+                        "REP line announces {nlevels} levels but carries {}: {rep_line:?}",
+                        rt.len() - 10
+                    );
+                }
+                let mut levels = Vec::with_capacity(nlevels.min(64));
+                for tok in rt.get(10..).unwrap_or(&[]) {
+                    let f: Vec<&str> = tok.split(':').collect();
+                    if f.len() != 6 {
+                        bail!("bad level group {tok:?} in REP line: {rep_line:?}");
+                    }
+                    levels.push(LevelStat {
+                        n: f[0].parse()?,
+                        objective_initial: f[1].parse()?,
+                        objective: f[2].parse()?,
+                        evaluated: f[3].parse()?,
+                        improved: f[4].parse()?,
+                        rounds: f[5].parse()?,
+                    });
                 }
                 reps.push(RepStat {
                     seed: rt[1].parse()?,
@@ -208,6 +254,7 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<MapResponse> {
                     evaluated: rt[6].parse()?,
                     improved: rt[7].parse()?,
                     rounds: rt[8].parse()?,
+                    levels,
                 });
             }
             let mut sig_line = String::new();
@@ -348,6 +395,7 @@ mod tests {
                 evaluated: 640,
                 improved: 17,
                 rounds: 3,
+                levels: Vec::new(),
             },
             RepStat {
                 seed: 100,
@@ -358,6 +406,25 @@ mod tests {
                 evaluated: 512,
                 improved: 31,
                 rounds: 2,
+                // a V-cycle repetition: per-level stats must survive the wire
+                levels: vec![
+                    LevelStat {
+                        n: 32,
+                        objective_initial: 900,
+                        objective: 800,
+                        evaluated: 64,
+                        improved: 5,
+                        rounds: 1,
+                    },
+                    LevelStat {
+                        n: 128,
+                        objective_initial: 2000,
+                        objective: 1234,
+                        evaluated: 448,
+                        improved: 26,
+                        rounds: 1,
+                    },
+                ],
             },
         ];
         let resp = MapResponse {
@@ -427,6 +494,42 @@ mod tests {
         let back = read_response(&mut BufReader::new(&buf[..])).unwrap();
         assert_eq!(back.id, 3);
         assert_eq!(back.error.as_deref(), Some(msg));
+    }
+
+    #[test]
+    fn ml_spec_crosses_the_wire_unchanged() {
+        let mut req = sample_request();
+        req.algorithm = AlgorithmSpec::parse("ml:topdown+Nc5").unwrap();
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req).unwrap();
+        let back = read_request(&mut BufReader::new(&buf[..])).unwrap();
+        assert_eq!(back.algorithm.name(), "ml:topdown+Nc5");
+        assert!(back.algorithm.multilevel);
+    }
+
+    #[test]
+    fn malformed_rep_lines_rejected() {
+        for (reps_line, why) in [
+            ("REP 1 2 3 0.1 0.1 4 5\n", "too few fields"),
+            ("REP 1 2 3 0.1 0.1 4 5 6 2 1:2:3:4:5:6\n", "announces 2 levels, carries 1"),
+            ("REP 1 2 3 0.1 0.1 4 5 6 1 1:2:3:4:5\n", "level group with 5 fields"),
+        ] {
+            let text = format!("OK 7 10 10 0.0 0.0 - - 0 1\n{reps_line}SIGMA 0 1\n");
+            assert!(
+                read_response(&mut BufReader::new(text.as_bytes())).is_err(),
+                "{why}"
+            );
+        }
+    }
+
+    #[test]
+    fn legacy_rep_lines_without_level_count_still_parse() {
+        // a pre-multilevel server's 9-token REP line: tolerated, no levels
+        let text = "OK 7 10 12 0.0 0.0 - - 0 1\nREP 1 12 10 0.1 0.2 4 5 6\nSIGMA 1 0\n";
+        let back = read_response(&mut BufReader::new(text.as_bytes())).unwrap();
+        assert_eq!(back.reps.len(), 1);
+        assert_eq!(back.reps[0].evaluated, 4);
+        assert!(back.reps[0].levels.is_empty());
     }
 
     #[test]

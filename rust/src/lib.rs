@@ -6,8 +6,11 @@
 //! * **Layer 3 (this crate)** — the sparse-QAP mapping library: multilevel
 //!   graph partitioner substrate, hierarchy distance oracle, construction
 //!   algorithms (Top-Down, Bottom-Up, Müller-Merbach, GreedyAllC, recursive
-//!   bisection), fast `O(d_u + d_v)` swap local search over the `N²`, `N_p`
-//!   and `N_C^d` neighborhoods, plus a rank-reordering *service* coordinator.
+//!   bisection), fast `O(d_u + d_v)` swap local search over the `N²`, `N_p`,
+//!   `N_C^d` and 3-cycle neighborhoods (unified behind the
+//!   [`mapping::refine::Refiner`] trait), a multilevel V-cycle mapping
+//!   engine ([`mapping::multilevel`], `ml:` algorithm specs), plus a
+//!   rank-reordering *service* coordinator.
 //! * **Layer 2 (python/compile/model.py)** — a JAX dense-QAP objective model,
 //!   AOT-lowered to HLO text at build time.
 //! * **Layer 1 (python/compile/kernels/)** — a Pallas kernel evaluating the
@@ -17,8 +20,7 @@
 //! cross-check and batch-score objectives; Python never runs at request time.
 //!
 //! Entry point for library users: [`api`] — build a job with
-//! [`api::MapJobBuilder`], execute it with [`api::MapSession`]. The legacy
-//! free function [`mapping::algorithms::run`] is deprecated in its favor.
+//! [`api::MapJobBuilder`], execute it with [`api::MapSession`].
 //!
 //! See `DESIGN.md` (repo root) for the system inventory, the layer map and
 //! the api-module lifecycle; the paper-vs-measured experiments are produced

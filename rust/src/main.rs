@@ -64,8 +64,9 @@ fn usage() {
     eprintln!(
         "qapmap — process mapping & sparse quadratic assignment\n\
          commands:\n  \
-         map        --inst <name>|--graph <file.metis> --blocks <k> --S a:b:c --D x:y:z\n             \
-         [--algo topdown+Nc10] [--seed 1] [--reps 1] [--verify] [--explicit-distances]\n  \
+         map        --inst <name>|--graph <file.metis> --blocks <k> --S a:b:c --D x:y:z\n  \
+                    [--algo topdown+Nc10 | ml:topdown+Nc5] [--seed 1] [--reps 1]\n  \
+                    [--verify] [--explicit-distances] [--levels 16] [--coarsen-limit 64]\n  \
          serve      [--addr 127.0.0.1:7447] [--workers N] [--queue 64] [--no-xla]\n  \
          client     --addr host:port (same instance options as map)\n  \
          gen        --inst rgg12 --out file.metis [--seed 1]\n  \
@@ -114,6 +115,8 @@ fn cmd_map(args: &Args) -> Result<()> {
         .repetitions(args.get_as("reps", 1))
         .seed(seed)
         .partition_config(PartitionConfig::perfectly_balanced())
+        .levels(args.get_as("levels", 16))
+        .coarsen_limit(args.get_as("coarsen-limit", 64))
         .verify(if verify { VerifyPolicy::IfAvailable } else { VerifyPolicy::Skip })
         .build()
         .map_err(|e| anyhow!(e))?;
@@ -159,6 +162,16 @@ fn cmd_map(args: &Args) -> Result<()> {
         }
     } else if report.short_circuited {
         println!("(deterministic algorithm: repetitions short-circuited to 1)");
+    }
+    let levels = &report.best().levels;
+    if !levels.is_empty() {
+        println!("V-cycle ({} levels, coarsest first):", levels.len());
+        for (i, l) in levels.iter().enumerate() {
+            println!(
+                "  level {i}: n={:<6} J {} -> {} ({} evaluated / {} improved / {} rounds)",
+                l.n, l.objective_initial, l.objective, l.evaluated, l.improved, l.rounds
+            );
+        }
     }
     if verify {
         match (report.xla_objective, report.verified) {

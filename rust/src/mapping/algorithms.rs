@@ -5,19 +5,21 @@
 //! names the paper uses: `identity`, `random`, `mm` (Müller-Merbach), `gac`
 //! (GreedyAllC), `rcb` (LibTopoMap-like), `bottomup`, `topdown`, with
 //! optional `+N2`, `+Np`, `+Nc<d>`, `+NcCyc<d>` local-search suffixes (e.g.
-//! the paper's best trade-off `topdown+Nc10`).
+//! the paper's best trade-off `topdown+Nc10`) and an optional `ml:` prefix
+//! selecting the multilevel V-cycle ([`crate::mapping::multilevel`]), e.g.
+//! `ml:topdown+Nc5`: coarsen the communication graph, run the named
+//! construction at the coarsest level, refine with the named neighborhood at
+//! *every* level while uncoarsening.
 //!
 //! Execution lives in [`crate::api`]: build a [`crate::api::MapJobBuilder`]
 //! with a spec from this registry and run it through a
-//! [`crate::api::MapSession`]. The free function [`run`] survives only as a
-//! deprecated single-repetition shim.
+//! [`crate::api::MapSession`]. (The former free function `run` — deprecated
+//! since 0.2.0 — has been removed now that nothing links against it; see
+//! DESIGN.md §2.)
 
-use super::hierarchy::{DistanceOracle, Hierarchy};
-use super::local_search::SearchStats;
+use super::multilevel::LevelStat;
 use super::objective::Mapping;
-use crate::graph::Graph;
-use crate::partition::PartitionConfig;
-use crate::util::Rng;
+use super::refine::SearchStats;
 
 /// Initial-solution algorithm.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -43,7 +45,8 @@ pub enum Neighborhood {
     /// This paper's communication-graph neighborhood `N_C^d`.
     Nc { d: u32 },
     /// `N_C^d` followed by triangle rotations (§5 future work, implemented
-    /// in [`super::local_search::cycle3_search`]). Fast engine only.
+    /// in [`super::refine::Cycle3`]); runs under both gain engines through
+    /// the [`super::refine::Swapper`] trait.
     NcCycle { d: u32 },
 }
 
@@ -63,6 +66,12 @@ pub struct AlgorithmSpec {
     pub gain_mode: GainMode,
     /// Max sweeps for the cyclic neighborhoods (safety bound).
     pub max_sweeps: usize,
+    /// Run as a multilevel V-cycle (`ml:` prefix): the construction maps the
+    /// coarsest graph, the neighborhood refines at every level. The V-cycle
+    /// depth knobs live on [`crate::api::MapJobBuilder`]
+    /// (`levels`/`coarsen_limit`); the gain mode is ignored — the V-cycle
+    /// always drives the fast engine.
+    pub multilevel: bool,
 }
 
 impl AlgorithmSpec {
@@ -73,14 +82,20 @@ impl AlgorithmSpec {
             neighborhood: Neighborhood::None,
             gain_mode: GainMode::Fast,
             max_sweeps: 100,
+            multilevel: false,
         }
     }
 
-    /// Parse names like `topdown`, `mm+Np`, `topdown+Nc10`, `random+N2`.
+    /// Parse names like `topdown`, `mm+Np`, `topdown+Nc10`, `random+N2`,
+    /// `ml:topdown+Nc5`.
     pub fn parse(name: &str) -> Result<AlgorithmSpec, String> {
-        let (cname, ls) = match name.split_once('+') {
+        let (multilevel, rest) = match name.strip_prefix("ml:") {
+            Some(rest) => (true, rest),
+            None => (false, name),
+        };
+        let (cname, ls) = match rest.split_once('+') {
             Some((c, l)) => (c, Some(l)),
-            None => (name, None),
+            None => (rest, None),
         };
         let construction = match cname {
             "identity" => Construction::Identity,
@@ -115,6 +130,7 @@ impl AlgorithmSpec {
             neighborhood,
             gain_mode: GainMode::Fast,
             max_sweeps: 100,
+            multilevel,
         })
     }
 
@@ -129,12 +145,13 @@ impl AlgorithmSpec {
             Construction::BottomUp => "bottomup",
             Construction::Rcb => "rcb",
         };
+        let ml = if self.multilevel { "ml:" } else { "" };
         match self.neighborhood {
-            Neighborhood::None => c.to_string(),
-            Neighborhood::N2 => format!("{c}+N2"),
-            Neighborhood::Np { .. } => format!("{c}+Np"),
-            Neighborhood::Nc { d } => format!("{c}+Nc{d}"),
-            Neighborhood::NcCycle { d } => format!("{c}+NcCyc{d}"),
+            Neighborhood::None => format!("{ml}{c}"),
+            Neighborhood::N2 => format!("{ml}{c}+N2"),
+            Neighborhood::Np { .. } => format!("{ml}{c}+Np"),
+            Neighborhood::Nc { d } => format!("{ml}{c}+Nc{d}"),
+            Neighborhood::NcCycle { d } => format!("{ml}{c}+NcCyc{d}"),
         }
     }
 }
@@ -143,7 +160,9 @@ impl AlgorithmSpec {
 #[derive(Debug, Clone)]
 pub struct MapResult {
     pub mapping: Mapping,
-    /// Objective after construction (before local search).
+    /// Objective after construction (before local search). For multilevel
+    /// runs: the coarsest construction projected to the finest level
+    /// *without* refinement.
     pub objective_initial: u64,
     /// Final objective.
     pub objective: u64,
@@ -151,62 +170,37 @@ pub struct MapResult {
     pub construct_secs: f64,
     /// Local-search wall time (seconds).
     pub ls_secs: f64,
-    /// Local-search statistics.
+    /// Local-search statistics (for multilevel runs: the aggregate over
+    /// every level).
     pub stats: SearchStats,
-}
-
-/// Run a complete algorithm on a communication graph + hierarchy, once.
-///
-/// Deprecated: this free function forces every caller to hand-roll oracle
-/// construction, repetition loops and best-of-N selection. Use
-/// [`crate::api::MapJobBuilder`] + [`crate::api::MapSession`] instead, which
-/// also reuse engine scratch, pair sets and deterministic constructions
-/// across repetitions. This shim executes a single repetition through the
-/// same session machinery (with throwaway scratch), so trajectories are
-/// bit-identical to the pre-api behavior for a given RNG.
-#[deprecated(
-    since = "0.2.0",
-    note = "use api::MapJobBuilder + api::MapSession (this shim runs one repetition with no scratch reuse)"
-)]
-pub fn run(
-    comm: &Graph,
-    hierarchy: &Hierarchy,
-    oracle: &DistanceOracle,
-    spec: &AlgorithmSpec,
-    part_cfg: &PartitionConfig,
-    rng: &mut Rng,
-) -> MapResult {
-    crate::api::session::execute_once(
-        comm,
-        hierarchy,
-        oracle,
-        spec,
-        part_cfg,
-        rng,
-        &mut Default::default(),
-    )
+    /// Per-level V-cycle statistics, coarsest first; empty for single-level
+    /// runs.
+    pub level_stats: Vec<LevelStat>,
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gen::random_geometric_graph;
 
     #[test]
     fn parse_roundtrip() {
         for name in ["identity", "random", "mm", "gac", "topdown", "bottomup", "rcb",
-                     "topdown+Nc10", "mm+Np", "random+N2", "mm+Nc1", "topdown+NcCyc1"] {
+                     "topdown+Nc10", "mm+Np", "random+N2", "mm+Nc1", "topdown+NcCyc1",
+                     "ml:topdown+Nc5", "ml:mm", "ml:bottomup+N2", "ml:rcb+NcCyc2"] {
             let spec = AlgorithmSpec::parse(name).unwrap();
             assert_eq!(spec.name(), *name, "roundtrip {name}");
         }
         assert!(AlgorithmSpec::parse("bogus").is_err());
         assert!(AlgorithmSpec::parse("mm+Nq3").is_err());
         assert!(AlgorithmSpec::parse("mm+Ncx").is_err());
+        assert!(AlgorithmSpec::parse("ml:").is_err());
+        assert!(AlgorithmSpec::parse("ml:bogus").is_err());
+        assert!(AlgorithmSpec::parse("ml:ml:mm").is_err());
     }
 
     #[test]
     fn parse_name_roundtrip_every_combination() {
-        // every construction × every neighborhood shape (including NcCyc<d>)
+        // every construction × every neighborhood shape × flat/multilevel
         let constructions = [
             (Construction::Identity, "identity"),
             (Construction::Random, "random"),
@@ -227,18 +221,21 @@ mod tests {
             (Neighborhood::NcCycle { d: 1 }, "+NcCyc1".to_string()),
             (Neighborhood::NcCycle { d: 10 }, "+NcCyc10".to_string()),
         ];
-        for (c, cname) in &constructions {
-            for (nb, suffix) in &neighborhoods {
-                let name = format!("{cname}{suffix}");
-                let spec = AlgorithmSpec::parse(&name)
-                    .unwrap_or_else(|e| panic!("parsing {name:?}: {e}"));
-                assert_eq!(spec.construction, *c, "{name}");
-                assert_eq!(spec.neighborhood, *nb, "{name}");
-                assert_eq!(spec.gain_mode, GainMode::Fast, "{name}");
-                assert_eq!(spec.name(), name, "name() must invert parse()");
-                // name() output parses back to the same spec (idempotence)
-                let again = AlgorithmSpec::parse(&spec.name()).unwrap();
-                assert_eq!(again.name(), spec.name());
+        for ml in [false, true] {
+            for (c, cname) in &constructions {
+                for (nb, suffix) in &neighborhoods {
+                    let name = format!("{}{cname}{suffix}", if ml { "ml:" } else { "" });
+                    let spec = AlgorithmSpec::parse(&name)
+                        .unwrap_or_else(|e| panic!("parsing {name:?}: {e}"));
+                    assert_eq!(spec.construction, *c, "{name}");
+                    assert_eq!(spec.neighborhood, *nb, "{name}");
+                    assert_eq!(spec.gain_mode, GainMode::Fast, "{name}");
+                    assert_eq!(spec.multilevel, ml, "{name}");
+                    assert_eq!(spec.name(), name, "name() must invert parse()");
+                    // name() output parses back to the same spec (idempotence)
+                    let again = AlgorithmSpec::parse(&spec.name()).unwrap();
+                    assert_eq!(again.name(), spec.name());
+                }
             }
         }
     }
@@ -257,6 +254,8 @@ mod tests {
             ("td+NC3", "topdown+Nc3"),
             ("td+nccyc2", "topdown+NcCyc2"),
             ("td+NcCyc2", "topdown+NcCyc2"),
+            ("ml:td+nc5", "ml:topdown+Nc5"),
+            ("ml:bu", "ml:bottomup"),
         ] {
             let spec = AlgorithmSpec::parse(alias).unwrap();
             assert_eq!(spec.name(), canonical, "alias {alias}");
@@ -282,39 +281,14 @@ mod tests {
             "nope+Nc1",
             "MM",
             "mm+Nc1+Nc2",
+            "ml:",
+            "ml:+Nc1",
+            "ml:nope",
+            "ML:mm",
+            "ml: mm",
+            "ml:ml:topdown",
         ] {
             assert!(AlgorithmSpec::parse(bad).is_err(), "{bad:?} must not parse");
         }
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_run_shim_end_to_end_improves() {
-        let mut rng = Rng::new(1);
-        let g = random_geometric_graph(256, &mut rng);
-        let h = Hierarchy::new(vec![4, 16, 4], vec![1, 10, 100]).unwrap();
-        let o = DistanceOracle::implicit(h.clone());
-        let spec = AlgorithmSpec::parse("mm+Nc2").unwrap();
-        let r = run(&g, &h, &o, &spec, &PartitionConfig::fast(), &mut rng);
-        r.mapping.validate().unwrap();
-        assert!(r.objective <= r.objective_initial);
-        assert!(r.stats.evaluated > 0);
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn slow_and_fast_same_final_objective() {
-        let mut rng = Rng::new(2);
-        let g = random_geometric_graph(128, &mut rng);
-        let h = Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap();
-        let o = DistanceOracle::implicit(h.clone());
-        let mut spec = AlgorithmSpec::parse("mm+Np").unwrap();
-        let mut r1 = Rng::new(3);
-        let fast = run(&g, &h, &o, &spec, &PartitionConfig::fast(), &mut r1);
-        spec.gain_mode = GainMode::SlowDense;
-        let mut r2 = Rng::new(3);
-        let slow = run(&g, &h, &o, &spec, &PartitionConfig::fast(), &mut r2);
-        assert_eq!(fast.objective, slow.objective);
-        assert_eq!(fast.mapping.sigma, slow.mapping.sigma);
     }
 }

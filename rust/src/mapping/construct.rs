@@ -16,12 +16,35 @@
 //! * [`rcb`] — dual recursive bisection à la LibTopoMap [15] (the paper's
 //!   external comparison): simultaneously bisect process set and PE range.
 
+use super::algorithms::Construction;
 use super::hierarchy::{DistanceOracle, Hierarchy};
 use super::objective::Mapping;
 use crate::graph::{contract, induced_subgraph, Graph, NodeId};
 use crate::partition::kway::{bisect_multilevel, exact_block_sizes};
 use crate::partition::{partition_kway, PartitionConfig};
 use crate::util::Rng;
+
+/// Dispatch a [`Construction`] by name — the single §3.1 entry point shared
+/// by the session execution path and the multilevel V-cycle (which runs it
+/// on the *coarsest* graph against the folded hierarchy).
+pub fn initial(
+    comm: &Graph,
+    hierarchy: &Hierarchy,
+    oracle: &DistanceOracle,
+    construction: Construction,
+    part_cfg: &PartitionConfig,
+    rng: &mut Rng,
+) -> Mapping {
+    match construction {
+        Construction::Identity => identity(comm.n()),
+        Construction::Random => random(comm.n(), rng),
+        Construction::MuellerMerbach => mueller_merbach(comm, oracle),
+        Construction::GreedyAllC => greedy_all_c(comm, hierarchy),
+        Construction::TopDown => top_down(comm, hierarchy, part_cfg, rng),
+        Construction::BottomUp => bottom_up(comm, hierarchy, part_cfg, rng),
+        Construction::Rcb => rcb(comm, part_cfg, rng),
+    }
+}
 
 /// The identity assignment (process `i` on PE `i`). Surprisingly strong for
 /// powers of two because the upstream KaHIP-style pipeline assigns

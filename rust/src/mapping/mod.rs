@@ -6,16 +6,23 @@
 //!   `O(d_u+d_v)` swap engine (§3.2) and the dense `O(n)` baseline.
 //! * [`construct`] — initial mappings: Top-Down, Bottom-Up (§3.1) and all
 //!   compared baselines (Müller-Merbach, GreedyAllC, RCB, identity, random).
-//! * [`local_search`] — the `N²`, `N_p` and `N_C^d` neighborhoods (§3.3).
+//! * [`refine`] — the `N²`, `N_p`, `N_C^d` and 3-cycle searches (§3.3, §5)
+//!   as [`refine::Refiner`]s over the [`refine::Swapper`] engine interface.
+//! * [`multilevel`] — the coarsen → map → uncoarsen+refine V-cycle built on
+//!   [`crate::partition::coarsen`] matchings and the refiner framework.
 //! * [`algorithms`] — a registry tying the above into named end-to-end
-//!   configurations for the CLI / coordinator / bench harness.
+//!   configurations (`topdown+Nc10`, `ml:topdown+Nc5`, …) for the CLI /
+//!   coordinator / bench harness.
 
 pub mod algorithms;
 pub mod construct;
 pub mod hierarchy;
 pub mod infer;
-pub mod local_search;
+pub mod multilevel;
 pub mod objective;
+pub mod refine;
 
 pub use hierarchy::{DistanceOracle, Hierarchy};
+pub use multilevel::{LevelStat, MlConfig, MlHierarchy};
 pub use objective::{objective, DenseEngine, Mapping, SwapEngine};
+pub use refine::{refiner_for, Refiner, SearchStats, Swapper};

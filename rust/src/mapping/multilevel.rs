@@ -1,0 +1,469 @@
+//! Multilevel V-cycle mapping: coarsen → map → uncoarsen + refine.
+//!
+//! The paper's constructions are single-shot; follow-up work (*High-Quality
+//! Hierarchical Process Mapping*, arXiv:2001.07134; *Shared-Memory
+//! Hierarchical Process Mapping*, arXiv:2504.01726) shows that refining the
+//! mapping **at every level** of a coarsening hierarchy is the biggest
+//! solution-quality lever for these sparse QAPs. This module implements
+//! that V-cycle on top of the [`crate::mapping::refine`] framework:
+//!
+//! 1. **Coarsen** the communication graph with
+//!    [`crate::partition::coarsen::coarsen_halving`] — heavy-edge matchings
+//!    completed to *perfect* matchings, so every level halves exactly.
+//!    In lock-step, the machine hierarchy is **folded**: halving the
+//!    innermost fan-out `a_1` merges PE pairs `{2p, 2p+1}` into one coarse
+//!    PE, and the ultrametric distances stay exact (every subsystem size is
+//!    divided by two, so `D_coarse(p, q) = D(2p+b, 2q+b')` for all
+//!    `b, b' ∈ {0,1}` whenever `p ≠ q`).
+//! 2. **Map** the coarsest graph with *any* existing construction
+//!    ([`crate::mapping::construct::initial`]) — at the coarsest level
+//!    `#processes == #PEs` again, so the whole §3.1 registry applies.
+//! 3. **Uncoarsen**: project level `l+1`'s mapping to level `l` (the two
+//!    fine members of a coarse vertex take the two PEs of its coarse PE)
+//!    and run the configured [`Refiner`] on the level-`l` graph with the
+//!    level-`l` folded hierarchy — a proper V-cycle, with per-level
+//!    [`SearchStats`] surfaced as [`LevelStat`]s.
+//!
+//! Every projection yields a valid permutation by construction (perfect
+//! matching ⇒ exactly two members per coarse vertex ⇒ the fine PEs `2p`
+//! and `2p+1` are each used once), and every level's refinement is
+//! monotone, both enforced by `debug_assert` here and by `tests/api.rs`.
+
+use super::construct;
+use super::hierarchy::{DistanceOracle, Hierarchy};
+use super::objective::{objective, Mapping, SwapEngine};
+use super::refine::{Refiner, SearchStats};
+use crate::graph::Graph;
+use crate::partition::coarsen::coarsen_halving;
+use crate::partition::PartitionConfig;
+use crate::util::Rng;
+
+/// Knobs for building the coarsening hierarchy (session-local, like
+/// [`PartitionConfig`] — they do not cross the service wire).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MlConfig {
+    /// Maximum number of halving levels (the V-cycle depth).
+    pub max_levels: usize,
+    /// Stop coarsening once the coarse graph has at most this many
+    /// vertices (clamped to ≥ 2).
+    pub coarsen_limit: usize,
+}
+
+impl Default for MlConfig {
+    fn default() -> Self {
+        MlConfig { max_levels: 16, coarsen_limit: 64 }
+    }
+}
+
+/// One coarse level of the hierarchy.
+#[derive(Debug, Clone)]
+pub struct MlLevel {
+    /// Coarse communication graph (`n / 2^level` vertices).
+    pub graph: Graph,
+    /// Vertex of the next-finer graph → vertex of [`Self::graph`]
+    /// (exactly two fine members per coarse vertex).
+    pub map: Vec<u32>,
+    /// The machine hierarchy folded to this level's size.
+    pub hierarchy: Hierarchy,
+    /// Implicit distance oracle over [`Self::hierarchy`] (cached so
+    /// repetitions share it).
+    pub oracle: DistanceOracle,
+}
+
+/// The coarsening hierarchy: `levels[0]` is the first coarse level (half
+/// the input size), `levels.last()` the coarsest. Empty when the input is
+/// already at or below the limit, the size is odd, or the machine hierarchy
+/// cannot fold (odd innermost fan-out).
+#[derive(Debug, Clone)]
+pub struct MlHierarchy {
+    pub levels: Vec<MlLevel>,
+}
+
+/// Fold the machine hierarchy one halving step: `a_1 /= 2`, dropping the
+/// level entirely when it reaches 1 (its distance `d_1` becomes
+/// unobservable — coarse PEs are single units). `None` when `a_1` is odd
+/// (the ultrametric would not survive) or the machine is a single PE.
+pub fn halve_hierarchy(h: &Hierarchy) -> Option<Hierarchy> {
+    let mut s = h.s.clone();
+    let mut d = h.d.clone();
+    if s[0] % 2 != 0 {
+        return None;
+    }
+    s[0] /= 2;
+    if s[0] == 1 && s.len() > 1 {
+        s.remove(0);
+        d.remove(0);
+    }
+    Hierarchy::new(s, d).ok()
+}
+
+impl MlHierarchy {
+    /// Coarsen `comm` (and fold `machine` in lock-step) until the limit,
+    /// the level cap, an odd size, or an unfoldable machine stops it.
+    /// Deterministic for a given `rng` state; [`crate::api::MapSession`]
+    /// builds it once per job and reuses it across repetitions.
+    pub fn build(comm: &Graph, machine: &Hierarchy, cfg: &MlConfig, rng: &mut Rng) -> MlHierarchy {
+        debug_assert_eq!(comm.n(), machine.n_pes());
+        let limit = cfg.coarsen_limit.max(2);
+        let mut levels: Vec<MlLevel> = Vec::new();
+        loop {
+            let step = {
+                let (cur, curh) = match levels.last() {
+                    Some(l) => (&l.graph, &l.hierarchy),
+                    None => (comm, machine),
+                };
+                if levels.len() >= cfg.max_levels || cur.n() <= limit {
+                    None
+                } else {
+                    halve_hierarchy(curh)
+                        .and_then(|h| coarsen_halving(cur, rng).map(|lvl| (lvl, h)))
+                }
+            };
+            match step {
+                Some((lvl, hierarchy)) => {
+                    let oracle = DistanceOracle::implicit(hierarchy.clone());
+                    levels.push(MlLevel { graph: lvl.coarse, map: lvl.map, hierarchy, oracle });
+                }
+                None => break,
+            }
+        }
+        MlHierarchy { levels }
+    }
+
+    /// The coarsest graph/hierarchy/oracle, or `None` when no coarsening
+    /// happened (the V-cycle then degenerates to the single-level path).
+    pub fn coarsest(&self) -> Option<&MlLevel> {
+        self.levels.last()
+    }
+}
+
+/// Per-level V-cycle statistics (coarsest level first, finest last) —
+/// flattened to wire-friendly scalars so they travel in
+/// [`crate::api::RepStat`] and over the service protocol.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LevelStat {
+    /// Number of (coarse) processes at this level.
+    pub n: usize,
+    /// Level objective after projection, before this level's refinement.
+    pub objective_initial: u64,
+    /// Level objective after refinement.
+    pub objective: u64,
+    /// Gain evaluations at this level.
+    pub evaluated: u64,
+    /// Moves applied at this level.
+    pub improved: u64,
+    /// Sweeps/rounds at this level.
+    pub rounds: u64,
+}
+
+/// The V-cycle's result.
+#[derive(Debug, Clone)]
+pub struct VcycleOutcome {
+    /// Final finest-level mapping.
+    pub mapping: Mapping,
+    /// Finest-level objective of the *unrefined* coarse construction,
+    /// projected straight down (the "after construction, before local
+    /// search" baseline every report and bench compares against).
+    pub objective_initial: u64,
+    /// Final objective.
+    pub objective: u64,
+    /// Aggregate search statistics across all levels.
+    pub stats: SearchStats,
+    /// Per-level statistics, coarsest first (always `levels + 1` entries —
+    /// the finest level is the last).
+    pub levels: Vec<LevelStat>,
+    /// The mapping at each level *after* refinement, coarsest first (the
+    /// last entry equals [`Self::mapping`]); cheap (sizes halve upward) and
+    /// used by the validity tests.
+    pub level_mappings: Vec<Mapping>,
+}
+
+/// Project a coarse mapping one level down: the two fine members of coarse
+/// vertex `c` (in id order) take PEs `2·σ_c(c)` and `2·σ_c(c) + 1`. A
+/// bijection in ⇒ a bijection out.
+pub fn project(map: &[u32], coarse_sigma: &[u32]) -> Vec<u32> {
+    let mut taken = vec![false; coarse_sigma.len()];
+    let mut sigma = vec![0u32; map.len()];
+    for (v, &c) in map.iter().enumerate() {
+        let first = !taken[c as usize];
+        taken[c as usize] = true;
+        sigma[v] = 2 * coarse_sigma[c as usize] + if first { 0 } else { 1 };
+    }
+    sigma
+}
+
+/// Run the uncoarsening half of the V-cycle: starting from a mapping of the
+/// coarsest graph, refine, project down, refine, … until the finest level.
+///
+/// `refiners` must hold `ml.levels.len() + 1` refiners, **coarsest first**
+/// (the last refines the finest graph against `fine_oracle`); keeping them
+/// alive across calls reuses their pair/triangle scratch per level. `gamma`
+/// is the shared Γ-buffer threaded through every level's [`SwapEngine`].
+pub fn vcycle_refine(
+    comm: &Graph,
+    fine_oracle: &DistanceOracle,
+    ml: &MlHierarchy,
+    coarse: Mapping,
+    refiners: &mut [Box<dyn Refiner>],
+    rng: &mut Rng,
+    gamma: &mut Vec<u64>,
+) -> VcycleOutcome {
+    let depth = ml.levels.len();
+    assert_eq!(refiners.len(), depth + 1, "one refiner per level plus the finest");
+    let mut stats = SearchStats::default();
+    let mut levels_out = Vec::with_capacity(depth + 1);
+    let mut level_mappings = Vec::with_capacity(depth + 1);
+    // the construction projected down *without* refinement, for the
+    // report's objective_initial baseline
+    let mut raw = coarse.sigma.clone();
+    let mut sigma = coarse.sigma;
+    for i in 0..=depth {
+        let (graph, oracle) = if i < depth {
+            let lvl = &ml.levels[depth - 1 - i];
+            (&lvl.graph, &lvl.oracle)
+        } else {
+            (comm, fine_oracle)
+        };
+        debug_assert_eq!(graph.n(), sigma.len());
+        let buf = std::mem::take(gamma);
+        let start = Mapping { sigma: std::mem::take(&mut sigma) };
+        let mut eng = SwapEngine::with_gamma_buf(graph, oracle, start, buf);
+        let j0 = eng.objective();
+        let s = refiners[i].refine(&mut eng, graph, rng);
+        let j1 = eng.objective();
+        debug_assert!(j1 <= j0, "level {i}: refinement worsened {j0} -> {j1}");
+        let (mapping, buf) = eng.into_parts();
+        *gamma = buf;
+        debug_assert!(mapping.validate().is_ok());
+        stats.absorb(&s);
+        levels_out.push(LevelStat {
+            n: graph.n(),
+            objective_initial: j0,
+            objective: j1,
+            evaluated: s.evaluated,
+            improved: s.improved,
+            rounds: s.rounds,
+        });
+        if i < depth {
+            let map = &ml.levels[depth - 1 - i].map;
+            sigma = project(map, &mapping.sigma);
+            raw = project(map, &raw);
+        }
+        level_mappings.push(mapping);
+    }
+    let mapping = level_mappings.last().expect("loop ran at least once").clone();
+    let objective_initial = objective(comm, fine_oracle, &Mapping { sigma: raw });
+    let objective = levels_out.last().expect("at least the finest level").objective;
+    VcycleOutcome {
+        mapping,
+        objective_initial,
+        objective,
+        stats,
+        levels: levels_out,
+        level_mappings,
+    }
+}
+
+/// Convenience entry point: build the hierarchy, construct the coarsest
+/// mapping with `spec_construction`, and run [`vcycle_refine`] with one
+/// fresh refiner per level. [`crate::api::MapSession`] uses the split
+/// pieces instead so the hierarchy and refiner scratch persist across
+/// repetitions; this function serves tests, examples and one-shot callers.
+#[allow(clippy::too_many_arguments)]
+pub fn vcycle(
+    comm: &Graph,
+    machine: &Hierarchy,
+    fine_oracle: &DistanceOracle,
+    spec: &super::algorithms::AlgorithmSpec,
+    cfg: &MlConfig,
+    part_cfg: &PartitionConfig,
+    hierarchy_rng: &mut Rng,
+    rng: &mut Rng,
+) -> (MlHierarchy, VcycleOutcome) {
+    let ml = MlHierarchy::build(comm, machine, cfg, hierarchy_rng);
+    let mut refiners = level_refiners(&ml, machine, spec);
+    let coarse = match ml.coarsest() {
+        Some(l) => {
+            construct::initial(&l.graph, &l.hierarchy, &l.oracle, spec.construction, part_cfg, rng)
+        }
+        None => construct::initial(comm, machine, fine_oracle, spec.construction, part_cfg, rng),
+    };
+    let mut gamma = Vec::new();
+    let outcome = vcycle_refine(comm, fine_oracle, &ml, coarse, &mut refiners, rng, &mut gamma);
+    (ml, outcome)
+}
+
+/// One refiner per level (coarsest first, finest last), each bound to its
+/// level's folded hierarchy so the `N_p` skip rule stays correct.
+pub fn level_refiners(
+    ml: &MlHierarchy,
+    machine: &Hierarchy,
+    spec: &super::algorithms::AlgorithmSpec,
+) -> Vec<Box<dyn Refiner>> {
+    let depth = ml.levels.len();
+    (0..=depth)
+        .map(|i| {
+            let h = if i < depth { &ml.levels[depth - 1 - i].hierarchy } else { machine };
+            super::refine::refiner_for(spec.neighborhood, spec.max_sweeps, h)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random_geometric_graph;
+    use crate::mapping::algorithms::AlgorithmSpec;
+
+    fn setup(n: usize, seed: u64) -> (Graph, Hierarchy, DistanceOracle) {
+        let mut rng = Rng::new(seed);
+        let g = random_geometric_graph(n, &mut rng);
+        let h = Hierarchy::new(vec![4, 16, (n / 64) as u64], vec![1, 10, 100]).unwrap();
+        let o = DistanceOracle::implicit(h.clone());
+        (g, h, o)
+    }
+
+    fn run_vcycle(
+        g: &Graph,
+        h: &Hierarchy,
+        o: &DistanceOracle,
+        spec: &AlgorithmSpec,
+        cfg: &MlConfig,
+        hierarchy_seed: u64,
+        rep_seed: u64,
+    ) -> (MlHierarchy, VcycleOutcome) {
+        let mut hrng = Rng::new(hierarchy_seed);
+        let mut rng = Rng::new(rep_seed);
+        let part = PartitionConfig::perfectly_balanced();
+        vcycle(g, h, o, spec, cfg, &part, &mut hrng, &mut rng)
+    }
+
+    #[test]
+    fn halve_hierarchy_folds_innermost() {
+        let h = Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap();
+        let h1 = halve_hierarchy(&h).unwrap();
+        assert_eq!(h1.s, vec![2, 16, 2]);
+        assert_eq!(h1.d, vec![1, 10, 100]);
+        let h2 = halve_hierarchy(&h1).unwrap();
+        assert_eq!(h2.s, vec![16, 2]);
+        assert_eq!(h2.d, vec![10, 100]);
+        assert_eq!(h2.n_pes(), 32);
+        // odd innermost fan-out cannot fold
+        assert!(halve_hierarchy(&Hierarchy::new(vec![3, 4], vec![1, 10]).unwrap()).is_none());
+        // flat hierarchies fold down to a single PE and then stop
+        let flat = Hierarchy::new(vec![2], vec![1]).unwrap();
+        let f1 = halve_hierarchy(&flat).unwrap();
+        assert_eq!(f1.n_pes(), 1);
+        assert!(halve_hierarchy(&f1).is_none());
+    }
+
+    #[test]
+    fn folded_distances_are_exact() {
+        // D_coarse(p, q) must equal D(2p+b, 2q+b') for p != q, any b, b'
+        let h = Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap();
+        let hc = halve_hierarchy(&h).unwrap();
+        for p in 0..hc.n_pes() as u32 {
+            for q in 0..hc.n_pes() as u32 {
+                if p == q {
+                    continue;
+                }
+                for b in 0..2u32 {
+                    for b2 in 0..2u32 {
+                        assert_eq!(
+                            hc.distance(p, q),
+                            h.distance(2 * p + b, 2 * q + b2),
+                            "({p},{q}) fold mismatch"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchy_builds_and_halves() {
+        let (g, h, _) = setup(256, 1);
+        let mut rng = Rng::new(2);
+        let cfg = MlConfig { max_levels: 8, coarsen_limit: 32 };
+        let ml = MlHierarchy::build(&g, &h, &cfg, &mut rng);
+        assert_eq!(ml.levels.len(), 3); // 256 -> 128 -> 64 -> 32
+        let mut expect = 128;
+        for lvl in &ml.levels {
+            assert_eq!(lvl.graph.n(), expect);
+            assert_eq!(lvl.hierarchy.n_pes(), expect);
+            assert_eq!(lvl.graph.validate(), Ok(()));
+            expect /= 2;
+        }
+        // total node weight is the fine vertex count at every level
+        assert_eq!(ml.coarsest().unwrap().graph.total_node_weight(), 256);
+    }
+
+    #[test]
+    fn projection_is_a_bijection() {
+        let map = vec![0, 2, 1, 2, 0, 1]; // 6 fine -> 3 coarse, 2 members each
+        let sigma = project(&map, &[2, 0, 1]);
+        let m = Mapping { sigma };
+        m.validate().unwrap();
+        // members in id order: vertex 0 (first of cluster 0 at PE 2) -> 4
+        assert_eq!(m.sigma, vec![4, 2, 0, 3, 5, 1]);
+    }
+
+    #[test]
+    fn vcycle_valid_monotone_and_improves() {
+        let (g, h, o) = setup(256, 3);
+        let spec = AlgorithmSpec::parse("topdown+Nc3").unwrap();
+        let cfg = MlConfig { max_levels: 8, coarsen_limit: 32 };
+        let (ml, out) = run_vcycle(&g, &h, &o, &spec, &cfg, 7, 8);
+        assert_eq!(out.levels.len(), ml.levels.len() + 1);
+        assert_eq!(out.level_mappings.len(), out.levels.len());
+        for (i, (stat, m)) in out.levels.iter().zip(&out.level_mappings).enumerate() {
+            m.validate().unwrap_or_else(|e| panic!("level {i}: {e}"));
+            assert!(stat.objective <= stat.objective_initial, "level {i} worsened");
+            assert_eq!(m.n(), stat.n);
+        }
+        assert_eq!(out.mapping.sigma, out.level_mappings.last().unwrap().sigma);
+        assert_eq!(out.objective, objective(&g, &o, &out.mapping));
+        assert!(out.objective <= out.objective_initial);
+        assert!(out.stats.evaluated > 0);
+    }
+
+    #[test]
+    fn vcycle_deterministic_for_fixed_seeds() {
+        let (g, h, o) = setup(128, 4);
+        let spec = AlgorithmSpec::parse("topdown+Nc2").unwrap();
+        let cfg = MlConfig { max_levels: 8, coarsen_limit: 16 };
+        let a = run_vcycle(&g, &h, &o, &spec, &cfg, 11, 12).1;
+        let b = run_vcycle(&g, &h, &o, &spec, &cfg, 11, 12).1;
+        assert_eq!(a.mapping.sigma, b.mapping.sigma);
+        assert_eq!(a.objective, b.objective);
+        assert_eq!(a.levels, b.levels);
+    }
+
+    #[test]
+    fn vcycle_degenerates_without_coarsening() {
+        // coarsen_limit above n: no levels, the V-cycle is construct+refine
+        let (g, h, o) = setup(128, 5);
+        let spec = AlgorithmSpec::parse("mm+Nc1").unwrap();
+        let cfg = MlConfig { max_levels: 8, coarsen_limit: 4096 };
+        let (ml, out) = run_vcycle(&g, &h, &o, &spec, &cfg, 13, 14);
+        assert!(ml.levels.is_empty());
+        assert_eq!(out.levels.len(), 1);
+        out.mapping.validate().unwrap();
+    }
+
+    #[test]
+    fn vcycle_not_worse_than_projection_baseline() {
+        // the whole point: refined-at-every-level beats (or ties) the raw
+        // projected construction
+        let (g, h, o) = setup(256, 6);
+        let spec = AlgorithmSpec::parse("topdown+Nc5").unwrap();
+        let cfg = MlConfig::default();
+        let (_, out) = run_vcycle(&g, &h, &o, &spec, &cfg, 15, 16);
+        assert!(
+            out.objective < out.objective_initial,
+            "{} vs {}",
+            out.objective,
+            out.objective_initial
+        );
+    }
+}

@@ -446,6 +446,75 @@ impl DenseEngine {
             None
         }
     }
+
+    /// Gain of rotating the PEs of three processes along the cycle
+    /// `u -> v -> w -> u` (u gets v's PE, v gets w's, w gets u's) — the same
+    /// move [`SwapEngine::rotate3_gain`] evaluates sparsely, here via the
+    /// dense full-row scan (`O(n)`, matching this engine's cost model).
+    pub fn rotate3_gain(&self, u: NodeId, v: NodeId, w: NodeId) -> i64 {
+        debug_assert!(u != v && v != w && u != w);
+        let (u, v, w) = (u as usize, v as usize, w as usize);
+        let n = self.n;
+        let pu = self.sigma[u] as usize;
+        let pv = self.sigma[v] as usize;
+        let pw = self.sigma[w] as usize;
+        // new PEs after the rotation: u -> pv, v -> pw, w -> pu
+        let mut delta = 0i64;
+        for x in 0..n {
+            if x == u || x == v || x == w {
+                continue; // intra-triple edges handled separately
+            }
+            let px = self.sigma[x] as usize;
+            delta += self.c[u * n + x] as i64
+                * (self.d[pv * n + px] as i64 - self.d[pu * n + px] as i64);
+            delta += self.c[v * n + x] as i64
+                * (self.d[pw * n + px] as i64 - self.d[pv * n + px] as i64);
+            delta += self.c[w * n + x] as i64
+                * (self.d[pu * n + px] as i64 - self.d[pw * n + px] as i64);
+        }
+        // intra-triple edges: each unordered pair once, new vs old distance
+        delta += self.c[u * n + v] as i64
+            * (self.d[pv * n + pw] as i64 - self.d[pu * n + pv] as i64);
+        delta += self.c[u * n + w] as i64
+            * (self.d[pv * n + pu] as i64 - self.d[pu * n + pw] as i64);
+        delta += self.c[v * n + w] as i64
+            * (self.d[pw * n + pu] as i64 - self.d[pv * n + pw] as i64);
+        -delta
+    }
+
+    /// Apply the 3-cycle rotation `u -> v -> w -> u`.
+    pub fn do_rotate3(&mut self, u: NodeId, v: NodeId, w: NodeId) {
+        let gain = self.rotate3_gain(u, v, w);
+        let pu = self.sigma[u as usize];
+        self.sigma[u as usize] = self.sigma[v as usize];
+        self.sigma[v as usize] = self.sigma[w as usize];
+        self.sigma[w as usize] = pu;
+        self.j = (self.j as i64 - gain) as u64;
+        self.swaps_applied += 1;
+    }
+
+    /// Apply the rotation only if it strictly improves; returns the gain.
+    /// (Mirrors [`Self::try_swap`]: the application is inlined so the `O(n)`
+    /// gain scan runs once, not twice.)
+    pub fn try_rotate3(&mut self, u: NodeId, v: NodeId, w: NodeId) -> Option<i64> {
+        let gain = self.rotate3_gain(u, v, w);
+        if gain > 0 {
+            let pu = self.sigma[u as usize];
+            self.sigma[u as usize] = self.sigma[v as usize];
+            self.sigma[v as usize] = self.sigma[w as usize];
+            self.sigma[w as usize] = pu;
+            self.j = (self.j as i64 - gain) as u64;
+            self.swaps_applied += 1;
+            Some(gain)
+        } else {
+            None
+        }
+    }
+
+    /// Recompute the objective from the dense matrices (test oracle).
+    pub fn recompute_objective(&self) -> u64 {
+        dense_objective(&self.c, &self.d, &self.sigma, self.n)
+    }
 }
 
 /// `O(n²)` dense objective initialization shared by [`DenseEngine::new`] and
@@ -625,6 +694,99 @@ mod tests {
         let (mapping, gamma) = reused.into_parts();
         mapping.validate().unwrap();
         assert_eq!(gamma.len(), g.n());
+    }
+
+    #[test]
+    fn rotate3_gain_matches_recompute() {
+        let (g, o) = setup(7, 15);
+        let mut rng = Rng::new(16);
+        let mut eng = SwapEngine::new(&g, &o, Mapping { sigma: rng.permutation(g.n()) });
+        for _ in 0..300 {
+            let n = g.n();
+            let u = rng.index(n) as u32;
+            let mut v = rng.index(n) as u32;
+            let mut w = rng.index(n) as u32;
+            if v == u {
+                v = (v + 1) % n as u32;
+            }
+            while w == u || w == v {
+                w = (w + 1) % n as u32;
+            }
+            let before = eng.objective();
+            let gain = eng.rotate3_gain(u, v, w);
+            eng.do_rotate3(u, v, w);
+            assert_eq!(
+                eng.objective() as i64,
+                before as i64 - gain,
+                "rotation ({u},{v},{w})"
+            );
+            assert_eq!(eng.objective(), eng.recompute_objective());
+        }
+        assert!(eng.gamma_invariant_holds());
+        eng.mapping().validate().unwrap();
+    }
+
+    #[test]
+    fn dense_rotate3_agrees_with_sparse() {
+        // satellite of the Swapper unification: the dense engine's rotation
+        // gain and application must match the fast engine's move for move
+        let (g, o) = setup(6, 30);
+        let mut rng = Rng::new(31);
+        let m = Mapping { sigma: rng.permutation(g.n()) };
+        let mut fast = SwapEngine::new(&g, &o, m.clone());
+        let mut slow = DenseEngine::new(&g, &o, m);
+        for _ in 0..200 {
+            let n = g.n();
+            let u = rng.index(n) as u32;
+            let mut v = rng.index(n) as u32;
+            let mut w = rng.index(n) as u32;
+            if v == u {
+                v = (v + 1) % n as u32;
+            }
+            while w == u || w == v {
+                w = (w + 1) % n as u32;
+            }
+            assert_eq!(
+                fast.rotate3_gain(u, v, w),
+                slow.rotate3_gain(u, v, w),
+                "rotation gain ({u},{v},{w})"
+            );
+            fast.do_rotate3(u, v, w);
+            slow.do_rotate3(u, v, w);
+            assert_eq!(fast.objective(), slow.objective());
+            assert_eq!(fast.mapping(), slow.mapping());
+        }
+        assert_eq!(slow.objective(), slow.recompute_objective());
+        slow.mapping().validate().unwrap();
+    }
+
+    #[test]
+    fn dense_try_rotate3_only_improves() {
+        let (g, o) = setup(6, 32);
+        let mut rng = Rng::new(33);
+        let mut eng = DenseEngine::new(&g, &o, Mapping { sigma: rng.permutation(g.n()) });
+        let mut last = eng.objective();
+        for _ in 0..500 {
+            let n = g.n();
+            let u = rng.index(n) as u32;
+            let mut v = rng.index(n) as u32;
+            let mut w = rng.index(n) as u32;
+            if v == u {
+                v = (v + 1) % n as u32;
+            }
+            while w == u || w == v {
+                w = (w + 1) % n as u32;
+            }
+            match eng.try_rotate3(u, v, w) {
+                Some(gain) => {
+                    assert!(gain > 0);
+                    assert!(eng.objective() < last);
+                }
+                None => assert_eq!(eng.objective(), last),
+            }
+            last = eng.objective();
+        }
+        assert_eq!(eng.objective(), eng.recompute_objective());
     }
 
     #[test]

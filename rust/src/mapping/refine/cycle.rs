@@ -1,0 +1,247 @@
+//! Cyclic-exchange search over communication-graph *triangles* (the paper's
+//! §5 future work: "allow swapping along cycles in the communication
+//! graph").
+
+use super::nc::NcNeighborhood;
+use super::{graph_key, Refiner, SearchStats, Swapper};
+use crate::graph::{Graph, NodeId};
+use crate::util::Rng;
+
+/// Enumerate the triangles `u < v < w` of `comm` (for each edge `(u,v)`,
+/// intersect the sorted adjacencies).
+pub fn comm_triangles(comm: &Graph) -> Vec<(NodeId, NodeId, NodeId)> {
+    let mut triangles: Vec<(NodeId, NodeId, NodeId)> = Vec::new();
+    for u in 0..comm.n() as NodeId {
+        for &v in comm.neighbors(u) {
+            if v <= u {
+                continue;
+            }
+            // sorted adjacency intersection
+            let (mut i, mut j) = (0usize, 0usize);
+            let nu = comm.neighbors(u);
+            let nv = comm.neighbors(v);
+            while i < nu.len() && j < nv.len() {
+                match nu[i].cmp(&nv[j]) {
+                    std::cmp::Ordering::Less => i += 1,
+                    std::cmp::Ordering::Greater => j += 1,
+                    std::cmp::Ordering::Equal => {
+                        if nu[i] > v {
+                            triangles.push((u, v, nu[i]));
+                        }
+                        i += 1;
+                        j += 1;
+                    }
+                }
+            }
+        }
+    }
+    triangles
+}
+
+/// Triangle-rotation search: enumerate the triangles of `G_C`, try both
+/// rotation directions, apply strictly improving ones; repeat until a full
+/// pass finds nothing (or `max_rounds`). Owns the triangle set and a
+/// shuffled working copy, rebuilt only when the refined graph changes.
+///
+/// Runs under any engine whose [`Swapper::supports_rotate3`] is true (both
+/// in-tree engines); engines inheriting the default-unsupported rotation are
+/// skipped entirely (zero evaluations) rather than burning a no-op pass.
+#[derive(Debug, Clone)]
+pub struct Cycle3 {
+    /// Bound on the number of full passes.
+    pub max_rounds: usize,
+    cache: Option<((usize, usize, u64), Vec<(NodeId, NodeId, NodeId)>)>,
+    work: Vec<(NodeId, NodeId, NodeId)>,
+}
+
+impl Cycle3 {
+    pub fn new(max_rounds: usize) -> Cycle3 {
+        Cycle3 { max_rounds, cache: None, work: Vec::new() }
+    }
+
+    fn fill_work(&mut self, comm: &Graph) {
+        let key = graph_key(comm);
+        let stale = match &self.cache {
+            Some((cached, _)) => *cached != key,
+            None => true,
+        };
+        if stale {
+            self.cache = Some((key, comm_triangles(comm)));
+        }
+        let canonical = &self.cache.as_ref().unwrap().1;
+        self.work.clear();
+        self.work.extend_from_slice(canonical);
+    }
+
+    /// The search loop over a caller-provided triangle set (shuffled in
+    /// place). Exposed for ablation harnesses.
+    pub fn search_in(
+        engine: &mut dyn Swapper,
+        triangles: &mut [(NodeId, NodeId, NodeId)],
+        rng: &mut Rng,
+        max_rounds: usize,
+    ) -> SearchStats {
+        let mut stats = SearchStats::default();
+        if triangles.is_empty() {
+            return stats;
+        }
+        rng.shuffle(triangles);
+        for _ in 0..max_rounds {
+            stats.rounds += 1;
+            let mut any = false;
+            for &(u, v, w) in triangles.iter() {
+                // both rotation directions; the second is only evaluated
+                // (and only counted) when the first does not apply
+                stats.evaluated += 1;
+                let hit = engine.try_rotate3(u, v, w).is_some() || {
+                    stats.evaluated += 1;
+                    engine.try_rotate3(u, w, v).is_some()
+                };
+                if hit {
+                    stats.improved += 1;
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        stats
+    }
+}
+
+impl Refiner for Cycle3 {
+    fn name(&self) -> String {
+        "Cyc3".into()
+    }
+
+    fn refine(&mut self, engine: &mut dyn Swapper, comm: &Graph, rng: &mut Rng) -> SearchStats {
+        if !engine.supports_rotate3() {
+            return SearchStats::default();
+        }
+        self.fill_work(comm);
+        Self::search_in(engine, &mut self.work, rng, self.max_rounds)
+    }
+}
+
+/// The registry's `+NcCyc<d>`: `N_C^d` pair swaps to convergence, then
+/// triangle rotations (a strictly larger move class; never worsens).
+#[derive(Debug, Clone)]
+pub struct NcCycle {
+    nc: NcNeighborhood,
+    cyc: Cycle3,
+}
+
+impl NcCycle {
+    pub fn new(d: u32, max_rounds: usize) -> NcCycle {
+        NcCycle { nc: NcNeighborhood::new(d), cyc: Cycle3::new(max_rounds) }
+    }
+}
+
+impl Refiner for NcCycle {
+    fn name(&self) -> String {
+        format!("NcCyc{}", self.nc.d)
+    }
+
+    fn refine(&mut self, engine: &mut dyn Swapper, comm: &Graph, rng: &mut Rng) -> SearchStats {
+        let mut stats = self.nc.refine(engine, comm, rng);
+        stats.absorb(&self.cyc.refine(engine, comm, rng));
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random_geometric_graph;
+    use crate::mapping::hierarchy::{DistanceOracle, Hierarchy};
+    use crate::mapping::objective::{Mapping, SwapEngine};
+    use crate::mapping::refine::nc_neighborhood;
+
+    fn setup(nexp: usize, seed: u64) -> (Graph, DistanceOracle) {
+        let mut rng = Rng::new(seed);
+        let g = random_geometric_graph(1 << nexp, &mut rng);
+        let h = Hierarchy::new(vec![4, 16, (1 << nexp) / 64], vec![1, 10, 100]).unwrap();
+        (g, DistanceOracle::implicit(h))
+    }
+
+    #[test]
+    fn cycle3_improves_beyond_pair_swaps() {
+        // after N_C^1 pair-swap convergence, triangle rotations may still
+        // find gains (a strictly larger move class); never worsen.
+        let (g, o) = setup(8, 17);
+        let mut rng = Rng::new(18);
+        let mut eng = SwapEngine::new(&g, &o, Mapping { sigma: rng.permutation(g.n()) });
+        nc_neighborhood(&mut eng, &g, 1, &mut rng, u64::MAX);
+        let after_pairs = eng.objective();
+        let stats = Cycle3::new(50).refine(&mut eng, &g, &mut rng);
+        assert!(eng.objective() <= after_pairs);
+        assert!(stats.evaluated > 0, "rgg comm graphs contain triangles");
+        assert_eq!(eng.objective(), eng.recompute_objective());
+    }
+
+    #[test]
+    fn cycle3_on_triangle_free_graph_is_noop() {
+        // a path graph has no triangles
+        let g = crate::graph::from_edges(
+            6,
+            &[(0, 1, 1), (1, 2, 1), (2, 3, 1), (3, 4, 1), (4, 5, 1)],
+        );
+        let h = Hierarchy::new(vec![2, 3], vec![1, 10]).unwrap();
+        let o = DistanceOracle::implicit(h);
+        let mut rng = Rng::new(19);
+        let mut eng = SwapEngine::new(&g, &o, Mapping::identity(6));
+        let stats = Cycle3::new(10).refine(&mut eng, &g, &mut rng);
+        assert_eq!(stats.evaluated, 0);
+    }
+
+    #[test]
+    fn unsupported_engine_is_skipped() {
+        // an engine that keeps the default-unsupported rotation gets zero
+        // evaluations instead of a futile pass over every triangle
+        struct PairsOnly(u64);
+        impl Swapper for PairsOnly {
+            fn try_swap(&mut self, _u: NodeId, _v: NodeId) -> Option<i64> {
+                None
+            }
+            fn objective(&self) -> u64 {
+                self.0
+            }
+            fn pe_of(&self, u: NodeId) -> u32 {
+                u
+            }
+        }
+        let (g, _) = setup(6, 20);
+        let mut rng = Rng::new(21);
+        let mut eng = PairsOnly(7);
+        let stats = Cycle3::new(10).refine(&mut eng, &g, &mut rng);
+        assert_eq!(stats, SearchStats::default());
+        assert_eq!(eng.try_rotate3(0, 1, 2), None, "default rotation is a no-op");
+    }
+
+    #[test]
+    fn kept_alive_cached_triangles_match_fresh() {
+        let (g, o) = setup(7, 33);
+        let m = {
+            let mut r = Rng::new(34);
+            Mapping { sigma: r.permutation(g.n()) }
+        };
+        let mut refiner = Cycle3::new(20);
+        {
+            let mut warm_rng = Rng::new(98);
+            let mut warm = SwapEngine::new(&g, &o, m.clone());
+            refiner.refine(&mut warm, &g, &mut warm_rng);
+        }
+        let mut rng_a = Rng::new(35);
+        let mut e1 = SwapEngine::new(&g, &o, m.clone());
+        let s1 = refiner.refine(&mut e1, &g, &mut rng_a);
+
+        let mut rng_b = Rng::new(35);
+        let mut e2 = SwapEngine::new(&g, &o, m);
+        let mut tris = comm_triangles(&g);
+        let s2 = Cycle3::search_in(&mut e2, &mut tris, &mut rng_b, 20);
+
+        assert_eq!(e1.objective(), e2.objective());
+        assert_eq!(s1, s2);
+    }
+}

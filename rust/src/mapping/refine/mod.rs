@@ -1,0 +1,273 @@
+//! Local-search refinement over swap neighborhoods (paper §2, §3.3),
+//! unified behind the [`Refiner`] trait.
+//!
+//! This module replaces the former `mapping::local_search` free functions
+//! (`n2_cyclic`, `np_blocks`, `nc_neighborhood`, `nc_search_in`,
+//! `cycle3_search*`) with one trait and four concrete refiners:
+//!
+//! * [`N2Cyclic`] — Heider's full pair-exchange neighborhood `N²`.
+//! * [`NpBlocks`] — Brandfass et al.'s pruned index-block neighborhood `N_p`.
+//! * [`NcNeighborhood`] — this paper's communication-graph neighborhood
+//!   `N_C^d` (owns and reuses the materialized pair set).
+//! * [`Cycle3`] — cyclic exchange over communication-graph triangles (§5
+//!   future work; owns and reuses the triangle set).
+//!
+//! Each refiner owns its reusable scratch — pair sets, triangle sets and
+//! shuffle buffers that used to be cached ad hoc inside
+//! [`crate::api::MapSession`] — so both the flat session path and the
+//! multilevel V-cycle ([`crate::mapping::multilevel`]) reuse them by simply
+//! keeping the refiner alive across repetitions (and across V-cycle levels:
+//! one refiner per level).
+//!
+//! All refiners drive a `&mut dyn` [`Swapper`], so the identical search
+//! trajectory runs under both the fast `O(d_u + d_v)` [`SwapEngine`] and the
+//! dense `O(n)` [`DenseEngine`] baseline (Table 1's premise) — including the
+//! 3-cycle rotations, which both engines now support via
+//! [`Swapper::try_rotate3`].
+
+pub mod cycle;
+pub mod n2;
+pub mod nc;
+pub mod np;
+
+pub use cycle::{comm_triangles, Cycle3, NcCycle};
+pub use n2::N2Cyclic;
+pub use nc::{nc_neighborhood, nc_pairs, NcNeighborhood};
+pub use np::NpBlocks;
+
+use super::algorithms::Neighborhood;
+use super::hierarchy::Hierarchy;
+use super::objective::{DenseEngine, SwapEngine};
+use crate::graph::{Graph, NodeId};
+use crate::util::Rng;
+
+/// Common interface over the fast (sparse, `O(d_u+d_v)`) and slow (dense,
+/// `O(n)`) swap engines.
+pub trait Swapper {
+    /// Apply the swap iff it strictly improves the objective.
+    fn try_swap(&mut self, u: NodeId, v: NodeId) -> Option<i64>;
+    /// Current objective value.
+    fn objective(&self) -> u64;
+    /// PE currently hosting process `u`.
+    fn pe_of(&self, u: NodeId) -> u32;
+    /// Apply the 3-cycle rotation `u -> v -> w -> u` iff it strictly
+    /// improves. Default-unsupported: engines that lack rotation machinery
+    /// inherit a no-op that never moves (and must leave
+    /// [`Self::supports_rotate3`] false so [`Cycle3`] can skip them).
+    fn try_rotate3(&mut self, _u: NodeId, _v: NodeId, _w: NodeId) -> Option<i64> {
+        None
+    }
+    /// True when [`Self::try_rotate3`] actually evaluates rotations.
+    fn supports_rotate3(&self) -> bool {
+        false
+    }
+}
+
+impl Swapper for SwapEngine<'_> {
+    fn try_swap(&mut self, u: NodeId, v: NodeId) -> Option<i64> {
+        SwapEngine::try_swap(self, u, v)
+    }
+    fn objective(&self) -> u64 {
+        SwapEngine::objective(self)
+    }
+    fn pe_of(&self, u: NodeId) -> u32 {
+        SwapEngine::pe_of(self, u)
+    }
+    fn try_rotate3(&mut self, u: NodeId, v: NodeId, w: NodeId) -> Option<i64> {
+        SwapEngine::try_rotate3(self, u, v, w)
+    }
+    fn supports_rotate3(&self) -> bool {
+        true
+    }
+}
+
+impl Swapper for DenseEngine {
+    fn try_swap(&mut self, u: NodeId, v: NodeId) -> Option<i64> {
+        DenseEngine::try_swap(self, u, v)
+    }
+    fn objective(&self) -> u64 {
+        DenseEngine::objective(self)
+    }
+    fn pe_of(&self, u: NodeId) -> u32 {
+        DenseEngine::pe_of(self, u)
+    }
+    fn try_rotate3(&mut self, u: NodeId, v: NodeId, w: NodeId) -> Option<i64> {
+        DenseEngine::try_rotate3(self, u, v, w)
+    }
+    fn supports_rotate3(&self) -> bool {
+        true
+    }
+}
+
+/// Search statistics returned by every refiner.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SearchStats {
+    /// Pairs/rotations evaluated (gain computations).
+    pub evaluated: u64,
+    /// Moves applied.
+    pub improved: u64,
+    /// Full sweeps/rounds executed.
+    pub rounds: u64,
+}
+
+impl SearchStats {
+    /// Accumulate another refiner's statistics (used when refiners compose,
+    /// e.g. [`NcCycle`], and by the V-cycle's per-repetition aggregate).
+    pub fn absorb(&mut self, other: &SearchStats) {
+        self.evaluated += other.evaluated;
+        self.improved += other.improved;
+        self.rounds += other.rounds;
+    }
+}
+
+/// A local-search refinement pass: drive `engine` (which holds the current
+/// assignment of `comm`'s processes) to a local optimum of the refiner's
+/// neighborhood. Implementations own their reusable scratch; a refiner
+/// instance is bound to the one communication graph it first refines
+/// (subsequent calls reuse the cached pair/triangle sets).
+pub trait Refiner {
+    /// Human-readable name (for benches and logs).
+    fn name(&self) -> String;
+    /// Run the search to convergence; never increases `engine.objective()`.
+    fn refine(&mut self, engine: &mut dyn Swapper, comm: &Graph, rng: &mut Rng) -> SearchStats;
+}
+
+/// The no-op refiner ([`Neighborhood::None`]): construction-only specs run
+/// through the same code path as everything else.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Noop;
+
+impl Refiner for Noop {
+    fn name(&self) -> String {
+        "none".into()
+    }
+    fn refine(&mut self, _engine: &mut dyn Swapper, _comm: &Graph, _rng: &mut Rng) -> SearchStats {
+        SearchStats::default()
+    }
+}
+
+/// Instantiate the refiner for a [`Neighborhood`]. `hierarchy` is the
+/// machine the engine maps onto — the `N_p` pair-skip rule needs it; in the
+/// multilevel V-cycle each level passes its *folded* hierarchy.
+pub fn refiner_for(
+    neighborhood: Neighborhood,
+    max_sweeps: usize,
+    hierarchy: &Hierarchy,
+) -> Box<dyn Refiner> {
+    match neighborhood {
+        Neighborhood::None => Box::new(Noop),
+        Neighborhood::N2 => Box::new(N2Cyclic { max_sweeps }),
+        Neighborhood::Np { block_len } => {
+            Box::new(NpBlocks::new(block_len, max_sweeps, Some(hierarchy.clone())))
+        }
+        Neighborhood::Nc { d } => Box::new(NcNeighborhood::new(d)),
+        Neighborhood::NcCycle { d } => Box::new(NcCycle::new(d, max_sweeps)),
+    }
+}
+
+/// Fingerprint a graph for the scratch caches: refiners rebuild their pair /
+/// triangle sets when the graph they are asked to refine changes. Size
+/// alone is not enough (two same-family instances can share `(n, m)` with
+/// different edges), so the key also folds every edge endpoint and weight
+/// through FNV-1a. `O(n + m)` — negligible next to any search, which
+/// evaluates at least `m` gain computations of `O(deg)` each. (Within a
+/// session or V-cycle each refiner only ever sees one graph; the
+/// fingerprint turns accidental cross-graph reuse into a rebuild instead of
+/// a silent wrong-pair-set search.)
+pub(crate) fn graph_key(comm: &Graph) -> (usize, usize, u64) {
+    let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a offset basis
+    let mut mix = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(0x1_0000_0001_b3); // FNV prime
+    };
+    for u in 0..comm.n() as NodeId {
+        for (v, w) in comm.edges(u) {
+            if v > u {
+                mix(u as u64);
+                mix(v as u64);
+                mix(w);
+            }
+        }
+    }
+    (comm.n(), comm.m(), h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random_geometric_graph;
+    use crate::mapping::hierarchy::DistanceOracle;
+    use crate::mapping::objective::Mapping;
+
+    pub(crate) fn setup(nexp: usize, seed: u64) -> (Graph, DistanceOracle) {
+        let mut rng = Rng::new(seed);
+        let g = random_geometric_graph(1 << nexp, &mut rng);
+        let h = Hierarchy::new(vec![4, 16, (1 << nexp) / 64], vec![1, 10, 100]).unwrap();
+        (g, DistanceOracle::implicit(h))
+    }
+
+    #[test]
+    fn factory_covers_every_neighborhood() {
+        let h = Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap();
+        for (nb, name) in [
+            (Neighborhood::None, "none"),
+            (Neighborhood::N2, "N2"),
+            (Neighborhood::Np { block_len: 64 }, "Np"),
+            (Neighborhood::Nc { d: 3 }, "Nc3"),
+            (Neighborhood::NcCycle { d: 2 }, "NcCyc2"),
+        ] {
+            assert_eq!(refiner_for(nb, 100, &h).name(), name);
+        }
+    }
+
+    #[test]
+    fn noop_refiner_never_moves() {
+        let (g, o) = setup(6, 40);
+        let mut rng = Rng::new(41);
+        let m = Mapping { sigma: rng.permutation(g.n()) };
+        let mut eng = crate::mapping::objective::SwapEngine::new(&g, &o, m);
+        let before = eng.objective();
+        let stats = Noop.refine(&mut eng, &g, &mut rng);
+        assert_eq!(eng.objective(), before);
+        assert_eq!(stats, SearchStats::default());
+    }
+
+    #[test]
+    fn dense_and_sparse_follow_identical_trajectory() {
+        // Table 1's premise: same visit order => same swaps => same final
+        // objective, only the running time differs.
+        let (g, o) = setup(6, 13);
+        let mut rng = Rng::new(14);
+        let m = Mapping { sigma: rng.permutation(g.n()) };
+        let mut fast = crate::mapping::objective::SwapEngine::new(&g, &o, m.clone());
+        let mut slow = crate::mapping::objective::DenseEngine::new(&g, &o, m);
+        let mut r = N2Cyclic { max_sweeps: 10 };
+        let mut rng_a = Rng::new(15);
+        let mut rng_b = Rng::new(15);
+        let sf = r.refine(&mut fast, &g, &mut rng_a);
+        let ss = r.refine(&mut slow, &g, &mut rng_b);
+        assert_eq!(fast.objective(), slow.objective());
+        assert_eq!(sf, ss);
+    }
+
+    #[test]
+    fn dense_and_sparse_identical_under_cyclic_search() {
+        // the former concrete-SwapEngine-only special-casing is gone: the
+        // triangle-rotation search follows the same trajectory under both
+        // gain engines through the Swapper trait
+        let (g, o) = setup(6, 50);
+        let mut rng = Rng::new(51);
+        let m = Mapping { sigma: rng.permutation(g.n()) };
+        let mut fast = crate::mapping::objective::SwapEngine::new(&g, &o, m.clone());
+        let mut slow = crate::mapping::objective::DenseEngine::new(&g, &o, m);
+        let mut ra = NcCycle::new(1, 50);
+        let mut rb = NcCycle::new(1, 50);
+        let mut rng_a = Rng::new(52);
+        let mut rng_b = Rng::new(52);
+        let sf = ra.refine(&mut fast, &g, &mut rng_a);
+        let ss = rb.refine(&mut slow, &g, &mut rng_b);
+        assert_eq!(fast.objective(), slow.objective());
+        assert_eq!(sf, ss);
+        assert_eq!(fast.mapping(), slow.mapping());
+    }
+}

@@ -1,0 +1,74 @@
+//! Heider's full pair-exchange neighborhood `N²` (§2).
+
+use super::{Refiner, SearchStats, Swapper};
+use crate::graph::{Graph, NodeId};
+use crate::util::Rng;
+
+/// Cyclic `N²` search: all `O(n²)` pairs visited cyclically; a swap is
+/// applied whenever it has positive gain; terminates when a full sweep
+/// applies no swap (or after `max_sweeps` as a safety bound). Stateless —
+/// the pair universe is implicit in the index range.
+#[derive(Debug, Clone, Copy)]
+pub struct N2Cyclic {
+    /// Bound on the number of full passes.
+    pub max_sweeps: usize,
+}
+
+impl Refiner for N2Cyclic {
+    fn name(&self) -> String {
+        "N2".into()
+    }
+
+    fn refine(&mut self, engine: &mut dyn Swapper, comm: &Graph, _rng: &mut Rng) -> SearchStats {
+        let n = comm.n();
+        let mut stats = SearchStats::default();
+        for _ in 0..self.max_sweeps {
+            stats.rounds += 1;
+            let mut any = false;
+            for i in 0..n as NodeId {
+                for j in (i + 1)..n as NodeId {
+                    stats.evaluated += 1;
+                    if engine.try_swap(i, j).is_some() {
+                        stats.improved += 1;
+                        any = true;
+                    }
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random_geometric_graph;
+    use crate::mapping::hierarchy::{DistanceOracle, Hierarchy};
+    use crate::mapping::objective::{Mapping, SwapEngine};
+
+    fn setup(nexp: usize, seed: u64) -> (Graph, DistanceOracle) {
+        let mut rng = Rng::new(seed);
+        let g = random_geometric_graph(1 << nexp, &mut rng);
+        let h = Hierarchy::new(vec![4, 16, (1 << nexp) / 64], vec![1, 10, 100]).unwrap();
+        (g, DistanceOracle::implicit(h))
+    }
+
+    #[test]
+    fn n2_reduces_objective_and_converges() {
+        let (g, o) = setup(7, 3);
+        let mut rng = Rng::new(4);
+        let mut eng = SwapEngine::new(&g, &o, Mapping { sigma: rng.permutation(g.n()) });
+        let before = eng.objective();
+        let stats = N2Cyclic { max_sweeps: 50 }.refine(&mut eng, &g, &mut rng);
+        let after = eng.objective();
+        assert!(after < before, "{before} -> {after}");
+        assert!(stats.rounds < 50, "did not converge");
+        assert_eq!(after, eng.recompute_objective());
+        // converged: no improving pair remains in the last sweep
+        let final_stats = N2Cyclic { max_sweeps: 1 }.refine(&mut eng, &g, &mut rng);
+        assert_eq!(final_stats.improved, 0);
+    }
+}

@@ -1,0 +1,274 @@
+//! This paper's communication-graph neighborhood `N_C^d` (§3.3).
+
+use super::{graph_key, Refiner, SearchStats, Swapper};
+use crate::graph::{bfs_ball, Graph, NodeId};
+use crate::util::Rng;
+
+/// Materialize the pair set of the `N_C^d` neighborhood: all unordered pairs
+/// of distinct processes within communication-graph distance `d`.
+/// For `d = 1` this is exactly the edge set (size `m`).
+pub fn nc_pairs(comm: &Graph, d: u32) -> Vec<(NodeId, NodeId)> {
+    let n = comm.n();
+    let mut pairs = Vec::new();
+    if d <= 1 {
+        for u in 0..n as NodeId {
+            for &v in comm.neighbors(u) {
+                if v > u {
+                    pairs.push((u, v));
+                }
+            }
+        }
+        return pairs;
+    }
+    let mut scratch = vec![u32::MAX; n];
+    let mut queue = Vec::new();
+    for u in 0..n as NodeId {
+        for v in bfs_ball(comm, u, d, &mut scratch, &mut queue) {
+            if v > u {
+                pairs.push((u, v));
+            }
+        }
+    }
+    pairs
+}
+
+/// `N_C^d` local search: random order over the pair set, terminating after
+/// `pairs.len()` consecutive unsuccessful swaps (§3.3).
+///
+/// The refiner owns the materialized pair set (a BFS ball per vertex — the
+/// dominant setup cost for `d = 10`) plus a working copy that the search
+/// shuffles in place; both are rebuilt only when the refined graph changes,
+/// so repetitions and repeated session runs pay the construction once.
+#[derive(Debug, Clone)]
+pub struct NcNeighborhood {
+    /// Maximum communication-graph distance of a swappable pair.
+    pub d: u32,
+    /// Evaluation budget (`u64::MAX` = converge naturally).
+    pub max_evaluations: u64,
+    /// Canonical pair set + the graph fingerprint and distance it was built
+    /// for (either changing invalidates it — `d` is a public knob).
+    cache: Option<((usize, usize, u64), u32, Vec<(NodeId, NodeId)>)>,
+    /// Working copy (shuffled by the search; refilled from the canonical set
+    /// each call so trajectories match a freshly-built pair set exactly).
+    work: Vec<(NodeId, NodeId)>,
+}
+
+impl NcNeighborhood {
+    pub fn new(d: u32) -> NcNeighborhood {
+        Self::with_budget(d, u64::MAX)
+    }
+
+    pub fn with_budget(d: u32, max_evaluations: u64) -> NcNeighborhood {
+        NcNeighborhood { d, max_evaluations, cache: None, work: Vec::new() }
+    }
+
+    /// Fill `self.work` from the cached canonical pair set (rebuilding the
+    /// cache if this is a new graph or the distance changed).
+    fn fill_work(&mut self, comm: &Graph) {
+        let key = graph_key(comm);
+        let stale = match &self.cache {
+            Some((cached, cached_d, _)) => *cached != key || *cached_d != self.d,
+            None => true,
+        };
+        if stale {
+            self.cache = Some((key, self.d, nc_pairs(comm, self.d)));
+        }
+        let canonical = &self.cache.as_ref().unwrap().2;
+        self.work.clear();
+        self.work.extend_from_slice(canonical);
+    }
+
+    /// The search loop over a caller-provided pair set (shuffled in place).
+    /// Exposed for ablation harnesses that build custom pair orders.
+    pub fn search_in(
+        engine: &mut dyn Swapper,
+        pairs: &mut [(NodeId, NodeId)],
+        rng: &mut Rng,
+        max_evaluations: u64,
+    ) -> SearchStats {
+        let mut stats = SearchStats::default();
+        if pairs.is_empty() {
+            return stats;
+        }
+        rng.shuffle(pairs);
+        let threshold = pairs.len() as u64;
+        let mut consecutive_failures = 0u64;
+        let mut idx = 0usize;
+        while consecutive_failures < threshold && stats.evaluated < max_evaluations {
+            let (u, v) = pairs[idx];
+            stats.evaluated += 1;
+            if engine.try_swap(u, v).is_some() {
+                stats.improved += 1;
+                consecutive_failures = 0;
+            } else {
+                consecutive_failures += 1;
+            }
+            idx += 1;
+            if idx == pairs.len() {
+                idx = 0;
+                stats.rounds += 1;
+                rng.shuffle(pairs);
+            }
+        }
+        stats
+    }
+}
+
+impl Refiner for NcNeighborhood {
+    fn name(&self) -> String {
+        format!("Nc{}", self.d)
+    }
+
+    fn refine(&mut self, engine: &mut dyn Swapper, comm: &Graph, rng: &mut Rng) -> SearchStats {
+        self.fill_work(comm);
+        Self::search_in(engine, &mut self.work, rng, self.max_evaluations)
+    }
+}
+
+/// One-shot convenience: build an [`NcNeighborhood`] and run it once
+/// (identical trajectory to a kept-alive refiner for the same RNG).
+pub fn nc_neighborhood(
+    engine: &mut dyn Swapper,
+    comm: &Graph,
+    d: u32,
+    rng: &mut Rng,
+    max_evaluations: u64,
+) -> SearchStats {
+    NcNeighborhood::with_budget(d, max_evaluations).refine(engine, comm, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random_geometric_graph;
+    use crate::mapping::hierarchy::{DistanceOracle, Hierarchy};
+    use crate::mapping::objective::{Mapping, SwapEngine};
+    use crate::mapping::refine::N2Cyclic;
+
+    fn setup(nexp: usize, seed: u64) -> (Graph, DistanceOracle) {
+        let mut rng = Rng::new(seed);
+        let g = random_geometric_graph(1 << nexp, &mut rng);
+        let h = Hierarchy::new(vec![4, 16, (1 << nexp) / 64], vec![1, 10, 100]).unwrap();
+        (g, DistanceOracle::implicit(h))
+    }
+
+    #[test]
+    fn nc_pairs_d1_is_edge_set() {
+        let (g, _) = setup(7, 1);
+        let pairs = nc_pairs(&g, 1);
+        assert_eq!(pairs.len(), g.m());
+    }
+
+    #[test]
+    fn nc_pairs_nested_growth() {
+        let (g, _) = setup(7, 2);
+        let p1 = nc_pairs(&g, 1).len();
+        let p2 = nc_pairs(&g, 2).len();
+        let p3 = nc_pairs(&g, 3).len();
+        assert!(p1 <= p2 && p2 <= p3, "{p1} {p2} {p3}");
+        assert!(p3 > p1);
+    }
+
+    #[test]
+    fn nc_d1_improves_random_mapping() {
+        let (g, o) = setup(8, 7);
+        let mut rng = Rng::new(8);
+        let mut eng = SwapEngine::new(&g, &o, Mapping { sigma: rng.permutation(g.n()) });
+        let before = eng.objective();
+        let stats = NcNeighborhood::new(1).refine(&mut eng, &g, &mut rng);
+        assert!(eng.objective() < before);
+        assert!(stats.improved > 0);
+    }
+
+    #[test]
+    fn quality_ordering_n2_best_nc1_worst() {
+        // the paper's Table 2 ordering: N² >= N_10 >= N_2 >= N_1 (quality).
+        // On a single random instance we just require N² <= N_1 final J.
+        let (g, o) = setup(7, 9);
+        let mut rng = Rng::new(10);
+        let m = Mapping { sigma: rng.permutation(g.n()) };
+
+        let mut e_n2 = SwapEngine::new(&g, &o, m.clone());
+        N2Cyclic { max_sweeps: 100 }.refine(&mut e_n2, &g, &mut rng);
+
+        let mut rng2 = Rng::new(11);
+        let mut e_n1 = SwapEngine::new(&g, &o, m);
+        NcNeighborhood::new(1).refine(&mut e_n1, &g, &mut rng2);
+
+        assert!(e_n2.objective() <= e_n1.objective());
+    }
+
+    #[test]
+    fn kept_alive_refiner_matches_one_shot() {
+        // the scratch-reuse correctness contract: a refiner reusing its
+        // cached canonical pair set must follow exactly the trajectory of a
+        // freshly-built one for the same RNG
+        let (g, o) = setup(7, 30);
+        let m = {
+            let mut r = Rng::new(32);
+            Mapping { sigma: r.permutation(g.n()) }
+        };
+        // warm a refiner on one pass, then reuse it
+        let mut refiner = NcNeighborhood::new(2);
+        {
+            let mut warm_rng = Rng::new(99);
+            let mut warm = SwapEngine::new(&g, &o, m.clone());
+            refiner.refine(&mut warm, &g, &mut warm_rng);
+        }
+        let mut rng_a = Rng::new(31);
+        let mut e1 = SwapEngine::new(&g, &o, m.clone());
+        let s1 = refiner.refine(&mut e1, &g, &mut rng_a);
+
+        let mut rng_b = Rng::new(31);
+        let mut e2 = SwapEngine::new(&g, &o, m);
+        let s2 = nc_neighborhood(&mut e2, &g, 2, &mut rng_b, u64::MAX);
+
+        assert_eq!(e1.objective(), e2.objective());
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn changing_d_invalidates_the_pair_cache() {
+        // d is a public knob: bumping it must rebuild the canonical set,
+        // not silently keep searching the old distance's pairs
+        let (g, o) = setup(7, 70);
+        let m = {
+            let mut r = Rng::new(71);
+            Mapping { sigma: r.permutation(g.n()) }
+        };
+        let mut refiner = NcNeighborhood::new(1);
+        {
+            let mut rng = Rng::new(72);
+            let mut warm = SwapEngine::new(&g, &o, m.clone());
+            refiner.refine(&mut warm, &g, &mut rng);
+        }
+        refiner.d = 2;
+        let mut rng_a = Rng::new(73);
+        let mut e1 = SwapEngine::new(&g, &o, m.clone());
+        let s1 = refiner.refine(&mut e1, &g, &mut rng_a);
+
+        let mut rng_b = Rng::new(73);
+        let mut e2 = SwapEngine::new(&g, &o, m);
+        let s2 = NcNeighborhood::new(2).refine(&mut e2, &g, &mut rng_b);
+        assert_eq!(e1.objective(), e2.objective());
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn refiner_rebinds_to_a_new_graph() {
+        // the fingerprint guard: refining a different graph rebuilds the
+        // pair set instead of searching stale pairs
+        let (g1, o1) = setup(6, 60);
+        let (g2, o2) = setup(7, 61);
+        let mut refiner = NcNeighborhood::new(1);
+        let mut rng = Rng::new(62);
+        let mut e1 = SwapEngine::new(&g1, &o1, Mapping::identity(g1.n()));
+        refiner.refine(&mut e1, &g1, &mut rng);
+        let mut e2 = SwapEngine::new(&g2, &o2, Mapping::identity(g2.n()));
+        let stats = refiner.refine(&mut e2, &g2, &mut rng);
+        // every evaluated pair was a valid g2 pair (no out-of-range panic)
+        // and the refiner saw g2's edge count, not g1's
+        assert!(stats.evaluated >= g2.m() as u64 || stats.evaluated == 0);
+        e2.mapping().validate().unwrap();
+    }
+}

@@ -1,0 +1,109 @@
+//! Brandfass et al.'s pruned neighborhood `N_p` (§2).
+
+use super::{Refiner, SearchStats, Swapper};
+use crate::graph::{Graph, NodeId};
+use crate::mapping::hierarchy::Hierarchy;
+use crate::util::Rng;
+
+/// `N_p` search: the index space is partitioned into consecutive blocks of
+/// `block_len` and only pairs inside a block are considered (`O(n·s)`
+/// pairs), with same-leaf-group pairs skipped ("pairs for which the
+/// objective cannot change"). The original chooses the block span to cover a
+/// few compute nodes; callers pick `block_len`.
+#[derive(Debug, Clone)]
+pub struct NpBlocks {
+    /// Pairs are only formed inside consecutive index blocks of this length.
+    pub block_len: usize,
+    /// Bound on the number of full passes.
+    pub max_sweeps: usize,
+    /// Machine hierarchy for the same-leaf-group skip rule; `None` disables
+    /// the skip (every in-block pair is evaluated).
+    hierarchy: Option<Hierarchy>,
+}
+
+impl NpBlocks {
+    pub fn new(block_len: usize, max_sweeps: usize, hierarchy: Option<Hierarchy>) -> NpBlocks {
+        NpBlocks { block_len: block_len.max(2), max_sweeps, hierarchy }
+    }
+}
+
+impl Refiner for NpBlocks {
+    fn name(&self) -> String {
+        "Np".into()
+    }
+
+    fn refine(&mut self, engine: &mut dyn Swapper, comm: &Graph, _rng: &mut Rng) -> SearchStats {
+        let n = comm.n();
+        let block_len = self.block_len.max(2);
+        let mut stats = SearchStats::default();
+        for _ in 0..self.max_sweeps {
+            stats.rounds += 1;
+            let mut any = false;
+            let mut start = 0usize;
+            while start < n {
+                let end = (start + block_len).min(n);
+                for i in start..end {
+                    for j in (i + 1)..end {
+                        let (u, v) = (i as NodeId, j as NodeId);
+                        if let Some(h) = &self.hierarchy {
+                            // skip pairs that cannot change the objective
+                            if h.same_leaf_group(engine.pe_of(u), engine.pe_of(v)) {
+                                continue;
+                            }
+                        }
+                        stats.evaluated += 1;
+                        if engine.try_swap(u, v).is_some() {
+                            stats.improved += 1;
+                            any = true;
+                        }
+                    }
+                }
+                start = end;
+            }
+            if !any {
+                break;
+            }
+        }
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random_geometric_graph;
+    use crate::mapping::hierarchy::DistanceOracle;
+    use crate::mapping::objective::{Mapping, SwapEngine};
+
+    fn setup(nexp: usize, seed: u64) -> (Graph, DistanceOracle) {
+        let mut rng = Rng::new(seed);
+        let g = random_geometric_graph(1 << nexp, &mut rng);
+        let h = Hierarchy::new(vec![4, 16, (1 << nexp) / 64], vec![1, 10, 100]).unwrap();
+        (g, DistanceOracle::implicit(h))
+    }
+
+    #[test]
+    fn np_reduces_objective() {
+        let (g, o) = setup(8, 5);
+        let mut rng = Rng::new(6);
+        let mut eng = SwapEngine::new(&g, &o, Mapping { sigma: rng.permutation(g.n()) });
+        let before = eng.objective();
+        let h = Hierarchy::new(vec![4, 16, 4], vec![1, 10, 100]).unwrap();
+        NpBlocks::new(64, 50, Some(h)).refine(&mut eng, &g, &mut rng);
+        assert!(eng.objective() < before);
+        assert!(eng.gamma_invariant_holds());
+    }
+
+    #[test]
+    fn np_skips_same_leaf_pairs() {
+        // engine on identity mapping with a single-level hierarchy: every
+        // pair shares the one leaf group, so every pair is skipped.
+        let (g, o) = setup(6, 12);
+        let mut rng = Rng::new(13);
+        let mut eng = SwapEngine::new(&g, &o, Mapping::identity(g.n()));
+        let h = Hierarchy::new(vec![64], vec![1]).unwrap(); // all PEs one group
+        let stats = NpBlocks::new(8, 3, Some(h)).refine(&mut eng, &g, &mut rng);
+        assert_eq!(stats.evaluated, 0, "all pairs share the single leaf group");
+        assert_eq!(stats.improved, 0);
+    }
+}

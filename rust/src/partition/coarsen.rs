@@ -18,10 +18,11 @@ pub struct Level {
     pub map: Vec<u32>,
 }
 
-/// Compute a heavy-edge matching and contract it. Returns `None` if the
-/// matching would shrink the graph by less than 10% (coarsening stalled,
-/// e.g. on star graphs), signalling the caller to stop.
-pub fn coarsen_once(g: &Graph, rng: &mut Rng) -> Option<Level> {
+/// Heavy-edge matching: visit vertices in random order; each unmatched
+/// vertex matches its unmatched neighbor with the heaviest connecting edge
+/// (ties: lower degree). Unmatched vertices are matched with themselves
+/// (`mate[v] == v`). Shared by [`coarsen_once`] and [`coarsen_halving`].
+fn hem_mate(g: &Graph, rng: &mut Rng) -> Vec<u32> {
     let n = g.n();
     let mut mate: Vec<u32> = vec![u32::MAX; n];
     let mut order: Vec<u32> = (0..n as u32).collect();
@@ -51,7 +52,13 @@ pub fn coarsen_once(g: &Graph, rng: &mut Rng) -> Option<Level> {
             mate[v as usize] = v; // matched with itself
         }
     }
-    // Assign cluster ids: one per matched pair / singleton.
+    mate
+}
+
+/// Contract a matching: assign cluster ids (one per matched pair /
+/// singleton) and build the coarse graph.
+fn contract_matching(g: &Graph, mate: &[u32]) -> Level {
+    let n = g.n();
     let mut map = vec![u32::MAX; n];
     let mut next = 0u32;
     for v in 0..n {
@@ -65,12 +72,58 @@ pub fn coarsen_once(g: &Graph, rng: &mut Rng) -> Option<Level> {
         }
         next += 1;
     }
-    let coarse_n = next as usize;
+    let coarse = contract(g, &map, next as usize);
+    Level { coarse, map }
+}
+
+/// Compute a heavy-edge matching and contract it. Returns `None` if the
+/// matching would shrink the graph by less than 10% (coarsening stalled,
+/// e.g. on star graphs), signalling the caller to stop.
+pub fn coarsen_once(g: &Graph, rng: &mut Rng) -> Option<Level> {
+    let n = g.n();
+    let mate = hem_mate(g, rng);
+    let singles = mate.iter().enumerate().filter(|&(v, &m)| m == v as u32).count();
+    let coarse_n = (n - singles) / 2 + singles;
     if coarse_n as f64 > 0.9 * n as f64 {
         return None;
     }
-    let coarse = contract(g, &map, coarse_n);
-    Some(Level { coarse, map })
+    Some(contract_matching(g, &mate))
+}
+
+/// Heavy-edge matching completed to a *perfect* matching: leftover singleton
+/// vertices are paired with each other in id order (even without a
+/// connecting edge — [`crate::graph::contract`] merges them with no coarse
+/// edge between their neighborhoods, which is exactly the zero-affinity
+/// contraction a perfect halving needs). The coarse graph therefore has
+/// exactly `n / 2` vertices, the invariant the multilevel V-cycle's
+/// machine-hierarchy folding relies on
+/// ([`crate::mapping::multilevel`]). Returns `None` when `n` is odd or `< 2`
+/// (no perfect matching exists).
+pub fn coarsen_halving(g: &Graph, rng: &mut Rng) -> Option<Level> {
+    let n = g.n();
+    if n < 2 || n % 2 != 0 {
+        return None;
+    }
+    let mut mate = hem_mate(g, rng);
+    // pair the self-matched leftovers in id order (their count is even:
+    // n is even and HEM-matched vertices come in pairs)
+    let mut pending: Option<usize> = None;
+    for v in 0..n {
+        if mate[v] != v as u32 {
+            continue;
+        }
+        match pending.take() {
+            None => pending = Some(v),
+            Some(p) => {
+                mate[p] = v as u32;
+                mate[v] = p as u32;
+            }
+        }
+    }
+    debug_assert!(pending.is_none(), "even n must leave an even number of singletons");
+    let level = contract_matching(g, &mate);
+    debug_assert_eq!(level.coarse.n(), n / 2);
+    Some(level)
 }
 
 /// Coarsen until at most `limit` vertices remain or the matching stalls.
@@ -153,5 +206,50 @@ mod tests {
         let g = from_edges(10, &[]);
         let mut rng = Rng::new(5);
         assert!(coarsen_once(&g, &mut rng).is_none());
+    }
+
+    #[test]
+    fn halving_is_exact() {
+        let g = grid2d(8, 8);
+        let mut rng = Rng::new(6);
+        let level = coarsen_halving(&g, &mut rng).unwrap();
+        assert_eq!(level.coarse.n(), 32);
+        assert_eq!(level.coarse.total_node_weight(), 64);
+        assert_eq!(level.coarse.validate(), Ok(()));
+        // every coarse vertex has exactly 2 fine members
+        let mut counts = vec![0usize; level.coarse.n()];
+        for &c in &level.map {
+            counts[c as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 2));
+    }
+
+    #[test]
+    fn halving_pairs_singletons_even_without_edges() {
+        // edgeless graph: HEM matches nothing, the completion pairs all
+        let g = from_edges(10, &[]);
+        let mut rng = Rng::new(7);
+        let level = coarsen_halving(&g, &mut rng).unwrap();
+        assert_eq!(level.coarse.n(), 5);
+        assert_eq!(level.coarse.m(), 0);
+    }
+
+    #[test]
+    fn halving_star_graph() {
+        // star: HEM pairs the hub with one leaf; the rest pair up anyway
+        let edges: Vec<(u32, u32, u64)> = (1..16u32).map(|i| (0, i, 1)).collect();
+        let g = from_edges(16, &edges);
+        let mut rng = Rng::new(8);
+        let level = coarsen_halving(&g, &mut rng).unwrap();
+        assert_eq!(level.coarse.n(), 8);
+        assert_eq!(level.coarse.validate(), Ok(()));
+    }
+
+    #[test]
+    fn halving_rejects_odd_and_trivial() {
+        let mut rng = Rng::new(9);
+        assert!(coarsen_halving(&from_edges(7, &[]), &mut rng).is_none());
+        assert!(coarsen_halving(&from_edges(1, &[]), &mut rng).is_none());
+        assert!(coarsen_halving(&from_edges(0, &[]), &mut rng).is_none());
     }
 }

@@ -1,12 +1,16 @@
 //! Integration: the `api` front door — builder validation, session
 //! execution, scratch-reuse correctness (sessions must be bit-identical to
-//! independent legacy runs), deterministic short-circuiting, best-of-N.
+//! independent fresh-session runs), deterministic short-circuiting,
+//! best-of-N, and the multilevel V-cycle contracts (projection validity,
+//! per-level monotonicity, bit-identical trajectories for a fixed seed).
 
-use qapmap::api::{hierarchy_for, MapJob, MapJobBuilder, MapSession, OracleMode, VerifyPolicy};
+use qapmap::api::{
+    flat_fallback_warning_count, hierarchy_for, MapJob, MapJobBuilder, MapSession, OracleMode,
+    VerifyPolicy,
+};
 use qapmap::gen::random_geometric_graph;
 use qapmap::mapping::algorithms::{AlgorithmSpec, GainMode};
 use qapmap::mapping::{DistanceOracle, Hierarchy};
-use qapmap::partition::PartitionConfig;
 use qapmap::util::Rng;
 
 fn instance(n: usize, seed: u64) -> (qapmap::graph::Graph, Hierarchy) {
@@ -18,8 +22,9 @@ fn instance(n: usize, seed: u64) -> (qapmap::graph::Graph, Hierarchy) {
 
 #[test]
 fn session_repetitions_match_independent_runs() {
-    // the scratch-reuse contract: a session's per-rep results must be
-    // bit-identical to independent legacy runs with the same seeds
+    // the scratch-reuse contract: a multi-rep session's per-rep results
+    // must be bit-identical to fresh one-rep sessions with the same seeds
+    // (nothing the session caches may leak between repetitions)
     let (g, h) = instance(128, 1);
     for algo in ["random+Nc1", "topdown+Nc2", "mm+Nc1", "topdown+NcCyc1", "rcb+N2"] {
         let spec = AlgorithmSpec::parse(algo).unwrap();
@@ -32,23 +37,19 @@ fn session_repetitions_match_independent_runs() {
         let report = MapSession::new(job).run();
         assert_eq!(report.reps.len(), 3, "{algo}");
 
-        let oracle = DistanceOracle::implicit(h.clone());
         for (r, rep) in report.reps.iter().enumerate() {
-            let mut rng = Rng::new(50 + r as u64);
-            #[allow(deprecated)]
-            let legacy = qapmap::mapping::algorithms::run(
-                &g,
-                &h,
-                &oracle,
-                &spec,
-                &PartitionConfig::perfectly_balanced(),
-                &mut rng,
-            );
+            let fresh_job = MapJobBuilder::new(g.clone(), h.clone())
+                .algorithm(spec)
+                .repetitions(1)
+                .seed(50 + r as u64)
+                .build()
+                .unwrap();
+            let fresh = MapSession::new(fresh_job).run();
             assert_eq!(rep.seed, 50 + r as u64);
-            assert_eq!(rep.objective, legacy.objective, "{algo} rep {r}");
-            assert_eq!(rep.objective_initial, legacy.objective_initial, "{algo} rep {r}");
-            assert_eq!(rep.evaluated, legacy.stats.evaluated, "{algo} rep {r}");
-            assert_eq!(rep.improved, legacy.stats.improved, "{algo} rep {r}");
+            assert_eq!(rep.objective, fresh.objective, "{algo} rep {r}");
+            assert_eq!(rep.objective_initial, fresh.objective_initial, "{algo} rep {r}");
+            assert_eq!(rep.evaluated, fresh.best().evaluated, "{algo} rep {r}");
+            assert_eq!(rep.improved, fresh.best().improved, "{algo} rep {r}");
         }
         // the report's winner is the argmin over repetitions
         assert_eq!(
@@ -266,4 +267,133 @@ fn hierarchy_for_matches_cli_semantics() {
     assert_eq!(h.levels(), 1);
     // explicit hierarchy must still match the instance size
     assert!(hierarchy_for(77, "4:16:2", "1:10:100").is_err());
+}
+
+#[test]
+fn flat_fallback_warns_exactly_once_per_process() {
+    // the fallback used to print once per repetition; now the warning is
+    // gated by a process-wide Once — hammer it and count
+    for _ in 0..5 {
+        hierarchy_for(100, "", "").unwrap();
+        hierarchy_for(77, "", "").unwrap();
+    }
+    assert_eq!(
+        flat_fallback_warning_count(),
+        1,
+        "the flat-hierarchy warning must be emitted exactly once"
+    );
+}
+
+#[test]
+fn ml_vcycle_projection_valid_monotone_and_reported() {
+    // the V-cycle acceptance contract, end-to-end through the session:
+    // every level's mapping is a valid permutation (checked inside the
+    // engine + validated here via the level objectives), refinement never
+    // increases any level's objective, and per-level SearchStats surface in
+    // RepStat
+    let (g, h) = instance(256, 21);
+    let job = MapJobBuilder::new(g.clone(), h.clone())
+        .algorithm_name("ml:topdown+Nc5")
+        .unwrap()
+        .coarsen_limit(32)
+        .repetitions(2)
+        .seed(70)
+        .build()
+        .unwrap();
+    assert_eq!(job.ml_config().coarsen_limit, 32);
+    let report = MapSession::new(job).run();
+    assert_eq!(report.algorithm, "ml:topdown+Nc5");
+    report.mapping.validate().unwrap();
+    for rep in &report.reps {
+        assert!(!rep.levels.is_empty(), "V-cycle reps must carry level stats");
+        // 256 -> 128 -> 64 -> 32 coarse levels + the finest pass
+        assert_eq!(rep.levels.len(), 4);
+        let mut expect_n = 32;
+        for (i, l) in rep.levels.iter().enumerate() {
+            assert_eq!(l.n, expect_n, "level {i} size");
+            assert!(l.objective <= l.objective_initial, "level {i} worsened");
+            expect_n *= 2;
+        }
+        // the finest level's outcome is the repetition's outcome
+        assert_eq!(rep.levels.last().unwrap().objective, rep.objective);
+        // aggregate stats are the per-level sums
+        assert_eq!(rep.evaluated, rep.levels.iter().map(|l| l.evaluated).sum::<u64>());
+        assert_eq!(rep.improved, rep.levels.iter().map(|l| l.improved).sum::<u64>());
+    }
+    // the exact objective must match a from-scratch recompute
+    let oracle = DistanceOracle::implicit(h);
+    assert_eq!(
+        report.objective,
+        qapmap::mapping::objective(&g, &oracle, &report.mapping)
+    );
+}
+
+#[test]
+fn ml_fixed_seed_reproduces_bit_identical_trajectory() {
+    // two fresh sessions, same job: hierarchy, constructions and every
+    // refinement step must replay exactly
+    let (g, h) = instance(128, 22);
+    let make = || {
+        MapJobBuilder::new(g.clone(), h.clone())
+            .algorithm_name("ml:topdown+Nc2")
+            .unwrap()
+            .coarsen_limit(16)
+            .repetitions(2)
+            .seed(71)
+            .build()
+            .unwrap()
+    };
+    let a = MapSession::new(make()).run();
+    let b = MapSession::new(make()).run();
+    assert_eq!(a.mapping.sigma, b.mapping.sigma);
+    assert_eq!(a.objective, b.objective);
+    // compare the full trajectory minus wall-clock times (those may differ)
+    let trajectory = |r: &qapmap::api::MapReport| {
+        r.reps
+            .iter()
+            .map(|s| {
+                let counts = (s.evaluated, s.improved, s.rounds);
+                (s.seed, s.objective_initial, s.objective, counts, s.levels.clone())
+            })
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(trajectory(&a), trajectory(&b), "per-rep stats (incl. level stats) must replay");
+
+    // and a session re-run reuses the cached hierarchy with the same result
+    let mut session = MapSession::new(make());
+    let first = session.run();
+    let second = session.run();
+    assert_eq!(trajectory(&first), trajectory(&second));
+    assert_eq!(first.mapping.sigma, second.mapping.sigma);
+}
+
+#[test]
+fn ml_beats_or_ties_its_projection_baseline() {
+    let (g, h) = instance(256, 23);
+    let job = MapJobBuilder::new(g, h)
+        .algorithm_name("ml:topdown+Nc5")
+        .unwrap()
+        .seed(72)
+        .build()
+        .unwrap();
+    let report = MapSession::new(job).run();
+    assert!(report.objective <= report.objective_initial);
+    assert!(report.best().evaluated > 0);
+}
+
+#[test]
+fn ml_levels_knob_bounds_depth() {
+    let (g, h) = instance(256, 24);
+    let job = MapJobBuilder::new(g, h)
+        .algorithm_name("ml:topdown+Nc1")
+        .unwrap()
+        .levels(1)
+        .coarsen_limit(2)
+        .seed(73)
+        .build()
+        .unwrap();
+    let report = MapSession::new(job).run();
+    // exactly one coarsening level + the finest pass
+    assert_eq!(report.best().levels.len(), 2);
+    report.mapping.validate().unwrap();
 }

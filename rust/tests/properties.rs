@@ -12,8 +12,8 @@
 
 use qapmap::gen::{gnp, random_geometric_graph};
 use qapmap::graph::{contract, Graph};
-use qapmap::mapping::local_search::{nc_neighborhood, nc_pairs};
 use qapmap::mapping::objective::{Mapping, SwapEngine};
+use qapmap::mapping::refine::{nc_neighborhood, nc_pairs};
 use qapmap::mapping::{DistanceOracle, Hierarchy};
 use qapmap::partition::{partition_kway, PartitionConfig};
 use qapmap::util::Rng;
@@ -188,6 +188,48 @@ fn prop_neighborhood_nesting() {
             let all = nc_pairs(&comm, 127).len();
             assert_eq!(all, 128 * 127 / 2, "seed {seed}");
         }
+    }
+}
+
+#[test]
+fn prop_vcycle_valid_and_monotone_on_random_instances() {
+    use qapmap::mapping::algorithms::AlgorithmSpec;
+    use qapmap::mapping::multilevel::{vcycle, MlConfig};
+    for seed in 105..115u64 {
+        let mut rng = Rng::new(seed);
+        let n = 128 << rng.index(2); // 128 or 256
+        let comm = random_comm(&mut rng, n);
+        let h = Hierarchy::new(vec![4, 16, (n / 64) as u64], vec![1, 10, 100]).unwrap();
+        let oracle = DistanceOracle::implicit(h.clone());
+        let d = 1 + rng.index(3) as u32;
+        let spec = AlgorithmSpec::parse(&format!("ml:topdown+Nc{d}")).unwrap();
+        let cfg = MlConfig { max_levels: 8, coarsen_limit: 16 };
+        let mut hrng = rng.split();
+        let mut rrng = rng.split();
+        let (ml, out) = vcycle(
+            &comm,
+            &h,
+            &oracle,
+            &spec,
+            &cfg,
+            &PartitionConfig::perfectly_balanced(),
+            &mut hrng,
+            &mut rrng,
+        );
+        assert_eq!(out.levels.len(), ml.levels.len() + 1, "seed {seed}");
+        for (i, (stat, m)) in out.levels.iter().zip(&out.level_mappings).enumerate() {
+            m.validate().unwrap_or_else(|e| panic!("seed {seed} level {i}: {e}"));
+            assert!(
+                stat.objective <= stat.objective_initial,
+                "seed {seed} level {i}: refinement worsened"
+            );
+        }
+        assert!(out.objective <= out.objective_initial, "seed {seed}");
+        assert_eq!(
+            out.objective,
+            qapmap::mapping::objective(&comm, &oracle, &out.mapping),
+            "seed {seed}: bookkeeping drift"
+        );
     }
 }
 
