@@ -1,14 +1,22 @@
 //! Hot-path micro-benchmarks (the §Perf deliverable's measurement tool):
 //!
 //! * swap gain: fast sparse O(d_u+d_v) vs slow dense O(n), ns/op
+//! * rotate3 gain: the same comparison for 3-cycle rotations
 //! * swap apply (Γ update) ns/op
+//! * gain-cache bucket-queue push / pop ns/op, and gain-cache vs shuffle
+//!   `N_C^d` evaluation counts on a fixed instance
 //! * distance oracle: implicit O(k) vs explicit O(1) lookup, ns/query
 //! * objective initialization O(n+m)
 //! * partitioner throughput (vertices/s)
 //! * XLA runtime objective-call latency (if artifacts are built)
+//!
+//! `--check` turns the two headline claims into assertions (sparse swap
+//! gain beats dense at n=4096; the gain cache evaluates strictly fewer
+//! pairs than the shuffle search on a fixed instance) — the CI smoke mode.
 
 use qapmap::gen::random_geometric_graph;
 use qapmap::mapping::objective::{DenseEngine, Mapping, SwapEngine};
+use qapmap::mapping::refine::{GainBucketQueue, GainCacheNc, NcNeighborhood, Refiner};
 use qapmap::mapping::{objective, DistanceOracle, Hierarchy};
 use qapmap::model::build_instance;
 use qapmap::partition::{partition_kway, PartitionConfig};
@@ -16,6 +24,7 @@ use qapmap::util::timer::{bench_secs, black_box, fmt_secs};
 use qapmap::util::{Rng, Timer};
 
 fn main() {
+    let check = std::env::args().any(|a| a == "--check");
     let n: usize = 4096;
     let mut rng = Rng::new(600);
     let app = random_geometric_graph(n * 8, &mut rng);
@@ -80,6 +89,38 @@ fn main() {
     println!("swap gain  fast   : {:>12}/op", fmt_secs(t_fast));
     println!("swap gain  slow   : {:>12}/op   (speedup {:.0}x at n={n})\n", fmt_secs(t_slow), t_slow / t_fast);
 
+    // -- rotate3 gain: fast vs slow (ROADMAP: track both engines) ----------
+    let triples: Vec<(u32, u32, u32)> = (0..1024)
+        .map(|_| {
+            let u = rng.index(n) as u32;
+            let mut v = rng.index(n) as u32;
+            let mut w = rng.index(n) as u32;
+            if v == u {
+                v = (v + 1) % n as u32;
+            }
+            while w == u || w == v {
+                w = (w + 1) % n as u32;
+            }
+            (u, v, w)
+        })
+        .collect();
+    let t_rot_fast = bench_secs(0.3, 20, || {
+        let mut acc = 0i64;
+        for &(u, v, w) in &triples {
+            acc += eng.rotate3_gain(u, v, w);
+        }
+        black_box(acc);
+    }) / triples.len() as f64;
+    let t_rot_slow = bench_secs(0.3, 5, || {
+        let mut acc = 0i64;
+        for &(u, v, w) in &triples[..128] {
+            acc += dense.rotate3_gain(u, v, w);
+        }
+        black_box(acc);
+    }) / 128.0;
+    println!("rotate3 gain fast : {:>12}/op", fmt_secs(t_rot_fast));
+    println!("rotate3 gain slow : {:>12}/op   (speedup {:.0}x at n={n})\n", fmt_secs(t_rot_slow), t_rot_slow / t_rot_fast);
+
     // -- swap apply ----------------------------------------------------------
     let mut eng2 = SwapEngine::new(&comm, &implicit, m0.clone());
     let t_apply = bench_secs(0.3, 20, || {
@@ -91,6 +132,57 @@ fn main() {
         }
     }) / 512.0;
     println!("swap apply (Γ upd): {:>12}/op\n", fmt_secs(t_apply));
+
+    // -- gain-cache bucket queue ---------------------------------------------
+    let mut q = GainBucketQueue::new();
+    let queue_gains: Vec<i64> = (0..1024).map(|i| ((i * 37) % 5000) as i64 - 500).collect();
+    let t_qpush = bench_secs(0.2, 50, || {
+        q.clear();
+        for (i, &g) in queue_gains.iter().enumerate() {
+            q.push(i as u32, g);
+        }
+        black_box(q.len());
+    }) / 1024.0;
+    q.clear();
+    let t_qcycle = bench_secs(0.2, 50, || {
+        for (i, &g) in queue_gains.iter().enumerate() {
+            q.push(i as u32, g);
+        }
+        let mut acc = 0u64;
+        while let Some(p) = q.pop() {
+            acc += p as u64;
+        }
+        black_box(acc);
+    }) / 1024.0;
+    println!("gc queue push     : {:>12}/op   (incl. periodic clear)", fmt_secs(t_qpush));
+    println!("gc queue push+pop : {:>12}/cycle\n", fmt_secs(t_qcycle));
+
+    // -- gain cache vs shuffle N_C^1 on a fixed instance ---------------------
+    let gc_n = 1024;
+    let gc_comm = build_instance(&app, gc_n, &mut rng);
+    let gc_h = Hierarchy::new(vec![4, 16, (gc_n / 64) as u64], vec![1, 10, 100]).unwrap();
+    let gc_o = DistanceOracle::implicit(gc_h);
+    let start = Mapping { sigma: rng.permutation(gc_n) };
+    let mut e_gc = SwapEngine::new(&gc_comm, &gc_o, start.clone());
+    let t0 = Timer::start();
+    let s_gc = GainCacheNc::new(1).refine(&mut e_gc, &gc_comm, &mut Rng::new(1));
+    let gc_secs = t0.secs();
+    let mut e_sh = SwapEngine::new(&gc_comm, &gc_o, start);
+    let t1 = Timer::start();
+    let s_sh = NcNeighborhood::new(1).refine(&mut e_sh, &gc_comm, &mut Rng::new(2));
+    let sh_secs = t1.secs();
+    println!(
+        "gc:nc1  (n={gc_n}) : {:>12}   ({} evaluations, J {})",
+        fmt_secs(gc_secs),
+        s_gc.evaluated,
+        e_gc.objective()
+    );
+    println!(
+        "Nc1     (n={gc_n}) : {:>12}   ({} evaluations, J {})\n",
+        fmt_secs(sh_secs),
+        s_sh.evaluated,
+        e_sh.objective()
+    );
 
     // -- partitioner ----------------------------------------------------------
     let g = random_geometric_graph(1 << 15, &mut rng);
@@ -124,5 +216,27 @@ fn main() {
             );
         }
         Err(_) => println!("xla objective     : artifacts not built, skipped"),
+    }
+
+    if check {
+        assert!(
+            t_fast < t_slow,
+            "sparse swap gain ({}) not faster than dense ({}) at n={n}",
+            fmt_secs(t_fast),
+            fmt_secs(t_slow)
+        );
+        assert!(
+            s_gc.evaluated < s_sh.evaluated,
+            "gain cache evaluated {} pairs, shuffle only {} (n={gc_n}, d=1)",
+            s_gc.evaluated,
+            s_sh.evaluated
+        );
+        println!(
+            "\nhotpath --check: OK (sparse gain {:.0}x faster; gain cache {} vs shuffle {} \
+             evaluations)",
+            t_slow / t_fast,
+            s_gc.evaluated,
+            s_sh.evaluated
+        );
     }
 }

@@ -3,7 +3,7 @@
 
 use crate::coordinator::{MapRequest, MapResponse};
 use crate::graph::Graph;
-use crate::mapping::algorithms::{AlgorithmSpec, Neighborhood};
+use crate::mapping::algorithms::AlgorithmSpec;
 use crate::mapping::multilevel::MlConfig;
 use crate::mapping::Hierarchy;
 use crate::partition::PartitionConfig;
@@ -216,11 +216,13 @@ impl MapJob {
 
     /// True iff the whole pipeline is deterministic: repeated runs cannot
     /// differ, so repetitions are pointless. Identity, Müller-Merbach and
-    /// GreedyAllC never consult the RNG; every local search does (except
-    /// "none").
+    /// GreedyAllC never consult the RNG; of the local searches, only "none"
+    /// and the shuffle-free gain cache (`gc:nc<d>`) are RNG-free. (For `ml:`
+    /// jobs the coarsening hierarchy is derived from the job seed, so the
+    /// rule carries over unchanged.)
     pub fn is_deterministic(&self) -> bool {
         super::session::construction_is_deterministic(self.spec.construction)
-            && matches!(self.spec.neighborhood, Neighborhood::None)
+            && super::session::neighborhood_is_deterministic(self.spec.neighborhood)
     }
 
     /// Repetitions actually executed: deterministic jobs short-circuit to 1
@@ -403,7 +405,7 @@ mod tests {
         assert_eq!(rand.effective_repetitions(), 8);
 
         // deterministic construction + randomized local search too
-        let ls = MapJobBuilder::new(g, h)
+        let ls = MapJobBuilder::new(g.clone(), h.clone())
             .algorithm_name("mm+Nc1")
             .unwrap()
             .repetitions(8)
@@ -411,6 +413,26 @@ mod tests {
             .unwrap();
         assert!(!ls.is_deterministic());
         assert_eq!(ls.effective_repetitions(), 8);
+
+        // the gain cache never consults the RNG: deterministic construction
+        // + gc:nc<d> short-circuits, randomized construction does not
+        let gc = MapJobBuilder::new(g.clone(), h.clone())
+            .algorithm_name("mm+gc:nc1")
+            .unwrap()
+            .repetitions(8)
+            .build()
+            .unwrap();
+        assert!(gc.is_deterministic());
+        assert_eq!(gc.effective_repetitions(), 1);
+
+        let gc_rand = MapJobBuilder::new(g, h)
+            .algorithm_name("topdown+gc:nc1")
+            .unwrap()
+            .repetitions(8)
+            .build()
+            .unwrap();
+        assert!(!gc_rand.is_deterministic());
+        assert_eq!(gc_rand.effective_repetitions(), 8);
     }
 
     #[test]

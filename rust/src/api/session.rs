@@ -2,7 +2,7 @@
 //! batched XLA scoring and verification.
 
 use crate::graph::Graph;
-use crate::mapping::algorithms::{Construction, GainMode, MapResult};
+use crate::mapping::algorithms::{Construction, GainMode, MapResult, Neighborhood};
 use crate::mapping::multilevel::{level_refiners, vcycle_refine, MlHierarchy};
 use crate::mapping::objective::{objective, DenseEngine, Mapping, SwapEngine};
 use crate::mapping::refine::{refiner_for, Refiner};
@@ -275,6 +275,16 @@ pub(crate) fn construction_is_deterministic(c: Construction) -> bool {
         c,
         Construction::Identity | Construction::MuellerMerbach | Construction::GreedyAllC
     )
+}
+
+/// True for neighborhoods whose search never consults the RNG. `None`
+/// trivially; `gc:nc<d>` because the gain-cache queue replaces the shuffle —
+/// its trajectory is a pure function of the start mapping
+/// ([`crate::mapping::refine::GainCacheNc`]). Together with
+/// [`construction_is_deterministic`] this decides the repetition
+/// short-circuit in `MapJob::is_deterministic`.
+pub(crate) fn neighborhood_is_deterministic(n: Neighborhood) -> bool {
+    matches!(n, Neighborhood::None | Neighborhood::GcNc { .. })
 }
 
 /// Construct the initial mapping, caching it in the scratch slot when the

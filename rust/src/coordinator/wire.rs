@@ -508,6 +508,20 @@ mod tests {
     }
 
     #[test]
+    fn gc_spec_crosses_the_wire_unchanged() {
+        // the gain-cache suffix contains a colon; header tokens split on
+        // whitespace, so it must travel verbatim — with and without ml:
+        for name in ["topdown+gc:nc10", "ml:topdown+gc:nc3"] {
+            let mut req = sample_request();
+            req.algorithm = AlgorithmSpec::parse(name).unwrap();
+            let mut buf = Vec::new();
+            write_request(&mut buf, &req).unwrap();
+            let back = read_request(&mut BufReader::new(&buf[..])).unwrap();
+            assert_eq!(back.algorithm.name(), *name);
+        }
+    }
+
+    #[test]
     fn malformed_rep_lines_rejected() {
         for (reps_line, why) in [
             ("REP 1 2 3 0.1 0.1 4 5\n", "too few fields"),

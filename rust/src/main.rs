@@ -65,7 +65,7 @@ fn usage() {
         "qapmap — process mapping & sparse quadratic assignment\n\
          commands:\n  \
          map        --inst <name>|--graph <file.metis> --blocks <k> --S a:b:c --D x:y:z\n  \
-                    [--algo topdown+Nc10 | ml:topdown+Nc5] [--seed 1] [--reps 1]\n  \
+                    [--algo topdown+Nc10 | topdown+gc:nc10 | ml:topdown+Nc5] [--seed 1] [--reps 1]\n  \
                     [--verify] [--explicit-distances] [--levels 16] [--coarsen-limit 64]\n  \
          serve      [--addr 127.0.0.1:7447] [--workers N] [--queue 64] [--no-xla]\n  \
          client     --addr host:port (same instance options as map)\n  \

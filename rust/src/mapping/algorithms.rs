@@ -4,7 +4,8 @@
 //! benchmark harness, so every experiment refers to algorithms by the same
 //! names the paper uses: `identity`, `random`, `mm` (Müller-Merbach), `gac`
 //! (GreedyAllC), `rcb` (LibTopoMap-like), `bottomup`, `topdown`, with
-//! optional `+N2`, `+Np`, `+Nc<d>`, `+NcCyc<d>` local-search suffixes (e.g.
+//! optional `+N2`, `+Np`, `+Nc<d>`, `+NcCyc<d>`, `+gc:nc<d>` local-search
+//! suffixes (e.g.
 //! the paper's best trade-off `topdown+Nc10`) and an optional `ml:` prefix
 //! selecting the multilevel V-cycle ([`crate::mapping::multilevel`]), e.g.
 //! `ml:topdown+Nc5`: coarsen the communication graph, run the named
@@ -48,6 +49,12 @@ pub enum Neighborhood {
     /// in [`super::refine::Cycle3`]); runs under both gain engines through
     /// the [`super::refine::Swapper`] trait.
     NcCycle { d: u32 },
+    /// The FM-style gain-cached `N_C^d` search (`gc:nc<d>`, implemented in
+    /// [`super::refine::GainCacheNc`]): a priority bucket queue over the
+    /// pair set with lazy move-version invalidation. Same neighborhood as
+    /// [`Self::Nc`], but terminates at a provable local optimum, never
+    /// consults the RNG, and skips re-evaluating pairs no move touched.
+    GcNc { d: u32 },
 }
 
 /// Gain-computation mode: the paper's fast sparse engine or the dense
@@ -111,6 +118,12 @@ impl AlgorithmSpec {
             None => Neighborhood::None,
             Some("N2") | Some("n2") => Neighborhood::N2,
             Some("Np") | Some("np") => Neighborhood::Np { block_len: 64 },
+            Some(s) if s.to_ascii_lowercase().starts_with("gc:nc") => {
+                let d: u32 = s[5..]
+                    .parse()
+                    .map_err(|e| format!("bad gc:nc distance {s:?}: {e}"))?;
+                Neighborhood::GcNc { d }
+            }
             Some(s) if s.to_ascii_lowercase().starts_with("nccyc") => {
                 let d: u32 = s[5..]
                     .parse()
@@ -152,6 +165,7 @@ impl AlgorithmSpec {
             Neighborhood::Np { .. } => format!("{ml}{c}+Np"),
             Neighborhood::Nc { d } => format!("{ml}{c}+Nc{d}"),
             Neighborhood::NcCycle { d } => format!("{ml}{c}+NcCyc{d}"),
+            Neighborhood::GcNc { d } => format!("{ml}{c}+gc:nc{d}"),
         }
     }
 }
@@ -186,7 +200,8 @@ mod tests {
     fn parse_roundtrip() {
         for name in ["identity", "random", "mm", "gac", "topdown", "bottomup", "rcb",
                      "topdown+Nc10", "mm+Np", "random+N2", "mm+Nc1", "topdown+NcCyc1",
-                     "ml:topdown+Nc5", "ml:mm", "ml:bottomup+N2", "ml:rcb+NcCyc2"] {
+                     "ml:topdown+Nc5", "ml:mm", "ml:bottomup+N2", "ml:rcb+NcCyc2",
+                     "topdown+gc:nc10", "mm+gc:nc1", "ml:topdown+gc:nc5"] {
             let spec = AlgorithmSpec::parse(name).unwrap();
             assert_eq!(spec.name(), *name, "roundtrip {name}");
         }
@@ -220,6 +235,8 @@ mod tests {
             (Neighborhood::Nc { d: 37 }, "+Nc37".to_string()),
             (Neighborhood::NcCycle { d: 1 }, "+NcCyc1".to_string()),
             (Neighborhood::NcCycle { d: 10 }, "+NcCyc10".to_string()),
+            (Neighborhood::GcNc { d: 1 }, "+gc:nc1".to_string()),
+            (Neighborhood::GcNc { d: 10 }, "+gc:nc10".to_string()),
         ];
         for ml in [false, true] {
             for (c, cname) in &constructions {
@@ -254,7 +271,10 @@ mod tests {
             ("td+NC3", "topdown+Nc3"),
             ("td+nccyc2", "topdown+NcCyc2"),
             ("td+NcCyc2", "topdown+NcCyc2"),
+            ("td+GC:NC3", "topdown+gc:nc3"),
+            ("td+Gc:Nc3", "topdown+gc:nc3"),
             ("ml:td+nc5", "ml:topdown+Nc5"),
+            ("ml:td+gc:nc5", "ml:topdown+gc:nc5"),
             ("ml:bu", "ml:bottomup"),
         ] {
             let spec = AlgorithmSpec::parse(alias).unwrap();
@@ -277,6 +297,11 @@ mod tests {
             "mm+NcCyc",
             "mm+NcCycx",
             "mm+NcCyc-2",
+            "mm+gc:nc",
+            "mm+gc:ncx",
+            "mm+gc:nc-1",
+            "mm+gc:",
+            "mm+gc:Nq1",
             "nope",
             "nope+Nc1",
             "MM",

@@ -83,6 +83,17 @@ pub struct SwapEngine<'a> {
     /// `Γ_σ(u)`: contribution of vertex `u` to the objective (each edge is
     /// counted in both endpoints' Γ, so `Σ Γ = 2J`).
     gamma: Vec<u64>,
+    /// Per-vertex move versions: every applied move bumps the counters of
+    /// `u`, `v` *and all their communication neighbors* — exactly the set of
+    /// vertices whose Γ (and therefore any pair gain they participate in)
+    /// the move can change. Gain-cached refiners stamp these at evaluation
+    /// time and re-evaluate lazily when a stamp goes stale
+    /// ([`crate::mapping::refine::GainCacheNc`]).
+    version: Vec<u32>,
+    /// Global move epoch: total number of applied moves (a rotation counts
+    /// as its two constituent swaps). Monotone; cheap staleness signal for
+    /// callers that do not track per-vertex versions.
+    moves: u64,
     /// Current objective value.
     j: u64,
     /// Number of swaps applied (statistics for the harness).
@@ -122,7 +133,8 @@ impl<'a> SwapEngine<'a> {
             }
             gamma[u as usize] = gu;
         }
-        SwapEngine { comm, oracle, sigma, gamma, j, swaps_applied: 0 }
+        let version = vec![0u32; comm.n()];
+        SwapEngine { comm, oracle, sigma, gamma, version, moves: 0, j, swaps_applied: 0 }
     }
 
     /// Decompose into the final assignment and the `Γ` scratch buffer (for
@@ -152,6 +164,21 @@ impl<'a> SwapEngine<'a> {
     #[inline]
     pub fn gamma_of(&self, u: NodeId) -> u64 {
         self.gamma[u as usize]
+    }
+
+    /// Move version of `u`: bumped (wrapping) by every applied move that can
+    /// change a gain involving `u` — i.e. whenever `u` is an endpoint or a
+    /// communication neighbor of an endpoint of the move.
+    #[inline]
+    pub fn version_of(&self, u: NodeId) -> u32 {
+        self.version[u as usize]
+    }
+
+    /// Global move epoch (monotone count of applied swaps; a rotation
+    /// contributes two).
+    #[inline]
+    pub fn moves_epoch(&self) -> u64 {
+        self.moves
     }
 
     /// Gain of swapping the PEs of processes `u` and `v` (positive = the
@@ -194,29 +221,47 @@ impl<'a> SwapEngine<'a> {
         -delta
     }
 
-    /// Apply the swap, updating `σ`, all affected `Γ` and `J` in
-    /// `O(d_u + d_v)` (§3.2's update procedure).
+    /// Apply the swap, updating `σ`, all affected `Γ`, move versions and `J`
+    /// in `O(d_u + d_v)` (§3.2's update procedure).
+    ///
+    /// §Perf: like [`Self::swap_gain`], the oracle enum is matched once per
+    /// *call* — the inner loops are monomorphized over the concrete oracle.
     pub fn do_swap(&mut self, u: NodeId, v: NodeId) {
+        let oracle = self.oracle;
+        match oracle {
+            DistanceOracle::Implicit(h) => self.do_swap_with(u, v, |p, q| h.distance(p, q)),
+            DistanceOracle::Explicit { n, matrix } => {
+                let n = *n;
+                self.do_swap_with(u, v, |p, q| matrix[p as usize * n + q as usize])
+            }
+        }
+    }
+
+    fn do_swap_with(&mut self, u: NodeId, v: NodeId, dist: impl Fn(u32, u32) -> u64) {
         debug_assert_ne!(u, v);
         let pu = self.sigma[u as usize];
         let pv = self.sigma[v as usize];
         // subtract old contributions of u and v from J (each edge (u,x)
         // appears once in Γ(u); J counts undirected edges once, and the
-        // (u,v) edge sits in both Γs).
+        // (u,v) edge sits in both Γs). Its cost is invariant under the swap
+        // (D is symmetric), so one lookup serves both sides of the update.
         let cuv = self.comm.edge_weight(u, v); // rarely present; degree-bounded scan
-        let duv_old = cuv.map(|c| c * self.oracle.distance(pu, pv)).unwrap_or(0);
-        self.j -= self.gamma[u as usize] + self.gamma[v as usize] - duv_old;
+        let duv = cuv.map(|c| c * dist(pu, pv)).unwrap_or(0);
+        self.j -= self.gamma[u as usize] + self.gamma[v as usize] - duv;
 
-        // retract edge contributions from the neighbors' Γ
+        // retract edge contributions from the neighbors' Γ; every neighbor's
+        // version bumps — their Γ (and any gain they participate in) changes
         for (x, c) in self.comm.edges(u) {
             if x != v {
-                self.gamma[x as usize] -= c * self.oracle.distance(pu, self.sigma[x as usize]);
+                self.gamma[x as usize] -= c * dist(pu, self.sigma[x as usize]);
             }
+            self.version[x as usize] = self.version[x as usize].wrapping_add(1);
         }
         for (x, c) in self.comm.edges(v) {
             if x != u {
-                self.gamma[x as usize] -= c * self.oracle.distance(pv, self.sigma[x as usize]);
+                self.gamma[x as usize] -= c * dist(pv, self.sigma[x as usize]);
             }
+            self.version[x as usize] = self.version[x as usize].wrapping_add(1);
         }
 
         // the swap itself
@@ -226,7 +271,7 @@ impl<'a> SwapEngine<'a> {
         // recompute Γ(u), Γ(v); push new edge contributions to neighbors
         let mut gu = 0u64;
         for (x, c) in self.comm.edges(u) {
-            let contrib = c * self.oracle.distance(pv, self.sigma[x as usize]);
+            let contrib = c * dist(pv, self.sigma[x as usize]);
             gu += contrib;
             if x != v {
                 self.gamma[x as usize] += contrib;
@@ -234,7 +279,7 @@ impl<'a> SwapEngine<'a> {
         }
         let mut gv = 0u64;
         for (x, c) in self.comm.edges(v) {
-            let contrib = c * self.oracle.distance(pu, self.sigma[x as usize]);
+            let contrib = c * dist(pu, self.sigma[x as usize]);
             gv += contrib;
             if x != u {
                 self.gamma[x as usize] += contrib;
@@ -244,9 +289,10 @@ impl<'a> SwapEngine<'a> {
         self.gamma[v as usize] = gv;
 
         // add new contributions to J (the (u,v) edge again counted once)
-        let duv_new = cuv.map(|c| c * self.oracle.distance(pu, pv)).unwrap_or(0);
-        debug_assert_eq!(duv_new, duv_old, "swap must not change the (u,v) edge cost");
-        self.j += gu + gv - duv_new;
+        self.j += gu + gv - duv;
+        self.version[u as usize] = self.version[u as usize].wrapping_add(1);
+        self.version[v as usize] = self.version[v as usize].wrapping_add(1);
+        self.moves += 1;
         self.swaps_applied += 1;
     }
 
@@ -254,7 +300,28 @@ impl<'a> SwapEngine<'a> {
     /// `u -> v -> w -> u` (u gets v's PE, v gets w's, w gets u's). The
     /// paper's §5 names cyclic exchanges as future work; this implements
     /// them with the same Γ machinery in `O(d_u + d_v + d_w)`.
+    ///
+    /// §Perf: like [`Self::swap_gain`], the oracle enum is matched once per
+    /// *call* — the inner loops are monomorphized over the concrete oracle.
     pub fn rotate3_gain(&self, u: NodeId, v: NodeId, w: NodeId) -> i64 {
+        match self.oracle {
+            DistanceOracle::Implicit(ref h) => {
+                self.rotate3_gain_with(u, v, w, |p, q| h.distance(p, q))
+            }
+            DistanceOracle::Explicit { n, ref matrix } => {
+                self.rotate3_gain_with(u, v, w, |p, q| matrix[p as usize * n + q as usize])
+            }
+        }
+    }
+
+    #[inline]
+    fn rotate3_gain_with(
+        &self,
+        u: NodeId,
+        v: NodeId,
+        w: NodeId,
+        dist: impl Fn(u32, u32) -> u64,
+    ) -> i64 {
         debug_assert!(u != v && v != w && u != w);
         let pu = self.sigma[u as usize];
         let pv = self.sigma[v as usize];
@@ -269,9 +336,7 @@ impl<'a> SwapEngine<'a> {
                     continue; // intra-triple edges handled separately
                 }
                 let px = self.sigma[x as usize];
-                delta += c as i64
-                    * (self.oracle.distance(pa_new, px) as i64
-                        - self.oracle.distance(pa_old, px) as i64);
+                delta += c as i64 * (dist(pa_new, px) as i64 - dist(pa_old, px) as i64);
             }
         }
         // intra-triple edges: each unordered pair once, old vs new distance
@@ -279,8 +344,8 @@ impl<'a> SwapEngine<'a> {
             [(u, v, pv, pw), (u, w, pv, pu), (v, w, pw, pu)]
         {
             if let Some(c) = self.comm.edge_weight(a, b) {
-                let old = self.oracle.distance(self.sigma[a as usize], self.sigma[b as usize]);
-                let new = self.oracle.distance(pa_new, pb_new);
+                let old = dist(self.sigma[a as usize], self.sigma[b as usize]);
+                let new = dist(pa_new, pb_new);
                 delta += c as i64 * (new as i64 - old as i64);
             }
         }
@@ -426,21 +491,31 @@ impl DenseEngine {
         -delta
     }
 
-    /// Apply the swap (`O(n)` bookkeeping as in the original).
-    pub fn do_swap(&mut self, u: NodeId, v: NodeId) {
-        let gain = self.swap_gain(u, v);
+    /// Apply a swap whose gain the caller already computed — the `O(1)`
+    /// bookkeeping half of the move, without the second `O(n)` row scan.
+    /// Shared by [`Self::do_swap`], [`Self::try_swap`] and the
+    /// `Swapper::do_swap_with_gain` override (gain-cached refiners apply
+    /// provably-fresh pops without re-scanning). The gain must be exact —
+    /// `J` is updated by subtraction, not recomputed.
+    #[inline]
+    pub(crate) fn apply_swap_with_gain(&mut self, u: NodeId, v: NodeId, gain: i64) {
         self.sigma.swap(u as usize, v as usize);
         self.j = (self.j as i64 - gain) as u64;
         self.swaps_applied += 1;
     }
 
-    /// Apply only on strict improvement.
+    /// Apply the swap (`O(n)` bookkeeping as in the original: the dense code
+    /// pays a full row scan to apply a move).
+    pub fn do_swap(&mut self, u: NodeId, v: NodeId) {
+        let gain = self.swap_gain(u, v);
+        self.apply_swap_with_gain(u, v, gain);
+    }
+
+    /// Apply only on strict improvement (the `O(n)` gain scan runs once).
     pub fn try_swap(&mut self, u: NodeId, v: NodeId) -> Option<i64> {
         let gain = self.swap_gain(u, v);
         if gain > 0 {
-            self.sigma.swap(u as usize, v as usize);
-            self.j = (self.j as i64 - gain) as u64;
-            self.swaps_applied += 1;
+            self.apply_swap_with_gain(u, v, gain);
             Some(gain)
         } else {
             None
@@ -482,9 +557,10 @@ impl DenseEngine {
         -delta
     }
 
-    /// Apply the 3-cycle rotation `u -> v -> w -> u`.
-    pub fn do_rotate3(&mut self, u: NodeId, v: NodeId, w: NodeId) {
-        let gain = self.rotate3_gain(u, v, w);
+    /// Apply a rotation whose gain the caller already computed (`O(1)`;
+    /// shared by [`Self::do_rotate3`] and [`Self::try_rotate3`]).
+    #[inline]
+    fn apply_rotate3_with_gain(&mut self, u: NodeId, v: NodeId, w: NodeId, gain: i64) {
         let pu = self.sigma[u as usize];
         self.sigma[u as usize] = self.sigma[v as usize];
         self.sigma[v as usize] = self.sigma[w as usize];
@@ -493,18 +569,19 @@ impl DenseEngine {
         self.swaps_applied += 1;
     }
 
+    /// Apply the 3-cycle rotation `u -> v -> w -> u`.
+    pub fn do_rotate3(&mut self, u: NodeId, v: NodeId, w: NodeId) {
+        let gain = self.rotate3_gain(u, v, w);
+        self.apply_rotate3_with_gain(u, v, w, gain);
+    }
+
     /// Apply the rotation only if it strictly improves; returns the gain.
-    /// (Mirrors [`Self::try_swap`]: the application is inlined so the `O(n)`
-    /// gain scan runs once, not twice.)
+    /// (Mirrors [`Self::try_swap`]: the `O(n)` gain scan runs once, not
+    /// twice.)
     pub fn try_rotate3(&mut self, u: NodeId, v: NodeId, w: NodeId) -> Option<i64> {
         let gain = self.rotate3_gain(u, v, w);
         if gain > 0 {
-            let pu = self.sigma[u as usize];
-            self.sigma[u as usize] = self.sigma[v as usize];
-            self.sigma[v as usize] = self.sigma[w as usize];
-            self.sigma[w as usize] = pu;
-            self.j = (self.j as i64 - gain) as u64;
-            self.swaps_applied += 1;
+            self.apply_rotate3_with_gain(u, v, w, gain);
             Some(gain)
         } else {
             None
@@ -601,6 +678,80 @@ mod tests {
                 .sum();
             assert_eq!(eng.gamma_of(u), expect, "gamma({u})");
         }
+    }
+
+    #[test]
+    fn moves_touch_only_endpoints_and_neighbors() {
+        // the gain-cache contract: a swap of (u, v) may change Γ and the
+        // move version only for u, v and their communication neighbors, and
+        // the gain of any pair entirely outside that set stays put
+        let (g, o) = setup(7, 40);
+        let mut rng = Rng::new(41);
+        let n = g.n();
+        let mut eng = SwapEngine::new(&g, &o, Mapping { sigma: rng.permutation(n) });
+        for _ in 0..50 {
+            let u = rng.index(n) as NodeId;
+            let mut v = rng.index(n) as NodeId;
+            if u == v {
+                v = (v + 1) % n as NodeId;
+            }
+            let mut touched = vec![false; n];
+            touched[u as usize] = true;
+            touched[v as usize] = true;
+            for &x in g.neighbors(u) {
+                touched[x as usize] = true;
+            }
+            for &x in g.neighbors(v) {
+                touched[x as usize] = true;
+            }
+            let gamma_before: Vec<u64> = (0..n as NodeId).map(|x| eng.gamma_of(x)).collect();
+            let version_before: Vec<u32> = (0..n as NodeId).map(|x| eng.version_of(x)).collect();
+            // control pairs fully outside the touched set
+            let mut control: Vec<(NodeId, NodeId, i64)> = Vec::new();
+            for _ in 0..20 {
+                let a = rng.index(n) as NodeId;
+                let b = rng.index(n) as NodeId;
+                if a != b && !touched[a as usize] && !touched[b as usize] {
+                    control.push((a, b, eng.swap_gain(a, b)));
+                }
+            }
+            let epoch = eng.moves_epoch();
+            eng.do_swap(u, v);
+            assert_eq!(eng.moves_epoch(), epoch + 1);
+            for x in 0..n as NodeId {
+                if touched[x as usize] {
+                    assert!(
+                        eng.version_of(x) > version_before[x as usize],
+                        "version({x}) not bumped"
+                    );
+                } else {
+                    assert_eq!(
+                        eng.version_of(x),
+                        version_before[x as usize],
+                        "version({x}) moved"
+                    );
+                    assert_eq!(eng.gamma_of(x), gamma_before[x as usize], "gamma({x}) moved");
+                }
+            }
+            for (a, b, gain) in control {
+                assert_eq!(eng.swap_gain(a, b), gain, "untouched pair ({a},{b}) gain changed");
+            }
+        }
+    }
+
+    #[test]
+    fn moves_epoch_counts_rotations_as_two_swaps() {
+        let (g, o) = setup(6, 42);
+        let mut eng = SwapEngine::new(&g, &o, Mapping::identity(g.n()));
+        assert_eq!(eng.moves_epoch(), 0);
+        eng.do_swap(0, 1);
+        assert_eq!(eng.moves_epoch(), 1);
+        eng.do_rotate3(0, 1, 2);
+        assert_eq!(eng.moves_epoch(), 3);
+        for x in [0u32, 1, 2] {
+            assert!(eng.version_of(x) > 0, "version({x}) untouched by the rotation");
+        }
+        assert_eq!(eng.objective(), eng.recompute_objective());
     }
 
     #[test]

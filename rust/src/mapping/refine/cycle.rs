@@ -201,6 +201,10 @@ mod tests {
         // evaluations instead of a futile pass over every triangle
         struct PairsOnly(u64);
         impl Swapper for PairsOnly {
+            fn swap_gain(&self, _u: NodeId, _v: NodeId) -> i64 {
+                0
+            }
+            fn do_swap(&mut self, _u: NodeId, _v: NodeId) {}
             fn try_swap(&mut self, _u: NodeId, _v: NodeId) -> Option<i64> {
                 None
             }

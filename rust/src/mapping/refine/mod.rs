@@ -11,6 +11,10 @@
 //!   `N_C^d` (owns and reuses the materialized pair set).
 //! * [`Cycle3`] — cyclic exchange over communication-graph triangles (§5
 //!   future work; owns and reuses the triangle set).
+//! * [`GainCacheNc`] — the FM-style gain-cached `N_C^d` search: a priority
+//!   bucket queue over the pair set with lazy, move-version-based
+//!   invalidation, so pairs untouched by a move are never re-evaluated
+//!   (arXiv:2001.07134's k-way FM machinery on this paper's neighborhood).
 //!
 //! Each refiner owns its reusable scratch — pair sets, triangle sets and
 //! shuffle buffers that used to be cached ad hoc inside
@@ -26,11 +30,13 @@
 //! [`Swapper::try_rotate3`].
 
 pub mod cycle;
+pub mod gaincache;
 pub mod n2;
 pub mod nc;
 pub mod np;
 
 pub use cycle::{comm_triangles, Cycle3, NcCycle};
+pub use gaincache::{GainBucketQueue, GainCacheNc};
 pub use n2::N2Cyclic;
 pub use nc::{nc_neighborhood, nc_pairs, NcNeighborhood};
 pub use np::NpBlocks;
@@ -44,6 +50,20 @@ use crate::util::Rng;
 /// Common interface over the fast (sparse, `O(d_u+d_v)`) and slow (dense,
 /// `O(n)`) swap engines.
 pub trait Swapper {
+    /// Gain of swapping `u` and `v` *without* applying (positive = the
+    /// objective would decrease by that amount).
+    fn swap_gain(&self, u: NodeId, v: NodeId) -> i64;
+    /// Apply the swap unconditionally (the caller has already decided).
+    fn do_swap(&mut self, u: NodeId, v: NodeId);
+    /// Apply a swap whose *exact* gain the caller already knows — a
+    /// gain-cached refiner pops a pair whose stamped gain is provably
+    /// fresh. Defaults to [`Self::do_swap`], which is already
+    /// `O(d_u + d_v)` for the sparse engine; the dense engine overrides it
+    /// to skip the second `O(n)` row scan its `do_swap` would pay just to
+    /// recompute the gain. Passing a wrong gain corrupts the objective.
+    fn do_swap_with_gain(&mut self, u: NodeId, v: NodeId, _gain: i64) {
+        self.do_swap(u, v)
+    }
     /// Apply the swap iff it strictly improves the objective.
     fn try_swap(&mut self, u: NodeId, v: NodeId) -> Option<i64>;
     /// Current objective value.
@@ -61,9 +81,27 @@ pub trait Swapper {
     fn supports_rotate3(&self) -> bool {
         false
     }
+    /// Move version of `u`: bumped by every applied move that can change a
+    /// gain involving `u` (the endpoints and all their communication
+    /// neighbors). Inert default for engines without version tracking —
+    /// they must leave [`Self::supports_versions`] false so gain-cached
+    /// refiners fall back to epoch-based invalidation.
+    fn version_of(&self, _u: NodeId) -> u32 {
+        0
+    }
+    /// True when [`Self::version_of`] actually tracks moves.
+    fn supports_versions(&self) -> bool {
+        false
+    }
 }
 
 impl Swapper for SwapEngine<'_> {
+    fn swap_gain(&self, u: NodeId, v: NodeId) -> i64 {
+        SwapEngine::swap_gain(self, u, v)
+    }
+    fn do_swap(&mut self, u: NodeId, v: NodeId) {
+        SwapEngine::do_swap(self, u, v)
+    }
     fn try_swap(&mut self, u: NodeId, v: NodeId) -> Option<i64> {
         SwapEngine::try_swap(self, u, v)
     }
@@ -79,9 +117,24 @@ impl Swapper for SwapEngine<'_> {
     fn supports_rotate3(&self) -> bool {
         true
     }
+    fn version_of(&self, u: NodeId) -> u32 {
+        SwapEngine::version_of(self, u)
+    }
+    fn supports_versions(&self) -> bool {
+        true
+    }
 }
 
 impl Swapper for DenseEngine {
+    fn swap_gain(&self, u: NodeId, v: NodeId) -> i64 {
+        DenseEngine::swap_gain(self, u, v)
+    }
+    fn do_swap(&mut self, u: NodeId, v: NodeId) {
+        DenseEngine::do_swap(self, u, v)
+    }
+    fn do_swap_with_gain(&mut self, u: NodeId, v: NodeId, gain: i64) {
+        DenseEngine::apply_swap_with_gain(self, u, v, gain)
+    }
     fn try_swap(&mut self, u: NodeId, v: NodeId) -> Option<i64> {
         DenseEngine::try_swap(self, u, v)
     }
@@ -97,6 +150,9 @@ impl Swapper for DenseEngine {
     fn supports_rotate3(&self) -> bool {
         true
     }
+    // version_of / supports_versions: inert defaults — the dense baseline
+    // has no incremental bookkeeping to version; GainCacheNc falls back to
+    // its own applied-move epoch for staleness.
 }
 
 /// Search statistics returned by every refiner.
@@ -162,6 +218,7 @@ pub fn refiner_for(
         }
         Neighborhood::Nc { d } => Box::new(NcNeighborhood::new(d)),
         Neighborhood::NcCycle { d } => Box::new(NcCycle::new(d, max_sweeps)),
+        Neighborhood::GcNc { d } => Box::new(GainCacheNc::new(d)),
     }
 }
 
@@ -215,6 +272,7 @@ mod tests {
             (Neighborhood::Np { block_len: 64 }, "Np"),
             (Neighborhood::Nc { d: 3 }, "Nc3"),
             (Neighborhood::NcCycle { d: 2 }, "NcCyc2"),
+            (Neighborhood::GcNc { d: 3 }, "GcNc3"),
         ] {
             assert_eq!(refiner_for(nb, 100, &h).name(), name);
         }

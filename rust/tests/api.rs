@@ -103,6 +103,55 @@ fn deterministic_jobs_short_circuit() {
 }
 
 #[test]
+fn gaincache_same_seed_is_bit_identical_including_ml() {
+    // gc:nc<d> determinism end to end: two fresh sessions with the same
+    // seed produce the same bits, flat and under the ml: V-cycle, and the
+    // gain cache composes with the session repetition machinery
+    let (g, h) = instance(128, 21);
+    for algo in ["topdown+gc:nc2", "ml:topdown+gc:nc2"] {
+        let mk = || {
+            MapJobBuilder::new(g.clone(), h.clone())
+                .algorithm_name(algo)
+                .unwrap()
+                .repetitions(2)
+                .seed(9)
+                .build()
+                .unwrap()
+        };
+        let a = MapSession::new(mk()).run();
+        let b = MapSession::new(mk()).run();
+        assert_eq!(a.mapping.sigma, b.mapping.sigma, "{algo}");
+        assert_eq!(a.objective, b.objective, "{algo}");
+        assert_eq!(a.reps.len(), b.reps.len(), "{algo}");
+        for (x, y) in a.reps.iter().zip(&b.reps) {
+            assert_eq!(x.objective, y.objective, "{algo}");
+            assert_eq!(x.evaluated, y.evaluated, "{algo}");
+            assert_eq!(x.improved, y.improved, "{algo}");
+        }
+        a.mapping.validate().unwrap();
+        assert!(a.objective <= a.objective_initial, "{algo}");
+    }
+}
+
+#[test]
+fn gaincache_with_deterministic_construction_short_circuits() {
+    // mm never consults the RNG and neither does the gain cache, so the
+    // whole mm+gc:nc<d> pipeline short-circuits repetitions to one
+    let (g, h) = instance(128, 22);
+    let job = MapJobBuilder::new(g, h)
+        .algorithm_name("mm+gc:nc1")
+        .unwrap()
+        .repetitions(8)
+        .build()
+        .unwrap();
+    let report = MapSession::new(job).run();
+    assert!(report.short_circuited);
+    assert_eq!(report.reps.len(), 1);
+    assert!(report.objective <= report.objective_initial);
+    report.mapping.validate().unwrap();
+}
+
+#[test]
 fn best_of_n_never_worse_than_single() {
     let (g, h) = instance(128, 4);
     let single = MapSession::new(
