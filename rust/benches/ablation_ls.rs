@@ -14,7 +14,7 @@ use qapmap::api::{MapJobBuilder, MapSession};
 use qapmap::bench::{full_mode, instance_suite, write_csv, Table, FAMILIES};
 use qapmap::mapping::objective::{Mapping, SwapEngine};
 use qapmap::mapping::refine::{nc_pairs, Cycle3, GainCacheNc, NcNeighborhood, Refiner};
-use qapmap::mapping::{DistanceOracle, Hierarchy};
+use qapmap::mapping::{Hierarchy, Machine};
 use qapmap::partition::PartitionConfig;
 use qapmap::util::stats::geometric_mean;
 use qapmap::util::{Rng, Timer};
@@ -70,7 +70,7 @@ fn main() {
     let k: u64 = if full_mode() { 32 } else { 8 };
     let n = 64 * k as usize;
     let h = Hierarchy::new(vec![4, 16, k], vec![1, 10, 100]).unwrap();
-    let oracle = DistanceOracle::implicit(h.clone());
+    let oracle = Machine::implicit(h.clone());
     let mut rng = Rng::new(500);
     let suite = instance_suite(FAMILIES, n, 32, &mut rng);
 

@@ -5,19 +5,25 @@
 //! * swap apply (Γ update) ns/op
 //! * gain-cache bucket-queue push / pop ns/op, and gain-cache vs shuffle
 //!   `N_C^d` evaluation counts on a fixed instance
-//! * distance oracle: implicit O(k) vs explicit O(1) lookup, ns/query
+//! * distance oracle ns/query across the whole topology subsystem:
+//!   hierarchy shift fast path, hierarchy generic division path (driven
+//!   through the `Topology` trait), grid, torus, and the explicit matrix
 //! * objective initialization O(n+m)
 //! * partitioner throughput (vertices/s)
 //! * XLA runtime objective-call latency (if artifacts are built)
 //!
-//! `--check` turns the two headline claims into assertions (sparse swap
+//! `--check` turns the three headline claims into assertions (sparse swap
 //! gain beats dense at n=4096; the gain cache evaluates strictly fewer
-//! pairs than the shuffle search on a fixed instance) — the CI smoke mode.
+//! pairs than the shuffle search on a fixed instance; the hierarchy shift
+//! fast path beats the generic trait-dispatched division path) — the CI
+//! smoke mode.
 
 use qapmap::gen::random_geometric_graph;
 use qapmap::mapping::objective::{DenseEngine, Mapping, SwapEngine};
 use qapmap::mapping::refine::{GainBucketQueue, GainCacheNc, NcNeighborhood, Refiner};
-use qapmap::mapping::{objective, DistanceOracle, Hierarchy};
+use qapmap::mapping::{
+    objective, ExplicitTopology, GridTopology, Hierarchy, Machine, Topology, TorusTopology,
+};
 use qapmap::model::build_instance;
 use qapmap::partition::{partition_kway, PartitionConfig};
 use qapmap::util::timer::{bench_secs, black_box, fmt_secs};
@@ -30,29 +36,62 @@ fn main() {
     let app = random_geometric_graph(n * 8, &mut rng);
     let comm = build_instance(&app, n, &mut rng);
     let h = Hierarchy::new(vec![4, 16, (n / 64) as u64], vec![1, 10, 100]).unwrap();
-    let implicit = DistanceOracle::implicit(h.clone());
-    let explicit = DistanceOracle::explicit(&h);
+    let implicit = Machine::implicit(h.clone());
+    let explicit = ExplicitTopology::materialize(&h);
     println!("== hot-path micro-benchmarks (n={n}, m={}, m/n={:.1}) ==\n", comm.m(), comm.density());
 
     // -- distance oracle ---------------------------------------------------
+    // one query bench per topology; the generic driver goes through the
+    // `Topology` trait, exactly like the engines' monomorphized inner loops
+    fn bench_oracle<T: Topology + ?Sized>(t: &T, queries: &[(u32, u32)]) -> f64 {
+        bench_secs(0.2, 50, || {
+            let mut acc = 0u64;
+            for &(p, q) in queries {
+                acc += t.distance(p, q);
+            }
+            black_box(acc);
+        }) / queries.len() as f64
+    }
     let queries: Vec<(u32, u32)> =
         (0..1024).map(|_| (rng.index(n) as u32, rng.index(n) as u32)).collect();
-    let t_imp = bench_secs(0.2, 50, || {
-        let mut acc = 0u64;
-        for &(p, q) in &queries {
-            acc += implicit.distance(p, q);
-        }
-        black_box(acc);
-    }) / queries.len() as f64;
-    let t_exp = bench_secs(0.2, 50, || {
-        let mut acc = 0u64;
-        for &(p, q) in &queries {
-            acc += explicit.distance(p, q);
-        }
-        black_box(acc);
-    }) / queries.len() as f64;
-    println!("oracle   implicit : {:>12}/query", fmt_secs(t_imp));
-    println!("oracle   explicit : {:>12}/query  ({:.1}x of implicit)\n", fmt_secs(t_exp), t_exp / t_imp);
+    // every ext of 4:16:(n/64) at n=4096 is a power of two -> shift path;
+    // both hierarchy rows drive the same generic fn over the concrete type
+    let t_imp = bench_oracle(&h, &queries);
+    let t_exp = bench_oracle(&explicit, &queries);
+    // a non-power-of-two machine of comparable size forces the generic
+    // division scan — "the generic trait path" the shift path must beat
+    let h_div = Hierarchy::new(vec![4, 16, 63], vec![1, 10, 100]).unwrap(); // 4032 PEs
+    let div_queries: Vec<(u32, u32)> = (0..1024)
+        .map(|_| (rng.index(4032) as u32, rng.index(4032) as u32))
+        .collect();
+    let t_div = bench_oracle(&h_div, &div_queries);
+    // concrete topology values, like the hierarchy rows — no per-query
+    // enum dispatch, matching what the engines' monomorphized loops pay
+    let grid = GridTopology::new(vec![64, 64], 1).unwrap();
+    let torus = TorusTopology::new(vec![16, 16, 16], 1).unwrap();
+    let t_grid = bench_oracle(&grid, &queries);
+    let t_torus = bench_oracle(&torus, &queries);
+    println!("oracle hier shift : {:>12}/query", fmt_secs(t_imp));
+    println!(
+        "oracle hier div   : {:>12}/query  ({:.1}x of shift; generic trait path)",
+        fmt_secs(t_div),
+        t_div / t_imp
+    );
+    println!(
+        "oracle grid 64x64 : {:>12}/query  ({:.1}x of shift)",
+        fmt_secs(t_grid),
+        t_grid / t_imp
+    );
+    println!(
+        "oracle torus 16^3 : {:>12}/query  ({:.1}x of shift)",
+        fmt_secs(t_torus),
+        t_torus / t_imp
+    );
+    println!(
+        "oracle   explicit : {:>12}/query  ({:.1}x of shift)\n",
+        fmt_secs(t_exp),
+        t_exp / t_imp
+    );
 
     // -- objective init ----------------------------------------------------
     let m0 = Mapping { sigma: rng.permutation(n) };
@@ -161,7 +200,7 @@ fn main() {
     let gc_n = 1024;
     let gc_comm = build_instance(&app, gc_n, &mut rng);
     let gc_h = Hierarchy::new(vec![4, 16, (gc_n / 64) as u64], vec![1, 10, 100]).unwrap();
-    let gc_o = DistanceOracle::implicit(gc_h);
+    let gc_o = Machine::implicit(gc_h);
     let start = Mapping { sigma: rng.permutation(gc_n) };
     let mut e_gc = SwapEngine::new(&gc_comm, &gc_o, start.clone());
     let t0 = Timer::start();
@@ -201,7 +240,7 @@ fn main() {
         Ok(rt) => {
             let small_comm = build_instance(&app, 256, &mut rng);
             let hh = Hierarchy::new(vec![4, 16, 4], vec![1, 10, 100]).unwrap();
-            let oo = DistanceOracle::implicit(hh);
+            let oo = Machine::implicit(hh);
             let mm = Mapping { sigma: rng.permutation(256) };
             // warm-up (compile already done at load; first exec warms buffers)
             let _ = rt.objective(&small_comm, &oo, &mm).unwrap();
@@ -231,12 +270,20 @@ fn main() {
             s_gc.evaluated,
             s_sh.evaluated
         );
+        assert!(
+            t_imp < t_div,
+            "hierarchy shift fast path ({}) not faster than the generic \
+             trait-dispatched division path ({})",
+            fmt_secs(t_imp),
+            fmt_secs(t_div)
+        );
         println!(
             "\nhotpath --check: OK (sparse gain {:.0}x faster; gain cache {} vs shuffle {} \
-             evaluations)",
+             evaluations; oracle shift path {:.1}x faster than the generic trait path)",
             t_slow / t_fast,
             s_gc.evaluated,
-            s_sh.evaluated
+            s_sh.evaluated,
+            t_div / t_imp
         );
     }
 }

@@ -4,7 +4,7 @@
 //!
 //! What the long-lived session amortizes across repetitions
 //! (allocated/computed once instead of 8×):
-//! * the `DistanceOracle` (O(n²) matrix fill in `--explicit` mode),
+//! * the `Machine` (O(n²) matrix fill in `--explicit` mode),
 //! * the `N_C^d` pair set inside the session's `Refiner` (a BFS ball per
 //!   vertex — dominant for d = 10) and the triangle set of the cyclic
 //!   search,

@@ -5,15 +5,15 @@ use crate::coordinator::{MapRequest, MapResponse};
 use crate::graph::Graph;
 use crate::mapping::algorithms::AlgorithmSpec;
 use crate::mapping::multilevel::MlConfig;
-use crate::mapping::Hierarchy;
+use crate::model::topology::{GridTopology, Hierarchy, Machine};
 use crate::partition::PartitionConfig;
-use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::report::MapReport;
 
 /// How the session materializes the distance oracle (§3.4): query the
-/// hierarchy online (O(1) memory) or precompute the full `n×n` matrix
-/// (O(1) per query, the traditional layout that OOMs at scale).
+/// topology online (O(1) memory) or precompute the full `n×n` matrix
+/// (O(1) per query, the traditional layout that OOMs at scale). The
+/// explicit form memoizes *any* machine — hierarchy, grid or torus.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum OracleMode {
     #[default]
@@ -38,13 +38,44 @@ pub enum VerifyPolicy {
     Required,
 }
 
+/// How a job's machine model came to be — the structured replacement for
+/// the former once-per-process "flat fallback" warning. Surfaced on
+/// [`MapReport::machine`] so every report says which topology it ran
+/// against and whether the default template had to be folded to fit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MachineResolution {
+    /// Canonical machine grammar name (`Machine::spec`), or `"explicit"`
+    /// for raw-matrix machines the grammar cannot express.
+    pub spec: String,
+    /// True when no machine was given and [`resolve_machine`] applied the
+    /// default template.
+    pub inferred: bool,
+    /// True when the default `4:16:(n/64)` template did not divide `n` and
+    /// partial levels were folded away (gcd peeling) — the structured
+    /// successor of the old flat-hierarchy fallback, which silently made
+    /// every mapping cost-equal. No flat machine is ever produced now.
+    pub partial_top_folded: bool,
+}
+
+impl MachineResolution {
+    /// Resolution for an explicitly supplied machine (nothing inferred).
+    pub fn explicit(machine: &Machine) -> MachineResolution {
+        MachineResolution {
+            spec: machine.spec().unwrap_or_else(|_| "explicit".to_string()),
+            inferred: false,
+            partial_top_folded: false,
+        }
+    }
+}
+
 /// Builder for a [`MapJob`]: collects configuration, applies the library
 /// defaults (the paper's best trade-off `topdown+Nc10`, perfectly balanced
 /// partitions, one repetition), and validates on [`Self::build`].
 #[derive(Debug, Clone)]
 pub struct MapJobBuilder {
     comm: Graph,
-    hierarchy: Hierarchy,
+    machine: Machine,
+    resolution: Option<MachineResolution>,
     spec: AlgorithmSpec,
     oracle_mode: OracleMode,
     repetitions: u32,
@@ -56,11 +87,18 @@ pub struct MapJobBuilder {
 
 impl MapJobBuilder {
     /// Start a job for mapping the processes of `comm` onto the PEs of
-    /// `hierarchy`.
+    /// `hierarchy` (the common case; see [`Self::for_machine`] /
+    /// [`Self::machine`] for grids, tori and other topologies).
     pub fn new(comm: Graph, hierarchy: Hierarchy) -> MapJobBuilder {
+        Self::for_machine(comm, Machine::Hier(hierarchy))
+    }
+
+    /// Start a job against any machine topology.
+    pub fn for_machine(comm: Graph, machine: Machine) -> MapJobBuilder {
         MapJobBuilder {
             comm,
-            hierarchy,
+            machine,
+            resolution: None,
             spec: AlgorithmSpec::parse("topdown+Nc10").expect("default spec parses"),
             oracle_mode: OracleMode::Implicit,
             repetitions: 1,
@@ -69,6 +107,27 @@ impl MapJobBuilder {
             verify: VerifyPolicy::Skip,
             ml_cfg: MlConfig::default(),
         }
+    }
+
+    /// Replace the machine model with any [`Machine`] (hierarchy, grid,
+    /// torus or explicit matrix).
+    pub fn machine(mut self, machine: Machine) -> Self {
+        self.machine = machine;
+        self
+    }
+
+    /// Parse and set the machine by grammar name (e.g. `"torus:4x4x4@1"`,
+    /// `"hier:3:16:2@1:10:100"`; see [`Machine::parse`]).
+    pub fn machine_name(self, spec: &str) -> Result<Self, String> {
+        Ok(self.machine(Machine::parse(spec)?))
+    }
+
+    /// Attach the [`MachineResolution`] that produced this job's machine
+    /// (the CLI passes [`resolve_machine`]'s report here so it surfaces on
+    /// the job's [`MapReport`]). Defaults to "explicitly supplied".
+    pub fn machine_resolution(mut self, resolution: MachineResolution) -> Self {
+        self.resolution = Some(resolution);
+        self
     }
 
     /// Algorithm to run (see [`AlgorithmSpec::parse`] for names).
@@ -82,7 +141,7 @@ impl MapJobBuilder {
         Ok(self.algorithm(AlgorithmSpec::parse(name)?))
     }
 
-    /// Oracle representation (implicit hierarchy queries vs explicit matrix).
+    /// Oracle representation (implicit topology queries vs explicit matrix).
     pub fn oracle_mode(mut self, mode: OracleMode) -> Self {
         self.oracle_mode = mode;
         self
@@ -112,8 +171,8 @@ impl MapJobBuilder {
         self
     }
 
-    /// Maximum V-cycle depth for `ml:` algorithms (number of halving
-    /// coarsening levels). Ignored by single-level specs.
+    /// Maximum V-cycle depth for `ml:` algorithms (number of coarsening
+    /// levels). Ignored by single-level specs.
     pub fn levels(mut self, levels: usize) -> Self {
         self.ml_cfg.max_levels = levels;
         self
@@ -128,19 +187,22 @@ impl MapJobBuilder {
 
     /// Validate and freeze the configuration.
     pub fn build(self) -> Result<MapJob, String> {
-        if self.comm.n() != self.hierarchy.n_pes() {
+        if self.comm.n() != self.machine.n_pes() {
             return Err(format!(
                 "processes ({}) != PEs ({})",
                 self.comm.n(),
-                self.hierarchy.n_pes()
+                self.machine.n_pes()
             ));
         }
         if self.repetitions == 0 {
             return Err("repetitions must be >= 1".into());
         }
+        let resolution =
+            self.resolution.unwrap_or_else(|| MachineResolution::explicit(&self.machine));
         Ok(MapJob {
             comm: self.comm,
-            hierarchy: self.hierarchy,
+            machine: self.machine,
+            resolution,
             spec: self.spec,
             oracle_mode: self.oracle_mode,
             repetitions: self.repetitions,
@@ -158,7 +220,8 @@ impl MapJobBuilder {
 #[derive(Debug, Clone)]
 pub struct MapJob {
     pub(crate) comm: Graph,
-    pub(crate) hierarchy: Hierarchy,
+    pub(crate) machine: Machine,
+    pub(crate) resolution: MachineResolution,
     pub(crate) spec: AlgorithmSpec,
     pub(crate) oracle_mode: OracleMode,
     pub(crate) repetitions: u32,
@@ -174,9 +237,14 @@ impl MapJob {
         &self.comm
     }
 
-    /// The machine hierarchy (`n` PEs).
-    pub fn hierarchy(&self) -> &Hierarchy {
-        &self.hierarchy
+    /// The machine topology (`n` PEs).
+    pub fn machine(&self) -> &Machine {
+        &self.machine
+    }
+
+    /// How the machine was resolved (copied onto every report).
+    pub fn machine_resolution(&self) -> &MachineResolution {
+        &self.resolution
     }
 
     /// The frozen algorithm specification.
@@ -237,38 +305,48 @@ impl MapJob {
 
     /// Translate a service request into a job (the coordinator's
     /// request→job boundary). Error messages match `MapRequest::validate`.
+    /// The optional wire knobs (`levels`, `coarsen_limit`) override the
+    /// server's V-cycle defaults when present.
     pub fn from_request(req: &MapRequest) -> Result<MapJob, String> {
         req.validate()?;
-        MapJobBuilder::new(req.comm.clone(), req.hierarchy.clone())
+        let mut b = MapJobBuilder::for_machine(req.comm.clone(), req.machine.clone())
             .algorithm(req.algorithm)
             .repetitions(req.repetitions)
             .seed(req.seed)
-            .verify(if req.verify { VerifyPolicy::IfAvailable } else { VerifyPolicy::Skip })
-            .build()
+            .verify(if req.verify { VerifyPolicy::IfAvailable } else { VerifyPolicy::Skip });
+        if let Some(levels) = req.levels {
+            b = b.levels(levels);
+        }
+        if let Some(limit) = req.coarsen_limit {
+            b = b.coarsen_limit(limit);
+        }
+        b.build()
     }
 
     /// Build the wire request a client sends for this job.
     ///
-    /// Lossy by design: `oracle_mode`, `partition_config` and the
-    /// multilevel depth knobs (`levels`/`coarsen_limit`) are
-    /// session-local execution knobs, not part of the protocol — the server
-    /// runs `ml:` specs with its default V-cycle depth. The algorithm spec
-    /// string itself (including the `ml:` prefix) crosses the wire
-    /// unchanged, so remote execution runs the same algorithm. The server
-    /// always runs with its own defaults (implicit oracle, perfectly
-    /// balanced partitions), and `VerifyPolicy::Required` degrades to the
-    /// wire's plain `verify` flag. A job with non-default session-local
-    /// settings can therefore produce different (still valid) mappings
-    /// remotely than locally.
+    /// The machine spec (including grids and tori), the algorithm spec
+    /// string, and — when they differ from the defaults — the multilevel
+    /// depth knobs (`levels`/`coarsen_limit`) all cross the wire, so remote
+    /// execution runs the same configuration. Still lossy by design:
+    /// `oracle_mode` and `partition_config` are session-local execution
+    /// knobs (the server runs the implicit oracle and perfectly balanced
+    /// partitions), and `VerifyPolicy::Required` degrades to the wire's
+    /// plain `verify` flag.
     pub fn to_request(&self, id: u64) -> MapRequest {
+        let defaults = MlConfig::default();
         MapRequest {
             id,
             comm: self.comm.clone(),
-            hierarchy: self.hierarchy.clone(),
+            machine: self.machine.clone(),
             algorithm: self.spec,
             repetitions: self.repetitions,
             seed: self.seed,
             verify: !matches!(self.verify, VerifyPolicy::Skip),
+            levels: (self.ml_cfg.max_levels != defaults.max_levels)
+                .then_some(self.ml_cfg.max_levels),
+            coarsen_limit: (self.ml_cfg.coarsen_limit != defaults.coarsen_limit)
+                .then_some(self.ml_cfg.coarsen_limit),
         }
     }
 }
@@ -300,56 +378,98 @@ impl MapResponse {
     }
 }
 
-/// How often the flat-hierarchy fallback warning has been *printed* in this
-/// process — always 0 or 1, since [`hierarchy_for`] emits it exactly once
-/// no matter how many repetitions or jobs hit the fallback. Exposed so
-/// tests can assert the once-only contract.
-pub fn flat_fallback_warning_count() -> u64 {
-    FLAT_FALLBACK_WARNINGS.load(Ordering::Relaxed)
+/// Resolve the CLI's machine options into a [`Machine`] for an `n`-process
+/// instance, with a structured [`MachineResolution`] report instead of the
+/// old once-per-process flat-fallback warning.
+///
+/// Precedence: `machine` (full grammar, e.g. `torus:4x4x4@1`) wins over
+/// `s`/`d` (the paper's `--S`/`--D` hierarchy notation); when both are
+/// empty the default template `4:16:(n/64) @ 1:10:100` applies. When `n`
+/// does not divide the template, partial levels are *folded* by gcd
+/// peeling (e.g. `n = 100` → `hier:4:25@1:100`) — and when no template
+/// level survives (`n` shares no factor with `4:16`, i.e. any odd `n`),
+/// the machine degrades to a 1-D `grid:n@1` path, which still orders PEs
+/// by locality. A flat all-equidistant machine — the old fallback that
+/// made every mapping cost-equal — is never produced.
+pub fn resolve_machine(
+    n: usize,
+    machine: &str,
+    s: &str,
+    d: &str,
+) -> Result<(Machine, MachineResolution), String> {
+    if n == 0 {
+        return Err("instance has no processes".into());
+    }
+    if !machine.is_empty() {
+        let m = Machine::parse(machine)?;
+        if m.n_pes() != n {
+            return Err(format!(
+                "machine {machine:?} has {} PEs but the instance has {n} processes",
+                m.n_pes()
+            ));
+        }
+        let resolution = MachineResolution::explicit(&m);
+        return Ok((m, resolution));
+    }
+    if !s.is_empty() {
+        let h = Hierarchy::parse(s, if d.is_empty() { "1:10:100" } else { d })?;
+        if h.n_pes() != n {
+            return Err(format!(
+                "hierarchy has {} PEs but the instance has {n} processes",
+                h.n_pes()
+            ));
+        }
+        let m = Machine::Hier(h);
+        let resolution = MachineResolution::explicit(&m);
+        return Ok((m, resolution));
+    }
+    // default template 4:16:(n/64), gcd-folded onto n
+    let m = default_machine(n)?;
+    let resolution = MachineResolution {
+        spec: m.spec()?,
+        inferred: true,
+        partial_top_folded: n % 64 != 0,
+    };
+    Ok((m, resolution))
 }
 
-static FLAT_FALLBACK_WARNINGS: AtomicU64 = AtomicU64::new(0);
-
-/// The default machine shape used when the CLI gets no `--S`: 4 cores per
-/// processor, 16 processors per node, `n/64` nodes (`D = 1:10:100`). When
-/// `n` is not divisible by 64 this falls back to a flat single-level
-/// hierarchy `S = n`, `D = 1` with a warning instead of bailing — every
-/// mapping is then cost-equal, but the pipeline still runs end-to-end.
-/// The warning is emitted once per process (the first offending instance),
-/// not once per job or repetition. Shared by the CLI and the service
-/// examples.
-pub fn hierarchy_for(n: usize, s: &str, d: &str) -> Result<Hierarchy, String> {
-    let h = if s.is_empty() {
-        if n >= 64 && n % 64 == 0 {
-            Hierarchy::new(vec![4, 16, (n / 64) as u64], vec![1, 10, 100])?
-        } else {
-            if n == 0 {
-                return Err("instance has no processes".into());
-            }
-            // one atomic is both the once-guard and the test-observable
-            // count: only the thread that wins the 0 -> 1 transition prints
-            if FLAT_FALLBACK_WARNINGS
-                .compare_exchange(0, 1, Ordering::Relaxed, Ordering::Relaxed)
-                .is_ok()
-            {
-                eprintln!(
-                    "warning: --S not given and n={n} is not divisible by 64; \
-                     falling back to the flat hierarchy S={n}, D=1 (all PEs \
-                     equidistant; warned once per process)"
-                );
-            }
-            Hierarchy::new(vec![n as u64], vec![1])?
+/// The default machine for `n` PEs: the template `S = 4:16:(n/64)`,
+/// `D = 1:10:100`, with each template level folded down to `gcd(a_i, n_rem)`
+/// when it does not divide what remains (levels folded to 1 disappear).
+/// Even `n ≥ 6` keeps at least the innermost template level plus a
+/// remainder and yields a ≥2-level hierarchy; when at most one level
+/// survives — `n` coprime to the template (any odd `n`, prime or not:
+/// `77`, `97`) and the trivial `n ∈ {2, 4}` — the result is the 1-D
+/// `grid:n@1` path instead (never a flat machine).
+fn default_machine(n: usize) -> Result<Machine, String> {
+    let mut rem = n as u64;
+    let mut s = Vec::new();
+    let mut d = Vec::new();
+    for (a, dist) in [(4u64, 1u64), (16, 10)] {
+        let g = gcd(a, rem);
+        if g > 1 {
+            s.push(g);
+            d.push(dist);
+            rem /= g;
         }
-    } else {
-        Hierarchy::parse(s, if d.is_empty() { "1:10:100" } else { d })?
-    };
-    if h.n_pes() != n {
-        return Err(format!(
-            "hierarchy has {} PEs but the instance has {n} processes",
-            h.n_pes()
-        ));
     }
-    Ok(h)
+    if rem > 1 {
+        s.push(rem);
+        d.push(100);
+    }
+    if s.len() >= 2 {
+        Ok(Machine::Hier(Hierarchy::new(s, d)?))
+    } else {
+        Ok(Machine::Grid(GridTopology::new(vec![n as u64], 1)?))
+    }
+}
+
+fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
 }
 
 #[cfg(test)]
@@ -380,6 +500,25 @@ mod tests {
         assert_eq!(job.repetitions(), 3);
         assert_eq!(job.seed(), 9);
         assert_eq!(job.algorithm().name(), "topdown+Nc10");
+        assert_eq!(job.machine().kind(), "hier");
+        assert!(!job.machine_resolution().inferred);
+    }
+
+    #[test]
+    fn builder_accepts_grid_and_torus_machines() {
+        let (g, _) = sample(64);
+        let job = MapJobBuilder::for_machine(g.clone(), Machine::parse("torus:4x4x4@1").unwrap())
+            .build()
+            .unwrap();
+        assert_eq!(job.machine().kind(), "torus");
+        assert_eq!(job.machine().n_pes(), 64);
+        assert_eq!(job.machine_resolution().spec, "torus:4x4x4@1");
+
+        // a machine of the wrong size still fails validation
+        let err = MapJobBuilder::for_machine(g, Machine::parse("grid:9x9@1").unwrap())
+            .build()
+            .unwrap_err();
+        assert!(err.contains("PEs"), "{err}");
     }
 
     #[test]
@@ -449,33 +588,80 @@ mod tests {
         let req = job.to_request(5);
         assert_eq!(req.id, 5);
         assert!(req.verify);
+        // default ml knobs stay off the wire
+        assert_eq!(req.levels, None);
+        assert_eq!(req.coarsen_limit, None);
         let back = MapJob::from_request(&req).unwrap();
         assert_eq!(back.algorithm().name(), "topdown+Nc2");
         assert_eq!(back.repetitions(), 4);
         assert_eq!(back.seed(), 77);
         assert_eq!(back.comm(), job.comm());
-        assert_eq!(back.hierarchy(), job.hierarchy());
+        assert_eq!(back.machine(), job.machine());
     }
 
     #[test]
-    fn hierarchy_for_divisible_and_fallback() {
-        let h = hierarchy_for(128, "", "").unwrap();
-        assert_eq!(h.n_pes(), 128);
-        assert_eq!(h.levels(), 3);
+    fn request_roundtrip_carries_ml_knobs_and_machines() {
+        let (g, _) = sample(64);
+        let job = MapJobBuilder::for_machine(g, Machine::parse("grid:8x8@1").unwrap())
+            .algorithm_name("ml:topdown+Nc2")
+            .unwrap()
+            .levels(3)
+            .coarsen_limit(8)
+            .build()
+            .unwrap();
+        let req = job.to_request(9);
+        assert_eq!(req.levels, Some(3));
+        assert_eq!(req.coarsen_limit, Some(8));
+        let back = MapJob::from_request(&req).unwrap();
+        assert_eq!(back.machine().spec().unwrap(), "grid:8x8@1");
+        assert_eq!(back.ml_config().max_levels, 3);
+        assert_eq!(back.ml_config().coarsen_limit, 8);
+    }
 
-        // non-divisible: flat single-level fallback instead of an error
-        let h = hierarchy_for(100, "", "").unwrap();
-        assert_eq!(h.n_pes(), 100);
-        assert_eq!(h.levels(), 1);
-        assert_eq!(h.distance(0, 99), 1);
+    #[test]
+    fn resolve_machine_defaults_and_folding() {
+        // divisible by 64: the exact default template
+        let (m, r) = resolve_machine(256, "", "", "").unwrap();
+        assert_eq!(m.n_pes(), 256);
+        assert_eq!(m.hier().unwrap().s, vec![4, 16, 4]);
+        assert!(r.inferred);
+        assert!(!r.partial_top_folded);
 
-        // explicit S wins; three-level D defaults when omitted
-        let h = hierarchy_for(12, "3:4", "1:10").unwrap();
-        assert_eq!(h.n_pes(), 12);
-        let h = hierarchy_for(128, "4:16:2", "").unwrap();
-        assert_eq!(h.d, vec![1, 10, 100]);
+        // not divisible: partial levels fold instead of a flat fallback
+        let (m, r) = resolve_machine(100, "", "", "").unwrap();
+        assert_eq!(m.n_pes(), 100);
+        assert_eq!(m.hier().unwrap().s, vec![4, 25]);
+        assert_eq!(m.hier().unwrap().d, vec![1, 100]);
+        assert!(r.inferred && r.partial_top_folded);
 
-        assert!(hierarchy_for(64, "4:4", "1:10").is_err()); // 16 != 64
-        assert!(hierarchy_for(0, "", "").is_err());
+        let (m, _) = resolve_machine(96, "", "", "").unwrap();
+        assert_eq!(m.hier().unwrap().s, vec![4, 8, 3]);
+
+        // n coprime to the template (77 = 7·11) or prime (97): a 1-D grid
+        // path, never an all-equidistant flat machine
+        for n in [77usize, 97] {
+            let (m, r) = resolve_machine(n, "", "", "").unwrap();
+            assert_eq!(m.n_pes(), n);
+            assert_eq!(m.kind(), "grid");
+            assert_eq!(r.spec, format!("grid:{n}@1"));
+            assert!(r.inferred && r.partial_top_folded);
+            // distances are graded, not flat
+            assert!(m.distance(0, n as u32 - 1) > m.distance(0, 1));
+        }
+    }
+
+    #[test]
+    fn resolve_machine_explicit_options() {
+        // --machine wins and must match the instance size
+        let (m, r) = resolve_machine(64, "torus:4x4x4@1", "4:16:1", "1:10:100").unwrap();
+        assert_eq!(m.kind(), "torus");
+        assert!(!r.inferred);
+        assert!(resolve_machine(65, "torus:4x4x4@1", "", "").is_err());
+
+        // --S/--D keep working, with the D default
+        let (m, _) = resolve_machine(128, "", "4:16:2", "").unwrap();
+        assert_eq!(m.hier().unwrap().d, vec![1, 10, 100]);
+        assert!(resolve_machine(64, "", "4:4", "1:10").is_err()); // 16 != 64
+        assert!(resolve_machine(0, "", "", "").is_err());
     }
 }

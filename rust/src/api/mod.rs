@@ -7,12 +7,14 @@
 //! This module centers that orchestration on three types:
 //!
 //! * [`MapJobBuilder`] — validates and freezes configuration: graph,
-//!   [`crate::mapping::Hierarchy`], algorithm, oracle mode (§3.4),
-//!   repetitions, seed, partition config, verification policy.
+//!   machine topology ([`crate::model::topology::Machine`] — hierarchy,
+//!   grid, torus or explicit matrix; see [`MapJobBuilder::machine`] and
+//!   [`resolve_machine`]), algorithm, oracle mode (§3.4), repetitions,
+//!   seed, partition config, verification policy.
 //! * [`MapJob`] — the frozen job; translates to/from the service wire types
 //!   ([`MapJob::from_request`], [`MapJob::to_request`]).
 //! * [`MapSession`] — owns all reusable state: the cached
-//!   [`crate::mapping::DistanceOracle`], the [`crate::mapping::SwapEngine`]
+//!   [`crate::mapping::Machine`], the [`crate::mapping::SwapEngine`]
 //!   `Γ` buffer, the [`crate::mapping::refine::Refiner`]s (which own the
 //!   `N_C^d` pair sets, triangle sets and shuffle buffers), the dense
 //!   baseline engine's matrices, deterministic-construction results, and —
@@ -53,7 +55,7 @@ pub mod session;
 
 pub use crate::mapping::multilevel::LevelStat;
 pub use job::{
-    flat_fallback_warning_count, hierarchy_for, MapJob, MapJobBuilder, OracleMode, VerifyPolicy,
+    resolve_machine, MachineResolution, MapJob, MapJobBuilder, OracleMode, VerifyPolicy,
 };
 pub use report::{MapReport, RepStat};
 pub use session::{MapSession, VERIFY_RTOL};

@@ -55,6 +55,11 @@ pub struct MapReport {
     pub mapping: Mapping,
     /// Canonical algorithm name (`AlgorithmSpec::name`).
     pub algorithm: String,
+    /// Which machine topology the job ran against and how it was resolved
+    /// (spec name, inferred-or-given, whether the default template was
+    /// partially folded) — the structured successor of the old flat-machine
+    /// fallback warning.
+    pub machine: super::job::MachineResolution,
     /// Index into [`Self::reps`] of the winning repetition.
     pub best_rep: usize,
     /// Per-repetition statistics, in execution order.

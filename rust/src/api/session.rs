@@ -6,7 +6,7 @@ use crate::mapping::algorithms::{Construction, GainMode, MapResult, Neighborhood
 use crate::mapping::multilevel::{level_refiners, vcycle_refine, MlHierarchy};
 use crate::mapping::objective::{objective, DenseEngine, Mapping, SwapEngine};
 use crate::mapping::refine::{refiner_for, Refiner};
-use crate::mapping::{construct, DistanceOracle};
+use crate::mapping::{construct, Machine};
 use crate::runtime::{RuntimeHandle, BATCH};
 use crate::util::{Rng, Timer};
 
@@ -61,8 +61,8 @@ impl MlState {
     fn build(job: &MapJob) -> MlState {
         let t = Timer::start();
         let mut rng = Rng::new(job.seed ^ 0x6d6c_5f68_6965_7261); // "ml_hiera"
-        let hierarchy = MlHierarchy::build(&job.comm, &job.hierarchy, &job.ml_cfg, &mut rng);
-        let refiners = level_refiners(&hierarchy, &job.hierarchy, &job.spec);
+        let hierarchy = MlHierarchy::build(&job.comm, &job.machine, &job.ml_cfg, &mut rng);
+        let refiners = level_refiners(&hierarchy, &job.machine, &job.spec);
         MlState { hierarchy, refiners, build_secs: t.secs() }
     }
 }
@@ -73,7 +73,7 @@ impl MlState {
 /// workers, the benches and the examples.
 pub struct MapSession {
     job: MapJob,
-    oracle: DistanceOracle,
+    oracle: Machine,
     runtime: Option<RuntimeHandle>,
     scratch: SessionScratch,
 }
@@ -89,8 +89,8 @@ impl MapSession {
     /// scoring and verification.
     pub fn with_runtime(job: MapJob, runtime: Option<RuntimeHandle>) -> MapSession {
         let oracle = match job.oracle_mode() {
-            OracleMode::Implicit => DistanceOracle::implicit(job.hierarchy.clone()),
-            OracleMode::Explicit => DistanceOracle::explicit(&job.hierarchy),
+            OracleMode::Implicit => job.machine.clone(),
+            OracleMode::Explicit => Machine::explicit(&job.machine),
         };
         MapSession { job, oracle, runtime, scratch: SessionScratch::default() }
     }
@@ -101,7 +101,7 @@ impl MapSession {
     }
 
     /// The session's cached distance oracle.
-    pub fn oracle(&self) -> &DistanceOracle {
+    pub fn oracle(&self) -> &Machine {
         &self.oracle
     }
 
@@ -191,6 +191,7 @@ impl MapSession {
         MapReport {
             mapping: best_res.mapping,
             algorithm: self.job.spec.name(),
+            machine: self.job.resolution.clone(),
             best_rep: best_idx,
             reps: rep_stats,
             objective: best_res.objective,
@@ -244,7 +245,7 @@ fn argmin_exact(results: &[MapResult]) -> usize {
 fn score_with_runtime(
     rt: &RuntimeHandle,
     comm: &Graph,
-    oracle: &DistanceOracle,
+    oracle: &Machine,
     results: &[MapResult],
 ) -> usize {
     let mappings: Vec<Mapping> = results.iter().map(|r| r.mapping.clone()).collect();
@@ -318,7 +319,7 @@ fn construct_cached(
 /// [`MapSession`].
 pub(crate) fn execute_once(
     job: &MapJob,
-    oracle: &DistanceOracle,
+    oracle: &Machine,
     rng: &mut Rng,
     scratch: &mut SessionScratch,
 ) -> MapResult {
@@ -329,12 +330,12 @@ pub(crate) fn execute_once(
     let spec = &job.spec;
     let (mapping, construct_secs) =
         construct_cached(&mut scratch.construction, spec.construction, rng, |rng| {
-            construct::initial(comm, &job.hierarchy, oracle, spec.construction, &job.part_cfg, rng)
+            construct::initial(comm, &job.machine, oracle, spec.construction, &job.part_cfg, rng)
         });
 
     let refiner = scratch
         .refiner
-        .get_or_insert_with(|| refiner_for(spec.neighborhood, spec.max_sweeps, &job.hierarchy));
+        .get_or_insert_with(|| refiner_for(spec.neighborhood, spec.max_sweeps, &job.machine));
 
     let t = Timer::start();
     let (mapping, objective_initial, objective, stats) = match spec.gain_mode {
@@ -384,7 +385,7 @@ pub(crate) fn execute_once(
 /// is ignored here.
 fn execute_multilevel(
     job: &MapJob,
-    oracle: &DistanceOracle,
+    oracle: &Machine,
     rng: &mut Rng,
     scratch: &mut SessionScratch,
 ) -> MapResult {
@@ -396,15 +397,15 @@ fn execute_multilevel(
             match hierarchy.coarsest() {
                 Some(l) => construct::initial(
                     &l.graph,
-                    &l.hierarchy,
-                    &l.oracle,
+                    &l.machine,
+                    &l.machine,
                     job.spec.construction,
                     &job.part_cfg,
                     rng,
                 ),
                 None => construct::initial(
                     &job.comm,
-                    &job.hierarchy,
+                    &job.machine,
                     oracle,
                     job.spec.construction,
                     &job.part_cfg,

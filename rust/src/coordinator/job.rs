@@ -9,18 +9,20 @@ use crate::api::RepStat;
 use crate::graph::Graph;
 use crate::mapping::algorithms::AlgorithmSpec;
 use crate::mapping::refine::SearchStats;
-use crate::mapping::Hierarchy;
+use crate::model::topology::Machine;
 
 /// A mapping job: find a good assignment of the processes of `comm` onto
-/// the PEs of `hierarchy` with the named algorithm.
+/// the PEs of `machine` with the named algorithm.
 #[derive(Debug, Clone)]
 pub struct MapRequest {
     /// Client-chosen id, echoed in the response.
     pub id: u64,
     /// Sparse communication graph (`n` processes).
     pub comm: Graph,
-    /// Machine hierarchy; `hierarchy.n_pes()` must equal `comm.n()`.
-    pub hierarchy: Hierarchy,
+    /// Machine topology (hierarchy, grid or torus — explicit matrices are
+    /// session-local and cannot cross the wire); `machine.n_pes()` must
+    /// equal `comm.n()`.
+    pub machine: Machine,
     /// Algorithm (see [`AlgorithmSpec::parse`] for names).
     pub algorithm: AlgorithmSpec,
     /// Seeds to try; the best-scoring mapping wins. Multiple repetitions
@@ -30,20 +32,29 @@ pub struct MapRequest {
     pub seed: u64,
     /// Cross-check the winning objective against the dense XLA artifact.
     pub verify: bool,
+    /// Optional V-cycle depth cap for `ml:` algorithms (wire token
+    /// `levels=`); `None` = the server's default.
+    pub levels: Option<usize>,
+    /// Optional coarsening floor for `ml:` algorithms (wire token
+    /// `coarsen_limit=`); `None` = the server's default.
+    pub coarsen_limit: Option<usize>,
 }
 
 impl MapRequest {
     /// Validate the request invariants.
     pub fn validate(&self) -> Result<(), String> {
-        if self.comm.n() != self.hierarchy.n_pes() {
+        if self.comm.n() != self.machine.n_pes() {
             return Err(format!(
                 "processes ({}) != PEs ({})",
                 self.comm.n(),
-                self.hierarchy.n_pes()
+                self.machine.n_pes()
             ));
         }
         if self.repetitions == 0 {
             return Err("repetitions must be >= 1".into());
+        }
+        if self.machine.spec().is_err() {
+            return Err("explicit-matrix machines cannot cross the wire".into());
         }
         Ok(())
     }
@@ -104,32 +115,41 @@ impl MapResponse {
 mod tests {
     use super::*;
     use crate::graph::from_edges;
+    use crate::model::topology::Hierarchy;
 
-    #[test]
-    fn validate_size_mismatch() {
-        let req = MapRequest {
+    fn request(n: usize, machine: Machine) -> MapRequest {
+        MapRequest {
             id: 1,
-            comm: from_edges(4, &[(0, 1, 1)]),
-            hierarchy: Hierarchy::new(vec![2, 4], vec![1, 10]).unwrap(),
+            comm: from_edges(n, &[(0, 1, 1)]),
+            machine,
             algorithm: AlgorithmSpec::parse("identity").unwrap(),
             repetitions: 1,
             seed: 0,
             verify: false,
-        };
-        assert!(req.validate().is_err());
+            levels: None,
+            coarsen_limit: None,
+        }
+    }
+
+    #[test]
+    fn validate_size_mismatch() {
+        let h = Hierarchy::new(vec![2, 4], vec![1, 10]).unwrap();
+        assert!(request(4, Machine::Hier(h)).validate().is_err());
+        assert!(request(4, Machine::parse("grid:3x3@1").unwrap()).validate().is_err());
     }
 
     #[test]
     fn validate_ok() {
-        let req = MapRequest {
-            id: 1,
-            comm: from_edges(8, &[(0, 1, 1)]),
-            hierarchy: Hierarchy::new(vec![2, 4], vec![1, 10]).unwrap(),
-            algorithm: AlgorithmSpec::parse("random").unwrap(),
-            repetitions: 2,
-            seed: 0,
-            verify: false,
-        };
-        assert!(req.validate().is_ok());
+        let h = Hierarchy::new(vec![2, 4], vec![1, 10]).unwrap();
+        assert!(request(8, Machine::Hier(h)).validate().is_ok());
+        assert!(request(8, Machine::parse("torus:4x2@1").unwrap()).validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_explicit_machines() {
+        let h = Hierarchy::new(vec![2, 4], vec![1, 10]).unwrap();
+        let req = request(8, Machine::explicit(&h));
+        let err = req.validate().unwrap_err();
+        assert!(err.contains("wire"), "{err}");
     }
 }

@@ -172,7 +172,7 @@ mod tests {
     use super::*;
     use crate::gen::random_geometric_graph;
     use crate::mapping::algorithms::AlgorithmSpec;
-    use crate::mapping::{Hierarchy, Mapping};
+    use crate::mapping::{Hierarchy, Machine, Mapping};
     use crate::util::Rng;
 
     fn request(id: u64, algo: &str, reps: u32) -> MapRequest {
@@ -180,11 +180,13 @@ mod tests {
         MapRequest {
             id,
             comm: random_geometric_graph(128, &mut rng),
-            hierarchy: Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap(),
+            machine: Machine::Hier(Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap()),
             algorithm: AlgorithmSpec::parse(algo).unwrap(),
             repetitions: reps,
             seed: id * 100,
             verify: false,
+            levels: None,
+            coarsen_limit: None,
         }
     }
 

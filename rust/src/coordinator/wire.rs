@@ -6,6 +6,7 @@
 //!
 //! ```text
 //! C->S:  MAP v1 <id> <algo> <S> <D> <reps> <seed> <verify:0|1> <n> <m>
+//!            [machine=<spec>] [levels=<l>] [coarsen_limit=<c>]
 //!        <u> <v> <w>          (m edge lines)
 //!        END
 //! S->C:  OK <id> <objective> <j_initial> <construct_secs> <ls_secs>
@@ -16,6 +17,17 @@
 //!        SIGMA <n space-separated PE ids>
 //!   or:  ERR <id> <message...>
 //! ```
+//!
+//! The request header ends with optional `key=value` tokens — the same
+//! backward-compatible extension style as the `REP` lines below. A
+//! hierarchy machine travels in the classic `<S> <D>` tokens (old servers
+//! parse new clients' default-knob jobs unchanged); grids and tori put
+//! `-` placeholders there and carry the full machine grammar in a
+//! `machine=` token (e.g. `machine=torus:4x4x4@1`). `levels=` and
+//! `coarsen_limit=` expose the V-cycle depth knobs that used to be
+//! session-local — the ROADMAP's "coordinator expose levels/coarsen_limit"
+//! item. Readers accept the bare 11-token header (old writers) and reject
+//! unknown option keys.
 //!
 //! The per-repetition `REP` lines carry `api::RepStat` verbatim, so clients
 //! see every seed's objective/timing, not just the winner's — including the
@@ -32,7 +44,7 @@ use super::service::Coordinator;
 use crate::api::{LevelStat, RepStat};
 use crate::graph::{Builder, NodeId};
 use crate::mapping::algorithms::AlgorithmSpec;
-use crate::mapping::Hierarchy;
+use crate::model::topology::Machine;
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
@@ -41,21 +53,39 @@ use std::sync::Arc;
 
 /// Serialize a request.
 pub fn write_request<W: Write>(w: &mut W, req: &MapRequest) -> Result<()> {
-    let s: Vec<String> = req.hierarchy.s.iter().map(|x| x.to_string()).collect();
-    let d: Vec<String> = req.hierarchy.d.iter().map(|x| x.to_string()).collect();
-    writeln!(
+    // hierarchies keep the classic S/D tokens (old-server compatible);
+    // other machines put placeholders there and append a machine= option
+    let (s_tok, d_tok, machine_opt) = match &req.machine {
+        Machine::Hier(h) => {
+            let s: Vec<String> = h.s.iter().map(|x| x.to_string()).collect();
+            let d: Vec<String> = h.d.iter().map(|x| x.to_string()).collect();
+            (s.join(":"), d.join(":"), None)
+        }
+        m => ("-".to_string(), "-".to_string(), Some(m.spec().map_err(|e| anyhow!(e))?)),
+    };
+    write!(
         w,
         "MAP v1 {} {} {} {} {} {} {} {} {}",
         req.id,
         req.algorithm.name(),
-        s.join(":"),
-        d.join(":"),
+        s_tok,
+        d_tok,
         req.repetitions,
         req.seed,
         if req.verify { 1 } else { 0 },
         req.comm.n(),
         req.comm.m(),
     )?;
+    if let Some(spec) = machine_opt {
+        write!(w, " machine={spec}")?;
+    }
+    if let Some(levels) = req.levels {
+        write!(w, " levels={levels}")?;
+    }
+    if let Some(limit) = req.coarsen_limit {
+        write!(w, " coarsen_limit={limit}")?;
+    }
+    writeln!(w)?;
     for u in 0..req.comm.n() as NodeId {
         for (v, wt) in req.comm.edges(u) {
             if v > u {
@@ -72,12 +102,33 @@ pub fn read_request<R: BufRead>(r: &mut R) -> Result<MapRequest> {
     let mut header = String::new();
     r.read_line(&mut header).context("reading header")?;
     let toks: Vec<&str> = header.split_whitespace().collect();
-    if toks.len() != 11 || toks[0] != "MAP" || toks[1] != "v1" {
+    if toks.len() < 11 || toks[0] != "MAP" || toks[1] != "v1" {
         bail!("bad header: {header:?}");
     }
     let id: u64 = toks[2].parse()?;
     let algorithm = AlgorithmSpec::parse(toks[3]).map_err(|e| anyhow!(e))?;
-    let hierarchy = Hierarchy::parse(toks[4], toks[5]).map_err(|e| anyhow!(e))?;
+    // trailing key=value job options (the PR 2 REP-style extension):
+    // machine= overrides the S/D tokens, levels=/coarsen_limit= carry the
+    // V-cycle knobs; unknown keys are rejected
+    let mut machine: Option<Machine> = None;
+    let mut levels: Option<usize> = None;
+    let mut coarsen_limit: Option<usize> = None;
+    for tok in &toks[11..] {
+        let (key, value) =
+            tok.split_once('=').ok_or_else(|| anyhow!("bad job option {tok:?}"))?;
+        match key {
+            "machine" => machine = Some(Machine::parse(value).map_err(|e| anyhow!(e))?),
+            "levels" => levels = Some(value.parse()?),
+            "coarsen_limit" => coarsen_limit = Some(value.parse()?),
+            other => bail!("unknown job option {other:?}"),
+        }
+    }
+    let machine = match machine {
+        Some(m) => m,
+        None if toks[4] == "-" => bail!("header has no machine (S/D are '-' and no machine=)"),
+        None => Machine::parse(&format!("hier:{}@{}", toks[4], toks[5]))
+            .map_err(|e| anyhow!(e))?,
+    };
     let repetitions: u32 = toks[6].parse()?;
     let seed: u64 = toks[7].parse()?;
     let verify = toks[8] == "1";
@@ -102,7 +153,17 @@ pub fn read_request<R: BufRead>(r: &mut R) -> Result<MapRequest> {
         );
         b.add_edge(u.parse()?, v.parse()?, w.parse()?);
     }
-    Ok(MapRequest { id, comm: b.build(), hierarchy, algorithm, repetitions, seed, verify })
+    Ok(MapRequest {
+        id,
+        comm: b.build(),
+        machine,
+        algorithm,
+        repetitions,
+        seed,
+        verify,
+        levels,
+        coarsen_limit,
+    })
 }
 
 /// Escape an error message for the single-line `ERR` frame (`\r` too —
@@ -360,11 +421,13 @@ mod tests {
         MapRequest {
             id: 42,
             comm: random_geometric_graph(128, &mut rng),
-            hierarchy: Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap(),
+            machine: Machine::parse("hier:4:16:2@1:10:100").unwrap(),
             algorithm: AlgorithmSpec::parse("topdown+Nc2").unwrap(),
             repetitions: 2,
             seed: 99,
             verify: false,
+            levels: None,
+            coarsen_limit: None,
         }
     }
 
@@ -373,14 +436,58 @@ mod tests {
         let req = sample_request();
         let mut buf = Vec::new();
         write_request(&mut buf, &req).unwrap();
+        // hierarchy + default knobs: the header is the classic 11-token
+        // form, byte-compatible with pre-topology servers
+        let header = std::str::from_utf8(&buf).unwrap().lines().next().unwrap().to_string();
+        assert_eq!(header.split_whitespace().count(), 11, "{header}");
+        assert!(!header.contains('='), "{header}");
         let back = read_request(&mut BufReader::new(&buf[..])).unwrap();
         assert_eq!(back.id, req.id);
         assert_eq!(back.comm, req.comm);
-        assert_eq!(back.hierarchy, req.hierarchy);
+        assert_eq!(back.machine, req.machine);
         assert_eq!(back.algorithm.name(), "topdown+Nc2");
         assert_eq!(back.repetitions, 2);
         assert_eq!(back.seed, 99);
         assert!(!back.verify);
+        assert_eq!(back.levels, None);
+        assert_eq!(back.coarsen_limit, None);
+    }
+
+    #[test]
+    fn request_roundtrip_grid_torus_and_ml_knobs() {
+        for spec in ["grid:16x8@1", "torus:4x4x8@2"] {
+            let mut req = sample_request();
+            req.machine = Machine::parse(spec).unwrap();
+            req.levels = Some(3);
+            req.coarsen_limit = Some(16);
+            let mut buf = Vec::new();
+            write_request(&mut buf, &req).unwrap();
+            let header = std::str::from_utf8(&buf).unwrap().lines().next().unwrap().to_string();
+            assert!(header.contains(&format!("machine={spec}")), "{header}");
+            assert!(header.contains("levels=3"), "{header}");
+            assert!(header.contains("coarsen_limit=16"), "{header}");
+            let back = read_request(&mut BufReader::new(&buf[..])).unwrap();
+            assert_eq!(back.machine, req.machine, "{spec}");
+            assert_eq!(back.machine.spec().unwrap(), spec);
+            assert_eq!(back.levels, Some(3));
+            assert_eq!(back.coarsen_limit, Some(16));
+        }
+    }
+
+    #[test]
+    fn request_options_rejected_when_malformed() {
+        // unknown keys, bare tokens, and '-' placeholders without machine=
+        for bad in [
+            "MAP v1 1 mm 4 1 1 0 0 4 0 frobnicate=1\nEND\n",
+            "MAP v1 1 mm 4 1 1 0 0 4 0 levels\nEND\n",
+            "MAP v1 1 mm - - 1 0 0 4 0\nEND\n",
+            "MAP v1 1 mm - - 1 0 0 4 0 levels=2\nEND\n",
+        ] {
+            assert!(
+                read_request(&mut BufReader::new(bad.as_bytes())).is_err(),
+                "{bad:?} must be rejected"
+            );
+        }
     }
 
     #[test]

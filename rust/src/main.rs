@@ -18,12 +18,12 @@
 //! ```
 
 use anyhow::{anyhow, bail, Context, Result};
-use qapmap::api::{MapJobBuilder, MapSession, OracleMode, VerifyPolicy};
+use qapmap::api::{MachineResolution, MapJobBuilder, MapSession, OracleMode, VerifyPolicy};
 use qapmap::coordinator::{wire, Coordinator};
 use qapmap::graph::{io as gio, Graph};
 use qapmap::mapping::algorithms::AlgorithmSpec;
-use qapmap::mapping::Hierarchy;
 use qapmap::model::build_instance;
+use qapmap::model::topology::Machine;
 use qapmap::partition::{partition_kway, PartitionConfig};
 use qapmap::runtime::{QapRuntime, RuntimeHandle};
 use qapmap::util::{Args, Rng};
@@ -64,7 +64,9 @@ fn usage() {
     eprintln!(
         "qapmap — process mapping & sparse quadratic assignment\n\
          commands:\n  \
-         map        --inst <name>|--graph <file.metis> --blocks <k> --S a:b:c --D x:y:z\n  \
+         map        --inst <name>|--graph <file.metis> --blocks <k>\n  \
+                    [--machine hier:4:16:2@1:10:100 | grid:8x8@1 | torus:4x4x4@1]\n  \
+                    [--S a:b:c --D x:y:z]   (legacy hierarchy notation)\n  \
                     [--algo topdown+Nc10 | topdown+gc:nc10 | ml:topdown+Nc5] [--seed 1] [--reps 1]\n  \
                     [--verify] [--explicit-distances] [--levels 16] [--coarsen-limit 64]\n  \
          serve      [--addr 127.0.0.1:7447] [--workers N] [--queue 64] [--no-xla]\n  \
@@ -91,21 +93,38 @@ fn load_comm(args: &Args, rng: &mut Rng) -> Result<Graph> {
     Ok(build_instance(&app, blocks, rng))
 }
 
-/// Resolve `--S`/`--D` into a hierarchy for an `n`-process instance; the
-/// shared logic (including the flat-hierarchy fallback when `--S` is omitted
-/// and `n % 64 != 0`) lives in [`qapmap::api::hierarchy_for`].
-fn hierarchy_for(args: &Args, n: usize) -> Result<Hierarchy> {
-    qapmap::api::hierarchy_for(n, args.get("S", ""), args.get("D", "")).map_err(|e| anyhow!(e))
+/// Resolve `--machine` (full grammar) or the legacy `--S`/`--D` notation
+/// into a machine for an `n`-process instance; the shared logic (including
+/// the fold-don't-flatten default when nothing is given) lives in
+/// [`qapmap::api::resolve_machine`].
+fn machine_for(args: &Args, n: usize) -> Result<(Machine, MachineResolution)> {
+    qapmap::api::resolve_machine(n, args.get("machine", ""), args.get("S", ""), args.get("D", ""))
+        .map_err(|e| anyhow!(e))
+}
+
+/// One line describing how the machine was chosen (printed by `map`).
+fn describe_machine(r: &MachineResolution) -> String {
+    let mut line = format!("machine: {}", r.spec);
+    if r.inferred {
+        line.push_str(" (inferred from n");
+        if r.partial_top_folded {
+            line.push_str("; default template partially folded");
+        }
+        line.push(')');
+    }
+    line
 }
 
 fn cmd_map(args: &Args) -> Result<()> {
     let seed: u64 = args.get_as("seed", 1);
     let mut rng = Rng::new(seed);
     let comm = load_comm(args, &mut rng)?;
-    let h = hierarchy_for(args, comm.n())?;
+    let (machine, resolution) = machine_for(args, comm.n())?;
+    println!("{}", describe_machine(&resolution));
     let spec = AlgorithmSpec::parse(args.get("algo", "topdown+Nc10")).map_err(|e| anyhow!(e))?;
     let verify = args.flag("verify");
-    let job = MapJobBuilder::new(comm, h)
+    let job = MapJobBuilder::for_machine(comm, machine)
+        .machine_resolution(resolution)
         .algorithm(spec)
         .oracle_mode(if args.flag("explicit-distances") {
             OracleMode::Explicit
@@ -219,12 +238,15 @@ fn cmd_client(args: &Args) -> Result<()> {
     let seed: u64 = args.get_as("seed", 1);
     let mut rng = Rng::new(seed);
     let comm = load_comm(args, &mut rng)?;
-    let h = hierarchy_for(args, comm.n())?;
-    let job = MapJobBuilder::new(comm, h)
+    let (machine, resolution) = machine_for(args, comm.n())?;
+    let job = MapJobBuilder::for_machine(comm, machine)
+        .machine_resolution(resolution)
         .algorithm_name(args.get("algo", "topdown+Nc10"))
         .map_err(|e| anyhow!(e))?
         .repetitions(args.get_as("reps", 1))
         .seed(seed)
+        .levels(args.get_as("levels", 16))
+        .coarsen_limit(args.get_as("coarsen-limit", 64))
         .verify(if args.flag("verify") { VerifyPolicy::IfAvailable } else { VerifyPolicy::Skip })
         .build()
         .map_err(|e| anyhow!(e))?;
@@ -283,7 +305,7 @@ fn cmd_partition(args: &Args) -> Result<()> {
 }
 
 /// Recover a hierarchy description from an explicit distance matrix
-/// (paper §5 future work; see `mapping::infer`).
+/// (paper §5 future work; see `model::topology::infer`).
 fn cmd_infer(args: &Args) -> Result<()> {
     let path = args.options.get("matrix").ok_or_else(|| anyhow!("--matrix required"))?;
     let text = std::fs::read_to_string(path)?;
@@ -295,7 +317,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
     if n * n != vals.len() {
         bail!("{} entries is not a square matrix", vals.len());
     }
-    match qapmap::mapping::infer::infer_hierarchy(n, &vals) {
+    match qapmap::model::topology::infer::infer_hierarchy(n, &vals) {
         Ok(h) => {
             let s: Vec<String> = h.s.iter().map(|x| x.to_string()).collect();
             let d: Vec<String> = h.d.iter().map(|x| x.to_string()).collect();
@@ -313,8 +335,9 @@ fn cmd_verify(args: &Args) -> Result<()> {
     let mut rng = Rng::new(seed);
     let comm = load_comm(args, &mut rng)?;
     let n = comm.n();
-    let h = hierarchy_for(args, n)?;
-    let job = MapJobBuilder::new(comm, h)
+    let (machine, resolution) = machine_for(args, n)?;
+    let job = MapJobBuilder::for_machine(comm, machine)
+        .machine_resolution(resolution)
         .algorithm_name(args.get("algo", "topdown"))
         .map_err(|e| anyhow!(e))?
         .seed(seed)

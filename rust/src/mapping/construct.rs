@@ -17,20 +17,31 @@
 //!   external comparison): simultaneously bisect process set and PE range.
 
 use super::algorithms::Construction;
-use super::hierarchy::{DistanceOracle, Hierarchy};
-use super::objective::Mapping;
 use crate::graph::{contract, induced_subgraph, Graph, NodeId};
+use crate::model::topology::{Hierarchy, Machine};
 use crate::partition::kway::{bisect_multilevel, exact_block_sizes};
 use crate::partition::{partition_kway, PartitionConfig};
 use crate::util::Rng;
 
+use super::objective::Mapping;
+
 /// Dispatch a [`Construction`] by name — the single §3.1 entry point shared
 /// by the session execution path and the multilevel V-cycle (which runs it
-/// on the *coarsest* graph against the folded hierarchy).
+/// on the *coarsest* graph against the folded machine). `machine` is the
+/// structural model the recursive constructions split along; `oracle` is
+/// the (possibly memoized-explicit) distance source greedy constructions
+/// query — the session passes its cached oracle here.
+///
+/// Non-hierarchical machines reuse the registry through their natural
+/// counterparts: Top-Down / Bottom-Up multisect grids and tori along their
+/// dimensions (the [`recursion_levels`] pseudo-hierarchy — the recursions
+/// only consume fan-outs and contiguous PE ranges, which row-major grid
+/// slabs are), and GreedyAllC runs its direct oracle-driven form
+/// ([`greedy_all_c_generic`], the setting it was designed for in [12]).
 pub fn initial(
     comm: &Graph,
-    hierarchy: &Hierarchy,
-    oracle: &DistanceOracle,
+    machine: &Machine,
+    oracle: &Machine,
     construction: Construction,
     part_cfg: &PartitionConfig,
     rng: &mut Rng,
@@ -39,11 +50,35 @@ pub fn initial(
         Construction::Identity => identity(comm.n()),
         Construction::Random => random(comm.n(), rng),
         Construction::MuellerMerbach => mueller_merbach(comm, oracle),
-        Construction::GreedyAllC => greedy_all_c(comm, hierarchy),
-        Construction::TopDown => top_down(comm, hierarchy, part_cfg, rng),
-        Construction::BottomUp => bottom_up(comm, hierarchy, part_cfg, rng),
+        Construction::GreedyAllC => match machine.hier() {
+            Some(h) => greedy_all_c(comm, h),
+            None => greedy_all_c_generic(comm, oracle),
+        },
+        Construction::TopDown => top_down(comm, &recursion_levels(machine), part_cfg, rng),
+        Construction::BottomUp => bottom_up(comm, &recursion_levels(machine), part_cfg, rng),
         Construction::Rcb => rcb(comm, part_cfg, rng),
     }
+}
+
+/// The level structure Top-Down / Bottom-Up recurse over, as a hierarchy:
+/// the machine itself when hierarchical; for grids and tori, a
+/// pseudo-hierarchy whose fan-outs are the dimension extents (innermost
+/// first) — the recursions only use fan-outs, subsystem sizes and
+/// contiguous PE ranges, and a row-major grid slab *is* a contiguous PE
+/// range, so this is exactly dimension-wise multisection. Explicit
+/// machines degrade to a single flat level (no structure to split along —
+/// prefer `mm`/`gac` there).
+fn recursion_levels(machine: &Machine) -> Hierarchy {
+    let dims = match machine {
+        Machine::Hier(h) => return h.clone(),
+        Machine::Grid(g) => g.dims().to_vec(),
+        Machine::Torus(t) => t.dims().to_vec(),
+        Machine::Explicit(e) => vec![e.n_pes() as u64],
+    };
+    // distances are never consulted by the recursions; any non-decreasing
+    // placeholder satisfies the Hierarchy constructor
+    let d: Vec<u64> = (1..=dims.len() as u64).collect();
+    Hierarchy::new(dims, d).expect("positive dims form a valid pseudo-hierarchy")
 }
 
 /// The identity assignment (process `i` on PE `i`). Surprisingly strong for
@@ -62,7 +97,7 @@ pub fn random(n: usize, rng: &mut Rng) -> Mapping {
 /// beyond the oracle (distance sums are maintained incrementally; with an
 /// explicit oracle this reproduces the original exactly, with the implicit
 /// oracle it is the "online distances" variant of the scalability study).
-pub fn mueller_merbach(comm: &Graph, oracle: &DistanceOracle) -> Mapping {
+pub fn mueller_merbach(comm: &Graph, oracle: &Machine) -> Mapping {
     let n = comm.n();
     assert_eq!(n, oracle.n_pes(), "processes ({n}) != PEs ({})", oracle.n_pes());
     let mut sigma = vec![u32::MAX; n];
@@ -203,6 +238,72 @@ pub fn greedy_all_c(comm: &Graph, hierarchy: &Hierarchy) -> Mapping {
                 prev = a_i;
             }
             debug_assert_eq!(prev, total, "top level group must cover all neighbors");
+            if cost < best_cost {
+                best_cost = cost;
+                best_p = q;
+            }
+        }
+        sigma[u] = best_p as u32;
+        proc_assigned[u] = true;
+        pe_used[best_p] = true;
+        for (x, w) in comm.edges(u as NodeId) {
+            comm_to_assigned[x as usize] += w;
+        }
+    }
+    Mapping { sigma }
+}
+
+/// GreedyAllC in its direct, oracle-driven form: identical selection rules
+/// to [`greedy_all_c`], but the candidate cost `Σ_{assigned neighbor x}
+/// C[u][x] · D[q][σ(x)]` is summed per free PE straight from the distance
+/// oracle instead of being bucketed per hierarchy level — `O(n · d_u)` per
+/// step instead of `O(d_u·k + n·k)`. This is the form Glantz et al. [12]
+/// define for *non-ultrametric* machines (grids, tori); on a hierarchy the
+/// two provably coincide (same cost function, same lowest-id tie-breaks —
+/// regression-tested below).
+pub fn greedy_all_c_generic(comm: &Graph, oracle: &Machine) -> Mapping {
+    let n = comm.n();
+    assert_eq!(n, oracle.n_pes(), "processes ({n}) != PEs ({})", oracle.n_pes());
+    let mut sigma = vec![u32::MAX; n];
+    if n == 0 {
+        return Mapping { sigma };
+    }
+    let mut proc_assigned = vec![false; n];
+    let mut pe_used = vec![false; n];
+    let mut comm_to_assigned = vec![0u64; n];
+    let volume: Vec<u64> = (0..n as NodeId)
+        .map(|u| comm.edges(u).map(|(_, w)| w).sum())
+        .collect();
+    let mut placed: Vec<(u32, u64)> = Vec::new(); // (PE of neighbor, weight)
+
+    for _ in 0..n {
+        let mut best_u = usize::MAX;
+        for u in 0..n {
+            if proc_assigned[u] {
+                continue;
+            }
+            if best_u == usize::MAX
+                || comm_to_assigned[u] > comm_to_assigned[best_u]
+                || (comm_to_assigned[u] == comm_to_assigned[best_u] && volume[u] > volume[best_u])
+            {
+                best_u = u;
+            }
+        }
+        let u = best_u;
+        placed.clear();
+        for (x, c) in comm.edges(u as NodeId) {
+            if proc_assigned[x as usize] {
+                placed.push((sigma[x as usize], c));
+            }
+        }
+        // pick PE minimizing the objective increase (ties: lowest id)
+        let mut best_p = usize::MAX;
+        let mut best_cost = u64::MAX;
+        for q in 0..n {
+            if pe_used[q] {
+                continue;
+            }
+            let cost: u64 = placed.iter().map(|&(px, c)| c * oracle.distance(q as u32, px)).sum();
             if cost < best_cost {
                 best_cost = cost;
                 best_p = q;
@@ -363,11 +464,11 @@ mod tests {
     use crate::gen::random_geometric_graph;
     use crate::mapping::objective::objective;
 
-    fn setup(nexp: usize, seed: u64) -> (Graph, Hierarchy, DistanceOracle) {
+    fn setup(nexp: usize, seed: u64) -> (Graph, Hierarchy, Machine) {
         let mut rng = Rng::new(seed);
         let g = random_geometric_graph(1 << nexp, &mut rng);
         let h = Hierarchy::new(vec![4, 16, (1u64 << nexp) / 64], vec![1, 10, 100]).unwrap();
-        let o = DistanceOracle::implicit(h.clone());
+        let o = Machine::implicit(h.clone());
         (g, h, o)
     }
 
@@ -449,7 +550,7 @@ mod tests {
     fn mm_matches_with_explicit_oracle() {
         // implicit vs explicit oracle must give identical constructions
         let (g, h, o_imp) = setup(7, 10);
-        let o_exp = DistanceOracle::explicit(&h);
+        let o_exp = Machine::explicit(&h);
         let m1 = mueller_merbach(&g, &o_imp);
         let m2 = mueller_merbach(&g, &o_exp);
         assert_eq!(m1.sigma, m2.sigma);
@@ -488,10 +589,58 @@ mod tests {
     }
 
     #[test]
+    fn generic_gac_coincides_with_bucketed_on_hierarchies() {
+        // the bucketed cost Σ_i d_i (A_i - A_{i-1}) IS Σ_x c·D(q, σx); with
+        // identical lowest-id tie-breaks the two implementations must agree
+        // move for move on any hierarchy
+        let (g, h, o) = setup(7, 33);
+        let bucketed = greedy_all_c(&g, &h);
+        let generic = greedy_all_c_generic(&g, &o);
+        assert_eq!(bucketed.sigma, generic.sigma);
+    }
+
+    #[test]
+    fn constructions_run_on_grid_and_torus_machines() {
+        let mut rng = Rng::new(34);
+        let g = random_geometric_graph(96, &mut rng);
+        let cfg = PartitionConfig::perfectly_balanced();
+        for spec in ["grid:12x8@1", "torus:4x4x6@1"] {
+            let machine = Machine::parse(spec).unwrap();
+            for c in [
+                Construction::Identity,
+                Construction::Random,
+                Construction::MuellerMerbach,
+                Construction::GreedyAllC,
+                Construction::TopDown,
+                Construction::BottomUp,
+                Construction::Rcb,
+            ] {
+                let m = initial(&g, &machine, &machine, c, &cfg, &mut rng);
+                m.validate().unwrap_or_else(|e| panic!("{spec}/{c:?}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn grid_topdown_multisection_respects_rows() {
+        // on a grid machine, top_down multisects along dimensions: the
+        // placement must beat random, like the hierarchical case
+        let mut rng = Rng::new(35);
+        let g = random_geometric_graph(256, &mut rng);
+        let machine = Machine::parse("grid:16x16@1").unwrap();
+        let cfg = PartitionConfig::perfectly_balanced();
+        let td = initial(&g, &machine, &machine, Construction::TopDown, &cfg, &mut rng);
+        let rd = random(g.n(), &mut rng);
+        let j_td = objective(&g, &machine, &td);
+        let j_rd = objective(&g, &machine, &rd);
+        assert!((j_td as f64) < 0.8 * j_rd as f64, "topdown {j_td} vs random {j_rd}");
+    }
+
+    #[test]
     fn empty_and_single() {
         let g0 = crate::graph::from_edges(0, &[]);
         let h1 = Hierarchy::new(vec![1], vec![1]).unwrap();
-        let o = DistanceOracle::implicit(h1.clone());
+        let o = Machine::implicit(h1.clone());
         // n=0 valid for identity/random only; constructions need n == PEs
         assert_eq!(identity(0).n(), 0);
         let g1 = crate::graph::from_edges(1, &[]);

@@ -1,28 +1,31 @@
 //! Process mapping as sparse quadratic assignment — the paper's core.
 //!
-//! * [`hierarchy`] — machine model `S = a1:…:ak`, `D = d1:…:dk` and the
-//!   implicit/explicit distance oracles (§3.4).
+//! The machine model (`S`/`D` hierarchies, grids, tori, explicit matrices)
+//! lives in [`crate::model::topology`]; the central types ([`Machine`],
+//! [`Topology`], [`Hierarchy`]) are re-exported here for convenience.
+//!
 //! * [`objective`] — `J(C,D,Π)`, vertex contributions `Γ`, the fast
-//!   `O(d_u+d_v)` swap engine (§3.2) and the dense `O(n)` baseline.
+//!   `O(d_u+d_v)` swap engine (§3.2) and the dense `O(n)` baseline, both
+//!   dispatching once per call to the concrete [`Topology`].
 //! * [`construct`] — initial mappings: Top-Down, Bottom-Up (§3.1) and all
 //!   compared baselines (Müller-Merbach, GreedyAllC, RCB, identity, random).
 //! * [`refine`] — the `N²`, `N_p`, `N_C^d` and 3-cycle searches (§3.3, §5)
 //!   as [`refine::Refiner`]s over the [`refine::Swapper`] engine interface.
 //! * [`multilevel`] — the coarsen → map → uncoarsen+refine V-cycle built on
-//!   [`crate::partition::coarsen`] matchings and the refiner framework.
+//!   [`crate::partition::coarsen`] groupings and per-topology machine folds.
 //! * [`algorithms`] — a registry tying the above into named end-to-end
 //!   configurations (`topdown+Nc10`, `ml:topdown+Nc5`, …) for the CLI /
 //!   coordinator / bench harness.
 
 pub mod algorithms;
 pub mod construct;
-pub mod hierarchy;
-pub mod infer;
 pub mod multilevel;
 pub mod objective;
 pub mod refine;
 
-pub use hierarchy::{DistanceOracle, Hierarchy};
+pub use crate::model::topology::{
+    ExplicitTopology, GridTopology, Hierarchy, Machine, Topology, TorusTopology,
+};
 pub use multilevel::{LevelStat, MlConfig, MlHierarchy};
 pub use objective::{objective, DenseEngine, Mapping, SwapEngine};
 pub use refine::{refiner_for, Refiner, SearchStats, Swapper};

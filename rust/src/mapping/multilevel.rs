@@ -8,41 +8,45 @@
 //! that V-cycle on top of the [`crate::mapping::refine`] framework:
 //!
 //! 1. **Coarsen** the communication graph with
-//!    [`crate::partition::coarsen::coarsen_halving`] — heavy-edge matchings
-//!    completed to *perfect* matchings, so every level halves exactly.
-//!    In lock-step, the machine hierarchy is **folded**: halving the
-//!    innermost fan-out `a_1` merges PE pairs `{2p, 2p+1}` into one coarse
-//!    PE, and the ultrametric distances stay exact (every subsystem size is
-//!    divided by two, so `D_coarse(p, q) = D(2p+b, 2q+b')` for all
-//!    `b, b' ∈ {0,1}` whenever `p ≠ q`).
+//!    [`crate::partition::coarsen::coarsen_groups`] — heavy-edge groupings
+//!    completed to *exact* clusterings, so every level shrinks by exactly
+//!    the machine's fold group. In lock-step, the machine topology is
+//!    **folded** through [`crate::model::topology::Topology::fold`]: each
+//!    group of `g` consecutive PEs becomes one coarse PE, where `g =
+//!    fold_group()` is chosen per topology (2 for even innermost structure;
+//!    the whole innermost level/dimension when odd, so `3:16:k` machines
+//!    coarsen in triples instead of bailing). Hierarchy folds are fully
+//!    exact; grid/torus folds are representative-exact (see the topology
+//!    module docs).
 //! 2. **Map** the coarsest graph with *any* existing construction
 //!    ([`crate::mapping::construct::initial`]) — at the coarsest level
 //!    `#processes == #PEs` again, so the whole §3.1 registry applies.
-//! 3. **Uncoarsen**: project level `l+1`'s mapping to level `l` (the two
-//!    fine members of a coarse vertex take the two PEs of its coarse PE)
+//! 3. **Uncoarsen**: project level `l+1`'s mapping to level `l` (the `g`
+//!    fine members of a coarse vertex take the `g` PEs of its coarse PE)
 //!    and run the configured [`Refiner`] on the level-`l` graph with the
-//!    level-`l` folded hierarchy — a proper V-cycle, with per-level
+//!    level-`l` folded machine — a proper V-cycle, with per-level
 //!    [`SearchStats`] surfaced as [`LevelStat`]s.
 //!
-//! Every projection yields a valid permutation by construction (perfect
-//! matching ⇒ exactly two members per coarse vertex ⇒ the fine PEs `2p`
-//! and `2p+1` are each used once), and every level's refinement is
+//! Every projection yields a valid permutation by construction (exact
+//! grouping ⇒ exactly `g` members per coarse vertex ⇒ the fine PEs
+//! `g·p .. g·p+g` are each used once), and every level's refinement is
 //! monotone, both enforced by `debug_assert` here and by `tests/api.rs`.
 
 use super::construct;
-use super::hierarchy::{DistanceOracle, Hierarchy};
 use super::objective::{objective, Mapping, SwapEngine};
 use super::refine::{Refiner, SearchStats};
 use crate::graph::Graph;
-use crate::partition::coarsen::coarsen_halving;
+use crate::model::topology::Machine;
+use crate::partition::coarsen::coarsen_groups;
 use crate::partition::PartitionConfig;
 use crate::util::Rng;
 
-/// Knobs for building the coarsening hierarchy (session-local, like
-/// [`PartitionConfig`] — they do not cross the service wire).
+/// Knobs for building the coarsening hierarchy. Session-local by default;
+/// since PR 4 the coordinator wire can carry them as optional job tokens
+/// (`levels=` / `coarsen_limit=`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct MlConfig {
-    /// Maximum number of halving levels (the V-cycle depth).
+    /// Maximum number of coarsening levels (the V-cycle depth).
     pub max_levels: usize,
     /// Stop coarsening once the coarse graph has at most this many
     /// vertices (clamped to ≥ 2).
@@ -58,71 +62,58 @@ impl Default for MlConfig {
 /// One coarse level of the hierarchy.
 #[derive(Debug, Clone)]
 pub struct MlLevel {
-    /// Coarse communication graph (`n / 2^level` vertices).
+    /// Coarse communication graph.
     pub graph: Graph,
     /// Vertex of the next-finer graph → vertex of [`Self::graph`]
-    /// (exactly two fine members per coarse vertex).
+    /// (exactly [`Self::group`] fine members per coarse vertex).
     pub map: Vec<u32>,
-    /// The machine hierarchy folded to this level's size.
-    pub hierarchy: Hierarchy,
-    /// Implicit distance oracle over [`Self::hierarchy`] (cached so
-    /// repetitions share it).
-    pub oracle: DistanceOracle,
+    /// How many fine vertices/PEs merged into each coarse one at this step.
+    pub group: u64,
+    /// The machine folded to this level's size — it *is* this level's
+    /// distance oracle (cached so repetitions share it).
+    pub machine: Machine,
 }
 
-/// The coarsening hierarchy: `levels[0]` is the first coarse level (half
-/// the input size), `levels.last()` the coarsest. Empty when the input is
-/// already at or below the limit, the size is odd, or the machine hierarchy
-/// cannot fold (odd innermost fan-out).
+/// The coarsening hierarchy: `levels[0]` is the first coarse level,
+/// `levels.last()` the coarsest. Empty when the input is already at or
+/// below the limit or the machine topology cannot fold (no structure, or
+/// the group does not divide the graph size).
 #[derive(Debug, Clone)]
 pub struct MlHierarchy {
     pub levels: Vec<MlLevel>,
 }
 
-/// Fold the machine hierarchy one halving step: `a_1 /= 2`, dropping the
-/// level entirely when it reaches 1 (its distance `d_1` becomes
-/// unobservable — coarse PEs are single units). `None` when `a_1` is odd
-/// (the ultrametric would not survive) or the machine is a single PE.
-pub fn halve_hierarchy(h: &Hierarchy) -> Option<Hierarchy> {
-    let mut s = h.s.clone();
-    let mut d = h.d.clone();
-    if s[0] % 2 != 0 {
-        return None;
-    }
-    s[0] /= 2;
-    if s[0] == 1 && s.len() > 1 {
-        s.remove(0);
-        d.remove(0);
-    }
-    Hierarchy::new(s, d).ok()
-}
-
 impl MlHierarchy {
     /// Coarsen `comm` (and fold `machine` in lock-step) until the limit,
-    /// the level cap, an odd size, or an unfoldable machine stops it.
-    /// Deterministic for a given `rng` state; [`crate::api::MapSession`]
-    /// builds it once per job and reuses it across repetitions.
-    pub fn build(comm: &Graph, machine: &Hierarchy, cfg: &MlConfig, rng: &mut Rng) -> MlHierarchy {
+    /// the level cap, or an unfoldable machine stops it. Each step's group
+    /// size comes from the machine ([`Machine::fold_group`]), so graph and
+    /// machine always shrink by the same factor. Deterministic for a given
+    /// `rng` state; [`crate::api::MapSession`] builds it once per job and
+    /// reuses it across repetitions.
+    pub fn build(comm: &Graph, machine: &Machine, cfg: &MlConfig, rng: &mut Rng) -> MlHierarchy {
         debug_assert_eq!(comm.n(), machine.n_pes());
         let limit = cfg.coarsen_limit.max(2);
         let mut levels: Vec<MlLevel> = Vec::new();
         loop {
             let step = {
-                let (cur, curh) = match levels.last() {
-                    Some(l) => (&l.graph, &l.hierarchy),
+                let (cur, curm) = match levels.last() {
+                    Some(l) => (&l.graph, &l.machine),
                     None => (comm, machine),
                 };
                 if levels.len() >= cfg.max_levels || cur.n() <= limit {
                     None
                 } else {
-                    halve_hierarchy(curh)
-                        .and_then(|h| coarsen_halving(cur, rng).map(|lvl| (lvl, h)))
+                    curm.fold_group().and_then(|g| {
+                        curm.fold(g).and_then(|m| {
+                            coarsen_groups(cur, g as usize, rng).map(|lvl| (lvl, g, m))
+                        })
+                    })
                 }
             };
             match step {
-                Some((lvl, hierarchy)) => {
-                    let oracle = DistanceOracle::implicit(hierarchy.clone());
-                    levels.push(MlLevel { graph: lvl.coarse, map: lvl.map, hierarchy, oracle });
+                Some((lvl, group, machine)) => {
+                    debug_assert_eq!(lvl.coarse.n(), machine.n_pes());
+                    levels.push(MlLevel { graph: lvl.coarse, map: lvl.map, group, machine });
                 }
                 None => break,
             }
@@ -130,8 +121,8 @@ impl MlHierarchy {
         MlHierarchy { levels }
     }
 
-    /// The coarsest graph/hierarchy/oracle, or `None` when no coarsening
-    /// happened (the V-cycle then degenerates to the single-level path).
+    /// The coarsest graph/machine, or `None` when no coarsening happened
+    /// (the V-cycle then degenerates to the single-level path).
     pub fn coarsest(&self) -> Option<&MlLevel> {
         self.levels.last()
     }
@@ -173,21 +164,22 @@ pub struct VcycleOutcome {
     /// the finest level is the last).
     pub levels: Vec<LevelStat>,
     /// The mapping at each level *after* refinement, coarsest first (the
-    /// last entry equals [`Self::mapping`]); cheap (sizes halve upward) and
-    /// used by the validity tests.
+    /// last entry equals [`Self::mapping`]); cheap (sizes shrink upward)
+    /// and used by the validity tests.
     pub level_mappings: Vec<Mapping>,
 }
 
-/// Project a coarse mapping one level down: the two fine members of coarse
-/// vertex `c` (in id order) take PEs `2·σ_c(c)` and `2·σ_c(c) + 1`. A
-/// bijection in ⇒ a bijection out.
-pub fn project(map: &[u32], coarse_sigma: &[u32]) -> Vec<u32> {
-    let mut taken = vec![false; coarse_sigma.len()];
+/// Project a coarse mapping one level down: the `group` fine members of
+/// coarse vertex `c` (in id order) take PEs `group·σ_c(c) + 0 ..
+/// group·σ_c(c) + group`. A bijection in ⇒ a bijection out.
+pub fn project(map: &[u32], coarse_sigma: &[u32], group: u32) -> Vec<u32> {
+    let mut taken = vec![0u32; coarse_sigma.len()];
     let mut sigma = vec![0u32; map.len()];
     for (v, &c) in map.iter().enumerate() {
-        let first = !taken[c as usize];
-        taken[c as usize] = true;
-        sigma[v] = 2 * coarse_sigma[c as usize] + if first { 0 } else { 1 };
+        let slot = taken[c as usize];
+        taken[c as usize] += 1;
+        debug_assert!(slot < group, "coarse vertex {c} has more than {group} members");
+        sigma[v] = group * coarse_sigma[c as usize] + slot;
     }
     sigma
 }
@@ -201,7 +193,7 @@ pub fn project(map: &[u32], coarse_sigma: &[u32]) -> Vec<u32> {
 /// is the shared Γ-buffer threaded through every level's [`SwapEngine`].
 pub fn vcycle_refine(
     comm: &Graph,
-    fine_oracle: &DistanceOracle,
+    fine_oracle: &Machine,
     ml: &MlHierarchy,
     coarse: Mapping,
     refiners: &mut [Box<dyn Refiner>],
@@ -220,7 +212,7 @@ pub fn vcycle_refine(
     for i in 0..=depth {
         let (graph, oracle) = if i < depth {
             let lvl = &ml.levels[depth - 1 - i];
-            (&lvl.graph, &lvl.oracle)
+            (&lvl.graph, &lvl.machine)
         } else {
             (comm, fine_oracle)
         };
@@ -245,9 +237,9 @@ pub fn vcycle_refine(
             rounds: s.rounds,
         });
         if i < depth {
-            let map = &ml.levels[depth - 1 - i].map;
-            sigma = project(map, &mapping.sigma);
-            raw = project(map, &raw);
+            let lvl = &ml.levels[depth - 1 - i];
+            sigma = project(&lvl.map, &mapping.sigma, lvl.group as u32);
+            raw = project(&lvl.map, &raw, lvl.group as u32);
         }
         level_mappings.push(mapping);
     }
@@ -272,8 +264,8 @@ pub fn vcycle_refine(
 #[allow(clippy::too_many_arguments)]
 pub fn vcycle(
     comm: &Graph,
-    machine: &Hierarchy,
-    fine_oracle: &DistanceOracle,
+    machine: &Machine,
+    fine_oracle: &Machine,
     spec: &super::algorithms::AlgorithmSpec,
     cfg: &MlConfig,
     part_cfg: &PartitionConfig,
@@ -284,7 +276,7 @@ pub fn vcycle(
     let mut refiners = level_refiners(&ml, machine, spec);
     let coarse = match ml.coarsest() {
         Some(l) => {
-            construct::initial(&l.graph, &l.hierarchy, &l.oracle, spec.construction, part_cfg, rng)
+            construct::initial(&l.graph, &l.machine, &l.machine, spec.construction, part_cfg, rng)
         }
         None => construct::initial(comm, machine, fine_oracle, spec.construction, part_cfg, rng),
     };
@@ -294,17 +286,17 @@ pub fn vcycle(
 }
 
 /// One refiner per level (coarsest first, finest last), each bound to its
-/// level's folded hierarchy so the `N_p` skip rule stays correct.
+/// level's folded machine so the `N_p` skip rule stays correct.
 pub fn level_refiners(
     ml: &MlHierarchy,
-    machine: &Hierarchy,
+    machine: &Machine,
     spec: &super::algorithms::AlgorithmSpec,
 ) -> Vec<Box<dyn Refiner>> {
     let depth = ml.levels.len();
     (0..=depth)
         .map(|i| {
-            let h = if i < depth { &ml.levels[depth - 1 - i].hierarchy } else { machine };
-            super::refine::refiner_for(spec.neighborhood, spec.max_sweeps, h)
+            let m = if i < depth { &ml.levels[depth - 1 - i].machine } else { machine };
+            super::refine::refiner_for(spec.neighborhood, spec.max_sweeps, m)
         })
         .collect()
 }
@@ -314,19 +306,18 @@ mod tests {
     use super::*;
     use crate::gen::random_geometric_graph;
     use crate::mapping::algorithms::AlgorithmSpec;
+    use crate::model::topology::Hierarchy;
 
-    fn setup(n: usize, seed: u64) -> (Graph, Hierarchy, DistanceOracle) {
+    fn setup(n: usize, seed: u64) -> (Graph, Machine) {
         let mut rng = Rng::new(seed);
         let g = random_geometric_graph(n, &mut rng);
         let h = Hierarchy::new(vec![4, 16, (n / 64) as u64], vec![1, 10, 100]).unwrap();
-        let o = DistanceOracle::implicit(h.clone());
-        (g, h, o)
+        (g, Machine::Hier(h))
     }
 
     fn run_vcycle(
         g: &Graph,
-        h: &Hierarchy,
-        o: &DistanceOracle,
+        m: &Machine,
         spec: &AlgorithmSpec,
         cfg: &MlConfig,
         hierarchy_seed: u64,
@@ -335,62 +326,21 @@ mod tests {
         let mut hrng = Rng::new(hierarchy_seed);
         let mut rng = Rng::new(rep_seed);
         let part = PartitionConfig::perfectly_balanced();
-        vcycle(g, h, o, spec, cfg, &part, &mut hrng, &mut rng)
-    }
-
-    #[test]
-    fn halve_hierarchy_folds_innermost() {
-        let h = Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap();
-        let h1 = halve_hierarchy(&h).unwrap();
-        assert_eq!(h1.s, vec![2, 16, 2]);
-        assert_eq!(h1.d, vec![1, 10, 100]);
-        let h2 = halve_hierarchy(&h1).unwrap();
-        assert_eq!(h2.s, vec![16, 2]);
-        assert_eq!(h2.d, vec![10, 100]);
-        assert_eq!(h2.n_pes(), 32);
-        // odd innermost fan-out cannot fold
-        assert!(halve_hierarchy(&Hierarchy::new(vec![3, 4], vec![1, 10]).unwrap()).is_none());
-        // flat hierarchies fold down to a single PE and then stop
-        let flat = Hierarchy::new(vec![2], vec![1]).unwrap();
-        let f1 = halve_hierarchy(&flat).unwrap();
-        assert_eq!(f1.n_pes(), 1);
-        assert!(halve_hierarchy(&f1).is_none());
-    }
-
-    #[test]
-    fn folded_distances_are_exact() {
-        // D_coarse(p, q) must equal D(2p+b, 2q+b') for p != q, any b, b'
-        let h = Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap();
-        let hc = halve_hierarchy(&h).unwrap();
-        for p in 0..hc.n_pes() as u32 {
-            for q in 0..hc.n_pes() as u32 {
-                if p == q {
-                    continue;
-                }
-                for b in 0..2u32 {
-                    for b2 in 0..2u32 {
-                        assert_eq!(
-                            hc.distance(p, q),
-                            h.distance(2 * p + b, 2 * q + b2),
-                            "({p},{q}) fold mismatch"
-                        );
-                    }
-                }
-            }
-        }
+        vcycle(g, m, m, spec, cfg, &part, &mut hrng, &mut rng)
     }
 
     #[test]
     fn hierarchy_builds_and_halves() {
-        let (g, h, _) = setup(256, 1);
+        let (g, m) = setup(256, 1);
         let mut rng = Rng::new(2);
         let cfg = MlConfig { max_levels: 8, coarsen_limit: 32 };
-        let ml = MlHierarchy::build(&g, &h, &cfg, &mut rng);
+        let ml = MlHierarchy::build(&g, &m, &cfg, &mut rng);
         assert_eq!(ml.levels.len(), 3); // 256 -> 128 -> 64 -> 32
         let mut expect = 128;
         for lvl in &ml.levels {
+            assert_eq!(lvl.group, 2);
             assert_eq!(lvl.graph.n(), expect);
-            assert_eq!(lvl.hierarchy.n_pes(), expect);
+            assert_eq!(lvl.machine.n_pes(), expect);
             assert_eq!(lvl.graph.validate(), Ok(()));
             expect /= 2;
         }
@@ -399,41 +349,99 @@ mod tests {
     }
 
     #[test]
+    fn odd_fanout_machine_folds_in_triples() {
+        // 3:16:2 = 96 PEs: the first fold consumes the whole innermost
+        // level (group 3), later folds halve the 16 — the non-halving case
+        // the ROADMAP asked for
+        let mut rng = Rng::new(3);
+        let g = random_geometric_graph(96, &mut rng);
+        let m = Machine::Hier(Hierarchy::new(vec![3, 16, 2], vec![1, 10, 100]).unwrap());
+        let cfg = MlConfig { max_levels: 8, coarsen_limit: 8 };
+        let ml = MlHierarchy::build(&g, &m, &cfg, &mut rng);
+        let sizes: Vec<usize> = ml.levels.iter().map(|l| l.graph.n()).collect();
+        let groups: Vec<u64> = ml.levels.iter().map(|l| l.group).collect();
+        assert_eq!(sizes, vec![32, 16, 8]); // 96 -(÷3)-> 32 -(÷2)-> 16 -> 8
+        assert_eq!(groups, vec![3, 2, 2]);
+        for lvl in &ml.levels {
+            assert_eq!(lvl.machine.n_pes(), lvl.graph.n());
+        }
+        assert_eq!(ml.levels[0].machine.hier().unwrap().s, vec![16, 2]);
+    }
+
+    #[test]
+    fn grid_machine_coarsens_with_folded_links() {
+        let mut rng = Rng::new(4);
+        let g = random_geometric_graph(64, &mut rng);
+        let m = Machine::parse("grid:8x8@1").unwrap();
+        let cfg = MlConfig { max_levels: 8, coarsen_limit: 8 };
+        let ml = MlHierarchy::build(&g, &m, &cfg, &mut rng);
+        let sizes: Vec<usize> = ml.levels.iter().map(|l| l.graph.n()).collect();
+        assert_eq!(sizes, vec![32, 16, 8]);
+        for lvl in &ml.levels {
+            assert_eq!(lvl.machine.kind(), "grid");
+            assert_eq!(lvl.machine.n_pes(), lvl.graph.n());
+        }
+    }
+
+    #[test]
     fn projection_is_a_bijection() {
         let map = vec![0, 2, 1, 2, 0, 1]; // 6 fine -> 3 coarse, 2 members each
-        let sigma = project(&map, &[2, 0, 1]);
+        let sigma = project(&map, &[2, 0, 1], 2);
         let m = Mapping { sigma };
         m.validate().unwrap();
         // members in id order: vertex 0 (first of cluster 0 at PE 2) -> 4
         assert_eq!(m.sigma, vec![4, 2, 0, 3, 5, 1]);
+        // and for a triple grouping
+        let map3 = vec![0, 1, 0, 1, 1, 0]; // 6 fine -> 2 coarse, 3 members
+        let sigma3 = project(&map3, &[1, 0], 3);
+        let m3 = Mapping { sigma: sigma3 };
+        m3.validate().unwrap();
+        assert_eq!(m3.sigma, vec![3, 0, 4, 1, 2, 5]);
     }
 
     #[test]
     fn vcycle_valid_monotone_and_improves() {
-        let (g, h, o) = setup(256, 3);
+        let (g, m) = setup(256, 3);
         let spec = AlgorithmSpec::parse("topdown+Nc3").unwrap();
         let cfg = MlConfig { max_levels: 8, coarsen_limit: 32 };
-        let (ml, out) = run_vcycle(&g, &h, &o, &spec, &cfg, 7, 8);
+        let (ml, out) = run_vcycle(&g, &m, &spec, &cfg, 7, 8);
         assert_eq!(out.levels.len(), ml.levels.len() + 1);
         assert_eq!(out.level_mappings.len(), out.levels.len());
-        for (i, (stat, m)) in out.levels.iter().zip(&out.level_mappings).enumerate() {
-            m.validate().unwrap_or_else(|e| panic!("level {i}: {e}"));
+        for (i, (stat, mp)) in out.levels.iter().zip(&out.level_mappings).enumerate() {
+            mp.validate().unwrap_or_else(|e| panic!("level {i}: {e}"));
             assert!(stat.objective <= stat.objective_initial, "level {i} worsened");
-            assert_eq!(m.n(), stat.n);
+            assert_eq!(mp.n(), stat.n);
         }
         assert_eq!(out.mapping.sigma, out.level_mappings.last().unwrap().sigma);
-        assert_eq!(out.objective, objective(&g, &o, &out.mapping));
+        assert_eq!(out.objective, objective(&g, &m, &out.mapping));
         assert!(out.objective <= out.objective_initial);
         assert!(out.stats.evaluated > 0);
     }
 
     #[test]
+    fn vcycle_runs_on_odd_fanout_and_grid_machines() {
+        let mut rng = Rng::new(9);
+        let g = random_geometric_graph(96, &mut rng);
+        let spec = AlgorithmSpec::parse("mm+Nc2").unwrap();
+        let cfg = MlConfig { max_levels: 8, coarsen_limit: 8 };
+        for spec_str in ["hier:3:16:2@1:10:100", "grid:12x8@1", "torus:4x4x6@1"] {
+            let m = Machine::parse(spec_str).unwrap();
+            assert_eq!(m.n_pes(), 96, "{spec_str}");
+            let (ml, out) = run_vcycle(&g, &m, &spec, &cfg, 17, 18);
+            assert!(!ml.levels.is_empty(), "{spec_str}: no coarsening happened");
+            out.mapping.validate().unwrap();
+            assert_eq!(out.objective, objective(&g, &m, &out.mapping), "{spec_str}");
+            assert!(out.objective <= out.objective_initial, "{spec_str}");
+        }
+    }
+
+    #[test]
     fn vcycle_deterministic_for_fixed_seeds() {
-        let (g, h, o) = setup(128, 4);
+        let (g, m) = setup(128, 4);
         let spec = AlgorithmSpec::parse("topdown+Nc2").unwrap();
         let cfg = MlConfig { max_levels: 8, coarsen_limit: 16 };
-        let a = run_vcycle(&g, &h, &o, &spec, &cfg, 11, 12).1;
-        let b = run_vcycle(&g, &h, &o, &spec, &cfg, 11, 12).1;
+        let a = run_vcycle(&g, &m, &spec, &cfg, 11, 12).1;
+        let b = run_vcycle(&g, &m, &spec, &cfg, 11, 12).1;
         assert_eq!(a.mapping.sigma, b.mapping.sigma);
         assert_eq!(a.objective, b.objective);
         assert_eq!(a.levels, b.levels);
@@ -442,23 +450,29 @@ mod tests {
     #[test]
     fn vcycle_degenerates_without_coarsening() {
         // coarsen_limit above n: no levels, the V-cycle is construct+refine
-        let (g, h, o) = setup(128, 5);
+        let (g, m) = setup(128, 5);
         let spec = AlgorithmSpec::parse("mm+Nc1").unwrap();
         let cfg = MlConfig { max_levels: 8, coarsen_limit: 4096 };
-        let (ml, out) = run_vcycle(&g, &h, &o, &spec, &cfg, 13, 14);
+        let (ml, out) = run_vcycle(&g, &m, &spec, &cfg, 13, 14);
         assert!(ml.levels.is_empty());
         assert_eq!(out.levels.len(), 1);
         out.mapping.validate().unwrap();
+        // an explicit (structureless) machine also degenerates cleanly
+        let e = Machine::explicit(&m);
+        let cfg2 = MlConfig { max_levels: 8, coarsen_limit: 16 };
+        let (ml2, out2) = run_vcycle(&g, &e, &spec, &cfg2, 13, 14);
+        assert!(ml2.levels.is_empty());
+        out2.mapping.validate().unwrap();
     }
 
     #[test]
     fn vcycle_not_worse_than_projection_baseline() {
         // the whole point: refined-at-every-level beats (or ties) the raw
         // projected construction
-        let (g, h, o) = setup(256, 6);
+        let (g, m) = setup(256, 6);
         let spec = AlgorithmSpec::parse("topdown+Nc5").unwrap();
         let cfg = MlConfig::default();
-        let (_, out) = run_vcycle(&g, &h, &o, &spec, &cfg, 15, 16);
+        let (_, out) = run_vcycle(&g, &m, &spec, &cfg, 15, 16);
         assert!(
             out.objective < out.objective_initial,
             "{} vs {}",

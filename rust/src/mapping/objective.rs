@@ -13,8 +13,8 @@
 //! baseline of Brandfass et al. (dense matrices, `O(n)` per update) used as
 //! the comparison point of Table 1/Figure 1.
 
-use super::hierarchy::DistanceOracle;
 use crate::graph::{Graph, NodeId};
+use crate::model::topology::{with_topology, Machine, Topology};
 
 /// An assignment of processes to PEs: `sigma[u]` = PE of process `u`
 /// (the paper's `Π⁻¹`). Always a bijection `0..n -> 0..n`.
@@ -62,13 +62,19 @@ impl Mapping {
 
 /// `J(C, D, σ)` from scratch in `O(n + m)` oracle queries (§3.2: "we can
 /// compute the initial objective in O(n+m) time").
-pub fn objective(comm: &Graph, oracle: &DistanceOracle, mapping: &Mapping) -> u64 {
+pub fn objective(comm: &Graph, oracle: &Machine, mapping: &Mapping) -> u64 {
+    with_topology!(oracle, t => objective_t(comm, t, mapping))
+}
+
+/// Monomorphized inner loop of [`objective`] (also the entry point for
+/// callers already holding a concrete [`Topology`]).
+pub fn objective_t<T: Topology + ?Sized>(comm: &Graph, topo: &T, mapping: &Mapping) -> u64 {
     let mut j = 0u64;
     for u in 0..comm.n() as NodeId {
         let pu = mapping.sigma[u as usize];
         for (v, c) in comm.edges(u) {
             if v > u {
-                j += c * oracle.distance(pu, mapping.sigma[v as usize]);
+                j += c * topo.distance(pu, mapping.sigma[v as usize]);
             }
         }
     }
@@ -78,7 +84,7 @@ pub fn objective(comm: &Graph, oracle: &DistanceOracle, mapping: &Mapping) -> u6
 /// The fast sparse swap engine (the paper's contribution, §3.2).
 pub struct SwapEngine<'a> {
     comm: &'a Graph,
-    oracle: &'a DistanceOracle,
+    oracle: &'a Machine,
     sigma: Vec<u32>,
     /// `Γ_σ(u)`: contribution of vertex `u` to the objective (each edge is
     /// counted in both endpoints' Γ, so `Σ Γ = 2J`).
@@ -102,7 +108,7 @@ pub struct SwapEngine<'a> {
 
 impl<'a> SwapEngine<'a> {
     /// Build the engine in `O(n + m)`: compute all `Γ` and `J`.
-    pub fn new(comm: &'a Graph, oracle: &'a DistanceOracle, mapping: Mapping) -> SwapEngine<'a> {
+    pub fn new(comm: &'a Graph, oracle: &'a Machine, mapping: Mapping) -> SwapEngine<'a> {
         Self::with_gamma_buf(comm, oracle, mapping, Vec::new())
     }
 
@@ -112,7 +118,7 @@ impl<'a> SwapEngine<'a> {
     /// recover the buffer afterwards with [`Self::into_parts`].
     pub fn with_gamma_buf(
         comm: &'a Graph,
-        oracle: &'a DistanceOracle,
+        oracle: &'a Machine,
         mapping: Mapping,
         mut gamma: Vec<u64>,
     ) -> SwapEngine<'a> {
@@ -121,18 +127,22 @@ impl<'a> SwapEngine<'a> {
         gamma.clear();
         gamma.resize(comm.n(), 0);
         let mut j = 0u64;
-        for u in 0..comm.n() as NodeId {
-            let pu = sigma[u as usize];
-            let mut gu = 0u64;
-            for (v, c) in comm.edges(u) {
-                let contrib = c * oracle.distance(pu, sigma[v as usize]);
-                gu += contrib;
-                if v > u {
-                    j += contrib;
+        // §Perf: the topology is dispatched once for the whole O(n+m) fill,
+        // monomorphizing the inner loops (the PR 3 once-per-call pattern).
+        with_topology!(oracle, t => {
+            for u in 0..comm.n() as NodeId {
+                let pu = sigma[u as usize];
+                let mut gu = 0u64;
+                for (v, c) in comm.edges(u) {
+                    let contrib = c * t.distance(pu, sigma[v as usize]);
+                    gu += contrib;
+                    if v > u {
+                        j += contrib;
+                    }
                 }
+                gamma[u as usize] = gu;
             }
-            gamma[u as usize] = gu;
-        }
+        });
         let version = vec![0u32; comm.n()];
         SwapEngine { comm, oracle, sigma, gamma, version, moves: 0, j, swaps_applied: 0 }
     }
@@ -184,19 +194,15 @@ impl<'a> SwapEngine<'a> {
     /// Gain of swapping the PEs of processes `u` and `v` (positive = the
     /// objective decreases by that amount). `O(d_u + d_v)` oracle queries.
     ///
-    /// §Perf: the oracle enum is matched once per *call*, not once per edge
-    /// — the inner loops are monomorphized over the concrete oracle.
+    /// §Perf: the machine is dispatched to its concrete [`Topology`] once
+    /// per *call*, not once per edge — the inner loops are monomorphized
+    /// over the concrete topology.
     pub fn swap_gain(&self, u: NodeId, v: NodeId) -> i64 {
-        match self.oracle {
-            DistanceOracle::Implicit(ref h) => self.swap_gain_with(u, v, |p, q| h.distance(p, q)),
-            DistanceOracle::Explicit { n, ref matrix } => {
-                self.swap_gain_with(u, v, |p, q| matrix[p as usize * n + q as usize])
-            }
-        }
+        with_topology!(self.oracle, t => self.swap_gain_with(u, v, t))
     }
 
     #[inline]
-    fn swap_gain_with(&self, u: NodeId, v: NodeId, dist: impl Fn(u32, u32) -> u64) -> i64 {
+    fn swap_gain_with<T: Topology>(&self, u: NodeId, v: NodeId, topo: &T) -> i64 {
         debug_assert_ne!(u, v);
         let pu = self.sigma[u as usize];
         let pv = self.sigma[v as usize];
@@ -209,14 +215,14 @@ impl<'a> SwapEngine<'a> {
                 continue; // the (u,v) edge cost is invariant under the swap
             }
             let px = self.sigma[x as usize];
-            delta += c as i64 * (dist(pv, px) as i64 - dist(pu, px) as i64);
+            delta += c as i64 * (topo.distance(pv, px) as i64 - topo.distance(pu, px) as i64);
         }
         for (x, c) in self.comm.edges(v) {
             if x == u {
                 continue;
             }
             let px = self.sigma[x as usize];
-            delta += c as i64 * (dist(pu, px) as i64 - dist(pv, px) as i64);
+            delta += c as i64 * (topo.distance(pu, px) as i64 - topo.distance(pv, px) as i64);
         }
         -delta
     }
@@ -224,20 +230,16 @@ impl<'a> SwapEngine<'a> {
     /// Apply the swap, updating `σ`, all affected `Γ`, move versions and `J`
     /// in `O(d_u + d_v)` (§3.2's update procedure).
     ///
-    /// §Perf: like [`Self::swap_gain`], the oracle enum is matched once per
-    /// *call* — the inner loops are monomorphized over the concrete oracle.
+    /// §Perf: like [`Self::swap_gain`], the machine is dispatched once per
+    /// *call* — the inner loops are monomorphized over the concrete
+    /// topology.
     pub fn do_swap(&mut self, u: NodeId, v: NodeId) {
         let oracle = self.oracle;
-        match oracle {
-            DistanceOracle::Implicit(h) => self.do_swap_with(u, v, |p, q| h.distance(p, q)),
-            DistanceOracle::Explicit { n, matrix } => {
-                let n = *n;
-                self.do_swap_with(u, v, |p, q| matrix[p as usize * n + q as usize])
-            }
-        }
+        with_topology!(oracle, t => self.do_swap_with(u, v, t))
     }
 
-    fn do_swap_with(&mut self, u: NodeId, v: NodeId, dist: impl Fn(u32, u32) -> u64) {
+    fn do_swap_with<T: Topology>(&mut self, u: NodeId, v: NodeId, topo: &T) {
+        let dist = |p: u32, q: u32| topo.distance(p, q);
         debug_assert_ne!(u, v);
         let pu = self.sigma[u as usize];
         let pv = self.sigma[v as usize];
@@ -301,27 +303,16 @@ impl<'a> SwapEngine<'a> {
     /// paper's §5 names cyclic exchanges as future work; this implements
     /// them with the same Γ machinery in `O(d_u + d_v + d_w)`.
     ///
-    /// §Perf: like [`Self::swap_gain`], the oracle enum is matched once per
-    /// *call* — the inner loops are monomorphized over the concrete oracle.
+    /// §Perf: like [`Self::swap_gain`], the machine is dispatched once per
+    /// *call* — the inner loops are monomorphized over the concrete
+    /// topology.
     pub fn rotate3_gain(&self, u: NodeId, v: NodeId, w: NodeId) -> i64 {
-        match self.oracle {
-            DistanceOracle::Implicit(ref h) => {
-                self.rotate3_gain_with(u, v, w, |p, q| h.distance(p, q))
-            }
-            DistanceOracle::Explicit { n, ref matrix } => {
-                self.rotate3_gain_with(u, v, w, |p, q| matrix[p as usize * n + q as usize])
-            }
-        }
+        with_topology!(self.oracle, t => self.rotate3_gain_with(u, v, w, t))
     }
 
     #[inline]
-    fn rotate3_gain_with(
-        &self,
-        u: NodeId,
-        v: NodeId,
-        w: NodeId,
-        dist: impl Fn(u32, u32) -> u64,
-    ) -> i64 {
+    fn rotate3_gain_with<T: Topology>(&self, u: NodeId, v: NodeId, w: NodeId, topo: &T) -> i64 {
+        let dist = |p: u32, q: u32| topo.distance(p, q);
         debug_assert!(u != v && v != w && u != w);
         let pu = self.sigma[u as usize];
         let pv = self.sigma[v as usize];
@@ -413,8 +404,9 @@ pub struct DenseEngine {
 impl DenseEngine {
     /// Densify the sparse inputs — this is exactly what the original codes
     /// did ("both the communication pattern as well as the distances between
-    /// the PEs are given as complete matrices", §3.2).
-    pub fn new(comm: &Graph, oracle: &DistanceOracle, mapping: Mapping) -> DenseEngine {
+    /// the PEs are given as complete matrices", §3.2). Any [`Machine`]
+    /// densifies the same way; the dispatch is paid once per matrix fill.
+    pub fn new(comm: &Graph, oracle: &Machine, mapping: Mapping) -> DenseEngine {
         let n = comm.n();
         let mut c = vec![0u32; n * n];
         for u in 0..n as NodeId {
@@ -423,11 +415,13 @@ impl DenseEngine {
             }
         }
         let mut d = vec![0u32; n * n];
-        for p in 0..n as u32 {
-            for q in 0..n as u32 {
-                d[p as usize * n + q as usize] = oracle.distance(p, q) as u32;
+        with_topology!(oracle, t => {
+            for p in 0..n as u32 {
+                for q in 0..n as u32 {
+                    d[p as usize * n + q as usize] = t.distance(p, q) as u32;
+                }
             }
-        }
+        });
         let sigma = mapping.sigma;
         let j = dense_objective(&c, &d, &sigma, n);
         DenseEngine { n, c, d, sigma, j, swaps_applied: 0 }
@@ -614,21 +608,21 @@ fn dense_objective(c: &[u32], d: &[u32], sigma: &[u32], n: usize) -> u64 {
 mod tests {
     use super::*;
     use crate::gen::random_geometric_graph;
-    use crate::mapping::hierarchy::Hierarchy;
+    use crate::model::topology::Hierarchy;
     use crate::util::Rng;
 
-    fn setup(n_exp: usize, seed: u64) -> (Graph, DistanceOracle) {
+    fn setup(n_exp: usize, seed: u64) -> (Graph, Machine) {
         let mut rng = Rng::new(seed);
         let g = random_geometric_graph(1 << n_exp, &mut rng);
         let h = Hierarchy::new(vec![4, 16, (1 << n_exp) / 64], vec![1, 10, 100]).unwrap();
-        (g, DistanceOracle::implicit(h))
+        (g, Machine::implicit(h))
     }
 
     #[test]
     fn identity_objective_matches_manual() {
         let g = crate::graph::from_edges(4, &[(0, 1, 3), (1, 2, 5), (2, 3, 2)]);
         let h = Hierarchy::new(vec![2, 2], vec![1, 10]).unwrap();
-        let o = DistanceOracle::implicit(h);
+        let o = Machine::implicit(h);
         let m = Mapping::identity(4);
         // edges: (0,1): d(0,1)=1 -> 3; (1,2): d(1,2)=10 -> 50; (2,3): d=1 -> 2
         assert_eq!(objective(&g, &o, &m), 3 + 50 + 2);

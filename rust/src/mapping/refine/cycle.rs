@@ -154,15 +154,15 @@ impl Refiner for NcCycle {
 mod tests {
     use super::*;
     use crate::gen::random_geometric_graph;
-    use crate::mapping::hierarchy::{DistanceOracle, Hierarchy};
     use crate::mapping::objective::{Mapping, SwapEngine};
     use crate::mapping::refine::nc_neighborhood;
+    use crate::model::topology::{Hierarchy, Machine};
 
-    fn setup(nexp: usize, seed: u64) -> (Graph, DistanceOracle) {
+    fn setup(nexp: usize, seed: u64) -> (Graph, Machine) {
         let mut rng = Rng::new(seed);
         let g = random_geometric_graph(1 << nexp, &mut rng);
         let h = Hierarchy::new(vec![4, 16, (1 << nexp) / 64], vec![1, 10, 100]).unwrap();
-        (g, DistanceOracle::implicit(h))
+        (g, Machine::implicit(h))
     }
 
     #[test]
@@ -188,7 +188,7 @@ mod tests {
             &[(0, 1, 1), (1, 2, 1), (2, 3, 1), (3, 4, 1), (4, 5, 1)],
         );
         let h = Hierarchy::new(vec![2, 3], vec![1, 10]).unwrap();
-        let o = DistanceOracle::implicit(h);
+        let o = Machine::implicit(h);
         let mut rng = Rng::new(19);
         let mut eng = SwapEngine::new(&g, &o, Mapping::identity(6));
         let stats = Cycle3::new(10).refine(&mut eng, &g, &mut rng);

@@ -312,15 +312,15 @@ impl Refiner for GainCacheNc {
 mod tests {
     use super::*;
     use crate::gen::random_geometric_graph;
-    use crate::mapping::hierarchy::{DistanceOracle, Hierarchy};
     use crate::mapping::objective::{DenseEngine, Mapping, SwapEngine};
     use crate::mapping::refine::NcNeighborhood;
+    use crate::model::topology::{Hierarchy, Machine};
 
-    fn setup(nexp: usize, seed: u64) -> (Graph, DistanceOracle) {
+    fn setup(nexp: usize, seed: u64) -> (Graph, Machine) {
         let mut rng = Rng::new(seed);
         let g = random_geometric_graph(1 << nexp, &mut rng);
         let h = Hierarchy::new(vec![4, 16, (1 << nexp) / 64], vec![1, 10, 100]).unwrap();
-        (g, DistanceOracle::implicit(h))
+        (g, Machine::implicit(h))
     }
 
     #[test]
@@ -489,7 +489,7 @@ mod tests {
     fn empty_pair_set_is_a_noop() {
         let g = crate::graph::from_edges(4, &[]);
         let h = Hierarchy::new(vec![4], vec![1]).unwrap();
-        let o = DistanceOracle::implicit(h);
+        let o = Machine::implicit(h);
         let mut eng = SwapEngine::new(&g, &o, Mapping::identity(4));
         let stats = GainCacheNc::new(1).refine(&mut eng, &g, &mut Rng::new(1));
         assert_eq!(stats, SearchStats::default());

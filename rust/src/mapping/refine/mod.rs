@@ -42,9 +42,9 @@ pub use nc::{nc_neighborhood, nc_pairs, NcNeighborhood};
 pub use np::NpBlocks;
 
 use super::algorithms::Neighborhood;
-use super::hierarchy::Hierarchy;
 use super::objective::{DenseEngine, SwapEngine};
 use crate::graph::{Graph, NodeId};
+use crate::model::topology::{Hierarchy, Machine};
 use crate::util::Rng;
 
 /// Common interface over the fast (sparse, `O(d_u+d_v)`) and slow (dense,
@@ -202,19 +202,21 @@ impl Refiner for Noop {
     }
 }
 
-/// Instantiate the refiner for a [`Neighborhood`]. `hierarchy` is the
-/// machine the engine maps onto — the `N_p` pair-skip rule needs it; in the
-/// multilevel V-cycle each level passes its *folded* hierarchy.
+/// Instantiate the refiner for a [`Neighborhood`]. `machine` is the
+/// topology the engine maps onto — the `N_p` pair-skip rule needs its
+/// hierarchy (ultrametric leaf groups; grid/torus/explicit machines have
+/// none, so `N_p` simply skips nothing there); in the multilevel V-cycle
+/// each level passes its *folded* machine.
 pub fn refiner_for(
     neighborhood: Neighborhood,
     max_sweeps: usize,
-    hierarchy: &Hierarchy,
+    machine: &Machine,
 ) -> Box<dyn Refiner> {
     match neighborhood {
         Neighborhood::None => Box::new(Noop),
         Neighborhood::N2 => Box::new(N2Cyclic { max_sweeps }),
         Neighborhood::Np { block_len } => {
-            Box::new(NpBlocks::new(block_len, max_sweeps, Some(hierarchy.clone())))
+            Box::new(NpBlocks::new(block_len, max_sweeps, machine.hier().cloned()))
         }
         Neighborhood::Nc { d } => Box::new(NcNeighborhood::new(d)),
         Neighborhood::NcCycle { d } => Box::new(NcCycle::new(d, max_sweeps)),
@@ -253,28 +255,31 @@ pub(crate) fn graph_key(comm: &Graph) -> (usize, usize, u64) {
 mod tests {
     use super::*;
     use crate::gen::random_geometric_graph;
-    use crate::mapping::hierarchy::DistanceOracle;
+    use crate::model::topology::Machine;
     use crate::mapping::objective::Mapping;
 
-    pub(crate) fn setup(nexp: usize, seed: u64) -> (Graph, DistanceOracle) {
+    pub(crate) fn setup(nexp: usize, seed: u64) -> (Graph, Machine) {
         let mut rng = Rng::new(seed);
         let g = random_geometric_graph(1 << nexp, &mut rng);
         let h = Hierarchy::new(vec![4, 16, (1 << nexp) / 64], vec![1, 10, 100]).unwrap();
-        (g, DistanceOracle::implicit(h))
+        (g, Machine::implicit(h))
     }
 
     #[test]
     fn factory_covers_every_neighborhood() {
         let h = Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap();
-        for (nb, name) in [
-            (Neighborhood::None, "none"),
-            (Neighborhood::N2, "N2"),
-            (Neighborhood::Np { block_len: 64 }, "Np"),
-            (Neighborhood::Nc { d: 3 }, "Nc3"),
-            (Neighborhood::NcCycle { d: 2 }, "NcCyc2"),
-            (Neighborhood::GcNc { d: 3 }, "GcNc3"),
-        ] {
-            assert_eq!(refiner_for(nb, 100, &h).name(), name);
+        let machines = [Machine::Hier(h), Machine::parse("grid:16x8@1").unwrap()];
+        for machine in &machines {
+            for (nb, name) in [
+                (Neighborhood::None, "none"),
+                (Neighborhood::N2, "N2"),
+                (Neighborhood::Np { block_len: 64 }, "Np"),
+                (Neighborhood::Nc { d: 3 }, "Nc3"),
+                (Neighborhood::NcCycle { d: 2 }, "NcCyc2"),
+                (Neighborhood::GcNc { d: 3 }, "GcNc3"),
+            ] {
+                assert_eq!(refiner_for(nb, 100, machine).name(), name, "{}", machine.kind());
+            }
         }
     }
 

@@ -46,14 +46,14 @@ impl Refiner for N2Cyclic {
 mod tests {
     use super::*;
     use crate::gen::random_geometric_graph;
-    use crate::mapping::hierarchy::{DistanceOracle, Hierarchy};
+    use crate::model::topology::{Machine, Hierarchy};
     use crate::mapping::objective::{Mapping, SwapEngine};
 
-    fn setup(nexp: usize, seed: u64) -> (Graph, DistanceOracle) {
+    fn setup(nexp: usize, seed: u64) -> (Graph, Machine) {
         let mut rng = Rng::new(seed);
         let g = random_geometric_graph(1 << nexp, &mut rng);
         let h = Hierarchy::new(vec![4, 16, (1 << nexp) / 64], vec![1, 10, 100]).unwrap();
-        (g, DistanceOracle::implicit(h))
+        (g, Machine::implicit(h))
     }
 
     #[test]

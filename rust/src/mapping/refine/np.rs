@@ -2,7 +2,7 @@
 
 use super::{Refiner, SearchStats, Swapper};
 use crate::graph::{Graph, NodeId};
-use crate::mapping::hierarchy::Hierarchy;
+use crate::model::topology::Hierarchy;
 use crate::util::Rng;
 
 /// `N_p` search: the index space is partitioned into consecutive blocks of
@@ -72,14 +72,14 @@ impl Refiner for NpBlocks {
 mod tests {
     use super::*;
     use crate::gen::random_geometric_graph;
-    use crate::mapping::hierarchy::DistanceOracle;
     use crate::mapping::objective::{Mapping, SwapEngine};
+    use crate::model::topology::Machine;
 
-    fn setup(nexp: usize, seed: u64) -> (Graph, DistanceOracle) {
+    fn setup(nexp: usize, seed: u64) -> (Graph, Machine) {
         let mut rng = Rng::new(seed);
         let g = random_geometric_graph(1 << nexp, &mut rng);
         let h = Hierarchy::new(vec![4, 16, (1 << nexp) / 64], vec![1, 10, 100]).unwrap();
-        (g, DistanceOracle::implicit(h))
+        (g, Machine::implicit(h))
     }
 
     #[test]

@@ -1,9 +1,21 @@
-//! Communication-model construction (the paper's §4.1 instance pipeline).
+//! The model layer: both sides of the sparse QAP instance.
 //!
-//! "Take the input graph, partition it into n blocks using the fast
-//! configuration of KaHIP, compute the communication graph induced by that
-//! (vertices represent blocks, edges are induced by connectivity between
-//! blocks, edge cut between two blocks is used as communication volume)."
+//! * The *communication* side `C` (this file): the paper's §4.1 instance
+//!   pipeline — "take the input graph, partition it into n blocks using the
+//!   fast configuration of KaHIP, compute the communication graph induced
+//!   by that (vertices represent blocks, edges are induced by connectivity
+//!   between blocks, edge cut between two blocks is used as communication
+//!   volume)."
+//! * The *machine* side `D` ([`topology`]): the [`topology::Topology`]
+//!   trait with hierarchy / grid / torus / explicit-matrix implementations,
+//!   the [`topology::Machine`] dispatch enum engines hold, and the machine
+//!   grammar (`hier:4:16:2@1:10:100`, `grid:8x8@1`, `torus:4x4x4@1`).
+
+pub mod topology;
+
+pub use topology::{
+    ExplicitTopology, GridTopology, Hierarchy, Machine, Topology, TorusTopology,
+};
 
 use crate::graph::{Builder, Graph, NodeId};
 use crate::partition::{partition_kway, Partition, PartitionConfig};

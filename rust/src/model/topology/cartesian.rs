@@ -1,0 +1,359 @@
+//! Cartesian machine models: k-dimensional grids (meshes) and tori.
+//!
+//! The companion line of work (Glantz, Meyerhenke, Noe — arXiv:1411.0921)
+//! maps the same sparse QAP onto grid and torus partitions of real machines
+//! (BlueGene tori, Cray meshes). Distances are hop counts: Manhattan on a
+//! grid, wrap-around Manhattan on a torus, scaled by a per-dimension link
+//! weight.
+//!
+//! PE ids are row-major with dimension 0 *fastest-varying* — consecutive
+//! ids are neighbors along dimension 0, mirroring the hierarchy convention
+//! that consecutive ids share the innermost subsystem. Folding therefore
+//! merges segments of dimension 0: the dimension shrinks by the group size
+//! and its link weight scales up by it, which keeps the fold
+//! representative-exact (see the module docs in [`super`]).
+
+use super::Topology;
+use crate::graph::Weight;
+
+/// Shared k-dimensional layout: extents + per-dimension link weights.
+/// `wrap` decides grid (false) vs torus (true) hop counts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Lattice {
+    /// Extent of each dimension, fastest-varying first. Normalized: no
+    /// extent-1 dimensions unless the whole machine is a single PE.
+    dims: Vec<u64>,
+    /// Distance contributed per hop along each dimension. Uniform at
+    /// construction; folds scale individual entries.
+    link: Vec<Weight>,
+    /// Total number of PEs `Π dims`.
+    n: u64,
+}
+
+impl Lattice {
+    fn new(mut dims: Vec<u64>, link: Weight, kind: &str) -> Result<Lattice, String> {
+        if dims.is_empty() {
+            return Err(format!("{kind} needs at least one dimension"));
+        }
+        if dims.iter().any(|&d| d == 0) {
+            return Err(format!("all {kind} dimensions must be positive, got {dims:?}"));
+        }
+        if link == 0 {
+            return Err(format!("{kind} link weight must be positive"));
+        }
+        // normalize away trivial dimensions (they contribute no distance)
+        dims.retain(|&d| d > 1);
+        if dims.is_empty() {
+            dims.push(1);
+        }
+        let mut n: u64 = 1;
+        for &d in &dims {
+            n = n
+                .checked_mul(d)
+                .ok_or_else(|| format!("{kind} size overflows u64"))?;
+        }
+        if n > u32::MAX as u64 {
+            return Err(format!("{kind} has {n} PEs, more than u32 ids can address"));
+        }
+        let link = vec![link; dims.len()];
+        Ok(Lattice { dims, link, n })
+    }
+
+    /// Manhattan distance; `wrap` takes the shorter way around each ring.
+    #[inline]
+    fn distance(&self, p: u32, q: u32, wrap: bool) -> Weight {
+        if p == q {
+            return 0;
+        }
+        let (mut p, mut q) = (p as u64, q as u64);
+        let mut dist = 0;
+        for (i, &dim) in self.dims.iter().enumerate() {
+            let (xp, xq) = (p % dim, q % dim);
+            let mut hops = xp.abs_diff(xq);
+            if wrap {
+                hops = hops.min(dim - hops);
+            }
+            dist += self.link[i] * hops;
+            p /= dim;
+            q /= dim;
+        }
+        dist
+    }
+
+    /// See [`Topology::fold_group`]: halve the innermost dimension when
+    /// even, fold it away entirely when odd.
+    fn fold_group(&self) -> Option<u64> {
+        let d0 = *self.dims.first()?;
+        if d0 <= 1 {
+            return None;
+        }
+        Some(if d0 % 2 == 0 { 2 } else { d0 })
+    }
+
+    /// Merge `group` consecutive PEs: segments of dimension 0. The folded
+    /// dimension's link scales by the group size (representative-exact);
+    /// a group spanning the whole dimension removes it (and recurses
+    /// outward, exactly like hierarchy level folding).
+    fn fold(&self, group: u64) -> Option<Lattice> {
+        if group == 0 {
+            return None;
+        }
+        let mut dims = self.dims.clone();
+        let mut link = self.link.clone();
+        let mut rem = group;
+        while rem > 1 {
+            let &d0 = dims.first()?;
+            if d0 % rem == 0 {
+                dims[0] = d0 / rem;
+                link[0] *= rem;
+                rem = 1;
+            } else if rem % d0 == 0 {
+                rem /= d0;
+                dims.remove(0);
+                link.remove(0);
+            } else {
+                return None; // group straddles a dimension boundary
+            }
+            while dims.len() > 1 && dims[0] == 1 {
+                dims.remove(0);
+                link.remove(0);
+            }
+        }
+        if dims.is_empty() {
+            return None;
+        }
+        let n: u64 = dims.iter().product();
+        Some(Lattice { dims, link, n })
+    }
+
+    fn memory_bytes(&self) -> usize {
+        (self.dims.len() + self.link.len() + 1) * 8
+    }
+}
+
+/// k-dimensional mesh with Manhattan hop distances.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GridTopology(Lattice);
+
+/// k-dimensional torus with wrap-around Manhattan hop distances.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TorusTopology(Lattice);
+
+impl GridTopology {
+    /// A grid with the given extents (fastest-varying first) and a uniform
+    /// link weight.
+    pub fn new(dims: Vec<u64>, link: Weight) -> Result<GridTopology, String> {
+        Lattice::new(dims, link, "grid").map(GridTopology)
+    }
+
+    /// Dimension extents, fastest-varying first.
+    pub fn dims(&self) -> &[u64] {
+        &self.0.dims
+    }
+
+    /// Per-dimension link weights (uniform until folded).
+    pub fn links(&self) -> &[Weight] {
+        &self.0.link
+    }
+}
+
+impl TorusTopology {
+    /// A torus with the given extents (fastest-varying first) and a uniform
+    /// link weight.
+    pub fn new(dims: Vec<u64>, link: Weight) -> Result<TorusTopology, String> {
+        Lattice::new(dims, link, "torus").map(TorusTopology)
+    }
+
+    /// Dimension extents, fastest-varying first.
+    pub fn dims(&self) -> &[u64] {
+        &self.0.dims
+    }
+
+    /// Per-dimension link weights (uniform until folded).
+    pub fn links(&self) -> &[Weight] {
+        &self.0.link
+    }
+}
+
+impl Topology for GridTopology {
+    fn n_pes(&self) -> usize {
+        self.0.n as usize
+    }
+
+    #[inline]
+    fn distance(&self, p: u32, q: u32) -> Weight {
+        self.0.distance(p, q, false)
+    }
+
+    fn fold_group(&self) -> Option<u64> {
+        self.0.fold_group()
+    }
+
+    fn fold(&self, group: u64) -> Option<GridTopology> {
+        self.0.fold(group).map(GridTopology)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.0.memory_bytes()
+    }
+
+    fn kind(&self) -> &'static str {
+        "grid"
+    }
+}
+
+impl Topology for TorusTopology {
+    fn n_pes(&self) -> usize {
+        self.0.n as usize
+    }
+
+    #[inline]
+    fn distance(&self, p: u32, q: u32) -> Weight {
+        self.0.distance(p, q, true)
+    }
+
+    fn fold_group(&self) -> Option<u64> {
+        self.0.fold_group()
+    }
+
+    fn fold(&self, group: u64) -> Option<TorusTopology> {
+        self.0.fold(group).map(TorusTopology)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.0.memory_bytes()
+    }
+
+    fn kind(&self) -> &'static str {
+        "torus"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_distance_is_manhattan() {
+        // 4x3 grid, ids row-major with x fastest: id = x + 4*y
+        let g = GridTopology::new(vec![4, 3], 1).unwrap();
+        assert_eq!(g.n_pes(), 12);
+        assert_eq!(g.distance(0, 0), 0);
+        assert_eq!(g.distance(0, 3), 3); // (0,0) -> (3,0)
+        assert_eq!(g.distance(0, 4), 1); // (0,0) -> (0,1)
+        assert_eq!(g.distance(0, 11), 3 + 2); // (0,0) -> (3,2)
+        assert_eq!(g.distance(1, 6), 1 + 1); // (1,0) -> (2,1)
+        // link weight scales everything
+        let g3 = GridTopology::new(vec![4, 3], 3).unwrap();
+        assert_eq!(g3.distance(0, 11), 3 * 5);
+    }
+
+    #[test]
+    fn torus_distance_wraps() {
+        let t = TorusTopology::new(vec![4, 3], 1).unwrap();
+        assert_eq!(t.distance(0, 3), 1); // 3 hops forward, 1 hop around
+        assert_eq!(t.distance(0, 4), 1);
+        assert_eq!(t.distance(0, 8), 1); // (0,0) -> (0,2): around the y-ring
+        assert_eq!(t.distance(0, 11), 1 + 1); // (0,0) -> (3,2): both wrap
+        // on extents <= 2 the torus equals the grid
+        let g2 = GridTopology::new(vec![2, 2], 1).unwrap();
+        let t2 = TorusTopology::new(vec![2, 2], 1).unwrap();
+        for p in 0..4u32 {
+            for q in 0..4u32 {
+                assert_eq!(g2.distance(p, q), t2.distance(p, q));
+            }
+        }
+    }
+
+    #[test]
+    fn distances_are_metric() {
+        let g = GridTopology::new(vec![5, 4, 3], 2).unwrap();
+        let t = TorusTopology::new(vec![5, 4, 3], 2).unwrap();
+        let n = g.n_pes() as u32;
+        for p in 0..n {
+            for q in 0..n {
+                assert_eq!(g.distance(p, q), g.distance(q, p));
+                assert_eq!(t.distance(p, q), t.distance(q, p));
+                assert_eq!(g.distance(p, q) == 0, p == q);
+                assert_eq!(t.distance(p, q) == 0, p == q);
+                // the torus never takes the longer way around
+                assert!(t.distance(p, q) <= g.distance(p, q));
+            }
+        }
+    }
+
+    #[test]
+    fn normalizes_trivial_dimensions() {
+        let g = GridTopology::new(vec![1, 8, 1], 1).unwrap();
+        assert_eq!(g.dims(), &[8]);
+        assert_eq!(g.n_pes(), 8);
+        let single = GridTopology::new(vec![1, 1], 1).unwrap();
+        assert_eq!(single.n_pes(), 1);
+        assert_eq!(single.fold_group(), None);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        assert!(GridTopology::new(vec![], 1).is_err());
+        assert!(GridTopology::new(vec![4, 0], 1).is_err());
+        assert!(GridTopology::new(vec![4, 4], 0).is_err());
+        assert!(TorusTopology::new(vec![0], 1).is_err());
+    }
+
+    #[test]
+    fn fold_halves_and_scales_link() {
+        let g = GridTopology::new(vec![8, 8], 1).unwrap();
+        assert_eq!(g.fold_group(), Some(2));
+        let f = g.fold(2).unwrap();
+        assert_eq!(f.dims(), &[4, 8]);
+        assert_eq!(f.links(), &[2, 1]);
+        assert_eq!(f.n_pes(), 32);
+        // representative exactness: D_c(p, q) == D(2p + b, 2q + b)
+        for p in 0..32u32 {
+            for q in 0..32u32 {
+                for b in 0..2u32 {
+                    assert_eq!(f.distance(p, q), g.distance(2 * p + b, 2 * q + b), "({p},{q},{b})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fold_consumes_whole_odd_dimensions() {
+        let g = GridTopology::new(vec![3, 4], 2).unwrap();
+        assert_eq!(g.fold_group(), Some(3));
+        let f = g.fold(3).unwrap();
+        assert_eq!(f.dims(), &[4]);
+        assert_eq!(f.links(), &[2]);
+        // straddling is rejected
+        assert!(g.fold(2).is_none());
+        assert!(GridTopology::new(vec![6, 4], 1).unwrap().fold(4).is_none());
+    }
+
+    #[test]
+    fn torus_fold_is_representative_exact() {
+        let t = TorusTopology::new(vec![6, 4], 1).unwrap();
+        let f = t.fold(2).unwrap();
+        assert_eq!(f.dims(), &[3, 4]);
+        assert_eq!(f.links(), &[2, 1]);
+        for p in 0..f.n_pes() as u32 {
+            for q in 0..f.n_pes() as u32 {
+                for b in 0..2u32 {
+                    assert_eq!(f.distance(p, q), t.distance(2 * p + b, 2 * q + b), "({p},{q},{b})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fold_chain_reaches_single_pe() {
+        let mut m = GridTopology::new(vec![4, 3], 1).unwrap();
+        let mut n = m.n_pes();
+        while let Some(g) = m.fold_group() {
+            m = m.fold(g).unwrap();
+            assert_eq!(m.n_pes(), n / g as usize);
+            n = m.n_pes();
+        }
+        assert_eq!(n, 1);
+    }
+}

@@ -1,4 +1,4 @@
-//! Hardware hierarchy and the constant-time distance oracle (paper §3.4).
+//! Hardware hierarchy and its constant-time distance oracle (paper §3.4).
 //!
 //! A machine is described by `S = a1:a2:...:ak` (each processor has `a1`
 //! cores, each node `a2` processors, ...) and `D = d1:...:dk` where `d_i` is
@@ -10,10 +10,12 @@
 //!
 //! The implicit oracle answers `distance(p, q)` with a top-to-bottom scan of
 //! the precomputed interval sizes — "a few simple division operations"
-//! (O(k), k ≤ 4 in all experiments). The explicit variant materializes the
-//! full `n×n` matrix; the paper's scalability section measures exactly this
-//! trade-off (memory blow-up and cache behaviour vs. online computation).
+//! (O(k), k ≤ 4 in all experiments). The memoized matrix form lives in
+//! [`super::ExplicitTopology`]; the paper's scalability section measures
+//! exactly this trade-off (memory blow-up and cache behaviour vs. online
+//! computation).
 
+use super::Topology;
 use crate::graph::Weight;
 
 /// A homogeneous machine hierarchy.
@@ -22,7 +24,8 @@ pub struct Hierarchy {
     /// `a_1..a_k`: fan-out per level, innermost first.
     pub s: Vec<u64>,
     /// `d_1..d_k`: distance of PEs whose paths diverge at level i (1-based
-    /// as in the paper; `d[0]` = same innermost group).
+    /// as in the paper; `d[0]` = same innermost group). Non-decreasing:
+    /// inner levels are at most as distant as outer ones.
     pub d: Vec<Weight>,
     /// `ext[i] = a_1 * ... * a_{i+1}`: number of PEs in a level-(i+1)
     /// subsystem. `ext[k-1] = n`.
@@ -35,14 +38,22 @@ pub struct Hierarchy {
 }
 
 impl Hierarchy {
-    /// Build a hierarchy; `s` and `d` must have equal, non-zero length and
-    /// positive fan-outs.
+    /// Build a hierarchy; `s` and `d` must have equal, non-zero length,
+    /// positive fan-outs, and non-decreasing distances (a subsystem cannot
+    /// be farther inside than outside — the ultrametric sanity rule).
     pub fn new(s: Vec<u64>, d: Vec<Weight>) -> Result<Hierarchy, String> {
         if s.is_empty() || s.len() != d.len() {
             return Err(format!("S and D must be non-empty and equal length, got {} and {}", s.len(), d.len()));
         }
         if s.iter().any(|&a| a == 0) {
             return Err("all fan-outs must be positive".into());
+        }
+        if let Some(w) = d.windows(2).find(|w| w[0] > w[1]) {
+            return Err(format!(
+                "D must be non-decreasing (inner levels at most as distant as outer), \
+                 got {} before {} in {d:?}",
+                w[0], w[1]
+            ));
         }
         let mut ext = Vec::with_capacity(s.len());
         let mut prod: u64 = 1;
@@ -120,68 +131,86 @@ impl Hierarchy {
     pub fn subsystem_size(&self, level: usize) -> u64 {
         self.ext[level - 1]
     }
-}
 
-/// Distance oracle: implicit (O(k) per query, O(1) memory) or explicit
-/// (O(1) per query, O(n²) memory). The scalability experiment (§4.1)
-/// compares the two.
-#[derive(Debug, Clone)]
-pub enum DistanceOracle {
-    /// Query the hierarchy online — "computing distances online enables a
-    /// potential user to tackle larger mapping problems".
-    Implicit(Hierarchy),
-    /// Full precomputed matrix (the traditional representation that OOMs at
-    /// n = 2^17 on the paper's 512 GB machine).
-    Explicit { n: usize, matrix: Vec<Weight> },
-}
-
-impl DistanceOracle {
-    /// Implicit oracle over a hierarchy.
-    pub fn implicit(h: Hierarchy) -> DistanceOracle {
-        DistanceOracle::Implicit(h)
-    }
-
-    /// Materialize the full distance matrix of a hierarchy.
-    pub fn explicit(h: &Hierarchy) -> DistanceOracle {
-        let n = h.n_pes();
-        let mut matrix = vec![0 as Weight; n * n];
-        for p in 0..n as u32 {
-            for q in 0..n as u32 {
-                matrix[p as usize * n + q as usize] = h.distance(p, q);
+    /// Fold each group of `g` consecutive PEs into one coarse PE. The group
+    /// is consumed from the innermost level outward: a level's fan-out is
+    /// divided when `g` divides it, and a whole level is swallowed (its
+    /// distance becomes unobservable) when `g` is a multiple of its fan-out
+    /// — so `3:16:2` folds by 3 into `16:2`, and `6:16` folds by 3 into
+    /// `2:16`. `None` when the group straddles a level boundary unevenly
+    /// (e.g. `g = 4` on `6:16`) or the machine has no structure left.
+    ///
+    /// The fold is *fully* exact: `D_coarse(p, q) = D(g·p + b, g·q + b')`
+    /// for all `b, b'` whenever `p ≠ q`, because members of a group always
+    /// share every subsystem that distinguishes distinct coarse PEs
+    /// (ultrametricity).
+    pub fn fold_groups(&self, g: u64) -> Option<Hierarchy> {
+        if g == 0 {
+            return None;
+        }
+        let mut s = self.s.clone();
+        let mut d = self.d.clone();
+        let mut rem = g;
+        while rem > 1 {
+            let &a1 = s.first()?;
+            if a1 % rem == 0 {
+                s[0] = a1 / rem;
+                rem = 1;
+            } else if rem % a1 == 0 {
+                rem /= a1;
+                s.remove(0);
+                d.remove(0);
+            } else {
+                return None; // group straddles a level boundary unevenly
+            }
+            // drop levels folded down to fan-out 1 (their distance became
+            // unobservable — coarse PEs are single units there)
+            while s.len() > 1 && s[0] == 1 {
+                s.remove(0);
+                d.remove(0);
             }
         }
-        DistanceOracle::Explicit { n, matrix }
+        if s.is_empty() {
+            return None; // would need more PEs than the machine has
+        }
+        Hierarchy::new(s, d).ok()
+    }
+}
+
+impl Topology for Hierarchy {
+    fn n_pes(&self) -> usize {
+        Hierarchy::n_pes(self)
     }
 
-    /// Distance between PEs `p` and `q`.
     #[inline]
-    pub fn distance(&self, p: u32, q: u32) -> Weight {
-        match self {
-            DistanceOracle::Implicit(h) => h.distance(p, q),
-            DistanceOracle::Explicit { n, matrix } => matrix[p as usize * n + q as usize],
-        }
+    fn distance(&self, p: u32, q: u32) -> Weight {
+        Hierarchy::distance(self, p, q)
     }
 
-    /// Number of PEs covered.
-    pub fn n_pes(&self) -> usize {
-        match self {
-            DistanceOracle::Implicit(h) => h.n_pes(),
-            DistanceOracle::Explicit { n, .. } => *n,
-        }
+    fn fold_group(&self) -> Option<u64> {
+        // the innermost non-trivial fan-out decides: halve when even, fold
+        // the whole level when odd (the non-halving 3:16:k case)
+        let a = self.s.iter().copied().find(|&a| a > 1)?;
+        Some(if a % 2 == 0 { 2 } else { a })
     }
 
-    /// Bytes of memory held (the scalability experiment's reported metric).
-    pub fn memory_bytes(&self) -> usize {
-        match self {
-            DistanceOracle::Implicit(h) => (h.s.len() + h.d.len() + h.ext.len()) * 8,
-            DistanceOracle::Explicit { matrix, .. } => matrix.len() * std::mem::size_of::<Weight>(),
-        }
+    fn fold(&self, group: u64) -> Option<Hierarchy> {
+        self.fold_groups(group)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        (self.s.len() + self.d.len() + self.ext.len()) * 8
+    }
+
+    fn kind(&self) -> &'static str {
+        "hier"
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::topology::Machine;
 
     fn h_4_16_2() -> Hierarchy {
         Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap()
@@ -227,8 +256,8 @@ mod tests {
     #[test]
     fn explicit_matches_implicit() {
         let h = Hierarchy::new(vec![2, 3, 2], vec![1, 7, 42]).unwrap();
-        let imp = DistanceOracle::implicit(h.clone());
-        let exp = DistanceOracle::explicit(&h);
+        let imp = Machine::implicit(h.clone());
+        let exp = Machine::explicit(&h);
         assert_eq!(imp.n_pes(), 12);
         for p in 0..12u32 {
             for q in 0..12u32 {
@@ -248,6 +277,16 @@ mod tests {
     }
 
     #[test]
+    fn rejects_decreasing_distances() {
+        // inner levels must be at most as distant as outer ones
+        let err = Hierarchy::new(vec![4, 16], vec![10, 1]).unwrap_err();
+        assert!(err.contains("non-decreasing"), "{err}");
+        assert!(Hierarchy::parse("4:16:2", "1:100:10").is_err());
+        // equal distances stay allowed (collapsible levels; see infer)
+        assert!(Hierarchy::new(vec![2, 3], vec![5, 5]).is_ok());
+    }
+
+    #[test]
     fn single_level() {
         let h = Hierarchy::new(vec![8], vec![5]).unwrap();
         assert_eq!(h.distance(0, 7), 5);
@@ -261,5 +300,72 @@ mod tests {
         assert_eq!(h.subsystem_size(1), 4);
         assert_eq!(h.subsystem_size(2), 64);
         assert_eq!(h.subsystem_size(3), 128);
+    }
+
+    #[test]
+    fn fold_halves_innermost() {
+        let h = h_4_16_2();
+        let h1 = h.fold_groups(2).unwrap();
+        assert_eq!(h1.s, vec![2, 16, 2]);
+        assert_eq!(h1.d, vec![1, 10, 100]);
+        let h2 = h1.fold_groups(2).unwrap();
+        assert_eq!(h2.s, vec![16, 2]);
+        assert_eq!(h2.d, vec![10, 100]);
+        assert_eq!(h2.n_pes(), 32);
+    }
+
+    #[test]
+    fn fold_consumes_whole_odd_levels() {
+        // the non-halving case: 3:16:2 folds by 3 into 16:2
+        let h = Hierarchy::new(vec![3, 16, 2], vec![1, 10, 100]).unwrap();
+        assert_eq!(h.fold_group(), Some(3));
+        let f = h.fold_groups(3).unwrap();
+        assert_eq!(f.s, vec![16, 2]);
+        assert_eq!(f.d, vec![10, 100]);
+        // a group spanning level 1 entirely plus half of level 2
+        let f6 = Hierarchy::new(vec![3, 4], vec![1, 10]).unwrap().fold_groups(6).unwrap();
+        assert_eq!(f6.s, vec![2]);
+        assert_eq!(f6.d, vec![10]);
+        // straddling a boundary unevenly is rejected
+        assert!(Hierarchy::new(vec![6, 16], vec![1, 10]).unwrap().fold_groups(4).is_none());
+        assert!(Hierarchy::new(vec![3, 4], vec![1, 10]).unwrap().fold_groups(2).is_none());
+    }
+
+    #[test]
+    fn fold_to_single_pe_then_stops() {
+        let flat = Hierarchy::new(vec![2], vec![1]).unwrap();
+        let f1 = flat.fold_groups(2).unwrap();
+        assert_eq!(f1.n_pes(), 1);
+        assert_eq!(f1.fold_group(), None);
+        assert!(f1.fold_groups(2).is_none());
+    }
+
+    #[test]
+    fn folded_distances_are_fully_exact() {
+        // D_coarse(p, q) must equal D(g·p + b, g·q + b') for p != q, all b, b'
+        for (s, d, g) in [
+            (vec![4u64, 16, 2], vec![1u64, 10, 100], 2),
+            (vec![3, 16, 2], vec![1, 10, 100], 3),
+            (vec![6, 4], vec![2, 11], 3),
+        ] {
+            let h = Hierarchy::new(s, d).unwrap();
+            let hc = h.fold_groups(g).unwrap();
+            for p in 0..hc.n_pes() as u32 {
+                for q in 0..hc.n_pes() as u32 {
+                    if p == q {
+                        continue;
+                    }
+                    for b in 0..g as u32 {
+                        for b2 in 0..g as u32 {
+                            assert_eq!(
+                                hc.distance(p, q),
+                                h.distance(g as u32 * p + b, g as u32 * q + b2),
+                                "({p},{q}) fold mismatch"
+                            );
+                        }
+                    }
+                }
+            }
+        }
     }
 }

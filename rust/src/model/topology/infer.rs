@@ -15,9 +15,11 @@
 //!
 //! If the matrix is not ultrametric or the classes are not uniform, the
 //! inference reports a structured error instead of guessing — callers fall
-//! back to the explicit oracle.
+//! back to the explicit topology (grid/torus distances, for instance, are
+//! metric but never ultrametric, and correctly land in
+//! [`InferError::NotUltrametric`]).
 
-use super::hierarchy::Hierarchy;
+use super::{Hierarchy, Topology};
 use crate::graph::Weight;
 
 /// Union-find with path halving.
@@ -169,33 +171,20 @@ pub fn infer_hierarchy(n: usize, matrix: &[Weight]) -> Result<Hierarchy, InferEr
     Hierarchy::new(s, levels).map_err(InferError::Degenerate)
 }
 
-/// Convenience: infer from an explicit oracle (used by the CLI to accept
-/// raw distance matrices).
-pub fn infer_from_oracle(oracle: &super::hierarchy::DistanceOracle) -> Result<Hierarchy, InferError> {
-    let n = oracle.n_pes();
-    let mut m = vec![0 as Weight; n * n];
-    for p in 0..n as u32 {
-        for q in 0..n as u32 {
-            m[p as usize * n + q as usize] = oracle.distance(p, q);
-        }
-    }
-    infer_hierarchy(n, &m)
+/// Convenience: infer from any topology (used by the CLI to accept raw
+/// distance matrices, and to recognize hierarchies behind explicit forms).
+pub fn infer_from_topology(t: &(impl Topology + ?Sized)) -> Result<Hierarchy, InferError> {
+    let n = t.n_pes();
+    infer_hierarchy(n, &t.explicit_matrix())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mapping::hierarchy::DistanceOracle;
+    use crate::model::topology::{GridTopology, Machine};
 
     fn matrix_of(h: &Hierarchy) -> (usize, Vec<Weight>) {
-        let n = h.n_pes();
-        let mut m = vec![0; n * n];
-        for p in 0..n as u32 {
-            for q in 0..n as u32 {
-                m[p as usize * n + q as usize] = h.distance(p, q);
-            }
-        }
-        (n, m)
+        (h.n_pes(), h.explicit_matrix())
     }
 
     #[test]
@@ -215,10 +204,10 @@ mod tests {
     }
 
     #[test]
-    fn roundtrip_via_oracle() {
+    fn roundtrip_via_explicit_machine() {
         let h = Hierarchy::new(vec![4, 4, 4], vec![1, 10, 100]).unwrap();
-        let o = DistanceOracle::explicit(&h);
-        let inferred = infer_from_oracle(&o).unwrap();
+        let o = Machine::explicit(&h);
+        let inferred = infer_from_topology(&o).unwrap();
         assert_eq!(inferred, h);
     }
 
@@ -243,6 +232,9 @@ mod tests {
             2, 1, 0,
         ];
         assert!(matches!(infer_hierarchy(3, &m), Err(InferError::NotUltrametric(_))));
+        // grids are metric but not ultrametric: inference must refuse them
+        let g = GridTopology::new(vec![4, 2], 1).unwrap();
+        assert!(matches!(infer_from_topology(&g), Err(InferError::NotUltrametric(_))));
     }
 
     #[test]

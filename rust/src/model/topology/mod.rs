@@ -1,0 +1,405 @@
+//! The machine-topology subsystem: what the engines map *onto*.
+//!
+//! The paper targets "hierarchically organized communication systems"
+//! (§3.4's ultrametric `S`/`D` description), but the surrounding line of
+//! work maps the same sparse QAP onto grid and torus machines (Glantz et
+//! al., arXiv:1411.0921) and onto arbitrary-depth hierarchies (Faraj et
+//! al., arXiv:2001.07134). This module promotes the machine model from a
+//! two-variant oracle enum to a first-class subsystem:
+//!
+//! * [`Topology`] — the trait every machine model implements: `n_pes`,
+//!   `distance(p, q)`, explicit-matrix materialization, and the
+//!   [`Topology::fold`] hook the multilevel V-cycle uses to coarsen the
+//!   machine in lock-step with the communication graph.
+//! * [`Hierarchy`] — the paper's implicit ultrametric oracle (including the
+//!   division-free shift fast path), moved here from `mapping::hierarchy`.
+//! * [`GridTopology`] / [`TorusTopology`] — k-dimensional Manhattan /
+//!   wrap-around Manhattan distances (the Glantz et al. machine models).
+//! * [`ExplicitTopology`] — the memoized `n×n` matrix form. It is a
+//!   *universal wrapper* ([`ExplicitTopology::materialize`] accepts any
+//!   [`Topology`]), not a hierarchy-only parallel arm as before.
+//! * [`Machine`] — the concrete dispatch enum engines hold. Hot loops are
+//!   monomorphized per concrete topology through [`with_topology!`]: the
+//!   enum is matched **once per call**, never per edge (the PR 3 pattern).
+//!
+//! ## Fold semantics
+//!
+//! `fold(g)` merges each group of `g` consecutive PEs `{g·p, …, g·p+g−1}`
+//! into coarse PE `p`. Two exactness guarantees, tested in
+//! `tests/properties.rs`:
+//!
+//! * **Hierarchies** fold *fully* exactly: `D_coarse(p, q) =
+//!   D(g·p + b, g·q + b')` for all offsets `b, b'` and `p ≠ q` (the
+//!   ultrametric property). Non-halving groups are supported — `g` may
+//!   consume the whole innermost level (and recurse outward), so odd
+//!   fan-out machines like `3:16:k` coarsen exactly instead of bailing.
+//! * **Grids and tori** fold *representative*-exactly: `D_coarse(p, q) =
+//!   D(g·p + b, g·q + b)` for any common offset `b` (the innermost
+//!   dimension shrinks by `g` and its link weight scales by `g`). Mixed
+//!   offsets differ by at most `(g−1)·link`, the standard multilevel
+//!   approximation that per-level refinement absorbs.
+//!
+//! ## Machine grammar
+//!
+//! [`Machine::parse`] / [`Machine::spec`] round-trip the wire/CLI syntax:
+//!
+//! ```text
+//! hier:4:16:2@1:10:100     S = 4:16:2, D = 1:10:100
+//! hier:3:16:2              D defaults to 1:10:100:…
+//! grid:8x8@1               8×8 mesh, link weight 1 (default)
+//! torus:4x4x4@1            4×4×4 3-torus
+//! ```
+
+pub mod cartesian;
+pub mod explicit;
+pub mod hierarchy;
+pub mod infer;
+
+pub use cartesian::{GridTopology, TorusTopology};
+pub use explicit::ExplicitTopology;
+pub use hierarchy::Hierarchy;
+
+use crate::graph::Weight;
+
+/// A machine model: the distance side `D` of the sparse QAP.
+///
+/// Implementations answer point queries online; [`Self::explicit_matrix`]
+/// materializes the full matrix (the traditional representation that OOMs
+/// at `n = 2^17` in the paper's scalability study). [`Self::fold`] is the
+/// multilevel V-cycle's machine-coarsening hook; see the module docs for
+/// its exactness contract.
+pub trait Topology {
+    /// Total number of processing elements.
+    fn n_pes(&self) -> usize;
+
+    /// Distance between PEs `p` and `q` (0 iff `p == q`; symmetric).
+    fn distance(&self, p: u32, q: u32) -> Weight;
+
+    /// The natural group size for one V-cycle coarsening step: `2` where
+    /// the innermost structure halves, the whole innermost fan-out /
+    /// dimension where it is odd, `None` when the machine cannot coarsen
+    /// (single PE, or no structure to fold).
+    fn fold_group(&self) -> Option<u64>;
+
+    /// Merge each group of `group` consecutive PEs into one coarse PE.
+    /// `None` when the grouping does not align with the machine's structure
+    /// (see the module docs for when it does).
+    fn fold(&self, group: u64) -> Option<Self>
+    where
+        Self: Sized;
+
+    /// Materialize the full row-major `n×n` distance matrix.
+    fn explicit_matrix(&self) -> Vec<Weight> {
+        let n = self.n_pes();
+        let mut matrix = vec![0 as Weight; n * n];
+        for p in 0..n as u32 {
+            for q in 0..n as u32 {
+                matrix[p as usize * n + q as usize] = self.distance(p, q);
+            }
+        }
+        matrix
+    }
+
+    /// Bytes of memory held (the scalability experiment's reported metric).
+    fn memory_bytes(&self) -> usize;
+
+    /// Grammar tag (`"hier"`, `"grid"`, `"torus"`, `"explicit"`).
+    fn kind(&self) -> &'static str;
+}
+
+/// Dispatch a [`Machine`] to its concrete topology **once**, binding `$t`
+/// to the concrete `&impl Topology` inside `$body`. Every engine hot path
+/// goes through this macro so the inner loops are monomorphized per
+/// topology (one match per *call*, not per edge — the PR 3 pattern,
+/// extended from two oracle variants to the whole subsystem).
+macro_rules! with_topology {
+    ($machine:expr, $t:ident => $body:expr) => {
+        match $machine {
+            $crate::model::topology::Machine::Hier($t) => $body,
+            $crate::model::topology::Machine::Grid($t) => $body,
+            $crate::model::topology::Machine::Torus($t) => $body,
+            $crate::model::topology::Machine::Explicit($t) => $body,
+        }
+    };
+}
+pub(crate) use with_topology;
+
+/// The concrete machine model engines and sessions hold: one variant per
+/// topology implementation, dispatched once per call via [`with_topology!`].
+/// (This replaces the former two-variant `mapping::hierarchy` oracle enum,
+/// whose `Explicit` arm was hierarchy-only; the explicit form is now the
+/// universal [`ExplicitTopology`] wrapper.)
+#[derive(Debug, Clone, PartialEq)]
+pub enum Machine {
+    /// Ultrametric hierarchy, queried online (§3.4's implicit oracle).
+    Hier(Hierarchy),
+    /// k-dimensional mesh, Manhattan distance.
+    Grid(GridTopology),
+    /// k-dimensional torus, wrap-around Manhattan distance.
+    Torus(TorusTopology),
+    /// Memoized full matrix over any topology (O(1) query, O(n²) memory).
+    Explicit(ExplicitTopology),
+}
+
+impl Machine {
+    /// The paper's "implicit oracle": query the hierarchy online.
+    pub fn implicit(h: Hierarchy) -> Machine {
+        Machine::Hier(h)
+    }
+
+    /// Memoize any topology into its explicit matrix form — the universal
+    /// replacement for the former hierarchy-only explicit oracle arm.
+    pub fn explicit(t: &(impl Topology + ?Sized)) -> Machine {
+        Machine::Explicit(ExplicitTopology::materialize(t))
+    }
+
+    /// The underlying [`Hierarchy`], when this machine is one (used by the
+    /// `N_p` refiner's pair-skip rule, which needs ultrametric leaf groups).
+    pub fn hier(&self) -> Option<&Hierarchy> {
+        match self {
+            Machine::Hier(h) => Some(h),
+            _ => None,
+        }
+    }
+
+    /// Parse the machine grammar (see module docs): `hier:<S>[@<D>]`,
+    /// `grid:<AxBx…>[@link]`, `torus:<AxBx…>[@link]`.
+    pub fn parse(spec: &str) -> Result<Machine, String> {
+        let (kind, rest) = spec
+            .split_once(':')
+            .ok_or_else(|| format!("machine spec {spec:?} needs a kind prefix (hier:/grid:/torus:)"))?;
+        match kind {
+            "hier" => {
+                let (s, d) = match rest.split_once('@') {
+                    Some((s, d)) => (s.to_string(), d.to_string()),
+                    None => {
+                        let levels = rest.split(':').count();
+                        let d: Vec<String> =
+                            (0..levels).map(|i| 10u64.pow(i as u32).to_string()).collect();
+                        (rest.to_string(), d.join(":"))
+                    }
+                };
+                Ok(Machine::Hier(Hierarchy::parse(&s, &d)?))
+            }
+            "grid" => {
+                let (dims, link) = parse_dims(rest)?;
+                Ok(Machine::Grid(GridTopology::new(dims, link)?))
+            }
+            "torus" => {
+                let (dims, link) = parse_dims(rest)?;
+                Ok(Machine::Torus(TorusTopology::new(dims, link)?))
+            }
+            other => Err(format!("unknown machine kind {other:?} (want hier/grid/torus)")),
+        }
+    }
+
+    /// Canonical grammar name (inverse of [`Self::parse`]). Errors for
+    /// machines the grammar cannot express (explicit matrices; folded
+    /// grids with anisotropic links) — those never cross the wire.
+    pub fn spec(&self) -> Result<String, String> {
+        match self {
+            Machine::Hier(h) => {
+                let s: Vec<String> = h.s.iter().map(|x| x.to_string()).collect();
+                let d: Vec<String> = h.d.iter().map(|x| x.to_string()).collect();
+                Ok(format!("hier:{}@{}", s.join(":"), d.join(":")))
+            }
+            Machine::Grid(g) => Ok(format!("grid:{}", fmt_dims(g.dims(), g.links())?)),
+            Machine::Torus(t) => Ok(format!("torus:{}", fmt_dims(t.dims(), t.links())?)),
+            Machine::Explicit(_) => {
+                Err("explicit-matrix machines have no grammar name".to_string())
+            }
+        }
+    }
+
+    /// Distance between PEs `p` and `q` (inline single-match dispatch; hot
+    /// loops should prefer [`with_topology!`] + a generic inner function).
+    #[inline]
+    pub fn distance(&self, p: u32, q: u32) -> Weight {
+        with_topology!(self, t => t.distance(p, q))
+    }
+
+    /// Number of PEs covered.
+    pub fn n_pes(&self) -> usize {
+        with_topology!(self, t => t.n_pes())
+    }
+
+    /// Bytes of memory held.
+    pub fn memory_bytes(&self) -> usize {
+        with_topology!(self, t => t.memory_bytes())
+    }
+
+    /// Grammar tag of the underlying topology.
+    pub fn kind(&self) -> &'static str {
+        with_topology!(self, t => t.kind())
+    }
+
+    /// Natural V-cycle coarsening group (see [`Topology::fold_group`]).
+    pub fn fold_group(&self) -> Option<u64> {
+        with_topology!(self, t => t.fold_group())
+    }
+
+    /// Fold groups of `group` consecutive PEs (see [`Topology::fold`]).
+    pub fn fold(&self, group: u64) -> Option<Machine> {
+        match self {
+            Machine::Hier(h) => h.fold(group).map(Machine::Hier),
+            Machine::Grid(g) => g.fold(group).map(Machine::Grid),
+            Machine::Torus(t) => t.fold(group).map(Machine::Torus),
+            Machine::Explicit(e) => e.fold(group).map(Machine::Explicit),
+        }
+    }
+}
+
+impl Topology for Machine {
+    fn n_pes(&self) -> usize {
+        Machine::n_pes(self)
+    }
+    fn distance(&self, p: u32, q: u32) -> Weight {
+        Machine::distance(self, p, q)
+    }
+    fn fold_group(&self) -> Option<u64> {
+        Machine::fold_group(self)
+    }
+    fn fold(&self, group: u64) -> Option<Machine> {
+        Machine::fold(self, group)
+    }
+    fn memory_bytes(&self) -> usize {
+        Machine::memory_bytes(self)
+    }
+    fn kind(&self) -> &'static str {
+        Machine::kind(self)
+    }
+}
+
+/// Parse `"8x8x4"` or `"8x8x4@3"` into (dims, link weight).
+fn parse_dims(s: &str) -> Result<(Vec<u64>, Weight), String> {
+    let (dims_s, link) = match s.split_once('@') {
+        Some((d, l)) => {
+            (d, l.parse::<Weight>().map_err(|e| format!("bad link weight {l:?}: {e}"))?)
+        }
+        None => (s, 1),
+    };
+    let dims = dims_s
+        .split('x')
+        .map(|t| t.parse::<u64>().map_err(|e| format!("bad dimension {t:?}: {e}")))
+        .collect::<Result<Vec<u64>, String>>()?;
+    Ok((dims, link))
+}
+
+/// Canonical `AxBxC@link` form; errors when the per-dimension links differ
+/// (a folded machine — never named on the wire).
+fn fmt_dims(dims: &[u64], links: &[Weight]) -> Result<String, String> {
+    let link = links[0];
+    if links.iter().any(|&l| l != link) {
+        return Err("anisotropic (folded) links have no grammar name".to_string());
+    }
+    let d: Vec<String> = dims.iter().map(|x| x.to_string()).collect();
+    Ok(format!("{}@{link}", d.join("x")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_roundtrip_canonical_forms() {
+        for spec in [
+            "hier:4:16:2@1:10:100",
+            "hier:3:16:2@1:10:100",
+            "hier:7@3",
+            "grid:8x8@1",
+            "grid:16@2",
+            "torus:4x4x4@1",
+            "torus:6x10@5",
+        ] {
+            let m = Machine::parse(spec).unwrap();
+            assert_eq!(m.spec().unwrap(), spec, "roundtrip {spec}");
+            // name() output parses back to an equal machine (idempotence)
+            let again = Machine::parse(&m.spec().unwrap()).unwrap();
+            assert_eq!(again, m, "{spec}");
+        }
+    }
+
+    #[test]
+    fn grammar_defaults() {
+        // hier without @D defaults to powers of ten
+        let m = Machine::parse("hier:4:16:2").unwrap();
+        assert_eq!(m.spec().unwrap(), "hier:4:16:2@1:10:100");
+        // grid/torus without @link default to link 1
+        assert_eq!(Machine::parse("grid:8x8").unwrap().spec().unwrap(), "grid:8x8@1");
+        assert_eq!(Machine::parse("torus:4x4").unwrap().spec().unwrap(), "torus:4x4@1");
+    }
+
+    #[test]
+    fn grammar_sizes() {
+        assert_eq!(Machine::parse("hier:4:16:2@1:10:100").unwrap().n_pes(), 128);
+        assert_eq!(Machine::parse("grid:8x8@1").unwrap().n_pes(), 64);
+        assert_eq!(Machine::parse("torus:4x4x4@1").unwrap().n_pes(), 64);
+        assert_eq!(Machine::parse("grid:77@1").unwrap().n_pes(), 77);
+    }
+
+    #[test]
+    fn grammar_rejects_malformed() {
+        for bad in [
+            "",
+            "hier",
+            "grid",
+            "mesh:4x4",
+            "hier:@1",
+            "hier:4:x@1:10",
+            "hier:4:16@1",     // S/D length mismatch
+            "hier:4:16@10:1",  // D decreasing
+            "grid:8y8@1",
+            "grid:8x0@1",
+            "grid:8x8@x",
+            "torus:@1",
+            "torus:4xx4",
+        ] {
+            assert!(Machine::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn explicit_machines_have_no_spec() {
+        let h = Hierarchy::new(vec![2, 2], vec![1, 10]).unwrap();
+        let e = Machine::explicit(&h);
+        assert!(e.spec().is_err());
+        assert_eq!(e.kind(), "explicit");
+        assert_eq!(e.n_pes(), 4);
+        assert_eq!(e.distance(0, 3), 10);
+    }
+
+    #[test]
+    fn machine_fold_dispatches_per_topology() {
+        let hier = Machine::parse("hier:4:16:2@1:10:100").unwrap();
+        assert_eq!(hier.fold_group(), Some(2));
+        assert_eq!(hier.fold(2).unwrap().n_pes(), 64);
+
+        let odd = Machine::parse("hier:3:16:2@1:10:100").unwrap();
+        assert_eq!(odd.fold_group(), Some(3));
+        let folded = odd.fold(3).unwrap();
+        assert_eq!(folded.n_pes(), 32);
+        assert_eq!(folded.spec().unwrap(), "hier:16:2@10:100");
+
+        let grid = Machine::parse("grid:8x8@1").unwrap();
+        assert_eq!(grid.fold_group(), Some(2));
+        assert_eq!(grid.fold(2).unwrap().n_pes(), 32);
+
+        let torus = Machine::parse("torus:4x4x4@1").unwrap();
+        assert_eq!(torus.fold(4).unwrap().n_pes(), 16);
+    }
+
+    #[test]
+    fn implicit_and_explicit_constructors_agree() {
+        for spec in ["hier:2:3:2@1:7:42", "grid:3x5@2", "torus:5x4@3"] {
+            let m = Machine::parse(spec).unwrap();
+            let e = Machine::explicit(&m);
+            let n = m.n_pes() as u32;
+            for p in 0..n {
+                for q in 0..n {
+                    assert_eq!(m.distance(p, q), e.distance(p, q), "{spec} ({p},{q})");
+                }
+            }
+            assert!(e.memory_bytes() > m.memory_bytes(), "{spec}");
+        }
+    }
+}

@@ -126,6 +126,93 @@ pub fn coarsen_halving(g: &Graph, rng: &mut Rng) -> Option<Level> {
     Some(level)
 }
 
+/// Heavy-edge *grouping*: cluster exactly `group` vertices per coarse
+/// vertex, generalizing [`coarsen_halving`] beyond pairs. Seeds are visited
+/// in random order; each cluster greedily absorbs the unassigned candidate
+/// with the heaviest total connection to the cluster so far (ties: lowest
+/// id), and tops up from the unassigned pool in id order when the frontier
+/// runs dry (the zero-affinity completion, as in the halving case). The
+/// coarse graph has exactly `n / group` vertices — the invariant the
+/// multilevel V-cycle's machine folding relies on, now for *any* fold
+/// group (odd fan-out machines like `3:16:k` coarsen in triples).
+/// Deterministic for a given RNG state. Returns `None` when `group` does
+/// not divide `n` (or `n < group`); `group == 2` delegates to
+/// [`coarsen_halving`], bit-for-bit.
+pub fn coarsen_groups(g: &Graph, group: usize, rng: &mut Rng) -> Option<Level> {
+    let n = g.n();
+    if group < 2 || n < group || n % group != 0 {
+        return None;
+    }
+    if group == 2 {
+        return coarsen_halving(g, rng);
+    }
+    let mut map = vec![u32::MAX; n];
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    // dense affinity scratch: candidate vertex -> weight to current cluster,
+    // plus the insertion-ordered touched list (deterministic iteration)
+    let mut affinity = vec![0u64; n];
+    let mut touched: Vec<u32> = Vec::new();
+    let mut next_fill = 0usize; // id-order pool pointer for the completion
+    let mut cluster = 0u32;
+    for &seed in &order {
+        if map[seed as usize] != u32::MAX {
+            continue;
+        }
+        map[seed as usize] = cluster;
+        let mut members = 1usize;
+        let mut frontier = seed;
+        loop {
+            for (u, w) in g.edges(frontier) {
+                if map[u as usize] == u32::MAX {
+                    if affinity[u as usize] == 0 {
+                        touched.push(u);
+                    }
+                    affinity[u as usize] += w;
+                }
+            }
+            if members == group {
+                break;
+            }
+            // best candidate: max affinity, ties to the lowest id
+            let mut best: Option<(u32, u64)> = None;
+            for &u in &touched {
+                if map[u as usize] != u32::MAX {
+                    continue; // claimed by this very cluster meanwhile
+                }
+                let w = affinity[u as usize];
+                let better = match best {
+                    None => true,
+                    Some((bu, bw)) => w > bw || (w == bw && u < bu),
+                };
+                if better {
+                    best = Some((u, w));
+                }
+            }
+            frontier = match best {
+                Some((u, _)) => u,
+                None => {
+                    while next_fill < n && map[next_fill] != u32::MAX {
+                        next_fill += 1;
+                    }
+                    debug_assert!(next_fill < n, "n % group == 0 leaves enough fill vertices");
+                    next_fill as u32
+                }
+            };
+            map[frontier as usize] = cluster;
+            members += 1;
+        }
+        for &u in &touched {
+            affinity[u as usize] = 0;
+        }
+        touched.clear();
+        cluster += 1;
+    }
+    let coarse = contract(g, &map, cluster as usize);
+    debug_assert_eq!(coarse.n(), n / group);
+    Some(Level { coarse, map })
+}
+
 /// Coarsen until at most `limit` vertices remain or the matching stalls.
 /// Returns the levels from finest to coarsest (empty if `g` is small).
 pub fn coarsen_to(g: &Graph, limit: usize, rng: &mut Rng) -> Vec<Level> {
@@ -243,6 +330,64 @@ mod tests {
         let level = coarsen_halving(&g, &mut rng).unwrap();
         assert_eq!(level.coarse.n(), 8);
         assert_eq!(level.coarse.validate(), Ok(()));
+    }
+
+    #[test]
+    fn grouping_is_exact_for_any_divisor() {
+        let g = grid2d(6, 6); // 36 vertices
+        for group in [2usize, 3, 4, 6] {
+            let mut rng = Rng::new(10 + group as u64);
+            let level = coarsen_groups(&g, group, &mut rng).unwrap();
+            assert_eq!(level.coarse.n(), 36 / group, "group {group}");
+            assert_eq!(level.coarse.total_node_weight(), 36, "group {group}");
+            assert_eq!(level.coarse.validate(), Ok(()), "group {group}");
+            let mut counts = vec![0usize; level.coarse.n()];
+            for &c in &level.map {
+                counts[c as usize] += 1;
+            }
+            assert!(counts.iter().all(|&c| c == group), "group {group}: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn grouping_of_two_is_halving_bit_for_bit() {
+        let g = grid2d(8, 8);
+        let a = coarsen_groups(&g, 2, &mut Rng::new(77)).unwrap();
+        let b = coarsen_halving(&g, &mut Rng::new(77)).unwrap();
+        assert_eq!(a.map, b.map);
+        assert_eq!(a.coarse, b.coarse);
+    }
+
+    #[test]
+    fn grouping_handles_edgeless_and_star() {
+        // edgeless: pure pool completion, id-order triples
+        let g = from_edges(9, &[]);
+        let level = coarsen_groups(&g, 3, &mut Rng::new(12)).unwrap();
+        assert_eq!(level.coarse.n(), 3);
+        assert_eq!(level.coarse.m(), 0);
+        // star: the hub cluster absorbs leaves, leftovers pool-fill
+        let edges: Vec<(u32, u32, u64)> = (1..15u32).map(|i| (0, i, 1)).collect();
+        let star = from_edges(15, &edges);
+        let level = coarsen_groups(&star, 3, &mut Rng::new(13)).unwrap();
+        assert_eq!(level.coarse.n(), 5);
+        assert_eq!(level.coarse.validate(), Ok(()));
+    }
+
+    #[test]
+    fn grouping_rejects_non_divisors() {
+        let g = from_edges(10, &[]);
+        let mut rng = Rng::new(14);
+        assert!(coarsen_groups(&g, 3, &mut rng).is_none());
+        assert!(coarsen_groups(&g, 20, &mut rng).is_none());
+        assert!(coarsen_groups(&g, 1, &mut rng).is_none());
+    }
+
+    #[test]
+    fn grouping_is_deterministic() {
+        let g = grid2d(6, 6);
+        let a = coarsen_groups(&g, 3, &mut Rng::new(15)).unwrap();
+        let b = coarsen_groups(&g, 3, &mut Rng::new(15)).unwrap();
+        assert_eq!(a.map, b.map);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! entries).
 
 use crate::graph::{Graph, NodeId};
-use crate::mapping::DistanceOracle;
+use crate::mapping::Machine;
 
 /// Dense symmetric communication matrix, zero diagonal, padded to
 /// `size >= comm.n()`. Row-major `size * size`.
@@ -25,7 +25,7 @@ pub fn densify_comm(comm: &Graph, size: usize) -> Vec<f32> {
 
 /// Dense symmetric distance matrix padded to `size >= oracle.n_pes()`.
 /// Padding PEs sit at distance 0 from everything.
-pub fn densify_distance(oracle: &DistanceOracle, size: usize) -> Vec<f32> {
+pub fn densify_distance(oracle: &Machine, size: usize) -> Vec<f32> {
     let n = oracle.n_pes();
     assert!(size >= n);
     let mut d = vec![0f32; size * size];
@@ -66,7 +66,7 @@ mod tests {
     #[test]
     fn distance_dense_matches_oracle() {
         let h = Hierarchy::new(vec![2, 2], vec![1, 10]).unwrap();
-        let o = DistanceOracle::implicit(h);
+        let o = Machine::implicit(h);
         let d = densify_distance(&o, 6);
         assert_eq!(d[0 * 6 + 1], 1.0);
         assert_eq!(d[0 * 6 + 2], 10.0);

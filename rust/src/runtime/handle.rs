@@ -9,7 +9,7 @@
 
 use super::QapRuntime;
 use crate::graph::Graph;
-use crate::mapping::{DistanceOracle, Mapping};
+use crate::mapping::{Machine, Mapping};
 use anyhow::{anyhow, Result};
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Sender};
@@ -17,19 +17,19 @@ use std::sync::mpsc::{channel, Sender};
 enum Request {
     Objective {
         comm: Graph,
-        oracle: DistanceOracle,
+        oracle: Machine,
         mapping: Mapping,
         reply: Sender<Result<Option<f32>>>,
     },
     ObjectiveBatch {
         comm: Graph,
-        oracle: DistanceOracle,
+        oracle: Machine,
         mappings: Vec<Mapping>,
         reply: Sender<Result<Option<Vec<f32>>>>,
     },
     SwapGains {
         comm: Graph,
-        oracle: DistanceOracle,
+        oracle: Machine,
         mapping: Mapping,
         pairs: Vec<(u32, u32)>,
         reply: Sender<Result<Option<Vec<f32>>>>,
@@ -89,7 +89,7 @@ impl RuntimeHandle {
     pub fn objective(
         &self,
         comm: &Graph,
-        oracle: &DistanceOracle,
+        oracle: &Machine,
         mapping: &Mapping,
     ) -> Result<Option<f32>> {
         let (reply, rx) = channel();
@@ -108,7 +108,7 @@ impl RuntimeHandle {
     pub fn objective_batch(
         &self,
         comm: &Graph,
-        oracle: &DistanceOracle,
+        oracle: &Machine,
         mappings: &[Mapping],
     ) -> Result<Option<Vec<f32>>> {
         let (reply, rx) = channel();
@@ -127,7 +127,7 @@ impl RuntimeHandle {
     pub fn swap_gains(
         &self,
         comm: &Graph,
-        oracle: &DistanceOracle,
+        oracle: &Machine,
         mapping: &Mapping,
         pairs: &[(u32, u32)],
     ) -> Result<Option<Vec<f32>>> {

@@ -15,7 +15,7 @@ pub mod densify;
 pub mod handle;
 
 use crate::graph::Graph;
-use crate::mapping::{DistanceOracle, Mapping};
+use crate::mapping::{Machine, Mapping};
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -93,7 +93,7 @@ impl QapRuntime {
     pub fn objective(
         &self,
         comm: &Graph,
-        oracle: &DistanceOracle,
+        oracle: &Machine,
         mapping: &Mapping,
     ) -> Result<Option<f32>> {
         let n = comm.n();
@@ -117,7 +117,7 @@ impl QapRuntime {
     pub fn objective_batch(
         &self,
         comm: &Graph,
-        oracle: &DistanceOracle,
+        oracle: &Machine,
         mappings: &[Mapping],
     ) -> Result<Option<Vec<f32>>> {
         let n = comm.n();
@@ -154,7 +154,7 @@ impl QapRuntime {
     pub fn swap_gains(
         &self,
         comm: &Graph,
-        oracle: &DistanceOracle,
+        oracle: &Machine,
         mapping: &Mapping,
         pairs: &[(u32, u32)],
     ) -> Result<Option<Vec<f32>>> {

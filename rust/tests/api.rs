@@ -5,12 +5,11 @@
 //! per-level monotonicity, bit-identical trajectories for a fixed seed).
 
 use qapmap::api::{
-    flat_fallback_warning_count, hierarchy_for, MapJob, MapJobBuilder, MapSession, OracleMode,
-    VerifyPolicy,
+    resolve_machine, MapJob, MapJobBuilder, MapSession, OracleMode, VerifyPolicy,
 };
 use qapmap::gen::random_geometric_graph;
 use qapmap::mapping::algorithms::{AlgorithmSpec, GainMode};
-use qapmap::mapping::{DistanceOracle, Hierarchy};
+use qapmap::mapping::{Hierarchy, Machine};
 use qapmap::util::Rng;
 
 fn instance(n: usize, seed: u64) -> (qapmap::graph::Graph, Hierarchy) {
@@ -274,7 +273,8 @@ fn job_accessors_and_report_shape() {
         .build()
         .unwrap();
     assert_eq!(job.comm().n(), 128);
-    assert_eq!(job.hierarchy().n_pes(), 128);
+    assert_eq!(job.machine().n_pes(), 128);
+    assert_eq!(job.machine().kind(), "hier");
     assert_eq!(job.algorithm().name(), "topdown+Nc2");
     assert_eq!(job.oracle_mode(), OracleMode::Implicit);
     assert_eq!(job.verify_policy(), VerifyPolicy::Skip);
@@ -305,32 +305,50 @@ fn request_translation_preserves_session_results() {
 }
 
 #[test]
-fn hierarchy_for_matches_cli_semantics() {
-    // divisible by 64: the default 4:16:(n/64) machine
-    let h = hierarchy_for(256, "", "").unwrap();
-    assert_eq!(h.n_pes(), 256);
-    assert_eq!(h.s, vec![4, 16, 4]);
-    // not divisible: flat fallback instead of an error
-    let h = hierarchy_for(77, "", "").unwrap();
-    assert_eq!(h.n_pes(), 77);
-    assert_eq!(h.levels(), 1);
-    // explicit hierarchy must still match the instance size
-    assert!(hierarchy_for(77, "4:16:2", "1:10:100").is_err());
+fn resolve_machine_matches_cli_semantics() {
+    // divisible by 64: the default 4:16:(n/64) machine, reported as inferred
+    let (m, r) = resolve_machine(256, "", "", "").unwrap();
+    assert_eq!(m.n_pes(), 256);
+    assert_eq!(m.hier().unwrap().s, vec![4, 16, 4]);
+    assert!(r.inferred && !r.partial_top_folded);
+    // the full machine grammar wins over --S/--D
+    let (m, r) = resolve_machine(64, "torus:4x4x4@1", "", "").unwrap();
+    assert_eq!(m.kind(), "torus");
+    assert!(!r.inferred);
+    // explicit machines must still match the instance size
+    assert!(resolve_machine(77, "", "4:16:2", "1:10:100").is_err());
+    assert!(resolve_machine(77, "grid:8x8@1", "", "").is_err());
 }
 
 #[test]
-fn flat_fallback_warns_exactly_once_per_process() {
-    // the fallback used to print once per repetition; now the warning is
-    // gated by a process-wide Once — hammer it and count
-    for _ in 0..5 {
-        hierarchy_for(100, "", "").unwrap();
-        hierarchy_for(77, "", "").unwrap();
+fn no_flat_fallback_remains_for_awkward_sizes() {
+    // the old behaviour silently degraded n % 64 != 0 to a flat machine
+    // (every mapping cost-equal) and warned once per process; now the
+    // default template folds, the resolution says so, and distances are
+    // never uniform
+    for n in [100usize, 77, 97, 130] {
+        let (m, r) = resolve_machine(n, "", "", "").unwrap();
+        assert_eq!(m.n_pes(), n, "n={n}");
+        assert!(r.inferred && r.partial_top_folded, "n={n}: {r:?}");
+        // not flat: some pair must be strictly farther than some other
+        let near = m.distance(0, 1);
+        let far = m.distance(0, n as u32 - 1);
+        assert!(far > near, "n={n}: flat machine leaked through ({near} vs {far})");
     }
-    assert_eq!(
-        flat_fallback_warning_count(),
-        1,
-        "the flat-hierarchy warning must be emitted exactly once"
-    );
+    // and a job built from the resolution carries it onto the report
+    let mut rng = Rng::new(40);
+    let g = random_geometric_graph(100, &mut rng);
+    let (m, r) = resolve_machine(100, "", "", "").unwrap();
+    let job = MapJobBuilder::for_machine(g, m)
+        .machine_resolution(r.clone())
+        .algorithm_name("mm+Nc1")
+        .unwrap()
+        .build()
+        .unwrap();
+    let report = MapSession::new(job).run();
+    assert_eq!(report.machine, r);
+    assert!(report.machine.partial_top_folded);
+    report.mapping.validate().unwrap();
 }
 
 #[test]
@@ -370,7 +388,7 @@ fn ml_vcycle_projection_valid_monotone_and_reported() {
         assert_eq!(rep.improved, rep.levels.iter().map(|l| l.improved).sum::<u64>());
     }
     // the exact objective must match a from-scratch recompute
-    let oracle = DistanceOracle::implicit(h);
+    let oracle = Machine::implicit(h);
     assert_eq!(
         report.objective,
         qapmap::mapping::objective(&g, &oracle, &report.mapping)
@@ -445,4 +463,113 @@ fn ml_levels_knob_bounds_depth() {
     // exactly one coarsening level + the finest pass
     assert_eq!(report.best().levels.len(), 2);
     report.mapping.validate().unwrap();
+}
+
+#[test]
+fn torus_job_runs_end_to_end_with_folds_and_wire_roundtrip() {
+    // acceptance: a torus:4x4x4@1 job runs construct -> ml: V-cycle with
+    // real folds -> gc refine, implicit and explicit oracles produce
+    // bit-identical objectives, and the job survives the wire round-trip
+    let mut rng = Rng::new(50);
+    let g = random_geometric_graph(64, &mut rng);
+    let mk = |mode: OracleMode| {
+        MapJobBuilder::for_machine(g.clone(), Machine::parse("torus:4x4x4@1").unwrap())
+            .algorithm_name("ml:topdown+gc:nc2")
+            .unwrap()
+            .oracle_mode(mode)
+            .coarsen_limit(8)
+            .seed(51)
+            .build()
+            .unwrap()
+    };
+    let implicit = MapSession::new(mk(OracleMode::Implicit)).run();
+    let explicit = MapSession::new(mk(OracleMode::Explicit)).run();
+    implicit.mapping.validate().unwrap();
+    assert_eq!(implicit.objective, explicit.objective);
+    assert_eq!(implicit.mapping.sigma, explicit.mapping.sigma);
+    // real folds happened: more than just the finest level is reported
+    assert!(implicit.best().levels.len() > 1, "{:?}", implicit.best().levels);
+    assert!(implicit.objective <= implicit.objective_initial);
+    let oracle = Machine::parse("torus:4x4x4@1").unwrap();
+    assert_eq!(
+        implicit.objective,
+        qapmap::mapping::objective(&g, &oracle, &implicit.mapping)
+    );
+
+    // wire round-trip: the torus spec and ml knobs survive, and the
+    // re-translated job reproduces the same result
+    let job = mk(OracleMode::Implicit);
+    let req = job.to_request(7);
+    let mut buf = Vec::new();
+    qapmap::coordinator::wire::write_request(&mut buf, &req).unwrap();
+    let back = qapmap::coordinator::wire::read_request(&mut std::io::BufReader::new(&buf[..]))
+        .unwrap();
+    assert_eq!(back.machine.spec().unwrap(), "torus:4x4x4@1");
+    assert_eq!(back.coarsen_limit, Some(8));
+    let report = MapSession::new(MapJob::from_request(&back).unwrap()).run();
+    assert_eq!(report.objective, implicit.objective);
+    assert_eq!(report.mapping.sigma, implicit.mapping.sigma);
+}
+
+#[test]
+fn odd_fanout_hierarchy_job_runs_end_to_end() {
+    // acceptance: hier:3:16:2 (96 PEs, odd innermost fan-out) coarsens
+    // with a non-halving fold instead of bailing out of the V-cycle
+    let mut rng = Rng::new(52);
+    let g = random_geometric_graph(96, &mut rng);
+    let mk = |mode: OracleMode| {
+        MapJobBuilder::for_machine(g.clone(), Machine::parse("hier:3:16:2@1:10:100").unwrap())
+            .algorithm_name("ml:mm+gc:nc2")
+            .unwrap()
+            .oracle_mode(mode)
+            .coarsen_limit(8)
+            .seed(53)
+            .build()
+            .unwrap()
+    };
+    let implicit = MapSession::new(mk(OracleMode::Implicit)).run();
+    let explicit = MapSession::new(mk(OracleMode::Explicit)).run();
+    implicit.mapping.validate().unwrap();
+    assert_eq!(implicit.objective, explicit.objective);
+    assert_eq!(implicit.mapping.sigma, explicit.mapping.sigma);
+    // the V-cycle really folded: 96 -(:3)-> 32 -> 16 -> 8, then the finest
+    let sizes: Vec<usize> = implicit.best().levels.iter().map(|l| l.n).collect();
+    assert_eq!(sizes, vec![8, 16, 32, 96]);
+    for l in &implicit.best().levels {
+        assert!(l.objective <= l.objective_initial);
+    }
+    // deterministic construction + gain cache: the whole job short-circuits
+    assert!(MapJob::is_deterministic(&mk(OracleMode::Implicit)));
+}
+
+#[test]
+fn grid_and_torus_sessions_are_deterministic() {
+    // gc and ml sessions stay bit-identical under grid and torus machines
+    let mut rng = Rng::new(54);
+    let g = random_geometric_graph(96, &mut rng);
+    for (spec, algo) in [
+        ("grid:12x8@1", "topdown+gc:nc2"),
+        ("grid:12x8@1", "ml:topdown+Nc2"),
+        ("torus:4x4x6@1", "ml:topdown+gc:nc1"),
+    ] {
+        let mk = || {
+            MapJobBuilder::for_machine(g.clone(), Machine::parse(spec).unwrap())
+                .algorithm_name(algo)
+                .unwrap()
+                .repetitions(2)
+                .coarsen_limit(8)
+                .seed(55)
+                .build()
+                .unwrap()
+        };
+        let a = MapSession::new(mk()).run();
+        let b = MapSession::new(mk()).run();
+        assert_eq!(a.mapping.sigma, b.mapping.sigma, "{spec}/{algo}");
+        assert_eq!(a.objective, b.objective, "{spec}/{algo}");
+        for (x, y) in a.reps.iter().zip(&b.reps) {
+            assert_eq!(x.objective, y.objective, "{spec}/{algo}");
+            assert_eq!(x.evaluated, y.evaluated, "{spec}/{algo}");
+        }
+        a.mapping.validate().unwrap();
+    }
 }

@@ -6,7 +6,7 @@
 use qapmap::api::{MapJobBuilder, MapReport, MapSession, OracleMode};
 use qapmap::gen;
 use qapmap::graph::Graph;
-use qapmap::mapping::{objective, DistanceOracle, Hierarchy};
+use qapmap::mapping::{objective, Hierarchy, Machine};
 use qapmap::model::{build_instance, comm_graph};
 use qapmap::partition::{partition_kway, PartitionConfig};
 use qapmap::util::Rng;
@@ -30,7 +30,7 @@ fn full_pipeline_all_families_all_algorithms() {
         let comm = build_instance(&app, 128, &mut rng);
         assert_eq!(comm.n(), 128, "{family}");
         let h = Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap();
-        let oracle = DistanceOracle::implicit(h.clone());
+        let oracle = Machine::implicit(h.clone());
         for algo in ["identity", "random", "mm", "gac", "rcb", "bottomup", "topdown", "topdown+Nc2"]
         {
             let r = run_algo(&comm, &h, algo, PartitionConfig::perfectly_balanced(), 5);

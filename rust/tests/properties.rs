@@ -7,14 +7,16 @@
 //! * local search is monotone and terminates
 //! * partitioner always returns exact block sizes (ε = 0)
 //! * contraction preserves inter-cluster weight (§3.1 parallel-edge rule)
-//! * implicit oracle == explicit matrix on random hierarchies
+//! * every topology (hierarchy / grid / torus) == its explicit matrix on
+//!   random machines, and machine folds are exact (fully exact for
+//!   hierarchies, representative-exact for grids/tori)
 //! * neighborhood nesting: N_C ⊆ N_C² ⊆ … (pair-set sizes monotone)
 
 use qapmap::gen::{gnp, random_geometric_graph};
 use qapmap::graph::{contract, Graph};
 use qapmap::mapping::objective::{Mapping, SwapEngine};
 use qapmap::mapping::refine::{nc_neighborhood, nc_pairs};
-use qapmap::mapping::{DistanceOracle, Hierarchy};
+use qapmap::mapping::{Hierarchy, Machine};
 use qapmap::partition::{partition_kway, PartitionConfig};
 use qapmap::util::Rng;
 
@@ -61,9 +63,9 @@ fn prop_swap_gain_equals_objective_delta() {
         let comm = random_comm(&mut rng, n);
         let h = random_hierarchy(&mut rng, n);
         let oracle = if rng.chance(0.5) {
-            DistanceOracle::implicit(h)
+            Machine::implicit(h)
         } else {
-            DistanceOracle::explicit(&h)
+            Machine::explicit(&h)
         };
         let mut eng = SwapEngine::new(&comm, &oracle, Mapping { sigma: rng.permutation(n) });
         for _ in 0..200 {
@@ -91,7 +93,7 @@ fn prop_local_search_monotone_and_terminates() {
         let n = 128;
         let comm = random_comm(&mut rng, n);
         let h = random_hierarchy(&mut rng, n);
-        let oracle = DistanceOracle::implicit(h);
+        let oracle = Machine::implicit(h);
         let mut eng = SwapEngine::new(&comm, &oracle, Mapping { sigma: rng.permutation(n) });
         let before = eng.objective();
         let d = 1 + rng.index(3) as u32;
@@ -145,14 +147,39 @@ fn prop_contraction_preserves_intercluster_weight() {
     }
 }
 
+/// Random grid or torus machine with `target_n` PEs (random factorization
+/// into 1..=3 dimensions, random link weight).
+fn random_lattice(rng: &mut Rng, target_n: usize) -> Machine {
+    let mut n = target_n as u64;
+    let mut dims = Vec::new();
+    while n > 1 && dims.len() < 2 {
+        let mut a = [2u64, 3, 4, 6, 8][rng.index(5)];
+        while n % a != 0 && a > 1 {
+            a -= 1;
+        }
+        if a <= 1 {
+            break;
+        }
+        dims.push(a);
+        n /= a;
+    }
+    if n > 1 {
+        dims.push(n);
+    }
+    let link = 1 + rng.next_bounded(5);
+    let spec: Vec<String> = dims.iter().map(|d| d.to_string()).collect();
+    let kind = if rng.chance(0.5) { "grid" } else { "torus" };
+    Machine::parse(&format!("{kind}:{}@{link}", spec.join("x"))).unwrap()
+}
+
 #[test]
 fn prop_oracles_agree() {
     for seed in 70..85u64 {
         let mut rng = Rng::new(seed);
         let n = 24 * (1 + rng.index(8)); // up to 192
         let h = random_hierarchy(&mut rng, n);
-        let imp = DistanceOracle::implicit(h.clone());
-        let exp = DistanceOracle::explicit(&h);
+        let imp = Machine::implicit(h.clone());
+        let exp = Machine::explicit(&h);
         for _ in 0..500 {
             let p = rng.index(n) as u32;
             let q = rng.index(n) as u32;
@@ -167,6 +194,101 @@ fn prop_oracles_agree() {
             assert_eq!(imp.distance(p, p), 0);
             assert_eq!(imp.distance(p, q), imp.distance(q, p));
             assert!(imp.distance(p, q) <= imp.distance(p, r).max(imp.distance(r, q)));
+        }
+    }
+}
+
+#[test]
+fn prop_every_topology_agrees_with_its_explicit_matrix() {
+    // the universal-wrapper contract: Machine::explicit(t) answers
+    // bit-for-bit like t, for every topology kind on random instances
+    for seed in 200..215u64 {
+        let mut rng = Rng::new(seed);
+        let n = 12 * (1 + rng.index(10)); // up to 120
+        let machines = [
+            Machine::implicit(random_hierarchy(&mut rng, n)),
+            random_lattice(&mut rng, n),
+        ];
+        for m in &machines {
+            let n = m.n_pes();
+            let e = Machine::explicit(m);
+            assert_eq!(e.n_pes(), n, "seed {seed} {}", m.kind());
+            for p in 0..n as u32 {
+                for q in 0..n as u32 {
+                    assert_eq!(
+                        m.distance(p, q),
+                        e.distance(p, q),
+                        "seed {seed} {} ({p},{q})",
+                        m.kind()
+                    );
+                }
+            }
+            // metric sanity for lattices too
+            for _ in 0..200 {
+                let p = rng.index(n) as u32;
+                let q = rng.index(n) as u32;
+                assert_eq!(m.distance(p, q), m.distance(q, p), "seed {seed}");
+                assert_eq!(m.distance(p, q) == 0, p == q, "seed {seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_machine_folds_are_exact() {
+    // run every machine down its natural fold chain; at each step check
+    // the exactness contract: hierarchies fully exact over all member
+    // offsets, grids/tori representative-exact (same offset both sides)
+    for seed in 215..230u64 {
+        let mut rng = Rng::new(seed);
+        let n = 12 * (1 + rng.index(10));
+        let machines = [
+            Machine::implicit(random_hierarchy(&mut rng, n)),
+            Machine::implicit(Hierarchy::new(vec![3, 16, 2], vec![1, 10, 100]).unwrap()),
+            random_lattice(&mut rng, n),
+        ];
+        for m in &machines {
+            let mut fine = m.clone();
+            while let Some(g) = fine.fold_group() {
+                let coarse = match fine.fold(g) {
+                    Some(c) => c,
+                    None => break,
+                };
+                let cn = coarse.n_pes() as u32;
+                assert_eq!(cn as u64 * g, fine.n_pes() as u64, "seed {seed} {}", m.kind());
+                let fully_exact = fine.hier().is_some();
+                for p in 0..cn {
+                    for q in 0..cn {
+                        if p == q {
+                            assert_eq!(coarse.distance(p, q), 0);
+                            continue;
+                        }
+                        for b in 0..g as u32 {
+                            // representative exactness (same offset)
+                            assert_eq!(
+                                coarse.distance(p, q),
+                                fine.distance(g as u32 * p + b, g as u32 * q + b),
+                                "seed {seed} {} ({p},{q},{b})",
+                                m.kind()
+                            );
+                            if fully_exact {
+                                // ultrametric: any offset pair agrees
+                                for b2 in 0..g as u32 {
+                                    assert_eq!(
+                                        coarse.distance(p, q),
+                                        fine.distance(g as u32 * p + b, g as u32 * q + b2),
+                                        "seed {seed} hier ({p},{q},{b},{b2})"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+                fine = coarse;
+            }
+            // the chain always terminates at a single PE or an unfoldable
+            // machine — never panics, never loops
+            assert!(fine.n_pes() >= 1);
         }
     }
 }
@@ -200,7 +322,7 @@ fn prop_vcycle_valid_and_monotone_on_random_instances() {
         let n = 128 << rng.index(2); // 128 or 256
         let comm = random_comm(&mut rng, n);
         let h = Hierarchy::new(vec![4, 16, (n / 64) as u64], vec![1, 10, 100]).unwrap();
-        let oracle = DistanceOracle::implicit(h.clone());
+        let machine = Machine::implicit(h);
         let d = 1 + rng.index(3) as u32;
         let spec = AlgorithmSpec::parse(&format!("ml:topdown+Nc{d}")).unwrap();
         let cfg = MlConfig { max_levels: 8, coarsen_limit: 16 };
@@ -208,8 +330,8 @@ fn prop_vcycle_valid_and_monotone_on_random_instances() {
         let mut rrng = rng.split();
         let (ml, out) = vcycle(
             &comm,
-            &h,
-            &oracle,
+            &machine,
+            &machine,
             &spec,
             &cfg,
             &PartitionConfig::perfectly_balanced(),
@@ -227,7 +349,7 @@ fn prop_vcycle_valid_and_monotone_on_random_instances() {
         assert!(out.objective <= out.objective_initial, "seed {seed}");
         assert_eq!(
             out.objective,
-            qapmap::mapping::objective(&comm, &oracle, &out.mapping),
+            qapmap::mapping::objective(&comm, &machine, &out.mapping),
             "seed {seed}: bookkeeping drift"
         );
     }
@@ -240,7 +362,7 @@ fn prop_constructions_always_bijective() {
         let mut rng = Rng::new(seed);
         let h = random_hierarchy(&mut rng, 96);
         let comm = random_comm(&mut rng, 96);
-        let oracle = DistanceOracle::implicit(h.clone());
+        let oracle = Machine::implicit(h.clone());
         let cfg = PartitionConfig::perfectly_balanced();
         for m in [
             construct::mueller_merbach(&comm, &oracle),

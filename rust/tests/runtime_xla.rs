@@ -7,7 +7,7 @@
 
 use qapmap::gen::random_geometric_graph;
 use qapmap::mapping::algorithms::AlgorithmSpec;
-use qapmap::mapping::{construct, objective, DistanceOracle, Hierarchy, Mapping};
+use qapmap::mapping::{construct, objective, Hierarchy, Machine, Mapping};
 use qapmap::runtime::{QapRuntime, RuntimeHandle, BATCH, GAIN_BATCH};
 use qapmap::util::Rng;
 
@@ -23,11 +23,11 @@ fn handle() -> Option<RuntimeHandle> {
     Some(RuntimeHandle::spawn_default().expect("loading artifacts"))
 }
 
-fn setup(n: usize, seed: u64) -> (qapmap::graph::Graph, Hierarchy, DistanceOracle) {
+fn setup(n: usize, seed: u64) -> (qapmap::graph::Graph, Hierarchy, Machine) {
     let mut rng = Rng::new(seed);
     let g = random_geometric_graph(n, &mut rng);
     let h = Hierarchy::new(vec![4, 16, (n / 64) as u64], vec![1, 10, 100]).unwrap();
-    let o = DistanceOracle::implicit(h.clone());
+    let o = Machine::implicit(h.clone());
     (g, h, o)
 }
 
@@ -59,7 +59,7 @@ fn xla_objective_with_padding() {
     let mut rng = Rng::new(5);
     let g = random_geometric_graph(100, &mut rng);
     let h = Hierarchy::new(vec![4, 25], vec![1, 10]).unwrap();
-    let o = DistanceOracle::implicit(h);
+    let o = Machine::implicit(h);
     let m = Mapping { sigma: rng.permutation(100) };
     let exact = objective(&g, &o, &m) as f32;
     let xla = rt.objective(&g, &o, &m).unwrap().unwrap();

@@ -4,7 +4,7 @@
 use qapmap::coordinator::{wire, Coordinator, MapRequest};
 use qapmap::gen::random_geometric_graph;
 use qapmap::mapping::algorithms::AlgorithmSpec;
-use qapmap::mapping::{Hierarchy, Mapping};
+use qapmap::mapping::{Hierarchy, Machine, Mapping};
 use qapmap::util::Rng;
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
@@ -16,11 +16,13 @@ fn request(id: u64, n: usize, algo: &str) -> MapRequest {
     MapRequest {
         id,
         comm: random_geometric_graph(n, &mut rng),
-        hierarchy: Hierarchy::new(vec![4, 16, (n / 64) as u64], vec![1, 10, 100]).unwrap(),
+        machine: Machine::Hier(Hierarchy::new(vec![4, 16, (n / 64) as u64], vec![1, 10, 100]).unwrap()),
         algorithm: AlgorithmSpec::parse(algo).unwrap(),
         repetitions: 1,
         seed: id,
         verify: false,
+        levels: None,
+        coarsen_limit: None,
     }
 }
 
