@@ -9,11 +9,16 @@
 //!    time and final `J`. Asserts (the PR's acceptance criterion) that the
 //!    gain cache evaluates strictly fewer pairs with no worse quality on
 //!    the `rgg` and `del` families.
+//! 4. **Unified move class vs phased**: `gc:nccyc<d>` (swaps and 3-cycle
+//!    rotations in one queue) against the phased `NcCyc<d>` (rotations
+//!    only after pair-swap convergence) at equal `d` — geomean `J`,
+//!    evaluations, wall time; asserts strictly fewer evaluations at no
+//!    worse quality on `rgg`/`del`.
 
 use qapmap::api::{MapJobBuilder, MapSession};
 use qapmap::bench::{full_mode, instance_suite, write_csv, Table, FAMILIES};
 use qapmap::mapping::objective::{Mapping, SwapEngine};
-use qapmap::mapping::refine::{nc_pairs, Cycle3, GainCacheNc, NcNeighborhood, Refiner};
+use qapmap::mapping::refine::{nc_pairs, Cycle3, GainCacheNc, NcCycle, NcNeighborhood, Refiner};
 use qapmap::mapping::{Hierarchy, Machine};
 use qapmap::partition::PartitionConfig;
 use qapmap::util::stats::geometric_mean;
@@ -204,4 +209,87 @@ fn main() {
     println!("move actually touches, where the shuffle re-walks the whole pair set every");
     println!("round and burns a full failure streak to stop — strictly fewer evaluations");
     println!("at equal or better J, and it ends at a provable local optimum of N_C^d.");
+
+    // ---- unified move class (gc:nccyc<d>) vs phased NcCyc<d> --------------
+    println!(
+        "\n== unified move-class queue (gc:nccyc<d>) vs phased NcCyc<d> \
+         (geomean over {starts} random starts) ==\n"
+    );
+    let table = Table::new(
+        &["instance", "d", "J unified", "J phased", "evals uni", "evals ph", "ms uni", "ms ph"],
+        &[14, 2, 11, 11, 11, 11, 8, 8],
+    );
+    let mut uni_lines = Vec::new();
+    for inst in &suite {
+        for d in [1u32, 3] {
+            // kept-alive refiners, exactly like the gc-vs-shuffle section:
+            // the pair/triangle incidence indexes are built once per
+            // (instance, d) and reused across starts
+            let mut uni = GainCacheNc::with_rotations(d);
+            let mut phased = NcCycle::new(d, 50);
+            let mut acc: [Vec<f64>; 6] = Default::default(); // ju jp eu ep tu tp
+            for s in 0..starts {
+                let start = Mapping { sigma: Rng::new(800 + s).permutation(inst.comm.n()) };
+                let mut e1 = SwapEngine::new(&inst.comm, &oracle, start.clone());
+                let t = Timer::start();
+                let s1 = uni.refine(&mut e1, &inst.comm, &mut Rng::new(1));
+                let t1 = t.secs();
+                let mut e2 = SwapEngine::new(&inst.comm, &oracle, start);
+                let t = Timer::start();
+                let s2 = phased.refine(&mut e2, &inst.comm, &mut Rng::new(810 + s));
+                let t2 = t.secs();
+                acc[0].push(e1.objective() as f64);
+                acc[1].push(e2.objective() as f64);
+                acc[2].push(s1.evaluated as f64);
+                acc[3].push(s2.evaluated as f64);
+                acc[4].push(t1.max(1e-9));
+                acc[5].push(t2.max(1e-9));
+            }
+            let [ju, jp, eu, ep, tu, tp] =
+                [0usize, 1, 2, 3, 4, 5].map(|i| geometric_mean(&acc[i]));
+            table.row(&[
+                inst.name.clone(),
+                d.to_string(),
+                format!("{ju:.0}"),
+                format!("{jp:.0}"),
+                format!("{eu:.0}"),
+                format!("{ep:.0}"),
+                format!("{:.2}", tu * 1e3),
+                format!("{:.2}", tp * 1e3),
+            ]);
+            uni_lines.push(format!(
+                "{},{d},{ju:.1},{jp:.1},{eu:.0},{ep:.0},{:.6},{:.6}",
+                inst.name, tu, tp
+            ));
+            // the acceptance criterion, asserted where it is measured: the
+            // single queue evaluates strictly fewer moves than the phased
+            // pair-then-rotation passes, at no worse quality (0.5% slack —
+            // the two end at different local optima of overlapping
+            // neighborhoods, so exact ordering is trajectory noise)
+            if inst.name.starts_with("rgg") || inst.name.starts_with("del") {
+                assert!(
+                    eu < ep,
+                    "{} d={d}: unified queue evaluated {eu:.0} moves, phased NcCyc only {ep:.0}",
+                    inst.name
+                );
+                assert!(
+                    ju <= jp * 1.005,
+                    "{} d={d}: unified queue J {ju:.1} worse than phased NcCyc's {jp:.1}",
+                    inst.name
+                );
+            }
+        }
+    }
+    write_csv(
+        "out/ablation_ls_nccyc.csv",
+        "instance,d,unified_objective_geomean,phased_objective_geomean,\
+         unified_evaluations_geomean,phased_evaluations_geomean,\
+         unified_secs_geomean,phased_secs_geomean",
+        &uni_lines,
+    );
+    println!("\nreading: one queue holds swaps and both rotation directions of every");
+    println!("triangle, so a high-gain rotation fires the moment it is best instead of");
+    println!("waiting out pair-swap convergence — strictly fewer evaluations than the");
+    println!("phased NcCyc at matching quality, ending at a provable local optimum of");
+    println!("the union neighborhood.");
 }

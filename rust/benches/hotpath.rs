@@ -3,8 +3,10 @@
 //! * swap gain: fast sparse O(d_u+d_v) vs slow dense O(n), ns/op
 //! * rotate3 gain: the same comparison for 3-cycle rotations
 //! * swap apply (Γ update) ns/op
-//! * gain-cache bucket-queue push / pop ns/op, and gain-cache vs shuffle
-//!   `N_C^d` evaluation counts on a fixed instance
+//! * gain-cache bucket-queue push / pop ns/op, gain-cache vs shuffle
+//!   `N_C^d` evaluation counts on a fixed instance, and the unified
+//!   move-class queue (`gc:nccyc`, queued rotations) vs the phased
+//!   `NcCyc` baseline — wall time, evaluations, per-popped-move cost
 //! * distance oracle ns/query across the whole topology subsystem:
 //!   hierarchy shift fast path, hierarchy generic division path (driven
 //!   through the `Topology` trait), grid, torus, and the explicit matrix
@@ -12,15 +14,16 @@
 //! * partitioner throughput (vertices/s)
 //! * XLA runtime objective-call latency (if artifacts are built)
 //!
-//! `--check` turns the three headline claims into assertions (sparse swap
+//! `--check` turns the four headline claims into assertions (sparse swap
 //! gain beats dense at n=4096; the gain cache evaluates strictly fewer
-//! pairs than the shuffle search on a fixed instance; the hierarchy shift
-//! fast path beats the generic trait-dispatched division path) — the CI
-//! smoke mode.
+//! pairs than the shuffle search on a fixed instance; the unified
+//! move-class queue evaluates strictly fewer moves than the phased
+//! `NcCyc`; the hierarchy shift fast path beats the generic
+//! trait-dispatched division path) — the CI smoke mode.
 
 use qapmap::gen::random_geometric_graph;
 use qapmap::mapping::objective::{DenseEngine, Mapping, SwapEngine};
-use qapmap::mapping::refine::{GainBucketQueue, GainCacheNc, NcNeighborhood, Refiner};
+use qapmap::mapping::refine::{GainBucketQueue, GainCacheNc, NcCycle, NcNeighborhood, Refiner};
 use qapmap::mapping::{
     objective, ExplicitTopology, GridTopology, Hierarchy, Machine, Topology, TorusTopology,
 };
@@ -223,6 +226,34 @@ fn main() {
         e_sh.objective()
     );
 
+    // -- unified move class (gc:nccyc) vs phased NcCyc on a fixed instance --
+    // the queued-rotation rows: one queue popping the best of swap or
+    // 3-cycle, against the phased pair-swaps-then-rotations baseline;
+    // the per-move figure is the pop + (lazy) evaluate cost
+    let start2 = Mapping { sigma: rng.permutation(gc_n) };
+    let mut e_u = SwapEngine::new(&gc_comm, &gc_o, start2.clone());
+    let tu = Timer::start();
+    let s_u = GainCacheNc::with_rotations(1).refine(&mut e_u, &gc_comm, &mut Rng::new(1));
+    let u_secs = tu.secs();
+    let mut e_p = SwapEngine::new(&gc_comm, &gc_o, start2);
+    let tp = Timer::start();
+    let s_p = NcCycle::new(1, 100).refine(&mut e_p, &gc_comm, &mut Rng::new(3));
+    let p_secs = tp.secs();
+    println!(
+        "gc:nccyc1 (n={gc_n}): {:>11}   ({} evaluations, {}/move, J {})",
+        fmt_secs(u_secs),
+        s_u.evaluated,
+        fmt_secs(u_secs / s_u.evaluated.max(1) as f64),
+        e_u.objective()
+    );
+    println!(
+        "NcCyc1 phased     : {:>12}   ({} evaluations, {}/move, J {})\n",
+        fmt_secs(p_secs),
+        s_p.evaluated,
+        fmt_secs(p_secs / s_p.evaluated.max(1) as f64),
+        e_p.objective()
+    );
+
     // -- partitioner ----------------------------------------------------------
     let g = random_geometric_graph(1 << 15, &mut rng);
     let (p, secs) = qapmap::util::timer::time(|| {
@@ -271,6 +302,12 @@ fn main() {
             s_sh.evaluated
         );
         assert!(
+            s_u.evaluated < s_p.evaluated,
+            "unified queue evaluated {} moves, phased NcCyc only {} (n={gc_n}, d=1)",
+            s_u.evaluated,
+            s_p.evaluated
+        );
+        assert!(
             t_imp < t_div,
             "hierarchy shift fast path ({}) not faster than the generic \
              trait-dispatched division path ({})",
@@ -279,10 +316,13 @@ fn main() {
         );
         println!(
             "\nhotpath --check: OK (sparse gain {:.0}x faster; gain cache {} vs shuffle {} \
-             evaluations; oracle shift path {:.1}x faster than the generic trait path)",
+             evaluations; unified queue {} vs phased NcCyc {} evaluations; oracle shift \
+             path {:.1}x faster than the generic trait path)",
             t_slow / t_fast,
             s_gc.evaluated,
             s_sh.evaluated,
+            s_u.evaluated,
+            s_p.evaluated,
             t_div / t_imp
         );
     }

@@ -285,9 +285,10 @@ impl MapJob {
     /// True iff the whole pipeline is deterministic: repeated runs cannot
     /// differ, so repetitions are pointless. Identity, Müller-Merbach and
     /// GreedyAllC never consult the RNG; of the local searches, only "none"
-    /// and the shuffle-free gain cache (`gc:nc<d>`) are RNG-free. (For `ml:`
-    /// jobs the coarsening hierarchy is derived from the job seed, so the
-    /// rule carries over unchanged.)
+    /// and the shuffle-free gain caches (`gc:nc<d>` and the unified
+    /// `gc:nccyc<d>`) are RNG-free. (For `ml:` jobs the coarsening
+    /// hierarchy is derived from the job seed, so the rule carries over
+    /// unchanged.)
     pub fn is_deterministic(&self) -> bool {
         super::session::construction_is_deterministic(self.spec.construction)
             && super::session::neighborhood_is_deterministic(self.spec.neighborhood)
@@ -564,6 +565,17 @@ mod tests {
         assert!(gc.is_deterministic());
         assert_eq!(gc.effective_repetitions(), 1);
 
+        // the unified move-class queue is just as shuffle-free: queued
+        // rotations never consult the RNG either
+        let gcc = MapJobBuilder::new(g.clone(), h.clone())
+            .algorithm_name("mm+gc:nccyc1")
+            .unwrap()
+            .repetitions(8)
+            .build()
+            .unwrap();
+        assert!(gcc.is_deterministic());
+        assert_eq!(gcc.effective_repetitions(), 1);
+
         let gc_rand = MapJobBuilder::new(g, h)
             .algorithm_name("topdown+gc:nc1")
             .unwrap()
@@ -648,6 +660,22 @@ mod tests {
             // distances are graded, not flat
             assert!(m.distance(0, n as u32 - 1) > m.distance(0, 1));
         }
+    }
+
+    #[test]
+    fn resolve_machine_canonicalizes_degenerate_lattices() {
+        // unit dimensions are normalized away at parse time; the
+        // resolution (and therefore every report and wire header) carries
+        // the canonical spec, not the degenerate input
+        let (m, r) = resolve_machine(8, "grid:1x8@1", "", "").unwrap();
+        assert_eq!(m.n_pes(), 8);
+        assert_eq!(r.spec, "grid:8@1");
+        assert!(!r.inferred);
+        assert_eq!(Machine::parse(&r.spec).unwrap(), m);
+
+        let (m, r) = resolve_machine(4, "torus:1x1x4", "", "").unwrap();
+        assert_eq!(r.spec, "torus:4@1");
+        assert_eq!(Machine::parse(&r.spec).unwrap(), m);
     }
 
     #[test]

@@ -279,13 +279,17 @@ pub(crate) fn construction_is_deterministic(c: Construction) -> bool {
 }
 
 /// True for neighborhoods whose search never consults the RNG. `None`
-/// trivially; `gc:nc<d>` because the gain-cache queue replaces the shuffle —
-/// its trajectory is a pure function of the start mapping
+/// trivially; `gc:nc<d>` and the unified `gc:nccyc<d>` because the
+/// gain-cache queue replaces the shuffle — the trajectory, queued
+/// rotations included, is a pure function of the start mapping
 /// ([`crate::mapping::refine::GainCacheNc`]). Together with
 /// [`construction_is_deterministic`] this decides the repetition
 /// short-circuit in `MapJob::is_deterministic`.
 pub(crate) fn neighborhood_is_deterministic(n: Neighborhood) -> bool {
-    matches!(n, Neighborhood::None | Neighborhood::GcNc { .. })
+    matches!(
+        n,
+        Neighborhood::None | Neighborhood::GcNc { .. } | Neighborhood::GcNcCycle { .. }
+    )
 }
 
 /// Construct the initial mapping, caching it in the scratch slot when the

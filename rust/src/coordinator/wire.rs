@@ -615,10 +615,36 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_machine_header_reads_canonically() {
+        // a client speaking the degenerate `grid:1x8` form is understood,
+        // and anything this side emits (responses, relayed requests) names
+        // the canonical machine — no silent divergence between what was
+        // asked and what is reported
+        let text = "MAP v1 4 mm - - 1 1 0 8 1 machine=grid:1x8@1\n0 1 3\nEND\n";
+        let req = read_request(&mut BufReader::new(text.as_bytes())).unwrap();
+        assert_eq!(req.machine.spec().unwrap(), "grid:8@1");
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req).unwrap();
+        let header = String::from_utf8(buf.clone()).unwrap();
+        assert!(
+            header.starts_with("MAP v1 4 mm - - 1 1 0 8 1 machine=grid:8@1"),
+            "canonical machine= not emitted: {header:?}"
+        );
+        let back = read_request(&mut BufReader::new(&buf[..])).unwrap();
+        assert_eq!(back.machine, req.machine);
+    }
+
+    #[test]
     fn gc_spec_crosses_the_wire_unchanged() {
         // the gain-cache suffix contains a colon; header tokens split on
-        // whitespace, so it must travel verbatim — with and without ml:
-        for name in ["topdown+gc:nc10", "ml:topdown+gc:nc3"] {
+        // whitespace, so it must travel verbatim — with and without ml:,
+        // for the pair-only queue and the unified move class
+        for name in [
+            "topdown+gc:nc10",
+            "ml:topdown+gc:nc3",
+            "topdown+gc:nccyc2",
+            "ml:topdown+gc:nccyc1",
+        ] {
             let mut req = sample_request();
             req.algorithm = AlgorithmSpec::parse(name).unwrap();
             let mut buf = Vec::new();

@@ -67,7 +67,8 @@ fn usage() {
          map        --inst <name>|--graph <file.metis> --blocks <k>\n  \
                     [--machine hier:4:16:2@1:10:100 | grid:8x8@1 | torus:4x4x4@1]\n  \
                     [--S a:b:c --D x:y:z]   (legacy hierarchy notation)\n  \
-                    [--algo topdown+Nc10 | topdown+gc:nc10 | ml:topdown+Nc5] [--seed 1] [--reps 1]\n  \
+                    [--algo topdown+Nc10 | topdown+gc:nc10 | topdown+gc:nccyc10 | ml:topdown+Nc5]\n  \
+                    [--seed 1] [--reps 1]\n  \
                     [--verify] [--explicit-distances] [--levels 16] [--coarsen-limit 64]\n  \
          serve      [--addr 127.0.0.1:7447] [--workers N] [--queue 64] [--no-xla]\n  \
          client     --addr host:port (same instance options as map)\n  \

@@ -4,8 +4,8 @@
 //! benchmark harness, so every experiment refers to algorithms by the same
 //! names the paper uses: `identity`, `random`, `mm` (Müller-Merbach), `gac`
 //! (GreedyAllC), `rcb` (LibTopoMap-like), `bottomup`, `topdown`, with
-//! optional `+N2`, `+Np`, `+Nc<d>`, `+NcCyc<d>`, `+gc:nc<d>` local-search
-//! suffixes (e.g.
+//! optional `+N2`, `+Np`, `+Nc<d>`, `+NcCyc<d>`, `+gc:nc<d>`,
+//! `+gc:nccyc<d>` local-search suffixes (`d >= 1`; e.g.
 //! the paper's best trade-off `topdown+Nc10`) and an optional `ml:` prefix
 //! selecting the multilevel V-cycle ([`crate::mapping::multilevel`]), e.g.
 //! `ml:topdown+Nc5`: coarsen the communication graph, run the named
@@ -55,6 +55,14 @@ pub enum Neighborhood {
     /// [`Self::Nc`], but terminates at a provable local optimum, never
     /// consults the RNG, and skips re-evaluating pairs no move touched.
     GcNc { d: u32 },
+    /// The unified move-class gain cache (`gc:nccyc<d>`): ONE queue holds
+    /// the `N_C^d` pair swaps *and* both directions of every
+    /// communication-graph triangle rotation, popping whichever move class
+    /// currently has the best gain — unlike [`Self::NcCycle`], which parks
+    /// every rotation behind pair-swap convergence. Terminates at a
+    /// provable local optimum of the union neighborhood and, like
+    /// [`Self::GcNc`], never consults the RNG.
+    GcNcCycle { d: u32 },
 }
 
 /// Gain-computation mode: the paper's fast sparse engine or the dense
@@ -114,27 +122,37 @@ impl AlgorithmSpec {
             "rcb" | "libtopomap" => Construction::Rcb,
             other => return Err(format!("unknown construction {other:?}")),
         };
+        // shared distance parser for the d-parameterized neighborhoods:
+        // d = 0 selects an empty neighborhood the grammar never defined
+        // (`nc_pairs` used to hand back the d=1 edge set for it), so it is
+        // rejected here rather than silently running the wrong pair set
+        let parse_d = |s: &str, prefix: usize, what: &str| -> Result<u32, String> {
+            let d: u32 = s[prefix..]
+                .parse()
+                .map_err(|e| format!("bad {what} distance {s:?}: {e}"))?;
+            if d == 0 {
+                return Err(format!(
+                    "bad {what} distance {s:?}: d must be >= 1 (d=0 is the empty neighborhood)"
+                ));
+            }
+            Ok(d)
+        };
         let neighborhood = match ls {
             None => Neighborhood::None,
             Some("N2") | Some("n2") => Neighborhood::N2,
             Some("Np") | Some("np") => Neighborhood::Np { block_len: 64 },
+            // gc:nccyc must match before its gc:nc prefix
+            Some(s) if s.to_ascii_lowercase().starts_with("gc:nccyc") => {
+                Neighborhood::GcNcCycle { d: parse_d(s, 8, "gc:nccyc")? }
+            }
             Some(s) if s.to_ascii_lowercase().starts_with("gc:nc") => {
-                let d: u32 = s[5..]
-                    .parse()
-                    .map_err(|e| format!("bad gc:nc distance {s:?}: {e}"))?;
-                Neighborhood::GcNc { d }
+                Neighborhood::GcNc { d: parse_d(s, 5, "gc:nc")? }
             }
             Some(s) if s.to_ascii_lowercase().starts_with("nccyc") => {
-                let d: u32 = s[5..]
-                    .parse()
-                    .map_err(|e| format!("bad NcCyc distance {s:?}: {e}"))?;
-                Neighborhood::NcCycle { d }
+                Neighborhood::NcCycle { d: parse_d(s, 5, "NcCyc")? }
             }
             Some(s) if s.to_ascii_lowercase().starts_with("nc") => {
-                let d: u32 = s[2..]
-                    .parse()
-                    .map_err(|e| format!("bad Nc distance {s:?}: {e}"))?;
-                Neighborhood::Nc { d }
+                Neighborhood::Nc { d: parse_d(s, 2, "Nc")? }
             }
             Some(other) => return Err(format!("unknown neighborhood {other:?}")),
         };
@@ -166,6 +184,7 @@ impl AlgorithmSpec {
             Neighborhood::Nc { d } => format!("{ml}{c}+Nc{d}"),
             Neighborhood::NcCycle { d } => format!("{ml}{c}+NcCyc{d}"),
             Neighborhood::GcNc { d } => format!("{ml}{c}+gc:nc{d}"),
+            Neighborhood::GcNcCycle { d } => format!("{ml}{c}+gc:nccyc{d}"),
         }
     }
 }
@@ -201,7 +220,8 @@ mod tests {
         for name in ["identity", "random", "mm", "gac", "topdown", "bottomup", "rcb",
                      "topdown+Nc10", "mm+Np", "random+N2", "mm+Nc1", "topdown+NcCyc1",
                      "ml:topdown+Nc5", "ml:mm", "ml:bottomup+N2", "ml:rcb+NcCyc2",
-                     "topdown+gc:nc10", "mm+gc:nc1", "ml:topdown+gc:nc5"] {
+                     "topdown+gc:nc10", "mm+gc:nc1", "ml:topdown+gc:nc5",
+                     "topdown+gc:nccyc10", "mm+gc:nccyc1", "ml:topdown+gc:nccyc5"] {
             let spec = AlgorithmSpec::parse(name).unwrap();
             assert_eq!(spec.name(), *name, "roundtrip {name}");
         }
@@ -237,6 +257,8 @@ mod tests {
             (Neighborhood::NcCycle { d: 10 }, "+NcCyc10".to_string()),
             (Neighborhood::GcNc { d: 1 }, "+gc:nc1".to_string()),
             (Neighborhood::GcNc { d: 10 }, "+gc:nc10".to_string()),
+            (Neighborhood::GcNcCycle { d: 1 }, "+gc:nccyc1".to_string()),
+            (Neighborhood::GcNcCycle { d: 10 }, "+gc:nccyc10".to_string()),
         ];
         for ml in [false, true] {
             for (c, cname) in &constructions {
@@ -273,6 +295,8 @@ mod tests {
             ("td+NcCyc2", "topdown+NcCyc2"),
             ("td+GC:NC3", "topdown+gc:nc3"),
             ("td+Gc:Nc3", "topdown+gc:nc3"),
+            ("td+GC:NCCYC3", "topdown+gc:nccyc3"),
+            ("td+Gc:NcCyc3", "topdown+gc:nccyc3"),
             ("ml:td+nc5", "ml:topdown+Nc5"),
             ("ml:td+gc:nc5", "ml:topdown+gc:nc5"),
             ("ml:bu", "ml:bottomup"),
@@ -302,6 +326,17 @@ mod tests {
             "mm+gc:nc-1",
             "mm+gc:",
             "mm+gc:Nq1",
+            "mm+gc:nccyc",
+            "mm+gc:nccycx",
+            "mm+gc:nccyc-1",
+            // d = 0 selects an empty neighborhood the grammar never
+            // defined — rejected for every d-parameterized suffix
+            "mm+Nc0",
+            "mm+NcCyc0",
+            "mm+gc:nc0",
+            "mm+gc:nccyc0",
+            "ml:mm+Nc0",
+            "ml:mm+gc:nccyc0",
             "nope",
             "nope+Nc1",
             "MM",

@@ -10,7 +10,9 @@
 //! * [`construct`] — initial mappings: Top-Down, Bottom-Up (§3.1) and all
 //!   compared baselines (Müller-Merbach, GreedyAllC, RCB, identity, random).
 //! * [`refine`] — the `N²`, `N_p`, `N_C^d` and 3-cycle searches (§3.3, §5)
-//!   as [`refine::Refiner`]s over the [`refine::Swapper`] engine interface.
+//!   as [`refine::Refiner`]s over the [`refine::Swapper`] engine interface,
+//!   plus the gain-cached queues (`gc:nc<d>` pair-only, `gc:nccyc<d>` the
+//!   unified swap + queued-rotation move class).
 //! * [`multilevel`] — the coarsen → map → uncoarsen+refine V-cycle built on
 //!   [`crate::partition::coarsen`] groupings and per-topology machine folds.
 //! * [`algorithms`] — a registry tying the above into named end-to-end

@@ -91,11 +91,13 @@ pub struct SwapEngine<'a> {
     gamma: Vec<u64>,
     /// Per-vertex move versions: every applied move bumps the counters of
     /// `u`, `v` *and all their communication neighbors* — exactly the set of
-    /// vertices whose Γ (and therefore any pair gain they participate in)
-    /// the move can change. Gain-cached refiners stamp these at evaluation
-    /// time and re-evaluate lazily when a stamp goes stale
-    /// ([`crate::mapping::refine::GainCacheNc`]).
-    version: Vec<u32>,
+    /// vertices whose Γ (and therefore any pair or rotation gain they
+    /// participate in) the move can change. Gain-cached refiners stamp these
+    /// at evaluation time and re-evaluate lazily when a stamp goes stale
+    /// ([`crate::mapping::refine::GainCacheNc`]). Stored as u64 so stamps
+    /// never alias: a u32 counter wraps after 2^32 bumps of one vertex, and
+    /// an aliased stamp would let a stale cached gain be applied blind.
+    version: Vec<u64>,
     /// Global move epoch: total number of applied moves (a rotation counts
     /// as its two constituent swaps). Monotone; cheap staleness signal for
     /// callers that do not track per-vertex versions.
@@ -143,7 +145,7 @@ impl<'a> SwapEngine<'a> {
                 gamma[u as usize] = gu;
             }
         });
-        let version = vec![0u32; comm.n()];
+        let version = vec![0u64; comm.n()];
         SwapEngine { comm, oracle, sigma, gamma, version, moves: 0, j, swaps_applied: 0 }
     }
 
@@ -176,11 +178,12 @@ impl<'a> SwapEngine<'a> {
         self.gamma[u as usize]
     }
 
-    /// Move version of `u`: bumped (wrapping) by every applied move that can
-    /// change a gain involving `u` — i.e. whenever `u` is an endpoint or a
-    /// communication neighbor of an endpoint of the move.
+    /// Move version of `u`: bumped (wrapping, but unreachable at u64 width)
+    /// by every applied move that can change a gain involving `u` — i.e.
+    /// whenever `u` is an endpoint or a communication neighbor of an
+    /// endpoint of the move.
     #[inline]
-    pub fn version_of(&self, u: NodeId) -> u32 {
+    pub fn version_of(&self, u: NodeId) -> u64 {
         self.version[u as usize]
     }
 
@@ -552,9 +555,12 @@ impl DenseEngine {
     }
 
     /// Apply a rotation whose gain the caller already computed (`O(1)`;
-    /// shared by [`Self::do_rotate3`] and [`Self::try_rotate3`]).
+    /// shared by [`Self::do_rotate3`], [`Self::try_rotate3`] and the
+    /// `Swapper::do_rotate3_with_gain` override — the unified gain-cache
+    /// refiner applies provably-fresh rotation pops without re-scanning).
+    /// The gain must be exact — `J` is updated by subtraction.
     #[inline]
-    fn apply_rotate3_with_gain(&mut self, u: NodeId, v: NodeId, w: NodeId, gain: i64) {
+    pub(crate) fn apply_rotate3_with_gain(&mut self, u: NodeId, v: NodeId, w: NodeId, gain: i64) {
         let pu = self.sigma[u as usize];
         self.sigma[u as usize] = self.sigma[v as usize];
         self.sigma[v as usize] = self.sigma[w as usize];
@@ -699,7 +705,7 @@ mod tests {
                 touched[x as usize] = true;
             }
             let gamma_before: Vec<u64> = (0..n as NodeId).map(|x| eng.gamma_of(x)).collect();
-            let version_before: Vec<u32> = (0..n as NodeId).map(|x| eng.version_of(x)).collect();
+            let version_before: Vec<u64> = (0..n as NodeId).map(|x| eng.version_of(x)).collect();
             // control pairs fully outside the touched set
             let mut control: Vec<(NodeId, NodeId, i64)> = Vec::new();
             for _ in 0..20 {
@@ -731,6 +737,34 @@ mod tests {
                 assert_eq!(eng.swap_gain(a, b), gain, "untouched pair ({a},{b}) gain changed");
             }
         }
+    }
+
+    #[test]
+    fn version_counter_is_an_exact_u64_bump_count() {
+        // the gain-cache stamp contract: `version_of` is an exact count of
+        // the moves that touched the vertex, carried at u64 width through
+        // the wrapping_add path — swapping an adjacent pair bumps each
+        // endpoint twice (once as neighbor, once as endpoint), a
+        // non-adjacent pair once each, and nothing silently truncates
+        let g = crate::graph::from_edges(4, &[(0, 1, 3), (2, 3, 2)]);
+        let h = Hierarchy::new(vec![2, 2], vec![1, 10]).unwrap();
+        let o = Machine::implicit(h);
+        let mut eng = SwapEngine::new(&g, &o, Mapping::identity(4));
+        for k in 1..=100u64 {
+            eng.do_swap(0, 1); // adjacent: 0 and 1 each bump twice
+            assert_eq!(eng.version_of(0), 2 * k);
+            assert_eq!(eng.version_of(1), 2 * k);
+            assert_eq!(eng.version_of(2), 0);
+        }
+        for k in 1..=100u64 {
+            eng.do_swap(0, 2); // non-adjacent: each endpoint bumps once,
+            // and each endpoint's neighbor (1 resp. 3) bumps once
+            assert_eq!(eng.version_of(0), 200 + k);
+            assert_eq!(eng.version_of(1), 200 + k);
+            assert_eq!(eng.version_of(2), k);
+            assert_eq!(eng.version_of(3), k);
+        }
+        assert_eq!(eng.objective(), eng.recompute_objective());
     }
 
     #[test]

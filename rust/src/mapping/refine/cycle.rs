@@ -38,6 +38,32 @@ pub fn comm_triangles(comm: &Graph) -> Vec<(NodeId, NodeId, NodeId)> {
     triangles
 }
 
+/// Graph-keyed cache of the canonical [`comm_triangles`] set, shared by
+/// [`Cycle3`] and the unified gain cache
+/// ([`super::GainCacheNc::with_rotations`]) so both move classes search the
+/// identical canonical triangle enumeration (rebuilt only when the refined
+/// graph changes, like every refiner's scratch).
+#[derive(Debug, Clone, Default)]
+pub struct TriangleSet {
+    cache: Option<((usize, usize, u64), Vec<(NodeId, NodeId, NodeId)>)>,
+}
+
+impl TriangleSet {
+    /// The canonical triangle set of `comm` (`u < v < w` order), filling or
+    /// refreshing the cache as needed.
+    pub fn get(&mut self, comm: &Graph) -> &[(NodeId, NodeId, NodeId)] {
+        let key = graph_key(comm);
+        let stale = match &self.cache {
+            Some((cached, _)) => *cached != key,
+            None => true,
+        };
+        if stale {
+            self.cache = Some((key, comm_triangles(comm)));
+        }
+        &self.cache.as_ref().unwrap().1
+    }
+}
+
 /// Triangle-rotation search: enumerate the triangles of `G_C`, try both
 /// rotation directions, apply strictly improving ones; repeat until a full
 /// pass finds nothing (or `max_rounds`). Owns the triangle set and a
@@ -50,25 +76,17 @@ pub fn comm_triangles(comm: &Graph) -> Vec<(NodeId, NodeId, NodeId)> {
 pub struct Cycle3 {
     /// Bound on the number of full passes.
     pub max_rounds: usize,
-    cache: Option<((usize, usize, u64), Vec<(NodeId, NodeId, NodeId)>)>,
+    set: TriangleSet,
     work: Vec<(NodeId, NodeId, NodeId)>,
 }
 
 impl Cycle3 {
     pub fn new(max_rounds: usize) -> Cycle3 {
-        Cycle3 { max_rounds, cache: None, work: Vec::new() }
+        Cycle3 { max_rounds, set: TriangleSet::default(), work: Vec::new() }
     }
 
     fn fill_work(&mut self, comm: &Graph) {
-        let key = graph_key(comm);
-        let stale = match &self.cache {
-            Some((cached, _)) => *cached != key,
-            None => true,
-        };
-        if stale {
-            self.cache = Some((key, comm_triangles(comm)));
-        }
-        let canonical = &self.cache.as_ref().unwrap().1;
+        let canonical = self.set.get(comm);
         self.work.clear();
         self.work.extend_from_slice(canonical);
     }

@@ -1,33 +1,49 @@
-//! FM-style gain-cached `N_C^d` local search.
+//! FM-style gain-cached local search over tagged move classes.
 //!
 //! The shuffle-based [`super::NcNeighborhood`] re-evaluates the whole pair
 //! set round after round even though a swap of `(u, v)` can only change the
-//! gain of pairs touching `u`, `v` or one of their communication neighbors
+//! gain of moves touching `u`, `v` or one of their communication neighbors
 //! (the invariant tested by
 //! `objective::tests::moves_touch_only_endpoints_and_neighbors`).
-//! [`GainCacheNc`] exploits that: it evaluates every pair once, keeps the
+//! [`GainCacheNc`] exploits that: it evaluates every move once, keeps the
 //! gains in a max-priority bucket queue, and after each applied move
-//! re-activates *only* the pairs incident to a vertex the move touched —
+//! re-activates *only* the moves incident to a vertex the move touched —
 //! the k-way FM machinery of *High-Quality Hierarchical Process Mapping*
-//! (arXiv:2001.07134) on this paper's `N_C^d` neighborhood.
+//! (arXiv:2001.07134) on this paper's neighborhoods.
 //!
-//! Invalidation is lazy: queue entries carry no gain, only the pair index;
-//! each pair stamps the move versions of its endpoints
-//! ([`Swapper::version_of`]) at evaluation time, and a popped pair is
+//! The queue is **move-class generic**: entries are tagged
+//! [`MoveRef::Swap`] (a pair of the `N_C^d` set) or [`MoveRef::Rotate3`]
+//! (one direction of a communication-graph triangle,
+//! [`super::comm_triangles`]). Pair-only it is the spec grammar's
+//! `gc:nc<d>`; with rotations ([`GainCacheNc::with_rotations`], spec
+//! `gc:nccyc<d>`) the *same queue* pops the best of swap or 3-cycle
+//! rotation — a high-gain rotation no longer waits behind pair-swap
+//! convergence the way the phased [`super::NcCycle`] parks it. Two CSR
+//! incidence indexes (vertex → pairs, vertex → triangles) make
+//! re-activation exact for both classes.
+//!
+//! Invalidation is lazy: queue entries carry no gain, only the move id;
+//! each move stamps the move versions of its endpoints
+//! ([`Swapper::version_of`]) at evaluation time, and a popped move is
 //! re-evaluated only when a stamp went stale. Engines without version
 //! tracking (the dense Table-1 baseline) fall back to the refiner's own
 //! applied-move epoch — every pop after a move re-evaluates, which costs
 //! extra evaluations but follows the *identical* move trajectory (a
-//! re-evaluated untouched pair returns its cached gain, so queue order
-//! never diverges; tested below).
+//! re-evaluated untouched move returns its cached gain, so queue order
+//! never diverges; tested below). Stamps are full u64: the former fallback
+//! truncated the epoch to u32, so after 2^32 applied moves two distinct
+//! epochs aliased and could resurrect a stale gain.
 //!
 //! Unlike the shuffle search, which stops after a probabilistic failure
-//! streak, the queue drains exactly when no pair in `N_C^d` improves: the
-//! refiner terminates at a provable local optimum of the neighborhood, and
-//! it never consults the RNG — the trajectory is a pure function of the
-//! start mapping (which is why `gc:nc<d>` specs with deterministic
+//! streak, the queue drains exactly when no queued move improves: the
+//! refiner terminates at a provable local optimum of the (union)
+//! neighborhood — no improving pair in `N_C^d` *and*, with rotations, no
+//! improving rotation in either direction of any triangle — and it never
+//! consults the RNG: the trajectory is a pure function of the start mapping
+//! (which is why `gc:nc<d>`/`gc:nccyc<d>` specs with deterministic
 //! constructions short-circuit repetitions, see `api::MapJob`).
 
+use super::cycle::TriangleSet;
 use super::nc::nc_pairs;
 use super::{graph_key, Refiner, SearchStats, Swapper};
 use crate::graph::{Graph, NodeId};
@@ -35,17 +51,17 @@ use crate::util::Rng;
 
 /// Gains at or above this clamp share the top bucket (and everything ≤ 0
 /// lands in bucket 0). The clamp only coarsens the *search order* — the
-/// local-optimum guarantee rests on "every possibly-improving pair is
+/// local-optimum guarantee rests on "every possibly-improving move is
 /// queued", never on exact ordering.
 const GAIN_BUCKET_CAP: usize = 4096;
 
-/// Max-priority bucket queue over pair indices. `O(1)` push, amortized
+/// Max-priority bucket queue over move ids. `O(1)` push, amortized
 /// `O(1)` pop (the top cursor only rescans buckets emptied since the last
 /// high-priority push); LIFO within a bucket, so the whole structure is
 /// deterministic.
 #[derive(Debug, Clone, Default)]
 pub struct GainBucketQueue {
-    /// `buckets[b]` holds the pairs whose priority clamps to `b`.
+    /// `buckets[b]` holds the move ids whose priority clamps to `b`.
     buckets: Vec<Vec<u32>>,
     /// Upper bound on the highest non-empty bucket.
     top: usize,
@@ -72,20 +88,20 @@ impl GainBucketQueue {
         self.len = 0;
     }
 
-    /// Queue `pair` at priority `gain`.
-    pub fn push(&mut self, pair: u32, gain: i64) {
+    /// Queue move `id` at priority `gain`.
+    pub fn push(&mut self, id: u32, gain: i64) {
         let b = Self::bucket_of(gain);
         if b >= self.buckets.len() {
             self.buckets.resize_with(b + 1, Vec::new);
         }
-        self.buckets[b].push(pair);
+        self.buckets[b].push(id);
         if b > self.top {
             self.top = b;
         }
         self.len += 1;
     }
 
-    /// Pop a pair from the highest non-empty bucket.
+    /// Pop a move id from the highest non-empty bucket.
     pub fn pop(&mut self) -> Option<u32> {
         loop {
             if let Some(p) = self.buckets.get_mut(self.top).and_then(|b| b.pop()) {
@@ -152,57 +168,174 @@ impl PairIndex {
     }
 }
 
-/// The gain-cached `N_C^d` refiner (`gc:nc<d>` in the spec grammar).
-///
-/// Owns the pair set + incidence index (rebuilt only when the refined graph
-/// or `d` changes, like every refiner's scratch) and the per-run queue,
-/// gain, stamp and queued-flag arrays (resized and refilled each call, so
-/// repetitions and V-cycle levels reuse the allocations).
-#[derive(Debug, Clone, Default)]
-pub struct GainCacheNc {
-    /// Maximum communication-graph distance of a swappable pair (public
-    /// knob, mirroring [`super::NcNeighborhood::d`]).
-    pub d: u32,
-    cache: Option<PairIndex>,
-    queue: GainBucketQueue,
-    /// Last evaluated gain per pair (exact while the stamp is fresh; a
-    /// search-order hint otherwise).
-    gain: Vec<i64>,
-    /// Endpoint versions at the last evaluation (both components equal the
-    /// refiner's applied-move epoch for unversioned engines).
-    stamp: Vec<(u32, u32)>,
-    /// Whether the pair currently has a queue entry (dedups re-activation).
-    queued: Vec<bool>,
+/// CSR incidence index over the canonical triangle set (vertex → indices
+/// of the triangles it participates in), the rotation-class mirror of
+/// [`PairIndex`]. Holds only the incidence — the triangle coordinates
+/// themselves live once, in the refiner's shared [`TriangleSet`] cache
+/// (the same type [`super::Cycle3`] caches its canonical set in), and are
+/// read from there at decode time.
+#[derive(Debug, Clone)]
+struct TriIndex {
+    key: (usize, usize, u64),
+    /// Row offsets into [`Self::inc`], length `n + 1`.
+    inc_off: Vec<u32>,
+    /// Concatenated incidence lists, length `3 * |triangles|`.
+    inc: Vec<u32>,
 }
 
-/// Version stamp of pair `(u, v)`: the engine's per-vertex move versions
-/// when it tracks them, the refiner's applied-move epoch otherwise.
-#[inline]
-fn stamps(engine: &dyn Swapper, versioned: bool, epoch: u64, u: NodeId, v: NodeId) -> (u32, u32) {
-    if versioned {
-        (engine.version_of(u), engine.version_of(v))
-    } else {
-        (epoch as u32, epoch as u32)
+impl TriIndex {
+    fn build(n: usize, tris: &[(NodeId, NodeId, NodeId)], key: (usize, usize, u64)) -> TriIndex {
+        let mut inc_off = vec![0u32; n + 1];
+        for &(u, v, w) in tris {
+            inc_off[u as usize + 1] += 1;
+            inc_off[v as usize + 1] += 1;
+            inc_off[w as usize + 1] += 1;
+        }
+        for i in 0..n {
+            inc_off[i + 1] += inc_off[i];
+        }
+        let mut cursor = inc_off.clone();
+        let mut inc = vec![0u32; tris.len() * 3];
+        for (i, &(u, v, w)) in tris.iter().enumerate() {
+            for x in [u, v, w] {
+                inc[cursor[x as usize] as usize] = i as u32;
+                cursor[x as usize] += 1;
+            }
+        }
+        TriIndex { key, inc_off, inc }
+    }
+
+    /// Indices of the triangles with corner `x`.
+    #[inline]
+    fn incident(&self, x: NodeId) -> &[u32] {
+        &self.inc[self.inc_off[x as usize] as usize..self.inc_off[x as usize + 1] as usize]
     }
 }
 
-/// Re-queue every pair incident to `moved` or one of its communication
-/// neighbors — exactly the pairs whose gain the move may have changed. The
-/// cached gain is only the queue-priority hint; the stale stamp forces a
-/// re-evaluation at pop time.
+/// A tagged move in the unified queue. Move ids pack both classes into one
+/// `u32` space: ids `< np` are the pairs in `N_C^d` order; ids `≥ np` come
+/// in (forward, reverse) couples per triangle — see [`decode`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum MoveRef {
+    /// Swap the endpoints of pair `i` of the `N_C^d` pair set.
+    Swap(usize),
+    /// Rotate triangle `t`; `true` reverses the direction (`(u, w, v)`
+    /// instead of `(u, v, w)` — the two are mutually inverse).
+    Rotate3(usize, bool),
+}
+
+/// Decode a packed move id (`np` = number of pairs).
+#[inline]
+fn decode(id: usize, np: usize) -> MoveRef {
+    if id < np {
+        MoveRef::Swap(id)
+    } else {
+        let r = id - np;
+        MoveRef::Rotate3(r >> 1, r & 1 == 1)
+    }
+}
+
+/// Orient a canonical triangle for one rotation direction.
+#[inline]
+fn oriented(tri: (NodeId, NodeId, NodeId), rev: bool) -> (NodeId, NodeId, NodeId) {
+    let (a, b, c) = tri;
+    if rev {
+        (a, c, b)
+    } else {
+        (a, b, c)
+    }
+}
+
+/// Version stamp of move `id`'s endpoints: the engine's per-vertex move
+/// versions when it tracks them, the refiner's applied-move epoch
+/// otherwise. Full u64 throughout — the former fallback truncated the u64
+/// epoch to u32, so epoch `2^32` aliased epoch `0` and a stale cached gain
+/// could have passed the freshness check and been applied blind. Pair moves
+/// leave the third slot 0. `tri_list` is the canonical triangle set (empty
+/// when rotations are off — rotation ids are never decoded then).
+#[inline]
+fn stamp_of(
+    engine: &dyn Swapper,
+    versioned: bool,
+    epoch: u64,
+    pairs: &PairIndex,
+    tri_list: &[(NodeId, NodeId, NodeId)],
+    np: usize,
+    id: usize,
+) -> [u64; 3] {
+    if !versioned {
+        return [epoch; 3];
+    }
+    match decode(id, np) {
+        MoveRef::Swap(p) => {
+            let (u, v) = pairs.pairs[p];
+            [engine.version_of(u), engine.version_of(v), 0]
+        }
+        MoveRef::Rotate3(t, rev) => {
+            let (u, v, w) = oriented(tri_list[t], rev);
+            [engine.version_of(u), engine.version_of(v), engine.version_of(w)]
+        }
+    }
+}
+
+/// Evaluate move `id`: its exact gain plus the stamp taken at evaluation
+/// time (both read-only on the engine, so the two are consistent).
+#[inline]
+fn evaluate(
+    engine: &dyn Swapper,
+    versioned: bool,
+    epoch: u64,
+    pairs: &PairIndex,
+    tri_list: &[(NodeId, NodeId, NodeId)],
+    np: usize,
+    id: usize,
+) -> (i64, [u64; 3]) {
+    let gain = match decode(id, np) {
+        MoveRef::Swap(p) => {
+            let (u, v) = pairs.pairs[p];
+            engine.swap_gain(u, v)
+        }
+        MoveRef::Rotate3(t, rev) => {
+            let (u, v, w) = oriented(tri_list[t], rev);
+            engine.rotate3_gain(u, v, w)
+        }
+    };
+    (gain, stamp_of(engine, versioned, epoch, pairs, tri_list, np, id))
+}
+
+/// Re-queue every move incident to `moved` or one of its communication
+/// neighbors — exactly the moves whose gain the applied move may have
+/// changed: swaps by pair incidence, both directions of every rotation by
+/// triangle incidence. The cached gain is only the queue-priority hint; the
+/// stale stamp forces a re-evaluation at pop time.
+#[allow(clippy::too_many_arguments)]
 fn activate(
     queue: &mut GainBucketQueue,
     queued: &mut [bool],
     gain: &[i64],
-    idx: &PairIndex,
+    pairs: &PairIndex,
+    tris: Option<&TriIndex>,
+    np: usize,
     comm: &Graph,
     moved: NodeId,
 ) {
     let mut touch = |x: NodeId| {
-        for &p in idx.incident(x) {
-            if !queued[p as usize] {
-                queued[p as usize] = true;
-                queue.push(p, gain[p as usize]);
+        for &p in pairs.incident(x) {
+            let id = p as usize;
+            if !queued[id] {
+                queued[id] = true;
+                queue.push(p, gain[id]);
+            }
+        }
+        if let Some(ti) = tris {
+            for &t in ti.incident(x) {
+                let base = np + 2 * t as usize;
+                for id in [base, base + 1] {
+                    if !queued[id] {
+                        queued[id] = true;
+                        queue.push(id as u32, gain[id]);
+                    }
+                }
             }
         }
     };
@@ -212,54 +345,118 @@ fn activate(
     }
 }
 
+/// The gain-cached refiner over the unified move class: `gc:nc<d>`
+/// (pair swaps only, [`Self::new`]) and `gc:nccyc<d>` (pair swaps *and*
+/// 3-cycle triangle rotations in one queue, [`Self::with_rotations`]) in
+/// the spec grammar.
+///
+/// Owns the pair and triangle sets + incidence indexes (rebuilt only when
+/// the refined graph or `d` changes, like every refiner's scratch) and the
+/// per-run queue, gain, stamp and queued-flag arrays (resized and refilled
+/// each call, so repetitions and V-cycle levels reuse the allocations).
+#[derive(Debug, Clone, Default)]
+pub struct GainCacheNc {
+    /// Maximum communication-graph distance of a swappable pair (public
+    /// knob, mirroring [`super::NcNeighborhood::d`]).
+    pub d: u32,
+    /// Queue triangle rotations alongside the pair swaps (`gc:nccyc<d>`).
+    /// Engines without rotation support degrade to the pair-only queue.
+    rotations: bool,
+    pairs: Option<PairIndex>,
+    /// Shared canonical triangle enumeration (the [`super::Cycle3`] cache
+    /// type, so both refiners search the identical set).
+    tri_set: TriangleSet,
+    tris: Option<TriIndex>,
+    queue: GainBucketQueue,
+    /// Last evaluated gain per move (exact while the stamp is fresh; a
+    /// search-order hint otherwise).
+    gain: Vec<i64>,
+    /// Endpoint versions at the last evaluation (all components equal the
+    /// refiner's applied-move epoch for unversioned engines; pair moves
+    /// leave the third slot 0).
+    stamp: Vec<[u64; 3]>,
+    /// Whether the move currently has a queue entry (dedups re-activation).
+    queued: Vec<bool>,
+}
+
 impl GainCacheNc {
+    /// Pair-swap-only queue (`gc:nc<d>`).
     pub fn new(d: u32) -> GainCacheNc {
         GainCacheNc { d, ..GainCacheNc::default() }
     }
 
-    fn ensure_index(&mut self, comm: &Graph) {
+    /// Unified move-class queue (`gc:nccyc<d>`): the `N_C^d` pairs plus
+    /// both rotation directions of every communication-graph triangle.
+    pub fn with_rotations(d: u32) -> GainCacheNc {
+        GainCacheNc { d, rotations: true, ..GainCacheNc::default() }
+    }
+
+    fn ensure_index(&mut self, comm: &Graph, rot: bool) {
         let key = graph_key(comm);
-        let stale = match &self.cache {
+        let stale = match &self.pairs {
             Some(idx) => idx.key != key || idx.d != self.d,
             None => true,
         };
         if stale {
-            self.cache = Some(PairIndex::build(comm, self.d, key));
+            self.pairs = Some(PairIndex::build(comm, self.d, key));
+        }
+        if rot {
+            let stale = match &self.tris {
+                Some(t) => t.key != key,
+                None => true,
+            };
+            if stale {
+                let list = self.tri_set.get(comm);
+                let idx = TriIndex::build(comm.n(), list, key);
+                self.tris = Some(idx);
+            }
         }
     }
 }
 
 impl Refiner for GainCacheNc {
     fn name(&self) -> String {
-        format!("GcNc{}", self.d)
+        if self.rotations {
+            format!("GcNcCyc{}", self.d)
+        } else {
+            format!("GcNc{}", self.d)
+        }
     }
 
     /// Statistics: `evaluated` counts gain computations (one seeding sweep
-    /// plus the lazy re-evaluations of stale pops), `improved` the applied
-    /// swaps, `rounds` the single seeding sweep. The RNG is never consulted.
+    /// over every move plus the lazy re-evaluations of stale pops),
+    /// `improved` the applied moves (a rotation counts once), `rounds` the
+    /// single seeding sweep. The RNG is never consulted.
     fn refine(&mut self, engine: &mut dyn Swapper, comm: &Graph, _rng: &mut Rng) -> SearchStats {
-        self.ensure_index(comm);
-        let idx = self.cache.as_ref().expect("ensure_index filled the cache");
-        let np = idx.pairs.len();
+        let rot = self.rotations && engine.supports_rotate3();
+        self.ensure_index(comm, rot);
+        // the triangle coordinates live once, in the shared TriangleSet
+        // cache (warm after ensure_index); the TriIndex holds only the CSR
+        let tri_list: &[(NodeId, NodeId, NodeId)] =
+            if rot { self.tri_set.get(comm) } else { &[] };
+        let pairs = self.pairs.as_ref().expect("ensure_index filled the pair cache");
+        let tris = if rot { self.tris.as_ref() } else { None };
+        let np = pairs.pairs.len();
+        let nm = np + 2 * tri_list.len();
         let mut stats = SearchStats::default();
-        if np == 0 {
+        if nm == 0 {
             return stats;
         }
         let versioned = engine.supports_versions();
 
-        // seed: evaluate every pair once, queue the improving ones
+        // seed: evaluate every move once, queue the improving ones
         self.queue.clear();
         self.gain.clear();
-        self.gain.resize(np, 0);
+        self.gain.resize(nm, 0);
         self.stamp.clear();
-        self.stamp.resize(np, (0, 0));
+        self.stamp.resize(nm, [0; 3]);
         self.queued.clear();
-        self.queued.resize(np, false);
-        for (i, &(u, v)) in idx.pairs.iter().enumerate() {
-            let g = engine.swap_gain(u, v);
+        self.queued.resize(nm, false);
+        for i in 0..nm {
+            let (g, st) = evaluate(&*engine, versioned, stats.improved, pairs, tri_list, np, i);
             stats.evaluated += 1;
             self.gain[i] = g;
-            self.stamp[i] = stamps(&*engine, versioned, stats.improved, u, v);
+            self.stamp[i] = st;
             if g > 0 {
                 self.queued[i] = true;
                 self.queue.push(i as u32, g);
@@ -270,15 +467,15 @@ impl Refiner for GainCacheNc {
         while let Some(i) = self.queue.pop() {
             let i = i as usize;
             self.queued[i] = false;
-            let (u, v) = idx.pairs[i];
-            let fresh = self.stamp[i] == stamps(&*engine, versioned, stats.improved, u, v);
+            let fresh =
+                self.stamp[i] == stamp_of(&*engine, versioned, stats.improved, pairs, tri_list, np, i);
             let g = if fresh {
                 self.gain[i]
             } else {
-                let g = engine.swap_gain(u, v);
+                let (g, st) = evaluate(&*engine, versioned, stats.improved, pairs, tri_list, np, i);
                 stats.evaluated += 1;
                 self.gain[i] = g;
-                self.stamp[i] = stamps(&*engine, versioned, stats.improved, u, v);
+                self.stamp[i] = st;
                 g
             };
             if g <= 0 {
@@ -293,16 +490,60 @@ impl Refiner for GainCacheNc {
                 continue;
             }
             // fresh and improving: the cached gain is exact — apply without
-            // paying a second evaluation (the dense engine's override skips
-            // the O(n) row scan its do_swap would burn recomputing g)
-            engine.do_swap_with_gain(u, v, g);
-            stats.improved += 1;
-            // the applied pair's own gain is exactly negated; stamp it fresh
-            // so its inevitable re-activation pop drops it evaluation-free
-            self.gain[i] = -g;
-            self.stamp[i] = stamps(&*engine, versioned, stats.improved, u, v);
-            activate(&mut self.queue, &mut self.queued, &self.gain, idx, comm, u);
-            activate(&mut self.queue, &mut self.queued, &self.gain, idx, comm, v);
+            // paying a second evaluation (the dense engine's overrides skip
+            // the O(n) row scan its do_swap/do_rotate3 would burn
+            // recomputing g)
+            match decode(i, np) {
+                MoveRef::Swap(p) => {
+                    let (u, v) = pairs.pairs[p];
+                    engine.do_swap_with_gain(u, v, g);
+                    stats.improved += 1;
+                    // the applied pair's own gain is exactly negated; stamp
+                    // it fresh so its inevitable re-activation pop drops it
+                    // evaluation-free
+                    self.gain[i] = -g;
+                    self.stamp[i] =
+                        stamp_of(&*engine, versioned, stats.improved, pairs, tri_list, np, i);
+                    for x in [u, v] {
+                        activate(
+                            &mut self.queue,
+                            &mut self.queued,
+                            &self.gain,
+                            pairs,
+                            tris,
+                            np,
+                            comm,
+                            x,
+                        );
+                    }
+                }
+                MoveRef::Rotate3(t, rev) => {
+                    let (u, v, w) = oriented(tri_list[t], rev);
+                    engine.do_rotate3_with_gain(u, v, w, g);
+                    stats.improved += 1;
+                    // the inverse direction undoes this rotation exactly, so
+                    // its gain from the new state is exactly -g: stamp it
+                    // fresh so its re-activation pop drops it
+                    // evaluation-free (the applied direction's own entry
+                    // goes stale and re-evaluates lazily if re-activated)
+                    let inv = np + 2 * t + usize::from(!rev);
+                    self.gain[inv] = -g;
+                    self.stamp[inv] =
+                        stamp_of(&*engine, versioned, stats.improved, pairs, tri_list, np, inv);
+                    for x in [u, v, w] {
+                        activate(
+                            &mut self.queue,
+                            &mut self.queued,
+                            &self.gain,
+                            pairs,
+                            tris,
+                            np,
+                            comm,
+                            x,
+                        );
+                    }
+                }
+            }
         }
         stats
     }
@@ -313,7 +554,7 @@ mod tests {
     use super::*;
     use crate::gen::random_geometric_graph;
     use crate::mapping::objective::{DenseEngine, Mapping, SwapEngine};
-    use crate::mapping::refine::NcNeighborhood;
+    use crate::mapping::refine::{comm_triangles, Cycle3, NcNeighborhood};
     use crate::model::topology::{Hierarchy, Machine};
 
     fn setup(nexp: usize, seed: u64) -> (Graph, Machine) {
@@ -358,7 +599,7 @@ mod tests {
 
     #[test]
     fn gaincache_true_local_optimum_and_not_worse_than_shuffle() {
-        // the two halves of the tentpole's quality claim: the queue drains
+        // the two halves of the pair-only quality claim: the queue drains
         // exactly at a provable local optimum of N_C^d, and at an equal
         // evaluation budget (the fair framing of "fewer evaluations, no
         // worse J" — the unbudgeted comparison is ablation_ls's job) the
@@ -401,21 +642,98 @@ mod tests {
     }
 
     #[test]
+    fn unified_queue_reaches_union_neighborhood_local_optimum() {
+        // the tentpole acceptance criterion: at the drained queue an
+        // exhaustive scan finds no improving N_C^d pair AND no improving
+        // rotation in either direction of any communication triangle — the
+        // provable local optimum of the union move class
+        let (g, o) = setup(7, 94);
+        let d = 2;
+        let mut gc = GainCacheNc::with_rotations(d);
+        let m = {
+            let mut r = Rng::new(95);
+            Mapping { sigma: r.permutation(g.n()) }
+        };
+        let mut eng = SwapEngine::new(&g, &o, m);
+        let stats = gc.refine(&mut eng, &g, &mut Rng::new(1));
+        assert!(stats.improved > 0, "random start must improve");
+        let tris = comm_triangles(&g);
+        assert!(!tris.is_empty(), "rgg comm graphs contain triangles");
+        assert!(stats.evaluated >= (nc_pairs(&g, d).len() + 2 * tris.len()) as u64);
+        for &(a, b) in &nc_pairs(&g, d) {
+            assert!(
+                eng.swap_gain(a, b) <= 0,
+                "improving pair ({a},{b}) left behind at the claimed union optimum"
+            );
+        }
+        for &(a, b, c) in &tris {
+            assert!(
+                eng.rotate3_gain(a, b, c) <= 0,
+                "improving rotation ({a},{b},{c}) left behind"
+            );
+            assert!(
+                eng.rotate3_gain(a, c, b) <= 0,
+                "improving reverse rotation ({a},{c},{b}) left behind"
+            );
+        }
+        eng.mapping().validate().unwrap();
+        assert_eq!(eng.objective(), eng.recompute_objective());
+        assert_eq!(stats.improved, eng.swaps_applied, "a rotation counts as one move");
+    }
+
+    #[test]
+    fn unified_queue_not_worse_than_phased_nccycle_at_equal_budget() {
+        // the equal-budget quality claim for the union move class: give the
+        // phased NcCyc<d> baseline the unified queue's whole evaluation
+        // budget in its pair phase and let its rotation phase run free (so
+        // it spends at least as many evaluations), starting from identical
+        // mappings — the unified queue's final J is never worse over the
+        // seed set
+        let (g, o) = setup(7, 96);
+        let d = 2;
+        let mut gc = GainCacheNc::with_rotations(d);
+        let (mut prod_u, mut prod_p) = (1.0f64, 1.0f64);
+        for s in 0..3u64 {
+            let m = {
+                let mut r = Rng::new(97 + s);
+                Mapping { sigma: r.permutation(g.n()) }
+            };
+            let mut e1 = SwapEngine::new(&g, &o, m.clone());
+            let stats = gc.refine(&mut e1, &g, &mut Rng::new(1));
+            let mut e2 = SwapEngine::new(&g, &o, m);
+            let mut r2 = Rng::new(99 + s);
+            NcNeighborhood::with_budget(d, stats.evaluated).refine(&mut e2, &g, &mut r2);
+            Cycle3::new(100).refine(&mut e2, &g, &mut r2);
+            prod_u *= e1.objective() as f64;
+            prod_p *= e2.objective() as f64;
+        }
+        assert!(
+            prod_u <= prod_p,
+            "unified queue ended worse than the equal-budget phased NcCyc: \
+             {prod_u} vs {prod_p}"
+        );
+    }
+
+    #[test]
     fn gaincache_is_deterministic_and_rng_independent() {
         // no shuffle anywhere: the trajectory is a pure function of the
-        // start mapping, whatever RNG state the caller threads through
+        // start mapping, whatever RNG state the caller threads through —
+        // for the pair-only queue AND the unified move class
         let (g, o) = setup(7, 84);
         let m = {
             let mut r = Rng::new(85);
             Mapping { sigma: r.permutation(g.n()) }
         };
-        let mut e1 = SwapEngine::new(&g, &o, m.clone());
-        let s1 = GainCacheNc::new(2).refine(&mut e1, &g, &mut Rng::new(1));
-        let mut e2 = SwapEngine::new(&g, &o, m);
-        let s2 = GainCacheNc::new(2).refine(&mut e2, &g, &mut Rng::new(999));
-        assert_eq!(e1.mapping(), e2.mapping());
-        assert_eq!(e1.objective(), e2.objective());
-        assert_eq!(s1, s2);
+        for rot in [false, true] {
+            let mk = |d| if rot { GainCacheNc::with_rotations(d) } else { GainCacheNc::new(d) };
+            let mut e1 = SwapEngine::new(&g, &o, m.clone());
+            let s1 = mk(2).refine(&mut e1, &g, &mut Rng::new(1));
+            let mut e2 = SwapEngine::new(&g, &o, m.clone());
+            let s2 = mk(2).refine(&mut e2, &g, &mut Rng::new(999));
+            assert_eq!(e1.mapping(), e2.mapping(), "rotations={rot}");
+            assert_eq!(e1.objective(), e2.objective(), "rotations={rot}");
+            assert_eq!(s1, s2, "rotations={rot}");
+        }
     }
 
     #[test]
@@ -443,25 +761,130 @@ mod tests {
     }
 
     #[test]
+    fn dense_and_sparse_follow_identical_trajectory_with_queued_rotations() {
+        // the same bit-identical-trajectory contract for the unified move
+        // class: queued rotations must pop and apply in the same order
+        // under per-vertex stamping and under the epoch fallback
+        let (g, o) = setup(6, 88);
+        let m = {
+            let mut r = Rng::new(89);
+            Mapping { sigma: r.permutation(g.n()) }
+        };
+        let mut fast = SwapEngine::new(&g, &o, m.clone());
+        let mut slow = DenseEngine::new(&g, &o, m);
+        let sf = GainCacheNc::with_rotations(2).refine(&mut fast, &g, &mut Rng::new(1));
+        let ss = GainCacheNc::with_rotations(2).refine(&mut slow, &g, &mut Rng::new(1));
+        assert_eq!(fast.mapping(), slow.mapping());
+        assert_eq!(fast.objective(), slow.objective());
+        assert_eq!(sf.improved, ss.improved);
+        assert!(
+            ss.evaluated >= sf.evaluated,
+            "the unversioned fallback cannot evaluate less than per-vertex stamping"
+        );
+        assert_eq!(slow.objective(), slow.recompute_objective());
+    }
+
+    #[test]
+    fn rotationless_engine_degrades_to_the_pair_only_queue() {
+        // an engine without rotation support under gc:nccyc<d> follows
+        // exactly the gc:nc<d> trajectory (zero rotation evaluations)
+        struct NoRot<'a>(SwapEngine<'a>);
+        impl Swapper for NoRot<'_> {
+            fn swap_gain(&self, u: NodeId, v: NodeId) -> i64 {
+                self.0.swap_gain(u, v)
+            }
+            fn do_swap(&mut self, u: NodeId, v: NodeId) {
+                self.0.do_swap(u, v)
+            }
+            fn try_swap(&mut self, u: NodeId, v: NodeId) -> Option<i64> {
+                self.0.try_swap(u, v)
+            }
+            fn objective(&self) -> u64 {
+                self.0.objective()
+            }
+            fn pe_of(&self, u: NodeId) -> u32 {
+                self.0.pe_of(u)
+            }
+            fn version_of(&self, u: NodeId) -> u64 {
+                self.0.version_of(u)
+            }
+            fn supports_versions(&self) -> bool {
+                true
+            }
+            // rotation hooks stay default-unsupported
+        }
+        let (g, o) = setup(6, 90);
+        let m = {
+            let mut r = Rng::new(91);
+            Mapping { sigma: r.permutation(g.n()) }
+        };
+        let mut norot = NoRot(SwapEngine::new(&g, &o, m.clone()));
+        let s1 = GainCacheNc::with_rotations(2).refine(&mut norot, &g, &mut Rng::new(1));
+        let mut plain = SwapEngine::new(&g, &o, m);
+        let s2 = GainCacheNc::new(2).refine(&mut plain, &g, &mut Rng::new(1));
+        assert_eq!(norot.0.mapping(), plain.mapping());
+        assert_eq!(norot.0.objective(), plain.objective());
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn epoch_stamps_do_not_alias_past_u32() {
+        // the unversioned fallback stamps the refiner's full u64
+        // applied-move epoch; the former `(epoch as u32, epoch as u32)`
+        // truncation aliased epoch 2^32 with epoch 0, which would have let
+        // a move stamped 2^32 applied moves earlier pass the freshness
+        // check and apply its stale cached gain blind
+        struct NoVersions;
+        impl Swapper for NoVersions {
+            fn swap_gain(&self, _u: NodeId, _v: NodeId) -> i64 {
+                0
+            }
+            fn do_swap(&mut self, _u: NodeId, _v: NodeId) {}
+            fn try_swap(&mut self, _u: NodeId, _v: NodeId) -> Option<i64> {
+                None
+            }
+            fn objective(&self) -> u64 {
+                0
+            }
+            fn pe_of(&self, u: NodeId) -> u32 {
+                u
+            }
+        }
+        let g = crate::graph::from_edges(3, &[(0, 1, 1), (1, 2, 1), (0, 2, 1)]);
+        let idx = PairIndex::build(&g, 1, graph_key(&g));
+        let np = idx.pairs.len();
+        let eng = NoVersions;
+        let s0 = stamp_of(&eng, false, 0, &idx, &[], np, 0);
+        let s32 = stamp_of(&eng, false, 1u64 << 32, &idx, &[], np, 0);
+        assert_eq!(s0, [0u64; 3]);
+        assert_eq!(s32, [1u64 << 32; 3]);
+        assert_ne!(s0, s32, "u64 epochs must not alias mod 2^32");
+    }
+
+    #[test]
     fn kept_alive_gaincache_matches_fresh() {
         // the scratch-reuse contract every refiner honors: reusing the
-        // cached pair/incidence index replays a fresh refiner exactly
+        // cached pair/triangle/incidence indexes replays a fresh refiner
+        // exactly — for both move classes
         let (g, o) = setup(7, 88);
         let m = {
             let mut r = Rng::new(89);
             Mapping { sigma: r.permutation(g.n()) }
         };
-        let mut refiner = GainCacheNc::new(2);
-        {
-            let mut warm = SwapEngine::new(&g, &o, m.clone());
-            refiner.refine(&mut warm, &g, &mut Rng::new(1));
+        for rot in [false, true] {
+            let mk = |d| if rot { GainCacheNc::with_rotations(d) } else { GainCacheNc::new(d) };
+            let mut refiner = mk(2);
+            {
+                let mut warm = SwapEngine::new(&g, &o, m.clone());
+                refiner.refine(&mut warm, &g, &mut Rng::new(1));
+            }
+            let mut e1 = SwapEngine::new(&g, &o, m.clone());
+            let s1 = refiner.refine(&mut e1, &g, &mut Rng::new(1));
+            let mut e2 = SwapEngine::new(&g, &o, m.clone());
+            let s2 = mk(2).refine(&mut e2, &g, &mut Rng::new(1));
+            assert_eq!(e1.mapping(), e2.mapping(), "rotations={rot}");
+            assert_eq!(s1, s2, "rotations={rot}");
         }
-        let mut e1 = SwapEngine::new(&g, &o, m.clone());
-        let s1 = refiner.refine(&mut e1, &g, &mut Rng::new(1));
-        let mut e2 = SwapEngine::new(&g, &o, m);
-        let s2 = GainCacheNc::new(2).refine(&mut e2, &g, &mut Rng::new(1));
-        assert_eq!(e1.mapping(), e2.mapping());
-        assert_eq!(s1, s2);
     }
 
     #[test]
@@ -493,23 +916,33 @@ mod tests {
         let mut eng = SwapEngine::new(&g, &o, Mapping::identity(4));
         let stats = GainCacheNc::new(1).refine(&mut eng, &g, &mut Rng::new(1));
         assert_eq!(stats, SearchStats::default());
+        // the unified class on an edgeless graph has no triangles either
+        let stats = GainCacheNc::with_rotations(1).refine(&mut eng, &g, &mut Rng::new(1));
+        assert_eq!(stats, SearchStats::default());
         assert_eq!(eng.objective(), 0);
     }
 
     #[test]
     fn stats_account_for_seed_sweep_and_moves() {
-        // evaluated ≥ |P| (the seeding sweep), one seeding round, and the
-        // improved count matches the engine's applied-swap counter — the
-        // strictly-fewer-than-shuffle comparison is asserted where it is
-        // measured, in `ablation_ls` and `hotpath --check`
+        // evaluated ≥ |P| (+ 2|T| for the unified class — the seeding
+        // sweep), one seeding round, and the improved count matches the
+        // engine's applied-move counter — the strictly-fewer-than-shuffle
+        // comparison is asserted where it is measured, in `ablation_ls`
+        // and `hotpath --check`
         let (g, o) = setup(7, 92);
         let m = {
             let mut r = Rng::new(93);
             Mapping { sigma: r.permutation(g.n()) }
         };
-        let mut eng = SwapEngine::new(&g, &o, m);
+        let mut eng = SwapEngine::new(&g, &o, m.clone());
         let stats = GainCacheNc::new(1).refine(&mut eng, &g, &mut Rng::new(1));
         assert!(stats.evaluated >= g.m() as u64);
+        assert_eq!(stats.rounds, 1);
+        assert_eq!(stats.improved, eng.swaps_applied);
+
+        let mut eng = SwapEngine::new(&g, &o, m);
+        let stats = GainCacheNc::with_rotations(1).refine(&mut eng, &g, &mut Rng::new(1));
+        assert!(stats.evaluated >= (g.m() + 2 * comm_triangles(&g).len()) as u64);
         assert_eq!(stats.rounds, 1);
         assert_eq!(stats.improved, eng.swaps_applied);
     }

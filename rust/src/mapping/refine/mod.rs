@@ -11,10 +11,15 @@
 //!   `N_C^d` (owns and reuses the materialized pair set).
 //! * [`Cycle3`] — cyclic exchange over communication-graph triangles (§5
 //!   future work; owns and reuses the triangle set).
-//! * [`GainCacheNc`] — the FM-style gain-cached `N_C^d` search: a priority
-//!   bucket queue over the pair set with lazy, move-version-based
-//!   invalidation, so pairs untouched by a move are never re-evaluated
-//!   (arXiv:2001.07134's k-way FM machinery on this paper's neighborhood).
+//! * [`GainCacheNc`] — the FM-style gain-cached search: a priority bucket
+//!   queue with lazy, move-version-based invalidation, so moves untouched
+//!   by an applied move are never re-evaluated (arXiv:2001.07134's k-way FM
+//!   machinery on this paper's neighborhoods). Pair-only as `gc:nc<d>`; as
+//!   `gc:nccyc<d>` ([`GainCacheNc::with_rotations`]) the *same queue* also
+//!   holds both directions of every communication-graph triangle rotation —
+//!   the unified move class pops the best of swap or 3-cycle, instead of
+//!   parking rotations behind pair-swap convergence like the phased
+//!   [`NcCycle`].
 //!
 //! Each refiner owns its reusable scratch — pair sets, triangle sets and
 //! shuffle buffers that used to be cached ad hoc inside
@@ -35,7 +40,7 @@ pub mod n2;
 pub mod nc;
 pub mod np;
 
-pub use cycle::{comm_triangles, Cycle3, NcCycle};
+pub use cycle::{comm_triangles, Cycle3, NcCycle, TriangleSet};
 pub use gaincache::{GainBucketQueue, GainCacheNc};
 pub use n2::N2Cyclic;
 pub use nc::{nc_neighborhood, nc_pairs, NcNeighborhood};
@@ -77,16 +82,48 @@ pub trait Swapper {
     fn try_rotate3(&mut self, _u: NodeId, _v: NodeId, _w: NodeId) -> Option<i64> {
         None
     }
+    /// Gain of the 3-cycle rotation `u -> v -> w -> u` *without* applying
+    /// (positive = the objective would decrease by that amount). The
+    /// unified gain-cache queue evaluates rotations through this hook
+    /// exactly like pair gains through [`Self::swap_gain`].
+    /// Default-unsupported: never improving, paired with the
+    /// [`Self::try_rotate3`] no-op.
+    fn rotate3_gain(&self, _u: NodeId, _v: NodeId, _w: NodeId) -> i64 {
+        0
+    }
+    /// Apply the rotation unconditionally (the caller has already decided).
+    /// Engines advertising [`Self::supports_rotate3`] MUST override this
+    /// (both in-tree engines do); the default panics rather than silently
+    /// not moving — a no-op here would leave the gain-cache queue popping
+    /// the same "applied" rotation forever. Unreachable through the
+    /// refiners for engines that keep `supports_rotate3` false.
+    fn do_rotate3(&mut self, _u: NodeId, _v: NodeId, _w: NodeId) {
+        panic!(
+            "Swapper::do_rotate3 not overridden — an engine with \
+             supports_rotate3() == true must implement the rotation apply"
+        )
+    }
+    /// Apply a rotation whose *exact* gain the caller already knows — the
+    /// unified gain-cache refiner pops a rotation whose stamped gain is
+    /// provably fresh. Defaults to [`Self::do_rotate3`], which is already
+    /// `O(d_u + d_v + d_w)` for the sparse engine; the dense engine
+    /// overrides it to its `O(1)` apply, skipping the `O(n)` row scan its
+    /// `do_rotate3` would burn recomputing the gain. Passing a wrong gain
+    /// corrupts the objective.
+    fn do_rotate3_with_gain(&mut self, u: NodeId, v: NodeId, w: NodeId, _gain: i64) {
+        self.do_rotate3(u, v, w)
+    }
     /// True when [`Self::try_rotate3`] actually evaluates rotations.
     fn supports_rotate3(&self) -> bool {
         false
     }
     /// Move version of `u`: bumped by every applied move that can change a
     /// gain involving `u` (the endpoints and all their communication
-    /// neighbors). Inert default for engines without version tracking —
+    /// neighbors). u64 so stamps built from it can never alias after
+    /// wraparound. Inert default for engines without version tracking —
     /// they must leave [`Self::supports_versions`] false so gain-cached
     /// refiners fall back to epoch-based invalidation.
-    fn version_of(&self, _u: NodeId) -> u32 {
+    fn version_of(&self, _u: NodeId) -> u64 {
         0
     }
     /// True when [`Self::version_of`] actually tracks moves.
@@ -114,10 +151,16 @@ impl Swapper for SwapEngine<'_> {
     fn try_rotate3(&mut self, u: NodeId, v: NodeId, w: NodeId) -> Option<i64> {
         SwapEngine::try_rotate3(self, u, v, w)
     }
+    fn rotate3_gain(&self, u: NodeId, v: NodeId, w: NodeId) -> i64 {
+        SwapEngine::rotate3_gain(self, u, v, w)
+    }
+    fn do_rotate3(&mut self, u: NodeId, v: NodeId, w: NodeId) {
+        SwapEngine::do_rotate3(self, u, v, w)
+    }
     fn supports_rotate3(&self) -> bool {
         true
     }
-    fn version_of(&self, u: NodeId) -> u32 {
+    fn version_of(&self, u: NodeId) -> u64 {
         SwapEngine::version_of(self, u)
     }
     fn supports_versions(&self) -> bool {
@@ -146,6 +189,15 @@ impl Swapper for DenseEngine {
     }
     fn try_rotate3(&mut self, u: NodeId, v: NodeId, w: NodeId) -> Option<i64> {
         DenseEngine::try_rotate3(self, u, v, w)
+    }
+    fn rotate3_gain(&self, u: NodeId, v: NodeId, w: NodeId) -> i64 {
+        DenseEngine::rotate3_gain(self, u, v, w)
+    }
+    fn do_rotate3(&mut self, u: NodeId, v: NodeId, w: NodeId) {
+        DenseEngine::do_rotate3(self, u, v, w)
+    }
+    fn do_rotate3_with_gain(&mut self, u: NodeId, v: NodeId, w: NodeId, gain: i64) {
+        DenseEngine::apply_rotate3_with_gain(self, u, v, w, gain)
     }
     fn supports_rotate3(&self) -> bool {
         true
@@ -221,6 +273,7 @@ pub fn refiner_for(
         Neighborhood::Nc { d } => Box::new(NcNeighborhood::new(d)),
         Neighborhood::NcCycle { d } => Box::new(NcCycle::new(d, max_sweeps)),
         Neighborhood::GcNc { d } => Box::new(GainCacheNc::new(d)),
+        Neighborhood::GcNcCycle { d } => Box::new(GainCacheNc::with_rotations(d)),
     }
 }
 
@@ -277,6 +330,7 @@ mod tests {
                 (Neighborhood::Nc { d: 3 }, "Nc3"),
                 (Neighborhood::NcCycle { d: 2 }, "NcCyc2"),
                 (Neighborhood::GcNc { d: 3 }, "GcNc3"),
+                (Neighborhood::GcNcCycle { d: 2 }, "GcNcCyc2"),
             ] {
                 assert_eq!(refiner_for(nb, 100, machine).name(), name, "{}", machine.kind());
             }

@@ -6,11 +6,19 @@ use crate::util::Rng;
 
 /// Materialize the pair set of the `N_C^d` neighborhood: all unordered pairs
 /// of distinct processes within communication-graph distance `d`.
-/// For `d = 1` this is exactly the edge set (size `m`).
+/// For `d = 1` this is exactly the edge set (size `m`); for `d = 0` it is
+/// the *empty* set — no distinct pair is within distance 0, so `N_C^0`
+/// refiners are no-ops. (The spec grammar rejects `d = 0` outright; this
+/// definition keeps direct library callers on the same semantics instead of
+/// silently handing them the `d = 1` edge set, as an earlier `d <= 1` test
+/// here did.)
 pub fn nc_pairs(comm: &Graph, d: u32) -> Vec<(NodeId, NodeId)> {
     let n = comm.n();
     let mut pairs = Vec::new();
-    if d <= 1 {
+    if d == 0 {
+        return pairs;
+    }
+    if d == 1 {
         for u in 0..n as NodeId {
             for &v in comm.neighbors(u) {
                 if v > u {
@@ -157,6 +165,28 @@ mod tests {
         let (g, _) = setup(7, 1);
         let pairs = nc_pairs(&g, 1);
         assert_eq!(pairs.len(), g.m());
+    }
+
+    #[test]
+    fn nc_d0_is_the_empty_neighborhood() {
+        // the d=0 boundary: no pair is within distance 0 of a *different*
+        // vertex, so both the shuffle and the gain-cache refiner are exact
+        // no-ops (formerly `d <= 1` silently ran the d=1 edge set here)
+        use crate::mapping::refine::GainCacheNc;
+        let (g, o) = setup(7, 5);
+        assert!(nc_pairs(&g, 0).is_empty());
+        let m = {
+            let mut r = Rng::new(6);
+            Mapping { sigma: r.permutation(g.n()) }
+        };
+        let mut e1 = SwapEngine::new(&g, &o, m.clone());
+        let s1 = NcNeighborhood::new(0).refine(&mut e1, &g, &mut Rng::new(7));
+        assert_eq!(s1, crate::mapping::refine::SearchStats::default());
+        assert_eq!(e1.mapping(), m);
+        let mut e2 = SwapEngine::new(&g, &o, m.clone());
+        let s2 = GainCacheNc::new(0).refine(&mut e2, &g, &mut Rng::new(8));
+        assert_eq!(s2, crate::mapping::refine::SearchStats::default());
+        assert_eq!(e2.mapping(), m);
     }
 
     #[test]

@@ -41,7 +41,12 @@ impl Lattice {
         if link == 0 {
             return Err(format!("{kind} link weight must be positive"));
         }
-        // normalize away trivial dimensions (they contribute no distance)
+        // canonicalize at construction (= parse) time: unit dimensions
+        // contribute no distance, so `grid:1x8` IS `grid:8`. Dropping them
+        // here means `spec()` — and with it every `MachineResolution`
+        // report and wire `machine=` header — names the canonical form;
+        // the degenerate input is accepted but never echoed back
+        // (round-trip tested in `super::tests`).
         dims.retain(|&d| d > 1);
         if dims.is_empty() {
             dims.push(1);

@@ -320,6 +320,38 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_lattice_specs_canonicalize() {
+        // unit dimensions are dropped at parse time, so a degenerate spec
+        // parses but names itself canonically — the wire `machine=` header
+        // and `MachineResolution.spec` carry the canonical form instead of
+        // silently rewriting (or failing to round-trip) the input
+        for (input, canonical) in [
+            ("grid:1x8", "grid:8@1"),
+            ("grid:1x8@1", "grid:8@1"),
+            ("grid:8x1@2", "grid:8@2"),
+            ("torus:1x1x4", "torus:4@1"),
+            ("torus:2x1x2@3", "torus:2x2@3"),
+            ("grid:1x1", "grid:1@1"),
+        ] {
+            let m = Machine::parse(input).unwrap();
+            assert_eq!(m.spec().unwrap(), canonical, "canonical form of {input}");
+            // the canonical name round-trips to an equal machine, and the
+            // degenerate input re-parses to that same machine
+            let again = Machine::parse(&m.spec().unwrap()).unwrap();
+            assert_eq!(again, m, "{input}");
+            assert_eq!(Machine::parse(input).unwrap(), m, "{input}");
+        }
+        // distances are those of the canonical machine
+        let deg = Machine::parse("torus:1x1x4").unwrap();
+        let canon = Machine::parse("torus:4@1").unwrap();
+        for p in 0..4u32 {
+            for q in 0..4u32 {
+                assert_eq!(deg.distance(p, q), canon.distance(p, q));
+            }
+        }
+    }
+
+    #[test]
     fn grammar_defaults() {
         // hier without @D defaults to powers of ten
         let m = Machine::parse("hier:4:16:2").unwrap();

@@ -107,7 +107,9 @@ fn gaincache_same_seed_is_bit_identical_including_ml() {
     // seed produce the same bits, flat and under the ml: V-cycle, and the
     // gain cache composes with the session repetition machinery
     let (g, h) = instance(128, 21);
-    for algo in ["topdown+gc:nc2", "ml:topdown+gc:nc2"] {
+    for algo in
+        ["topdown+gc:nc2", "ml:topdown+gc:nc2", "topdown+gc:nccyc2", "ml:topdown+gc:nccyc2"]
+    {
         let mk = || {
             MapJobBuilder::new(g.clone(), h.clone())
                 .algorithm_name(algo)
@@ -134,20 +136,58 @@ fn gaincache_same_seed_is_bit_identical_including_ml() {
 
 #[test]
 fn gaincache_with_deterministic_construction_short_circuits() {
-    // mm never consults the RNG and neither does the gain cache, so the
-    // whole mm+gc:nc<d> pipeline short-circuits repetitions to one
+    // mm never consults the RNG and neither gain-cache queue does — the
+    // whole mm+gc:nc<d> / mm+gc:nccyc<d> pipeline short-circuits
+    // repetitions to one
     let (g, h) = instance(128, 22);
-    let job = MapJobBuilder::new(g, h)
-        .algorithm_name("mm+gc:nc1")
+    for algo in ["mm+gc:nc1", "mm+gc:nccyc1"] {
+        let job = MapJobBuilder::new(g.clone(), h.clone())
+            .algorithm_name(algo)
+            .unwrap()
+            .repetitions(8)
+            .build()
+            .unwrap();
+        let report = MapSession::new(job).run();
+        assert!(report.short_circuited, "{algo}");
+        assert_eq!(report.reps.len(), 1, "{algo}");
+        assert!(report.objective <= report.objective_initial, "{algo}");
+        report.mapping.validate().unwrap();
+    }
+}
+
+#[test]
+fn unified_queue_session_ends_at_a_union_local_optimum() {
+    // acceptance: a gc:nccyc<d> session's winning mapping admits no
+    // improving N_C^d pair and no improving rotation in either direction
+    // of any communication triangle — checked by exhaustive scan on the
+    // final mapping, outside the refiner's own bookkeeping
+    use qapmap::mapping::objective::SwapEngine;
+    use qapmap::mapping::refine::{comm_triangles, nc_pairs};
+    let (g, h) = instance(128, 23);
+    let d = 2;
+    let job = MapJobBuilder::new(g.clone(), h.clone())
+        .algorithm_name(&format!("topdown+gc:nccyc{d}"))
         .unwrap()
-        .repetitions(8)
+        .seed(24)
         .build()
         .unwrap();
     let report = MapSession::new(job).run();
-    assert!(report.short_circuited);
-    assert_eq!(report.reps.len(), 1);
-    assert!(report.objective <= report.objective_initial);
     report.mapping.validate().unwrap();
+    let oracle = Machine::Hier(h);
+    let eng = SwapEngine::new(&g, &oracle, report.mapping.clone());
+    assert_eq!(eng.objective(), report.objective);
+    for &(a, b) in &nc_pairs(&g, d) {
+        assert!(eng.swap_gain(a, b) <= 0, "improving pair ({a},{b}) left behind");
+    }
+    let tris = comm_triangles(&g);
+    assert!(!tris.is_empty(), "rgg comm graphs contain triangles");
+    for &(a, b, c) in &tris {
+        assert!(eng.rotate3_gain(a, b, c) <= 0, "improving rotation ({a},{b},{c}) left behind");
+        assert!(
+            eng.rotate3_gain(a, c, b) <= 0,
+            "improving reverse rotation ({a},{c},{b}) left behind"
+        );
+    }
 }
 
 #[test]
@@ -551,6 +591,8 @@ fn grid_and_torus_sessions_are_deterministic() {
         ("grid:12x8@1", "topdown+gc:nc2"),
         ("grid:12x8@1", "ml:topdown+Nc2"),
         ("torus:4x4x6@1", "ml:topdown+gc:nc1"),
+        ("torus:4x4x6@1", "topdown+gc:nccyc2"),
+        ("grid:12x8@1", "ml:topdown+gc:nccyc1"),
     ] {
         let mk = || {
             MapJobBuilder::for_machine(g.clone(), Machine::parse(spec).unwrap())
