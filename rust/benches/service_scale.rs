@@ -1,0 +1,133 @@
+//! Acceptance benchmark for the coordinator service (protocol v2): repeat
+//! jobs on a persistent connection must be served from the warm session
+//! cache and come back measurably faster than the cold first request.
+//!
+//! One single-worker server is started on a loopback socket; for each
+//! algorithm the same job is sent `1 + WARM_CALLS` times over one pipelined
+//! connection. The first request builds the session from scratch (oracle,
+//! `N_C^d` pair sets, engine buffers, deterministic constructions); the
+//! repeats check the warm session out of the server-side LRU and skip all
+//! of that. Identical seeds mean the warm answers must be bit-identical to
+//! the cold one — the bench asserts it on every reply.
+//!
+//! With `--check` the bench additionally asserts the service-level claims
+//! (warm latency strictly below cold, nonzero cache hit rate) and is run in
+//! CI's release leg.
+
+use qapmap::coordinator::{wire, Client, Coordinator, MapRequest};
+use qapmap::mapping::algorithms::AlgorithmSpec;
+use qapmap::mapping::{Hierarchy, Machine};
+use qapmap::model::build_instance;
+use qapmap::util::{Rng, Timer};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+const WARM_CALLS: usize = 4;
+const SEED: u64 = 1000;
+const ALGOS: [&str; 3] = ["mm+Nc10", "mm+gc:nc10", "topdown+Nc10"];
+
+fn main() {
+    let check = std::env::args().any(|a| a == "--check");
+    let mut rng = Rng::new(42);
+    let app = qapmap::gen::by_name("rgg12", &mut rng).unwrap();
+    let comm = build_instance(&app, 256, &mut rng);
+    let h = Hierarchy::parse("4:16:4", "1:10:100").unwrap();
+    println!(
+        "== service session cache: cold first request vs {WARM_CALLS} warm repeats ==\n\
+         instance: rgg12 -> 256 blocks (m/n = {:.1}), 1 worker, one pipelined connection\n",
+        comm.density()
+    );
+    println!(
+        "{:>14} {:>9} {:>9} {:>9}",
+        "algorithm", "cold", "warm", "speedup"
+    );
+
+    // single worker: requests are served strictly in order, so every repeat
+    // finds its session checked back into the cache — hits are deterministic
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Arc::new(Coordinator::start(1, 16, None));
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let (c, s) = (Arc::clone(&coord), Arc::clone(&stop));
+        std::thread::spawn(move || wire::serve(listener, c, s))
+    };
+
+    let mut client = Client::connect(addr).unwrap();
+    let mut worst_speedup = f64::INFINITY;
+    for (i, algo) in ALGOS.iter().enumerate() {
+        let mut req = MapRequest {
+            id: 100 * (i as u64 + 1),
+            comm: comm.clone(),
+            machine: Machine::Hier(h.clone()),
+            algorithm: AlgorithmSpec::parse(algo).unwrap(),
+            repetitions: 1,
+            seed: SEED,
+            verify: false,
+            levels: None,
+            coarsen_limit: None,
+        };
+
+        let t = Timer::start();
+        let cold = client.map(&req).unwrap();
+        let t_cold = t.secs();
+        assert!(cold.error.is_none(), "{algo}: {:?}", cold.error);
+
+        let mut t_warm = f64::INFINITY;
+        for r in 0..WARM_CALLS {
+            req.id += 1 + r as u64;
+            let t = Timer::start();
+            let warm = client.map(&req).unwrap();
+            t_warm = t_warm.min(t.secs());
+            assert!(warm.error.is_none(), "{algo}: {:?}", warm.error);
+            assert_eq!(
+                warm.sigma, cold.sigma,
+                "{algo}: a warm session must reproduce the cold answer bit-for-bit"
+            );
+            assert_eq!(warm.objective, cold.objective, "{algo}");
+        }
+
+        let speedup = t_cold / t_warm.max(1e-9);
+        worst_speedup = worst_speedup.min(speedup);
+        println!("{algo:>14} {t_cold:>8.3}s {t_warm:>8.3}s {speedup:>8.1}x");
+    }
+
+    let stats = client.stats().unwrap();
+    println!(
+        "\nserver: {} completed | cache {} hit / {} miss (rate {:.2}, {} warm entries)",
+        stats.jobs_completed,
+        stats.cache_hits,
+        stats.cache_misses,
+        stats.cache_hit_rate(),
+        stats.cache_entries
+    );
+    println!("(warm requests skip oracle, N_C pair-set and construction work;");
+    println!(" cold = first request per (graph, machine, algorithm) key)");
+    client.quit().unwrap();
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+
+    if check {
+        let expect = (ALGOS.len() * WARM_CALLS) as u64;
+        assert_eq!(
+            stats.cache_misses,
+            ALGOS.len() as u64,
+            "exactly one cold build per algorithm expected"
+        );
+        assert_eq!(stats.cache_hits, expect, "every repeat must be a cache hit");
+        assert!(
+            stats.cache_hit_rate() > 0.0,
+            "hit rate must be nonzero, got {}",
+            stats.cache_hit_rate()
+        );
+        assert!(
+            worst_speedup > 1.0,
+            "warm requests must be faster than cold ones (worst speedup {worst_speedup:.2}x)"
+        );
+        println!(
+            "\nservice_scale --check: OK ({} hits / {} misses, worst warm speedup {:.1}x)",
+            stats.cache_hits, stats.cache_misses, worst_speedup
+        );
+    }
+}

@@ -95,6 +95,14 @@ impl MapSession {
         MapSession { job, oracle, runtime, scratch: SessionScratch::default() }
     }
 
+    /// Attach (or detach) a PJRT runtime after construction. Warm sessions
+    /// checked out of the coordinator's cache get the worker's runtime
+    /// re-attached here; the runtime holds no per-instance state, so this
+    /// never invalidates scratch.
+    pub fn set_runtime(&mut self, runtime: Option<RuntimeHandle>) {
+        self.runtime = runtime;
+    }
+
     /// The frozen job.
     pub fn job(&self) -> &MapJob {
         &self.job
@@ -103,6 +111,45 @@ impl MapSession {
     /// The session's cached distance oracle.
     pub fn oracle(&self) -> &Machine {
         &self.oracle
+    }
+
+    /// Adopt a new job into this warm session, keeping every piece of
+    /// scratch whose validity is a pure function of the *instance* tuple
+    /// `(comm, machine, spec, oracle_mode, part_cfg, ml_cfg)`: the oracle,
+    /// the refiners' `N_C^d` pair/triangle sets, the Γ buffer, the dense
+    /// matrices and deterministic constructions. This is what lets the
+    /// coordinator's session cache serve *repeat jobs* (not just repeat
+    /// repetitions) without rebuilding any of that state.
+    ///
+    /// The per-run knobs — `seed`, `repetitions`, `verify` — may differ
+    /// freely. Anything in the instance tuple differing rejects the
+    /// adoption and hands the job back (`Err(job)`), so the caller builds a
+    /// fresh session instead; warm state can never silently answer for the
+    /// wrong instance.
+    ///
+    /// Correctness contract (tested in `tests/api.rs`): a warm session that
+    /// adopted a job produces a report bit-identical to a cold session built
+    /// from that job. The one seed-dependent cache — the `ml:` coarsening
+    /// hierarchy, which is derived from the *job* seed — is therefore
+    /// dropped when the adopted job changes the seed.
+    pub fn adopt_job(&mut self, job: MapJob) -> Result<(), MapJob> {
+        let cur = &self.job;
+        let compatible = cur.spec.name() == job.spec.name()
+            && cur.oracle_mode == job.oracle_mode
+            && cur.part_cfg == job.part_cfg
+            && cur.ml_cfg == job.ml_cfg
+            && cur.machine == job.machine
+            // full structural compare, not a fingerprint: a hash collision
+            // upstream must degrade to a rebuild, never a wrong reuse
+            && cur.comm == job.comm;
+        if !compatible {
+            return Err(job);
+        }
+        if job.spec.multilevel && job.seed != cur.seed {
+            self.scratch.ml = None;
+        }
+        self.job = job;
+        Ok(())
     }
 
     /// Execute the job: `effective_repetitions` seeded runs, best-of-N

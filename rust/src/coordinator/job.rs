@@ -109,6 +109,18 @@ impl MapResponse {
             error: Some(error),
         }
     }
+
+    /// The admission-control refusal (`BUSY` on the wire): a retryable
+    /// failure carrying the queue occupancy at rejection time.
+    pub fn busy(id: u64, depth: usize, capacity: usize) -> MapResponse {
+        Self::failure(id, format!("busy: queue {depth}/{capacity} full"))
+    }
+
+    /// True when this failure is a [`Self::busy`] refusal — the job was
+    /// never admitted, so retrying (with backoff, or elsewhere) is sound.
+    pub fn is_busy(&self) -> bool {
+        self.error.as_deref().is_some_and(|e| e.starts_with("busy: "))
+    }
 }
 
 #[cfg(test)]

@@ -1,7 +1,16 @@
-//! Service metrics: throughput counters and a latency histogram.
+//! Service metrics: throughput counters, serving-layer gauges and a latency
+//! histogram.
 //!
 //! Lock-free on the hot path where possible (atomics); the histogram uses
 //! coarse log-scale buckets so a snapshot never needs to walk raw samples.
+//!
+//! The protocol-v2 serving subsystem adds three groups on top of the job
+//! counters: session-cache hit/miss/eviction counters plus an entry gauge
+//! (`coordinator::session_cache`), admission-control counters (`BUSY`
+//! answers for a full queue, refused connections at the connection cap) with
+//! queue depth/capacity gauges, and connection gauges for the persistent
+//! wire loop. The whole snapshot crosses the wire as the `STATS` verb's
+//! `key=value` line (`wire::stats_line` / `wire::parse_stats_line`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -15,8 +24,18 @@ pub struct Metrics {
     jobs_submitted: AtomicU64,
     jobs_completed: AtomicU64,
     jobs_failed: AtomicU64,
+    jobs_busy_rejected: AtomicU64,
     verifications: AtomicU64,
     verification_mismatches: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    cache_evictions: AtomicU64,
+    cache_entries: AtomicU64,
+    queue_depth: AtomicU64,
+    queue_capacity: AtomicU64,
+    connections_accepted: AtomicU64,
+    connections_refused: AtomicU64,
+    active_connections: AtomicU64,
     total_service_us: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
 }
@@ -28,6 +47,58 @@ impl Metrics {
 
     pub fn on_submit(&self) {
         self.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A `MAP` request answered `BUSY` because the job queue was full.
+    pub fn on_busy_rejection(&self) {
+        self.jobs_busy_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Session-cache lookup found a warm, adoptable session.
+    pub fn on_cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Session-cache lookup built a fresh session (no entry, checked out by
+    /// a concurrent job, or adoption rejected the instance).
+    pub fn on_cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A check-in evicted the least-recently-used warm session.
+    pub fn on_cache_eviction(&self) {
+        self.cache_evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Current number of warm sessions (gauge, set after each check-in).
+    pub fn set_cache_entries(&self, entries: usize) {
+        self.cache_entries.store(entries as u64, Ordering::Relaxed);
+    }
+
+    /// Current job-queue depth (gauge, set on every enqueue/dequeue).
+    pub fn set_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth as u64, Ordering::Relaxed);
+    }
+
+    /// Job-queue capacity (set once at coordinator start).
+    pub fn set_queue_capacity(&self, capacity: usize) {
+        self.queue_capacity.store(capacity as u64, Ordering::Relaxed);
+    }
+
+    /// A connection entered the serving loop (gauge + lifetime counter).
+    pub fn on_connection_open(&self) {
+        self.connections_accepted.fetch_add(1, Ordering::Relaxed);
+        self.active_connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A connection left the serving loop.
+    pub fn on_connection_close(&self) {
+        self.active_connections.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// A connection was refused at the concurrent-connection cap.
+    pub fn on_connection_refused(&self) {
+        self.connections_refused.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn on_complete(&self, service_secs: f64, failed: bool) {
@@ -60,8 +131,18 @@ impl Metrics {
             jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
             jobs_completed: completed,
             jobs_failed: failed,
+            jobs_busy_rejected: self.jobs_busy_rejected.load(Ordering::Relaxed),
             verifications: self.verifications.load(Ordering::Relaxed),
             verification_mismatches: self.verification_mismatches.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
+            cache_entries: self.cache_entries.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            queue_capacity: self.queue_capacity.load(Ordering::Relaxed),
+            connections_accepted: self.connections_accepted.load(Ordering::Relaxed),
+            connections_refused: self.connections_refused.load(Ordering::Relaxed),
+            active_connections: self.active_connections.load(Ordering::Relaxed),
             mean_latency_secs: if completed + failed > 0 {
                 total_us as f64 / 1e6 / (completed + failed) as f64
             } else {
@@ -91,28 +172,73 @@ fn percentile_from_buckets(buckets: &[u64], q: f64) -> f64 {
 }
 
 /// Point-in-time metrics view.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct MetricsSnapshot {
     pub jobs_submitted: u64,
     pub jobs_completed: u64,
     pub jobs_failed: u64,
+    /// `MAP` requests answered `BUSY` (job queue full at admission).
+    pub jobs_busy_rejected: u64,
     pub verifications: u64,
     pub verification_mismatches: u64,
+    /// Session-cache hits (warm session adopted the job).
+    pub cache_hits: u64,
+    /// Session-cache misses (fresh session built).
+    pub cache_misses: u64,
+    /// Warm sessions evicted by the LRU bound.
+    pub cache_evictions: u64,
+    /// Warm sessions currently cached (gauge).
+    pub cache_entries: u64,
+    /// Jobs currently queued (gauge).
+    pub queue_depth: u64,
+    /// Job-queue capacity.
+    pub queue_capacity: u64,
+    /// Connections that entered the serving loop (lifetime counter).
+    pub connections_accepted: u64,
+    /// Connections refused at the concurrent-connection cap.
+    pub connections_refused: u64,
+    /// Connections currently in the serving loop (gauge).
+    pub active_connections: u64,
     pub mean_latency_secs: f64,
     pub p50_latency_secs: f64,
     pub p99_latency_secs: f64,
+}
+
+impl MetricsSnapshot {
+    /// Session-cache hit rate in `[0, 1]` (0 when no lookup happened yet).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let lookups = self.cache_hits + self.cache_misses;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / lookups as f64
+        }
+    }
 }
 
 impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "jobs: {} submitted, {} ok, {} failed | verify: {}/{} ok | latency mean {:.1} ms p50 {:.1} ms p99 {:.1} ms",
+            "jobs: {} submitted, {} ok, {} failed, {} busy | verify: {}/{} ok | \
+             cache: {} hit / {} miss ({} warm, {} evicted) | queue: {}/{} | \
+             conns: {} active ({} accepted, {} refused) | \
+             latency mean {:.1} ms p50 {:.1} ms p99 {:.1} ms",
             self.jobs_submitted,
             self.jobs_completed,
             self.jobs_failed,
+            self.jobs_busy_rejected,
             self.verifications - self.verification_mismatches,
             self.verifications,
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_entries,
+            self.cache_evictions,
+            self.queue_depth,
+            self.queue_capacity,
+            self.active_connections,
+            self.connections_accepted,
+            self.connections_refused,
             self.mean_latency_secs * 1e3,
             self.p50_latency_secs * 1e3,
             self.p99_latency_secs * 1e3,
@@ -164,5 +290,42 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.mean_latency_secs, 0.0);
         assert_eq!(s.p50_latency_secs, 0.0);
+        assert_eq!(s.cache_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn cache_and_admission_counters() {
+        let m = Metrics::new();
+        m.on_cache_hit();
+        m.on_cache_hit();
+        m.on_cache_hit();
+        m.on_cache_miss();
+        m.on_cache_eviction();
+        m.set_cache_entries(2);
+        m.on_busy_rejection();
+        m.set_queue_depth(5);
+        m.set_queue_capacity(64);
+        let s = m.snapshot();
+        assert_eq!(s.cache_hits, 3);
+        assert_eq!(s.cache_misses, 1);
+        assert_eq!(s.cache_evictions, 1);
+        assert_eq!(s.cache_entries, 2);
+        assert_eq!(s.jobs_busy_rejected, 1);
+        assert_eq!(s.queue_depth, 5);
+        assert_eq!(s.queue_capacity, 64);
+        assert!((s.cache_hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn connection_gauges_track_open_close() {
+        let m = Metrics::new();
+        m.on_connection_open();
+        m.on_connection_open();
+        m.on_connection_refused();
+        m.on_connection_close();
+        let s = m.snapshot();
+        assert_eq!(s.connections_accepted, 2);
+        assert_eq!(s.connections_refused, 1);
+        assert_eq!(s.active_connections, 1);
     }
 }

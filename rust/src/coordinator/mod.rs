@@ -8,17 +8,29 @@
 //! (independent cross-validation of the sparse incremental objective), and
 //! returns the permutation with timings and metrics.
 //!
+//! Protocol v2 makes the service *stateful across requests*: connections
+//! are persistent (pipelined `MAP`s plus `PING`/`STATS`/`QUIT` verbs), a
+//! bounded LRU of warm [`api::MapSession`](crate::api::MapSession)s lets
+//! repeat jobs skip oracle/pair-set/hierarchy construction, and admission
+//! control answers `BUSY` instead of stalling when the job queue is full.
+//!
 //! * [`job`] — request/response types.
-//! * [`service`] — worker pool, queue, batched verification.
-//! * [`metrics`] — latency/throughput accounting.
-//! * [`wire`] — line-oriented TCP protocol (no external serialization
-//!   crates are available offline) + a blocking client.
+//! * [`service`] — worker pool, queue, session-cache checkout, batched
+//!   verification.
+//! * [`session_cache`] — bounded LRU of warm sessions keyed by
+//!   (graph fingerprint, machine spec, algorithm).
+//! * [`metrics`] — latency/throughput/cache/admission accounting.
+//! * [`wire`] — line-oriented TCP protocol v2 (no external serialization
+//!   crates are available offline) + blocking and persistent clients.
 
 pub mod job;
 pub mod metrics;
 pub mod service;
+pub mod session_cache;
 pub mod wire;
 
 pub use job::{MapRequest, MapResponse};
 pub use metrics::MetricsSnapshot;
 pub use service::Coordinator;
+pub use session_cache::{SessionCache, SessionKey};
+pub use wire::{Client, ServeConfig};

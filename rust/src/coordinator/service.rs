@@ -12,14 +12,23 @@
 //! ```
 //!
 //! The per-job pipeline (repetition loop, scratch reuse, best-of-N, XLA
-//! verification) lives entirely in [`crate::api`]; [`process_job`] is just
-//! the request→job translation plus metrics.
+//! verification) lives entirely in [`crate::api`]; [`process_job`] is the
+//! request→job translation plus session-cache checkout/checkin and metrics.
 //!
 //! Backpressure: `submit` blocks when the queue is full (the launcher-side
-//! contract of a rank-reordering service); `try_submit` refuses instead.
+//! contract of a rank-reordering service); `try_submit` refuses instead —
+//! the wire layer's admission control answers `BUSY` on refusal.
+//!
+//! Warm state: workers consult the [`SessionCache`] before building a
+//! session. A repeat job for a known `(graph fingerprint, machine spec,
+//! algorithm)` key checks the warm [`MapSession`] out, adopts the job
+//! ([`MapSession::adopt_job`] re-verifies the full instance), runs with all
+//! oracle/pair-set/`MlHierarchy` scratch intact, and checks the session
+//! back in afterwards.
 
 use super::job::{MapRequest, MapResponse};
 use super::metrics::{Metrics, MetricsSnapshot};
+use super::session_cache::{Inserted, SessionCache, SessionKey};
 use crate::api::{MapJob, MapSession};
 use crate::runtime::RuntimeHandle;
 use crate::util::Timer;
@@ -31,6 +40,9 @@ use std::thread::JoinHandle;
 /// Relative tolerance for the f32 XLA cross-check (canonical definition in
 /// [`crate::api`]; re-exported here for backwards compatibility).
 pub use crate::api::VERIFY_RTOL;
+
+/// Default number of warm sessions kept by [`Coordinator::start`].
+pub const DEFAULT_SESSION_CACHE_CAPACITY: usize = 16;
 
 struct Queue {
     jobs: Mutex<VecDeque<(MapRequest, Sender<MapResponse>, Timer)>>,
@@ -48,10 +60,21 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start `workers` worker threads. `runtime` (if provided) enables
-    /// batched XLA scoring and verification for problems that fit the
-    /// AOT artifact sizes.
+    /// Start `workers` worker threads with the default session-cache size.
+    /// `runtime` (if provided) enables batched XLA scoring and verification
+    /// for problems that fit the AOT artifact sizes.
     pub fn start(workers: usize, capacity: usize, runtime: Option<RuntimeHandle>) -> Coordinator {
+        Self::start_with(workers, capacity, runtime, DEFAULT_SESSION_CACHE_CAPACITY)
+    }
+
+    /// Like [`Self::start`] with an explicit session-cache capacity
+    /// (`session_cache = 0` disables warm-session reuse entirely).
+    pub fn start_with(
+        workers: usize,
+        capacity: usize,
+        runtime: Option<RuntimeHandle>,
+        session_cache: usize,
+    ) -> Coordinator {
         let queue = Arc::new(Queue {
             jobs: Mutex::new(VecDeque::new()),
             not_empty: Condvar::new(),
@@ -60,12 +83,15 @@ impl Coordinator {
             shutdown: Mutex::new(false),
         });
         let metrics = Arc::new(Metrics::new());
+        metrics.set_queue_capacity(queue.capacity);
+        let cache = Arc::new(Mutex::new(SessionCache::new(session_cache)));
         let handles = (0..workers.max(1))
             .map(|_| {
                 let q = Arc::clone(&queue);
                 let rt = runtime.clone();
                 let m = Arc::clone(&metrics);
-                std::thread::spawn(move || worker_loop(q, rt, m))
+                let c = Arc::clone(&cache);
+                std::thread::spawn(move || worker_loop(q, rt, m, c))
             })
             .collect();
         Coordinator { queue, workers: handles, metrics }
@@ -81,12 +107,14 @@ impl Coordinator {
             jobs = self.queue.not_full.wait(jobs).unwrap();
         }
         jobs.push_back((req, tx, Timer::start()));
+        self.metrics.set_queue_depth(jobs.len());
         drop(jobs);
         self.queue.not_empty.notify_one();
         rx
     }
 
-    /// Submit without blocking; `Err(req)` if the queue is full.
+    /// Submit without blocking; `Err(req)` if the queue is full (the wire
+    /// layer answers `BUSY` and records the rejection).
     pub fn try_submit(
         &self,
         req: MapRequest,
@@ -98,6 +126,7 @@ impl Coordinator {
         }
         self.metrics.on_submit();
         jobs.push_back((req, tx, Timer::start()));
+        self.metrics.set_queue_depth(jobs.len());
         drop(jobs);
         self.queue.not_empty.notify_one();
         Ok(rx)
@@ -112,6 +141,22 @@ impl Coordinator {
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
     }
+
+    /// Shared metrics sink (the wire layer records connection gauges and
+    /// admission-control counters here).
+    pub(crate) fn metrics_sink(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Bounded job-queue capacity (reported in `BUSY` answers).
+    pub fn queue_capacity(&self) -> usize {
+        self.queue.capacity
+    }
+
+    /// Current job-queue depth (reported in `BUSY` answers).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.jobs.lock().unwrap().len()
+    }
 }
 
 impl Drop for Coordinator {
@@ -124,12 +169,18 @@ impl Drop for Coordinator {
     }
 }
 
-fn worker_loop(queue: Arc<Queue>, runtime: Option<RuntimeHandle>, metrics: Arc<Metrics>) {
+fn worker_loop(
+    queue: Arc<Queue>,
+    runtime: Option<RuntimeHandle>,
+    metrics: Arc<Metrics>,
+    cache: Arc<Mutex<SessionCache>>,
+) {
     loop {
         let (req, tx, timer) = {
             let mut jobs = queue.jobs.lock().unwrap();
             loop {
                 if let Some(job) = jobs.pop_front() {
+                    metrics.set_queue_depth(jobs.len());
                     queue.not_full.notify_one();
                     break job;
                 }
@@ -139,32 +190,78 @@ fn worker_loop(queue: Arc<Queue>, runtime: Option<RuntimeHandle>, metrics: Arc<M
                 jobs = queue.not_empty.wait(jobs).unwrap();
             }
         };
-        let resp = process_job(&req, runtime.as_ref(), &metrics, &timer);
+        let resp = process_job(&req, runtime.as_ref(), &metrics, &cache, &timer);
         let failed = resp.error.is_some();
         metrics.on_complete(resp.total_secs, failed);
         let _ = tx.send(resp); // client may have gone away; fine
     }
 }
 
-/// Run one job end-to-end: translate the request into an [`MapJob`], execute
-/// it in a fresh [`MapSession`] (which owns the repetition loop, scratch
-/// reuse, best-of-N selection and XLA verification), record metrics.
+/// Run one job end-to-end: translate the request into an [`MapJob`], check a
+/// warm [`MapSession`] out of the cache (or build a fresh one on a miss),
+/// execute it (the session owns the repetition loop, scratch reuse,
+/// best-of-N selection and XLA verification), check the session back in and
+/// record metrics.
 fn process_job(
     req: &MapRequest,
     runtime: Option<&RuntimeHandle>,
     metrics: &Metrics,
+    cache: &Mutex<SessionCache>,
     timer: &Timer,
 ) -> MapResponse {
     let job = match MapJob::from_request(req) {
         Ok(job) => job,
         Err(e) => return MapResponse::failure(req.id, e),
     };
-    let mut session = MapSession::with_runtime(job, runtime.cloned());
+    let key = SessionKey::new(job.comm(), job.machine(), job.algorithm());
+    let mut session = match checkout_session(cache, key.as_ref(), metrics, job) {
+        Ok(warm) => warm,
+        Err(job) => MapSession::new(job),
+    };
+    session.set_runtime(runtime.cloned());
     let report = session.run();
     if let Some(ok) = report.verified {
         metrics.on_verification(ok);
     }
+    if let Some(key) = key {
+        let mut cache = cache.lock().unwrap();
+        if cache.insert(key, session) == Inserted::Evicted {
+            metrics.on_cache_eviction();
+        }
+        metrics.set_cache_entries(cache.len());
+    }
     MapResponse::from_report(req.id, report, timer.secs())
+}
+
+/// Try to check a warm session out of the cache and adopt `job` into it.
+/// Returns the job back on any miss (no key, nothing cached, or the warm
+/// session's instance doesn't actually match — fingerprint hint disproved).
+fn checkout_session(
+    cache: &Mutex<SessionCache>,
+    key: Option<&SessionKey>,
+    metrics: &Metrics,
+    job: MapJob,
+) -> Result<MapSession, MapJob> {
+    let Some(key) = key else {
+        return Err(job); // uncacheable (explicit machine): not a cache miss
+    };
+    let warm = cache.lock().unwrap().take(key);
+    match warm {
+        Some(mut session) => match session.adopt_job(job) {
+            Ok(()) => {
+                metrics.on_cache_hit();
+                Ok(session)
+            }
+            Err(job) => {
+                metrics.on_cache_miss();
+                Err(job)
+            }
+        },
+        None => {
+            metrics.on_cache_miss();
+            Err(job)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -262,6 +359,59 @@ mod tests {
             }
         }
         assert!(refused, "bounded queue never refused");
+    }
+
+    #[test]
+    fn repeat_jobs_hit_session_cache() {
+        // 1 worker ⇒ serial execution ⇒ the 2nd..4th identical instances are
+        // guaranteed to find the checked-in warm session.
+        let coord = Coordinator::start(1, 8, None);
+        let first = coord.submit_blocking(request(1, "mm", 1));
+        let mut sigmas = vec![first.sigma];
+        for id in 2..=4 {
+            let mut req = request(1, "mm", 1);
+            req.id = id;
+            sigmas.push(coord.submit_blocking(req).sigma);
+        }
+        let snap = coord.metrics();
+        assert_eq!(snap.cache_misses, 1, "only the first job builds a session");
+        assert_eq!(snap.cache_hits, 3);
+        assert_eq!(snap.cache_entries, 1);
+        // warm answers are bit-identical to the cold one ("mm" is deterministic)
+        assert!(sigmas.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn distinct_instances_occupy_distinct_cache_slots() {
+        let coord = Coordinator::start(1, 8, None);
+        let _ = coord.submit_blocking(request(1, "mm", 1));
+        let _ = coord.submit_blocking(request(2, "mm", 1)); // different graph
+        let _ = coord.submit_blocking(request(1, "identity", 1)); // different algo
+        let snap = coord.metrics();
+        assert_eq!(snap.cache_hits, 0);
+        assert_eq!(snap.cache_misses, 3);
+        assert_eq!(snap.cache_entries, 3);
+    }
+
+    #[test]
+    fn zero_capacity_cache_disables_reuse() {
+        let coord = Coordinator::start_with(1, 8, None, 0);
+        let _ = coord.submit_blocking(request(1, "mm", 1));
+        let _ = coord.submit_blocking(request(1, "mm", 1));
+        let snap = coord.metrics();
+        assert_eq!(snap.cache_hits, 0);
+        assert_eq!(snap.cache_misses, 2);
+        assert_eq!(snap.cache_entries, 0);
+    }
+
+    #[test]
+    fn queue_gauges_track_capacity() {
+        let coord = Coordinator::start(2, 5, None);
+        assert_eq!(coord.queue_capacity(), 5);
+        let snap = coord.metrics();
+        assert_eq!(snap.queue_capacity, 5);
+        let _ = coord.submit_blocking(request(1, "identity", 1));
+        assert_eq!(coord.queue_depth(), 0, "drained after blocking submit");
     }
 
     #[test]

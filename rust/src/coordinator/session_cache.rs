@@ -1,0 +1,242 @@
+//! Server-side cache of warm [`MapSession`]s (the tentpole of ROADMAP
+//! item 2).
+//!
+//! The paper's algorithms assume the expensive state — the distance oracle,
+//! the `N_C^d` pair/triangle sets, the multilevel hierarchy — is built once
+//! and reused; [`MapSession`] already caches exactly that across
+//! repetitions. This module extends the reuse across *requests*: a bounded
+//! LRU of warm sessions keyed by
+//!
+//! ```text
+//! SessionKey = (graph fingerprint, machine spec, algorithm name)
+//! ```
+//!
+//! so repeat traffic for the same instance skips oracle, pair-set and
+//! `MlHierarchy` construction entirely and goes straight to search.
+//!
+//! Concurrency model: **check-out / check-in**. A worker `take`s the
+//! session out of the cache (holding the cache mutex only for the lookup),
+//! runs the job unlocked, and `insert`s the session back when done. Two
+//! concurrent jobs for the same key therefore never share a session — the
+//! second simply misses and builds fresh; whichever finishes last wins the
+//! slot. The key is a hint, not a proof: the adopting session re-verifies
+//! the full instance ([`MapSession::adopt_job`]) so a fingerprint collision
+//! degrades to a miss, never a wrong answer.
+//!
+//! Eviction is least-recently-*used* (both `take` and `insert` refresh an
+//! entry's clock) with a deterministic tie-break (oldest insertion order),
+//! so tests can pin the exact eviction sequence.
+
+use crate::api::MapSession;
+use crate::graph::Graph;
+use crate::mapping::algorithms::AlgorithmSpec;
+use crate::model::topology::Machine;
+
+/// Cache identity of a mapping instance as seen by the service.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionKey {
+    /// Stable structural hash of the communication graph
+    /// ([`crate::graph::fingerprint`]).
+    pub fingerprint: u64,
+    /// Canonical machine grammar spec (`Machine::spec`). Explicit-matrix
+    /// machines have no spec — they cannot cross the wire either, so they
+    /// never reach the cache ([`SessionKey::new`] returns `None`).
+    pub machine: String,
+    /// Canonical algorithm name (`AlgorithmSpec::name`), which pins the
+    /// refiner scratch shape (pair sets for `Nc<d>`, triangle sets for the
+    /// cyclic searches, the `ml:` hierarchy).
+    pub algorithm: String,
+}
+
+impl SessionKey {
+    /// Key for an instance, or `None` when the machine has no canonical
+    /// spec (explicit matrices — session-local by definition).
+    pub fn new(comm: &Graph, machine: &Machine, algorithm: &AlgorithmSpec) -> Option<SessionKey> {
+        Some(SessionKey {
+            fingerprint: comm.fingerprint(),
+            machine: machine.spec().ok()?,
+            algorithm: algorithm.name(),
+        })
+    }
+}
+
+struct Entry {
+    key: SessionKey,
+    session: MapSession,
+    last_used: u64,
+}
+
+/// Outcome of [`SessionCache::insert`], for the caller's metrics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Inserted {
+    /// Stored in a free slot.
+    Stored,
+    /// Replaced an existing entry with the same key (check-in after a
+    /// concurrent job built a duplicate, or a deliberate refresh).
+    Replaced,
+    /// Stored after evicting the least-recently-used entry.
+    Evicted,
+    /// Dropped — the cache has capacity 0 (caching disabled).
+    Dropped,
+}
+
+/// Bounded LRU of warm sessions. Not synchronized itself — the coordinator
+/// wraps it in a `Mutex` and holds the lock only for `take`/`insert`.
+pub struct SessionCache {
+    capacity: usize,
+    clock: u64,
+    entries: Vec<Entry>,
+}
+
+impl SessionCache {
+    /// A cache holding at most `capacity` warm sessions (0 disables).
+    pub fn new(capacity: usize) -> SessionCache {
+        SessionCache { capacity, clock: 0, entries: Vec::new() }
+    }
+
+    /// Maximum number of entries.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Current number of entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no session is cached.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Check a session *out* of the cache: the entry is removed, the caller
+    /// owns the session for the duration of the job and is expected to
+    /// [`Self::insert`] it back (concurrent jobs for the same key miss in
+    /// the meantime, by design).
+    pub fn take(&mut self, key: &SessionKey) -> Option<MapSession> {
+        self.clock += 1;
+        let idx = self.entries.iter().position(|e| &e.key == key)?;
+        Some(self.entries.remove(idx).session)
+    }
+
+    /// Check a session *in*. Same-key entries are replaced (latest wins);
+    /// a full cache evicts the least-recently-used entry first.
+    pub fn insert(&mut self, key: SessionKey, session: MapSession) -> Inserted {
+        if self.capacity == 0 {
+            return Inserted::Dropped;
+        }
+        self.clock += 1;
+        if let Some(e) = self.entries.iter_mut().find(|e| e.key == key) {
+            e.session = session;
+            e.last_used = self.clock;
+            return Inserted::Replaced;
+        }
+        let mut outcome = Inserted::Stored;
+        if self.entries.len() >= self.capacity {
+            // deterministic LRU: min clock wins; Vec order breaks ties by age
+            let oldest = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i)
+                .expect("non-empty at capacity");
+            self.entries.remove(oldest);
+            outcome = Inserted::Evicted;
+        }
+        self.entries.push(Entry { key, session, last_used: self.clock });
+        outcome
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::MapJobBuilder;
+    use crate::gen::random_geometric_graph;
+    use crate::util::Rng;
+
+    fn session(n: usize, graph_seed: u64, algo: &str) -> (SessionKey, MapSession) {
+        let mut rng = Rng::new(graph_seed);
+        let comm = random_geometric_graph(n, &mut rng);
+        let machine = Machine::parse(&format!("grid:{n}@1")).unwrap();
+        let job = MapJobBuilder::for_machine(comm, machine)
+            .algorithm_name(algo)
+            .unwrap()
+            .build()
+            .unwrap();
+        let key = SessionKey::new(job.comm(), job.machine(), job.algorithm()).unwrap();
+        (key, MapSession::new(job))
+    }
+
+    #[test]
+    fn take_checks_out_and_removes() {
+        let mut cache = SessionCache::new(4);
+        let (key, s) = session(16, 1, "identity");
+        assert_eq!(cache.insert(key.clone(), s), Inserted::Stored);
+        assert_eq!(cache.len(), 1);
+        assert!(cache.take(&key).is_some());
+        assert!(cache.is_empty());
+        // checked out: a second take (concurrent same-key job) misses
+        assert!(cache.take(&key).is_none());
+    }
+
+    #[test]
+    fn key_distinguishes_graph_machine_and_algorithm() {
+        let (k1, _) = session(16, 1, "identity");
+        let (k2, _) = session(16, 2, "identity"); // different graph
+        let (k3, _) = session(16, 1, "mm"); // different algorithm
+        assert_ne!(k1, k2);
+        assert_ne!(k1, k3);
+        let (k4, _) = session(16, 1, "identity");
+        assert_eq!(k1, k4);
+    }
+
+    #[test]
+    fn same_key_insert_replaces_instead_of_growing() {
+        let mut cache = SessionCache::new(2);
+        let (key, s1) = session(16, 1, "identity");
+        let (_, s2) = session(16, 1, "identity");
+        assert_eq!(cache.insert(key.clone(), s1), Inserted::Stored);
+        assert_eq!(cache.insert(key, s2), Inserted::Replaced);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut cache = SessionCache::new(2);
+        let (ka, sa) = session(16, 1, "identity");
+        let (kb, sb) = session(16, 2, "identity");
+        let (kc, sc) = session(16, 3, "identity");
+        cache.insert(ka.clone(), sa);
+        cache.insert(kb.clone(), sb);
+        // touch A so B becomes the LRU entry
+        let sa = cache.take(&ka).unwrap();
+        cache.insert(ka.clone(), sa);
+        assert_eq!(cache.insert(kc.clone(), sc), Inserted::Evicted);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.take(&kb).is_none(), "B was least recently used");
+        assert!(cache.take(&ka).is_some());
+        assert!(cache.take(&kc).is_some());
+    }
+
+    #[test]
+    fn capacity_zero_disables_caching() {
+        let mut cache = SessionCache::new(0);
+        let (key, s) = session(16, 1, "identity");
+        assert_eq!(cache.insert(key.clone(), s), Inserted::Dropped);
+        assert!(cache.is_empty());
+        assert!(cache.take(&key).is_none());
+    }
+
+    #[test]
+    fn explicit_machines_have_no_key() {
+        let mut rng = Rng::new(1);
+        let comm = random_geometric_graph(16, &mut rng);
+        let grid = Machine::parse("grid:16@1").unwrap();
+        let explicit = Machine::explicit(&grid);
+        let spec = AlgorithmSpec::parse("identity").unwrap();
+        assert!(SessionKey::new(&comm, &explicit, &spec).is_none());
+        assert!(SessionKey::new(&comm, &grid, &spec).is_some());
+    }
+}

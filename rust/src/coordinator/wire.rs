@@ -1,13 +1,17 @@
-//! Line-oriented TCP protocol for the mapping service.
+//! Line-oriented TCP protocol for the mapping service (v2: persistent
+//! connections).
 //!
 //! No serialization crates exist in the offline vendor set, so the wire
-//! format is a simple, versioned text protocol (one request / one response
-//! per connection — the launcher-side usage pattern):
+//! format is a simple, versioned text protocol. Since protocol v2 a
+//! connection is a *session*: the server loops, serving pipelined requests
+//! on one connection until EOF or `QUIT` — a v1 single-shot client (one
+//! `MAP`, read response, close) still works byte-for-byte, its EOF simply
+//! ends the loop after the first exchange.
 //!
 //! ```text
 //! C->S:  MAP v1 <id> <algo> <S> <D> <reps> <seed> <verify:0|1> <n> <m>
 //!            [machine=<spec>] [levels=<l>] [coarsen_limit=<c>]
-//!        <u> <v> <w>          (m edge lines)
+//!        <u> <v> <w>          (≤ m edge lines)
 //!        END
 //! S->C:  OK <id> <objective> <j_initial> <construct_secs> <ls_secs>
 //!           <xla_obj|-> <verified:0|1|-> <best_rep> <nreps>
@@ -16,6 +20,11 @@
 //!            [<nlevels> (<n>:<j_init>:<j>:<evaluated>:<improved>:<rounds>)*]
 //!        SIGMA <n space-separated PE ids>
 //!   or:  ERR <id> <message...>
+//!   or:  BUSY <id> <queue_depth> <queue_capacity>
+//!
+//! C->S:  PING [token]         S->C:  PONG [token]
+//! C->S:  STATS                S->C:  STATS key=value ...
+//! C->S:  QUIT                 S->C:  BYE            (then close)
 //! ```
 //!
 //! The request header ends with optional `key=value` tokens — the same
@@ -24,10 +33,27 @@
 //! parse new clients' default-knob jobs unchanged); grids and tori put
 //! `-` placeholders there and carry the full machine grammar in a
 //! `machine=` token (e.g. `machine=torus:4x4x4@1`). `levels=` and
-//! `coarsen_limit=` expose the V-cycle depth knobs that used to be
-//! session-local — the ROADMAP's "coordinator expose levels/coarsen_limit"
-//! item. Readers accept the bare 11-token header (old writers) and reject
-//! unknown option keys.
+//! `coarsen_limit=` expose the V-cycle depth knobs. Readers accept the bare
+//! 11-token header (old writers) and reject unknown option keys.
+//!
+//! **Admission control.** `MAP` is admitted via the coordinator's
+//! non-blocking [`Coordinator::try_submit`]; a full job queue answers
+//! `BUSY` immediately instead of stalling the connection (clients retry or
+//! redirect — [`MapResponse::is_busy`]). Per-connection fairness is a
+//! bounded in-flight window: the reader stops pulling new requests once
+//! `inflight_per_connection` responses are pending, so one pipelining
+//! client cannot monopolize the job queue, and a client that never reads
+//! is throttled by TCP backpressure. The connection count itself is capped
+//! ([`ServeConfig::max_connections`]); refused connections get a one-line
+//! `ERR` and are counted in the metrics.
+//!
+//! **Input bounding.** Every line read is capped at [`MAX_LINE_BYTES`];
+//! the declared graph sizes are capped at [`MAX_WIRE_N`]/[`MAX_WIRE_M`],
+//! edge lines may not exceed the declared `m`, and edge endpoints must lie
+//! in `0..n` — a malformed or hostile request gets a clean `ERR` (echoing
+//! the request id whenever the header parsed that far) instead of
+//! unbounded allocation. After a framing error the connection closes: the
+//! byte stream can no longer be trusted.
 //!
 //! The per-repetition `REP` lines carry `api::RepStat` verbatim, so clients
 //! see every seed's objective/timing, not just the winner's — including the
@@ -40,6 +66,7 @@
 //! round-trip.
 
 use super::job::{MapRequest, MapResponse};
+use super::metrics::{Metrics, MetricsSnapshot};
 use super::service::Coordinator;
 use crate::api::{LevelStat, RepStat};
 use crate::graph::{Builder, NodeId};
@@ -49,7 +76,45 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Arc;
+
+/// Hard cap on any single wire line (header, edge, verb, response frame).
+pub const MAX_LINE_BYTES: u64 = 1 << 16;
+/// Hard cap on a request's declared vertex count.
+pub const MAX_WIRE_N: usize = 1 << 22;
+/// Hard cap on a request's declared edge count.
+pub const MAX_WIRE_M: usize = 1 << 27;
+
+/// Serving-loop knobs (see the module docs on admission control).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Maximum concurrent connections; further accepts are answered with a
+    /// one-line `ERR` and closed (counted as refused).
+    pub max_connections: usize,
+    /// Per-connection pipelining window: how many responses may be pending
+    /// before the reader stops admitting that connection's next request.
+    pub inflight_per_connection: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_connections: 64, inflight_per_connection: 8 }
+    }
+}
+
+/// Read one `\n`-terminated line, capped at [`MAX_LINE_BYTES`]; a longer
+/// line is a protocol error (never an unbounded buffer). Returns the byte
+/// count (0 at EOF), like `read_line`.
+fn read_capped_line<R: BufRead>(r: &mut R, buf: &mut String) -> Result<usize> {
+    buf.clear();
+    let mut limited = r.take(MAX_LINE_BYTES);
+    let n = limited.read_line(buf)?;
+    if n as u64 >= MAX_LINE_BYTES && !buf.ends_with('\n') {
+        bail!("line exceeds {MAX_LINE_BYTES} bytes");
+    }
+    Ok(n)
+}
 
 /// Serialize a request.
 pub fn write_request<W: Write>(w: &mut W, req: &MapRequest) -> Result<()> {
@@ -97,15 +162,32 @@ pub fn write_request<W: Write>(w: &mut W, req: &MapRequest) -> Result<()> {
     Ok(())
 }
 
-/// Parse a request from a line reader.
-pub fn read_request<R: BufRead>(r: &mut R) -> Result<MapRequest> {
-    let mut header = String::new();
-    r.read_line(&mut header).context("reading header")?;
+/// A request-parse failure that remembers how far the header got: `id` is
+/// the request id when the header parsed that far, 0 otherwise — the
+/// serving loop echoes it in the `ERR` frame so pipelining clients can
+/// correlate the failure.
+struct RequestError {
+    id: u64,
+    error: anyhow::Error,
+}
+
+/// Parse a `MAP` request given its already-read header line (the serving
+/// loop dispatches on the first token before coming here).
+fn parse_map<R: BufRead>(header: &str, r: &mut R) -> std::result::Result<MapRequest, RequestError> {
     let toks: Vec<&str> = header.split_whitespace().collect();
     if toks.len() < 11 || toks[0] != "MAP" || toks[1] != "v1" {
-        bail!("bad header: {header:?}");
+        return Err(RequestError { id: 0, error: anyhow!("bad header: {header:?}") });
     }
-    let id: u64 = toks[2].parse()?;
+    let id: u64 = match toks[2].parse() {
+        Ok(id) => id,
+        Err(_) => {
+            return Err(RequestError { id: 0, error: anyhow!("bad request id {:?}", toks[2]) })
+        }
+    };
+    parse_map_body(id, &toks, r).map_err(|error| RequestError { id, error })
+}
+
+fn parse_map_body<R: BufRead>(id: u64, toks: &[&str], r: &mut R) -> Result<MapRequest> {
     let algorithm = AlgorithmSpec::parse(toks[3]).map_err(|e| anyhow!(e))?;
     // trailing key=value job options (the PR 2 REP-style extension):
     // machine= overrides the S/D tokens, levels=/coarsen_limit= carry the
@@ -114,8 +196,7 @@ pub fn read_request<R: BufRead>(r: &mut R) -> Result<MapRequest> {
     let mut levels: Option<usize> = None;
     let mut coarsen_limit: Option<usize> = None;
     for tok in &toks[11..] {
-        let (key, value) =
-            tok.split_once('=').ok_or_else(|| anyhow!("bad job option {tok:?}"))?;
+        let (key, value) = tok.split_once('=').ok_or_else(|| anyhow!("bad job option {tok:?}"))?;
         match key {
             "machine" => machine = Some(Machine::parse(value).map_err(|e| anyhow!(e))?),
             "levels" => levels = Some(value.parse()?),
@@ -126,32 +207,47 @@ pub fn read_request<R: BufRead>(r: &mut R) -> Result<MapRequest> {
     let machine = match machine {
         Some(m) => m,
         None if toks[4] == "-" => bail!("header has no machine (S/D are '-' and no machine=)"),
-        None => Machine::parse(&format!("hier:{}@{}", toks[4], toks[5]))
-            .map_err(|e| anyhow!(e))?,
+        None => {
+            Machine::parse(&format!("hier:{}@{}", toks[4], toks[5])).map_err(|e| anyhow!(e))?
+        }
     };
     let repetitions: u32 = toks[6].parse()?;
     let seed: u64 = toks[7].parse()?;
     let verify = toks[8] == "1";
     let n: usize = toks[9].parse()?;
-    // header token 10 is m — trailing; recount while reading
+    if n > MAX_WIRE_N {
+        bail!("declared n {n} exceeds wire limit {MAX_WIRE_N}");
+    }
+    let m: usize = toks[10].parse()?;
+    if m > MAX_WIRE_M {
+        bail!("declared m {m} exceeds wire limit {MAX_WIRE_M}");
+    }
     let mut b = Builder::new(n);
+    let mut edges = 0usize;
     let mut line = String::new();
     loop {
-        line.clear();
-        if r.read_line(&mut line)? == 0 {
+        if read_capped_line(r, &mut line)? == 0 {
             bail!("connection closed before END");
         }
         let t = line.trim();
         if t == "END" {
             break;
         }
+        if edges >= m {
+            bail!("more than the declared m = {m} edge lines");
+        }
+        edges += 1;
         let mut it = t.split_whitespace();
         let (u, v, w) = (
             it.next().ok_or_else(|| anyhow!("bad edge line {t:?}"))?,
             it.next().ok_or_else(|| anyhow!("bad edge line {t:?}"))?,
             it.next().ok_or_else(|| anyhow!("bad edge line {t:?}"))?,
         );
-        b.add_edge(u.parse()?, v.parse()?, w.parse()?);
+        let (u, v): (NodeId, NodeId) = (u.parse()?, v.parse()?);
+        if u as usize >= n || v as usize >= n {
+            bail!("edge endpoint out of range in {t:?} (n = {n})");
+        }
+        b.add_edge(u, v, w.parse()?);
     }
     Ok(MapRequest {
         id,
@@ -164,6 +260,15 @@ pub fn read_request<R: BufRead>(r: &mut R) -> Result<MapRequest> {
         levels,
         coarsen_limit,
     })
+}
+
+/// Parse a request from a line reader (header included).
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<MapRequest> {
+    let mut header = String::new();
+    if read_capped_line(r, &mut header).context("reading header")? == 0 {
+        bail!("connection closed before header");
+    }
+    parse_map(&header, r).map_err(|e| e.error)
 }
 
 /// Escape an error message for the single-line `ERR` frame (`\r` too —
@@ -261,6 +366,14 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<MapResponse> {
             let msg = raw.splitn(3, ' ').nth(2).unwrap_or("");
             Ok(MapResponse::failure(id, unescape_msg(msg)))
         }
+        Some(&"BUSY") => {
+            // admission control refused the job: not a protocol error, a
+            // retryable failure response (`MapResponse::is_busy`)
+            if toks.len() != 4 {
+                bail!("bad BUSY line: {line:?}");
+            }
+            Ok(MapResponse::busy(toks[1].parse()?, toks[2].parse()?, toks[3].parse()?))
+        }
         Some(&"OK") => {
             if toks.len() != 10 {
                 bail!("bad OK line: {line:?}");
@@ -352,21 +465,118 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<MapResponse> {
     }
 }
 
-/// Serve the coordinator over TCP until `stop` becomes true. One thread per
-/// connection; one request per connection.
+/// Render a metrics snapshot as the `STATS` verb's single `key=value` line
+/// (trailing newline included). Unknown keys are ignored by
+/// [`parse_stats_line`], so fields can be appended compatibly.
+pub fn stats_line(s: &MetricsSnapshot) -> String {
+    format!(
+        "STATS jobs_submitted={} jobs_completed={} jobs_failed={} jobs_busy_rejected={} \
+         verifications={} verification_mismatches={} cache_hits={} cache_misses={} \
+         cache_evictions={} cache_entries={} queue_depth={} queue_capacity={} \
+         connections_accepted={} connections_refused={} active_connections={} \
+         mean_latency_secs={} p50_latency_secs={} p99_latency_secs={}\n",
+        s.jobs_submitted,
+        s.jobs_completed,
+        s.jobs_failed,
+        s.jobs_busy_rejected,
+        s.verifications,
+        s.verification_mismatches,
+        s.cache_hits,
+        s.cache_misses,
+        s.cache_evictions,
+        s.cache_entries,
+        s.queue_depth,
+        s.queue_capacity,
+        s.connections_accepted,
+        s.connections_refused,
+        s.active_connections,
+        s.mean_latency_secs,
+        s.p50_latency_secs,
+        s.p99_latency_secs,
+    )
+}
+
+/// Inverse of [`stats_line`]. Missing keys default to 0; unknown keys are
+/// ignored (a newer server may report more).
+pub fn parse_stats_line(line: &str) -> Result<MetricsSnapshot> {
+    let mut toks = line.split_whitespace();
+    if toks.next() != Some("STATS") {
+        bail!("bad STATS line: {line:?}");
+    }
+    let mut s = MetricsSnapshot::default();
+    for tok in toks {
+        let (key, value) = tok.split_once('=').ok_or_else(|| anyhow!("bad STATS field {tok:?}"))?;
+        match key {
+            "jobs_submitted" => s.jobs_submitted = value.parse()?,
+            "jobs_completed" => s.jobs_completed = value.parse()?,
+            "jobs_failed" => s.jobs_failed = value.parse()?,
+            "jobs_busy_rejected" => s.jobs_busy_rejected = value.parse()?,
+            "verifications" => s.verifications = value.parse()?,
+            "verification_mismatches" => s.verification_mismatches = value.parse()?,
+            "cache_hits" => s.cache_hits = value.parse()?,
+            "cache_misses" => s.cache_misses = value.parse()?,
+            "cache_evictions" => s.cache_evictions = value.parse()?,
+            "cache_entries" => s.cache_entries = value.parse()?,
+            "queue_depth" => s.queue_depth = value.parse()?,
+            "queue_capacity" => s.queue_capacity = value.parse()?,
+            "connections_accepted" => s.connections_accepted = value.parse()?,
+            "connections_refused" => s.connections_refused = value.parse()?,
+            "active_connections" => s.active_connections = value.parse()?,
+            "mean_latency_secs" => s.mean_latency_secs = value.parse()?,
+            "p50_latency_secs" => s.p50_latency_secs = value.parse()?,
+            "p99_latency_secs" => s.p99_latency_secs = value.parse()?,
+            _ => {} // forward compatibility
+        }
+    }
+    Ok(s)
+}
+
+/// Serve the coordinator over TCP with default [`ServeConfig`] until `stop`
+/// becomes true. One thread per connection, many requests per connection.
 pub fn serve(
     listener: TcpListener,
     coordinator: Arc<Coordinator>,
     stop: Arc<AtomicBool>,
 ) -> Result<()> {
+    serve_with(listener, coordinator, stop, ServeConfig::default())
+}
+
+/// [`serve`] with explicit connection-cap / pipelining knobs. Finished
+/// connection threads are reaped on every accept-loop pass, so a
+/// long-running server holds one `JoinHandle` per *live* connection, not
+/// per connection ever accepted.
+pub fn serve_with(
+    listener: TcpListener,
+    coordinator: Arc<Coordinator>,
+    stop: Arc<AtomicBool>,
+    cfg: ServeConfig,
+) -> Result<()> {
     listener.set_nonblocking(true)?;
-    let mut handles = Vec::new();
+    let max_conns = cfg.max_connections.max(1);
+    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
     while !stop.load(Ordering::Relaxed) {
+        let mut i = 0;
+        while i < handles.len() {
+            if handles[i].is_finished() {
+                let _ = handles.swap_remove(i).join();
+            } else {
+                i += 1;
+            }
+        }
         match listener.accept() {
             Ok((stream, _)) => {
+                let metrics = Arc::clone(coordinator.metrics_sink());
+                if handles.len() >= max_conns {
+                    metrics.on_connection_refused();
+                    let _ = refuse(stream, max_conns);
+                    continue;
+                }
+                metrics.on_connection_open();
                 let coord = Arc::clone(&coordinator);
+                let inflight = cfg.inflight_per_connection;
                 handles.push(std::thread::spawn(move || {
-                    let _ = handle_connection(stream, &coord);
+                    let _open = ConnGuard(metrics);
+                    let _ = handle_connection(stream, &coord, inflight);
                 }));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -381,20 +591,139 @@ pub fn serve(
     Ok(())
 }
 
-fn handle_connection(stream: TcpStream, coord: &Coordinator) -> Result<()> {
-    stream.set_nonblocking(false)?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
-    let resp = match read_request(&mut reader) {
-        Ok(req) => coord.submit_blocking(req),
-        Err(e) => MapResponse::failure(0, format!("protocol error: {e}")),
-    };
-    write_response(&mut writer, &resp)?;
-    writer.flush()?;
+/// Keeps the active-connection gauge honest on every exit path (panic
+/// included) of a connection thread.
+struct ConnGuard(Arc<Metrics>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.on_connection_close();
+    }
+}
+
+/// Answer a connection refused at the cap with one `ERR` line and close.
+fn refuse(stream: TcpStream, cap: usize) -> Result<()> {
+    let mut w = BufWriter::new(stream);
+    writeln!(w, "ERR 0 server busy: connection limit ({cap})")?;
+    w.flush()?;
     Ok(())
 }
 
-/// Blocking client: one request, one response.
+/// One queued answer, in request order: either an immediate line (PONG,
+/// STATS, BUSY, ERR, BYE) or a job's pending response channel.
+enum Reply {
+    Raw(String),
+    Job(Receiver<MapResponse>),
+}
+
+/// The v2 serving loop for one connection: a reader half parses pipelined
+/// requests and enqueues [`Reply`]s; a writer thread drains them in FIFO
+/// order, blocking on each job's channel as needed. The `sync_channel`
+/// capacity *is* the per-connection in-flight cap — once it fills, the
+/// reader stops admitting requests and TCP backpressure throttles the
+/// client.
+fn handle_connection(stream: TcpStream, coord: &Coordinator, inflight: usize) -> Result<()> {
+    stream.set_nonblocking(false)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let (tx, rx) = sync_channel::<Reply>(inflight.max(1));
+    let writer = std::thread::spawn(move || -> Result<()> {
+        let mut w = BufWriter::new(stream);
+        for reply in rx {
+            match reply {
+                Reply::Raw(line) => w.write_all(line.as_bytes())?,
+                Reply::Job(done) => {
+                    let resp = done
+                        .recv()
+                        .unwrap_or_else(|_| MapResponse::failure(0, "worker hung up".into()));
+                    write_response(&mut w, &resp)?;
+                }
+            }
+            // flush per reply: a single-shot (v1) client must see its
+            // response without waiting for the connection to close
+            w.flush()?;
+        }
+        Ok(())
+    });
+    let mut line = String::new();
+    loop {
+        let n = match read_capped_line(&mut reader, &mut line) {
+            Ok(n) => n,
+            Err(e) => {
+                let _ = tx.send(err_reply(0, &format!("protocol error: {e:#}")));
+                break;
+            }
+        };
+        if n == 0 {
+            break; // EOF: the client is done (v1 single-shot ends here)
+        }
+        let trimmed = line.trim();
+        let Some(verb) = trimmed.split_whitespace().next() else {
+            continue; // blank line between frames: tolerated
+        };
+        match verb {
+            "PING" => {
+                let token = trimmed[4..].trim();
+                let pong =
+                    if token.is_empty() { "PONG\n".into() } else { format!("PONG {token}\n") };
+                if tx.send(Reply::Raw(pong)).is_err() {
+                    break;
+                }
+            }
+            "STATS" => {
+                if tx.send(Reply::Raw(stats_line(&coord.metrics()))).is_err() {
+                    break;
+                }
+            }
+            "QUIT" => {
+                let _ = tx.send(Reply::Raw("BYE\n".into()));
+                break;
+            }
+            "MAP" => match parse_map(trimmed, &mut reader) {
+                Ok(req) => {
+                    let id = req.id;
+                    match coord.try_submit(req) {
+                        Ok(done) => {
+                            if tx.send(Reply::Job(done)).is_err() {
+                                break;
+                            }
+                        }
+                        Err(_refused) => {
+                            coord.metrics_sink().on_busy_rejection();
+                            let busy = format!(
+                                "BUSY {id} {} {}\n",
+                                coord.queue_depth(),
+                                coord.queue_capacity()
+                            );
+                            if tx.send(Reply::Raw(busy)).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                }
+                Err(e) => {
+                    // framing is lost after a bad MAP body; answer and close
+                    let _ = tx.send(err_reply(e.id, &format!("protocol error: {:#}", e.error)));
+                    break;
+                }
+            },
+            other => {
+                let _ = tx.send(err_reply(0, &format!("protocol error: unknown verb {other:?}")));
+                break;
+            }
+        }
+    }
+    drop(tx); // writer drains the in-flight window, then exits
+    match writer.join() {
+        Ok(result) => result,
+        Err(_) => Err(anyhow!("connection writer panicked")),
+    }
+}
+
+fn err_reply(id: u64, msg: &str) -> Reply {
+    Reply::Raw(format!("ERR {id} {}\n", escape_msg(msg)))
+}
+
+/// Blocking v1-style helper: open a connection, run one request, close.
 pub fn request<A: ToSocketAddrs>(addr: A, req: &MapRequest) -> Result<MapResponse> {
     let stream = TcpStream::connect(addr)?;
     let mut writer = BufWriter::new(stream.try_clone()?);
@@ -402,6 +731,78 @@ pub fn request<A: ToSocketAddrs>(addr: A, req: &MapRequest) -> Result<MapRespons
     writer.flush()?;
     let mut reader = BufReader::new(stream);
     read_response(&mut reader)
+}
+
+/// Persistent v2 client: one connection, many requests. `send`/`recv` are
+/// split so callers can pipeline (up to the server's per-connection
+/// in-flight cap); responses come back in request order.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: BufWriter::new(stream) })
+    }
+
+    /// Queue one request without waiting for its response.
+    pub fn send(&mut self, req: &MapRequest) -> Result<()> {
+        write_request(&mut self.writer, req)?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Read the next response (requests are answered in order).
+    pub fn recv(&mut self) -> Result<MapResponse> {
+        read_response(&mut self.reader)
+    }
+
+    /// One request, one response.
+    pub fn map(&mut self, req: &MapRequest) -> Result<MapResponse> {
+        self.send(req)?;
+        self.recv()
+    }
+
+    /// Liveness probe; returns the echoed token.
+    pub fn ping(&mut self, token: &str) -> Result<String> {
+        if token.is_empty() {
+            writeln!(self.writer, "PING")?;
+        } else {
+            writeln!(self.writer, "PING {token}")?;
+        }
+        self.writer.flush()?;
+        let mut line = String::new();
+        read_capped_line(&mut self.reader, &mut line)?;
+        let t = line.trim();
+        match t.strip_prefix("PONG") {
+            Some(rest) => Ok(rest.trim().to_string()),
+            None => bail!("expected PONG, got {t:?}"),
+        }
+    }
+
+    /// Fetch the server's metrics snapshot.
+    pub fn stats(&mut self) -> Result<MetricsSnapshot> {
+        writeln!(self.writer, "STATS")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        read_capped_line(&mut self.reader, &mut line)?;
+        parse_stats_line(line.trim())
+    }
+
+    /// Graceful shutdown of this connection (drain your `recv`s first:
+    /// `BYE` is the next frame after all pending responses).
+    pub fn quit(mut self) -> Result<()> {
+        writeln!(self.writer, "QUIT")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        read_capped_line(&mut self.reader, &mut line)?;
+        if line.trim() != "BYE" {
+            bail!("expected BYE, got {:?}", line.trim());
+        }
+        Ok(())
+    }
 }
 
 /// Helper for tests: consume the rest of a reader (drain).
@@ -429,6 +830,20 @@ mod tests {
             levels: None,
             coarsen_limit: None,
         }
+    }
+
+    fn spawn_server(
+        coord: Arc<Coordinator>,
+        cfg: ServeConfig,
+    ) -> (std::net::SocketAddr, Arc<AtomicBool>, std::thread::JoinHandle<Result<()>>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let server = {
+            let s = Arc::clone(&stop);
+            std::thread::spawn(move || serve_with(listener, coord, s, cfg))
+        };
+        (addr, stop, server)
     }
 
     #[test]
@@ -488,6 +903,44 @@ mod tests {
                 "{bad:?} must be rejected"
             );
         }
+    }
+
+    #[test]
+    fn oversized_declared_sizes_rejected() {
+        // a hostile header cannot make the server allocate unboundedly: the
+        // declared n/m are checked before any buffer is sized
+        let big_n = format!("MAP v1 1 mm 4 1 1 0 0 {} 0\nEND\n", MAX_WIRE_N + 1);
+        let big_m = format!("MAP v1 1 mm 4 1 1 0 0 4 {}\nEND\n", MAX_WIRE_M + 1);
+        for bad in [big_n.as_str(), big_m.as_str()] {
+            let err = read_request(&mut BufReader::new(bad.as_bytes())).unwrap_err();
+            assert!(err.to_string().contains("exceeds wire limit"), "{err}");
+        }
+    }
+
+    #[test]
+    fn oversized_line_rejected() {
+        let bad = format!("MAP v1 1 mm {} 1 1 0 0 4 0\nEND\n", "4:".repeat(40_000));
+        assert!(bad.len() as u64 > MAX_LINE_BYTES);
+        let err = read_request(&mut BufReader::new(bad.as_bytes())).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds"), "{err:#}");
+    }
+
+    #[test]
+    fn edge_lines_bounded_by_declared_m() {
+        let bad = "MAP v1 1 mm 4 1 1 0 0 4 1\n0 1 1\n1 2 1\nEND\n";
+        let err = read_request(&mut BufReader::new(bad.as_bytes())).unwrap_err();
+        assert!(err.to_string().contains("declared m"), "{err}");
+        // fewer edges than declared stays fine (m is an upper bound)
+        let ok = "MAP v1 1 mm 4 1 1 0 0 4 5\n0 1 1\nEND\n";
+        assert!(read_request(&mut BufReader::new(ok.as_bytes())).is_ok());
+    }
+
+    #[test]
+    fn edge_endpoints_out_of_range_rejected() {
+        // release builds must not reach Builder's debug-only bounds assert
+        let bad = "MAP v1 1 mm 4 1 1 0 0 4 1\n0 9 1\nEND\n";
+        let err = read_request(&mut BufReader::new(bad.as_bytes())).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
     }
 
     #[test]
@@ -604,6 +1057,49 @@ mod tests {
     }
 
     #[test]
+    fn busy_response_roundtrip() {
+        let back = read_response(&mut BufReader::new(&b"BUSY 5 8 8\n"[..])).unwrap();
+        assert_eq!(back.id, 5);
+        assert!(back.is_busy());
+        assert!(back.error.as_deref().unwrap().contains("8/8"));
+        // a plain failure is not busy
+        assert!(!MapResponse::failure(5, "boom".into()).is_busy());
+        assert!(read_response(&mut BufReader::new(&b"BUSY 5 8\n"[..])).is_err());
+    }
+
+    #[test]
+    fn stats_line_roundtrip() {
+        let snap = MetricsSnapshot {
+            jobs_submitted: 10,
+            jobs_completed: 8,
+            jobs_failed: 1,
+            jobs_busy_rejected: 3,
+            verifications: 2,
+            verification_mismatches: 1,
+            cache_hits: 6,
+            cache_misses: 2,
+            cache_evictions: 1,
+            cache_entries: 1,
+            queue_depth: 4,
+            queue_capacity: 16,
+            connections_accepted: 5,
+            connections_refused: 2,
+            active_connections: 3,
+            mean_latency_secs: 0.125,
+            p50_latency_secs: 0.064,
+            p99_latency_secs: 0.512,
+        };
+        let line = stats_line(&snap);
+        assert!(line.starts_with("STATS ") && line.ends_with('\n'), "{line:?}");
+        let back = parse_stats_line(line.trim()).unwrap();
+        assert_eq!(back, snap);
+        // unknown keys from a newer server are skipped, not fatal
+        let future = format!("{} shiny_new_counter=7", line.trim());
+        assert_eq!(parse_stats_line(&future).unwrap(), snap);
+        assert!(parse_stats_line("NOPE a=1").is_err());
+    }
+
+    #[test]
     fn ml_spec_crosses_the_wire_unchanged() {
         let mut req = sample_request();
         req.algorithm = AlgorithmSpec::parse("ml:topdown+Nc5").unwrap();
@@ -662,10 +1158,7 @@ mod tests {
             ("REP 1 2 3 0.1 0.1 4 5 6 1 1:2:3:4:5\n", "level group with 5 fields"),
         ] {
             let text = format!("OK 7 10 10 0.0 0.0 - - 0 1\n{reps_line}SIGMA 0 1\n");
-            assert!(
-                read_response(&mut BufReader::new(text.as_bytes())).is_err(),
-                "{why}"
-            );
+            assert!(read_response(&mut BufReader::new(text.as_bytes())).is_err(), "{why}");
         }
     }
 
@@ -687,19 +1180,145 @@ mod tests {
     }
 
     #[test]
-    fn tcp_end_to_end() {
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
+    fn tcp_v1_single_shot_unchanged() {
+        // backward compatibility: a v1 client (one MAP, read, close) against
+        // the v2 looping server — same frames, same bytes
         let coord = Arc::new(Coordinator::start(2, 4, None));
-        let stop = Arc::new(AtomicBool::new(false));
-        let server = {
-            let (c, s) = (Arc::clone(&coord), Arc::clone(&stop));
-            std::thread::spawn(move || serve(listener, c, s))
-        };
+        let (addr, stop, server) = spawn_server(Arc::clone(&coord), ServeConfig::default());
         let resp = request(addr, &sample_request()).unwrap();
         assert!(resp.error.is_none(), "{:?}", resp.error);
         assert_eq!(resp.id, 42);
         assert_eq!(resp.sigma.len(), 128);
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn tcp_pipelined_requests_one_connection() {
+        // 1 worker ⇒ serial processing ⇒ repeats of one instance are
+        // guaranteed warm; the pipelined responses come back in order
+        let coord = Arc::new(Coordinator::start(1, 8, None));
+        let (addr, stop, server) = spawn_server(Arc::clone(&coord), ServeConfig::default());
+        let mut client = Client::connect(addr).unwrap();
+        assert_eq!(client.ping("hello").unwrap(), "hello");
+        assert_eq!(client.ping("").unwrap(), "");
+        let mut req = sample_request();
+        req.algorithm = AlgorithmSpec::parse("mm").unwrap(); // deterministic
+        for id in 1..=3u64 {
+            req.id = id;
+            client.send(&req).unwrap();
+        }
+        let mut sigmas = Vec::new();
+        for id in 1..=3u64 {
+            let resp = client.recv().unwrap();
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            assert_eq!(resp.id, id, "responses must arrive in request order");
+            sigmas.push(resp.sigma);
+        }
+        assert!(sigmas.windows(2).all(|w| w[0] == w[1]), "warm ≡ cold (mm is deterministic)");
+        // the session cache served requests 2 and 3 warm — visible in STATS
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.jobs_completed, 3);
+        assert_eq!(stats.cache_misses, 1);
+        assert_eq!(stats.cache_hits, 2);
+        assert_eq!(stats.cache_entries, 1);
+        assert_eq!(stats.active_connections, 1);
+        client.quit().unwrap();
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn tcp_full_queue_answers_busy() {
+        // 1 worker stuck on a slow first job + queue capacity 1: pipelined
+        // followers overflow admission control and get BUSY, not a stall
+        let coord = Arc::new(Coordinator::start(1, 1, None));
+        let (addr, stop, server) = spawn_server(
+            Arc::clone(&coord),
+            ServeConfig { max_connections: 4, inflight_per_connection: 16 },
+        );
+        let mut client = Client::connect(addr).unwrap();
+        let mut slow = sample_request();
+        slow.algorithm = AlgorithmSpec::parse("topdown+Nc5").unwrap();
+        slow.repetitions = 2;
+        for id in 1..=8u64 {
+            slow.id = id;
+            client.send(&slow).unwrap();
+        }
+        let mut busy = 0;
+        let mut served = 0;
+        for _ in 1..=8 {
+            let resp = client.recv().unwrap();
+            if resp.is_busy() {
+                busy += 1;
+            } else {
+                assert!(resp.error.is_none(), "{:?}", resp.error);
+                served += 1;
+            }
+        }
+        assert!(busy > 0, "full queue never answered BUSY");
+        assert!(served >= 2, "worker + queue slot must still serve jobs");
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.jobs_busy_rejected, busy);
+        assert_eq!(stats.queue_capacity, 1);
+        client.quit().unwrap();
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn tcp_protocol_error_echoes_request_id() {
+        let coord = Arc::new(Coordinator::start(1, 2, None));
+        let (addr, stop, server) = spawn_server(Arc::clone(&coord), ServeConfig::default());
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = BufWriter::new(stream.try_clone().unwrap());
+        writeln!(w, "MAP v1 77 mm 4 1 1 0 0 4 0 frobnicate=1").unwrap();
+        w.flush().unwrap();
+        let mut line = String::new();
+        BufReader::new(stream).read_line(&mut line).unwrap();
+        assert!(
+            line.starts_with("ERR 77 "),
+            "parsed-id must be echoed, got {line:?}"
+        );
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn tcp_unknown_verb_rejected() {
+        let coord = Arc::new(Coordinator::start(1, 2, None));
+        let (addr, stop, server) = spawn_server(Arc::clone(&coord), ServeConfig::default());
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = BufWriter::new(stream.try_clone().unwrap());
+        writeln!(w, "FROBNICATE now").unwrap();
+        w.flush().unwrap();
+        let mut line = String::new();
+        BufReader::new(stream).read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR 0 ") && line.contains("unknown verb"), "{line:?}");
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn tcp_connection_cap_refuses_with_err_line() {
+        let coord = Arc::new(Coordinator::start(1, 2, None));
+        let (addr, stop, server) = spawn_server(
+            Arc::clone(&coord),
+            ServeConfig { max_connections: 1, inflight_per_connection: 4 },
+        );
+        let mut first = Client::connect(addr).unwrap();
+        assert_eq!(first.ping("up").unwrap(), "up"); // ensures it is accepted
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut line = String::new();
+        BufReader::new(stream).read_line(&mut line).unwrap();
+        assert!(
+            line.starts_with("ERR 0 ") && line.contains("connection limit"),
+            "refusal line: {line:?}"
+        );
+        let stats = first.stats().unwrap();
+        assert_eq!(stats.connections_refused, 1);
+        assert_eq!(stats.active_connections, 1);
+        first.quit().unwrap();
         stop.store(true, Ordering::Relaxed);
         server.join().unwrap().unwrap();
     }

@@ -4,10 +4,12 @@
 //! communication-model builder) treats [`Graph`] as its universal currency.
 
 pub mod csr;
+pub mod fingerprint;
 pub mod io;
 pub mod ops;
 
 pub use csr::{from_edges, Builder, Graph, NodeId, Weight};
+pub use fingerprint::fingerprint;
 pub use ops::{
     bfs_ball, connect_components, connected_components, contract, induced_subgraph, is_connected,
 };

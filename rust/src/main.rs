@@ -5,6 +5,7 @@
 //! * `map`        — run one mapping job from a METIS file or a generator.
 //! * `serve`      — start the rank-reordering TCP service.
 //! * `client`     — submit a job to a running service.
+//! * `stats`      — query a running service's metrics (`STATS` verb).
 //! * `gen`        — generate a benchmark instance to a METIS file.
 //! * `partition`  — partition a graph (the §4.1 instance pipeline).
 //! * `verify`     — cross-check the sparse objective against the XLA path.
@@ -44,6 +45,7 @@ fn main() {
         "map" => cmd_map(&args),
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
+        "stats" => cmd_stats(&args),
         "gen" => cmd_gen(&args),
         "partition" => cmd_partition(&args),
         "verify" => cmd_verify(&args),
@@ -71,7 +73,9 @@ fn usage() {
                     [--seed 1] [--reps 1]\n  \
                     [--verify] [--explicit-distances] [--levels 16] [--coarsen-limit 64]\n  \
          serve      [--addr 127.0.0.1:7447] [--workers N] [--queue 64] [--no-xla]\n  \
+                    [--session-cache 16] [--max-conns 64] [--inflight 8]\n  \
          client     --addr host:port (same instance options as map)\n  \
+         stats      [--addr 127.0.0.1:7447] — query a running service's metrics\n  \
          gen        --inst rgg12 --out file.metis [--seed 1]\n  \
          partition  --graph file.metis --blocks k [--out part.txt] [--epsilon 0.0]\n  \
          verify     --inst rgg8 --blocks 64 --S 4:16 --D 1:10 [--algo topdown]\n  \
@@ -213,6 +217,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get("addr", "127.0.0.1:7447");
     let workers: usize = args.get_as("workers", 2);
     let queue: usize = args.get_as("queue", 64);
+    let session_cache: usize = args.get_as("session-cache", 16);
+    let cfg = wire::ServeConfig {
+        max_connections: args.get_as("max-conns", 64),
+        inflight_per_connection: args.get_as("inflight", 8),
+    };
     let runtime = if args.flag("no-xla") {
         None
     } else {
@@ -227,11 +236,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         }
     };
-    let coordinator = Arc::new(Coordinator::start(workers, queue, runtime));
+    let coordinator = Arc::new(Coordinator::start_with(workers, queue, runtime, session_cache));
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    println!("qapmap service listening on {addr} with {workers} workers");
+    println!(
+        "qapmap service listening on {addr} with {workers} workers \
+         (queue {queue}, {session_cache} warm sessions, ≤{} conns)",
+        cfg.max_connections
+    );
     let stop = Arc::new(AtomicBool::new(false));
-    wire::serve(listener, coordinator, stop)
+    wire::serve_with(listener, coordinator, stop, cfg)
+}
+
+/// Query a running service's metrics over the v2 `STATS` verb.
+fn cmd_stats(args: &Args) -> Result<()> {
+    let addr = args.get("addr", "127.0.0.1:7447");
+    let mut client = wire::Client::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    let snapshot = client.stats()?;
+    println!("{snapshot}");
+    client.quit()?;
+    Ok(())
 }
 
 fn cmd_client(args: &Args) -> Result<()> {

@@ -22,7 +22,7 @@ use crate::graph::{Graph, NodeId, Weight};
 use crate::util::Rng;
 
 /// Partitioner configuration.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PartitionConfig {
     /// Allowed relative imbalance ε: block size ≤ (1+ε)·⌈n/k⌉. The mapping
     /// constructions use `0.0` (perfectly balanced); the instance pipeline

@@ -191,6 +191,108 @@ fn unified_queue_session_ends_at_a_union_local_optimum() {
 }
 
 #[test]
+fn adopted_warm_session_matches_cold_session_bit_for_bit() {
+    // the session-cache correctness contract: a warm session that adopts a
+    // new job for the same instance (different seed/reps) must produce a
+    // report bit-identical to a cold session built from that job — for
+    // flat, gain-cached and ml: algorithms (the ml: hierarchy is derived
+    // from the job seed, so adoption across seeds must rebuild it)
+    let (g, h) = instance(128, 30);
+    for algo in ["topdown+Nc2", "mm+gc:nc2", "ml:topdown+Nc2"] {
+        let mk = |seed: u64, reps: u32| {
+            MapJobBuilder::new(g.clone(), h.clone())
+                .algorithm_name(algo)
+                .unwrap()
+                .repetitions(reps)
+                .coarsen_limit(16)
+                .seed(seed)
+                .build()
+                .unwrap()
+        };
+        let trajectory = |r: &qapmap::api::MapReport| {
+            r.reps
+                .iter()
+                .map(|s| {
+                    let counts = (s.evaluated, s.improved, s.rounds);
+                    (s.seed, s.objective_initial, s.objective, counts, s.levels.clone())
+                })
+                .collect::<Vec<_>>()
+        };
+        // warm the session on a different run of the same instance...
+        let mut warm = MapSession::new(mk(90, 2));
+        let _ = warm.run();
+        // ...then adopt a job with a new seed and repetition count
+        warm.adopt_job(mk(91, 3)).expect("same instance must adopt");
+        let adopted = warm.run();
+        let cold = MapSession::new(mk(91, 3)).run();
+        assert_eq!(adopted.mapping.sigma, cold.mapping.sigma, "{algo}");
+        assert_eq!(adopted.objective, cold.objective, "{algo}");
+        assert_eq!(trajectory(&adopted), trajectory(&cold), "{algo}");
+        // same-seed adoption keeps even the seed-derived scratch valid
+        warm.adopt_job(mk(91, 3)).expect("re-adoption must succeed");
+        let again = warm.run();
+        assert_eq!(trajectory(&again), trajectory(&cold), "{algo}");
+    }
+}
+
+#[test]
+fn adopt_job_rejects_mismatched_instances() {
+    let (g, h) = instance(128, 31);
+    let (g2, _) = instance(128, 32); // same size, different structure
+    let mk = || {
+        MapJobBuilder::new(g.clone(), h.clone())
+            .algorithm_name("topdown+Nc2")
+            .unwrap()
+            .seed(5)
+            .build()
+            .unwrap()
+    };
+    let mut session = MapSession::new(mk());
+    let baseline = session.run();
+
+    // different graph
+    let other_graph = MapJobBuilder::new(g2, h.clone())
+        .algorithm_name("topdown+Nc2")
+        .unwrap()
+        .build()
+        .unwrap();
+    let returned = session.adopt_job(other_graph).unwrap_err();
+    assert_eq!(returned.comm().n(), 128, "rejected job must come back intact");
+
+    // different algorithm
+    let other_algo =
+        MapJobBuilder::new(g.clone(), h.clone()).algorithm_name("mm").unwrap().build().unwrap();
+    assert!(session.adopt_job(other_algo).is_err());
+
+    // different machine (same PE count, different shape)
+    let other_machine = MapJobBuilder::new(
+        g.clone(),
+        Hierarchy::new(vec![2, 64], vec![1, 10]).unwrap(),
+    )
+    .algorithm_name("topdown+Nc2")
+    .unwrap()
+    .build()
+    .unwrap();
+    assert!(session.adopt_job(other_machine).is_err());
+
+    // different oracle mode (pins the scratch's distance source)
+    let other_oracle = MapJobBuilder::new(g.clone(), h.clone())
+        .algorithm_name("topdown+Nc2")
+        .unwrap()
+        .oracle_mode(OracleMode::Explicit)
+        .build()
+        .unwrap();
+    assert!(session.adopt_job(other_oracle).is_err());
+
+    // every rejection left the session's own job untouched
+    let after = session.run();
+    assert_eq!(after.mapping.sigma, baseline.mapping.sigma);
+
+    // and the matching instance still adopts
+    assert!(session.adopt_job(mk()).is_ok());
+}
+
+#[test]
 fn best_of_n_never_worse_than_single() {
     let (g, h) = instance(128, 4);
     let single = MapSession::new(

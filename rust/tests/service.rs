@@ -1,12 +1,14 @@
 //! Integration: the coordinator service under concurrency, backpressure and
-//! failure injection (malformed requests, protocol errors, client drops).
+//! failure injection (malformed requests, protocol errors, client drops),
+//! plus the protocol-v2 session behaviors (pipelining, warm session cache,
+//! input bounding) through the public client API.
 
-use qapmap::coordinator::{wire, Coordinator, MapRequest};
+use qapmap::coordinator::{wire, Client, Coordinator, MapRequest};
 use qapmap::gen::random_geometric_graph;
 use qapmap::mapping::algorithms::AlgorithmSpec;
 use qapmap::mapping::{Hierarchy, Machine, Mapping};
 use qapmap::util::Rng;
-use std::io::Write;
+use std::io::{BufRead, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -122,7 +124,7 @@ fn client_disconnect_does_not_poison_service() {
 fn mismatched_size_job_fails_cleanly() {
     let coord = Coordinator::start(1, 2, None);
     let mut req = request(1, 128, "topdown");
-    req.hierarchy = Hierarchy::new(vec![4, 8], vec![1, 10]).unwrap(); // 32 != 128
+    req.machine = Machine::Hier(Hierarchy::new(vec![4, 8], vec![1, 10]).unwrap()); // 32 != 128
     let resp = coord.submit_blocking(req);
     assert!(resp.error.is_some());
     assert!(resp.error.unwrap().contains("PEs"));
@@ -140,6 +142,104 @@ fn repetitions_with_exact_scoring() {
     single.repetitions = 1;
     let r1 = coord.submit_blocking(single);
     assert!(resp.objective <= r1.objective);
+}
+
+#[test]
+fn pipelined_session_reuses_warm_state_across_requests() {
+    // the tentpole end-to-end: one persistent connection, several identical
+    // jobs pipelined, the repeats served from the warm session cache —
+    // asserted through the wire via STATS, with bit-identical answers
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Arc::new(Coordinator::start(1, 16, None)); // 1 worker: serial ⇒ deterministic hits
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let (c, s) = (Arc::clone(&coord), Arc::clone(&stop));
+        std::thread::spawn(move || wire::serve(listener, c, s))
+    };
+
+    let mut client = Client::connect(addr).unwrap();
+    assert_eq!(client.ping("warmup").unwrap(), "warmup");
+    let mut req = request(1, 128, "mm"); // deterministic algorithm
+    for id in 1..=4u64 {
+        req.id = id;
+        client.send(&req).unwrap();
+    }
+    let mut sigmas = Vec::new();
+    for id in 1..=4u64 {
+        let resp = client.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.id, id, "pipelined responses must keep request order");
+        sigmas.push(resp.sigma);
+    }
+    assert!(sigmas.windows(2).all(|w| w[0] == w[1]), "warm results must equal cold");
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.jobs_completed, 4);
+    assert_eq!(stats.cache_misses, 1, "only the first request builds a session");
+    assert_eq!(stats.cache_hits, 3);
+    assert_eq!(stats.cache_entries, 1);
+    client.quit().unwrap();
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn v1_single_shot_client_still_works_against_v2_server() {
+    // backward compatibility: wire::request is the v1 usage pattern —
+    // connect, one MAP, read the response, close; same frames as before
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Arc::new(Coordinator::start(2, 4, None));
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let (c, s) = (Arc::clone(&coord), Arc::clone(&stop));
+        std::thread::spawn(move || wire::serve(listener, c, s))
+    };
+
+    for id in 1..=3u64 {
+        let resp = wire::request(addr, &request(id, 64, "topdown")).unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.id, id);
+        Mapping { sigma: resp.sigma }.validate().unwrap();
+    }
+    // each single-shot client opened its own connection and closed cleanly
+    let snap = coord.metrics();
+    assert_eq!(snap.jobs_completed, 3);
+    assert_eq!(snap.connections_refused, 0);
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn oversized_request_answered_with_clean_err() {
+    // a header declaring an absurd graph must get an ERR echoing the
+    // request id — not an allocation attempt — and the service stays up
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Arc::new(Coordinator::start(1, 2, None));
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let (c, s) = (Arc::clone(&coord), Arc::clone(&stop));
+        std::thread::spawn(move || wire::serve(listener, c, s))
+    };
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = std::io::BufWriter::new(stream.try_clone().unwrap());
+    let huge_n = wire::MAX_WIRE_N + 1;
+    writeln!(w, "MAP v1 31 mm 4 1 1 0 0 {huge_n} 0").unwrap();
+    w.flush().unwrap();
+    let mut line = String::new();
+    std::io::BufReader::new(stream).read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR 31 "), "id must be echoed: {line:?}");
+    assert!(line.contains("exceeds wire limit"), "{line:?}");
+
+    let ok = wire::request(addr, &request(99, 64, "topdown")).unwrap();
+    assert!(ok.error.is_none());
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
 }
 
 #[test]
