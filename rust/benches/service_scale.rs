@@ -67,6 +67,7 @@ fn main() {
             verify: false,
             levels: None,
             coarsen_limit: None,
+            threads: None,
         };
 
         let t = Timer::start();

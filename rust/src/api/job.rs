@@ -7,6 +7,7 @@ use crate::mapping::algorithms::AlgorithmSpec;
 use crate::mapping::multilevel::MlConfig;
 use crate::model::topology::{GridTopology, Hierarchy, Machine};
 use crate::partition::PartitionConfig;
+use crate::util::{resolve_threads, MAX_THREADS};
 
 use super::report::MapReport;
 
@@ -83,6 +84,7 @@ pub struct MapJobBuilder {
     part_cfg: PartitionConfig,
     verify: VerifyPolicy,
     ml_cfg: MlConfig,
+    threads: usize,
 }
 
 impl MapJobBuilder {
@@ -106,6 +108,7 @@ impl MapJobBuilder {
             part_cfg: PartitionConfig::perfectly_balanced(),
             verify: VerifyPolicy::Skip,
             ml_cfg: MlConfig::default(),
+            threads: 1,
         }
     }
 
@@ -185,6 +188,17 @@ impl MapJobBuilder {
         self
     }
 
+    /// Worker threads for the shared-memory parallel engine: `0` means
+    /// auto-detect (`std::thread::available_parallelism`), `1` (the
+    /// default) runs the classic sequential path, and any other value
+    /// spawns that many scoped threads. Repetitions, V-cycle subtrees and
+    /// the gain-cache search share this one budget; the deterministic
+    /// search modes produce bit-identical results at every thread count.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
     /// Validate and freeze the configuration.
     pub fn build(self) -> Result<MapJob, String> {
         if self.comm.n() != self.machine.n_pes() {
@@ -196,6 +210,9 @@ impl MapJobBuilder {
         }
         if self.repetitions == 0 {
             return Err("repetitions must be >= 1".into());
+        }
+        if self.threads > MAX_THREADS {
+            return Err(format!("threads must be <= {MAX_THREADS} (0 = auto-detect)"));
         }
         let resolution =
             self.resolution.unwrap_or_else(|| MachineResolution::explicit(&self.machine));
@@ -210,6 +227,7 @@ impl MapJobBuilder {
             part_cfg: self.part_cfg,
             verify: self.verify,
             ml_cfg: self.ml_cfg,
+            threads: self.threads,
         })
     }
 }
@@ -229,6 +247,7 @@ pub struct MapJob {
     pub(crate) part_cfg: PartitionConfig,
     pub(crate) verify: VerifyPolicy,
     pub(crate) ml_cfg: MlConfig,
+    pub(crate) threads: usize,
 }
 
 impl MapJob {
@@ -282,6 +301,25 @@ impl MapJob {
         &self.ml_cfg
     }
 
+    /// The requested thread budget as configured (`0` = auto-detect).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The effective thread budget: auto-detection applied, always >= 1.
+    pub fn resolved_threads(&self) -> usize {
+        resolve_threads(self.threads)
+    }
+
+    /// Replace the thread budget on a frozen job (the coordinator applies
+    /// its server-side default here when a request carries no `threads=`
+    /// token). Clamped like the builder's validation; a per-run knob, so
+    /// no other job state is invalidated.
+    pub fn with_threads(mut self, threads: usize) -> MapJob {
+        self.threads = threads.min(MAX_THREADS);
+        self
+    }
+
     /// True iff the whole pipeline is deterministic: repeated runs cannot
     /// differ, so repetitions are pointless. Identity, Müller-Merbach and
     /// GreedyAllC never consult the RNG; of the local searches, only "none"
@@ -321,6 +359,9 @@ impl MapJob {
         if let Some(limit) = req.coarsen_limit {
             b = b.coarsen_limit(limit);
         }
+        if let Some(threads) = req.threads {
+            b = b.threads(threads);
+        }
         b.build()
     }
 
@@ -328,8 +369,9 @@ impl MapJob {
     ///
     /// The machine spec (including grids and tori), the algorithm spec
     /// string, and — when they differ from the defaults — the multilevel
-    /// depth knobs (`levels`/`coarsen_limit`) all cross the wire, so remote
-    /// execution runs the same configuration. Still lossy by design:
+    /// depth knobs (`levels`/`coarsen_limit`) and the thread budget
+    /// (`threads`) all cross the wire, so remote execution runs the same
+    /// configuration. Still lossy by design:
     /// `oracle_mode` and `partition_config` are session-local execution
     /// knobs (the server runs the implicit oracle and perfectly balanced
     /// partitions), and `VerifyPolicy::Required` degrades to the wire's
@@ -348,6 +390,7 @@ impl MapJob {
                 .then_some(self.ml_cfg.max_levels),
             coarsen_limit: (self.ml_cfg.coarsen_limit != defaults.coarsen_limit)
                 .then_some(self.ml_cfg.coarsen_limit),
+            threads: (self.threads != 1).then_some(self.threads),
         }
     }
 }
@@ -628,6 +671,31 @@ mod tests {
         assert_eq!(back.machine().spec().unwrap(), "grid:8x8@1");
         assert_eq!(back.ml_config().max_levels, 3);
         assert_eq!(back.ml_config().coarsen_limit, 8);
+    }
+
+    #[test]
+    fn threads_knob_validates_and_crosses_the_wire() {
+        let (g, h) = sample(128);
+        let err = MapJobBuilder::new(g.clone(), h.clone())
+            .threads(MAX_THREADS + 1)
+            .build()
+            .unwrap_err();
+        assert!(err.contains("threads"), "{err}");
+
+        let job = MapJobBuilder::new(g.clone(), h.clone()).threads(4).build().unwrap();
+        assert_eq!(job.threads(), 4);
+        assert_eq!(job.resolved_threads(), 4);
+        let req = job.to_request(1);
+        assert_eq!(req.threads, Some(4));
+        assert_eq!(MapJob::from_request(&req).unwrap().threads(), 4);
+
+        // the default (1) stays off the wire; 0 = auto-detect must cross it
+        let (g, h) = sample(128);
+        let job = MapJobBuilder::new(g.clone(), h.clone()).build().unwrap();
+        assert_eq!(job.to_request(2).threads, None);
+        let auto = MapJobBuilder::new(g, h).threads(0).build().unwrap();
+        assert_eq!(auto.to_request(3).threads, Some(0));
+        assert!(auto.resolved_threads() >= 1);
     }
 
     #[test]

@@ -5,7 +5,7 @@ use crate::graph::Graph;
 use crate::mapping::algorithms::{Construction, GainMode, MapResult, Neighborhood};
 use crate::mapping::multilevel::{level_refiners, vcycle_refine, MlHierarchy};
 use crate::mapping::objective::{objective, DenseEngine, Mapping, SwapEngine};
-use crate::mapping::refine::{refiner_for, Refiner};
+use crate::mapping::refine::{refiner_for_threads, Refiner};
 use crate::mapping::{construct, Machine};
 use crate::runtime::{RuntimeHandle, BATCH};
 use crate::util::{Rng, Timer};
@@ -30,6 +30,12 @@ pub(crate) struct SessionScratch {
     /// shuffle buffers (see [`crate::mapping::refine`]), so keeping it here
     /// amortizes their construction across repetitions.
     refiner: Option<Box<dyn Refiner>>,
+    /// Thread budget the cached refiner was built with. A session's
+    /// effective intra-repetition budget changes between runs (parallel
+    /// repetitions drop it to 1), so a mismatch drops the cached refiner
+    /// and rebuilds at the right width instead of silently running the
+    /// wrong mode.
+    refiner_threads: usize,
     /// Multilevel state for `ml:` jobs: the coarsening hierarchy (built
     /// once, from the job seed) and one refiner per level.
     ml: Option<MlState>,
@@ -41,6 +47,29 @@ pub(crate) struct SessionScratch {
     /// one-time construction cost (reported by every repetition that reuses
     /// it, so timing stats stay meaningful).
     construction: Option<(Mapping, f64)>,
+}
+
+impl SessionScratch {
+    /// Scratch for a parallel-repetition worker thread: the deterministic
+    /// caches that are pure functions of the job — the construction and
+    /// (for `ml:` jobs) the coarsening hierarchy with its one-time build
+    /// cost — are cloned from the warm scratch so every worker reports the
+    /// same shared costs as the sequential path; the per-engine buffers
+    /// (Γ, refiners, dense matrices) are rebuilt lazily per worker.
+    fn for_worker(&self, job: &MapJob) -> SessionScratch {
+        SessionScratch {
+            gamma: Vec::new(),
+            refiner: None,
+            refiner_threads: 0,
+            ml: self.ml.as_ref().map(|m| MlState {
+                hierarchy: m.hierarchy.clone(),
+                refiners: level_refiners(&m.hierarchy, &job.machine, &job.spec),
+                build_secs: m.build_secs,
+            }),
+            dense: None,
+            construction: self.construction.clone(),
+        }
+    }
 }
 
 /// The session-cached half of the multilevel V-cycle.
@@ -170,14 +199,47 @@ impl MapSession {
         let requested = self.job.repetitions;
         let reps = self.job.effective_repetitions() as usize;
 
-        let mut seeds = Vec::with_capacity(reps);
+        let threads = self.job.resolved_threads();
+        let seeds: Vec<u64> = (0..reps).map(|r| base_seed.wrapping_add(r as u64)).collect();
         let mut results: Vec<MapResult> = Vec::with_capacity(reps);
-        for r in 0..reps {
-            let seed = base_seed.wrapping_add(r as u64);
-            let mut rng = Rng::new(seed);
-            let res = execute_once(&self.job, &self.oracle, &mut rng, &mut self.scratch);
-            seeds.push(seed);
-            results.push(res);
+        if reps > 1 && threads > 1 {
+            // Parallel repetitions: every repetition runs its own engine at
+            // an intra-rep budget of 1, so the per-rep work is exactly the
+            // sequential path and results are bit-identical to it (each rep
+            // already owns an independent RNG seeded `base + r`; the
+            // deterministic caches are shared via [`SessionScratch::
+            // for_worker`]). Repetition 0 runs inline first so those
+            // caches are warm before the workers clone them.
+            let mut rng = Rng::new(seeds[0]);
+            results.push(execute_once(&self.job, &self.oracle, &mut rng, &mut self.scratch, 1));
+            let rest = reps - 1;
+            let workers = threads.min(rest);
+            let chunk = rest.div_ceil(workers);
+            let mut slots: Vec<Option<MapResult>> = Vec::new();
+            slots.resize_with(rest, || None);
+            let job = &self.job;
+            let oracle = &self.oracle;
+            std::thread::scope(|sc| {
+                for (ci, out) in slots.chunks_mut(chunk).enumerate() {
+                    let mut scratch = self.scratch.for_worker(job);
+                    sc.spawn(move || {
+                        for (j, slot) in out.iter_mut().enumerate() {
+                            let r = 1 + ci * chunk + j;
+                            let mut rng = Rng::new(base_seed.wrapping_add(r as u64));
+                            *slot = Some(execute_once(job, oracle, &mut rng, &mut scratch, 1));
+                        }
+                    });
+                }
+            });
+            results.extend(slots.into_iter().map(|s| s.expect("worker filled its slot")));
+        } else {
+            // Sequential repetitions: the whole thread budget goes to the
+            // engine inside each repetition.
+            let intra = if reps > 1 { 1 } else { threads };
+            for &seed in &seeds {
+                let mut rng = Rng::new(seed);
+                results.push(execute_once(&self.job, &self.oracle, &mut rng, &mut self.scratch, intra));
+            }
         }
 
         // best-of-N: batched XLA scoring when possible (≤ BATCH per call);
@@ -373,9 +435,10 @@ pub(crate) fn execute_once(
     oracle: &Machine,
     rng: &mut Rng,
     scratch: &mut SessionScratch,
+    threads: usize,
 ) -> MapResult {
     if job.spec.multilevel {
-        return execute_multilevel(job, oracle, rng, scratch);
+        return execute_multilevel(job, oracle, rng, scratch, threads);
     }
     let comm = &job.comm;
     let spec = &job.spec;
@@ -384,9 +447,13 @@ pub(crate) fn execute_once(
             construct::initial(comm, &job.machine, oracle, spec.construction, &job.part_cfg, rng)
         });
 
-    let refiner = scratch
-        .refiner
-        .get_or_insert_with(|| refiner_for(spec.neighborhood, spec.max_sweeps, &job.machine));
+    if scratch.refiner_threads != threads {
+        scratch.refiner = None;
+        scratch.refiner_threads = threads;
+    }
+    let refiner = scratch.refiner.get_or_insert_with(|| {
+        refiner_for_threads(spec.neighborhood, spec.max_sweeps, &job.machine, threads)
+    });
 
     let t = Timer::start();
     let (mapping, objective_initial, objective, stats) = match spec.gain_mode {
@@ -439,6 +506,7 @@ fn execute_multilevel(
     oracle: &Machine,
     rng: &mut Rng,
     scratch: &mut SessionScratch,
+    threads: usize,
 ) -> MapResult {
     let SessionScratch { gamma, ml, construction, .. } = scratch;
     let MlState { hierarchy, refiners, build_secs } =
@@ -467,7 +535,8 @@ fn execute_multilevel(
     let construct_secs = *build_secs + coarse_secs;
 
     let t = Timer::start();
-    let outcome = vcycle_refine(&job.comm, oracle, hierarchy, coarse, refiners, rng, gamma);
+    let outcome =
+        vcycle_refine(&job.comm, oracle, hierarchy, coarse, refiners, rng, gamma, &job.spec, threads);
     let ls_secs = t.secs();
 
     MapResult {

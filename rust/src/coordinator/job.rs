@@ -38,6 +38,10 @@ pub struct MapRequest {
     /// Optional coarsening floor for `ml:` algorithms (wire token
     /// `coarsen_limit=`); `None` = the server's default.
     pub coarsen_limit: Option<usize>,
+    /// Optional thread budget for the shared-memory parallel engine (wire
+    /// token `threads=`; `0` = auto-detect on the server); `None` = the
+    /// server's default.
+    pub threads: Option<usize>,
 }
 
 impl MapRequest {
@@ -140,6 +144,7 @@ mod tests {
             verify: false,
             levels: None,
             coarsen_limit: None,
+            threads: None,
         }
     }
 

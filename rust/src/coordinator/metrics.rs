@@ -25,6 +25,7 @@ pub struct Metrics {
     jobs_completed: AtomicU64,
     jobs_failed: AtomicU64,
     jobs_busy_rejected: AtomicU64,
+    worker_panics: AtomicU64,
     verifications: AtomicU64,
     verification_mismatches: AtomicU64,
     cache_hits: AtomicU64,
@@ -52,6 +53,13 @@ impl Metrics {
     /// A `MAP` request answered `BUSY` because the job queue was full.
     pub fn on_busy_rejection(&self) {
         self.jobs_busy_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A job panicked inside a worker. The worker caught it, answered the
+    /// client with an `ERR` response, and kept serving — this counter is
+    /// how operators find out it happened at all.
+    pub fn on_worker_panic(&self) {
+        self.worker_panics.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Session-cache lookup found a warm, adoptable session.
@@ -132,6 +140,7 @@ impl Metrics {
             jobs_completed: completed,
             jobs_failed: failed,
             jobs_busy_rejected: self.jobs_busy_rejected.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
             verifications: self.verifications.load(Ordering::Relaxed),
             verification_mismatches: self.verification_mismatches.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
@@ -179,6 +188,9 @@ pub struct MetricsSnapshot {
     pub jobs_failed: u64,
     /// `MAP` requests answered `BUSY` (job queue full at admission).
     pub jobs_busy_rejected: u64,
+    /// Jobs that panicked inside a worker (caught; the worker survived and
+    /// the client got an `ERR` response).
+    pub worker_panics: u64,
     pub verifications: u64,
     pub verification_mismatches: u64,
     /// Session-cache hits (warm session adopted the job).
@@ -220,7 +232,7 @@ impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "jobs: {} submitted, {} ok, {} failed, {} busy | verify: {}/{} ok | \
+            "jobs: {} submitted, {} ok, {} failed, {} busy, {} panics | verify: {}/{} ok | \
              cache: {} hit / {} miss ({} warm, {} evicted) | queue: {}/{} | \
              conns: {} active ({} accepted, {} refused) | \
              latency mean {:.1} ms p50 {:.1} ms p99 {:.1} ms",
@@ -228,6 +240,7 @@ impl std::fmt::Display for MetricsSnapshot {
             self.jobs_completed,
             self.jobs_failed,
             self.jobs_busy_rejected,
+            self.worker_panics,
             self.verifications - self.verification_mismatches,
             self.verifications,
             self.cache_hits,
@@ -257,10 +270,12 @@ mod tests {
         m.on_submit();
         m.on_complete(0.010, false);
         m.on_complete(0.100, true);
+        m.on_worker_panic();
         let s = m.snapshot();
         assert_eq!(s.jobs_submitted, 2);
         assert_eq!(s.jobs_completed, 1);
         assert_eq!(s.jobs_failed, 1);
+        assert_eq!(s.worker_panics, 1);
         assert!((s.mean_latency_secs - 0.055).abs() < 0.001);
     }
 

@@ -31,10 +31,11 @@ use super::metrics::{Metrics, MetricsSnapshot};
 use super::session_cache::{Inserted, SessionCache, SessionKey};
 use crate::api::{MapJob, MapSession};
 use crate::runtime::RuntimeHandle;
-use crate::util::Timer;
+use crate::util::{Timer, MAX_THREADS};
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::Sender;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
 /// Relative tolerance for the f32 XLA cross-check (canonical definition in
@@ -43,6 +44,16 @@ pub use crate::api::VERIFY_RTOL;
 
 /// Default number of warm sessions kept by [`Coordinator::start`].
 pub const DEFAULT_SESSION_CACHE_CAPACITY: usize = 16;
+
+/// Lock a mutex, recovering from poisoning. Workers catch job panics
+/// ([`worker_loop`]), but a panic elsewhere while a lock is held would
+/// otherwise wedge the whole service. The protected structures are safe to
+/// keep using after an interrupted critical section: the queue only ever
+/// push/pops whole entries and the session cache only ever inserts/takes
+/// whole sessions, so no half-mutated state can be observed.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 struct Queue {
     jobs: Mutex<VecDeque<(MapRequest, Sender<MapResponse>, Timer)>>,
@@ -75,6 +86,20 @@ impl Coordinator {
         runtime: Option<RuntimeHandle>,
         session_cache: usize,
     ) -> Coordinator {
+        Self::start_full(workers, capacity, runtime, session_cache, 1)
+    }
+
+    /// Like [`Self::start_with`] plus the server-side default thread budget
+    /// applied to requests that carry no `threads=` token (clamped to
+    /// [`MAX_THREADS`]; `0` = auto-detect per job). A request's own
+    /// `threads=` always wins.
+    pub fn start_full(
+        workers: usize,
+        capacity: usize,
+        runtime: Option<RuntimeHandle>,
+        session_cache: usize,
+        default_threads: usize,
+    ) -> Coordinator {
         let queue = Arc::new(Queue {
             jobs: Mutex::new(VecDeque::new()),
             not_empty: Condvar::new(),
@@ -85,13 +110,14 @@ impl Coordinator {
         let metrics = Arc::new(Metrics::new());
         metrics.set_queue_capacity(queue.capacity);
         let cache = Arc::new(Mutex::new(SessionCache::new(session_cache)));
+        let default_threads = default_threads.min(MAX_THREADS);
         let handles = (0..workers.max(1))
             .map(|_| {
                 let q = Arc::clone(&queue);
                 let rt = runtime.clone();
                 let m = Arc::clone(&metrics);
                 let c = Arc::clone(&cache);
-                std::thread::spawn(move || worker_loop(q, rt, m, c))
+                std::thread::spawn(move || worker_loop(q, rt, m, c, default_threads))
             })
             .collect();
         Coordinator { queue, workers: handles, metrics }
@@ -102,9 +128,9 @@ impl Coordinator {
     pub fn submit(&self, req: MapRequest) -> std::sync::mpsc::Receiver<MapResponse> {
         let (tx, rx) = std::sync::mpsc::channel();
         self.metrics.on_submit();
-        let mut jobs = self.queue.jobs.lock().unwrap();
+        let mut jobs = relock(&self.queue.jobs);
         while jobs.len() >= self.queue.capacity {
-            jobs = self.queue.not_full.wait(jobs).unwrap();
+            jobs = self.queue.not_full.wait(jobs).unwrap_or_else(|e| e.into_inner());
         }
         jobs.push_back((req, tx, Timer::start()));
         self.metrics.set_queue_depth(jobs.len());
@@ -120,7 +146,7 @@ impl Coordinator {
         req: MapRequest,
     ) -> Result<std::sync::mpsc::Receiver<MapResponse>, MapRequest> {
         let (tx, rx) = std::sync::mpsc::channel();
-        let mut jobs = self.queue.jobs.lock().unwrap();
+        let mut jobs = relock(&self.queue.jobs);
         if jobs.len() >= self.queue.capacity {
             return Err(req);
         }
@@ -155,13 +181,13 @@ impl Coordinator {
 
     /// Current job-queue depth (reported in `BUSY` answers).
     pub fn queue_depth(&self) -> usize {
-        self.queue.jobs.lock().unwrap().len()
+        relock(&self.queue.jobs).len()
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        *self.queue.shutdown.lock().unwrap() = true;
+        *relock(&self.queue.shutdown) = true;
         self.queue.not_empty.notify_all();
         for h in self.workers.drain(..) {
             let _ = h.join();
@@ -174,23 +200,38 @@ fn worker_loop(
     runtime: Option<RuntimeHandle>,
     metrics: Arc<Metrics>,
     cache: Arc<Mutex<SessionCache>>,
+    default_threads: usize,
 ) {
     loop {
         let (req, tx, timer) = {
-            let mut jobs = queue.jobs.lock().unwrap();
+            let mut jobs = relock(&queue.jobs);
             loop {
                 if let Some(job) = jobs.pop_front() {
                     metrics.set_queue_depth(jobs.len());
                     queue.not_full.notify_one();
                     break job;
                 }
-                if *queue.shutdown.lock().unwrap() {
+                if *relock(&queue.shutdown) {
                     return;
                 }
-                jobs = queue.not_empty.wait(jobs).unwrap();
+                jobs = queue.not_empty.wait(jobs).unwrap_or_else(|e| e.into_inner());
             }
         };
-        let resp = process_job(&req, runtime.as_ref(), &metrics, &cache, &timer);
+        // one hostile or buggy job must not take the worker (and with it a
+        // slice of service capacity) down: catch the panic, count it, and
+        // answer the client with a plain error response
+        let resp = catch_unwind(AssertUnwindSafe(|| {
+            process_job(&req, runtime.as_ref(), &metrics, &cache, &timer, default_threads)
+        }))
+        .unwrap_or_else(|panic| {
+            metrics.on_worker_panic();
+            let msg = panic
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| panic.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "unknown panic".into());
+            MapResponse::failure(req.id, format!("worker panicked: {msg}"))
+        });
         let failed = resp.error.is_some();
         metrics.on_complete(resp.total_secs, failed);
         let _ = tx.send(resp); // client may have gone away; fine
@@ -208,11 +249,17 @@ fn process_job(
     metrics: &Metrics,
     cache: &Mutex<SessionCache>,
     timer: &Timer,
+    default_threads: usize,
 ) -> MapResponse {
-    let job = match MapJob::from_request(req) {
+    let mut job = match MapJob::from_request(req) {
         Ok(job) => job,
         Err(e) => return MapResponse::failure(req.id, e),
     };
+    // a request without its own threads= token runs at the server's default
+    // budget (a per-run knob like seed/reps — it never affects cacheability)
+    if req.threads.is_none() {
+        job = job.with_threads(default_threads);
+    }
     let key = SessionKey::new(job.comm(), job.machine(), job.algorithm());
     let mut session = match checkout_session(cache, key.as_ref(), metrics, job) {
         Ok(warm) => warm,
@@ -224,7 +271,7 @@ fn process_job(
         metrics.on_verification(ok);
     }
     if let Some(key) = key {
-        let mut cache = cache.lock().unwrap();
+        let mut cache = relock(cache);
         if cache.insert(key, session) == Inserted::Evicted {
             metrics.on_cache_eviction();
         }
@@ -245,7 +292,7 @@ fn checkout_session(
     let Some(key) = key else {
         return Err(job); // uncacheable (explicit machine): not a cache miss
     };
-    let warm = cache.lock().unwrap().take(key);
+    let warm = relock(cache).take(key);
     match warm {
         Some(mut session) => match session.adopt_job(job) {
             Ok(()) => {
@@ -284,6 +331,7 @@ mod tests {
             verify: false,
             levels: None,
             coarsen_limit: None,
+            threads: None,
         }
     }
 
@@ -402,6 +450,27 @@ mod tests {
         assert_eq!(snap.cache_hits, 0);
         assert_eq!(snap.cache_misses, 2);
         assert_eq!(snap.cache_entries, 0);
+    }
+
+    #[test]
+    fn server_thread_budget_does_not_change_results() {
+        // the deterministic parallel contract, seen from the service: a
+        // server defaulting to 4 threads answers byte-identically to a
+        // sequential one, and a request's own threads= override does too
+        let seq = Coordinator::start_full(1, 4, None, 0, 1);
+        let par = Coordinator::start_full(1, 4, None, 0, 4);
+        let a = seq.submit_blocking(request(1, "mm+gc:nccyc2", 1));
+        let b = par.submit_blocking(request(1, "mm+gc:nccyc2", 1));
+        assert!(a.error.is_none() && b.error.is_none(), "{:?} {:?}", a.error, b.error);
+        assert_eq!(a.sigma, b.sigma);
+        assert_eq!(a.objective, b.objective);
+        assert_eq!(a.reps, b.reps, "search statistics must match too");
+
+        let mut req = request(1, "mm+gc:nccyc2", 1);
+        req.threads = Some(2);
+        let c = seq.submit_blocking(req);
+        assert!(c.error.is_none(), "{:?}", c.error);
+        assert_eq!(c.sigma, a.sigma);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //!
 //! ```text
 //! C->S:  MAP v1 <id> <algo> <S> <D> <reps> <seed> <verify:0|1> <n> <m>
-//!            [machine=<spec>] [levels=<l>] [coarsen_limit=<c>]
+//!            [machine=<spec>] [levels=<l>] [coarsen_limit=<c>] [threads=<t>]
 //!        <u> <v> <w>          (≤ m edge lines)
 //!        END
 //! S->C:  OK <id> <objective> <j_initial> <construct_secs> <ls_secs>
@@ -33,8 +33,10 @@
 //! parse new clients' default-knob jobs unchanged); grids and tori put
 //! `-` placeholders there and carry the full machine grammar in a
 //! `machine=` token (e.g. `machine=torus:4x4x4@1`). `levels=` and
-//! `coarsen_limit=` expose the V-cycle depth knobs. Readers accept the bare
-//! 11-token header (old writers) and reject unknown option keys.
+//! `coarsen_limit=` expose the V-cycle depth knobs; `threads=` carries the
+//! shared-memory thread budget (`0` = server auto-detect, values above
+//! [`crate::util::MAX_THREADS`] are rejected at parse time). Readers accept
+//! the bare 11-token header (old writers) and reject unknown option keys.
 //!
 //! **Admission control.** `MAP` is admitted via the coordinator's
 //! non-blocking [`Coordinator::try_submit`]; a full job queue answers
@@ -150,6 +152,9 @@ pub fn write_request<W: Write>(w: &mut W, req: &MapRequest) -> Result<()> {
     if let Some(limit) = req.coarsen_limit {
         write!(w, " coarsen_limit={limit}")?;
     }
+    if let Some(threads) = req.threads {
+        write!(w, " threads={threads}")?;
+    }
     writeln!(w)?;
     for u in 0..req.comm.n() as NodeId {
         for (v, wt) in req.comm.edges(u) {
@@ -195,12 +200,20 @@ fn parse_map_body<R: BufRead>(id: u64, toks: &[&str], r: &mut R) -> Result<MapRe
     let mut machine: Option<Machine> = None;
     let mut levels: Option<usize> = None;
     let mut coarsen_limit: Option<usize> = None;
+    let mut threads: Option<usize> = None;
     for tok in &toks[11..] {
         let (key, value) = tok.split_once('=').ok_or_else(|| anyhow!("bad job option {tok:?}"))?;
         match key {
             "machine" => machine = Some(Machine::parse(value).map_err(|e| anyhow!(e))?),
             "levels" => levels = Some(value.parse()?),
             "coarsen_limit" => coarsen_limit = Some(value.parse()?),
+            "threads" => {
+                let t: usize = value.parse()?;
+                if t > crate::util::MAX_THREADS {
+                    bail!("threads={t} exceeds limit {}", crate::util::MAX_THREADS);
+                }
+                threads = Some(t);
+            }
             other => bail!("unknown job option {other:?}"),
         }
     }
@@ -259,6 +272,7 @@ fn parse_map_body<R: BufRead>(id: u64, toks: &[&str], r: &mut R) -> Result<MapRe
         verify,
         levels,
         coarsen_limit,
+        threads,
     })
 }
 
@@ -471,6 +485,7 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<MapResponse> {
 pub fn stats_line(s: &MetricsSnapshot) -> String {
     format!(
         "STATS jobs_submitted={} jobs_completed={} jobs_failed={} jobs_busy_rejected={} \
+         worker_panics={} \
          verifications={} verification_mismatches={} cache_hits={} cache_misses={} \
          cache_evictions={} cache_entries={} queue_depth={} queue_capacity={} \
          connections_accepted={} connections_refused={} active_connections={} \
@@ -479,6 +494,7 @@ pub fn stats_line(s: &MetricsSnapshot) -> String {
         s.jobs_completed,
         s.jobs_failed,
         s.jobs_busy_rejected,
+        s.worker_panics,
         s.verifications,
         s.verification_mismatches,
         s.cache_hits,
@@ -511,6 +527,7 @@ pub fn parse_stats_line(line: &str) -> Result<MetricsSnapshot> {
             "jobs_completed" => s.jobs_completed = value.parse()?,
             "jobs_failed" => s.jobs_failed = value.parse()?,
             "jobs_busy_rejected" => s.jobs_busy_rejected = value.parse()?,
+            "worker_panics" => s.worker_panics = value.parse()?,
             "verifications" => s.verifications = value.parse()?,
             "verification_mismatches" => s.verification_mismatches = value.parse()?,
             "cache_hits" => s.cache_hits = value.parse()?,
@@ -829,6 +846,7 @@ mod tests {
             verify: false,
             levels: None,
             coarsen_limit: None,
+            threads: None,
         }
     }
 
@@ -887,6 +905,36 @@ mod tests {
             assert_eq!(back.levels, Some(3));
             assert_eq!(back.coarsen_limit, Some(16));
         }
+    }
+
+    #[test]
+    fn threads_token_roundtrips_and_absurd_values_rejected() {
+        let mut req = sample_request();
+        req.threads = Some(4);
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req).unwrap();
+        let header = std::str::from_utf8(&buf).unwrap().lines().next().unwrap().to_string();
+        assert!(header.contains("threads=4"), "{header}");
+        let back = read_request(&mut BufReader::new(&buf[..])).unwrap();
+        assert_eq!(back.threads, Some(4));
+
+        // 0 = auto-detect crosses the wire; absent stays absent
+        req.threads = Some(0);
+        buf.clear();
+        write_request(&mut buf, &req).unwrap();
+        assert_eq!(read_request(&mut BufReader::new(&buf[..])).unwrap().threads, Some(0));
+        req.threads = None;
+        buf.clear();
+        write_request(&mut buf, &req).unwrap();
+        assert_eq!(read_request(&mut BufReader::new(&buf[..])).unwrap().threads, None);
+
+        // a typo'd huge value is a clean parse error, not an allocation
+        let over = crate::util::MAX_THREADS + 1;
+        let bad = format!("MAP v1 1 mm 4 1 1 0 0 4 0 threads={over}\nEND\n");
+        let err = read_request(&mut BufReader::new(bad.as_bytes())).unwrap_err();
+        assert!(err.to_string().contains("exceeds limit"), "{err}");
+        let bad = "MAP v1 1 mm 4 1 1 0 0 4 0 threads=lots\nEND\n";
+        assert!(read_request(&mut BufReader::new(bad.as_bytes())).is_err());
     }
 
     #[test]
@@ -1074,6 +1122,7 @@ mod tests {
             jobs_completed: 8,
             jobs_failed: 1,
             jobs_busy_rejected: 3,
+            worker_panics: 1,
             verifications: 2,
             verification_mismatches: 1,
             cache_hits: 6,

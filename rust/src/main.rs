@@ -70,10 +70,10 @@ fn usage() {
                     [--machine hier:4:16:2@1:10:100 | grid:8x8@1 | torus:4x4x4@1]\n  \
                     [--S a:b:c --D x:y:z]   (legacy hierarchy notation)\n  \
                     [--algo topdown+Nc10 | topdown+gc:nc10 | topdown+gc:nccyc10 | ml:topdown+Nc5]\n  \
-                    [--seed 1] [--reps 1]\n  \
+                    [--seed 1] [--reps 1] [--threads 1]   (0 = auto-detect)\n  \
                     [--verify] [--explicit-distances] [--levels 16] [--coarsen-limit 64]\n  \
          serve      [--addr 127.0.0.1:7447] [--workers N] [--queue 64] [--no-xla]\n  \
-                    [--session-cache 16] [--max-conns 64] [--inflight 8]\n  \
+                    [--session-cache 16] [--max-conns 64] [--inflight 8] [--threads 1]\n  \
          client     --addr host:port (same instance options as map)\n  \
          stats      [--addr 127.0.0.1:7447] — query a running service's metrics\n  \
          gen        --inst rgg12 --out file.metis [--seed 1]\n  \
@@ -138,6 +138,7 @@ fn cmd_map(args: &Args) -> Result<()> {
         })
         .repetitions(args.get_as("reps", 1))
         .seed(seed)
+        .threads(args.get_as("threads", 1))
         .partition_config(PartitionConfig::perfectly_balanced())
         .levels(args.get_as("levels", 16))
         .coarsen_limit(args.get_as("coarsen-limit", 64))
@@ -236,11 +237,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         }
     };
-    let coordinator = Arc::new(Coordinator::start_with(workers, queue, runtime, session_cache));
+    let threads: usize = args.get_as("threads", 1);
+    let coordinator =
+        Arc::new(Coordinator::start_full(workers, queue, runtime, session_cache, threads));
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     println!(
         "qapmap service listening on {addr} with {workers} workers \
-         (queue {queue}, {session_cache} warm sessions, ≤{} conns)",
+         (queue {queue}, {session_cache} warm sessions, ≤{} conns, \
+         {threads} threads/job default)",
         cfg.max_connections
     );
     let stop = Arc::new(AtomicBool::new(false));
@@ -269,6 +273,7 @@ fn cmd_client(args: &Args) -> Result<()> {
         .map_err(|e| anyhow!(e))?
         .repetitions(args.get_as("reps", 1))
         .seed(seed)
+        .threads(args.get_as("threads", 1))
         .levels(args.get_as("levels", 16))
         .coarsen_limit(args.get_as("coarsen-limit", 64))
         .verify(if args.flag("verify") { VerifyPolicy::IfAvailable } else { VerifyPolicy::Skip })

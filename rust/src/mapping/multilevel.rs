@@ -32,11 +32,12 @@
 //! `g·p .. g·p+g` are each used once), and every level's refinement is
 //! monotone, both enforced by `debug_assert` here and by `tests/api.rs`.
 
+use super::algorithms::{AlgorithmSpec, Neighborhood};
 use super::construct;
 use super::objective::{objective, Mapping, SwapEngine};
-use super::refine::{Refiner, SearchStats};
-use crate::graph::Graph;
-use crate::model::topology::Machine;
+use super::refine::{refiner_for, Refiner, SearchStats};
+use crate::graph::{Graph, NodeId};
+use crate::model::topology::{Hierarchy, Machine};
 use crate::partition::coarsen::coarsen_groups;
 use crate::partition::PartitionConfig;
 use crate::util::Rng;
@@ -169,6 +170,154 @@ pub struct VcycleOutcome {
     pub level_mappings: Vec<Mapping>,
 }
 
+/// Minimum vertices per machine-subtree block for the subtree pre-pass —
+/// below this the per-block setup outweighs any refinement it could find.
+const SUBTREE_MIN_BLOCK: usize = 16;
+
+/// Refine the top-level machine-subtree blocks of `sigma` independently,
+/// before the level's full refinement pass.
+///
+/// The hierarchy distance between PEs in *different* top-level blocks is
+/// the constant outermost distance wherever the two vertices sit inside
+/// their blocks (the ultrametric property), so a move that stays inside one
+/// block leaves every cross-block term of J unchanged: the blocks are truly
+/// independent subproblems — each an induced subgraph mapped onto the
+/// sub-hierarchy with the outermost level dropped — and refining them
+/// concurrently is exact, not heuristic.
+///
+/// Runs at every thread count — scoped worker threads at `threads > 1`,
+/// inline otherwise — with bit-identical results either way: per-block RNG
+/// seeds are fixed up front (`salt + block`), blocks share no state, and
+/// results are stitched back in block order. This is what keeps `ml:` runs
+/// reproducible across `--threads` settings (tested in `tests/api.rs`).
+///
+/// Skipped (returning zero stats, identically at every thread count) for
+/// machines without hierarchy structure, single-level hierarchies (all
+/// intra-block distances equal, so intra-block moves cannot change J),
+/// fewer than two blocks, or blocks under [`SUBTREE_MIN_BLOCK`].
+fn subtree_refine(
+    graph: &Graph,
+    oracle: &Machine,
+    sigma: &mut [u32],
+    spec: &AlgorithmSpec,
+    threads: usize,
+    salt: u64,
+) -> SearchStats {
+    let mut out = SearchStats::default();
+    if matches!(spec.neighborhood, Neighborhood::None) {
+        return out;
+    }
+    let Some(h) = oracle.hier() else { return out };
+    if h.s.len() < 2 {
+        return out;
+    }
+    let k = *h.s.last().expect("non-empty hierarchy") as usize;
+    let n = graph.n();
+    if k < 2 || n % k != 0 {
+        return out;
+    }
+    let bs = n / k;
+    if bs < SUBTREE_MIN_BLOCK {
+        return out;
+    }
+    let Ok(sub) =
+        Hierarchy::new(h.s[..h.s.len() - 1].to_vec(), h.d[..h.d.len() - 1].to_vec())
+    else {
+        return out;
+    };
+    let sub_machine = Machine::Hier(sub);
+    debug_assert_eq!(sub_machine.n_pes(), bs);
+
+    // partition the vertices by the top-level block their PE lives in
+    // (hierarchy PEs number depth-first, so block b is the contiguous PE
+    // range b·bs .. (b+1)·bs)
+    let mut members: Vec<Vec<NodeId>> = vec![Vec::with_capacity(bs); k];
+    for (u, &pe) in sigma.iter().enumerate() {
+        members[pe as usize / bs].push(u as NodeId);
+    }
+    // σ is a bijection, so every block holds exactly bs vertices
+    debug_assert!(members.iter().all(|m| m.len() == bs));
+    let mut local = vec![0u32; n];
+    for verts in &members {
+        for (i, &u) in verts.iter().enumerate() {
+            local[u as usize] = i as u32;
+        }
+    }
+
+    // induced per-block instances, relabeled 0..bs in member id order
+    struct Block {
+        verts: Vec<NodeId>,
+        graph: Graph,
+        start: Mapping,
+    }
+    let blocks: Vec<Block> = members
+        .into_iter()
+        .enumerate()
+        .map(|(b, verts)| {
+            let base = (b * bs) as u32;
+            let mut edges = Vec::new();
+            let mut start = vec![0u32; bs];
+            for &u in &verts {
+                start[local[u as usize] as usize] = sigma[u as usize] - base;
+                for (v, w) in graph.edges(u) {
+                    if v > u && sigma[v as usize] as usize / bs == b {
+                        edges.push((local[u as usize], local[v as usize], w));
+                    }
+                }
+            }
+            Block {
+                verts,
+                graph: crate::graph::from_edges(bs, &edges),
+                start: Mapping { sigma: start },
+            }
+        })
+        .collect();
+
+    // refine every block with a fresh refiner and its own fixed-seed RNG;
+    // the per-block computation depends only on the block's own instance,
+    // so inline and worker execution produce identical mappings
+    let run_block = |b: usize, blk: &Block| -> (Mapping, SearchStats) {
+        let mut refiner = refiner_for(spec.neighborhood, spec.max_sweeps, &sub_machine);
+        let mut rng = Rng::new(salt.wrapping_add(b as u64));
+        let mut eng = SwapEngine::new(&blk.graph, &sub_machine, blk.start.clone());
+        let j0 = eng.objective();
+        let s = refiner.refine(&mut eng, &blk.graph, &mut rng);
+        debug_assert!(eng.objective() <= j0, "block {b}: subtree refinement worsened");
+        (eng.mapping(), s)
+    };
+    let mut results: Vec<Option<(Mapping, SearchStats)>> = (0..k).map(|_| None).collect();
+    if threads > 1 {
+        let chunk = k.div_ceil(threads.min(k));
+        std::thread::scope(|sc| {
+            for (ci, (blks, outs)) in
+                blocks.chunks(chunk).zip(results.chunks_mut(chunk)).enumerate()
+            {
+                let run_block = &run_block;
+                sc.spawn(move || {
+                    for (j, blk) in blks.iter().enumerate() {
+                        outs[j] = Some(run_block(ci * chunk + j, blk));
+                    }
+                });
+            }
+        });
+    } else {
+        for (b, blk) in blocks.iter().enumerate() {
+            results[b] = Some(run_block(b, blk));
+        }
+    }
+
+    // stitch the refined blocks back in block order
+    for (b, (blk, res)) in blocks.iter().zip(results).enumerate() {
+        let (mapping, s) = res.expect("every block was refined");
+        let base = (b * bs) as u32;
+        for (i, &u) in blk.verts.iter().enumerate() {
+            sigma[u as usize] = base + mapping.sigma[i];
+        }
+        out.absorb(&s);
+    }
+    out
+}
+
 /// Project a coarse mapping one level down: the `group` fine members of
 /// coarse vertex `c` (in id order) take PEs `group·σ_c(c) + 0 ..
 /// group·σ_c(c) + group`. A bijection in ⇒ a bijection out.
@@ -191,6 +340,14 @@ pub fn project(map: &[u32], coarse_sigma: &[u32], group: u32) -> Vec<u32> {
 /// (the last refines the finest graph against `fine_oracle`); keeping them
 /// alive across calls reuses their pair/triangle scratch per level. `gamma`
 /// is the shared Γ-buffer threaded through every level's [`SwapEngine`].
+///
+/// Each level first runs the machine-subtree pre-pass ([`subtree_refine`]
+/// — independent top-level blocks, on worker threads when `threads > 1`,
+/// bit-identical at every thread count) and then the level's full refiner;
+/// `spec` configures the per-block refiners of the pre-pass. A level's
+/// [`LevelStat`] aggregates both phases; its `objective_initial` is still
+/// measured right after projection, before either phase.
+#[allow(clippy::too_many_arguments)]
 pub fn vcycle_refine(
     comm: &Graph,
     fine_oracle: &Machine,
@@ -199,6 +356,8 @@ pub fn vcycle_refine(
     refiners: &mut [Box<dyn Refiner>],
     rng: &mut Rng,
     gamma: &mut Vec<u64>,
+    spec: &AlgorithmSpec,
+    threads: usize,
 ) -> VcycleOutcome {
     let depth = ml.levels.len();
     assert_eq!(refiners.len(), depth + 1, "one refiner per level plus the finest");
@@ -217,11 +376,17 @@ pub fn vcycle_refine(
             (comm, fine_oracle)
         };
         debug_assert_eq!(graph.n(), sigma.len());
+        // per-level salt for the subtree pre-pass, drawn unconditionally
+        // so the RNG stream is identical at every thread count
+        let salt = rng.next_u64();
+        let mut start = Mapping { sigma: std::mem::take(&mut sigma) };
+        let j0 = objective(graph, oracle, &start);
+        let mut s = subtree_refine(graph, oracle, &mut start.sigma, spec, threads, salt);
         let buf = std::mem::take(gamma);
-        let start = Mapping { sigma: std::mem::take(&mut sigma) };
         let mut eng = SwapEngine::with_gamma_buf(graph, oracle, start, buf);
-        let j0 = eng.objective();
-        let s = refiners[i].refine(&mut eng, graph, rng);
+        debug_assert!(eng.objective() <= j0, "level {i}: subtree pre-pass worsened");
+        let sf = refiners[i].refine(&mut eng, graph, rng);
+        s.absorb(&sf);
         let j1 = eng.objective();
         debug_assert!(j1 <= j0, "level {i}: refinement worsened {j0} -> {j1}");
         let (mapping, buf) = eng.into_parts();
@@ -281,7 +446,8 @@ pub fn vcycle(
         None => construct::initial(comm, machine, fine_oracle, spec.construction, part_cfg, rng),
     };
     let mut gamma = Vec::new();
-    let outcome = vcycle_refine(comm, fine_oracle, &ml, coarse, &mut refiners, rng, &mut gamma);
+    let outcome =
+        vcycle_refine(comm, fine_oracle, &ml, coarse, &mut refiners, rng, &mut gamma, spec, 1);
     (ml, outcome)
 }
 
@@ -463,6 +629,53 @@ mod tests {
         let (ml2, out2) = run_vcycle(&g, &e, &spec, &cfg2, 13, 14);
         assert!(ml2.levels.is_empty());
         out2.mapping.validate().unwrap();
+    }
+
+    #[test]
+    fn subtree_pre_pass_is_thread_invariant() {
+        // the V-cycle's coarse-parallel contract: vcycle_refine at
+        // threads ∈ {1, 2, 4} produces identical outcomes — per-block
+        // seeds are fixed up front and the blocks are independent, so
+        // worker scheduling cannot leak into the result
+        let (g, m) = setup(256, 21);
+        let spec = AlgorithmSpec::parse("topdown+Nc3").unwrap();
+        let cfg = MlConfig { max_levels: 8, coarsen_limit: 32 };
+        let mut hrng = Rng::new(22);
+        let ml = MlHierarchy::build(&g, &m, &cfg, &mut hrng);
+        let part = PartitionConfig::perfectly_balanced();
+        let coarse = {
+            let l = ml.coarsest().expect("256 coarsens below 32");
+            let mut crng = Rng::new(23);
+            construct::initial(&l.graph, &l.machine, &l.machine, spec.construction, &part, &mut crng)
+        };
+        let mut base: Option<VcycleOutcome> = None;
+        for t in [1usize, 2, 4] {
+            let mut refiners = level_refiners(&ml, &m, &spec);
+            let mut rng = Rng::new(24);
+            let mut gamma = Vec::new();
+            let out = vcycle_refine(
+                &g,
+                &m,
+                &ml,
+                coarse.clone(),
+                &mut refiners,
+                &mut rng,
+                &mut gamma,
+                &spec,
+                t,
+            );
+            out.mapping.validate().unwrap();
+            match &base {
+                None => base = Some(out),
+                Some(b) => {
+                    assert_eq!(out.mapping.sigma, b.mapping.sigma, "threads={t}");
+                    assert_eq!(out.objective, b.objective, "threads={t}");
+                    assert_eq!(out.levels, b.levels, "threads={t}");
+                }
+            }
+        }
+        let b = base.unwrap();
+        assert!(b.objective <= b.objective_initial);
     }
 
     #[test]

@@ -55,6 +55,19 @@ use crate::util::Rng;
 /// queued", never on exact ordering.
 const GAIN_BUCKET_CAP: usize = 4096;
 
+/// Upcoming queue entries the deterministic parallel drain pre-evaluates
+/// per speculation round (scaled by the thread count).
+const SPEC_BATCH_PER_THREAD: usize = 16;
+
+/// Pops consumed between speculation rounds of the deterministic parallel
+/// drain (scaled by the thread count). Larger windows amortize the scoped
+/// thread spawn; smaller windows keep the side cache closer to the live
+/// queue state.
+const SPEC_WINDOW_PER_THREAD: usize = 8;
+
+/// Candidates popped per free-running round (scaled by the thread count).
+const FREE_BATCH_PER_THREAD: usize = 32;
+
 /// Max-priority bucket queue over move ids. `O(1)` push, amortized
 /// `O(1)` pop (the top cursor only rescans buckets emptied since the last
 /// high-priority push); LIFO within a bucket, so the whole structure is
@@ -121,6 +134,34 @@ impl GainBucketQueue {
 
     pub fn is_empty(&self) -> bool {
         self.len == 0
+    }
+
+    /// The next (up to) `k` move ids in exact pop order — highest bucket
+    /// first, LIFO within a bucket — without removing anything. The
+    /// deterministic parallel drain peeks the upcoming entries, evaluates
+    /// the stale ones read-only on worker threads, and lets the untouched
+    /// pop loop consume the results: queue state never changes here, so
+    /// the pop sequence is exactly the sequential one.
+    pub fn peek_upcoming(&self, k: usize, out: &mut Vec<u32>) {
+        out.clear();
+        if k == 0 || self.len == 0 {
+            return;
+        }
+        let mut b = self.top.min(self.buckets.len().saturating_sub(1));
+        loop {
+            if let Some(bucket) = self.buckets.get(b) {
+                for &id in bucket.iter().rev() {
+                    out.push(id);
+                    if out.len() == k {
+                        return;
+                    }
+                }
+            }
+            if b == 0 {
+                return;
+            }
+            b -= 1;
+        }
     }
 }
 
@@ -345,6 +386,54 @@ fn activate(
     }
 }
 
+/// Apply a fresh improving move and re-activate its neighborhood — the
+/// shared tail of the sequential, speculative and free-running drains.
+/// Also installs the negated-gain fresh-stamp shortcut: the applied pair's
+/// own gain is exactly negated (swaps), and the inverse rotation direction
+/// undoes a rotation exactly, so both re-activation pops drop
+/// evaluation-free.
+#[allow(clippy::too_many_arguments)]
+fn apply_and_activate(
+    engine: &mut dyn Swapper,
+    comm: &Graph,
+    pairs: &PairIndex,
+    tris: Option<&TriIndex>,
+    tri_list: &[(NodeId, NodeId, NodeId)],
+    np: usize,
+    queue: &mut GainBucketQueue,
+    queued: &mut [bool],
+    gain: &mut [i64],
+    stamp: &mut [[u64; 3]],
+    versioned: bool,
+    improved: &mut u64,
+    i: usize,
+    g: i64,
+) {
+    match decode(i, np) {
+        MoveRef::Swap(p) => {
+            let (u, v) = pairs.pairs[p];
+            engine.do_swap_with_gain(u, v, g);
+            *improved += 1;
+            gain[i] = -g;
+            stamp[i] = stamp_of(&*engine, versioned, *improved, pairs, tri_list, np, i);
+            for x in [u, v] {
+                activate(queue, queued, gain, pairs, tris, np, comm, x);
+            }
+        }
+        MoveRef::Rotate3(t, rev) => {
+            let (u, v, w) = oriented(tri_list[t], rev);
+            engine.do_rotate3_with_gain(u, v, w, g);
+            *improved += 1;
+            let inv = np + 2 * t + usize::from(!rev);
+            gain[inv] = -g;
+            stamp[inv] = stamp_of(&*engine, versioned, *improved, pairs, tri_list, np, inv);
+            for x in [u, v, w] {
+                activate(queue, queued, gain, pairs, tris, np, comm, x);
+            }
+        }
+    }
+}
+
 /// The gain-cached refiner over the unified move class: `gc:nc<d>`
 /// (pair swaps only, [`Self::new`]) and `gc:nccyc<d>` (pair swaps *and*
 /// 3-cycle triangle rotations in one queue, [`Self::with_rotations`]) in
@@ -377,6 +466,25 @@ pub struct GainCacheNc {
     stamp: Vec<[u64; 3]>,
     /// Whether the move currently has a queue entry (dedups re-activation).
     queued: Vec<bool>,
+    /// Worker threads for the parallel seeding sweep and the parallel
+    /// drain; `0`/`1` selects the classic sequential path. Set via
+    /// [`Self::threads`].
+    threads: usize,
+    /// Free-running parallel drain ([`Self::free_running`]): rounds of
+    /// batched parallel evaluation with stamp-revalidated applies. The
+    /// move trajectory may diverge from the sequential one, but the final
+    /// sequential drain still certifies the union-neighborhood local
+    /// optimum. Off by default — the default parallel drain is the
+    /// deterministic speculative one, bit-identical to `threads == 1`.
+    free: bool,
+    /// Speculative side cache of the deterministic parallel drain:
+    /// per-move (gain, stamp-at-evaluation), consumed at pop time only
+    /// when the stamp still matches the live state — then the cached gain
+    /// equals what evaluating at the pop would return, so the trajectory
+    /// and the `evaluated` count stay exactly sequential.
+    spec_gain: Vec<i64>,
+    spec_stamp: Vec<[u64; 3]>,
+    spec_valid: Vec<bool>,
 }
 
 impl GainCacheNc {
@@ -389,6 +497,27 @@ impl GainCacheNc {
     /// both rotation directions of every communication-graph triangle.
     pub fn with_rotations(d: u32) -> GainCacheNc {
         GainCacheNc { d, rotations: true, ..GainCacheNc::default() }
+    }
+
+    /// Set the worker-thread count (builder style). `0` and `1` both run
+    /// the classic sequential path; any larger `t` parallelizes the
+    /// seeding sweep and the drain across `t` scoped threads. The default
+    /// deterministic mode is bit-identical to the sequential refiner —
+    /// same moves, same mapping, same [`SearchStats`] — at every `t`.
+    pub fn threads(mut self, t: usize) -> GainCacheNc {
+        self.threads = t;
+        self
+    }
+
+    /// Opt into the free-running parallel drain (builder style): batches
+    /// of candidates are evaluated concurrently and applied with per-move
+    /// stamp revalidation, trading the bit-identical trajectory for less
+    /// synchronization. Termination still certifies the same
+    /// union-neighborhood local-optimum class (a final sequential drain
+    /// runs to quiescence). No effect at `threads <= 1`.
+    pub fn free_running(mut self, yes: bool) -> GainCacheNc {
+        self.free = yes;
+        self
     }
 
     fn ensure_index(&mut self, comm: &Graph, rot: bool) {
@@ -427,6 +556,20 @@ impl Refiner for GainCacheNc {
     /// over every move plus the lazy re-evaluations of stale pops),
     /// `improved` the applied moves (a rotation counts once), `rounds` the
     /// single seeding sweep. The RNG is never consulted.
+    ///
+    /// With [`Self::threads`] `> 1` the seeding sweep is chunked across
+    /// scoped worker threads (read-only on the engine, disjoint `&mut`
+    /// chunks of the gain/stamp arrays) and the drain pre-evaluates
+    /// upcoming stale pops speculatively on the same workers. In the
+    /// default deterministic mode the pop/apply sequence — and therefore
+    /// the final mapping *and* these statistics — is bit-identical to the
+    /// sequential refiner at every thread count; speculative evaluations
+    /// are only consumed at pop time when their stamp still matches (then
+    /// they equal what the sequential evaluation would return) and wasted
+    /// speculation is never counted. [`Self::free_running`] trades that
+    /// bit-identity for round-based parallel applies, then certifies the
+    /// same union-neighborhood local-optimum class with a final
+    /// sequential drain.
     fn refine(&mut self, engine: &mut dyn Swapper, comm: &Graph, _rng: &mut Rng) -> SearchStats {
         let rot = self.rotations && engine.supports_rotate3();
         self.ensure_index(comm, rot);
@@ -443,8 +586,14 @@ impl Refiner for GainCacheNc {
             return stats;
         }
         let versioned = engine.supports_versions();
+        let threads = self.threads.max(1).min(nm);
 
-        // seed: evaluate every move once, queue the improving ones
+        // seed: evaluate every move once, queue the improving ones. The
+        // sweep is read-only on the engine, so at threads > 1 it is
+        // chunked across scoped workers writing disjoint gain/stamp
+        // slices; queue pushes then happen in fixed id order on this
+        // thread, so the bucket layout (LIFO within a bucket) is the
+        // sequential one at every thread count.
         self.queue.clear();
         self.gain.clear();
         self.gain.resize(nm, 0);
@@ -452,27 +601,220 @@ impl Refiner for GainCacheNc {
         self.stamp.resize(nm, [0; 3]);
         self.queued.clear();
         self.queued.resize(nm, false);
-        for i in 0..nm {
-            let (g, st) = evaluate(&*engine, versioned, stats.improved, pairs, tri_list, np, i);
-            stats.evaluated += 1;
-            self.gain[i] = g;
-            self.stamp[i] = st;
-            if g > 0 {
-                self.queued[i] = true;
-                self.queue.push(i as u32, g);
+        if threads > 1 {
+            let chunk = nm.div_ceil(threads);
+            let eng: &dyn Swapper = &*engine;
+            std::thread::scope(|s| {
+                for (ci, (gs, ss)) in self
+                    .gain
+                    .chunks_mut(chunk)
+                    .zip(self.stamp.chunks_mut(chunk))
+                    .enumerate()
+                {
+                    let base = ci * chunk;
+                    s.spawn(move || {
+                        for (k, (g_out, st_out)) in
+                            gs.iter_mut().zip(ss.iter_mut()).enumerate()
+                        {
+                            let (g, st) =
+                                evaluate(eng, versioned, 0, pairs, tri_list, np, base + k);
+                            *g_out = g;
+                            *st_out = st;
+                        }
+                    });
+                }
+            });
+            stats.evaluated += nm as u64;
+            for i in 0..nm {
+                if self.gain[i] > 0 {
+                    self.queued[i] = true;
+                    self.queue.push(i as u32, self.gain[i]);
+                }
+            }
+        } else {
+            for i in 0..nm {
+                let (g, st) =
+                    evaluate(&*engine, versioned, stats.improved, pairs, tri_list, np, i);
+                stats.evaluated += 1;
+                self.gain[i] = g;
+                self.stamp[i] = st;
+                if g > 0 {
+                    self.queued[i] = true;
+                    self.queue.push(i as u32, g);
+                }
             }
         }
         stats.rounds = 1;
 
-        while let Some(i) = self.queue.pop() {
+        // free-running parallel drain (opt-in): rounds of batched parallel
+        // evaluation against the frozen pre-batch state, then in-order
+        // applies revalidated per move against the live state. Applies may
+        // interleave differently than the sequential drain — the
+        // trajectory can diverge — but every applied move's gain is exact
+        // at apply time, and activate() re-queues everything an apply may
+        // have changed, so the sequential drain below (which then starts
+        // from an empty or quiescent queue) still certifies the
+        // union-neighborhood local optimum.
+        if self.free && threads > 1 {
+            let batch_cap = threads * FREE_BATCH_PER_THREAD;
+            let mut batch: Vec<u32> = Vec::with_capacity(batch_cap);
+            let mut results: Vec<(i64, [u64; 3])> = Vec::with_capacity(batch_cap);
+            loop {
+                batch.clear();
+                while batch.len() < batch_cap {
+                    let Some(id) = self.queue.pop() else { break };
+                    self.queued[id as usize] = false;
+                    batch.push(id);
+                }
+                if batch.is_empty() {
+                    break;
+                }
+                results.clear();
+                results.resize(batch.len(), (0, [0; 3]));
+                let chunk = batch.len().div_ceil(threads);
+                {
+                    let eng: &dyn Swapper = &*engine;
+                    let epoch = stats.improved;
+                    std::thread::scope(|s| {
+                        for (ids, out) in batch.chunks(chunk).zip(results.chunks_mut(chunk)) {
+                            s.spawn(move || {
+                                for (&id, slot) in ids.iter().zip(out.iter_mut()) {
+                                    *slot = evaluate(
+                                        eng,
+                                        versioned,
+                                        epoch,
+                                        pairs,
+                                        tri_list,
+                                        np,
+                                        id as usize,
+                                    );
+                                }
+                            });
+                        }
+                    });
+                }
+                for (k, &id) in batch.iter().enumerate() {
+                    let i = id as usize;
+                    let (g, st) = results[k];
+                    stats.evaluated += 1;
+                    self.gain[i] = g;
+                    self.stamp[i] = st;
+                    if g <= 0 {
+                        continue;
+                    }
+                    let now =
+                        stamp_of(&*engine, versioned, stats.improved, pairs, tri_list, np, i);
+                    if st == now {
+                        apply_and_activate(
+                            &mut *engine,
+                            comm,
+                            pairs,
+                            tris,
+                            tri_list,
+                            np,
+                            &mut self.queue,
+                            &mut self.queued,
+                            &mut self.gain,
+                            &mut self.stamp,
+                            versioned,
+                            &mut stats.improved,
+                            i,
+                            g,
+                        );
+                    } else if !self.queued[i] {
+                        // went stale under an earlier apply of this batch:
+                        // back into the queue for the next round
+                        self.queued[i] = true;
+                        self.queue.push(id, g);
+                    }
+                }
+            }
+        }
+
+        // deterministic speculative prefetch (threads > 1, default mode):
+        // between pops, peek the next entries in exact pop order and
+        // pre-evaluate the stale ones on worker threads into the side
+        // cache. Queue placement and the authoritative gain/stamp arrays
+        // are untouched, so the pop sequence below is exactly the
+        // sequential one; a side-cache hit substitutes for (and is counted
+        // as) the one evaluation the sequential drain would perform.
+        let par = threads > 1 && !self.free;
+        let (spec_batch, spec_window) = if par {
+            self.spec_gain.clear();
+            self.spec_gain.resize(nm, 0);
+            self.spec_stamp.clear();
+            self.spec_stamp.resize(nm, [0; 3]);
+            self.spec_valid.clear();
+            self.spec_valid.resize(nm, false);
+            (threads * SPEC_BATCH_PER_THREAD, threads * SPEC_WINDOW_PER_THREAD)
+        } else {
+            (0, 0)
+        };
+        let mut spec_ids: Vec<u32> = Vec::with_capacity(spec_batch);
+        let mut spec_out: Vec<(i64, [u64; 3])> = Vec::with_capacity(spec_batch);
+        let mut until_respec = 0usize;
+
+        loop {
+            if par && until_respec == 0 && !self.queue.is_empty() {
+                // speculation round: pre-evaluate the stale upcoming pops
+                self.queue.peek_upcoming(spec_batch, &mut spec_ids);
+                spec_ids.retain(|&id| {
+                    let i = id as usize;
+                    let now =
+                        stamp_of(&*engine, versioned, stats.improved, pairs, tri_list, np, i);
+                    self.stamp[i] != now && !(self.spec_valid[i] && self.spec_stamp[i] == now)
+                });
+                if spec_ids.len() >= 2 {
+                    spec_out.clear();
+                    spec_out.resize(spec_ids.len(), (0, [0; 3]));
+                    let chunk = spec_ids.len().div_ceil(threads);
+                    let eng: &dyn Swapper = &*engine;
+                    let epoch = stats.improved;
+                    std::thread::scope(|s| {
+                        for (ids, out) in
+                            spec_ids.chunks(chunk).zip(spec_out.chunks_mut(chunk))
+                        {
+                            s.spawn(move || {
+                                for (&id, slot) in ids.iter().zip(out.iter_mut()) {
+                                    *slot = evaluate(
+                                        eng,
+                                        versioned,
+                                        epoch,
+                                        pairs,
+                                        tri_list,
+                                        np,
+                                        id as usize,
+                                    );
+                                }
+                            });
+                        }
+                    });
+                    for (&id, &(g, st)) in spec_ids.iter().zip(&spec_out) {
+                        let i = id as usize;
+                        self.spec_gain[i] = g;
+                        self.spec_stamp[i] = st;
+                        self.spec_valid[i] = true;
+                    }
+                }
+                until_respec = spec_window;
+            }
+            let Some(i) = self.queue.pop() else { break };
+            until_respec = until_respec.saturating_sub(1);
             let i = i as usize;
             self.queued[i] = false;
-            let fresh =
-                self.stamp[i] == stamp_of(&*engine, versioned, stats.improved, pairs, tri_list, np, i);
+            let now = stamp_of(&*engine, versioned, stats.improved, pairs, tri_list, np, i);
+            let fresh = self.stamp[i] == now;
             let g = if fresh {
                 self.gain[i]
             } else {
-                let (g, st) = evaluate(&*engine, versioned, stats.improved, pairs, tri_list, np, i);
+                // one evaluation, exactly where the sequential drain pays
+                // it — served from the speculative side cache when its
+                // stamp still matches (same state ⇒ same gain)
+                let (g, st) = if par && self.spec_valid[i] && self.spec_stamp[i] == now {
+                    (self.spec_gain[i], now)
+                } else {
+                    evaluate(&*engine, versioned, stats.improved, pairs, tri_list, np, i)
+                };
                 stats.evaluated += 1;
                 self.gain[i] = g;
                 self.stamp[i] = st;
@@ -493,57 +835,22 @@ impl Refiner for GainCacheNc {
             // paying a second evaluation (the dense engine's overrides skip
             // the O(n) row scan its do_swap/do_rotate3 would burn
             // recomputing g)
-            match decode(i, np) {
-                MoveRef::Swap(p) => {
-                    let (u, v) = pairs.pairs[p];
-                    engine.do_swap_with_gain(u, v, g);
-                    stats.improved += 1;
-                    // the applied pair's own gain is exactly negated; stamp
-                    // it fresh so its inevitable re-activation pop drops it
-                    // evaluation-free
-                    self.gain[i] = -g;
-                    self.stamp[i] =
-                        stamp_of(&*engine, versioned, stats.improved, pairs, tri_list, np, i);
-                    for x in [u, v] {
-                        activate(
-                            &mut self.queue,
-                            &mut self.queued,
-                            &self.gain,
-                            pairs,
-                            tris,
-                            np,
-                            comm,
-                            x,
-                        );
-                    }
-                }
-                MoveRef::Rotate3(t, rev) => {
-                    let (u, v, w) = oriented(tri_list[t], rev);
-                    engine.do_rotate3_with_gain(u, v, w, g);
-                    stats.improved += 1;
-                    // the inverse direction undoes this rotation exactly, so
-                    // its gain from the new state is exactly -g: stamp it
-                    // fresh so its re-activation pop drops it
-                    // evaluation-free (the applied direction's own entry
-                    // goes stale and re-evaluates lazily if re-activated)
-                    let inv = np + 2 * t + usize::from(!rev);
-                    self.gain[inv] = -g;
-                    self.stamp[inv] =
-                        stamp_of(&*engine, versioned, stats.improved, pairs, tri_list, np, inv);
-                    for x in [u, v, w] {
-                        activate(
-                            &mut self.queue,
-                            &mut self.queued,
-                            &self.gain,
-                            pairs,
-                            tris,
-                            np,
-                            comm,
-                            x,
-                        );
-                    }
-                }
-            }
+            apply_and_activate(
+                &mut *engine,
+                comm,
+                pairs,
+                tris,
+                tri_list,
+                np,
+                &mut self.queue,
+                &mut self.queued,
+                &mut self.gain,
+                &mut self.stamp,
+                versioned,
+                &mut stats.improved,
+                i,
+                g,
+            );
         }
         stats
     }
@@ -920,6 +1227,101 @@ mod tests {
         let stats = GainCacheNc::with_rotations(1).refine(&mut eng, &g, &mut Rng::new(1));
         assert_eq!(stats, SearchStats::default());
         assert_eq!(eng.objective(), 0);
+    }
+
+    #[test]
+    fn peek_upcoming_matches_pop_order_and_removes_nothing() {
+        let mut q = GainBucketQueue::new();
+        let mut out = vec![7u32]; // stale content must be cleared
+        q.peek_upcoming(4, &mut out);
+        assert!(out.is_empty());
+        q.push(1, 5);
+        q.push(2, 100);
+        q.push(3, 1);
+        q.push(4, 100); // same bucket as 2: LIFO puts it first
+        q.peek_upcoming(3, &mut out);
+        assert_eq!(out, vec![4, 2, 1]);
+        q.peek_upcoming(10, &mut out);
+        assert_eq!(out, vec![4, 2, 1, 3]);
+        assert_eq!(q.len(), 4, "peeking removes nothing");
+        assert_eq!(q.pop(), Some(4));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn parallel_deterministic_mode_is_bit_identical_at_any_thread_count() {
+        // tentpole acceptance: parallel seeding + the speculative drain
+        // replay the sequential trajectory exactly — mapping, objective,
+        // and the full SearchStats — at T ∈ {2, 4}, for both move classes
+        let (g, o) = setup(7, 120);
+        let m = {
+            let mut r = Rng::new(121);
+            Mapping { sigma: r.permutation(g.n()) }
+        };
+        for rot in [false, true] {
+            let mk = |d| if rot { GainCacheNc::with_rotations(d) } else { GainCacheNc::new(d) };
+            let mut base = SwapEngine::new(&g, &o, m.clone());
+            let s1 = mk(2).refine(&mut base, &g, &mut Rng::new(1));
+            assert!(s1.improved > 0, "random start must improve");
+            for t in [2usize, 4] {
+                let mut eng = SwapEngine::new(&g, &o, m.clone());
+                let st = mk(2).threads(t).refine(&mut eng, &g, &mut Rng::new(1));
+                assert_eq!(eng.mapping(), base.mapping(), "rotations={rot} threads={t}");
+                assert_eq!(eng.objective(), base.objective(), "rotations={rot} threads={t}");
+                assert_eq!(st, s1, "stats must replay exactly: rotations={rot} threads={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_deterministic_mode_matches_under_the_epoch_fallback() {
+        // the unversioned dense baseline takes the same parallel paths
+        // (its stamps are the refiner's own epoch) and must still replay
+        // the sequential trajectory bit-for-bit
+        let (g, o) = setup(6, 124);
+        let m = {
+            let mut r = Rng::new(125);
+            Mapping { sigma: r.permutation(g.n()) }
+        };
+        let mut base = DenseEngine::new(&g, &o, m.clone());
+        let s1 = GainCacheNc::with_rotations(2).refine(&mut base, &g, &mut Rng::new(1));
+        let mut par = DenseEngine::new(&g, &o, m);
+        let s4 = GainCacheNc::with_rotations(2).threads(4).refine(&mut par, &g, &mut Rng::new(1));
+        assert_eq!(par.mapping(), base.mapping());
+        assert_eq!(par.objective(), base.objective());
+        assert_eq!(s4, s1);
+    }
+
+    #[test]
+    fn free_running_mode_reaches_a_union_neighborhood_local_optimum() {
+        // free-running applies may reorder (the trajectory is allowed to
+        // diverge from sequential) but the terminal state must satisfy the
+        // same certificate: no improving pair and no improving rotation in
+        // either direction, on a consistent engine
+        let (g, o) = setup(7, 126);
+        let d = 2;
+        let m = {
+            let mut r = Rng::new(127);
+            Mapping { sigma: r.permutation(g.n()) }
+        };
+        let mut eng = SwapEngine::new(&g, &o, m);
+        let stats = GainCacheNc::with_rotations(d)
+            .threads(4)
+            .free_running(true)
+            .refine(&mut eng, &g, &mut Rng::new(1));
+        assert!(stats.improved > 0, "random start must improve");
+        for &(a, b) in &nc_pairs(&g, d) {
+            assert!(eng.swap_gain(a, b) <= 0, "improving pair ({a},{b}) left behind");
+        }
+        for &(a, b, c) in &comm_triangles(&g) {
+            assert!(eng.rotate3_gain(a, b, c) <= 0, "improving rotation left behind");
+            assert!(eng.rotate3_gain(a, c, b) <= 0, "improving reverse rotation left behind");
+        }
+        eng.mapping().validate().unwrap();
+        assert_eq!(eng.objective(), eng.recompute_objective());
+        assert_eq!(stats.improved, eng.swaps_applied);
     }
 
     #[test]

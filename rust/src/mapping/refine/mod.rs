@@ -54,7 +54,13 @@ use crate::util::Rng;
 
 /// Common interface over the fast (sparse, `O(d_u+d_v)`) and slow (dense,
 /// `O(n)`) swap engines.
-pub trait Swapper {
+///
+/// `Sync` is a supertrait so a `&dyn Swapper` can be shared across the
+/// scoped worker threads of the parallel gain-cache search and the parallel
+/// V-cycle subtree phase: every in-tree engine is plain data (`Vec`s plus
+/// shared `&Graph`/`&Machine` borrows), so the bound costs nothing and buys
+/// read-only parallel gain evaluation.
+pub trait Swapper: Sync {
     /// Gain of swapping `u` and `v` *without* applying (positive = the
     /// objective would decrease by that amount).
     fn swap_gain(&self, u: NodeId, v: NodeId) -> i64;
@@ -233,7 +239,12 @@ impl SearchStats {
 /// neighborhood. Implementations own their reusable scratch; a refiner
 /// instance is bound to the one communication graph it first refines
 /// (subsequent calls reuse the cached pair/triangle sets).
-pub trait Refiner {
+///
+/// `Send` is a supertrait so boxed refiners (session scratch, the per-level
+/// V-cycle vector) can move into scoped worker threads for parallel
+/// repetitions and parallel subtree refinement. All in-tree refiners own
+/// only plain data (`Vec`s, counters), so the bound is free.
+pub trait Refiner: Send {
     /// Human-readable name (for benches and logs).
     fn name(&self) -> String;
     /// Run the search to convergence; never increases `engine.objective()`.
@@ -264,6 +275,21 @@ pub fn refiner_for(
     max_sweeps: usize,
     machine: &Machine,
 ) -> Box<dyn Refiner> {
+    refiner_for_threads(neighborhood, max_sweeps, machine, 1)
+}
+
+/// [`refiner_for`] with an intra-refiner worker-thread count. Only the
+/// gain-cached refiners parallelize internally (the seeding sweep and the
+/// drain of [`GainCacheNc`], in its deterministic bit-identical-to-`T=1`
+/// mode); the sweep-based refiners ignore the knob — they already get
+/// their parallelism from the coarser layers (parallel repetitions and
+/// V-cycle subtrees).
+pub fn refiner_for_threads(
+    neighborhood: Neighborhood,
+    max_sweeps: usize,
+    machine: &Machine,
+    threads: usize,
+) -> Box<dyn Refiner> {
     match neighborhood {
         Neighborhood::None => Box::new(Noop),
         Neighborhood::N2 => Box::new(N2Cyclic { max_sweeps }),
@@ -272,8 +298,8 @@ pub fn refiner_for(
         }
         Neighborhood::Nc { d } => Box::new(NcNeighborhood::new(d)),
         Neighborhood::NcCycle { d } => Box::new(NcCycle::new(d, max_sweeps)),
-        Neighborhood::GcNc { d } => Box::new(GainCacheNc::new(d)),
-        Neighborhood::GcNcCycle { d } => Box::new(GainCacheNc::with_rotations(d)),
+        Neighborhood::GcNc { d } => Box::new(GainCacheNc::new(d).threads(threads)),
+        Neighborhood::GcNcCycle { d } => Box::new(GainCacheNc::with_rotations(d).threads(threads)),
     }
 }
 
@@ -335,6 +361,20 @@ mod tests {
                 assert_eq!(refiner_for(nb, 100, machine).name(), name, "{}", machine.kind());
             }
         }
+    }
+
+    #[test]
+    fn engines_and_refiners_cross_threads() {
+        // the Send/Sync refactor, statically: engines are shareable across
+        // the scoped workers of the parallel drains, and boxed refiners
+        // move into the scoped workers of parallel repetitions / subtrees
+        fn assert_send<T: Send + ?Sized>() {}
+        fn assert_sync<T: Sync + ?Sized>() {}
+        assert_sync::<crate::mapping::objective::SwapEngine<'_>>();
+        assert_sync::<crate::mapping::objective::DenseEngine>();
+        assert_sync::<dyn Swapper>();
+        assert_send::<Box<dyn Refiner>>();
+        assert_send::<GainCacheNc>();
     }
 
     #[test]

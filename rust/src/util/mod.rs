@@ -7,8 +7,10 @@
 pub mod cli;
 pub mod rng;
 pub mod stats;
+pub mod threads;
 pub mod timer;
 
 pub use cli::Args;
 pub use rng::Rng;
+pub use threads::{resolve_threads, MAX_THREADS};
 pub use timer::Timer;

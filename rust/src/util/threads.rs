@@ -1,0 +1,48 @@
+//! Thread-count resolution shared by the CLI, `MapJobBuilder`, and `serve`.
+//!
+//! All three entry points accept a `threads` knob with the same contract:
+//! `0` means "auto-detect" (`std::thread::available_parallelism`), any other
+//! value is taken literally, and values above [`MAX_THREADS`] are rejected at
+//! parse/build time so a typo'd wire token can't make a worker try to spawn
+//! a million scoped threads.
+
+/// Upper bound on an explicit thread request. Far above any real machine this
+/// code will run on; its only job is to turn `threads=18446744073709551615`
+/// into a clean `ERR` instead of an allocation attempt.
+pub const MAX_THREADS: usize = 4096;
+
+/// Resolve a requested thread count to the effective one.
+///
+/// `0` maps to the detected available parallelism (falling back to 1 when
+/// detection fails, e.g. in restricted sandboxes); explicit values are
+/// clamped to [`MAX_THREADS`]. The result is always >= 1.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map_or(1, |n| n.get())
+    } else {
+        requested.min(MAX_THREADS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_autodetects_to_at_least_one() {
+        assert!(resolve_threads(0) >= 1);
+    }
+
+    #[test]
+    fn explicit_values_pass_through() {
+        assert_eq!(resolve_threads(1), 1);
+        assert_eq!(resolve_threads(7), 7);
+    }
+
+    #[test]
+    fn absurd_values_clamp_to_cap() {
+        assert_eq!(resolve_threads(usize::MAX), MAX_THREADS);
+        assert_eq!(resolve_threads(MAX_THREADS + 1), MAX_THREADS);
+        assert_eq!(resolve_threads(MAX_THREADS), MAX_THREADS);
+    }
+}

@@ -685,6 +685,98 @@ fn odd_fanout_hierarchy_job_runs_end_to_end() {
 }
 
 #[test]
+fn sessions_jobs_and_reports_are_send() {
+    // the parallel-repetition and subtree layers move jobs, scratch and
+    // results into scoped worker threads; these bounds are the compile-time
+    // contract (RuntimeHandle is an owner-thread mpsc handle, so even a
+    // verification-capable session crosses threads)
+    fn assert_send<T: Send>() {}
+    assert_send::<MapJob>();
+    assert_send::<MapSession>();
+    assert_send::<qapmap::api::MapReport>();
+}
+
+#[test]
+fn thread_counts_reproduce_sequential_bits_flat_ml_and_wire() {
+    // the deterministic-mode contract, end to end through the session: for
+    // T ∈ {1, 2, 4} the mapping, objective and full per-rep trajectory
+    // (stats included) are bit-identical — single-rep jobs exercise the
+    // threaded gain-cache drain and the parallel subtree phase, multi-rep
+    // jobs exercise the parallel repetition layer — and a T=4 job pushed
+    // through the wire encoding still reproduces the T=1 bits
+    let (g, h) = instance(128, 40);
+    let trajectory = |r: &qapmap::api::MapReport| {
+        r.reps
+            .iter()
+            .map(|s| {
+                let counts = (s.evaluated, s.improved, s.rounds);
+                (s.seed, s.objective_initial, s.objective, counts, s.levels.clone())
+            })
+            .collect::<Vec<_>>()
+    };
+    for algo in ["topdown+gc:nccyc2", "topdown+gc:nc2", "ml:topdown+gc:nc2", "ml:topdown+Nc2"] {
+        for reps in [1u32, 3] {
+            let mk = |t: usize| {
+                MapJobBuilder::new(g.clone(), h.clone())
+                    .algorithm_name(algo)
+                    .unwrap()
+                    .repetitions(reps)
+                    .coarsen_limit(16)
+                    .seed(41)
+                    .threads(t)
+                    .build()
+                    .unwrap()
+            };
+            let base = MapSession::new(mk(1)).run();
+            for t in [2usize, 4] {
+                let par = MapSession::new(mk(t)).run();
+                assert_eq!(par.mapping.sigma, base.mapping.sigma, "{algo} reps={reps} T={t}");
+                assert_eq!(par.objective, base.objective, "{algo} reps={reps} T={t}");
+                assert_eq!(trajectory(&par), trajectory(&base), "{algo} reps={reps} T={t}");
+            }
+
+            // across the wire: the threads token survives the round-trip
+            // and the re-translated job replays the sequential trajectory
+            let req = mk(4).to_request(77);
+            assert_eq!(req.threads, Some(4), "{algo}");
+            let mut buf = Vec::new();
+            qapmap::coordinator::wire::write_request(&mut buf, &req).unwrap();
+            let back =
+                qapmap::coordinator::wire::read_request(&mut std::io::BufReader::new(&buf[..]))
+                    .unwrap();
+            assert_eq!(back.threads, Some(4), "{algo}");
+            let report = MapSession::new(MapJob::from_request(&back).unwrap()).run();
+            assert_eq!(report.mapping.sigma, base.mapping.sigma, "{algo} reps={reps} wire");
+            assert_eq!(trajectory(&report), trajectory(&base), "{algo} reps={reps} wire");
+        }
+    }
+}
+
+#[test]
+fn auto_detected_threads_stay_deterministic() {
+    // threads(0) resolves to available_parallelism at run time; whatever
+    // that is on the host, the deterministic mode must still reproduce the
+    // T=1 bits (the knob may only change wall-clock, never results)
+    let (g, h) = instance(128, 42);
+    let mk = |t: usize| {
+        MapJobBuilder::new(g.clone(), h.clone())
+            .algorithm_name("topdown+gc:nccyc2")
+            .unwrap()
+            .repetitions(2)
+            .seed(43)
+            .threads(t)
+            .build()
+            .unwrap()
+    };
+    let auto = mk(0);
+    assert!(auto.resolved_threads() >= 1);
+    let a = MapSession::new(auto).run();
+    let b = MapSession::new(mk(1)).run();
+    assert_eq!(a.mapping.sigma, b.mapping.sigma);
+    assert_eq!(a.objective, b.objective);
+}
+
+#[test]
 fn grid_and_torus_sessions_are_deterministic() {
     // gc and ml sessions stay bit-identical under grid and torus machines
     let mut rng = Rng::new(54);

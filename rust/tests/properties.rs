@@ -356,6 +356,59 @@ fn prop_vcycle_valid_and_monotone_on_random_instances() {
 }
 
 #[test]
+fn prop_free_running_drain_certifies_optimum_and_is_no_worse_in_aggregate() {
+    // the free-running parallel drain may apply moves in a different order
+    // than the sequential best-first drain, so a single instance can land
+    // on a *different* union-neighborhood local optimum; what the mode
+    // guarantees per instance is the certificate (no improving N_C^d pair,
+    // no improving rotation in either direction) plus monotone improvement,
+    // and across a sweep of random rgg/gnp instances its objectives must be
+    // no worse in aggregate (geometric mean) than the sequential drain's —
+    // the same claim `hotpath --check` asserts on the bench instance
+    use qapmap::mapping::refine::{comm_triangles, GainCacheNc, Refiner};
+    let d = 2;
+    let (mut log_free, mut log_seq) = (0.0f64, 0.0f64);
+    for seed in 300..312u64 {
+        let mut rng = Rng::new(seed);
+        let n = 64 << rng.index(2); // 64 or 128
+        let comm = random_comm(&mut rng, n);
+        let h = random_hierarchy(&mut rng, n);
+        let oracle = Machine::implicit(h);
+        let start = Mapping { sigma: rng.permutation(n) };
+
+        let mut seq = SwapEngine::new(&comm, &oracle, start.clone());
+        GainCacheNc::with_rotations(d).refine(&mut seq, &comm, &mut Rng::new(1));
+
+        let mut free = SwapEngine::new(&comm, &oracle, start);
+        let initial = free.objective();
+        GainCacheNc::with_rotations(d)
+            .threads(4)
+            .free_running(true)
+            .refine(&mut free, &comm, &mut Rng::new(1));
+
+        assert!(free.objective() <= initial, "seed {seed}: free mode worsened the start");
+        for &(a, b) in &nc_pairs(&comm, d) {
+            assert!(free.swap_gain(a, b) <= 0, "seed {seed}: improving pair ({a},{b})");
+        }
+        for &(a, b, c) in &comm_triangles(&comm) {
+            assert!(free.rotate3_gain(a, b, c) <= 0, "seed {seed}: improving rotation");
+            assert!(free.rotate3_gain(a, c, b) <= 0, "seed {seed}: improving reverse rotation");
+        }
+        free.mapping().validate().unwrap();
+        assert_eq!(free.objective(), free.recompute_objective(), "seed {seed}: J drift");
+
+        log_free += (free.objective().max(1) as f64).ln();
+        log_seq += (seq.objective().max(1) as f64).ln();
+    }
+    let geo_free = (log_free / 12.0).exp();
+    let geo_seq = (log_seq / 12.0).exp();
+    assert!(
+        geo_free <= geo_seq * 1.01,
+        "free-running drain degraded aggregate quality: geomean {geo_free:.1} vs sequential {geo_seq:.1}"
+    );
+}
+
+#[test]
 fn prop_constructions_always_bijective() {
     use qapmap::mapping::construct;
     for seed in 95..105u64 {

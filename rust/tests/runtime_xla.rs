@@ -146,11 +146,14 @@ fn coordinator_with_xla_verification() {
     let resp = coord.submit_blocking(MapRequest {
         id: 1,
         comm: g,
-        hierarchy: h,
+        machine: Machine::Hier(h),
         algorithm: AlgorithmSpec::parse("topdown+Nc1").unwrap(),
         repetitions: 4,
         seed: 42,
         verify: true,
+        levels: None,
+        coarsen_limit: None,
+        threads: None,
     });
     assert!(resp.error.is_none(), "{:?}", resp.error);
     assert_eq!(resp.verified, Some(true), "xla verification should agree: {resp:?}");

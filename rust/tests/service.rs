@@ -25,6 +25,7 @@ fn request(id: u64, n: usize, algo: &str) -> MapRequest {
         verify: false,
         levels: None,
         coarsen_limit: None,
+        threads: None,
     }
 }
 
