@@ -68,6 +68,7 @@ fn main() {
             levels: None,
             coarsen_limit: None,
             threads: None,
+            deadline_ms: None,
         };
 
         let t = Timer::start();

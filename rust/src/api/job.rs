@@ -85,6 +85,7 @@ pub struct MapJobBuilder {
     verify: VerifyPolicy,
     ml_cfg: MlConfig,
     threads: usize,
+    deadline_ms: Option<u64>,
 }
 
 impl MapJobBuilder {
@@ -109,6 +110,7 @@ impl MapJobBuilder {
             verify: VerifyPolicy::Skip,
             ml_cfg: MlConfig::default(),
             threads: 1,
+            deadline_ms: None,
         }
     }
 
@@ -199,6 +201,19 @@ impl MapJobBuilder {
         self
     }
 
+    /// Wall-clock budget in milliseconds, measured from run start. The
+    /// search is *anytime*: at the deadline it stops at the next move
+    /// boundary and the report carries the best valid mapping found so
+    /// far, flagged `timed_out` — never an error, and never a torn
+    /// permutation. `None` (the default) disarms every check, keeping the
+    /// hot path and its bit-exact trajectories untouched. A per-run knob
+    /// like `seed`/`threads`: it does not affect session-cache
+    /// compatibility (`MapSession::adopt_job`).
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
     /// Validate and freeze the configuration.
     pub fn build(self) -> Result<MapJob, String> {
         if self.comm.n() != self.machine.n_pes() {
@@ -228,6 +243,7 @@ impl MapJobBuilder {
             verify: self.verify,
             ml_cfg: self.ml_cfg,
             threads: self.threads,
+            deadline_ms: self.deadline_ms,
         })
     }
 }
@@ -248,6 +264,7 @@ pub struct MapJob {
     pub(crate) verify: VerifyPolicy,
     pub(crate) ml_cfg: MlConfig,
     pub(crate) threads: usize,
+    pub(crate) deadline_ms: Option<u64>,
 }
 
 impl MapJob {
@@ -306,6 +323,11 @@ impl MapJob {
         self.threads
     }
 
+    /// Wall-clock budget in milliseconds (`None` = unlimited).
+    pub fn deadline_ms(&self) -> Option<u64> {
+        self.deadline_ms
+    }
+
     /// The effective thread budget: auto-detection applied, always >= 1.
     pub fn resolved_threads(&self) -> usize {
         resolve_threads(self.threads)
@@ -362,6 +384,9 @@ impl MapJob {
         if let Some(threads) = req.threads {
             b = b.threads(threads);
         }
+        if let Some(ms) = req.deadline_ms {
+            b = b.deadline_ms(ms);
+        }
         b.build()
     }
 
@@ -391,6 +416,7 @@ impl MapJob {
             coarsen_limit: (self.ml_cfg.coarsen_limit != defaults.coarsen_limit)
                 .then_some(self.ml_cfg.coarsen_limit),
             threads: (self.threads != 1).then_some(self.threads),
+            deadline_ms: self.deadline_ms,
         }
     }
 }
@@ -416,6 +442,8 @@ impl MapResponse {
             total_secs,
             stats,
             best_rep: report.best_rep,
+            timed_out: report.timed_out,
+            cancelled: report.cancelled,
             reps: report.reps,
             error: None,
         }

@@ -34,6 +34,13 @@ pub struct RepStat {
     /// single-level runs). Travels over the wire protocol as trailing
     /// `REP`-line groups.
     pub levels: Vec<LevelStat>,
+    /// True when this repetition's search stopped at its deadline (the
+    /// mapping is the valid best-so-far at the stop boundary, not an
+    /// error). Wire: trailing `stop=t` token on the `REP` line.
+    pub timed_out: bool,
+    /// True when the run was cancelled (client connection dropped, server
+    /// shutdown). Wire: trailing `stop=c` token.
+    pub cancelled: bool,
 }
 
 impl RepStat {
@@ -43,6 +50,13 @@ impl RepStat {
             evaluated: self.evaluated,
             improved: self.improved,
             rounds: self.rounds,
+            stopped: if self.cancelled {
+                Some(crate::util::StopReason::Cancelled)
+            } else if self.timed_out {
+                Some(crate::util::StopReason::TimedOut)
+            } else {
+                None
+            },
         }
     }
 }
@@ -86,6 +100,13 @@ pub struct MapReport {
     pub verify_error: Option<String>,
     /// True when a deterministic job collapsed `repetitions > 1` into one.
     pub short_circuited: bool,
+    /// True when any repetition stopped at the job deadline — the report
+    /// still carries the best *valid* mapping found before the stop (the
+    /// anytime guarantee), it just may not be the converged one.
+    pub timed_out: bool,
+    /// True when the job was cancelled mid-run (connection drop/shutdown);
+    /// the mapping is the best-so-far at the cancellation boundary.
+    pub cancelled: bool,
 }
 
 impl MapReport {

@@ -8,7 +8,7 @@ use crate::mapping::objective::{objective, DenseEngine, Mapping, SwapEngine};
 use crate::mapping::refine::{refiner_for_threads, Refiner};
 use crate::mapping::{construct, Machine};
 use crate::runtime::{RuntimeHandle, BATCH};
-use crate::util::{Rng, Timer};
+use crate::util::{faults, Rng, RunControl, StopReason, Timer};
 
 use super::job::{MapJob, OracleMode, VerifyPolicy};
 use super::report::{MapReport, RepStat};
@@ -105,6 +105,11 @@ pub struct MapSession {
     oracle: Machine,
     runtime: Option<RuntimeHandle>,
     scratch: SessionScratch,
+    /// Externally armed run control (the coordinator's admission path
+    /// installs the connection token here so queue wait counts against the
+    /// deadline). When absent, each run arms one from the job's own
+    /// `deadline_ms` — or stays fully disarmed for deadline-free jobs.
+    control: Option<RunControl>,
 }
 
 impl MapSession {
@@ -121,7 +126,26 @@ impl MapSession {
             OracleMode::Implicit => job.machine.clone(),
             OracleMode::Explicit => Machine::explicit(&job.machine),
         };
-        MapSession { job, oracle, runtime, scratch: SessionScratch::default() }
+        MapSession { job, oracle, runtime, scratch: SessionScratch::default(), control: None }
+    }
+
+    /// Install an externally owned [`RunControl`] (deadline and/or cancel
+    /// token) for subsequent runs, replacing any previous one. The
+    /// coordinator arms this at admission time; library callers usually
+    /// prefer [`super::MapJobBuilder::deadline_ms`], which arms a fresh
+    /// deadline at each run start instead.
+    pub fn set_control(&mut self, ctrl: RunControl) {
+        self.control = Some(ctrl);
+    }
+
+    /// The control governing the next run: the externally installed token
+    /// if any, else one armed from the job's `deadline_ms` (disarmed when
+    /// the job has no deadline either).
+    fn effective_control(&self) -> RunControl {
+        match &self.control {
+            Some(c) => c.clone(),
+            None => RunControl::from_deadline(self.job.deadline_ms),
+        }
     }
 
     /// Attach (or detach) a PJRT runtime after construction. Warm sessions
@@ -198,6 +222,7 @@ impl MapSession {
         let timer = Timer::start();
         let requested = self.job.repetitions;
         let reps = self.job.effective_repetitions() as usize;
+        let ctrl = self.effective_control();
 
         let threads = self.job.resolved_threads();
         let seeds: Vec<u64> = (0..reps).map(|r| base_seed.wrapping_add(r as u64)).collect();
@@ -211,7 +236,14 @@ impl MapSession {
             // for_worker`]). Repetition 0 runs inline first so those
             // caches are warm before the workers clone them.
             let mut rng = Rng::new(seeds[0]);
-            results.push(execute_once(&self.job, &self.oracle, &mut rng, &mut self.scratch, 1));
+            results.push(execute_once(
+                &self.job,
+                &self.oracle,
+                &mut rng,
+                &mut self.scratch,
+                1,
+                &ctrl,
+            ));
             let rest = reps - 1;
             let workers = threads.min(rest);
             let chunk = rest.div_ceil(workers);
@@ -219,26 +251,47 @@ impl MapSession {
             slots.resize_with(rest, || None);
             let job = &self.job;
             let oracle = &self.oracle;
+            let ctrl_ref = &ctrl;
             std::thread::scope(|sc| {
                 for (ci, out) in slots.chunks_mut(chunk).enumerate() {
                     let mut scratch = self.scratch.for_worker(job);
                     sc.spawn(move || {
                         for (j, slot) in out.iter_mut().enumerate() {
+                            // a fired deadline/cancel skips the remaining
+                            // repetitions of this worker — the slots stay
+                            // None and the report carries what finished
+                            if ctrl_ref.stop_reason().is_some() {
+                                break;
+                            }
                             let r = 1 + ci * chunk + j;
                             let mut rng = Rng::new(base_seed.wrapping_add(r as u64));
-                            *slot = Some(execute_once(job, oracle, &mut rng, &mut scratch, 1));
+                            *slot =
+                                Some(execute_once(job, oracle, &mut rng, &mut scratch, 1, ctrl_ref));
                         }
                     });
                 }
             });
-            results.extend(slots.into_iter().map(|s| s.expect("worker filled its slot")));
+            results.extend(slots.into_iter().flatten());
         } else {
             // Sequential repetitions: the whole thread budget goes to the
             // engine inside each repetition.
             let intra = if reps > 1 { 1 } else { threads };
             for &seed in &seeds {
+                // always run repetition 0 (its refiner stops internally, so
+                // even a born-expired deadline yields a valid construction
+                // result); later reps are skipped once the control fires
+                if !results.is_empty() && ctrl.stop_reason().is_some() {
+                    break;
+                }
                 let mut rng = Rng::new(seed);
-                results.push(execute_once(&self.job, &self.oracle, &mut rng, &mut self.scratch, intra));
+                results.push(execute_once(
+                    &self.job,
+                    &self.oracle,
+                    &mut rng,
+                    &mut self.scratch,
+                    intra,
+                    &ctrl,
+                ));
             }
         }
 
@@ -280,6 +333,9 @@ impl MapSession {
             }
         };
 
+        // a control that fired after the last completed repetition (or that
+        // skipped repetitions outright) still flags the report
+        let late_stop = ctrl.stop_reason();
         let rep_stats: Vec<RepStat> = seeds
             .iter()
             .zip(&results)
@@ -293,8 +349,14 @@ impl MapSession {
                 improved: r.stats.improved,
                 rounds: r.stats.rounds,
                 levels: r.level_stats.clone(),
+                timed_out: r.stats.stopped == Some(StopReason::TimedOut),
+                cancelled: r.stats.stopped == Some(StopReason::Cancelled),
             })
             .collect();
+        let timed_out = rep_stats.iter().any(|r| r.timed_out)
+            || (late_stop == Some(StopReason::TimedOut) && rep_stats.len() < reps);
+        let cancelled = rep_stats.iter().any(|r| r.cancelled)
+            || (late_stop == Some(StopReason::Cancelled) && rep_stats.len() < reps);
 
         let best_res = results.swap_remove(best_idx);
         MapReport {
@@ -312,6 +374,8 @@ impl MapSession {
             verified,
             verify_error,
             short_circuited: (reps as u32) < requested,
+            timed_out,
+            cancelled,
         }
     }
 
@@ -436,9 +500,11 @@ pub(crate) fn execute_once(
     rng: &mut Rng,
     scratch: &mut SessionScratch,
     threads: usize,
+    ctrl: &RunControl,
 ) -> MapResult {
+    faults::hit("oracle/eval");
     if job.spec.multilevel {
-        return execute_multilevel(job, oracle, rng, scratch, threads);
+        return execute_multilevel(job, oracle, rng, scratch, threads, ctrl);
     }
     let comm = &job.comm;
     let spec = &job.spec;
@@ -454,6 +520,7 @@ pub(crate) fn execute_once(
     let refiner = scratch.refiner.get_or_insert_with(|| {
         refiner_for_threads(spec.neighborhood, spec.max_sweeps, &job.machine, threads)
     });
+    refiner.set_control(ctrl);
 
     let t = Timer::start();
     let (mapping, objective_initial, objective, stats) = match spec.gain_mode {
@@ -507,6 +574,7 @@ fn execute_multilevel(
     rng: &mut Rng,
     scratch: &mut SessionScratch,
     threads: usize,
+    ctrl: &RunControl,
 ) -> MapResult {
     let SessionScratch { gamma, ml, construction, .. } = scratch;
     let MlState { hierarchy, refiners, build_secs } =
@@ -535,8 +603,18 @@ fn execute_multilevel(
     let construct_secs = *build_secs + coarse_secs;
 
     let t = Timer::start();
-    let outcome =
-        vcycle_refine(&job.comm, oracle, hierarchy, coarse, refiners, rng, gamma, &job.spec, threads);
+    let outcome = vcycle_refine(
+        &job.comm,
+        oracle,
+        hierarchy,
+        coarse,
+        refiners,
+        rng,
+        gamma,
+        &job.spec,
+        threads,
+        ctrl,
+    );
     let ls_secs = t.secs();
 
     MapResult {

@@ -42,6 +42,13 @@ pub struct MapRequest {
     /// token `threads=`; `0` = auto-detect on the server); `None` = the
     /// server's default.
     pub threads: Option<usize>,
+    /// Optional wall-clock budget in milliseconds (wire token
+    /// `deadline_ms=`), measured from admission — queue wait counts
+    /// against it. At expiry the anytime search returns its best-so-far
+    /// valid mapping flagged `timed_out`; jobs already expired at
+    /// admission are refused with the retryable `EXPIRED`. `None` = no
+    /// deadline (the zero-overhead hot path).
+    pub deadline_ms: Option<u64>,
 }
 
 impl MapRequest {
@@ -87,6 +94,14 @@ pub struct MapResponse {
     /// Index into [`Self::reps`] of the winning repetition (the winner may
     /// not be the exact-integer argmin when batched XLA scoring picked it).
     pub best_rep: usize,
+    /// True when the search stopped at the job deadline: `sigma` is the
+    /// best *valid* mapping found before the stop (anytime guarantee),
+    /// not an error. Wire: trailing `timed_out=1` token on the OK line.
+    pub timed_out: bool,
+    /// True when the job was cancelled mid-run (connection drop or server
+    /// shutdown caught it in flight); `sigma` is the best-so-far mapping.
+    /// Wire: trailing `cancelled=1` token.
+    pub cancelled: bool,
     /// Per-repetition statistics (`MapReport::reps`), in execution order.
     /// Deterministic jobs short-circuit to a single entry.
     pub reps: Vec<RepStat>,
@@ -109,6 +124,8 @@ impl MapResponse {
             total_secs: 0.0,
             stats: SearchStats::default(),
             best_rep: 0,
+            timed_out: false,
+            cancelled: false,
             reps: Vec::new(),
             error: Some(error),
         }
@@ -124,6 +141,38 @@ impl MapResponse {
     /// never admitted, so retrying (with backoff, or elsewhere) is sound.
     pub fn is_busy(&self) -> bool {
         self.error.as_deref().is_some_and(|e| e.starts_with("busy: "))
+    }
+
+    /// The deadline refusal (`EXPIRED` on the wire): the job's budget had
+    /// already lapsed at admission (or while it sat in the queue), so it
+    /// was never run. Retryable like [`Self::busy`] — a fresh submission
+    /// gets a fresh budget.
+    pub fn expired(id: u64) -> MapResponse {
+        Self::failure(id, "expired: deadline lapsed before the job ran".into())
+    }
+
+    /// True when this failure is a [`Self::expired`] refusal.
+    pub fn is_expired(&self) -> bool {
+        self.error.as_deref().is_some_and(|e| e.starts_with("expired: "))
+    }
+
+    /// The shutdown refusal: the server is draining and no longer accepts
+    /// (or will run) this job. Retryable — against a restarted server or a
+    /// different one.
+    pub fn unavailable(id: u64) -> MapResponse {
+        Self::failure(id, "unavailable: server shutting down".into())
+    }
+
+    /// True when this failure is a [`Self::unavailable`] refusal.
+    pub fn is_unavailable(&self) -> bool {
+        self.error.as_deref().is_some_and(|e| e.starts_with("unavailable: "))
+    }
+
+    /// True for every refusal a client may soundly retry: the job was
+    /// never admitted (`busy`, `unavailable`) or never run (`expired`).
+    /// Genuine failures (bad request, worker panic) are not retryable.
+    pub fn is_retryable(&self) -> bool {
+        self.is_busy() || self.is_expired() || self.is_unavailable()
     }
 }
 
@@ -145,6 +194,7 @@ mod tests {
             levels: None,
             coarsen_limit: None,
             threads: None,
+            deadline_ms: None,
         }
     }
 

@@ -25,6 +25,10 @@ pub struct Metrics {
     jobs_completed: AtomicU64,
     jobs_failed: AtomicU64,
     jobs_busy_rejected: AtomicU64,
+    jobs_expired: AtomicU64,
+    jobs_timed_out: AtomicU64,
+    jobs_cancelled: AtomicU64,
+    idle_disconnects: AtomicU64,
     worker_panics: AtomicU64,
     verifications: AtomicU64,
     verification_mismatches: AtomicU64,
@@ -53,6 +57,29 @@ impl Metrics {
     /// A `MAP` request answered `BUSY` because the job queue was full.
     pub fn on_busy_rejection(&self) {
         self.jobs_busy_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A job refused with `EXPIRED`: its deadline had already lapsed at
+    /// admission, or lapsed while it waited in the queue — it never ran.
+    pub fn on_expired_rejection(&self) {
+        self.jobs_expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A job whose anytime search stopped at its deadline and answered
+    /// with the best-so-far mapping (counted as completed, not failed).
+    pub fn on_job_timed_out(&self) {
+        self.jobs_timed_out.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A job cancelled mid-run (connection drop or shutdown).
+    pub fn on_job_cancelled(&self) {
+        self.jobs_cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A persistent connection closed by the server's idle timeout (a
+    /// half-open or stalled client was pinning a connection slot).
+    pub fn on_idle_disconnect(&self) {
+        self.idle_disconnects.fetch_add(1, Ordering::Relaxed);
     }
 
     /// A job panicked inside a worker. The worker caught it, answered the
@@ -140,6 +167,10 @@ impl Metrics {
             jobs_completed: completed,
             jobs_failed: failed,
             jobs_busy_rejected: self.jobs_busy_rejected.load(Ordering::Relaxed),
+            jobs_expired: self.jobs_expired.load(Ordering::Relaxed),
+            jobs_timed_out: self.jobs_timed_out.load(Ordering::Relaxed),
+            jobs_cancelled: self.jobs_cancelled.load(Ordering::Relaxed),
+            idle_disconnects: self.idle_disconnects.load(Ordering::Relaxed),
             worker_panics: self.worker_panics.load(Ordering::Relaxed),
             verifications: self.verifications.load(Ordering::Relaxed),
             verification_mismatches: self.verification_mismatches.load(Ordering::Relaxed),
@@ -188,6 +219,14 @@ pub struct MetricsSnapshot {
     pub jobs_failed: u64,
     /// `MAP` requests answered `BUSY` (job queue full at admission).
     pub jobs_busy_rejected: u64,
+    /// Jobs refused `EXPIRED` (deadline lapsed at admission or in queue).
+    pub jobs_expired: u64,
+    /// Jobs that stopped at their deadline and answered best-so-far.
+    pub jobs_timed_out: u64,
+    /// Jobs cancelled mid-run (connection drop / shutdown).
+    pub jobs_cancelled: u64,
+    /// Connections closed by the server's idle timeout.
+    pub idle_disconnects: u64,
     /// Jobs that panicked inside a worker (caught; the worker survived and
     /// the client got an `ERR` response).
     pub worker_panics: u64,
@@ -232,14 +271,18 @@ impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "jobs: {} submitted, {} ok, {} failed, {} busy, {} panics | verify: {}/{} ok | \
+            "jobs: {} submitted, {} ok, {} failed, {} busy, {} expired, {} timed-out, \
+             {} cancelled, {} panics | verify: {}/{} ok | \
              cache: {} hit / {} miss ({} warm, {} evicted) | queue: {}/{} | \
-             conns: {} active ({} accepted, {} refused) | \
+             conns: {} active ({} accepted, {} refused, {} idle-closed) | \
              latency mean {:.1} ms p50 {:.1} ms p99 {:.1} ms",
             self.jobs_submitted,
             self.jobs_completed,
             self.jobs_failed,
             self.jobs_busy_rejected,
+            self.jobs_expired,
+            self.jobs_timed_out,
+            self.jobs_cancelled,
             self.worker_panics,
             self.verifications - self.verification_mismatches,
             self.verifications,
@@ -252,6 +295,7 @@ impl std::fmt::Display for MetricsSnapshot {
             self.active_connections,
             self.connections_accepted,
             self.connections_refused,
+            self.idle_disconnects,
             self.mean_latency_secs * 1e3,
             self.p50_latency_secs * 1e3,
             self.p99_latency_secs * 1e3,
@@ -342,5 +386,23 @@ mod tests {
         assert_eq!(s.connections_accepted, 2);
         assert_eq!(s.connections_refused, 1);
         assert_eq!(s.active_connections, 1);
+    }
+
+    #[test]
+    fn failure_model_counters() {
+        let m = Metrics::new();
+        m.on_expired_rejection();
+        m.on_expired_rejection();
+        m.on_job_timed_out();
+        m.on_job_cancelled();
+        m.on_idle_disconnect();
+        let s = m.snapshot();
+        assert_eq!(s.jobs_expired, 2);
+        assert_eq!(s.jobs_timed_out, 1);
+        assert_eq!(s.jobs_cancelled, 1);
+        assert_eq!(s.idle_disconnects, 1);
+        let line = s.to_string();
+        assert!(line.contains("2 expired"), "{line}");
+        assert!(line.contains("1 idle-closed"), "{line}");
     }
 }

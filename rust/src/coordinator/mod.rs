@@ -14,6 +14,14 @@
 //! repeat jobs skip oracle/pair-set/hierarchy construction, and admission
 //! control answers `BUSY` instead of stalling when the job queue is full.
 //!
+//! The failure model (PR 8) makes the service *anytime and drainable*:
+//! jobs carry optional wall-clock budgets (`deadline_ms=`) that stop the
+//! search at a move boundary with the best-so-far valid mapping flagged
+//! `timed_out`, dropped connections cancel their in-flight work, expired
+//! and shutdown refusals are retryable like `BUSY`
+//! ([`MapResponse::is_retryable`], [`RetryPolicy`]), and `SHUTDOWN` drains
+//! the server gracefully under a grace period.
+//!
 //! * [`job`] — request/response types.
 //! * [`service`] — worker pool, queue, session-cache checkout, batched
 //!   verification.
@@ -33,4 +41,4 @@ pub use job::{MapRequest, MapResponse};
 pub use metrics::MetricsSnapshot;
 pub use service::Coordinator;
 pub use session_cache::{SessionCache, SessionKey};
-pub use wire::{Client, ServeConfig};
+pub use wire::{Client, RetryPolicy, ServeConfig};

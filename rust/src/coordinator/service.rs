@@ -31,12 +31,14 @@ use super::metrics::{Metrics, MetricsSnapshot};
 use super::session_cache::{Inserted, SessionCache, SessionKey};
 use crate::api::{MapJob, MapSession};
 use crate::runtime::RuntimeHandle;
-use crate::util::{Timer, MAX_THREADS};
+use crate::util::{faults, RunControl, Timer, MAX_THREADS};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// Relative tolerance for the f32 XLA cross-check (canonical definition in
 /// [`crate::api`]; re-exported here for backwards compatibility).
@@ -55,12 +57,23 @@ fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
+/// One queued job: the request, the response channel, the service timer
+/// (started at admission, so `total_secs` includes queue wait) and the run
+/// control token (deadline + cancellation, also counted from admission).
+type QueueEntry = (MapRequest, Sender<MapResponse>, Timer, RunControl);
+
 struct Queue {
-    jobs: Mutex<VecDeque<(MapRequest, Sender<MapResponse>, Timer)>>,
+    jobs: Mutex<VecDeque<QueueEntry>>,
     not_empty: Condvar,
     not_full: Condvar,
     capacity: usize,
     shutdown: Mutex<bool>,
+    /// Set by [`Coordinator::begin_shutdown`]: new submissions are refused
+    /// with a retryable `unavailable` while in-flight jobs finish.
+    draining: AtomicBool,
+    /// Jobs currently executing in a worker (not counting queued ones);
+    /// [`Coordinator::drain`] polls this down to zero.
+    active: AtomicUsize,
 }
 
 /// The mapping service. Dropping it drains the queue and joins the workers.
@@ -106,6 +119,8 @@ impl Coordinator {
             not_full: Condvar::new(),
             capacity: capacity.max(1),
             shutdown: Mutex::new(false),
+            draining: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
         });
         let metrics = Arc::new(Metrics::new());
         metrics.set_queue_capacity(queue.capacity);
@@ -124,15 +139,32 @@ impl Coordinator {
     }
 
     /// Submit a job; blocks while the queue is full (backpressure).
-    /// The response arrives on the returned channel.
+    /// The response arrives on the returned channel. The job's deadline (if
+    /// any) is armed here — queue wait counts against the budget.
     pub fn submit(&self, req: MapRequest) -> std::sync::mpsc::Receiver<MapResponse> {
+        let ctrl = RunControl::from_deadline(req.deadline_ms);
+        self.submit_with_control(req, ctrl)
+    }
+
+    /// Like [`Self::submit`] with an externally built [`RunControl`] — the
+    /// wire layer passes one wearing the connection's cancellation token so
+    /// a dropped client aborts the search mid-run.
+    pub fn submit_with_control(
+        &self,
+        req: MapRequest,
+        ctrl: RunControl,
+    ) -> std::sync::mpsc::Receiver<MapResponse> {
         let (tx, rx) = std::sync::mpsc::channel();
+        if let Some(resp) = self.refuse(&req, &ctrl) {
+            let _ = tx.send(resp);
+            return rx;
+        }
         self.metrics.on_submit();
         let mut jobs = relock(&self.queue.jobs);
         while jobs.len() >= self.queue.capacity {
             jobs = self.queue.not_full.wait(jobs).unwrap_or_else(|e| e.into_inner());
         }
-        jobs.push_back((req, tx, Timer::start()));
+        jobs.push_back((req, tx, Timer::start(), ctrl));
         self.metrics.set_queue_depth(jobs.len());
         drop(jobs);
         self.queue.not_empty.notify_one();
@@ -145,22 +177,98 @@ impl Coordinator {
         &self,
         req: MapRequest,
     ) -> Result<std::sync::mpsc::Receiver<MapResponse>, MapRequest> {
+        let ctrl = RunControl::from_deadline(req.deadline_ms);
+        self.try_submit_with_control(req, ctrl)
+    }
+
+    /// Like [`Self::try_submit`] with an externally built [`RunControl`].
+    pub fn try_submit_with_control(
+        &self,
+        req: MapRequest,
+        ctrl: RunControl,
+    ) -> Result<std::sync::mpsc::Receiver<MapResponse>, MapRequest> {
         let (tx, rx) = std::sync::mpsc::channel();
+        if let Some(resp) = self.refuse(&req, &ctrl) {
+            let _ = tx.send(resp);
+            return Ok(rx);
+        }
         let mut jobs = relock(&self.queue.jobs);
         if jobs.len() >= self.queue.capacity {
             return Err(req);
         }
         self.metrics.on_submit();
-        jobs.push_back((req, tx, Timer::start()));
+        jobs.push_back((req, tx, Timer::start(), ctrl));
         self.metrics.set_queue_depth(jobs.len());
         drop(jobs);
         self.queue.not_empty.notify_one();
         Ok(rx)
     }
 
-    /// Submit and wait for the answer.
+    /// Admission control that precedes the queue-capacity check: a draining
+    /// server refuses everything (`unavailable`), and a budget that lapsed
+    /// before admission is refused up front (`EXPIRED`) instead of wasting a
+    /// worker on a job whose first deadline check would stop it anyway.
+    /// Both refusals are retryable and answered through the normal response
+    /// channel so every submit path reports them uniformly.
+    fn refuse(&self, req: &MapRequest, ctrl: &RunControl) -> Option<MapResponse> {
+        if self.queue.draining.load(Ordering::Acquire) {
+            return Some(MapResponse::unavailable(req.id));
+        }
+        if ctrl.expired() {
+            self.metrics.on_expired_rejection();
+            return Some(MapResponse::expired(req.id));
+        }
+        None
+    }
+
+    /// Submit and wait for the answer. A worker that dies without answering
+    /// (response channel dropped) yields an error response, not a panic.
     pub fn submit_blocking(&self, req: MapRequest) -> MapResponse {
-        self.submit(req).recv().expect("worker dropped response channel")
+        let id = req.id;
+        self.submit(req).recv().unwrap_or_else(|_| {
+            MapResponse::failure(id, "worker dropped response channel".into())
+        })
+    }
+
+    /// Stop accepting new jobs; queued and in-flight jobs keep running.
+    /// Follow with [`Self::drain`] to wait for them. Idempotent.
+    pub fn begin_shutdown(&self) {
+        self.queue.draining.store(true, Ordering::Release);
+    }
+
+    /// True once [`Self::begin_shutdown`] has been called.
+    pub fn is_draining(&self) -> bool {
+        self.queue.draining.load(Ordering::Acquire)
+    }
+
+    /// Wait (up to `grace`) for the queue to empty and every in-flight job
+    /// to finish. Returns `true` if the service went quiescent within the
+    /// grace period; on timeout the still-queued jobs are aborted with a
+    /// retryable `unavailable` answer and `false` is returned (jobs already
+    /// inside a worker run to completion either way — workers are only
+    /// joined by `Drop`).
+    pub fn drain(&self, grace: Duration) -> bool {
+        self.begin_shutdown();
+        let deadline = Instant::now() + grace;
+        loop {
+            let queued = relock(&self.queue.jobs).len();
+            let active = self.queue.active.load(Ordering::Acquire);
+            if queued == 0 && active == 0 {
+                return true;
+            }
+            if Instant::now() >= deadline {
+                // abort what never started; answer each client cleanly
+                let mut jobs = relock(&self.queue.jobs);
+                for (req, tx, _, _) in jobs.drain(..) {
+                    let _ = tx.send(MapResponse::unavailable(req.id));
+                }
+                self.metrics.set_queue_depth(0);
+                drop(jobs);
+                self.queue.not_full.notify_all();
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
     }
 
     /// Current metrics.
@@ -203,10 +311,13 @@ fn worker_loop(
     default_threads: usize,
 ) {
     loop {
-        let (req, tx, timer) = {
+        let (req, tx, timer, ctrl) = {
             let mut jobs = relock(&queue.jobs);
             loop {
                 if let Some(job) = jobs.pop_front() {
+                    // claimed under the queue lock so drain() never observes
+                    // "queue empty, nothing active" while a job is in hand
+                    queue.active.fetch_add(1, Ordering::AcqRel);
                     metrics.set_queue_depth(jobs.len());
                     queue.not_full.notify_one();
                     break job;
@@ -217,11 +328,21 @@ fn worker_loop(
                 jobs = queue.not_empty.wait(jobs).unwrap_or_else(|e| e.into_inner());
             }
         };
+        // the budget may have lapsed while the job sat in the queue: refuse
+        // with the retryable EXPIRED rather than running a doomed search
+        // (the anytime path would only hand back the construction mapping)
+        if ctrl.expired() {
+            metrics.on_expired_rejection();
+            let _ = tx.send(MapResponse::expired(req.id));
+            queue.active.fetch_sub(1, Ordering::AcqRel);
+            continue;
+        }
         // one hostile or buggy job must not take the worker (and with it a
         // slice of service capacity) down: catch the panic, count it, and
         // answer the client with a plain error response
         let resp = catch_unwind(AssertUnwindSafe(|| {
-            process_job(&req, runtime.as_ref(), &metrics, &cache, &timer, default_threads)
+            faults::hit("worker/start");
+            process_job(&req, runtime.as_ref(), &metrics, &cache, &timer, default_threads, &ctrl)
         }))
         .unwrap_or_else(|panic| {
             metrics.on_worker_panic();
@@ -232,7 +353,14 @@ fn worker_loop(
                 .unwrap_or_else(|| "unknown panic".into());
             MapResponse::failure(req.id, format!("worker panicked: {msg}"))
         });
+        queue.active.fetch_sub(1, Ordering::AcqRel);
         let failed = resp.error.is_some();
+        if resp.timed_out {
+            metrics.on_job_timed_out();
+        }
+        if resp.cancelled {
+            metrics.on_job_cancelled();
+        }
         metrics.on_complete(resp.total_secs, failed);
         let _ = tx.send(resp); // client may have gone away; fine
     }
@@ -250,6 +378,7 @@ fn process_job(
     cache: &Mutex<SessionCache>,
     timer: &Timer,
     default_threads: usize,
+    ctrl: &RunControl,
 ) -> MapResponse {
     let mut job = match MapJob::from_request(req) {
         Ok(job) => job,
@@ -266,11 +395,14 @@ fn process_job(
         Err(job) => MapSession::new(job),
     };
     session.set_runtime(runtime.cloned());
+    // the admission-time token (queue wait already charged) governs the run
+    session.set_control(ctrl.clone());
     let report = session.run();
     if let Some(ok) = report.verified {
         metrics.on_verification(ok);
     }
     if let Some(key) = key {
+        faults::hit("cache/checkin");
         let mut cache = relock(cache);
         if cache.insert(key, session) == Inserted::Evicted {
             metrics.on_cache_eviction();
@@ -332,6 +464,7 @@ mod tests {
             levels: None,
             coarsen_limit: None,
             threads: None,
+            deadline_ms: None,
         }
     }
 
@@ -488,5 +621,77 @@ mod tests {
         let coord = Coordinator::start(4, 8, None);
         let _ = coord.submit_blocking(request(1, "identity", 1));
         drop(coord); // must not hang
+    }
+
+    #[test]
+    fn born_expired_job_is_refused_retryably() {
+        let coord = Coordinator::start(1, 4, None);
+        let mut req = request(1, "mm", 1);
+        req.deadline_ms = Some(0);
+        let resp = coord.submit_blocking(req);
+        assert!(resp.is_expired(), "{:?}", resp.error);
+        assert!(resp.is_retryable());
+        assert_eq!(coord.metrics().jobs_expired, 1);
+        // the service stays healthy for well-budgeted work
+        let ok = coord.submit_blocking(request(2, "mm", 1));
+        assert!(ok.error.is_none(), "{:?}", ok.error);
+    }
+
+    #[test]
+    fn generous_deadline_changes_nothing() {
+        // a deadline the job cannot plausibly hit must not perturb the
+        // result relative to the no-deadline run (checks are move-boundary
+        // reads only; an unfired token never alters the trajectory)
+        let coord = Coordinator::start(1, 4, None);
+        let base = coord.submit_blocking(request(1, "mm+gc:nccyc2", 1));
+        let mut req = request(1, "mm+gc:nccyc2", 1);
+        req.id = 2;
+        req.deadline_ms = Some(600_000);
+        let timed = coord.submit_blocking(req);
+        assert!(base.error.is_none() && timed.error.is_none());
+        assert_eq!(base.sigma, timed.sigma);
+        assert_eq!(base.objective, timed.objective);
+        assert!(!timed.timed_out && !timed.cancelled);
+        assert_eq!(coord.metrics().jobs_timed_out, 0);
+    }
+
+    #[test]
+    fn cancelled_token_flags_response_with_valid_mapping() {
+        use crate::util::CancelToken;
+        let coord = Coordinator::start(1, 4, None);
+        let token = CancelToken::new();
+        token.cancel(); // cancelled before the run even starts
+        let req = request(1, "mm+N2", 1);
+        let ctrl = RunControl::with_parts(None, token);
+        let resp = coord.submit_with_control(req, ctrl).recv().unwrap();
+        // anytime guarantee: repetition 0 still produces a valid mapping
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert!(resp.cancelled);
+        Mapping { sigma: resp.sigma.clone() }.validate().unwrap();
+        assert_eq!(coord.metrics().jobs_cancelled, 1);
+    }
+
+    #[test]
+    fn draining_coordinator_refuses_new_jobs() {
+        let coord = Coordinator::start(2, 8, None);
+        let ok = coord.submit_blocking(request(1, "identity", 1));
+        assert!(ok.error.is_none());
+        coord.begin_shutdown();
+        assert!(coord.is_draining());
+        let refused = coord.submit_blocking(request(2, "identity", 1));
+        assert!(refused.is_unavailable(), "{:?}", refused.error);
+        assert!(refused.is_retryable());
+        assert!(coord.drain(Duration::from_secs(5)), "nothing in flight");
+        drop(coord);
+    }
+
+    #[test]
+    fn drain_waits_for_in_flight_jobs() {
+        let coord = Coordinator::start(1, 8, None);
+        let rx = coord.submit(request(1, "mm+N2", 1));
+        // begin_shutdown must not abort the already-admitted job
+        assert!(coord.drain(Duration::from_secs(60)));
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
     }
 }

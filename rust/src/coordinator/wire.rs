@@ -11,21 +11,45 @@
 //! ```text
 //! C->S:  MAP v1 <id> <algo> <S> <D> <reps> <seed> <verify:0|1> <n> <m>
 //!            [machine=<spec>] [levels=<l>] [coarsen_limit=<c>] [threads=<t>]
+//!            [deadline_ms=<ms>]
 //!        <u> <v> <w>          (≤ m edge lines)
 //!        END
 //! S->C:  OK <id> <objective> <j_initial> <construct_secs> <ls_secs>
 //!           <xla_obj|-> <verified:0|1|-> <best_rep> <nreps>
+//!           [timed_out=1] [cancelled=1]
 //!        REP <seed> <j_initial> <j> <construct_secs> <ls_secs>
 //!            <evaluated> <improved> <rounds>
 //!            [<nlevels> (<n>:<j_init>:<j>:<evaluated>:<improved>:<rounds>)*]
+//!            [stop=t|c]
 //!        SIGMA <n space-separated PE ids>
 //!   or:  ERR <id> <message...>
 //!   or:  BUSY <id> <queue_depth> <queue_capacity>
+//!   or:  EXPIRED <id>
 //!
 //! C->S:  PING [token]         S->C:  PONG [token]
 //! C->S:  STATS                S->C:  STATS key=value ...
 //! C->S:  QUIT                 S->C:  BYE            (then close)
+//! C->S:  SHUTDOWN             S->C:  BYE            (server drains + stops)
 //! ```
+//!
+//! **Failure model (PR 8).** `deadline_ms=` carries the job's wall-clock
+//! budget; it is armed at admission, so queue wait counts. A budget that
+//! lapses mid-run does *not* produce an error: the anytime search stops at
+//! a move boundary and the normal `OK` frame carries the best-so-far valid
+//! mapping plus a trailing `timed_out=1` token (`cancelled=1` when a
+//! dropped connection or server shutdown stopped it; per-repetition
+//! `stop=t`/`stop=c` tokens pinpoint which seeds were cut short). A budget
+//! already lapsed before a worker picked the job up answers the dedicated
+//! retryable `EXPIRED` frame — like `BUSY`, the job was never run, so
+//! resubmission is sound ([`MapResponse::is_retryable`]). The trailing
+//! tokens are emitted only when set, so deadline-free traffic stays
+//! byte-identical to older peers; readers ignore unknown trailing
+//! `key=value` tokens on `OK`/`REP` lines. `SHUTDOWN` asks the server to
+//! stop accepting, drain in-flight jobs for [`ServeConfig::shutdown_grace_ms`],
+//! and answer stragglers with the retryable `unavailable` refusal.
+//! Connections idle longer than [`ServeConfig::idle_timeout_ms`] are closed
+//! and counted (`idle_disconnects`). A connection that dies mid-job cancels
+//! its in-flight work via a per-connection cancellation token.
 //!
 //! The request header ends with optional `key=value` tokens — the same
 //! backward-compatible extension style as the `REP` lines below. A
@@ -74,12 +98,14 @@ use crate::api::{LevelStat, RepStat};
 use crate::graph::{Builder, NodeId};
 use crate::mapping::algorithms::AlgorithmSpec;
 use crate::model::topology::Machine;
+use crate::util::{CancelToken, Rng, RunControl};
 use anyhow::{anyhow, bail, Context, Result};
-use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Hard cap on any single wire line (header, edge, verb, response frame).
 pub const MAX_LINE_BYTES: u64 = 1 << 16;
@@ -97,11 +123,23 @@ pub struct ServeConfig {
     /// Per-connection pipelining window: how many responses may be pending
     /// before the reader stops admitting that connection's next request.
     pub inflight_per_connection: usize,
+    /// Close a persistent connection after this long without a complete
+    /// frame (counted in `idle_disconnects`); `0` disables the idle check.
+    pub idle_timeout_ms: u64,
+    /// How long a `SHUTDOWN` (or external stop) waits for queued and
+    /// in-flight jobs before aborting the queued remainder with the
+    /// retryable `unavailable` answer.
+    pub shutdown_grace_ms: u64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_connections: 64, inflight_per_connection: 8 }
+        ServeConfig {
+            max_connections: 64,
+            inflight_per_connection: 8,
+            idle_timeout_ms: 60_000,
+            shutdown_grace_ms: 3_000,
+        }
     }
 }
 
@@ -155,6 +193,9 @@ pub fn write_request<W: Write>(w: &mut W, req: &MapRequest) -> Result<()> {
     if let Some(threads) = req.threads {
         write!(w, " threads={threads}")?;
     }
+    if let Some(ms) = req.deadline_ms {
+        write!(w, " deadline_ms={ms}")?;
+    }
     writeln!(w)?;
     for u in 0..req.comm.n() as NodeId {
         for (v, wt) in req.comm.edges(u) {
@@ -201,12 +242,14 @@ fn parse_map_body<R: BufRead>(id: u64, toks: &[&str], r: &mut R) -> Result<MapRe
     let mut levels: Option<usize> = None;
     let mut coarsen_limit: Option<usize> = None;
     let mut threads: Option<usize> = None;
+    let mut deadline_ms: Option<u64> = None;
     for tok in &toks[11..] {
         let (key, value) = tok.split_once('=').ok_or_else(|| anyhow!("bad job option {tok:?}"))?;
         match key {
             "machine" => machine = Some(Machine::parse(value).map_err(|e| anyhow!(e))?),
             "levels" => levels = Some(value.parse()?),
             "coarsen_limit" => coarsen_limit = Some(value.parse()?),
+            "deadline_ms" => deadline_ms = Some(value.parse()?),
             "threads" => {
                 let t: usize = value.parse()?;
                 if t > crate::util::MAX_THREADS {
@@ -273,6 +316,7 @@ fn parse_map_body<R: BufRead>(id: u64, toks: &[&str], r: &mut R) -> Result<MapRe
         levels,
         coarsen_limit,
         threads,
+        deadline_ms,
     })
 }
 
@@ -316,11 +360,18 @@ fn unescape_msg(s: &str) -> String {
 
 /// Serialize a response.
 pub fn write_response<W: Write>(w: &mut W, resp: &MapResponse) -> Result<()> {
+    crate::util::faults::hit_io("wire/write")?;
+    if resp.is_expired() {
+        // dedicated frame, like BUSY: the client-side predicate must work
+        // without string-matching a localized error message
+        writeln!(w, "EXPIRED {}", resp.id)?;
+        return Ok(());
+    }
     if let Some(e) = &resp.error {
         writeln!(w, "ERR {} {}", resp.id, escape_msg(e))?;
         return Ok(());
     }
-    writeln!(
+    write!(
         w,
         "OK {} {} {} {:.6} {:.6} {} {} {} {}",
         resp.id,
@@ -333,6 +384,15 @@ pub fn write_response<W: Write>(w: &mut W, resp: &MapResponse) -> Result<()> {
         resp.best_rep,
         resp.reps.len(),
     )?;
+    // trailing flags only when set: deadline-free traffic stays
+    // byte-identical to pre-deadline peers
+    if resp.timed_out {
+        write!(w, " timed_out=1")?;
+    }
+    if resp.cancelled {
+        write!(w, " cancelled=1")?;
+    }
+    writeln!(w)?;
     for rep in &resp.reps {
         write!(
             w,
@@ -358,6 +418,11 @@ pub fn write_response<W: Write>(w: &mut W, resp: &MapResponse) -> Result<()> {
                     l.n, l.objective_initial, l.objective, l.evaluated, l.improved, l.rounds
                 )?;
             }
+        }
+        if rep.timed_out {
+            write!(w, " stop=t")?;
+        } else if rep.cancelled {
+            write!(w, " stop=c")?;
         }
         writeln!(w)?;
     }
@@ -388,9 +453,29 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<MapResponse> {
             }
             Ok(MapResponse::busy(toks[1].parse()?, toks[2].parse()?, toks[3].parse()?))
         }
+        Some(&"EXPIRED") => {
+            // the deadline refusal: never run, retryable like BUSY
+            if toks.len() != 2 {
+                bail!("bad EXPIRED line: {line:?}");
+            }
+            Ok(MapResponse::expired(toks[1].parse()?))
+        }
         Some(&"OK") => {
-            if toks.len() != 10 {
+            if toks.len() < 10 {
                 bail!("bad OK line: {line:?}");
+            }
+            // positions 10.. are trailing key=value extensions (unknown
+            // keys from a newer server are skipped, not fatal)
+            let mut timed_out = false;
+            let mut cancelled = false;
+            for tok in &toks[10..] {
+                let (key, value) =
+                    tok.split_once('=').ok_or_else(|| anyhow!("bad OK option {tok:?}"))?;
+                match key {
+                    "timed_out" => timed_out = value == "1",
+                    "cancelled" => cancelled = value == "1",
+                    _ => {}
+                }
             }
             let best_rep: usize = toks[8].parse()?;
             let nreps: usize = toks[9].parse()?;
@@ -404,7 +489,19 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<MapResponse> {
                 if r.read_line(&mut rep_line)? == 0 {
                     bail!("connection closed inside REP block ({i}/{nreps})");
                 }
-                let rt: Vec<&str> = rep_line.split_whitespace().collect();
+                let mut rt: Vec<&str> = rep_line.split_whitespace().collect();
+                // trailing key=value tokens (stop=t|c) come off first —
+                // level groups use ':' separators, so '=' is unambiguous
+                let mut rep_timed_out = false;
+                let mut rep_cancelled = false;
+                while rt.last().is_some_and(|t| t.contains('=')) {
+                    let tok = rt.pop().unwrap();
+                    match tok.split_once('=') {
+                        Some(("stop", "t")) => rep_timed_out = true,
+                        Some(("stop", "c")) => rep_cancelled = true,
+                        _ => {} // forward compatibility
+                    }
+                }
                 if rt.len() < 9 || rt[0] != "REP" {
                     bail!("bad REP line: {rep_line:?}");
                 }
@@ -443,6 +540,8 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<MapResponse> {
                     improved: rt[7].parse()?,
                     rounds: rt[8].parse()?,
                     levels,
+                    timed_out: rep_timed_out,
+                    cancelled: rep_cancelled,
                 });
             }
             let mut sig_line = String::new();
@@ -470,6 +569,8 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<MapResponse> {
                 total_secs: 0.0,
                 stats,
                 best_rep,
+                timed_out,
+                cancelled,
                 reps,
                 sigma,
                 error: None,
@@ -485,15 +586,20 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<MapResponse> {
 pub fn stats_line(s: &MetricsSnapshot) -> String {
     format!(
         "STATS jobs_submitted={} jobs_completed={} jobs_failed={} jobs_busy_rejected={} \
+         jobs_expired={} jobs_timed_out={} jobs_cancelled={} \
          worker_panics={} \
          verifications={} verification_mismatches={} cache_hits={} cache_misses={} \
          cache_evictions={} cache_entries={} queue_depth={} queue_capacity={} \
          connections_accepted={} connections_refused={} active_connections={} \
+         idle_disconnects={} \
          mean_latency_secs={} p50_latency_secs={} p99_latency_secs={}\n",
         s.jobs_submitted,
         s.jobs_completed,
         s.jobs_failed,
         s.jobs_busy_rejected,
+        s.jobs_expired,
+        s.jobs_timed_out,
+        s.jobs_cancelled,
         s.worker_panics,
         s.verifications,
         s.verification_mismatches,
@@ -506,6 +612,7 @@ pub fn stats_line(s: &MetricsSnapshot) -> String {
         s.connections_accepted,
         s.connections_refused,
         s.active_connections,
+        s.idle_disconnects,
         s.mean_latency_secs,
         s.p50_latency_secs,
         s.p99_latency_secs,
@@ -527,6 +634,9 @@ pub fn parse_stats_line(line: &str) -> Result<MetricsSnapshot> {
             "jobs_completed" => s.jobs_completed = value.parse()?,
             "jobs_failed" => s.jobs_failed = value.parse()?,
             "jobs_busy_rejected" => s.jobs_busy_rejected = value.parse()?,
+            "jobs_expired" => s.jobs_expired = value.parse()?,
+            "jobs_timed_out" => s.jobs_timed_out = value.parse()?,
+            "jobs_cancelled" => s.jobs_cancelled = value.parse()?,
             "worker_panics" => s.worker_panics = value.parse()?,
             "verifications" => s.verifications = value.parse()?,
             "verification_mismatches" => s.verification_mismatches = value.parse()?,
@@ -539,6 +649,7 @@ pub fn parse_stats_line(line: &str) -> Result<MetricsSnapshot> {
             "connections_accepted" => s.connections_accepted = value.parse()?,
             "connections_refused" => s.connections_refused = value.parse()?,
             "active_connections" => s.active_connections = value.parse()?,
+            "idle_disconnects" => s.idle_disconnects = value.parse()?,
             "mean_latency_secs" => s.mean_latency_secs = value.parse()?,
             "p50_latency_secs" => s.p50_latency_secs = value.parse()?,
             "p99_latency_secs" => s.p99_latency_secs = value.parse()?,
@@ -590,18 +701,24 @@ pub fn serve_with(
                 }
                 metrics.on_connection_open();
                 let coord = Arc::clone(&coordinator);
-                let inflight = cfg.inflight_per_connection;
+                let conn_stop = Arc::clone(&stop);
                 handles.push(std::thread::spawn(move || {
                     let _open = ConnGuard(metrics);
-                    let _ = handle_connection(stream, &coord, inflight);
+                    let _ = handle_connection(stream, &coord, cfg, &conn_stop);
                 }));
             }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(std::time::Duration::from_millis(5));
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
             }
             Err(e) => return Err(e.into()),
         }
     }
+    // graceful stop: refuse new jobs, give queued + in-flight work the
+    // grace period, abort the still-queued remainder with the retryable
+    // `unavailable` answer; connection threads observe `stop` on their
+    // next read tick and wind down
+    coordinator.begin_shutdown();
+    coordinator.drain(Duration::from_millis(cfg.shutdown_grace_ms));
     for h in handles {
         let _ = h.join();
     }
@@ -633,46 +750,123 @@ enum Reply {
     Job(Receiver<MapResponse>),
 }
 
+/// Read-timeout tick for the verb-line wait: short enough that the idle
+/// clock and the server stop flag are observed promptly, long enough to
+/// stay off the scheduler's back.
+const READ_TICK_MS: u64 = 200;
+
+/// Timeout-tolerant line read for the verb-line wait. A `WouldBlock` /
+/// `TimedOut` tick returns `Ok(None)` with any partial bytes kept in `buf`
+/// (the caller retries after checking its clocks); a complete line — or
+/// EOF, with whatever arrived before it — returns `Ok(Some(total bytes))`.
+fn read_line_tick<R: BufRead>(r: &mut R, buf: &mut Vec<u8>) -> std::io::Result<Option<usize>> {
+    let mut limited = r.take(MAX_LINE_BYTES.saturating_sub(buf.len() as u64));
+    match limited.read_until(b'\n', buf) {
+        Ok(_) => {
+            if buf.len() as u64 >= MAX_LINE_BYTES && buf.last() != Some(&b'\n') {
+                return Err(std::io::Error::new(
+                    ErrorKind::InvalidData,
+                    format!("line exceeds {MAX_LINE_BYTES} bytes"),
+                ));
+            }
+            Ok(Some(buf.len()))
+        }
+        Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => Ok(None),
+        Err(e) => Err(e),
+    }
+}
+
 /// The v2 serving loop for one connection: a reader half parses pipelined
 /// requests and enqueues [`Reply`]s; a writer thread drains them in FIFO
 /// order, blocking on each job's channel as needed. The `sync_channel`
 /// capacity *is* the per-connection in-flight cap — once it fills, the
 /// reader stops admitting requests and TCP backpressure throttles the
 /// client.
-fn handle_connection(stream: TcpStream, coord: &Coordinator, inflight: usize) -> Result<()> {
+///
+/// Failure model: the connection owns a [`CancelToken`] that every
+/// submitted job's [`RunControl`] wears. A read *error* (not EOF — a
+/// half-closed pipelining client is still owed its responses) or a write
+/// error fires it, so work for a dead client stops at the next move
+/// boundary instead of burning a worker to completion.
+fn handle_connection(
+    stream: TcpStream,
+    coord: &Coordinator,
+    cfg: ServeConfig,
+    stop: &AtomicBool,
+) -> Result<()> {
     stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_millis(READ_TICK_MS)))?;
+    let cancel = CancelToken::new();
     let mut reader = BufReader::new(stream.try_clone()?);
-    let (tx, rx) = sync_channel::<Reply>(inflight.max(1));
-    let writer = std::thread::spawn(move || -> Result<()> {
-        let mut w = BufWriter::new(stream);
-        for reply in rx {
-            match reply {
-                Reply::Raw(line) => w.write_all(line.as_bytes())?,
-                Reply::Job(done) => {
-                    let resp = done
-                        .recv()
-                        .unwrap_or_else(|_| MapResponse::failure(0, "worker hung up".into()));
-                    write_response(&mut w, &resp)?;
+    let (tx, rx) = sync_channel::<Reply>(cfg.inflight_per_connection.max(1));
+    let writer = {
+        let cancel = cancel.clone();
+        std::thread::spawn(move || -> Result<()> {
+            let mut w = BufWriter::new(stream);
+            for reply in rx {
+                let wrote = (|| -> Result<()> {
+                    match reply {
+                        Reply::Raw(line) => w.write_all(line.as_bytes())?,
+                        Reply::Job(done) => {
+                            let resp = done.recv().unwrap_or_else(|_| {
+                                MapResponse::failure(0, "worker hung up".into())
+                            });
+                            write_response(&mut w, &resp)?;
+                        }
+                    }
+                    // flush per reply: a single-shot (v1) client must see
+                    // its response without waiting for the close
+                    w.flush()?;
+                    Ok(())
+                })();
+                if let Err(e) = wrote {
+                    // the client stopped reading: stop working for it, and
+                    // tear the socket down so the reader half (and a client
+                    // blocked on a response that will never come) sees the
+                    // connection die now instead of at the idle timeout
+                    cancel.cancel();
+                    let _ = w.get_ref().shutdown(std::net::Shutdown::Both);
+                    return Err(e);
                 }
             }
-            // flush per reply: a single-shot (v1) client must see its
-            // response without waiting for the connection to close
-            w.flush()?;
-        }
-        Ok(())
-    });
-    let mut line = String::new();
-    loop {
-        let n = match read_capped_line(&mut reader, &mut line) {
-            Ok(n) => n,
-            Err(e) => {
-                let _ = tx.send(err_reply(0, &format!("protocol error: {e:#}")));
-                break;
+            Ok(())
+        })
+    };
+    // generous per-frame budget once a MAP header has arrived (the body is
+    // right behind it in any sane client, but it may be large); the short
+    // tick only paces the between-frames idle wait
+    let body_timeout = Duration::from_millis(cfg.idle_timeout_ms.max(1_000));
+    let mut buf: Vec<u8> = Vec::new();
+    'conn: loop {
+        buf.clear();
+        let idle_start = Instant::now();
+        let n = loop {
+            if stop.load(Ordering::Relaxed) || coord.is_draining() {
+                break 'conn; // server stopping; pending replies still flush
+            }
+            match read_line_tick(&mut reader, &mut buf) {
+                Ok(Some(n)) => break n,
+                Ok(None) => {
+                    if cfg.idle_timeout_ms > 0
+                        && idle_start.elapsed() >= Duration::from_millis(cfg.idle_timeout_ms)
+                    {
+                        coord.metrics_sink().on_idle_disconnect();
+                        break 'conn;
+                    }
+                }
+                Err(e) => {
+                    // the byte stream died mid-session: in-flight jobs are
+                    // for a client that can no longer answer — cancel them
+                    cancel.cancel();
+                    let _ = tx.send(err_reply(0, &format!("protocol error: {e}")));
+                    break 'conn;
+                }
             }
         };
         if n == 0 {
             break; // EOF: the client is done (v1 single-shot ends here)
         }
+        let line = String::from_utf8_lossy(&buf);
         let trimmed = line.trim();
         let Some(verb) = trimmed.split_whitespace().next() else {
             continue; // blank line between frames: tolerated
@@ -695,34 +889,52 @@ fn handle_connection(stream: TcpStream, coord: &Coordinator, inflight: usize) ->
                 let _ = tx.send(Reply::Raw("BYE\n".into()));
                 break;
             }
-            "MAP" => match parse_map(trimmed, &mut reader) {
-                Ok(req) => {
-                    let id = req.id;
-                    match coord.try_submit(req) {
-                        Ok(done) => {
-                            if tx.send(Reply::Job(done)).is_err() {
-                                break;
+            "SHUTDOWN" => {
+                // ack, then take the whole server down gracefully: the
+                // accept loop sees `stop`, refuses new work via the
+                // draining coordinator, and drains under the grace period
+                coord.begin_shutdown();
+                stop.store(true, Ordering::Relaxed);
+                let _ = tx.send(Reply::Raw("BYE\n".into()));
+                break;
+            }
+            "MAP" => {
+                let _ = reader.get_ref().set_read_timeout(Some(body_timeout));
+                let parsed = parse_map(trimmed, &mut reader);
+                let _ =
+                    reader.get_ref().set_read_timeout(Some(Duration::from_millis(READ_TICK_MS)));
+                match parsed {
+                    Ok(req) => {
+                        let id = req.id;
+                        let ctrl = RunControl::with_parts(req.deadline_ms, cancel.clone());
+                        match coord.try_submit_with_control(req, ctrl) {
+                            Ok(done) => {
+                                if tx.send(Reply::Job(done)).is_err() {
+                                    break;
+                                }
                             }
-                        }
-                        Err(_refused) => {
-                            coord.metrics_sink().on_busy_rejection();
-                            let busy = format!(
-                                "BUSY {id} {} {}\n",
-                                coord.queue_depth(),
-                                coord.queue_capacity()
-                            );
-                            if tx.send(Reply::Raw(busy)).is_err() {
-                                break;
+                            Err(_refused) => {
+                                coord.metrics_sink().on_busy_rejection();
+                                let busy = format!(
+                                    "BUSY {id} {} {}\n",
+                                    coord.queue_depth(),
+                                    coord.queue_capacity()
+                                );
+                                if tx.send(Reply::Raw(busy)).is_err() {
+                                    break;
+                                }
                             }
                         }
                     }
+                    Err(e) => {
+                        // framing is lost after a bad MAP body; answer and
+                        // close — jobs already in flight still complete
+                        // (the client is alive and owed their responses)
+                        let _ = tx.send(err_reply(e.id, &format!("protocol error: {:#}", e.error)));
+                        break;
+                    }
                 }
-                Err(e) => {
-                    // framing is lost after a bad MAP body; answer and close
-                    let _ = tx.send(err_reply(e.id, &format!("protocol error: {:#}", e.error)));
-                    break;
-                }
-            },
+            }
             other => {
                 let _ = tx.send(err_reply(0, &format!("protocol error: unknown verb {other:?}")));
                 break;
@@ -820,6 +1032,102 @@ impl Client {
         }
         Ok(())
     }
+
+    /// Ask the *server* to shut down gracefully: it stops accepting,
+    /// drains queued and in-flight jobs under its grace period, answers
+    /// stragglers with the retryable `unavailable` refusal, and exits the
+    /// serve loop. Acked with `BYE` before the drain begins.
+    pub fn shutdown(mut self) -> Result<()> {
+        writeln!(self.writer, "SHUTDOWN")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        read_capped_line(&mut self.reader, &mut line)?;
+        if line.trim() != "BYE" {
+            bail!("expected BYE, got {:?}", line.trim());
+        }
+        Ok(())
+    }
+
+    /// One request, retried on this connection while the server answers
+    /// with a retryable refusal (`BUSY`/`EXPIRED`/`unavailable`), backing
+    /// off per `policy`. The final response is returned either way; a
+    /// transport error aborts immediately (use [`request_with_retry`] when
+    /// reconnecting is acceptable).
+    pub fn map_with_retry(
+        &mut self,
+        req: &MapRequest,
+        policy: &RetryPolicy,
+    ) -> Result<MapResponse> {
+        let attempts = policy.max_attempts.max(1);
+        let mut last = self.map(req)?;
+        for attempt in 1..attempts {
+            if !last.is_retryable() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(policy.backoff_ms(req.id, attempt)));
+            last = self.map(req)?;
+        }
+        Ok(last)
+    }
+}
+
+/// Client-side retry policy for retryable refusals
+/// ([`MapResponse::is_retryable`]) and connect failures: capped exponential
+/// backoff with *deterministic* jitter, seeded by `(request id, attempt)` —
+/// a fleet of clients hammering one server desynchronizes without any
+/// shared clock, and a test can predict every sleep exactly.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total attempts, first try included (`0` behaves as `1`).
+    pub max_attempts: u32,
+    /// Base backoff: retry `k` (1-based) waits `min(base_ms << (k-1),
+    /// cap_ms)` plus jitter in `[0, wait/2]`.
+    pub base_ms: u64,
+    /// Ceiling for the exponential term (jitter may add up to 50% more).
+    pub cap_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 6, base_ms: 10, cap_ms: 1_000 }
+    }
+}
+
+impl RetryPolicy {
+    /// Deterministic backoff in milliseconds before the `attempt`-th retry
+    /// (1-based) of request `id`.
+    pub fn backoff_ms(&self, id: u64, attempt: u32) -> u64 {
+        let shift = attempt.saturating_sub(1).min(20);
+        let exp = self.base_ms.saturating_mul(1u64 << shift).min(self.cap_ms);
+        let mut rng = Rng::new(id.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(attempt as u64));
+        exp + rng.next_bounded(exp / 2 + 1)
+    }
+}
+
+/// Single-shot [`request`] with reconnect-and-retry: every attempt opens a
+/// fresh connection, so connect failures (server restarting behind the
+/// same address) and retryable refusals back off the same deterministic
+/// way. Non-retryable responses and hard parse errors return immediately.
+pub fn request_with_retry<A: ToSocketAddrs>(
+    addr: A,
+    req: &MapRequest,
+    policy: &RetryPolicy,
+) -> Result<MapResponse> {
+    let attempts = policy.max_attempts.max(1);
+    let mut outcome = request(&addr, req);
+    for attempt in 1..attempts {
+        let retry = match &outcome {
+            Ok(resp) => resp.is_retryable(),
+            // connect/transport failure: the server may be coming back
+            Err(_) => true,
+        };
+        if !retry {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(policy.backoff_ms(req.id, attempt)));
+        outcome = request(&addr, req);
+    }
+    outcome
 }
 
 /// Helper for tests: consume the rest of a reader (drain).
@@ -847,6 +1155,7 @@ mod tests {
             levels: None,
             coarsen_limit: None,
             threads: None,
+            deadline_ms: None,
         }
     }
 
@@ -1004,6 +1313,8 @@ mod tests {
                 improved: 17,
                 rounds: 3,
                 levels: Vec::new(),
+                timed_out: false,
+                cancelled: false,
             },
             RepStat {
                 seed: 100,
@@ -1033,6 +1344,8 @@ mod tests {
                         rounds: 1,
                     },
                 ],
+                timed_out: false,
+                cancelled: false,
             },
         ];
         let resp = MapResponse {
@@ -1047,6 +1360,8 @@ mod tests {
             total_secs: 1.0,
             stats: reps[1].search_stats(),
             best_rep: 1,
+            timed_out: false,
+            cancelled: false,
             reps: reps.clone(),
             error: None,
         };
@@ -1081,6 +1396,8 @@ mod tests {
             total_secs: 0.0,
             stats: Default::default(),
             best_rep: 0,
+            timed_out: false,
+            cancelled: false,
             reps: Vec::new(),
             error: None,
         };
@@ -1122,6 +1439,9 @@ mod tests {
             jobs_completed: 8,
             jobs_failed: 1,
             jobs_busy_rejected: 3,
+            jobs_expired: 2,
+            jobs_timed_out: 4,
+            jobs_cancelled: 1,
             worker_panics: 1,
             verifications: 2,
             verification_mismatches: 1,
@@ -1134,6 +1454,7 @@ mod tests {
             connections_accepted: 5,
             connections_refused: 2,
             active_connections: 3,
+            idle_disconnects: 2,
             mean_latency_secs: 0.125,
             p50_latency_secs: 0.064,
             p99_latency_secs: 0.512,
@@ -1284,7 +1605,7 @@ mod tests {
         let coord = Arc::new(Coordinator::start(1, 1, None));
         let (addr, stop, server) = spawn_server(
             Arc::clone(&coord),
-            ServeConfig { max_connections: 4, inflight_per_connection: 16 },
+            ServeConfig { max_connections: 4, inflight_per_connection: 16, ..Default::default() },
         );
         let mut client = Client::connect(addr).unwrap();
         let mut slow = sample_request();
@@ -1353,7 +1674,7 @@ mod tests {
         let coord = Arc::new(Coordinator::start(1, 2, None));
         let (addr, stop, server) = spawn_server(
             Arc::clone(&coord),
-            ServeConfig { max_connections: 1, inflight_per_connection: 4 },
+            ServeConfig { max_connections: 1, inflight_per_connection: 4, ..Default::default() },
         );
         let mut first = Client::connect(addr).unwrap();
         assert_eq!(first.ping("up").unwrap(), "up"); // ensures it is accepted
@@ -1368,6 +1689,209 @@ mod tests {
         assert_eq!(stats.connections_refused, 1);
         assert_eq!(stats.active_connections, 1);
         first.quit().unwrap();
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn deadline_token_roundtrips() {
+        let mut req = sample_request();
+        req.deadline_ms = Some(750);
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req).unwrap();
+        let header = std::str::from_utf8(&buf).unwrap().lines().next().unwrap().to_string();
+        assert!(header.contains("deadline_ms=750"), "{header}");
+        let back = read_request(&mut BufReader::new(&buf[..])).unwrap();
+        assert_eq!(back.deadline_ms, Some(750));
+
+        // absent stays absent — the header is byte-identical to PR-7 form
+        req.deadline_ms = None;
+        buf.clear();
+        write_request(&mut buf, &req).unwrap();
+        let back = read_request(&mut BufReader::new(&buf[..])).unwrap();
+        assert_eq!(back.deadline_ms, None);
+
+        let bad = "MAP v1 1 mm 4 1 1 0 0 4 0 deadline_ms=soon\nEND\n";
+        assert!(read_request(&mut BufReader::new(bad.as_bytes())).is_err());
+    }
+
+    #[test]
+    fn flagged_responses_roundtrip_and_plain_ones_stay_bytecompatible() {
+        let rep = RepStat {
+            seed: 99,
+            objective_initial: 2100,
+            objective: 1500,
+            construct_secs: 0.25,
+            ls_secs: 0.125,
+            evaluated: 640,
+            improved: 17,
+            rounds: 3,
+            levels: Vec::new(),
+            timed_out: true,
+            cancelled: false,
+        };
+        let mut resp = MapResponse {
+            id: 7,
+            sigma: vec![2, 0, 1],
+            objective: 1500,
+            objective_initial: 2100,
+            xla_objective: None,
+            verified: None,
+            construct_secs: 0.25,
+            ls_secs: 0.125,
+            total_secs: 1.0,
+            stats: rep.search_stats(),
+            best_rep: 0,
+            timed_out: true,
+            cancelled: false,
+            reps: vec![rep],
+            error: None,
+        };
+        let mut buf = Vec::new();
+        write_response(&mut buf, &resp).unwrap();
+        let text = std::str::from_utf8(&buf).unwrap().to_string();
+        assert!(text.lines().next().unwrap().ends_with("timed_out=1"), "{text}");
+        assert!(text.lines().nth(1).unwrap().ends_with("stop=t"), "{text}");
+        let back = read_response(&mut BufReader::new(&buf[..])).unwrap();
+        assert!(back.timed_out && !back.cancelled);
+        assert!(back.reps[0].timed_out && !back.reps[0].cancelled);
+        assert_eq!(back.reps, resp.reps);
+        assert_eq!(back.stats.stopped, Some(crate::util::StopReason::TimedOut));
+
+        // the cancelled variant round-trips the other flag
+        resp.timed_out = false;
+        resp.cancelled = true;
+        resp.reps[0].timed_out = false;
+        resp.reps[0].cancelled = true;
+        buf.clear();
+        write_response(&mut buf, &resp).unwrap();
+        let back = read_response(&mut BufReader::new(&buf[..])).unwrap();
+        assert!(back.cancelled && !back.timed_out);
+        assert!(back.reps[0].cancelled);
+
+        // a flag-free response carries no key=value tokens at all: the
+        // frames stay byte-identical to what pre-deadline servers emit
+        resp.cancelled = false;
+        resp.reps[0].cancelled = false;
+        buf.clear();
+        write_response(&mut buf, &resp).unwrap();
+        let text = std::str::from_utf8(&buf).unwrap().to_string();
+        assert!(!text.contains('='), "{text}");
+        assert_eq!(text.lines().next().unwrap().split_whitespace().count(), 10);
+    }
+
+    #[test]
+    fn flagged_rep_line_with_level_groups_roundtrips() {
+        // stop= follows the colon-joined level groups; both must survive
+        let text = "OK 7 10 12 0.0 0.0 - - 0 1\n\
+                    REP 1 12 10 0.1 0.2 4 5 6 1 32:12:10:4:5:6 stop=c\n\
+                    SIGMA 1 0\n";
+        let back = read_response(&mut BufReader::new(text.as_bytes())).unwrap();
+        assert_eq!(back.reps[0].levels.len(), 1);
+        assert!(back.reps[0].cancelled);
+        assert!(!back.reps[0].timed_out);
+    }
+
+    #[test]
+    fn unknown_trailing_tokens_are_ignored() {
+        // a newer server's extension keys must not break this reader
+        let text = "OK 7 10 12 0.0 0.0 - - 0 1 shiny=9\n\
+                    REP 1 12 10 0.1 0.2 4 5 6 future=1\n\
+                    SIGMA 1 0\n";
+        let back = read_response(&mut BufReader::new(text.as_bytes())).unwrap();
+        assert!(!back.timed_out && !back.cancelled);
+        assert!(!back.reps[0].timed_out);
+        // a bare (non key=value) trailing token on OK is still an error
+        let bad = "OK 7 10 12 0.0 0.0 - - 0 0 shiny\nSIGMA 1 0\n";
+        assert!(read_response(&mut BufReader::new(bad.as_bytes())).is_err());
+    }
+
+    #[test]
+    fn expired_frame_roundtrip() {
+        let resp = MapResponse::expired(9);
+        let mut buf = Vec::new();
+        write_response(&mut buf, &resp).unwrap();
+        assert_eq!(std::str::from_utf8(&buf).unwrap(), "EXPIRED 9\n");
+        let back = read_response(&mut BufReader::new(&buf[..])).unwrap();
+        assert_eq!(back.id, 9);
+        assert!(back.is_expired() && back.is_retryable());
+        assert!(read_response(&mut BufReader::new(&b"EXPIRED 9 extra\n"[..])).is_err());
+    }
+
+    #[test]
+    fn retry_policy_backoff_deterministic_and_capped() {
+        let p = RetryPolicy { max_attempts: 8, base_ms: 10, cap_ms: 100 };
+        // same (id, attempt) ⇒ same backoff; different id ⇒ (almost surely)
+        // a different jitter stream
+        assert_eq!(p.backoff_ms(42, 1), p.backoff_ms(42, 1));
+        // exponential term: 10, 20, 40, 80, 100, 100... jitter ≤ 50%
+        for attempt in 1..=7u32 {
+            let exp = (10u64 << (attempt - 1)).min(100);
+            let b = p.backoff_ms(42, attempt);
+            assert!(b >= exp && b <= exp + exp / 2, "attempt {attempt}: {b} vs {exp}");
+        }
+    }
+
+    #[test]
+    fn tcp_shutdown_verb_stops_the_server() {
+        let coord = Arc::new(Coordinator::start(1, 4, None));
+        let (addr, _stop, server) = spawn_server(Arc::clone(&coord), ServeConfig::default());
+        let mut client = Client::connect(addr).unwrap();
+        let mut req = sample_request();
+        req.algorithm = AlgorithmSpec::parse("mm").unwrap();
+        let resp = client.map(&req).unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        client.shutdown().unwrap();
+        // the serve loop exits on its own — no external stop flag needed
+        server.join().unwrap().unwrap();
+        assert!(coord.is_draining());
+        // a post-shutdown submission is refused retryably
+        let late = coord.submit_blocking(req);
+        assert!(late.is_unavailable(), "{:?}", late.error);
+    }
+
+    #[test]
+    fn tcp_idle_connection_is_reaped() {
+        let coord = Arc::new(Coordinator::start(1, 4, None));
+        let cfg = ServeConfig { idle_timeout_ms: 50, ..Default::default() };
+        let (addr, stop, server) = spawn_server(Arc::clone(&coord), cfg);
+        let mut idle = Client::connect(addr).unwrap();
+        assert_eq!(idle.ping("up").unwrap(), "up");
+        // outlive the idle budget (plus a read tick); the server hangs up
+        std::thread::sleep(Duration::from_millis(600));
+        assert!(idle.ping("again").is_err(), "idle connection must be closed");
+        let mut fresh = Client::connect(addr).unwrap();
+        let stats = fresh.stats().unwrap();
+        assert_eq!(stats.idle_disconnects, 1);
+        assert_eq!(stats.active_connections, 1, "only the fresh connection remains");
+        fresh.quit().unwrap();
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn tcp_deadline_ms_end_to_end() {
+        // a generous deadline crosses the wire and changes nothing; the
+        // response carries no flags
+        let coord = Arc::new(Coordinator::start(1, 4, None));
+        let (addr, stop, server) = spawn_server(Arc::clone(&coord), ServeConfig::default());
+        let mut client = Client::connect(addr).unwrap();
+        let mut req = sample_request();
+        req.algorithm = AlgorithmSpec::parse("mm").unwrap();
+        req.deadline_ms = Some(600_000);
+        let resp = client.map(&req).unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert!(!resp.timed_out && !resp.cancelled);
+        assert_eq!(resp.sigma.len(), 128);
+
+        // a born-expired one answers the dedicated EXPIRED frame
+        req.id = 43;
+        req.deadline_ms = Some(0);
+        let resp = client.map(&req).unwrap();
+        assert!(resp.is_expired(), "{:?}", resp.error);
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.jobs_expired, 1);
+        client.quit().unwrap();
         stop.store(true, Ordering::Relaxed);
         server.join().unwrap().unwrap();
     }

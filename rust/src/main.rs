@@ -72,9 +72,12 @@ fn usage() {
                     [--algo topdown+Nc10 | topdown+gc:nc10 | topdown+gc:nccyc10 | ml:topdown+Nc5]\n  \
                     [--seed 1] [--reps 1] [--threads 1]   (0 = auto-detect)\n  \
                     [--verify] [--explicit-distances] [--levels 16] [--coarsen-limit 64]\n  \
+                    [--deadline-ms N]   (anytime: best valid mapping at the deadline)\n  \
          serve      [--addr 127.0.0.1:7447] [--workers N] [--queue 64] [--no-xla]\n  \
                     [--session-cache 16] [--max-conns 64] [--inflight 8] [--threads 1]\n  \
-         client     --addr host:port (same instance options as map)\n  \
+                    [--idle-timeout-ms 60000] [--grace-ms 3000]\n  \
+         client     --addr host:port (same instance options as map, plus\n  \
+                    [--deadline-ms N] [--retries 1] for retryable refusals)\n  \
          stats      [--addr 127.0.0.1:7447] — query a running service's metrics\n  \
          gen        --inst rgg12 --out file.metis [--seed 1]\n  \
          partition  --graph file.metis --blocks k [--out part.txt] [--epsilon 0.0]\n  \
@@ -128,7 +131,7 @@ fn cmd_map(args: &Args) -> Result<()> {
     println!("{}", describe_machine(&resolution));
     let spec = AlgorithmSpec::parse(args.get("algo", "topdown+Nc10")).map_err(|e| anyhow!(e))?;
     let verify = args.flag("verify");
-    let job = MapJobBuilder::for_machine(comm, machine)
+    let mut builder = MapJobBuilder::for_machine(comm, machine)
         .machine_resolution(resolution)
         .algorithm(spec)
         .oracle_mode(if args.flag("explicit-distances") {
@@ -142,9 +145,11 @@ fn cmd_map(args: &Args) -> Result<()> {
         .partition_config(PartitionConfig::perfectly_balanced())
         .levels(args.get_as("levels", 16))
         .coarsen_limit(args.get_as("coarsen-limit", 64))
-        .verify(if verify { VerifyPolicy::IfAvailable } else { VerifyPolicy::Skip })
-        .build()
-        .map_err(|e| anyhow!(e))?;
+        .verify(if verify { VerifyPolicy::IfAvailable } else { VerifyPolicy::Skip });
+    if let Some(ms) = args.options.get("deadline-ms") {
+        builder = builder.deadline_ms(ms.parse().context("--deadline-ms")?);
+    }
+    let job = builder.build().map_err(|e| anyhow!(e))?;
     let runtime = if verify {
         Some(RuntimeHandle::spawn_default().context("loading artifacts")?)
     } else {
@@ -166,6 +171,9 @@ fn cmd_map(args: &Args) -> Result<()> {
         report.objective_initial,
         report.improvement_pct()
     );
+    if report.timed_out {
+        println!("deadline hit: anytime stop — the mapping is the best found so far, not converged");
+    }
     println!(
         "time: construct {:.3}s + local search {:.3}s = {:.3}s (swaps: {} applied / {} evaluated)",
         report.construct_secs,
@@ -222,6 +230,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = wire::ServeConfig {
         max_connections: args.get_as("max-conns", 64),
         inflight_per_connection: args.get_as("inflight", 8),
+        idle_timeout_ms: args.get_as("idle-timeout-ms", 60_000),
+        shutdown_grace_ms: args.get_as("grace-ms", 3_000),
     };
     let runtime = if args.flag("no-xla") {
         None
@@ -267,7 +277,7 @@ fn cmd_client(args: &Args) -> Result<()> {
     let mut rng = Rng::new(seed);
     let comm = load_comm(args, &mut rng)?;
     let (machine, resolution) = machine_for(args, comm.n())?;
-    let job = MapJobBuilder::for_machine(comm, machine)
+    let mut builder = MapJobBuilder::for_machine(comm, machine)
         .machine_resolution(resolution)
         .algorithm_name(args.get("algo", "topdown+Nc10"))
         .map_err(|e| anyhow!(e))?
@@ -276,22 +286,30 @@ fn cmd_client(args: &Args) -> Result<()> {
         .threads(args.get_as("threads", 1))
         .levels(args.get_as("levels", 16))
         .coarsen_limit(args.get_as("coarsen-limit", 64))
-        .verify(if args.flag("verify") { VerifyPolicy::IfAvailable } else { VerifyPolicy::Skip })
-        .build()
-        .map_err(|e| anyhow!(e))?;
-    let resp = wire::request(addr, &job.to_request(seed))?;
+        .verify(if args.flag("verify") { VerifyPolicy::IfAvailable } else { VerifyPolicy::Skip });
+    if let Some(ms) = args.options.get("deadline-ms") {
+        builder = builder.deadline_ms(ms.parse().context("--deadline-ms")?);
+    }
+    let job = builder.build().map_err(|e| anyhow!(e))?;
+    // BUSY/EXPIRED/unavailable are retryable refusals: back off and resubmit
+    let policy = wire::RetryPolicy {
+        max_attempts: args.get_as("retries", 1u32).max(1),
+        ..Default::default()
+    };
+    let resp = wire::request_with_retry(addr, &job.to_request(seed), &policy)?;
     match &resp.error {
         Some(e) => bail!("service error: {e}"),
         None => {
             println!(
-                "id={} objective={} initial={} construct={:.3}s ls={:.3}s verified={:?} reps={}",
+                "id={} objective={} initial={} construct={:.3}s ls={:.3}s verified={:?} reps={}{}",
                 resp.id,
                 resp.objective,
                 resp.objective_initial,
                 resp.construct_secs,
                 resp.ls_secs,
                 resp.verified,
-                resp.reps.len()
+                resp.reps.len(),
+                if resp.timed_out { " (timed out: best-so-far mapping)" } else { "" }
             );
             Ok(())
         }

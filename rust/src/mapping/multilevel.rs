@@ -40,7 +40,7 @@ use crate::graph::{Graph, NodeId};
 use crate::model::topology::{Hierarchy, Machine};
 use crate::partition::coarsen::coarsen_groups;
 use crate::partition::PartitionConfig;
-use crate::util::Rng;
+use crate::util::{Rng, RunControl};
 
 /// Knobs for building the coarsening hierarchy. Session-local by default;
 /// since PR 4 the coordinator wire can carry them as optional job tokens
@@ -202,6 +202,7 @@ fn subtree_refine(
     spec: &AlgorithmSpec,
     threads: usize,
     salt: u64,
+    ctrl: &RunControl,
 ) -> SearchStats {
     let mut out = SearchStats::default();
     if matches!(spec.neighborhood, Neighborhood::None) {
@@ -278,6 +279,7 @@ fn subtree_refine(
     // so inline and worker execution produce identical mappings
     let run_block = |b: usize, blk: &Block| -> (Mapping, SearchStats) {
         let mut refiner = refiner_for(spec.neighborhood, spec.max_sweeps, &sub_machine);
+        refiner.set_control(ctrl);
         let mut rng = Rng::new(salt.wrapping_add(b as u64));
         let mut eng = SwapEngine::new(&blk.graph, &sub_machine, blk.start.clone());
         let j0 = eng.objective();
@@ -347,6 +349,14 @@ pub fn project(map: &[u32], coarse_sigma: &[u32], group: u32) -> Vec<u32> {
 /// `spec` configures the per-block refiners of the pre-pass. A level's
 /// [`LevelStat`] aggregates both phases; its `objective_initial` is still
 /// measured right after projection, before either phase.
+///
+/// `ctrl` is the anytime stop token: once a deadline or cancellation
+/// fires (inside a refiner or between levels), the remaining levels skip
+/// both refinement phases and only *project* the best-so-far mapping down
+/// to the finest graph — projection preserves validity, so a stopped
+/// V-cycle always returns a usable mapping, flagged via
+/// [`SearchStats::stopped`]. A disarmed token changes nothing: the salt
+/// draw stays unconditional and every check is one branch.
 #[allow(clippy::too_many_arguments)]
 pub fn vcycle_refine(
     comm: &Graph,
@@ -358,12 +368,14 @@ pub fn vcycle_refine(
     gamma: &mut Vec<u64>,
     spec: &AlgorithmSpec,
     threads: usize,
+    ctrl: &RunControl,
 ) -> VcycleOutcome {
     let depth = ml.levels.len();
     assert_eq!(refiners.len(), depth + 1, "one refiner per level plus the finest");
     let mut stats = SearchStats::default();
     let mut levels_out = Vec::with_capacity(depth + 1);
     let mut level_mappings = Vec::with_capacity(depth + 1);
+    let armed = ctrl.armed();
     // the construction projected down *without* refinement, for the
     // report's objective_initial baseline
     let mut raw = coarse.sigma.clone();
@@ -381,16 +393,30 @@ pub fn vcycle_refine(
         let salt = rng.next_u64();
         let mut start = Mapping { sigma: std::mem::take(&mut sigma) };
         let j0 = objective(graph, oracle, &start);
-        let mut s = subtree_refine(graph, oracle, &mut start.sigma, spec, threads, salt);
-        let buf = std::mem::take(gamma);
-        let mut eng = SwapEngine::with_gamma_buf(graph, oracle, start, buf);
-        debug_assert!(eng.objective() <= j0, "level {i}: subtree pre-pass worsened");
-        let sf = refiners[i].refine(&mut eng, graph, rng);
-        s.absorb(&sf);
-        let j1 = eng.objective();
-        debug_assert!(j1 <= j0, "level {i}: refinement worsened {j0} -> {j1}");
-        let (mapping, buf) = eng.into_parts();
-        *gamma = buf;
+        if armed && stats.stopped.is_none() {
+            if let Some(r) = ctrl.stop_reason() {
+                stats.stopped = Some(r);
+            }
+        }
+        let (s, j1, mapping) = if stats.stopped.is_some() {
+            // already stopped: this level only carries the best-so-far
+            // mapping through (projection continues below)
+            (SearchStats::default(), j0, start)
+        } else {
+            let mut s =
+                subtree_refine(graph, oracle, &mut start.sigma, spec, threads, salt, ctrl);
+            let buf = std::mem::take(gamma);
+            let mut eng = SwapEngine::with_gamma_buf(graph, oracle, start, buf);
+            debug_assert!(eng.objective() <= j0, "level {i}: subtree pre-pass worsened");
+            refiners[i].set_control(ctrl);
+            let sf = refiners[i].refine(&mut eng, graph, rng);
+            s.absorb(&sf);
+            let j1 = eng.objective();
+            debug_assert!(j1 <= j0, "level {i}: refinement worsened {j0} -> {j1}");
+            let (mapping, buf) = eng.into_parts();
+            *gamma = buf;
+            (s, j1, mapping)
+        };
         debug_assert!(mapping.validate().is_ok());
         stats.absorb(&s);
         levels_out.push(LevelStat {
@@ -446,8 +472,18 @@ pub fn vcycle(
         None => construct::initial(comm, machine, fine_oracle, spec.construction, part_cfg, rng),
     };
     let mut gamma = Vec::new();
-    let outcome =
-        vcycle_refine(comm, fine_oracle, &ml, coarse, &mut refiners, rng, &mut gamma, spec, 1);
+    let outcome = vcycle_refine(
+        comm,
+        fine_oracle,
+        &ml,
+        coarse,
+        &mut refiners,
+        rng,
+        &mut gamma,
+        spec,
+        1,
+        &RunControl::unlimited(),
+    );
     (ml, outcome)
 }
 
@@ -663,6 +699,7 @@ mod tests {
                 &mut gamma,
                 &spec,
                 t,
+                &RunControl::unlimited(),
             );
             out.mapping.validate().unwrap();
             match &base {

@@ -5,7 +5,7 @@
 use super::nc::NcNeighborhood;
 use super::{graph_key, Refiner, SearchStats, Swapper};
 use crate::graph::{Graph, NodeId};
-use crate::util::Rng;
+use crate::util::{control, Rng, RunControl};
 
 /// Enumerate the triangles `u < v < w` of `comm` (for each edge `(u,v)`,
 /// intersect the sorted adjacencies).
@@ -78,11 +78,18 @@ pub struct Cycle3 {
     pub max_rounds: usize,
     set: TriangleSet,
     work: Vec<(NodeId, NodeId, NodeId)>,
+    /// Anytime stop token ([`Refiner::set_control`]); disarmed by default.
+    ctrl: RunControl,
 }
 
 impl Cycle3 {
     pub fn new(max_rounds: usize) -> Cycle3 {
-        Cycle3 { max_rounds, set: TriangleSet::default(), work: Vec::new() }
+        Cycle3 {
+            max_rounds,
+            set: TriangleSet::default(),
+            work: Vec::new(),
+            ctrl: RunControl::unlimited(),
+        }
     }
 
     fn fill_work(&mut self, comm: &Graph) {
@@ -99,12 +106,26 @@ impl Cycle3 {
         rng: &mut Rng,
         max_rounds: usize,
     ) -> SearchStats {
+        Self::search_in_controlled(engine, triangles, rng, max_rounds, &RunControl::unlimited())
+    }
+
+    /// [`Self::search_in`] under a [`RunControl`]: checked every
+    /// [`control::CHECK_EVERY`] evaluations, stopping at a rotation
+    /// boundary. Disarmed tokens take the exact uncontrolled trajectory.
+    pub fn search_in_controlled(
+        engine: &mut dyn Swapper,
+        triangles: &mut [(NodeId, NodeId, NodeId)],
+        rng: &mut Rng,
+        max_rounds: usize,
+        ctrl: &RunControl,
+    ) -> SearchStats {
         let mut stats = SearchStats::default();
         if triangles.is_empty() {
             return stats;
         }
         rng.shuffle(triangles);
-        for _ in 0..max_rounds {
+        let armed = ctrl.armed();
+        'rounds: for _ in 0..max_rounds {
             stats.rounds += 1;
             let mut any = false;
             for &(u, v, w) in triangles.iter() {
@@ -118,6 +139,14 @@ impl Cycle3 {
                 if hit {
                     stats.improved += 1;
                     any = true;
+                }
+                if armed && stats.evaluated % control::CHECK_EVERY <= 1 {
+                    // `<= 1` because the two-direction probe can step the
+                    // counter by 2 and jump over the exact multiple
+                    if let Some(r) = ctrl.stop_reason() {
+                        stats.stopped = Some(r);
+                        break 'rounds;
+                    }
                 }
             }
             if !any {
@@ -133,12 +162,17 @@ impl Refiner for Cycle3 {
         "Cyc3".into()
     }
 
+    fn set_control(&mut self, ctrl: &RunControl) {
+        self.ctrl = ctrl.clone();
+    }
+
     fn refine(&mut self, engine: &mut dyn Swapper, comm: &Graph, rng: &mut Rng) -> SearchStats {
         if !engine.supports_rotate3() {
             return SearchStats::default();
         }
         self.fill_work(comm);
-        Self::search_in(engine, &mut self.work, rng, self.max_rounds)
+        let ctrl = self.ctrl.clone();
+        Self::search_in_controlled(engine, &mut self.work, rng, self.max_rounds, &ctrl)
     }
 }
 
@@ -161,8 +195,17 @@ impl Refiner for NcCycle {
         format!("NcCyc{}", self.nc.d)
     }
 
+    fn set_control(&mut self, ctrl: &RunControl) {
+        self.nc.set_control(ctrl);
+        self.cyc.set_control(ctrl);
+    }
+
     fn refine(&mut self, engine: &mut dyn Swapper, comm: &Graph, rng: &mut Rng) -> SearchStats {
         let mut stats = self.nc.refine(engine, comm, rng);
+        if stats.stopped.is_some() {
+            // pair phase hit the deadline/cancel — don't start rotations
+            return stats;
+        }
         stats.absorb(&self.cyc.refine(engine, comm, rng));
         stats
     }

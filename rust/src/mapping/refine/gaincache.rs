@@ -47,7 +47,7 @@ use super::cycle::TriangleSet;
 use super::nc::nc_pairs;
 use super::{graph_key, Refiner, SearchStats, Swapper};
 use crate::graph::{Graph, NodeId};
-use crate::util::Rng;
+use crate::util::{control, Rng, RunControl};
 
 /// Gains at or above this clamp share the top bucket (and everything ≤ 0
 /// lands in bucket 0). The clamp only coarsens the *search order* — the
@@ -485,6 +485,8 @@ pub struct GainCacheNc {
     spec_gain: Vec<i64>,
     spec_stamp: Vec<[u64; 3]>,
     spec_valid: Vec<bool>,
+    /// Anytime stop token ([`Refiner::set_control`]); disarmed by default.
+    ctrl: RunControl,
 }
 
 impl GainCacheNc {
@@ -552,6 +554,10 @@ impl Refiner for GainCacheNc {
         }
     }
 
+    fn set_control(&mut self, ctrl: &RunControl) {
+        self.ctrl = ctrl.clone();
+    }
+
     /// Statistics: `evaluated` counts gain computations (one seeding sweep
     /// over every move plus the lazy re-evaluations of stale pops),
     /// `improved` the applied moves (a rotation counts once), `rounds` the
@@ -587,6 +593,7 @@ impl Refiner for GainCacheNc {
         }
         let versioned = engine.supports_versions();
         let threads = self.threads.max(1).min(nm);
+        let armed = self.ctrl.armed();
 
         // seed: evaluate every move once, queue the improving ones. The
         // sweep is read-only on the engine, so at threads > 1 it is
@@ -631,6 +638,15 @@ impl Refiner for GainCacheNc {
                     self.queue.push(i as u32, self.gain[i]);
                 }
             }
+            // one check per parallel sweep: no move has been applied yet,
+            // so stopping here returns the start mapping untouched
+            if armed {
+                if let Some(r) = self.ctrl.stop_reason() {
+                    stats.stopped = Some(r);
+                    stats.rounds = 1;
+                    return stats;
+                }
+            }
         } else {
             for i in 0..nm {
                 let (g, st) =
@@ -641,6 +657,13 @@ impl Refiner for GainCacheNc {
                 if g > 0 {
                     self.queued[i] = true;
                     self.queue.push(i as u32, g);
+                }
+                if armed && stats.evaluated % control::CHECK_EVERY == 0 {
+                    if let Some(r) = self.ctrl.stop_reason() {
+                        stats.stopped = Some(r);
+                        stats.rounds = 1;
+                        return stats;
+                    }
                 }
             }
         }
@@ -660,6 +683,14 @@ impl Refiner for GainCacheNc {
             let mut batch: Vec<u32> = Vec::with_capacity(batch_cap);
             let mut results: Vec<(i64, [u64; 3])> = Vec::with_capacity(batch_cap);
             loop {
+                // round boundary = move boundary: every apply below leaves a
+                // valid mapping, so stopping between rounds is safe
+                if armed {
+                    if let Some(r) = self.ctrl.stop_reason() {
+                        stats.stopped = Some(r);
+                        return stats;
+                    }
+                }
                 batch.clear();
                 while batch.len() < batch_cap {
                     let Some(id) = self.queue.pop() else { break };
@@ -753,6 +784,9 @@ impl Refiner for GainCacheNc {
         let mut spec_ids: Vec<u32> = Vec::with_capacity(spec_batch);
         let mut spec_out: Vec<(i64, [u64; 3])> = Vec::with_capacity(spec_batch);
         let mut until_respec = 0usize;
+        // drain ticks for the control check: fresh pops apply without an
+        // evaluation, so `stats.evaluated` alone can stall between checks
+        let mut ticks = 0u64;
 
         loop {
             if par && until_respec == 0 && !self.queue.is_empty() {
@@ -799,6 +833,13 @@ impl Refiner for GainCacheNc {
                 until_respec = spec_window;
             }
             let Some(i) = self.queue.pop() else { break };
+            ticks += 1;
+            if armed && ticks % control::CHECK_EVERY == 0 {
+                if let Some(r) = self.ctrl.stop_reason() {
+                    stats.stopped = Some(r);
+                    break;
+                }
+            }
             until_respec = until_respec.saturating_sub(1);
             let i = i as usize;
             self.queued[i] = false;

@@ -50,7 +50,7 @@ use super::algorithms::Neighborhood;
 use super::objective::{DenseEngine, SwapEngine};
 use crate::graph::{Graph, NodeId};
 use crate::model::topology::{Hierarchy, Machine};
-use crate::util::Rng;
+use crate::util::{Rng, RunControl, StopReason};
 
 /// Common interface over the fast (sparse, `O(d_u+d_v)`) and slow (dense,
 /// `O(n)`) swap engines.
@@ -222,6 +222,10 @@ pub struct SearchStats {
     pub improved: u64,
     /// Full sweeps/rounds executed.
     pub rounds: u64,
+    /// Why the search stopped before natural convergence, if it did
+    /// ([`Refiner::set_control`]); `None` for every uncontrolled run, so
+    /// the no-deadline bit-identity comparisons are unaffected.
+    pub stopped: Option<StopReason>,
 }
 
 impl SearchStats {
@@ -231,6 +235,7 @@ impl SearchStats {
         self.evaluated += other.evaluated;
         self.improved += other.improved;
         self.rounds += other.rounds;
+        self.stopped = self.stopped.or(other.stopped);
     }
 }
 
@@ -249,6 +254,14 @@ pub trait Refiner: Send {
     fn name(&self) -> String;
     /// Run the search to convergence; never increases `engine.objective()`.
     fn refine(&mut self, engine: &mut dyn Swapper, comm: &Graph, rng: &mut Rng) -> SearchStats;
+    /// Install a [`RunControl`] token: subsequent [`Self::refine`] calls
+    /// check it every [`crate::util::control::CHECK_EVERY`] iterations and
+    /// stop at the next move boundary once it fires, reporting the reason
+    /// in [`SearchStats::stopped`]. Every concrete refiner overrides this
+    /// (the anytime contract); the default keeps third-party refiners
+    /// compiling — they simply run to convergence. A disarmed token
+    /// restores the zero-overhead uncontrolled behavior.
+    fn set_control(&mut self, _ctrl: &RunControl) {}
 }
 
 /// The no-op refiner ([`Neighborhood::None`]): construction-only specs run
@@ -292,7 +305,7 @@ pub fn refiner_for_threads(
 ) -> Box<dyn Refiner> {
     match neighborhood {
         Neighborhood::None => Box::new(Noop),
-        Neighborhood::N2 => Box::new(N2Cyclic { max_sweeps }),
+        Neighborhood::N2 => Box::new(N2Cyclic::new(max_sweeps)),
         Neighborhood::Np { block_len } => {
             Box::new(NpBlocks::new(block_len, max_sweeps, machine.hier().cloned()))
         }
@@ -398,7 +411,7 @@ mod tests {
         let m = Mapping { sigma: rng.permutation(g.n()) };
         let mut fast = crate::mapping::objective::SwapEngine::new(&g, &o, m.clone());
         let mut slow = crate::mapping::objective::DenseEngine::new(&g, &o, m);
-        let mut r = N2Cyclic { max_sweeps: 10 };
+        let mut r = N2Cyclic::new(10);
         let mut rng_a = Rng::new(15);
         let mut rng_b = Rng::new(15);
         let sf = r.refine(&mut fast, &g, &mut rng_a);

@@ -2,16 +2,24 @@
 
 use super::{Refiner, SearchStats, Swapper};
 use crate::graph::{Graph, NodeId};
-use crate::util::Rng;
+use crate::util::{control, Rng, RunControl};
 
 /// Cyclic `N²` search: all `O(n²)` pairs visited cyclically; a swap is
 /// applied whenever it has positive gain; terminates when a full sweep
-/// applies no swap (or after `max_sweeps` as a safety bound). Stateless —
-/// the pair universe is implicit in the index range.
-#[derive(Debug, Clone, Copy)]
+/// applies no swap (or after `max_sweeps` as a safety bound). The pair
+/// universe is implicit in the index range.
+#[derive(Debug, Clone, Default)]
 pub struct N2Cyclic {
     /// Bound on the number of full passes.
     pub max_sweeps: usize,
+    /// Anytime stop token ([`Refiner::set_control`]); disarmed by default.
+    ctrl: RunControl,
+}
+
+impl N2Cyclic {
+    pub fn new(max_sweeps: usize) -> N2Cyclic {
+        N2Cyclic { max_sweeps, ctrl: RunControl::unlimited() }
+    }
 }
 
 impl Refiner for N2Cyclic {
@@ -19,10 +27,15 @@ impl Refiner for N2Cyclic {
         "N2".into()
     }
 
+    fn set_control(&mut self, ctrl: &RunControl) {
+        self.ctrl = ctrl.clone();
+    }
+
     fn refine(&mut self, engine: &mut dyn Swapper, comm: &Graph, _rng: &mut Rng) -> SearchStats {
         let n = comm.n();
         let mut stats = SearchStats::default();
-        for _ in 0..self.max_sweeps {
+        let armed = self.ctrl.armed();
+        'sweeps: for _ in 0..self.max_sweeps {
             stats.rounds += 1;
             let mut any = false;
             for i in 0..n as NodeId {
@@ -31,6 +44,12 @@ impl Refiner for N2Cyclic {
                     if engine.try_swap(i, j).is_some() {
                         stats.improved += 1;
                         any = true;
+                    }
+                    if armed && stats.evaluated % control::CHECK_EVERY == 0 {
+                        if let Some(r) = self.ctrl.stop_reason() {
+                            stats.stopped = Some(r);
+                            break 'sweeps;
+                        }
                     }
                 }
             }
@@ -62,13 +81,13 @@ mod tests {
         let mut rng = Rng::new(4);
         let mut eng = SwapEngine::new(&g, &o, Mapping { sigma: rng.permutation(g.n()) });
         let before = eng.objective();
-        let stats = N2Cyclic { max_sweeps: 50 }.refine(&mut eng, &g, &mut rng);
+        let stats = N2Cyclic::new(50).refine(&mut eng, &g, &mut rng);
         let after = eng.objective();
         assert!(after < before, "{before} -> {after}");
         assert!(stats.rounds < 50, "did not converge");
         assert_eq!(after, eng.recompute_objective());
         // converged: no improving pair remains in the last sweep
-        let final_stats = N2Cyclic { max_sweeps: 1 }.refine(&mut eng, &g, &mut rng);
+        let final_stats = N2Cyclic::new(1).refine(&mut eng, &g, &mut rng);
         assert_eq!(final_stats.improved, 0);
     }
 }

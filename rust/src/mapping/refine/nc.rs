@@ -2,7 +2,7 @@
 
 use super::{graph_key, Refiner, SearchStats, Swapper};
 use crate::graph::{bfs_ball, Graph, NodeId};
-use crate::util::Rng;
+use crate::util::{control, Rng, RunControl};
 
 /// Materialize the pair set of the `N_C^d` neighborhood: all unordered pairs
 /// of distinct processes within communication-graph distance `d`.
@@ -59,6 +59,8 @@ pub struct NcNeighborhood {
     /// Working copy (shuffled by the search; refilled from the canonical set
     /// each call so trajectories match a freshly-built pair set exactly).
     work: Vec<(NodeId, NodeId)>,
+    /// Anytime stop token ([`Refiner::set_control`]); disarmed by default.
+    ctrl: RunControl,
 }
 
 impl NcNeighborhood {
@@ -67,7 +69,13 @@ impl NcNeighborhood {
     }
 
     pub fn with_budget(d: u32, max_evaluations: u64) -> NcNeighborhood {
-        NcNeighborhood { d, max_evaluations, cache: None, work: Vec::new() }
+        NcNeighborhood {
+            d,
+            max_evaluations,
+            cache: None,
+            work: Vec::new(),
+            ctrl: RunControl::unlimited(),
+        }
     }
 
     /// Fill `self.work` from the cached canonical pair set (rebuilding the
@@ -94,12 +102,27 @@ impl NcNeighborhood {
         rng: &mut Rng,
         max_evaluations: u64,
     ) -> SearchStats {
+        Self::search_in_controlled(engine, pairs, rng, max_evaluations, &RunControl::unlimited())
+    }
+
+    /// [`Self::search_in`] under a [`RunControl`]: the loop additionally
+    /// checks the token every [`control::CHECK_EVERY`] evaluations and
+    /// stops at that move boundary once it fires. A disarmed token takes
+    /// the exact uncontrolled trajectory (no extra RNG or engine calls).
+    pub fn search_in_controlled(
+        engine: &mut dyn Swapper,
+        pairs: &mut [(NodeId, NodeId)],
+        rng: &mut Rng,
+        max_evaluations: u64,
+        ctrl: &RunControl,
+    ) -> SearchStats {
         let mut stats = SearchStats::default();
         if pairs.is_empty() {
             return stats;
         }
         rng.shuffle(pairs);
         let threshold = pairs.len() as u64;
+        let armed = ctrl.armed();
         let mut consecutive_failures = 0u64;
         let mut idx = 0usize;
         while consecutive_failures < threshold && stats.evaluated < max_evaluations {
@@ -110,6 +133,12 @@ impl NcNeighborhood {
                 consecutive_failures = 0;
             } else {
                 consecutive_failures += 1;
+            }
+            if armed && stats.evaluated % control::CHECK_EVERY == 0 {
+                if let Some(r) = ctrl.stop_reason() {
+                    stats.stopped = Some(r);
+                    break;
+                }
             }
             idx += 1;
             if idx == pairs.len() {
@@ -127,9 +156,14 @@ impl Refiner for NcNeighborhood {
         format!("Nc{}", self.d)
     }
 
+    fn set_control(&mut self, ctrl: &RunControl) {
+        self.ctrl = ctrl.clone();
+    }
+
     fn refine(&mut self, engine: &mut dyn Swapper, comm: &Graph, rng: &mut Rng) -> SearchStats {
         self.fill_work(comm);
-        Self::search_in(engine, &mut self.work, rng, self.max_evaluations)
+        let ctrl = self.ctrl.clone();
+        Self::search_in_controlled(engine, &mut self.work, rng, self.max_evaluations, &ctrl)
     }
 }
 
@@ -219,7 +253,7 @@ mod tests {
         let m = Mapping { sigma: rng.permutation(g.n()) };
 
         let mut e_n2 = SwapEngine::new(&g, &o, m.clone());
-        N2Cyclic { max_sweeps: 100 }.refine(&mut e_n2, &g, &mut rng);
+        N2Cyclic::new(100).refine(&mut e_n2, &g, &mut rng);
 
         let mut rng2 = Rng::new(11);
         let mut e_n1 = SwapEngine::new(&g, &o, m);

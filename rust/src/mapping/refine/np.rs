@@ -3,7 +3,7 @@
 use super::{Refiner, SearchStats, Swapper};
 use crate::graph::{Graph, NodeId};
 use crate::model::topology::Hierarchy;
-use crate::util::Rng;
+use crate::util::{control, Rng, RunControl};
 
 /// `N_p` search: the index space is partitioned into consecutive blocks of
 /// `block_len` and only pairs inside a block are considered (`O(n·s)`
@@ -19,11 +19,18 @@ pub struct NpBlocks {
     /// Machine hierarchy for the same-leaf-group skip rule; `None` disables
     /// the skip (every in-block pair is evaluated).
     hierarchy: Option<Hierarchy>,
+    /// Anytime stop token ([`Refiner::set_control`]); disarmed by default.
+    ctrl: RunControl,
 }
 
 impl NpBlocks {
     pub fn new(block_len: usize, max_sweeps: usize, hierarchy: Option<Hierarchy>) -> NpBlocks {
-        NpBlocks { block_len: block_len.max(2), max_sweeps, hierarchy }
+        NpBlocks {
+            block_len: block_len.max(2),
+            max_sweeps,
+            hierarchy,
+            ctrl: RunControl::unlimited(),
+        }
     }
 }
 
@@ -32,11 +39,16 @@ impl Refiner for NpBlocks {
         "Np".into()
     }
 
+    fn set_control(&mut self, ctrl: &RunControl) {
+        self.ctrl = ctrl.clone();
+    }
+
     fn refine(&mut self, engine: &mut dyn Swapper, comm: &Graph, _rng: &mut Rng) -> SearchStats {
         let n = comm.n();
         let block_len = self.block_len.max(2);
         let mut stats = SearchStats::default();
-        for _ in 0..self.max_sweeps {
+        let armed = self.ctrl.armed();
+        'sweeps: for _ in 0..self.max_sweeps {
             stats.rounds += 1;
             let mut any = false;
             let mut start = 0usize;
@@ -55,6 +67,12 @@ impl Refiner for NpBlocks {
                         if engine.try_swap(u, v).is_some() {
                             stats.improved += 1;
                             any = true;
+                        }
+                        if armed && stats.evaluated % control::CHECK_EVERY == 0 {
+                            if let Some(r) = self.ctrl.stop_reason() {
+                                stats.stopped = Some(r);
+                                break 'sweeps;
+                            }
                         }
                     }
                 }

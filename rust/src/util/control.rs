@@ -1,0 +1,230 @@
+//! Deadlines and cooperative cancellation for the anytime local search.
+//!
+//! Every refiner in this crate is *anytime*: each applied move leaves a
+//! valid, monotonically improving mapping, so a search can stop at any
+//! move boundary and hand back its best-so-far σ. [`RunControl`] is the
+//! token that asks it to: a cheap, cloneable handle carrying an optional
+//! wall-clock budget and a shared [`CancelToken`], threaded from the
+//! service admission path (or [`crate::api::MapJobBuilder::deadline_ms`])
+//! down into every drain loop.
+//!
+//! Cost model: refiners consult the token only every [`CHECK_EVERY`]
+//! loop iterations, and an **unarmed** token ([`RunControl::unlimited`],
+//! the default when no deadline or cancellation source exists) answers
+//! [`RunControl::stop_reason`] with a single `Option::is_none` test — no
+//! clock read, no atomic load — so the no-deadline hot path keeps its
+//! exact trajectory and the bit-identity suites keep passing unchanged.
+//!
+//! The injected clock ([`RunControl::advance_ms`]) lets tests expire a
+//! deadline deterministically without sleeping: the skew is added to the
+//! measured elapsed time whenever the budget is checked.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Refiner drain loops consult their [`RunControl`] every this many
+/// iterations — a compromise between deadline precision (a check costs
+/// one `Instant::now`) and hot-loop overhead. Checks always land on move
+/// boundaries, so stopping never tears a mapping.
+pub const CHECK_EVERY: u64 = 1024;
+
+/// Why a controlled run stopped before natural convergence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// The wall-clock budget was exhausted.
+    TimedOut,
+    /// The caller cancelled the run (e.g. the client connection dropped).
+    Cancelled,
+}
+
+/// A sticky, shareable cancel flag. One token can back many
+/// [`RunControl`]s — the wire layer hands every job of a connection the
+/// same token, so one dropped socket cancels all of its in-flight work.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation (idempotent, never un-set).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Debug)]
+struct Inner {
+    /// Instant the budget is measured from (token creation).
+    start: Instant,
+    /// Wall-clock budget; `None` makes this a cancel-only token.
+    budget: Option<Duration>,
+    /// Injected clock: milliseconds added to the measured elapsed time,
+    /// so tests can expire a deadline without sleeping.
+    skew_ms: AtomicU64,
+    cancel: CancelToken,
+}
+
+/// The run-control token. Cloning shares the underlying state (deadline,
+/// cancel flag, injected clock); the disarmed [`RunControl::unlimited`]
+/// form is a null handle whose checks compile down to one branch.
+#[derive(Debug, Clone, Default)]
+pub struct RunControl {
+    inner: Option<Arc<Inner>>,
+}
+
+impl RunControl {
+    /// The disarmed token: never stops, costs one branch per check.
+    pub const fn unlimited() -> RunControl {
+        RunControl { inner: None }
+    }
+
+    /// Arm a deadline measured from now.
+    pub fn with_deadline_ms(ms: u64) -> RunControl {
+        RunControl::with_parts(Some(ms), CancelToken::new())
+    }
+
+    /// Arm cancellation only (no deadline).
+    pub fn cancellable(cancel: CancelToken) -> RunControl {
+        RunControl::with_parts(None, cancel)
+    }
+
+    /// Arm with an optional deadline and a shared cancel token. A `None`
+    /// deadline with a token still arms the control (cancel-only); use
+    /// [`RunControl::unlimited`] for the true no-op handle.
+    pub fn with_parts(deadline_ms: Option<u64>, cancel: CancelToken) -> RunControl {
+        RunControl {
+            inner: Some(Arc::new(Inner {
+                start: Instant::now(),
+                budget: deadline_ms.map(Duration::from_millis),
+                skew_ms: AtomicU64::new(0),
+                cancel,
+            })),
+        }
+    }
+
+    /// Build from an optional deadline: `None` stays fully disarmed.
+    pub fn from_deadline(deadline_ms: Option<u64>) -> RunControl {
+        match deadline_ms {
+            Some(ms) => RunControl::with_deadline_ms(ms),
+            None => RunControl::unlimited(),
+        }
+    }
+
+    /// Whether any stop source (deadline or cancel flag) exists. Drain
+    /// loops hoist this out of the hot loop: unarmed ⇒ zero checks.
+    #[inline]
+    pub fn armed(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Request cancellation (no-op on a disarmed token).
+    pub fn cancel(&self) {
+        if let Some(inner) = &self.inner {
+            inner.cancel.cancel();
+        }
+    }
+
+    /// Why the run should stop, if it should. Cancellation wins over the
+    /// deadline so a dropped client is reported as `Cancelled` even when
+    /// its deadline also lapsed.
+    #[inline]
+    pub fn stop_reason(&self) -> Option<StopReason> {
+        let inner = self.inner.as_deref()?;
+        if inner.cancel.is_cancelled() {
+            return Some(StopReason::Cancelled);
+        }
+        match inner.budget {
+            Some(budget) if Self::elapsed(inner) >= budget => Some(StopReason::TimedOut),
+            _ => None,
+        }
+    }
+
+    /// True when the deadline budget is exhausted (never for cancel-only
+    /// or disarmed tokens).
+    pub fn expired(&self) -> bool {
+        match self.inner.as_deref() {
+            Some(inner) => matches!(inner.budget, Some(b) if Self::elapsed(inner) >= b),
+            None => false,
+        }
+    }
+
+    /// Injected clock: advance the perceived elapsed time by `ms`
+    /// without sleeping (test hook; shared by every clone).
+    pub fn advance_ms(&self, ms: u64) {
+        if let Some(inner) = &self.inner {
+            inner.skew_ms.fetch_add(ms, Ordering::Relaxed);
+        }
+    }
+
+    fn elapsed(inner: &Inner) -> Duration {
+        inner.start.elapsed() + Duration::from_millis(inner.skew_ms.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlimited_never_stops() {
+        let c = RunControl::unlimited();
+        assert!(!c.armed());
+        assert!(!c.expired());
+        assert_eq!(c.stop_reason(), None);
+        c.cancel(); // no-op on the null handle
+        c.advance_ms(1 << 40);
+        assert_eq!(c.stop_reason(), None);
+        assert_eq!(RunControl::from_deadline(None).stop_reason(), None);
+    }
+
+    #[test]
+    fn deadline_expires_under_the_injected_clock() {
+        let c = RunControl::with_deadline_ms(10_000);
+        assert!(c.armed());
+        assert_eq!(c.stop_reason(), None, "10s budget cannot lapse instantly");
+        c.advance_ms(9_000);
+        assert_eq!(c.stop_reason(), None);
+        c.advance_ms(2_000);
+        assert_eq!(c.stop_reason(), Some(StopReason::TimedOut));
+        assert!(c.expired());
+    }
+
+    #[test]
+    fn zero_budget_is_born_expired() {
+        let c = RunControl::with_deadline_ms(0);
+        assert!(c.expired());
+        assert_eq!(c.stop_reason(), Some(StopReason::TimedOut));
+    }
+
+    #[test]
+    fn cancellation_is_shared_and_wins_over_timeout() {
+        let token = CancelToken::new();
+        let a = RunControl::with_parts(Some(0), token.clone());
+        let b = RunControl::cancellable(token.clone());
+        assert_eq!(b.stop_reason(), None, "cancel-only token has no deadline");
+        assert!(!b.expired());
+        token.cancel();
+        assert_eq!(b.stop_reason(), Some(StopReason::Cancelled));
+        // a's deadline already lapsed, but cancellation is reported first
+        assert_eq!(a.stop_reason(), Some(StopReason::Cancelled));
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let c = RunControl::with_deadline_ms(60_000);
+        let d = c.clone();
+        c.advance_ms(120_000);
+        assert_eq!(d.stop_reason(), Some(StopReason::TimedOut));
+        let e = RunControl::cancellable(CancelToken::new());
+        let f = e.clone();
+        e.cancel();
+        assert_eq!(f.stop_reason(), Some(StopReason::Cancelled));
+    }
+}

@@ -1,0 +1,184 @@
+//! Deterministic fault injection (compiled out by default).
+//!
+//! The chaos test suite needs to drive the service through failures that
+//! are hard to provoke naturally: a worker that panics mid-job, a session
+//! run slow enough to blow its deadline, a wire write that fails under a
+//! live connection. This module is a tiny failpoint registry in the
+//! spirit of `fail-rs`: production code calls [`hit`] / [`hit_io`] at a
+//! handful of named sites, and tests arm actions against those names.
+//!
+//! **Zero cost by default.** Without the `failpoints` cargo feature every
+//! hook is an empty `#[inline(always)]` function — no registry, no lock,
+//! no branch survives into release builds. The CI chaos leg compiles the
+//! test binary with `--features failpoints`.
+//!
+//! **Deterministic.** An armed action fires on exact hit counts: `skip`
+//! hits pass through untouched, then `times` hits trigger, then the
+//! failpoint is inert again. No randomness, so a chaos test asserting
+//! "exactly one worker panic" sees exactly one.
+//!
+//! Failpoint catalog (see DESIGN.md §3b):
+//!
+//! | name            | site                                         |
+//! |-----------------|----------------------------------------------|
+//! | `worker/start`  | coordinator worker, before running a job     |
+//! | `oracle/eval`   | session repetition, before construction      |
+//! | `cache/checkin` | coordinator worker, before session checkin   |
+//! | `wire/write`    | server response serialization                |
+
+/// What an armed failpoint does when it fires.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Action {
+    /// Panic with the given message (exercises `catch_unwind` paths).
+    Panic(String),
+    /// Sleep for the given number of milliseconds (slow-job injection —
+    /// long enough sleeps push a deadlined job over its budget).
+    SleepMs(u64),
+    /// Return an injected `std::io::Error` from [`hit_io`] sites
+    /// (ignored by plain [`hit`] sites, which have no error channel).
+    IoError,
+}
+
+#[cfg(feature = "failpoints")]
+mod registry {
+    use super::Action;
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+
+    struct Armed {
+        action: Action,
+        /// Hits to let through before firing.
+        skip: u64,
+        /// Fires remaining once past `skip` (0 = spent).
+        times: u64,
+        /// Total hits observed (fired or not).
+        hits: u64,
+    }
+
+    static REGISTRY: Mutex<Option<HashMap<&'static str, Armed>>> = Mutex::new(None);
+
+    fn with<R>(f: impl FnOnce(&mut HashMap<&'static str, Armed>) -> R) -> R {
+        let mut guard = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+        f(guard.get_or_insert_with(HashMap::new))
+    }
+
+    /// Arm `name`: let `skip` hits pass, then fire `action` on the next
+    /// `times` hits. Re-arming replaces any previous configuration.
+    pub fn configure(name: &'static str, action: Action, skip: u64, times: u64) {
+        with(|m| {
+            m.insert(name, Armed { action, skip, times, hits: 0 });
+        });
+    }
+
+    /// Disarm every failpoint (test teardown).
+    pub fn clear() {
+        with(|m| m.clear());
+    }
+
+    /// Total hits observed at `name` since it was configured.
+    pub fn hits(name: &'static str) -> u64 {
+        with(|m| m.get(name).map_or(0, |a| a.hits))
+    }
+
+    /// The action to perform for this hit, if the failpoint fires.
+    pub(super) fn next_action(name: &'static str) -> Option<Action> {
+        with(|m| {
+            let armed = m.get_mut(name)?;
+            armed.hits += 1;
+            if armed.skip > 0 {
+                armed.skip -= 1;
+                return None;
+            }
+            if armed.times == 0 {
+                return None;
+            }
+            armed.times -= 1;
+            Some(armed.action.clone())
+        })
+    }
+}
+
+#[cfg(feature = "failpoints")]
+pub use registry::{clear, configure, hits};
+
+/// Failpoint hook for sites without an error channel. Fires `Panic` and
+/// `SleepMs` actions; `IoError` is meaningless here and ignored.
+#[cfg(feature = "failpoints")]
+pub fn hit(name: &'static str) {
+    match registry::next_action(name) {
+        Some(Action::Panic(msg)) => panic!("failpoint {name}: {msg}"),
+        Some(Action::SleepMs(ms)) => std::thread::sleep(std::time::Duration::from_millis(ms)),
+        Some(Action::IoError) | None => {}
+    }
+}
+
+/// Failpoint hook for I/O sites: like [`hit`], but an armed `IoError`
+/// surfaces as an injected `std::io::Error`.
+#[cfg(feature = "failpoints")]
+pub fn hit_io(name: &'static str) -> std::io::Result<()> {
+    match registry::next_action(name) {
+        Some(Action::Panic(msg)) => panic!("failpoint {name}: {msg}"),
+        Some(Action::SleepMs(ms)) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            Ok(())
+        }
+        Some(Action::IoError) => Err(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            format!("injected fault at {name}"),
+        )),
+        None => Ok(()),
+    }
+}
+
+/// No-op without the `failpoints` feature: compiles to nothing.
+#[cfg(not(feature = "failpoints"))]
+#[inline(always)]
+pub fn hit(_name: &'static str) {}
+
+/// No-op without the `failpoints` feature: compiles to `Ok(())`.
+#[cfg(not(feature = "failpoints"))]
+#[inline(always)]
+pub fn hit_io(_name: &'static str) -> std::io::Result<()> {
+    Ok(())
+}
+
+#[cfg(all(test, feature = "failpoints"))]
+mod tests {
+    use super::*;
+
+    // The registry is process-global; each test uses its own failpoint
+    // name so the suite stays order-independent under parallel testing.
+
+    #[test]
+    fn unarmed_hits_are_noops() {
+        hit("test/unarmed");
+        assert!(hit_io("test/unarmed-io").is_ok());
+    }
+
+    #[test]
+    fn skip_then_fire_then_spent() {
+        configure("test/counted", Action::IoError, 2, 1);
+        assert!(hit_io("test/counted").is_ok(), "skip 1");
+        assert!(hit_io("test/counted").is_ok(), "skip 2");
+        assert!(hit_io("test/counted").is_err(), "fires exactly once");
+        assert!(hit_io("test/counted").is_ok(), "spent");
+        assert_eq!(hits("test/counted"), 4);
+        clear();
+        assert!(hit_io("test/counted").is_ok());
+    }
+
+    #[test]
+    fn sleep_action_delays() {
+        configure("test/sleep", Action::SleepMs(20), 0, 1);
+        let t0 = std::time::Instant::now();
+        hit("test/sleep");
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(20));
+    }
+
+    #[test]
+    #[should_panic(expected = "failpoint test/panic: boom")]
+    fn panic_action_panics() {
+        configure("test/panic", Action::Panic("boom".into()), 0, 1);
+        hit("test/panic");
+    }
+}

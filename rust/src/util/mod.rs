@@ -5,12 +5,15 @@
 //! replaced by the small, dependency-free implementations in this module.
 
 pub mod cli;
+pub mod control;
+pub mod faults;
 pub mod rng;
 pub mod stats;
 pub mod threads;
 pub mod timer;
 
 pub use cli::Args;
+pub use control::{CancelToken, RunControl, StopReason};
 pub use rng::Rng;
 pub use threads::{resolve_threads, MAX_THREADS};
 pub use timer::Timer;

@@ -1,0 +1,165 @@
+//! Chaos suite: drives the coordinator through injected failures via the
+//! `util::faults` registry. Compiled (and run in CI) only with
+//! `--features failpoints`; without the feature this file is empty.
+//!
+//! The failpoint registry is process-global and the production sites use
+//! fixed names, so the tests serialize on one mutex and clear the registry
+//! at entry — otherwise a `worker/start` armed by one test could be
+//! consumed by another test's worker running in a parallel test thread.
+#![cfg(feature = "failpoints")]
+
+use qapmap::coordinator::{wire, Coordinator, MapRequest};
+use qapmap::gen::random_geometric_graph;
+use qapmap::mapping::algorithms::AlgorithmSpec;
+use qapmap::mapping::{Hierarchy, Machine, Mapping};
+use qapmap::util::faults::{self, Action};
+use qapmap::util::Rng;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+static CHAOS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize the test and start it from a disarmed registry. The guard is
+/// recovered from poisoning so one failed test doesn't wedge the rest.
+fn chaos_guard() -> MutexGuard<'static, ()> {
+    let guard = CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    faults::clear();
+    guard
+}
+
+fn request(id: u64, n: usize, algo: &str) -> MapRequest {
+    let mut rng = Rng::new(id);
+    MapRequest {
+        id,
+        comm: random_geometric_graph(n, &mut rng),
+        machine: Machine::Hier(Hierarchy::new(vec![4, 16, (n / 64) as u64], vec![1, 10, 100]).unwrap()),
+        algorithm: AlgorithmSpec::parse(algo).unwrap(),
+        repetitions: 1,
+        seed: id,
+        verify: false,
+        levels: None,
+        coarsen_limit: None,
+        threads: None,
+        deadline_ms: None,
+    }
+}
+
+#[test]
+fn worker_panic_is_counted_and_answered_once() {
+    let _g = chaos_guard();
+    let coord = Coordinator::start(1, 4, None);
+    faults::configure("worker/start", Action::Panic("chaos".into()), 0, 1);
+
+    let boom = coord.submit_blocking(request(1, 64, "topdown"));
+    let err = boom.error.expect("injected panic must surface as an error response");
+    assert!(err.contains("worker panicked"), "{err}");
+    assert!(err.contains("chaos"), "{err}");
+
+    // exactly one firing: the next job sails through on the same worker
+    let ok = coord.submit_blocking(request(2, 64, "topdown"));
+    assert!(ok.error.is_none(), "{:?}", ok.error);
+    Mapping { sigma: ok.sigma }.validate().unwrap();
+
+    let snap = coord.metrics();
+    assert_eq!(snap.worker_panics, 1);
+    assert_eq!(snap.jobs_failed, 1);
+    assert_eq!(snap.jobs_completed, 1);
+    assert_eq!(faults::hits("worker/start"), 2);
+    faults::clear();
+}
+
+#[test]
+fn injected_slowdown_blows_the_deadline_but_yields_a_mapping() {
+    let _g = chaos_guard();
+    let coord = Coordinator::start(1, 4, None);
+    // the sleep fires inside the session run, after admission: a 100ms
+    // budget admits the job, then the 400ms stall expires it mid-run
+    faults::configure("oracle/eval", Action::SleepMs(400), 0, 1);
+
+    let mut req = request(3, 128, "mm+N2");
+    req.deadline_ms = Some(100);
+    let resp = coord.submit_blocking(req);
+    assert!(resp.error.is_none(), "anytime stop is not an error: {:?}", resp.error);
+    assert!(resp.timed_out, "blown budget must be flagged");
+    assert!(!resp.cancelled);
+    Mapping { sigma: resp.sigma }.validate().unwrap();
+
+    let snap = coord.metrics();
+    assert_eq!(snap.jobs_timed_out, 1);
+    assert_eq!(snap.jobs_expired, 0, "admission happened before the stall");
+    assert_eq!(snap.jobs_failed, 0);
+    faults::clear();
+}
+
+#[test]
+fn wire_write_fault_kills_one_connection_not_the_server() {
+    let _g = chaos_guard();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Arc::new(Coordinator::start(1, 4, None));
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let (c, s) = (Arc::clone(&coord), Arc::clone(&stop));
+        std::thread::spawn(move || wire::serve(listener, c, s))
+    };
+
+    faults::configure("wire/write", Action::IoError, 0, 1);
+    // the job runs fine; serializing its response fails, so this client
+    // sees its connection die without an answer
+    let broken = wire::request(addr, &request(5, 64, "topdown"));
+    assert!(broken.is_err(), "response write was injected to fail: {broken:?}");
+
+    // the failpoint is spent and the server took no damage
+    let ok = wire::request(addr, &request(6, 64, "topdown")).unwrap();
+    assert!(ok.error.is_none(), "{:?}", ok.error);
+    assert_eq!(faults::hits("wire/write"), 2);
+    assert_eq!(coord.metrics().jobs_completed, 2, "both jobs ran to completion");
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+    faults::clear();
+}
+
+#[test]
+fn cache_checkin_panic_is_contained_and_cache_recovers() {
+    let _g = chaos_guard();
+    let coord = Coordinator::start(1, 4, None);
+    faults::configure("cache/checkin", Action::Panic("checkin boom".into()), 0, 1);
+
+    // the job computes a mapping, then the worker dies returning the warm
+    // session to the cache — the client gets a clean error, not a hang
+    let boom = coord.submit_blocking(request(7, 64, "mm"));
+    let err = boom.error.expect("checkin panic must surface as an error response");
+    assert!(err.contains("worker panicked"), "{err}");
+
+    // the session was lost, not corrupted: the same job rebuilds from
+    // scratch and succeeds
+    let ok = coord.submit_blocking(request(8, 64, "mm"));
+    assert!(ok.error.is_none(), "{:?}", ok.error);
+    Mapping { sigma: ok.sigma }.validate().unwrap();
+
+    let snap = coord.metrics();
+    assert_eq!(snap.worker_panics, 1);
+    assert_eq!(snap.jobs_failed, 1);
+    assert_eq!(snap.jobs_completed, 1);
+    faults::clear();
+}
+
+#[test]
+fn skip_count_lets_early_hits_pass() {
+    let _g = chaos_guard();
+    let coord = Coordinator::start(1, 4, None);
+    // skip=2: two jobs pass, the third worker start panics
+    faults::configure("worker/start", Action::Panic("third time".into()), 2, 1);
+
+    for id in 10..12u64 {
+        let ok = coord.submit_blocking(request(id, 64, "topdown"));
+        assert!(ok.error.is_none(), "hit {} should pass: {:?}", id - 9, ok.error);
+    }
+    let boom = coord.submit_blocking(request(12, 64, "topdown"));
+    assert!(boom.error.is_some(), "third hit must fire");
+    assert_eq!(coord.metrics().worker_panics, 1);
+    assert_eq!(faults::hits("worker/start"), 3);
+    faults::clear();
+}

@@ -154,6 +154,7 @@ fn coordinator_with_xla_verification() {
         levels: None,
         coarsen_limit: None,
         threads: None,
+        deadline_ms: None,
     });
     assert!(resp.error.is_none(), "{:?}", resp.error);
     assert_eq!(resp.verified, Some(true), "xla verification should agree: {resp:?}");

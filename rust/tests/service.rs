@@ -3,7 +3,8 @@
 //! plus the protocol-v2 session behaviors (pipelining, warm session cache,
 //! input bounding) through the public client API.
 
-use qapmap::coordinator::{wire, Client, Coordinator, MapRequest};
+use qapmap::api::{MapJobBuilder, MapSession};
+use qapmap::coordinator::{wire, Client, Coordinator, MapRequest, RetryPolicy};
 use qapmap::gen::random_geometric_graph;
 use qapmap::mapping::algorithms::AlgorithmSpec;
 use qapmap::mapping::{Hierarchy, Machine, Mapping};
@@ -12,6 +13,7 @@ use std::io::{BufRead, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 fn request(id: u64, n: usize, algo: &str) -> MapRequest {
     let mut rng = Rng::new(id);
@@ -26,6 +28,7 @@ fn request(id: u64, n: usize, algo: &str) -> MapRequest {
         levels: None,
         coarsen_limit: None,
         threads: None,
+        deadline_ms: None,
     }
 }
 
@@ -237,6 +240,220 @@ fn oversized_request_answered_with_clean_err() {
     assert!(line.contains("exceeds wire limit"), "{line:?}");
 
     let ok = wire::request(addr, &request(99, 64, "topdown")).unwrap();
+    assert!(ok.error.is_none());
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn zero_deadline_returns_valid_best_so_far_flagged_timed_out() {
+    // anytime contract, exercised deterministically through the library path
+    // (the coordinator refuses born-expired jobs at admission, so the in-run
+    // stop is only reachable here): deadline_ms=0 arms an already-expired
+    // budget, rep 0 still runs its construction, the refiner stops at the
+    // first move-boundary check — never an error, always a valid mapping
+    let mut rng = Rng::new(77);
+    let g = random_geometric_graph(256, &mut rng);
+    let h = Hierarchy::new(vec![4, 16, 4], vec![1, 10, 100]).unwrap();
+
+    let timed = MapSession::new(
+        MapJobBuilder::new(g.clone(), h.clone())
+            .algorithm_name("mm+N2")
+            .unwrap()
+            .seed(3)
+            .deadline_ms(0)
+            .build()
+            .unwrap(),
+    )
+    .run();
+    assert!(timed.timed_out, "expired budget must be reported");
+    assert!(!timed.cancelled);
+    timed.mapping.validate().unwrap();
+    assert!(
+        timed.objective <= timed.objective_initial,
+        "anytime stop must never be worse than the construction it started from"
+    );
+
+    // the unlimited run of the same job converges at least as far
+    let full = MapSession::new(
+        MapJobBuilder::new(g, h).algorithm_name("mm+N2").unwrap().seed(3).build().unwrap(),
+    )
+    .run();
+    assert!(!full.timed_out);
+    assert!(full.objective <= timed.objective);
+}
+
+#[test]
+fn generous_deadline_is_bit_identical_across_threads() {
+    // acceptance: an armed-but-never-firing deadline must not perturb the
+    // trajectory, across the T∈{1,2,4} determinism contract
+    let mut rng = Rng::new(78);
+    let g = random_geometric_graph(256, &mut rng);
+    let h = Hierarchy::new(vec![4, 16, 4], vec![1, 10, 100]).unwrap();
+    let run = |threads: usize, deadline: Option<u64>| {
+        let mut b = MapJobBuilder::new(g.clone(), h.clone())
+            .algorithm_name("mm+gc:nccyc2")
+            .unwrap()
+            .seed(9)
+            .threads(threads);
+        if let Some(ms) = deadline {
+            b = b.deadline_ms(ms);
+        }
+        MapSession::new(b.build().unwrap()).run()
+    };
+    let base = run(1, None);
+    assert!(!base.timed_out && !base.cancelled);
+    for t in [1usize, 2, 4] {
+        for dl in [None, Some(600_000)] {
+            let r = run(t, dl);
+            assert!(!r.timed_out, "generous deadline fired (t={t})");
+            assert_eq!(r.objective, base.objective, "t={t} dl={dl:?}");
+            assert_eq!(r.mapping.sigma, base.mapping.sigma, "t={t} dl={dl:?}");
+        }
+    }
+}
+
+#[test]
+fn truncated_request_mid_pipeline_gets_err_after_good_responses() {
+    // satellite: a connection that pipelines N well-formed requests and then
+    // dies mid-frame must still get its N answers plus one ERR — and the
+    // already-admitted work must not poison the service
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Arc::new(Coordinator::start(1, 8, None));
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let (c, s) = (Arc::clone(&coord), Arc::clone(&stop));
+        std::thread::spawn(move || wire::serve(listener, c, s))
+    };
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = std::io::BufWriter::new(stream.try_clone().unwrap());
+    for id in 1..=2u64 {
+        wire::write_request(&mut w, &request(id, 64, "topdown")).unwrap();
+    }
+    // a third request truncated mid-frame: full header and edges, no END
+    let mut frame = Vec::new();
+    wire::write_request(&mut frame, &request(3, 64, "topdown")).unwrap();
+    let body = &frame[..frame.len() - "END\n".len()];
+    w.write_all(body).unwrap();
+    w.flush().unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+
+    let mut reader = std::io::BufReader::new(stream);
+    for id in 1..=2u64 {
+        let resp = wire::read_response(&mut reader).unwrap();
+        assert_eq!(resp.id, id);
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        Mapping { sigma: resp.sigma }.validate().unwrap();
+    }
+    let truncated = wire::read_response(&mut reader).unwrap();
+    assert!(truncated.error.is_some(), "truncated frame must produce ERR");
+
+    // service healthy afterwards, and the two good jobs really ran
+    let ok = wire::request(addr, &request(50, 64, "topdown")).unwrap();
+    assert!(ok.error.is_none());
+    assert_eq!(coord.metrics().jobs_completed, 3);
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn retry_helper_survives_a_busy_storm() {
+    // satellite: 1 worker, queue depth 1 — two slow jobs occupy both slots,
+    // a bare submit bounces with BUSY, and the backoff helper keeps retrying
+    // until the storm clears
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Arc::new(Coordinator::start(1, 1, None));
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let (c, s) = (Arc::clone(&coord), Arc::clone(&stop));
+        std::thread::spawn(move || wire::serve(listener, c, s))
+    };
+
+    // fill the worker and the queue with slow jobs on a pipelined connection
+    let mut slow_client = Client::connect(addr).unwrap();
+    let mut slow = request(1, 256, "topdown+Nc5");
+    slow.repetitions = 4;
+    slow_client.send(&slow).unwrap();
+    slow.id = 2;
+    slow_client.send(&slow).unwrap();
+
+    // give the worker a moment to claim job 1 so job 2 sits in the queue
+    std::thread::sleep(Duration::from_millis(100));
+
+    let quick = request(3, 64, "topdown");
+    let first_try = wire::request(addr, &quick).unwrap();
+    assert!(first_try.is_busy(), "both slots full — bare submit must bounce");
+    assert!(first_try.is_retryable());
+
+    let policy = RetryPolicy { max_attempts: 400, base_ms: 5, cap_ms: 50 };
+    let mut quick_client = Client::connect(addr).unwrap();
+    let served = quick_client.map_with_retry(&quick, &policy).unwrap();
+    assert!(served.error.is_none(), "retry must outlast the storm: {:?}", served.error);
+    Mapping { sigma: served.sigma }.validate().unwrap();
+
+    for id in 1..=2u64 {
+        let resp = slow_client.recv().unwrap();
+        assert_eq!(resp.id, id);
+        assert!(resp.error.is_none());
+    }
+    let snap = coord.metrics();
+    assert!(snap.jobs_busy_rejected >= 1, "the storm must have bounced at least once");
+    assert_eq!(snap.jobs_completed, 3);
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn dropped_connection_cancels_pipelined_inflight_work() {
+    // satellite: a client that pipelines several slow jobs and vanishes
+    // without reading gets its remaining work cancelled — the worker notices
+    // the dead connection through the writer's failure and stops burning CPU
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let coord = Arc::new(Coordinator::start(1, 8, None));
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let (c, s) = (Arc::clone(&coord), Arc::clone(&stop));
+        std::thread::spawn(move || wire::serve(listener, c, s))
+    };
+
+    {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = std::io::BufWriter::new(stream.try_clone().unwrap());
+        let mut slow = request(1, 256, "topdown+Nc5");
+        slow.repetitions = 4;
+        for id in 1..=4u64 {
+            slow.id = id;
+            wire::write_request(&mut w, &slow).unwrap();
+        }
+        w.flush().unwrap();
+        // dropped here with responses unread: the close RSTs the socket, so
+        // the server's next response write fails and cancels the rest
+    }
+
+    // wait for the connection's jobs to finish (completed or cancelled)
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    loop {
+        let snap = coord.metrics();
+        if snap.jobs_completed + snap.jobs_failed >= 4 {
+            assert!(
+                snap.jobs_cancelled >= 1,
+                "at least one in-flight job must observe the dead connection: {snap:?}"
+            );
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "jobs never drained: {snap:?}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // the service is still healthy for other clients
+    let ok = wire::request(addr, &request(50, 64, "topdown")).unwrap();
     assert!(ok.error.is_none());
 
     stop.store(true, Ordering::Relaxed);
