@@ -1,0 +1,215 @@
+//! Acceptance benchmark for online remapping (`REMAP`): a drifting
+//! workload re-mapped through the warm, delta-patched path must beat
+//! rebuilding from scratch at every step, at no cost in quality.
+//!
+//! Setup: map an instance once, then run a 10-step drift schedule — each
+//! step perturbs the weights of ≤ 5% of the edges. Two strategies answer
+//! every step:
+//!
+//! * **remap** — one persistent [`MapSession`]: `session.remap(deltas)`
+//!   patches graph, Γ and J in `O(|Δ|)`, restores the quiescent gain
+//!   cache, re-seeds only the delta-incident move ids and drains.
+//! * **fresh** — a brand-new session on the drifted graph (oracle,
+//!   pair-set and construction rebuilt, full local search from scratch).
+//!
+//! Both see the identical drift sequence. Reported per family: total wall
+//! time, total move evaluations, and the geometric mean of the per-step
+//! objective ratio (remap / fresh; < 1 means the warm path ended lower).
+//!
+//! With `--check` the bench asserts the headline claims — warm strictly
+//! faster in total, geomean J no worse than fresh (1e-3 tolerance), every
+//! weight-only step riding the warm tier — and is run in CI's release leg
+//! next to `service_scale --check`.
+
+use qapmap::api::{MapJobBuilder, MapSession};
+use qapmap::bench::{full_mode, write_csv, Table};
+use qapmap::graph::{EdgeDelta, Graph, NodeId, Weight};
+use qapmap::mapping::Hierarchy;
+use qapmap::model::build_instance;
+use qapmap::util::{Rng, Timer};
+
+const STEPS: usize = 10;
+const DRIFT_PCT: usize = 5; // ≤ 5% of edges re-weighted per step
+const ALGO: &str = "mm+gc:nc4";
+const SEED: u64 = 1;
+
+/// All undirected edges of `g` as (u, v, w) triples.
+fn edge_list(g: &Graph) -> Vec<(NodeId, NodeId, Weight)> {
+    let mut edges = Vec::with_capacity(g.m());
+    for u in 0..g.n() as NodeId {
+        for (v, w) in g.edges(u) {
+            if v > u {
+                edges.push((u, v, w));
+            }
+        }
+    }
+    edges
+}
+
+/// One drift step: re-weight `DRIFT_PCT`% of the edges (weight-only, so
+/// the warm tier stays eligible); deterministic in `rng`.
+fn drift(g: &Graph, rng: &mut Rng) -> Vec<EdgeDelta> {
+    let edges = edge_list(g);
+    let k = (edges.len() * DRIFT_PCT / 100).max(1);
+    (0..k)
+        .map(|_| {
+            let (u, v, w) = edges[rng.next_bounded(edges.len() as u64) as usize];
+            // perturb around the old weight, staying >= 1
+            EdgeDelta { u, v, w: 1 + rng.next_bounded(2 * w) }
+        })
+        .collect()
+}
+
+fn session_for(comm: &Graph, h: &Hierarchy) -> MapSession {
+    let job = MapJobBuilder::new(comm.clone(), h.clone())
+        .algorithm_name(ALGO)
+        .unwrap()
+        .seed(SEED)
+        .build()
+        .unwrap();
+    MapSession::new(job)
+}
+
+struct Outcome {
+    /// remap total seconds minus fresh total seconds (negative = faster).
+    gap_secs: f64,
+    evaluated: u64,
+    /// ln(J_remap / J_fresh) summed over the steps.
+    ln_ratio_sum: f64,
+    warm_steps: usize,
+}
+
+fn run_family(
+    name: &str,
+    comm: &Graph,
+    h: &Hierarchy,
+    table: &Table,
+    lines: &mut Vec<String>,
+) -> Outcome {
+    // the same drift sequence feeds both strategies
+    let mut drift_rng = Rng::new(7_000 + comm.n() as u64);
+    let mut schedule = Vec::with_capacity(STEPS);
+    {
+        let mut g = comm.clone();
+        for _ in 0..STEPS {
+            let deltas = drift(&g, &mut drift_rng);
+            g.apply_deltas(&deltas).unwrap();
+            schedule.push(deltas);
+        }
+    }
+
+    // warm path: one session, remap per step
+    let mut session = session_for(comm, h);
+    session.run(); // the initial MAP is common to both strategies
+    let mut remap_secs = 0.0;
+    let mut remap_evals = 0u64;
+    let mut remap_j = Vec::with_capacity(STEPS);
+    let mut warm_steps = 0usize;
+    for deltas in &schedule {
+        let t = Timer::start();
+        let out = session.remap(deltas).unwrap();
+        remap_secs += t.secs();
+        remap_evals += out.report.best().evaluated;
+        remap_j.push(out.report.objective);
+        if out.warm {
+            warm_steps += 1;
+        }
+    }
+
+    // fresh path: rebuild + cold search on every drifted graph
+    let mut fresh_secs = 0.0;
+    let mut fresh_evals = 0u64;
+    let mut fresh_j = Vec::with_capacity(STEPS);
+    {
+        let mut g = comm.clone();
+        for deltas in &schedule {
+            g.apply_deltas(deltas).unwrap();
+            let mut cold = session_for(&g, h);
+            let t = Timer::start();
+            let report = cold.run();
+            fresh_secs += t.secs();
+            fresh_evals += report.best().evaluated;
+            fresh_j.push(report.objective);
+        }
+    }
+
+    let mut ln_ratio_sum = 0.0;
+    for (rj, fj) in remap_j.iter().zip(&fresh_j) {
+        ln_ratio_sum += (*rj as f64 / *fj as f64).ln();
+    }
+    let geomean = (ln_ratio_sum / STEPS as f64).exp();
+    table.row(&[
+        name.to_string(),
+        format!("{remap_secs:.3}"),
+        format!("{fresh_secs:.3}"),
+        format!("{:.1}x", fresh_secs / remap_secs.max(1e-9)),
+        remap_evals.to_string(),
+        fresh_evals.to_string(),
+        format!("{geomean:.4}"),
+        format!("{warm_steps}/{STEPS}"),
+    ]);
+    for (i, (rj, fj)) in remap_j.iter().zip(&fresh_j).enumerate() {
+        lines.push(format!("{name},{i},{rj},{fj}"));
+    }
+    Outcome { gap_secs: remap_secs - fresh_secs, evaluated: remap_evals, ln_ratio_sum, warm_steps }
+}
+
+fn main() {
+    let check = std::env::args().any(|a| a == "--check");
+    let blocks = if full_mode() { 1024 } else { 256 };
+    println!(
+        "== online remapping: warm delta-patched REMAP vs rebuild-from-scratch ==\n\
+         {STEPS}-step drift schedule, ≤{DRIFT_PCT}% of edges re-weighted per step, algo {ALGO}\n"
+    );
+
+    let mut rng = Rng::new(42);
+    let rgg_app = qapmap::gen::random_geometric_graph(blocks * 8, &mut rng);
+    let rgg = build_instance(&rgg_app, blocks, &mut rng);
+    let del_app = qapmap::gen::delaunay_graph(blocks * 8, &mut rng);
+    let del = build_instance(&del_app, blocks, &mut rng);
+    let families: Vec<(&str, Graph)> = vec![("rgg", rgg), ("del", del)];
+    let h = Hierarchy::new(vec![4, 16, (blocks / 64) as u64], vec![1, 10, 100]).unwrap();
+
+    let table = Table::new(
+        &["family", "remap[s]", "fresh[s]", "speedup", "ev-remap", "ev-fresh", "J-geomean", "warm"],
+        &[8, 9, 9, 8, 10, 10, 10, 6],
+    );
+    let mut lines = Vec::new();
+    let mut worst_gap = f64::NEG_INFINITY; // remap minus fresh seconds
+    let mut total_remap_evals = 0u64;
+    let mut ln_ratio_sum = 0.0;
+    let mut warm_total = 0usize;
+    for (name, comm) in &families {
+        let out = run_family(name, comm, &h, &table, &mut lines);
+        worst_gap = worst_gap.max(out.gap_secs);
+        total_remap_evals += out.evaluated;
+        ln_ratio_sum += out.ln_ratio_sum;
+        warm_total += out.warm_steps;
+    }
+    write_csv("out/remap.csv", "family,step,remap_j,fresh_j", &lines);
+    println!("\n(remap = Γ/J patched in O(|Δ|) + gain-cache re-seed of delta-incident");
+    println!(" move ids only; fresh = oracle + pair-set + construction + full search)");
+
+    if check {
+        let steps_total = STEPS * families.len();
+        let geomean = (ln_ratio_sum / steps_total as f64).exp();
+        assert!(
+            worst_gap < 0.0,
+            "remap must be strictly faster than rebuilding in every family \
+             (worst remap-minus-fresh gap {worst_gap:.3}s)"
+        );
+        assert!(
+            geomean <= 1.0 + 1e-3,
+            "remap quality must be no worse than fresh (geomean J ratio {geomean:.4})"
+        );
+        assert_eq!(
+            warm_total, steps_total,
+            "weight-only drifts must ride the warm tier on every step"
+        );
+        assert!(total_remap_evals > 0, "the warm searches must actually re-optimize");
+        println!(
+            "\nremap --check: OK (warm on {warm_total}/{steps_total} steps, \
+             geomean J ratio {geomean:.4})"
+        );
+    }
+}

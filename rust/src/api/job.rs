@@ -86,6 +86,7 @@ pub struct MapJobBuilder {
     ml_cfg: MlConfig,
     threads: usize,
     deadline_ms: Option<u64>,
+    warm_start: bool,
 }
 
 impl MapJobBuilder {
@@ -111,6 +112,7 @@ impl MapJobBuilder {
             ml_cfg: MlConfig::default(),
             threads: 1,
             deadline_ms: None,
+            warm_start: true,
         }
     }
 
@@ -214,6 +216,18 @@ impl MapJobBuilder {
         self
     }
 
+    /// Whether runs may capture warm-start state for incremental remapping
+    /// (`MapSession::remap`): a converged single-repetition gain-cache run
+    /// snapshots its engine (σ, Γ, move versions, J) so a later edge-delta
+    /// batch resumes the search instead of rebuilding. On by default — the
+    /// snapshot is three `O(n)` vectors and capture is move-only; turn it
+    /// off to pin the strictly stateless per-run behavior (every `remap`
+    /// then degrades to a cold run on the patched graph).
+    pub fn warm_start(mut self, warm: bool) -> Self {
+        self.warm_start = warm;
+        self
+    }
+
     /// Validate and freeze the configuration.
     pub fn build(self) -> Result<MapJob, String> {
         if self.comm.n() != self.machine.n_pes() {
@@ -244,6 +258,7 @@ impl MapJobBuilder {
             ml_cfg: self.ml_cfg,
             threads: self.threads,
             deadline_ms: self.deadline_ms,
+            warm_start: self.warm_start,
         })
     }
 }
@@ -265,6 +280,7 @@ pub struct MapJob {
     pub(crate) ml_cfg: MlConfig,
     pub(crate) threads: usize,
     pub(crate) deadline_ms: Option<u64>,
+    pub(crate) warm_start: bool,
 }
 
 impl MapJob {
@@ -326,6 +342,12 @@ impl MapJob {
     /// Wall-clock budget in milliseconds (`None` = unlimited).
     pub fn deadline_ms(&self) -> Option<u64> {
         self.deadline_ms
+    }
+
+    /// Whether runs may capture warm-start state for incremental
+    /// remapping (see [`MapJobBuilder::warm_start`]).
+    pub fn warm_start(&self) -> bool {
+        self.warm_start
     }
 
     /// The effective thread budget: auto-detection applied, always >= 1.
@@ -446,6 +468,7 @@ impl MapResponse {
             cancelled: report.cancelled,
             reps: report.reps,
             error: None,
+            session_key: None,
         }
     }
 }

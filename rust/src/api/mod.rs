@@ -58,4 +58,4 @@ pub use job::{
     resolve_machine, MachineResolution, MapJob, MapJobBuilder, OracleMode, VerifyPolicy,
 };
 pub use report::{MapReport, RepStat};
-pub use session::{MapSession, VERIFY_RTOL};
+pub use session::{MapSession, RemapOutcome, VERIFY_RTOL};

@@ -1,14 +1,14 @@
 //! Session execution: repetition loop, scratch reuse, best-of-N selection,
 //! batched XLA scoring and verification.
 
-use crate::graph::Graph;
+use crate::graph::{EdgeDelta, Graph};
 use crate::mapping::algorithms::{Construction, GainMode, MapResult, Neighborhood};
 use crate::mapping::multilevel::{level_refiners, vcycle_refine, MlHierarchy};
-use crate::mapping::objective::{objective, DenseEngine, Mapping, SwapEngine};
+use crate::mapping::objective::{objective, DenseEngine, Mapping, SwapEngine, WarmParts};
 use crate::mapping::refine::{refiner_for_threads, Refiner};
 use crate::mapping::{construct, Machine};
 use crate::runtime::{RuntimeHandle, BATCH};
-use crate::util::{faults, Rng, RunControl, StopReason, Timer};
+use crate::util::{faults, Rng, RunControl, StopReason, Timer, MAX_THREADS};
 
 use super::job::{MapJob, OracleMode, VerifyPolicy};
 use super::report::{MapReport, RepStat};
@@ -47,6 +47,18 @@ pub(crate) struct SessionScratch {
     /// one-time construction cost (reported by every repetition that reuses
     /// it, so timing stats stay meaningful).
     construction: Option<(Mapping, f64)>,
+    /// Warm-start state captured at the end of the last run: the engine's
+    /// full (σ, Γ, version, J) snapshot at a *converged* local optimum.
+    /// [`MapSession::remap`] resurrects the engine from this in O(1) and,
+    /// together with the gain cache's persisted queue state, resumes the
+    /// search with only the delta-incident moves re-seeded. `None` whenever
+    /// the last search stopped early or the job is warm-ineligible.
+    warm: Option<WarmParts>,
+    /// Whether [`execute_once`] should capture [`Self::warm`]: set by
+    /// `run_with_seed` iff the job is warm-eligible (single effective
+    /// repetition, flat spec, fast engine, gain-cache search, warm-start
+    /// not opted out). Worker scratches always keep this off.
+    capture_warm: bool,
 }
 
 impl SessionScratch {
@@ -68,6 +80,8 @@ impl SessionScratch {
             }),
             dense: None,
             construction: self.construction.clone(),
+            warm: None,
+            capture_warm: false,
         }
     }
 }
@@ -225,6 +239,13 @@ impl MapSession {
         let ctrl = self.effective_control();
 
         let threads = self.job.resolved_threads();
+        // warm-start capture: only a single-repetition, flat, fast-engine
+        // gain-cache run ends at a state `remap` can resume (the gain cache
+        // persists its queue arrays, the engine snapshot carries σ/Γ/J and
+        // the move versions). Any previous snapshot is dropped up front —
+        // this run's construction supersedes it either way.
+        self.scratch.warm = None;
+        self.scratch.capture_warm = warm_eligible(&self.job);
         let seeds: Vec<u64> = (0..reps).map(|r| base_seed.wrapping_add(r as u64)).collect();
         let mut results: Vec<MapResult> = Vec::with_capacity(reps);
         if reps > 1 && threads > 1 {
@@ -379,6 +400,154 @@ impl MapSession {
         }
     }
 
+    /// Replace the job's thread budget in place (a per-run knob, like
+    /// `seed`; clamped like the builder's validation). The next
+    /// `run`/`remap` rebuilds the cached refiner at the new width if it
+    /// differs and keeps every other piece of scratch — including the warm
+    /// snapshot, though a width change costs the first `remap` its partial
+    /// re-seed (a fresh refiner starts non-quiescent and falls back to a
+    /// full refine from the previous σ).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.job.threads = threads.min(MAX_THREADS);
+    }
+
+    /// Apply an edge-delta batch to the session's communication graph and
+    /// re-map *incrementally*: Γ and J are patched in O(|Δ|) distance
+    /// queries, and — when the previous search converged under a gain-cache
+    /// refiner — local search resumes from the previous σ with only the
+    /// delta-incident moves re-seeded, instead of re-running a construction
+    /// and a full O(|moves|) seed sweep.
+    ///
+    /// Tiering, best to worst:
+    /// 1. weight-only batch, warm engine snapshot, quiescent gain cache →
+    ///    delta-patch + partial re-seed ([`Refiner::refine_warm`]); the
+    ///    result is bit-identical to a cold rebuild on the updated graph
+    ///    started from the same σ (tested in `refine/gaincache.rs`);
+    /// 2. structural batch (new edges shift the move-id space) or a refiner
+    ///    that cannot resume (fresh after a thread-width change) →
+    ///    delta-patch + full refine from the previous σ;
+    /// 3. no warm snapshot (first call, prior early stop, warm-ineligible
+    ///    job, `warm_start(false)`) → a cold [`Self::run`] on the patched
+    ///    graph.
+    ///
+    /// Deadlines/cancellation ([`Self::set_control`] or the job's
+    /// `deadline_ms`) and the thread budget apply exactly as on
+    /// [`Self::run`]. An invalid batch (self-loop, endpoint ≥ n) rejects
+    /// atomically: graph, warm state and scratch are all unchanged.
+    pub fn remap(&mut self, deltas: &[EdgeDelta]) -> Result<RemapOutcome, String> {
+        let timer = Timer::start();
+        let outcome = self.job.comm.apply_deltas(deltas)?;
+        // every comm-derived cache except the refiner scratch (which
+        // re-keys or rebuilds itself) is now stale for the next cold
+        // construction
+        self.scratch.construction = None;
+        self.scratch.dense = None;
+        self.scratch.ml = None;
+        if !self.job.warm_start {
+            self.scratch.warm = None;
+        }
+
+        let Some(parts) = self.scratch.warm.take() else {
+            // tier 3: nothing to resume — cold run on the patched graph
+            // (which re-arms the warm snapshot for the next remap)
+            let report = self.run();
+            return Ok(RemapOutcome {
+                report,
+                fp_delta: outcome.fp_delta,
+                delta_edges: deltas.len() as u64,
+                warm: false,
+                structural: outcome.structural,
+            });
+        };
+
+        let ctrl = self.effective_control();
+        let threads = self.job.resolved_threads();
+        let job = &self.job;
+        let oracle = &self.oracle;
+        let scratch = &mut self.scratch;
+        if scratch.refiner_threads != threads {
+            scratch.refiner = None;
+            scratch.refiner_threads = threads;
+        }
+        let refiner = scratch.refiner.get_or_insert_with(|| {
+            refiner_for_threads(job.spec.neighborhood, job.spec.max_sweeps, &job.machine, threads)
+        });
+        refiner.set_control(&ctrl);
+
+        let t = Timer::start();
+        let mut eng = SwapEngine::from_warm(&job.comm, oracle, parts);
+        eng.apply_deltas(&outcome.records);
+        let j0 = eng.objective();
+        let warm_stats = if outcome.structural {
+            None // move ids shifted: a partial re-seed would be meaningless
+        } else {
+            refiner.refine_warm(&mut eng, &job.comm, &outcome.touched)
+        };
+        let mut warm_used = true;
+        let stats = match warm_stats {
+            Some(s) => s,
+            None => {
+                // tier 2: full refine, still from the previous σ carried by
+                // the delta-patched engine — no construction re-run
+                warm_used = false;
+                let mut rng = Rng::new(job.seed);
+                refiner.refine(&mut eng, &job.comm, &mut rng)
+            }
+        };
+        let j = eng.objective();
+        let mapping = if scratch.capture_warm && stats.stopped.is_none() {
+            let parts = eng.into_warm_parts();
+            let mapping = parts.mapping.clone();
+            scratch.warm = Some(parts);
+            mapping
+        } else {
+            let (mapping, gamma) = eng.into_parts();
+            scratch.gamma = gamma;
+            mapping
+        };
+        let ls_secs = t.secs();
+
+        let rep = RepStat {
+            seed: job.seed,
+            objective_initial: j0,
+            objective: j,
+            construct_secs: 0.0,
+            ls_secs,
+            evaluated: stats.evaluated,
+            improved: stats.improved,
+            rounds: stats.rounds,
+            levels: Vec::new(),
+            timed_out: stats.stopped == Some(StopReason::TimedOut),
+            cancelled: stats.stopped == Some(StopReason::Cancelled),
+        };
+        let (timed_out, cancelled) = (rep.timed_out, rep.cancelled);
+        let report = MapReport {
+            mapping,
+            algorithm: job.spec.name(),
+            machine: job.resolution.clone(),
+            best_rep: 0,
+            reps: vec![rep],
+            objective: j,
+            objective_initial: j0,
+            construct_secs: 0.0,
+            ls_secs,
+            total_secs: timer.secs(),
+            xla_objective: None,
+            verified: None,
+            verify_error: None,
+            short_circuited: false,
+            timed_out,
+            cancelled,
+        };
+        Ok(RemapOutcome {
+            report,
+            fp_delta: outcome.fp_delta,
+            delta_edges: deltas.len() as u64,
+            warm: warm_used,
+            structural: outcome.structural,
+        })
+    }
+
     /// Like [`Self::run`], but enforce [`VerifyPolicy::Required`]: returns
     /// an error when required verification could not run at all (no runtime
     /// attached, no artifact fits the instance, or the runtime call failed).
@@ -401,6 +570,46 @@ impl MapSession {
         }
         Ok(report)
     }
+}
+
+/// The result of one [`MapSession::remap`] call: the report, plus the
+/// bookkeeping the service layer needs to re-key its session cache and
+/// account for the delta traffic.
+#[derive(Debug, Clone)]
+pub struct RemapOutcome {
+    /// Single-repetition report for the incremental search
+    /// (`construct_secs` is 0 by construction — nothing was constructed).
+    pub report: MapReport,
+    /// Wrapping-add this to the pre-delta graph fingerprint to get the
+    /// updated graph's fingerprint ([`crate::graph::fingerprint`]'s
+    /// incremental contract) — the service's new session-cache key.
+    pub fp_delta: u64,
+    /// Number of edge deltas in the applied batch.
+    pub delta_edges: u64,
+    /// True when the warm tier ran (engine delta-patch + partial gain-cache
+    /// re-seed); false when the call fell back to a full refine or a cold
+    /// run.
+    pub warm: bool,
+    /// True when the batch inserted previously absent edges (bounded CSR
+    /// row rebuild; forces at least the tier-2 fallback).
+    pub structural: bool,
+}
+
+/// True when a run of `job` ends in a state [`MapSession::remap`] can
+/// resume: exactly one effective repetition (the snapshot must *be* the
+/// reported mapping), a flat spec (the V-cycle's engine state spans
+/// levels), the fast engine (the snapshot is its Γ/version vectors), a
+/// gain-cache search (the only refiner that persists a resumable queue),
+/// and warm-start not opted out.
+fn warm_eligible(job: &MapJob) -> bool {
+    job.warm_start
+        && job.effective_repetitions() == 1
+        && !job.spec.multilevel
+        && matches!(job.spec.gain_mode, GainMode::Fast)
+        && matches!(
+            job.spec.neighborhood,
+            Neighborhood::GcNc { .. } | Neighborhood::GcNcCycle { .. }
+        )
 }
 
 /// Index of the exact-integer argmin.
@@ -530,9 +739,20 @@ pub(crate) fn execute_once(
             let j0 = eng.objective();
             let stats = refiner.refine(&mut eng, comm, rng);
             let j = eng.objective();
-            let (mapping, gamma) = eng.into_parts();
-            scratch.gamma = gamma;
-            (mapping, j0, j, stats)
+            if scratch.capture_warm && stats.stopped.is_none() {
+                // converged: snapshot the full engine state (σ, Γ, versions,
+                // J) so a later `remap` resumes here instead of rebuilding.
+                // An early-stopped search captures nothing — its gain cache
+                // holds no certified local optimum to resume from.
+                let parts = eng.into_warm_parts();
+                let mapping = parts.mapping.clone();
+                scratch.warm = Some(parts);
+                (mapping, j0, j, stats)
+            } else {
+                let (mapping, gamma) = eng.into_parts();
+                scratch.gamma = gamma;
+                (mapping, j0, j, stats)
+            }
         }
         GainMode::SlowDense => {
             let mut eng = match scratch.dense.take() {

@@ -5,8 +5,9 @@
 //! [`crate::api::MapJob`] (`MapJob::from_request`), runs it in a session,
 //! and answers with [`MapResponse::from_report`].
 
+use super::session_cache::SessionKey;
 use crate::api::RepStat;
-use crate::graph::Graph;
+use crate::graph::{EdgeDelta, Graph};
 use crate::mapping::algorithms::AlgorithmSpec;
 use crate::mapping::refine::SearchStats;
 use crate::model::topology::Machine;
@@ -71,6 +72,29 @@ impl MapRequest {
     }
 }
 
+/// An incremental re-mapping job (`REMAP` on the wire): apply an edge-delta
+/// batch to a previously mapped instance and re-optimize from its warm
+/// session instead of rebuilding from scratch. The wire layer resolves the
+/// client's referenced response id to a [`SessionKey`] per connection; the
+/// coordinator checks the warm session out under that key, patches and
+/// re-searches it ([`crate::api::MapSession::remap`]), and checks it back
+/// in under the *updated* graph's key.
+#[derive(Debug, Clone)]
+pub struct RemapRequest {
+    /// Client-chosen id, echoed in the response (and registered for
+    /// further chained `REMAP`s on the same connection).
+    pub id: u64,
+    /// Edge-weight updates and insertions, applied sequentially
+    /// ([`crate::graph::Graph::apply_deltas`]).
+    pub deltas: Vec<EdgeDelta>,
+    /// Optional thread-budget override (wire token `threads=`); `None`
+    /// keeps the warm session's current budget.
+    pub threads: Option<usize>,
+    /// Optional wall-clock budget in milliseconds, measured from admission
+    /// — exactly the `MAP` semantics.
+    pub deadline_ms: Option<u64>,
+}
+
 /// The coordinator's answer.
 #[derive(Debug, Clone)]
 pub struct MapResponse {
@@ -107,6 +131,12 @@ pub struct MapResponse {
     pub reps: Vec<RepStat>,
     /// Error message if the job failed (other fields zeroed).
     pub error: Option<String>,
+    /// Server-internal: the session-cache key the answering warm session
+    /// was checked in under (`None` for errors, uncacheable instances, or
+    /// a disabled cache). The wire layer registers `id → key` per
+    /// connection so a later `REMAP` referencing this response finds its
+    /// session. Never crosses the wire.
+    pub session_key: Option<SessionKey>,
 }
 
 impl MapResponse {
@@ -128,6 +158,7 @@ impl MapResponse {
             cancelled: false,
             reps: Vec::new(),
             error: Some(error),
+            session_key: None,
         }
     }
 
@@ -166,6 +197,15 @@ impl MapResponse {
     /// True when this failure is a [`Self::unavailable`] refusal.
     pub fn is_unavailable(&self) -> bool {
         self.error.as_deref().is_some_and(|e| e.starts_with("unavailable: "))
+    }
+
+    /// The `REMAP`-specific refusal: the referenced warm session is no
+    /// longer cached (LRU-evicted, checked out by a concurrent job, or the
+    /// cache is disabled). Shares the retryable `unavailable:` prefix —
+    /// the sound retry is resubmitting the updated instance as a fresh
+    /// `MAP`.
+    pub fn session_not_cached(id: u64) -> MapResponse {
+        Self::failure(id, "unavailable: session not cached - resubmit as MAP".into())
     }
 
     /// True for every refusal a client may soundly retry: the job was

@@ -35,7 +35,10 @@ pub struct Metrics {
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
     cache_evictions: AtomicU64,
+    cache_rebuilds: AtomicU64,
     cache_entries: AtomicU64,
+    remaps_served: AtomicU64,
+    remap_delta_edges: AtomicU64,
     queue_depth: AtomicU64,
     queue_capacity: AtomicU64,
     connections_accepted: AtomicU64,
@@ -103,6 +106,23 @@ impl Metrics {
     /// A check-in evicted the least-recently-used warm session.
     pub fn on_cache_eviction(&self) {
         self.cache_evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A session-cache lookup found an entry whose fingerprint hint was
+    /// *disproved* on adoption (`MapSession::adopt_job` rejected the
+    /// instance): the key matched but the warm state answered for a
+    /// different instance, so a fresh session had to be built. A strict
+    /// subset of [`Self::on_cache_miss`] — misses with nothing cached do
+    /// not count here.
+    pub fn on_cache_rebuild(&self) {
+        self.cache_rebuilds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A `REMAP` was served (warm or fallback path), carrying this many
+    /// edge deltas.
+    pub fn on_remap(&self, delta_edges: u64) {
+        self.remaps_served.fetch_add(1, Ordering::Relaxed);
+        self.remap_delta_edges.fetch_add(delta_edges, Ordering::Relaxed);
     }
 
     /// Current number of warm sessions (gauge, set after each check-in).
@@ -177,7 +197,10 @@ impl Metrics {
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
+            cache_rebuilds: self.cache_rebuilds.load(Ordering::Relaxed),
             cache_entries: self.cache_entries.load(Ordering::Relaxed),
+            remaps_served: self.remaps_served.load(Ordering::Relaxed),
+            remap_delta_edges: self.remap_delta_edges.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             queue_capacity: self.queue_capacity.load(Ordering::Relaxed),
             connections_accepted: self.connections_accepted.load(Ordering::Relaxed),
@@ -238,8 +261,16 @@ pub struct MetricsSnapshot {
     pub cache_misses: u64,
     /// Warm sessions evicted by the LRU bound.
     pub cache_evictions: u64,
+    /// Cache lookups whose fingerprint hint was disproved on adoption
+    /// (key matched, instance didn't — a fresh session was built). Subset
+    /// of [`Self::cache_misses`].
+    pub cache_rebuilds: u64,
     /// Warm sessions currently cached (gauge).
     pub cache_entries: u64,
+    /// `REMAP` requests served (warm resume or fallback).
+    pub remaps_served: u64,
+    /// Total edge deltas carried by served `REMAP`s.
+    pub remap_delta_edges: u64,
     /// Jobs currently queued (gauge).
     pub queue_depth: u64,
     /// Job-queue capacity.
@@ -273,7 +304,8 @@ impl std::fmt::Display for MetricsSnapshot {
             f,
             "jobs: {} submitted, {} ok, {} failed, {} busy, {} expired, {} timed-out, \
              {} cancelled, {} panics | verify: {}/{} ok | \
-             cache: {} hit / {} miss ({} warm, {} evicted) | queue: {}/{} | \
+             cache: {} hit / {} miss ({} warm, {} evicted, {} rebuilt) | \
+             remap: {} served ({} delta edges) | queue: {}/{} | \
              conns: {} active ({} accepted, {} refused, {} idle-closed) | \
              latency mean {:.1} ms p50 {:.1} ms p99 {:.1} ms",
             self.jobs_submitted,
@@ -290,6 +322,9 @@ impl std::fmt::Display for MetricsSnapshot {
             self.cache_misses,
             self.cache_entries,
             self.cache_evictions,
+            self.cache_rebuilds,
+            self.remaps_served,
+            self.remap_delta_edges,
             self.queue_depth,
             self.queue_capacity,
             self.active_connections,
@@ -373,6 +408,22 @@ mod tests {
         assert_eq!(s.queue_depth, 5);
         assert_eq!(s.queue_capacity, 64);
         assert!((s.cache_hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn remap_and_rebuild_counters() {
+        let m = Metrics::new();
+        m.on_remap(5);
+        m.on_remap(0);
+        m.on_remap(12);
+        m.on_cache_rebuild();
+        let s = m.snapshot();
+        assert_eq!(s.remaps_served, 3);
+        assert_eq!(s.remap_delta_edges, 17);
+        assert_eq!(s.cache_rebuilds, 1);
+        let line = s.to_string();
+        assert!(line.contains("3 served (17 delta edges)"), "{line}");
+        assert!(line.contains("1 rebuilt"), "{line}");
     }
 
     #[test]

@@ -37,7 +37,7 @@ pub mod service;
 pub mod session_cache;
 pub mod wire;
 
-pub use job::{MapRequest, MapResponse};
+pub use job::{MapRequest, MapResponse, RemapRequest};
 pub use metrics::MetricsSnapshot;
 pub use service::Coordinator;
 pub use session_cache::{SessionCache, SessionKey};

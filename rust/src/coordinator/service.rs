@@ -26,7 +26,7 @@
 //! oracle/pair-set/`MlHierarchy` scratch intact, and checks the session
 //! back in afterwards.
 
-use super::job::{MapRequest, MapResponse};
+use super::job::{MapRequest, MapResponse, RemapRequest};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::session_cache::{Inserted, SessionCache, SessionKey};
 use crate::api::{MapJob, MapSession};
@@ -57,10 +57,29 @@ fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
-/// One queued job: the request, the response channel, the service timer
+/// A unit of work for the pool: a full mapping job, or an incremental
+/// remap referencing a cached warm session by key.
+pub(crate) enum Work {
+    Map(MapRequest),
+    /// The delta batch plus the session-cache key of the warm session it
+    /// targets (resolved by the wire layer from the client's referenced
+    /// response id).
+    Remap(RemapRequest, SessionKey),
+}
+
+impl Work {
+    fn id(&self) -> u64 {
+        match self {
+            Work::Map(r) => r.id,
+            Work::Remap(r, _) => r.id,
+        }
+    }
+}
+
+/// One queued job: the work item, the response channel, the service timer
 /// (started at admission, so `total_secs` includes queue wait) and the run
 /// control token (deadline + cancellation, also counted from admission).
-type QueueEntry = (MapRequest, Sender<MapResponse>, Timer, RunControl);
+type QueueEntry = (Work, Sender<MapResponse>, Timer, RunControl);
 
 struct Queue {
     jobs: Mutex<VecDeque<QueueEntry>>,
@@ -154,8 +173,35 @@ impl Coordinator {
         req: MapRequest,
         ctrl: RunControl,
     ) -> std::sync::mpsc::Receiver<MapResponse> {
+        self.submit_work(Work::Map(req), ctrl)
+    }
+
+    /// Submit an incremental remap targeting the warm session cached under
+    /// `key`; blocks while the queue is full, like [`Self::submit`]. The
+    /// wire layer resolves the client's referenced response id to the key;
+    /// library callers get it from a previous response's `session_key`.
+    pub fn submit_remap_with_control(
+        &self,
+        req: RemapRequest,
+        key: SessionKey,
+        ctrl: RunControl,
+    ) -> std::sync::mpsc::Receiver<MapResponse> {
+        self.submit_work(Work::Remap(req, key), ctrl)
+    }
+
+    /// Submit a remap and wait for the answer (deadline armed from the
+    /// request, as [`Self::submit`] does for `MAP`s).
+    pub fn submit_remap_blocking(&self, req: RemapRequest, key: SessionKey) -> MapResponse {
+        let id = req.id;
+        let ctrl = RunControl::from_deadline(req.deadline_ms);
+        self.submit_remap_with_control(req, key, ctrl).recv().unwrap_or_else(|_| {
+            MapResponse::failure(id, "worker dropped response channel".into())
+        })
+    }
+
+    fn submit_work(&self, work: Work, ctrl: RunControl) -> std::sync::mpsc::Receiver<MapResponse> {
         let (tx, rx) = std::sync::mpsc::channel();
-        if let Some(resp) = self.refuse(&req, &ctrl) {
+        if let Some(resp) = self.refuse(work.id(), &ctrl) {
             let _ = tx.send(resp);
             return rx;
         }
@@ -164,7 +210,7 @@ impl Coordinator {
         while jobs.len() >= self.queue.capacity {
             jobs = self.queue.not_full.wait(jobs).unwrap_or_else(|e| e.into_inner());
         }
-        jobs.push_back((req, tx, Timer::start(), ctrl));
+        jobs.push_back((work, tx, Timer::start(), ctrl));
         self.metrics.set_queue_depth(jobs.len());
         drop(jobs);
         self.queue.not_empty.notify_one();
@@ -187,17 +233,44 @@ impl Coordinator {
         req: MapRequest,
         ctrl: RunControl,
     ) -> Result<std::sync::mpsc::Receiver<MapResponse>, MapRequest> {
+        match self.try_submit_work(Work::Map(req), ctrl) {
+            Ok(rx) => Ok(rx),
+            Err(Work::Map(req)) => Err(req),
+            Err(Work::Remap(..)) => unreachable!("submitted a Map"),
+        }
+    }
+
+    /// Non-blocking remap admission (the wire layer answers `BUSY` on
+    /// refusal, exactly as for `MAP`).
+    pub fn try_submit_remap_with_control(
+        &self,
+        req: RemapRequest,
+        key: SessionKey,
+        ctrl: RunControl,
+    ) -> Result<std::sync::mpsc::Receiver<MapResponse>, RemapRequest> {
+        match self.try_submit_work(Work::Remap(req, key), ctrl) {
+            Ok(rx) => Ok(rx),
+            Err(Work::Remap(req, _)) => Err(req),
+            Err(Work::Map(_)) => unreachable!("submitted a Remap"),
+        }
+    }
+
+    fn try_submit_work(
+        &self,
+        work: Work,
+        ctrl: RunControl,
+    ) -> Result<std::sync::mpsc::Receiver<MapResponse>, Work> {
         let (tx, rx) = std::sync::mpsc::channel();
-        if let Some(resp) = self.refuse(&req, &ctrl) {
+        if let Some(resp) = self.refuse(work.id(), &ctrl) {
             let _ = tx.send(resp);
             return Ok(rx);
         }
         let mut jobs = relock(&self.queue.jobs);
         if jobs.len() >= self.queue.capacity {
-            return Err(req);
+            return Err(work);
         }
         self.metrics.on_submit();
-        jobs.push_back((req, tx, Timer::start(), ctrl));
+        jobs.push_back((work, tx, Timer::start(), ctrl));
         self.metrics.set_queue_depth(jobs.len());
         drop(jobs);
         self.queue.not_empty.notify_one();
@@ -210,13 +283,13 @@ impl Coordinator {
     /// worker on a job whose first deadline check would stop it anyway.
     /// Both refusals are retryable and answered through the normal response
     /// channel so every submit path reports them uniformly.
-    fn refuse(&self, req: &MapRequest, ctrl: &RunControl) -> Option<MapResponse> {
+    fn refuse(&self, id: u64, ctrl: &RunControl) -> Option<MapResponse> {
         if self.queue.draining.load(Ordering::Acquire) {
-            return Some(MapResponse::unavailable(req.id));
+            return Some(MapResponse::unavailable(id));
         }
         if ctrl.expired() {
             self.metrics.on_expired_rejection();
-            return Some(MapResponse::expired(req.id));
+            return Some(MapResponse::expired(id));
         }
         None
     }
@@ -259,8 +332,8 @@ impl Coordinator {
             if Instant::now() >= deadline {
                 // abort what never started; answer each client cleanly
                 let mut jobs = relock(&self.queue.jobs);
-                for (req, tx, _, _) in jobs.drain(..) {
-                    let _ = tx.send(MapResponse::unavailable(req.id));
+                for (work, tx, _, _) in jobs.drain(..) {
+                    let _ = tx.send(MapResponse::unavailable(work.id()));
                 }
                 self.metrics.set_queue_depth(0);
                 drop(jobs);
@@ -311,7 +384,7 @@ fn worker_loop(
     default_threads: usize,
 ) {
     loop {
-        let (req, tx, timer, ctrl) = {
+        let (work, tx, timer, ctrl) = {
             let mut jobs = relock(&queue.jobs);
             loop {
                 if let Some(job) = jobs.pop_front() {
@@ -328,12 +401,13 @@ fn worker_loop(
                 jobs = queue.not_empty.wait(jobs).unwrap_or_else(|e| e.into_inner());
             }
         };
+        let id = work.id();
         // the budget may have lapsed while the job sat in the queue: refuse
         // with the retryable EXPIRED rather than running a doomed search
         // (the anytime path would only hand back the construction mapping)
         if ctrl.expired() {
             metrics.on_expired_rejection();
-            let _ = tx.send(MapResponse::expired(req.id));
+            let _ = tx.send(MapResponse::expired(id));
             queue.active.fetch_sub(1, Ordering::AcqRel);
             continue;
         }
@@ -342,7 +416,20 @@ fn worker_loop(
         // answer the client with a plain error response
         let resp = catch_unwind(AssertUnwindSafe(|| {
             faults::hit("worker/start");
-            process_job(&req, runtime.as_ref(), &metrics, &cache, &timer, default_threads, &ctrl)
+            match &work {
+                Work::Map(req) => process_job(
+                    req,
+                    runtime.as_ref(),
+                    &metrics,
+                    &cache,
+                    &timer,
+                    default_threads,
+                    &ctrl,
+                ),
+                Work::Remap(req, key) => {
+                    process_remap(req, key, runtime.as_ref(), &metrics, &cache, &timer, &ctrl)
+                }
+            }
         }))
         .unwrap_or_else(|panic| {
             metrics.on_worker_panic();
@@ -351,7 +438,7 @@ fn worker_loop(
                 .map(|s| s.to_string())
                 .or_else(|| panic.downcast_ref::<String>().cloned())
                 .unwrap_or_else(|| "unknown panic".into());
-            MapResponse::failure(req.id, format!("worker panicked: {msg}"))
+            MapResponse::failure(id, format!("worker panicked: {msg}"))
         });
         queue.active.fetch_sub(1, Ordering::AcqRel);
         let failed = resp.error.is_some();
@@ -401,15 +488,89 @@ fn process_job(
     if let Some(ok) = report.verified {
         metrics.on_verification(ok);
     }
+    let mut checked_in = None;
     if let Some(key) = key {
         faults::hit("cache/checkin");
         let mut cache = relock(cache);
-        if cache.insert(key, session) == Inserted::Evicted {
+        let stored = cache.insert(key.clone(), session);
+        if stored == Inserted::Evicted {
             metrics.on_cache_eviction();
         }
         metrics.set_cache_entries(cache.len());
+        if stored != Inserted::Dropped {
+            checked_in = Some(key);
+        }
     }
-    MapResponse::from_report(req.id, report, timer.secs())
+    let mut resp = MapResponse::from_report(req.id, report, timer.secs());
+    // expose the checkin key so the wire layer can register this response's
+    // id for REMAPs (a dropped insert exposes nothing — there is no warm
+    // session a remap could find)
+    resp.session_key = checked_in;
+    resp
+}
+
+/// Run one incremental remap: check the warm session out under `key`,
+/// apply the delta batch and resume the search
+/// ([`crate::api::MapSession::remap`] — warm gain-cache resume when
+/// possible, full refine or cold run otherwise), then check the session
+/// back in under the *updated* graph's key (`old fingerprint ⊞ fp_delta`,
+/// the incremental-fingerprint contract). A missing session answers the
+/// retryable `unavailable: session not cached`; an invalid batch returns
+/// the error with the untouched session re-cached under its old key.
+fn process_remap(
+    req: &RemapRequest,
+    key: &SessionKey,
+    runtime: Option<&RuntimeHandle>,
+    metrics: &Metrics,
+    cache: &Mutex<SessionCache>,
+    timer: &Timer,
+    ctrl: &RunControl,
+) -> MapResponse {
+    let Some(mut session) = relock(cache).take(key) else {
+        return MapResponse::session_not_cached(req.id);
+    };
+    session.set_runtime(runtime.cloned());
+    session.set_control(ctrl.clone());
+    if let Some(threads) = req.threads {
+        session.set_threads(threads);
+    }
+    match session.remap(&req.deltas) {
+        Ok(outcome) => {
+            let new_key = SessionKey {
+                fingerprint: key.fingerprint.wrapping_add(outcome.fp_delta),
+                machine: key.machine.clone(),
+                algorithm: key.algorithm.clone(),
+            };
+            debug_assert_eq!(
+                new_key.fingerprint,
+                session.job().comm().fingerprint(),
+                "incremental fingerprint diverged from recompute"
+            );
+            faults::hit("cache/checkin");
+            let checked_in = {
+                let mut cache = relock(cache);
+                let stored = cache.insert(new_key.clone(), session);
+                if stored == Inserted::Evicted {
+                    metrics.on_cache_eviction();
+                }
+                metrics.set_cache_entries(cache.len());
+                stored != Inserted::Dropped
+            };
+            metrics.on_remap(outcome.delta_edges);
+            let mut resp = MapResponse::from_report(req.id, outcome.report, timer.secs());
+            resp.session_key = checked_in.then_some(new_key);
+            resp
+        }
+        Err(e) => {
+            // atomic rejection: the graph and warm state are untouched, so
+            // the session stays valid under its old key
+            let mut cache = relock(cache);
+            let _ = cache.insert(key.clone(), session);
+            metrics.set_cache_entries(cache.len());
+            drop(cache);
+            MapResponse::failure(req.id, e)
+        }
+    }
 }
 
 /// Try to check a warm session out of the cache and adopt `job` into it.
@@ -432,7 +593,10 @@ fn checkout_session(
                 Ok(session)
             }
             Err(job) => {
+                // the fingerprint hint was disproved: a full rebuild is the
+                // price of degrading collisions to misses, so count it
                 metrics.on_cache_miss();
+                metrics.on_cache_rebuild();
                 Err(job)
             }
         },
@@ -693,5 +857,126 @@ mod tests {
         assert!(coord.drain(Duration::from_secs(60)));
         let resp = rx.recv().unwrap();
         assert!(resp.error.is_none(), "{:?}", resp.error);
+    }
+
+    fn remap_request(id: u64, deltas: &[(u32, u32, u64)]) -> super::RemapRequest {
+        super::RemapRequest {
+            id,
+            deltas: deltas.iter().map(|&(u, v, w)| crate::graph::EdgeDelta { u, v, w }).collect(),
+            threads: None,
+            deadline_ms: None,
+        }
+    }
+
+    #[test]
+    fn empty_remap_is_a_bit_identical_noop() {
+        let coord = Coordinator::start(1, 8, None);
+        let first = coord.submit_blocking(request(1, "mm+gc:nc1", 1));
+        assert!(first.error.is_none(), "{:?}", first.error);
+        let key = first.session_key.clone().expect("cacheable job exposes its key");
+        let resp = coord.submit_remap_blocking(remap_request(2, &[]), key);
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.sigma, first.sigma, "empty delta batch must not move anything");
+        assert_eq!(resp.objective, first.objective);
+        assert_eq!(resp.stats.evaluated, 0, "nothing to re-seed");
+        // the key is unchanged (fp_delta = 0) and re-registered
+        assert_eq!(resp.session_key, first.session_key);
+        let snap = coord.metrics();
+        assert_eq!(snap.remaps_served, 1);
+        assert_eq!(snap.remap_delta_edges, 0);
+    }
+
+    #[test]
+    fn remap_patches_rekeys_and_chains() {
+        let coord = Coordinator::start(1, 8, None);
+        let req = request(1, "mm+gc:nc1", 1);
+        let comm = req.comm.clone();
+        let machine = req.machine.clone();
+        let first = coord.submit_blocking(req);
+        assert!(first.error.is_none(), "{:?}", first.error);
+        let key = first.session_key.clone().unwrap();
+
+        // drift two existing edge weights
+        let (u1, v1) = (0u32, comm.neighbors(0)[0]);
+        let (u2, v2) = (5u32, comm.neighbors(5)[0]);
+        let deltas = [(u1, v1, comm.edge_weight(u1, v1).unwrap() + 9), (u2, v2, 0)];
+        let resp = coord.submit_remap_blocking(remap_request(2, &deltas), key.clone());
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        let new_key = resp.session_key.clone().expect("remap re-registers the session");
+        assert_ne!(new_key.fingerprint, key.fingerprint, "weight drift changes the graph");
+
+        // the answer is exact on the *updated* graph
+        let mut g2 = comm.clone();
+        g2.apply_deltas(&remap_request(0, &deltas).deltas).unwrap();
+        let mapping = Mapping { sigma: resp.sigma.clone() };
+        mapping.validate().unwrap();
+        assert_eq!(
+            resp.objective,
+            crate::mapping::objective::objective(&g2, &machine, &mapping)
+        );
+        assert_eq!(new_key.fingerprint, g2.fingerprint());
+
+        // chained remap against the new key works (the session re-armed)
+        let resp2 = coord.submit_remap_blocking(remap_request(3, &[]), new_key);
+        assert!(resp2.error.is_none(), "{:?}", resp2.error);
+        assert_eq!(resp2.sigma, resp.sigma);
+        let snap = coord.metrics();
+        assert_eq!(snap.remaps_served, 2);
+        assert_eq!(snap.remap_delta_edges, 2);
+    }
+
+    #[test]
+    fn remap_against_unknown_key_is_retryably_unavailable() {
+        let coord = Coordinator::start(1, 8, None);
+        let key = SessionKey {
+            fingerprint: 0xdead_beef,
+            machine: "grid:128@1".into(),
+            algorithm: "mm+gc:nc1".into(),
+        };
+        let resp = coord.submit_remap_blocking(remap_request(1, &[]), key);
+        assert!(resp.is_unavailable(), "{:?}", resp.error);
+        assert!(resp.is_retryable());
+        assert_eq!(coord.metrics().remaps_served, 0);
+    }
+
+    #[test]
+    fn invalid_remap_batch_keeps_the_session_cached() {
+        let coord = Coordinator::start(1, 8, None);
+        let first = coord.submit_blocking(request(1, "mm+gc:nc1", 1));
+        let key = first.session_key.clone().unwrap();
+        // self-loop: rejected atomically, session checked back in untouched
+        let bad = coord.submit_remap_blocking(remap_request(2, &[(3, 3, 7)]), key.clone());
+        assert!(bad.error.is_some());
+        assert!(!bad.is_retryable(), "a malformed batch is not retryable");
+        let ok = coord.submit_remap_blocking(remap_request(3, &[]), key);
+        assert!(ok.error.is_none(), "{:?}", ok.error);
+        assert_eq!(ok.sigma, first.sigma);
+    }
+
+    #[test]
+    fn disproved_fingerprint_hint_counts_a_rebuild() {
+        // craft an adopt-rejection directly: same key, different instance
+        // (oracle mode is part of the instance tuple but not of the key)
+        let metrics = Metrics::new();
+        let cache = Mutex::new(SessionCache::new(4));
+        let mut rng = Rng::new(1);
+        let comm = random_geometric_graph(128, &mut rng);
+        let machine = Machine::Hier(Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap());
+        let build = |mode| {
+            crate::api::MapJobBuilder::for_machine(comm.clone(), machine.clone())
+                .algorithm_name("mm")
+                .unwrap()
+                .oracle_mode(mode)
+                .build()
+                .unwrap()
+        };
+        let implicit = build(crate::api::OracleMode::Implicit);
+        let key = SessionKey::new(implicit.comm(), implicit.machine(), implicit.algorithm());
+        relock(&cache).insert(key.clone().unwrap(), MapSession::new(implicit));
+        let explicit = build(crate::api::OracleMode::Explicit);
+        assert!(checkout_session(&cache, key.as_ref(), &metrics, explicit).is_err());
+        let snap = metrics.snapshot();
+        assert_eq!(snap.cache_misses, 1);
+        assert_eq!(snap.cache_rebuilds, 1, "adopt mismatch is a counted rebuild");
     }
 }

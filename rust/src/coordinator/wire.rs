@@ -26,6 +26,11 @@
 //!   or:  BUSY <id> <queue_depth> <queue_capacity>
 //!   or:  EXPIRED <id>
 //!
+//! C->S:  REMAP v1 <id> <k> [threads=<t>] [deadline_ms=<ms>]
+//!        <u> <v> <w>          (≤ k delta lines: new weight of edge {u,v})
+//!        END
+//! S->C:  same frames as MAP (OK / ERR / BUSY / EXPIRED)
+//!
 //! C->S:  PING [token]         S->C:  PONG [token]
 //! C->S:  STATS                S->C:  STATS key=value ...
 //! C->S:  QUIT                 S->C:  BYE            (then close)
@@ -73,8 +78,27 @@
 //! ([`ServeConfig::max_connections`]); refused connections get a one-line
 //! `ERR` and are counted in the metrics.
 //!
+//! **Incremental remapping (REMAP).** A `REMAP` frame references an
+//! earlier response *by its id* on the same connection and carries an
+//! edge-delta batch (`<u> <v> <w>` sets the weight of edge `{u, v}` — a
+//! new weight for an existing edge, an insert when absent, `0` to mute
+//! it). The server keeps a per-connection `id → session-cache key` map:
+//! every successful response that checked a warm session in registers its
+//! id, and a `REMAP` on that id checks the session out, patches graph,
+//! objective and gain structures in `O(|Δ|)`, re-optimizes warm
+//! ([`crate::api::MapSession::remap`]), and re-registers the same id
+//! under the *updated* graph's key — so chained remaps keep using one id.
+//! A well-formed `REMAP` whose id is unknown on this connection (never
+//! mapped, response not yet sent, or the session fell out of the LRU)
+//! answers a retryable `unavailable:` `ERR` and keeps the connection —
+//! the sound retry is resubmitting the updated instance as a fresh `MAP`.
+//! `threads=`/`deadline_ms=` mean exactly what they mean on `MAP`; an
+//! absent `threads=` keeps the warm session's current budget.
+//!
 //! **Input bounding.** Every line read is capped at [`MAX_LINE_BYTES`];
-//! the declared graph sizes are capped at [`MAX_WIRE_N`]/[`MAX_WIRE_M`],
+//! the declared graph sizes are capped at [`MAX_WIRE_N`]/[`MAX_WIRE_M`]
+//! (a `REMAP`'s declared `k` at [`MAX_WIRE_M`], its delta endpoints at
+//! [`MAX_WIRE_N`] — the session's own `n` is enforced worker-side),
 //! edge lines may not exceed the declared `m`, and edge endpoints must lie
 //! in `0..n` — a malformed or hostile request gets a clean `ERR` (echoing
 //! the request id whenever the header parsed that far) instead of
@@ -91,20 +115,22 @@
 //! messages are newline-escaped (`\n` → `\\n`) so multi-line failures
 //! round-trip.
 
-use super::job::{MapRequest, MapResponse};
+use super::job::{MapRequest, MapResponse, RemapRequest};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::service::Coordinator;
+use super::session_cache::SessionKey;
 use crate::api::{LevelStat, RepStat};
-use crate::graph::{Builder, NodeId};
+use crate::graph::{Builder, EdgeDelta, NodeId};
 use crate::mapping::algorithms::AlgorithmSpec;
 use crate::model::topology::Machine;
 use crate::util::{CancelToken, Rng, RunControl};
 use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Hard cap on any single wire line (header, edge, verb, response frame).
@@ -327,6 +353,96 @@ pub fn read_request<R: BufRead>(r: &mut R) -> Result<MapRequest> {
         bail!("connection closed before header");
     }
     parse_map(&header, r).map_err(|e| e.error)
+}
+
+/// Serialize an incremental re-mapping request (`REMAP` frame). The id
+/// must reference an earlier successful response on the same connection
+/// (see the module docs on incremental remapping).
+pub fn write_remap<W: Write>(w: &mut W, req: &RemapRequest) -> Result<()> {
+    write!(w, "REMAP v1 {} {}", req.id, req.deltas.len())?;
+    if let Some(threads) = req.threads {
+        write!(w, " threads={threads}")?;
+    }
+    if let Some(ms) = req.deadline_ms {
+        write!(w, " deadline_ms={ms}")?;
+    }
+    writeln!(w)?;
+    for d in &req.deltas {
+        writeln!(w, "{} {} {}", d.u, d.v, d.w)?;
+    }
+    writeln!(w, "END")?;
+    Ok(())
+}
+
+/// Parse a `REMAP` request given its already-read header line (the
+/// serving loop dispatches on the first token before coming here).
+fn parse_remap<R: BufRead>(
+    header: &str,
+    r: &mut R,
+) -> std::result::Result<RemapRequest, RequestError> {
+    let toks: Vec<&str> = header.split_whitespace().collect();
+    if toks.len() < 4 || toks[0] != "REMAP" || toks[1] != "v1" {
+        return Err(RequestError { id: 0, error: anyhow!("bad REMAP header: {header:?}") });
+    }
+    let id: u64 = match toks[2].parse() {
+        Ok(id) => id,
+        Err(_) => {
+            return Err(RequestError { id: 0, error: anyhow!("bad request id {:?}", toks[2]) })
+        }
+    };
+    parse_remap_body(id, &toks, r).map_err(|error| RequestError { id, error })
+}
+
+fn parse_remap_body<R: BufRead>(id: u64, toks: &[&str], r: &mut R) -> Result<RemapRequest> {
+    let mut threads: Option<usize> = None;
+    let mut deadline_ms: Option<u64> = None;
+    for tok in &toks[4..] {
+        let (key, value) = tok.split_once('=').ok_or_else(|| anyhow!("bad job option {tok:?}"))?;
+        match key {
+            "deadline_ms" => deadline_ms = Some(value.parse()?),
+            "threads" => {
+                let t: usize = value.parse()?;
+                if t > crate::util::MAX_THREADS {
+                    bail!("threads={t} exceeds limit {}", crate::util::MAX_THREADS);
+                }
+                threads = Some(t);
+            }
+            other => bail!("unknown job option {other:?}"),
+        }
+    }
+    let k: usize = toks[3].parse()?;
+    if k > MAX_WIRE_M {
+        bail!("declared k {k} exceeds wire limit {MAX_WIRE_M}");
+    }
+    // endpoints are bounded by the wire-wide vertex cap here; the session's
+    // actual n is only known worker-side, where the delta batch is
+    // re-validated (and rejected atomically) against the cached graph
+    let mut deltas = Vec::with_capacity(k.min(1 << 16));
+    let mut line = String::new();
+    loop {
+        if read_capped_line(r, &mut line)? == 0 {
+            bail!("connection closed before END");
+        }
+        let t = line.trim();
+        if t == "END" {
+            break;
+        }
+        if deltas.len() >= k {
+            bail!("more than the declared k = {k} delta lines");
+        }
+        let mut it = t.split_whitespace();
+        let (u, v, w) = (
+            it.next().ok_or_else(|| anyhow!("bad delta line {t:?}"))?,
+            it.next().ok_or_else(|| anyhow!("bad delta line {t:?}"))?,
+            it.next().ok_or_else(|| anyhow!("bad delta line {t:?}"))?,
+        );
+        let (u, v): (NodeId, NodeId) = (u.parse()?, v.parse()?);
+        if u as usize >= MAX_WIRE_N || v as usize >= MAX_WIRE_N {
+            bail!("delta endpoint out of range in {t:?} (wire limit {MAX_WIRE_N})");
+        }
+        deltas.push(EdgeDelta { u, v, w: w.parse()? });
+    }
+    Ok(RemapRequest { id, deltas, threads, deadline_ms })
 }
 
 /// Escape an error message for the single-line `ERR` frame (`\r` too —
@@ -574,6 +690,7 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<MapResponse> {
                 reps,
                 sigma,
                 error: None,
+                session_key: None,
             })
         }
         _ => bail!("bad response line: {line:?}"),
@@ -589,7 +706,9 @@ pub fn stats_line(s: &MetricsSnapshot) -> String {
          jobs_expired={} jobs_timed_out={} jobs_cancelled={} \
          worker_panics={} \
          verifications={} verification_mismatches={} cache_hits={} cache_misses={} \
-         cache_evictions={} cache_entries={} queue_depth={} queue_capacity={} \
+         cache_evictions={} cache_entries={} cache_rebuilds={} \
+         remaps_served={} remap_delta_edges={} \
+         queue_depth={} queue_capacity={} \
          connections_accepted={} connections_refused={} active_connections={} \
          idle_disconnects={} \
          mean_latency_secs={} p50_latency_secs={} p99_latency_secs={}\n",
@@ -607,6 +726,9 @@ pub fn stats_line(s: &MetricsSnapshot) -> String {
         s.cache_misses,
         s.cache_evictions,
         s.cache_entries,
+        s.cache_rebuilds,
+        s.remaps_served,
+        s.remap_delta_edges,
         s.queue_depth,
         s.queue_capacity,
         s.connections_accepted,
@@ -644,6 +766,9 @@ pub fn parse_stats_line(line: &str) -> Result<MetricsSnapshot> {
             "cache_misses" => s.cache_misses = value.parse()?,
             "cache_evictions" => s.cache_evictions = value.parse()?,
             "cache_entries" => s.cache_entries = value.parse()?,
+            "cache_rebuilds" => s.cache_rebuilds = value.parse()?,
+            "remaps_served" => s.remaps_served = value.parse()?,
+            "remap_delta_edges" => s.remap_delta_edges = value.parse()?,
             "queue_depth" => s.queue_depth = value.parse()?,
             "queue_capacity" => s.queue_capacity = value.parse()?,
             "connections_accepted" => s.connections_accepted = value.parse()?,
@@ -799,8 +924,14 @@ fn handle_connection(
     let cancel = CancelToken::new();
     let mut reader = BufReader::new(stream.try_clone()?);
     let (tx, rx) = sync_channel::<Reply>(cfg.inflight_per_connection.max(1));
+    // id → session-cache key for this connection's REMAPs: the writer
+    // registers each successful response's key as it goes out (so a
+    // pipelined REMAP can only reference a response the client could have
+    // seen), the reader resolves REMAP ids against it
+    let sessions: Arc<Mutex<HashMap<u64, SessionKey>>> = Arc::default();
     let writer = {
         let cancel = cancel.clone();
+        let sessions = Arc::clone(&sessions);
         std::thread::spawn(move || -> Result<()> {
             let mut w = BufWriter::new(stream);
             for reply in rx {
@@ -811,6 +942,22 @@ fn handle_connection(
                             let resp = done.recv().unwrap_or_else(|_| {
                                 MapResponse::failure(0, "worker hung up".into())
                             });
+                            // success re-registers (or, when the session
+                            // went uncached, retires) the id; failures
+                            // leave the registry alone — a rejected delta
+                            // batch re-checks the session in under its
+                            // *old* key, which stays valid
+                            if resp.error.is_none() {
+                                let mut reg = sessions.lock().unwrap();
+                                match resp.session_key.clone() {
+                                    Some(key) => {
+                                        reg.insert(resp.id, key);
+                                    }
+                                    None => {
+                                        reg.remove(&resp.id);
+                                    }
+                                }
+                            }
                             write_response(&mut w, &resp)?;
                         }
                     }
@@ -935,6 +1082,58 @@ fn handle_connection(
                     }
                 }
             }
+            "REMAP" => {
+                let _ = reader.get_ref().set_read_timeout(Some(body_timeout));
+                let parsed = parse_remap(trimmed, &mut reader);
+                let _ =
+                    reader.get_ref().set_read_timeout(Some(Duration::from_millis(READ_TICK_MS)));
+                match parsed {
+                    Ok(req) => {
+                        let id = req.id;
+                        let key = sessions.lock().unwrap().get(&id).cloned();
+                        let Some(key) = key else {
+                            // the frame was fully consumed, so framing is
+                            // intact: answer the retryable refusal and keep
+                            // the connection (the id was never mapped here,
+                            // or its response has not been sent yet)
+                            let refusal = err_reply(
+                                id,
+                                "unavailable: no session registered for this id - \
+                                 map it first and drain its response",
+                            );
+                            if tx.send(refusal).is_err() {
+                                break;
+                            }
+                            continue;
+                        };
+                        let ctrl = RunControl::with_parts(req.deadline_ms, cancel.clone());
+                        match coord.try_submit_remap_with_control(req, key, ctrl) {
+                            Ok(done) => {
+                                if tx.send(Reply::Job(done)).is_err() {
+                                    break;
+                                }
+                            }
+                            Err(_refused) => {
+                                coord.metrics_sink().on_busy_rejection();
+                                let busy = format!(
+                                    "BUSY {id} {} {}\n",
+                                    coord.queue_depth(),
+                                    coord.queue_capacity()
+                                );
+                                if tx.send(Reply::Raw(busy)).is_err() {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        // framing is lost after a bad REMAP body: same
+                        // answer-and-close policy as a bad MAP
+                        let _ = tx.send(err_reply(e.id, &format!("protocol error: {:#}", e.error)));
+                        break;
+                    }
+                }
+            }
             other => {
                 let _ = tx.send(err_reply(0, &format!("protocol error: unknown verb {other:?}")));
                 break;
@@ -991,6 +1190,24 @@ impl Client {
     /// One request, one response.
     pub fn map(&mut self, req: &MapRequest) -> Result<MapResponse> {
         self.send(req)?;
+        self.recv()
+    }
+
+    /// Queue one incremental re-mapping request (`REMAP`) without waiting
+    /// for its response.
+    pub fn send_remap(&mut self, req: &RemapRequest) -> Result<()> {
+        write_remap(&mut self.writer, req)?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// One `REMAP`, one response. `req.id` must reference an earlier
+    /// successful response *on this connection* (the server tracks
+    /// id → warm session per connection); chained remaps keep reusing the
+    /// same id. An unknown or evicted session answers a retryable
+    /// `unavailable:` failure — resubmit the updated instance as a `MAP`.
+    pub fn remap(&mut self, req: &RemapRequest) -> Result<MapResponse> {
+        self.send_remap(req)?;
         self.recv()
     }
 
@@ -1364,6 +1581,7 @@ mod tests {
             cancelled: false,
             reps: reps.clone(),
             error: None,
+            session_key: None,
         };
         let mut buf = Vec::new();
         write_response(&mut buf, &resp).unwrap();
@@ -1400,6 +1618,7 @@ mod tests {
             cancelled: false,
             reps: Vec::new(),
             error: None,
+            session_key: None,
         };
         let mut buf = Vec::new();
         write_response(&mut buf, &resp).unwrap();
@@ -1449,6 +1668,9 @@ mod tests {
             cache_misses: 2,
             cache_evictions: 1,
             cache_entries: 1,
+            cache_rebuilds: 1,
+            remaps_served: 5,
+            remap_delta_edges: 9,
             queue_depth: 4,
             queue_capacity: 16,
             connections_accepted: 5,
@@ -1746,6 +1968,7 @@ mod tests {
             cancelled: false,
             reps: vec![rep],
             error: None,
+            session_key: None,
         };
         let mut buf = Vec::new();
         write_response(&mut buf, &resp).unwrap();
@@ -1891,6 +2114,150 @@ mod tests {
         assert!(resp.is_expired(), "{:?}", resp.error);
         let stats = client.stats().unwrap();
         assert_eq!(stats.jobs_expired, 1);
+        client.quit().unwrap();
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap().unwrap();
+    }
+
+    fn remap_frame(id: u64, deltas: &[(u32, u32, u64)]) -> RemapRequest {
+        RemapRequest {
+            id,
+            deltas: deltas.iter().map(|&(u, v, w)| EdgeDelta { u, v, w }).collect(),
+            threads: None,
+            deadline_ms: None,
+        }
+    }
+
+    #[test]
+    fn remap_request_roundtrip() {
+        let mut req = remap_frame(7, &[(0, 1, 5), (2, 3, 0)]);
+        req.threads = Some(2);
+        req.deadline_ms = Some(500);
+        let mut buf = Vec::new();
+        write_remap(&mut buf, &req).unwrap();
+        let text = std::str::from_utf8(&buf).unwrap();
+        assert!(text.starts_with("REMAP v1 7 2 threads=2 deadline_ms=500\n"), "{text}");
+        assert!(text.ends_with("END\n"), "{text}");
+        let mut r = BufReader::new(&buf[..]);
+        let mut header = String::new();
+        read_capped_line(&mut r, &mut header).unwrap();
+        let back = parse_remap(header.trim(), &mut r)
+            .map_err(|e| e.error)
+            .unwrap();
+        assert_eq!(back.id, 7);
+        assert_eq!(back.deltas.len(), 2);
+        assert_eq!((back.deltas[1].u, back.deltas[1].v, back.deltas[1].w), (2, 3, 0));
+        assert_eq!(back.threads, Some(2));
+        assert_eq!(back.deadline_ms, Some(500));
+    }
+
+    #[test]
+    fn malformed_remap_frames_rejected() {
+        let cases = [
+            // oversized declared k: checked before any buffer is sized
+            (format!("REMAP v1 1 {}\nEND\n", MAX_WIRE_M + 1), "exceeds wire limit"),
+            // endpoint beyond the wire-wide vertex cap
+            (format!("REMAP v1 1 1\n0 {} 1\nEND\n", MAX_WIRE_N), "out of range"),
+            // more delta lines than declared
+            ("REMAP v1 1 1\n0 1 1\n2 3 1\nEND\n".to_string(), "declared k"),
+            // unknown option keys are rejected, like MAP
+            ("REMAP v1 1 0 frobnicate=1\nEND\n".to_string(), "unknown job option"),
+            // truncated delta line
+            ("REMAP v1 1 1\n0 1\nEND\n".to_string(), "bad delta line"),
+            // unparsable id is reported as such (echoed as id 0)
+            ("REMAP v1 x 0\nEND\n".to_string(), "request id"),
+        ];
+        for (bad, why) in &cases {
+            let mut r = BufReader::new(bad.as_bytes());
+            let mut header = String::new();
+            read_capped_line(&mut r, &mut header).unwrap();
+            let err = parse_remap(header.trim(), &mut r).map(|_| ()).unwrap_err();
+            assert!(
+                format!("{:#}", err.error).contains(why),
+                "{bad:?} should fail with {why:?}, got: {:#}",
+                err.error
+            );
+        }
+    }
+
+    #[test]
+    fn tcp_remap_noop_is_bit_identical_then_drift_rekeys() {
+        let coord = Arc::new(Coordinator::start(1, 8, None));
+        let (addr, stop, server) = spawn_server(Arc::clone(&coord), ServeConfig::default());
+        let mut client = Client::connect(addr).unwrap();
+        let mut req = sample_request();
+        req.algorithm = AlgorithmSpec::parse("mm+gc:nc1").unwrap();
+        req.repetitions = 1; // warm-eligible: the remap resumes the gain cache
+        let base = client.map(&req).unwrap();
+        assert!(base.error.is_none(), "{:?}", base.error);
+
+        // an empty delta batch is a bit-identical no-op on the warm session
+        let noop = client.remap(&remap_frame(42, &[])).unwrap();
+        assert!(noop.error.is_none(), "{:?}", noop.error);
+        assert_eq!(noop.sigma, base.sigma);
+        assert_eq!(noop.objective, base.objective);
+        assert_eq!(noop.stats.evaluated, 0, "nothing to re-seed");
+
+        // drift one existing edge's weight; the same id chains because the
+        // server re-registered it under the updated graph's key
+        let (u, v) = (0u32, req.comm.neighbors(0)[0]);
+        let w = req.comm.edge_weight(u, v).unwrap() + 7;
+        let resp = client.remap(&remap_frame(42, &[(u, v, w)])).unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+
+        // the answer is exact on the *updated* graph
+        let mut g2 = req.comm.clone();
+        g2.apply_deltas(&[EdgeDelta { u, v, w }]).unwrap();
+        let mapping = crate::mapping::objective::Mapping { sigma: resp.sigma.clone() };
+        mapping.validate().unwrap();
+        assert_eq!(
+            resp.objective,
+            crate::mapping::objective::objective(&g2, &req.machine, &mapping)
+        );
+
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.remaps_served, 2);
+        assert_eq!(stats.remap_delta_edges, 1);
+        client.quit().unwrap();
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn tcp_remap_unknown_id_keeps_the_connection() {
+        let coord = Arc::new(Coordinator::start(1, 4, None));
+        let (addr, stop, server) = spawn_server(Arc::clone(&coord), ServeConfig::default());
+        let mut client = Client::connect(addr).unwrap();
+        let resp = client.remap(&remap_frame(9, &[])).unwrap();
+        assert_eq!(resp.id, 9);
+        assert!(resp.is_unavailable() && resp.is_retryable(), "{:?}", resp.error);
+        // the frame was well-formed, so the connection survives the refusal
+        assert_eq!(client.ping("still-here").unwrap(), "still-here");
+        client.quit().unwrap();
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn tcp_remap_endpoint_beyond_session_n_is_a_worker_error() {
+        // parseable frame (endpoint under the wire cap) whose endpoint
+        // exceeds the referenced session's n: rejected atomically by the
+        // worker, the session stays cached under its old key
+        let coord = Arc::new(Coordinator::start(1, 8, None));
+        let (addr, stop, server) = spawn_server(Arc::clone(&coord), ServeConfig::default());
+        let mut client = Client::connect(addr).unwrap();
+        let mut req = sample_request();
+        req.algorithm = AlgorithmSpec::parse("mm+gc:nc1").unwrap();
+        req.repetitions = 1;
+        let base = client.map(&req).unwrap();
+        assert!(base.error.is_none(), "{:?}", base.error);
+        let bad = client.remap(&remap_frame(42, &[(0, 500, 1)])).unwrap();
+        assert!(bad.error.as_deref().unwrap().contains("out of range"), "{:?}", bad.error);
+        assert!(!bad.is_retryable(), "a rejected batch is a client bug, not a transient");
+        // the rejection was atomic: the old registration still answers
+        let ok = client.remap(&remap_frame(42, &[])).unwrap();
+        assert!(ok.error.is_none(), "{:?}", ok.error);
+        assert_eq!(ok.sigma, base.sigma);
         client.quit().unwrap();
         stop.store(true, Ordering::Relaxed);
         server.join().unwrap().unwrap();

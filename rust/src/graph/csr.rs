@@ -169,6 +169,197 @@ impl Graph {
     pub fn csr_parts(&self) -> (&[u32], &[NodeId], &[Weight], &[Weight]) {
         (&self.xadj, &self.adjncy, &self.adjwgt, &self.vwgt)
     }
+
+    /// Index into `adjncy`/`adjwgt` of the directed slot `u -> v`, if the
+    /// edge exists (binary search — rows are strictly sorted).
+    fn slot(&self, u: NodeId, v: NodeId) -> Option<usize> {
+        let lo = self.xadj[u as usize] as usize;
+        let hi = self.xadj[u as usize + 1] as usize;
+        self.adjncy[lo..hi].binary_search(&v).ok().map(|i| lo + i)
+    }
+
+    /// Apply a batch of [`EdgeDelta`]s in order (the REMAP drift path).
+    ///
+    /// Weight updates on existing edges patch both directed slots in place
+    /// (two binary searches each). New edges are collected and landed in a
+    /// single bounded row-patch rebuild: untouched rows are copied
+    /// wholesale, only the rows of insert endpoints are merge-rewritten, and
+    /// nothing is ever re-sorted or re-deduplicated globally. Setting an
+    /// existing edge's weight to `0` keeps a weight-0 edge (structural
+    /// *removal* is future work); setting an absent edge to `0` is a no-op
+    /// rather than a pointless structural insert.
+    ///
+    /// Validation is all-or-nothing: any malformed delta (self-loop or
+    /// out-of-range endpoint) returns `Err` before the graph is mutated.
+    /// The returned [`DeltaOutcome`] carries per-delta `(old_w, new_w)`
+    /// records in input order (so duplicated pairs telescope correctly in
+    /// downstream Γ patches), the incremental fingerprint adjustment
+    /// (`new_fp = old_fp.wrapping_add(fp_delta)` — proven equal to the
+    /// from-scratch hash in tests), and whether any structural insert
+    /// happened.
+    pub fn apply_deltas(&mut self, deltas: &[EdgeDelta]) -> Result<DeltaOutcome, String> {
+        let n = self.n();
+        for d in deltas {
+            if d.u == d.v {
+                return Err(format!("delta ({}, {}) is a self-loop", d.u, d.v));
+            }
+            if d.u as usize >= n || d.v as usize >= n {
+                return Err(format!("delta endpoint out of range in ({}, {}) (n = {n})", d.u, d.v));
+            }
+        }
+        // Old per-row digests of every endpoint row, before any mutation:
+        // the incremental fingerprint is the (wrapping) sum of row-digest
+        // differences, and only endpoint rows ever change.
+        let mut rows: Vec<NodeId> = deltas.iter().flat_map(|d| [d.u, d.v]).collect();
+        rows.sort_unstable();
+        rows.dedup();
+        let old_digests: Vec<u64> =
+            rows.iter().map(|&v| super::fingerprint::row_digest(self, v)).collect();
+
+        let mut records = Vec::with_capacity(deltas.len());
+        // Edges absent from the CSR arrays, pending the row-patch rebuild;
+        // canonical (min, max) keys, linear-scan dedup (delta batches are
+        // small by design — that is the whole point of the REMAP path).
+        let mut pending: Vec<(NodeId, NodeId, Weight)> = Vec::new();
+        for d in deltas {
+            let (a, b) = if d.u < d.v { (d.u, d.v) } else { (d.v, d.u) };
+            let old_w = if let Some(i) = self.slot(a, b) {
+                let old = self.adjwgt[i];
+                self.adjwgt[i] = d.w;
+                let j = self.slot(b, a).expect("CSR edges are symmetric");
+                self.adjwgt[j] = d.w;
+                old
+            } else if let Some(p) = pending.iter_mut().find(|p| p.0 == a && p.1 == b) {
+                let old = p.2;
+                p.2 = d.w;
+                old
+            } else {
+                if d.w != 0 {
+                    pending.push((a, b, d.w));
+                }
+                0
+            };
+            records.push(AppliedEdge { u: d.u, v: d.v, old_w, new_w: d.w });
+        }
+
+        let structural = !pending.is_empty();
+        if structural {
+            self.insert_edges(&pending);
+        }
+
+        let mut fp_delta = 0u64;
+        for (&v, &old) in rows.iter().zip(&old_digests) {
+            let new = super::fingerprint::row_digest(self, v);
+            fp_delta = fp_delta.wrapping_add(new.wrapping_sub(old));
+        }
+        let mut touched: Vec<NodeId> = records
+            .iter()
+            .filter(|r| r.old_w != r.new_w)
+            .flat_map(|r| [r.u, r.v])
+            .collect();
+        touched.sort_unstable();
+        touched.dedup();
+        debug_assert_eq!(self.validate(), Ok(()));
+        Ok(DeltaOutcome { records, fp_delta, structural, touched })
+    }
+
+    /// Land `pending` new edges (canonical, deduplicated, all absent from
+    /// the current arrays) via the bounded row-patch rebuild: new `xadj`
+    /// from old degrees + per-row insert counts, untouched rows copied
+    /// wholesale, touched rows merged with their (sorted) inserts.
+    fn insert_edges(&mut self, pending: &[(NodeId, NodeId, Weight)]) {
+        let n = self.n();
+        let mut ins: Vec<(NodeId, NodeId, Weight)> = Vec::with_capacity(pending.len() * 2);
+        for &(a, b, w) in pending {
+            ins.push((a, b, w));
+            ins.push((b, a, w));
+        }
+        ins.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut xadj = vec![0u32; n + 1];
+        {
+            let mut i = 0;
+            for v in 0..n {
+                let mut extra = 0u32;
+                while i < ins.len() && ins[i].0 as usize == v {
+                    extra += 1;
+                    i += 1;
+                }
+                xadj[v + 1] = xadj[v] + (self.degree(v as NodeId) as u32) + extra;
+            }
+        }
+        let total = xadj[n] as usize;
+        let mut adjncy = vec![0 as NodeId; total];
+        let mut adjwgt = vec![0 as Weight; total];
+        let mut i = 0;
+        for v in 0..n {
+            let dst = xadj[v] as usize;
+            let lo = self.xadj[v] as usize;
+            let hi = self.xadj[v + 1] as usize;
+            if i >= ins.len() || ins[i].0 as usize != v {
+                adjncy[dst..dst + (hi - lo)].copy_from_slice(&self.adjncy[lo..hi]);
+                adjwgt[dst..dst + (hi - lo)].copy_from_slice(&self.adjwgt[lo..hi]);
+                continue;
+            }
+            // merge the old sorted row with this row's sorted inserts (all
+            // insert targets are absent from the old row by construction)
+            let mut out = dst;
+            let mut k = lo;
+            while k < hi || (i < ins.len() && ins[i].0 as usize == v) {
+                let take_ins = i < ins.len()
+                    && ins[i].0 as usize == v
+                    && (k >= hi || ins[i].1 < self.adjncy[k]);
+                if take_ins {
+                    adjncy[out] = ins[i].1;
+                    adjwgt[out] = ins[i].2;
+                    i += 1;
+                } else {
+                    adjncy[out] = self.adjncy[k];
+                    adjwgt[out] = self.adjwgt[k];
+                    k += 1;
+                }
+                out += 1;
+            }
+            debug_assert_eq!(out, xadj[v + 1] as usize);
+        }
+        self.xadj = xadj;
+        self.adjncy = adjncy;
+        self.adjwgt = adjwgt;
+    }
+}
+
+/// One edge-weight update for [`Graph::apply_deltas`]: set the weight of
+/// undirected edge `{u, v}` to `w`, inserting the edge when absent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EdgeDelta {
+    pub u: NodeId,
+    pub v: NodeId,
+    pub w: Weight,
+}
+
+/// What one [`EdgeDelta`] did, in input order: the weight transition the
+/// engine layer needs to patch Γ and J without re-reading the graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AppliedEdge {
+    pub u: NodeId,
+    pub v: NodeId,
+    pub old_w: Weight,
+    pub new_w: Weight,
+}
+
+/// Result of [`Graph::apply_deltas`].
+#[derive(Debug, Clone)]
+pub struct DeltaOutcome {
+    /// Per-delta `(old_w, new_w)` transitions, in input order.
+    pub records: Vec<AppliedEdge>,
+    /// Incremental fingerprint adjustment:
+    /// `patched.fingerprint() == old_fp.wrapping_add(fp_delta)`.
+    pub fp_delta: u64,
+    /// True when any delta inserted a new edge (the CSR rows were patched;
+    /// structure-keyed indexes like `N_C^d` pair sets are now stale).
+    pub structural: bool,
+    /// Endpoints of deltas that actually changed a weight (sorted, unique)
+    /// — exactly the vertices whose incident move gains may have changed.
+    pub touched: Vec<NodeId>,
 }
 
 /// Incremental builder: accumulate (possibly duplicated) undirected edges,
@@ -360,5 +551,119 @@ mod tests {
         let g = from_edges(3, &[(0, 1, 5), (0, 2, 6)]);
         let collected: Vec<_> = g.edges(0).collect();
         assert_eq!(collected, vec![(1, 5), (2, 6)]);
+    }
+
+    #[test]
+    fn apply_deltas_weight_updates_in_place() {
+        let mut g = from_edges(4, &[(0, 1, 3), (1, 2, 5), (2, 3, 7)]);
+        let out = g
+            .apply_deltas(&[EdgeDelta { u: 2, v: 1, w: 9 }, EdgeDelta { u: 3, v: 2, w: 0 }])
+            .unwrap();
+        assert!(!out.structural);
+        assert_eq!(g.edge_weight(1, 2), Some(9));
+        // weight 0 keeps the edge (structural removal is future work)
+        assert_eq!(g.edge_weight(2, 3), Some(0));
+        assert_eq!(g.m(), 3);
+        assert_eq!(g.validate(), Ok(()));
+        assert_eq!(
+            out.records,
+            vec![
+                AppliedEdge { u: 2, v: 1, old_w: 5, new_w: 9 },
+                AppliedEdge { u: 3, v: 2, old_w: 7, new_w: 0 },
+            ]
+        );
+        assert_eq!(out.touched, vec![1, 2, 3]);
+        // equivalent rebuilt-from-scratch graph is bit-identical
+        assert_eq!(g, from_edges(4, &[(0, 1, 3), (1, 2, 9), (2, 3, 0)]));
+    }
+
+    #[test]
+    fn apply_deltas_inserts_rebuild_only_touched_rows() {
+        let mut g = from_edges(5, &[(0, 1, 3), (1, 2, 5), (3, 4, 7)]);
+        let out = g
+            .apply_deltas(&[
+                EdgeDelta { u: 0, v: 4, w: 11 }, // new edge
+                EdgeDelta { u: 1, v: 2, w: 6 },  // weight update in the same batch
+                EdgeDelta { u: 0, v: 2, w: 13 }, // second new edge, same row 0
+            ])
+            .unwrap();
+        assert!(out.structural);
+        assert_eq!(g.m(), 5);
+        assert_eq!(g.neighbors(0), &[1, 2, 4]);
+        assert_eq!(g.edge_weight(0, 4), Some(11));
+        assert_eq!(g.edge_weight(0, 2), Some(13));
+        assert_eq!(g.edge_weight(1, 2), Some(6));
+        assert_eq!(g.validate(), Ok(()));
+        assert_eq!(
+            g,
+            from_edges(5, &[(0, 1, 3), (1, 2, 6), (3, 4, 7), (0, 4, 11), (0, 2, 13)])
+        );
+    }
+
+    #[test]
+    fn apply_deltas_sequential_semantics_on_duplicates() {
+        // later deltas on the same pair see the earlier ones' effect, both
+        // for in-place updates and for still-pending inserts
+        let mut g = from_edges(3, &[(0, 1, 2)]);
+        let out = g
+            .apply_deltas(&[
+                EdgeDelta { u: 0, v: 1, w: 5 },
+                EdgeDelta { u: 1, v: 0, w: 7 },
+                EdgeDelta { u: 1, v: 2, w: 4 },
+                EdgeDelta { u: 2, v: 1, w: 9 },
+            ])
+            .unwrap();
+        assert_eq!(out.records[0], AppliedEdge { u: 0, v: 1, old_w: 2, new_w: 5 });
+        assert_eq!(out.records[1], AppliedEdge { u: 1, v: 0, old_w: 5, new_w: 7 });
+        assert_eq!(out.records[2], AppliedEdge { u: 1, v: 2, old_w: 0, new_w: 4 });
+        assert_eq!(out.records[3], AppliedEdge { u: 2, v: 1, old_w: 4, new_w: 9 });
+        assert_eq!(g, from_edges(3, &[(0, 1, 7), (1, 2, 9)]));
+    }
+
+    #[test]
+    fn apply_deltas_absent_zero_is_a_noop_and_bad_deltas_reject_atomically() {
+        let mut g = from_edges(3, &[(0, 1, 2)]);
+        let out = g.apply_deltas(&[EdgeDelta { u: 1, v: 2, w: 0 }]).unwrap();
+        assert!(!out.structural);
+        assert_eq!(g.m(), 1);
+        assert!(out.touched.is_empty(), "a (0 -> 0) transition touches nothing");
+
+        // self-loop and out-of-range endpoints: Err, graph untouched even
+        // when a valid delta precedes the bad one
+        let before = g.clone();
+        for bad in [EdgeDelta { u: 1, v: 1, w: 3 }, EdgeDelta { u: 0, v: 7, w: 3 }] {
+            let err = g.apply_deltas(&[EdgeDelta { u: 0, v: 1, w: 99 }, bad]).unwrap_err();
+            assert!(err.contains("delta"), "{err}");
+            assert_eq!(g, before, "failed batch must not mutate the graph");
+        }
+    }
+
+    #[test]
+    fn apply_deltas_fingerprint_patch_equals_recompute() {
+        let mut rng_edges = Vec::new();
+        // a deterministic pseudo-random graph without pulling in util::Rng
+        let mut x = 12345u64;
+        for _ in 0..60 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let u = (x >> 33) % 24;
+            let v = (x >> 13) % 24;
+            if u != v {
+                rng_edges.push((u as NodeId, v as NodeId, 1 + (x % 10)));
+            }
+        }
+        let mut g = from_edges(24, &rng_edges);
+        let fp0 = g.fingerprint();
+        let out = g
+            .apply_deltas(&[
+                EdgeDelta { u: 0, v: 1, w: 42 },  // insert or update, whichever
+                EdgeDelta { u: 2, v: 3, w: 17 },
+                EdgeDelta { u: 20, v: 23, w: 5 },
+            ])
+            .unwrap();
+        assert_eq!(
+            g.fingerprint(),
+            fp0.wrapping_add(out.fp_delta),
+            "incremental fingerprint must equal the from-scratch hash"
+        );
     }
 }

@@ -2,9 +2,24 @@
 //!
 //! The coordinator's session cache (ROADMAP item 2: repeat traffic for the
 //! same instance must hit warm `N_C^d`/`MlHierarchy`/Γ state) needs a key
-//! that identifies a communication graph across independent requests. The
-//! fingerprint is a 64-bit FNV-1a hash over the exact CSR arrays — `n`,
-//! `xadj`, `adjncy`, `adjwgt`, `vwgt` — so it is:
+//! that identifies a communication graph across independent requests — and
+//! since the REMAP path (ROADMAP item 3), one that can be *patched* in
+//! `O(|Δ|·deg)` when a delta batch touches a handful of rows, instead of
+//! re-hashed in `O(n + m)`.
+//!
+//! The digest is therefore a **sum of independent per-row digests**:
+//!
+//! ```text
+//! fp(G) = H(n)  ⊞  Σ_v  finalize(FNV(v, vwgt[v], deg(v), row_v))
+//! ```
+//!
+//! where `⊞`/`Σ` are wrapping `u64` adds and `finalize` is the splitmix64
+//! bit-mixer (so the commutative sum does not degenerate into a weak
+//! XOR-like combiner — each row contributes an avalanche-mixed word).
+//! Changing any set of rows shifts the total by exactly the sum of their
+//! digest differences, which is what [`Graph::apply_deltas`] returns as
+//! `fp_delta`; tests assert the patched hash equals the from-scratch one.
+//! The fingerprint remains:
 //!
 //! * **stable** across processes, runs and platforms (no `RandomState`,
 //!   no pointer identity, fixed little-endian byte order), which is what
@@ -13,23 +28,23 @@
 //!   mirrors edges, so any two edge lists describing the same weighted
 //!   graph produce byte-identical CSR arrays and therefore the same
 //!   fingerprint;
-//! * **cheap**: one pass over `O(n + m)` words, no allocation.
+//! * **cheap**: one pass over `O(n + m)` words from scratch, `O(|Δ|·deg)`
+//!   incrementally, no allocation.
 //!
-//! A 64-bit digest is not collision-proof, so the cache treats it as a
-//! *key*, not a proof: on every hit the adopting session still compares
-//! the full graph (`Graph: PartialEq`) before reusing warm state
-//! ([`crate::api::MapSession::adopt_job`]). A collision therefore costs
-//! one false hit-then-reject, never a wrong answer.
+//! A 64-bit digest is not collision-proof (and a commutative row combiner
+//! is, by construction, weaker against adversarial inputs than a sequential
+//! hash), so the cache treats it as a *key*, not a proof: on every hit the
+//! adopting session still compares the full graph (`Graph: PartialEq`)
+//! before reusing warm state ([`crate::api::MapSession::adopt_job`]). A
+//! collision therefore costs one false hit-then-reject, never a wrong
+//! answer.
 
-use super::csr::Graph;
+use super::csr::{Graph, NodeId};
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
 
-/// Incremental FNV-1a over little-endian words, with a section tag mixed in
-/// between arrays so `(xadj, adjncy)` boundaries cannot alias (e.g. moving a
-/// value from the end of one array to the start of the next changes the
-/// digest).
+/// Incremental FNV-1a over little-endian words.
 struct Fnv(u64);
 
 impl Fnv {
@@ -49,35 +64,46 @@ impl Fnv {
             self.byte(b);
         }
     }
+}
 
-    fn section(&mut self, tag: u8, len: usize) {
-        self.byte(tag);
-        self.u64(len as u64);
+/// splitmix64 finalizer: full-avalanche mix so per-row digests survive the
+/// commutative wrapping-sum combiner.
+#[inline]
+fn splitmix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
+}
+
+/// Digest of one vertex row: id, node weight, degree, then the sorted
+/// `(neighbor, weight)` pairs — everything about `v` the CSR arrays store.
+/// This is the unit of incrementality: [`Graph::apply_deltas`] re-digests
+/// only the rows it touched.
+pub(crate) fn row_digest(g: &Graph, v: NodeId) -> u64 {
+    let mut h = Fnv::new();
+    h.u64(v as u64);
+    h.u64(g.node_weight(v));
+    h.u64(g.degree(v) as u64);
+    for (u, w) in g.edges(v) {
+        h.u64(u as u64);
+        h.u64(w);
     }
+    splitmix64(h.0)
 }
 
 /// Stable 64-bit fingerprint of `g` (see module docs for the contract).
 pub fn fingerprint(g: &Graph) -> u64 {
-    let (xadj, adjncy, adjwgt, vwgt) = g.csr_parts();
     let mut h = Fnv::new();
-    h.section(b'n', g.n());
-    h.section(b'x', xadj.len());
-    for &x in xadj {
-        h.u64(x as u64);
+    h.byte(b'n');
+    h.u64(g.n() as u64);
+    let mut acc = splitmix64(h.0);
+    for v in 0..g.n() as NodeId {
+        acc = acc.wrapping_add(row_digest(g, v));
     }
-    h.section(b'a', adjncy.len());
-    for &a in adjncy {
-        h.u64(a as u64);
-    }
-    h.section(b'w', adjwgt.len());
-    for &w in adjwgt {
-        h.u64(w);
-    }
-    h.section(b'v', vwgt.len());
-    for &w in vwgt {
-        h.u64(w);
-    }
-    h.0
+    acc
 }
 
 impl Graph {
@@ -89,7 +115,7 @@ impl Graph {
 
 #[cfg(test)]
 mod tests {
-    use crate::graph::{from_edges, Builder};
+    use crate::graph::{from_edges, Builder, EdgeDelta};
 
     #[test]
     fn identical_graphs_share_a_fingerprint() {
@@ -139,5 +165,27 @@ mod tests {
     #[test]
     fn empty_and_singleton_are_distinct() {
         assert_ne!(from_edges(0, &[]).fingerprint(), from_edges(1, &[]).fingerprint());
+    }
+
+    #[test]
+    fn incremental_patch_equals_from_scratch_hash() {
+        // the REMAP contract: after any delta batch — updates, inserts, a
+        // mix — old_fp ⊞ fp_delta must equal the freshly computed hash,
+        // which itself must equal the hash of an independently built graph
+        let mut g = from_edges(6, &[(0, 1, 2), (1, 2, 3), (2, 3, 4), (4, 5, 6)]);
+        let fp0 = g.fingerprint();
+        let out = g
+            .apply_deltas(&[
+                EdgeDelta { u: 1, v: 2, w: 30 }, // update
+                EdgeDelta { u: 0, v: 5, w: 7 },  // insert
+                EdgeDelta { u: 1, v: 2, w: 8 },  // second update, same pair
+            ])
+            .unwrap();
+        let patched = fp0.wrapping_add(out.fp_delta);
+        assert_eq!(patched, g.fingerprint());
+        let rebuilt =
+            from_edges(6, &[(0, 1, 2), (1, 2, 8), (2, 3, 4), (4, 5, 6), (0, 5, 7)]);
+        assert_eq!(patched, rebuilt.fingerprint());
+        assert_eq!(g, rebuilt);
     }
 }

@@ -8,7 +8,7 @@ pub mod fingerprint;
 pub mod io;
 pub mod ops;
 
-pub use csr::{from_edges, Builder, Graph, NodeId, Weight};
+pub use csr::{from_edges, AppliedEdge, Builder, DeltaOutcome, EdgeDelta, Graph, NodeId, Weight};
 pub use fingerprint::fingerprint;
 pub use ops::{
     bfs_ball, connect_components, connected_components, contract, induced_subgraph, is_connected,

@@ -20,8 +20,8 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 use qapmap::api::{MachineResolution, MapJobBuilder, MapSession, OracleMode, VerifyPolicy};
-use qapmap::coordinator::{wire, Coordinator};
-use qapmap::graph::{io as gio, Graph};
+use qapmap::coordinator::{wire, Coordinator, RemapRequest};
+use qapmap::graph::{io as gio, EdgeDelta, Graph, NodeId, Weight};
 use qapmap::mapping::algorithms::AlgorithmSpec;
 use qapmap::model::build_instance;
 use qapmap::model::topology::Machine;
@@ -39,12 +39,19 @@ fn main() {
         usage();
         std::process::exit(2);
     }
-    let cmd = raw.remove(0);
+    let mut cmd = raw.remove(0);
+    // `client remap` is a two-word subcommand: peel the second word before
+    // option parsing
+    if cmd == "client" && raw.first().is_some_and(|a| a == "remap") {
+        raw.remove(0);
+        cmd = "client-remap".to_string();
+    }
     let args = Args::parse_from(raw);
     let result = match cmd.as_str() {
         "map" => cmd_map(&args),
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
+        "client-remap" => cmd_client_remap(&args),
         "stats" => cmd_stats(&args),
         "gen" => cmd_gen(&args),
         "partition" => cmd_partition(&args),
@@ -78,6 +85,10 @@ fn usage() {
                     [--idle-timeout-ms 60000] [--grace-ms 3000]\n  \
          client     --addr host:port (same instance options as map, plus\n  \
                     [--deadline-ms N] [--retries 1] for retryable refusals)\n  \
+         client remap  --addr host:port (instance options as client): MAP the\n  \
+                    instance, then REMAP it on the same connection with a\n  \
+                    drifted edge set — [--deltas file] (lines: u v w) or\n  \
+                    [--drift K] random weight perturbations (default 8)\n  \
          stats      [--addr 127.0.0.1:7447] — query a running service's metrics\n  \
          gen        --inst rgg12 --out file.metis [--seed 1]\n  \
          partition  --graph file.metis --blocks k [--out part.txt] [--epsilon 0.0]\n  \
@@ -314,6 +325,100 @@ fn cmd_client(args: &Args) -> Result<()> {
             Ok(())
         }
     }
+}
+
+/// `client remap`: map an instance over a persistent connection, then send
+/// an edge-delta batch as a `REMAP` on the same connection — the service
+/// resumes the warm session instead of rebuilding (gain-cache re-seed for
+/// weight drifts, cold rerun for structural batches).
+fn cmd_client_remap(args: &Args) -> Result<()> {
+    let addr = args.get("addr", "127.0.0.1:7447");
+    let seed: u64 = args.get_as("seed", 1);
+    let mut rng = Rng::new(seed);
+    let comm = load_comm(args, &mut rng)?;
+    let (machine, resolution) = machine_for(args, comm.n())?;
+    let mut builder = MapJobBuilder::for_machine(comm, machine)
+        .machine_resolution(resolution)
+        .algorithm_name(args.get("algo", "topdown+gc:nc10"))
+        .map_err(|e| anyhow!(e))?
+        .seed(seed)
+        .threads(args.get_as("threads", 1))
+        .levels(args.get_as("levels", 16))
+        .coarsen_limit(args.get_as("coarsen-limit", 64));
+    if let Some(ms) = args.options.get("deadline-ms") {
+        builder = builder.deadline_ms(ms.parse().context("--deadline-ms")?);
+    }
+    let job = builder.build().map_err(|e| anyhow!(e))?;
+    let req = job.to_request(seed);
+    let deltas = load_deltas(args, &req.comm, &mut rng)?;
+    let mut client = wire::Client::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    let base = client.map(&req)?;
+    if let Some(e) = &base.error {
+        bail!("service error on MAP: {e}");
+    }
+    println!(
+        "mapped: id={} objective={} in {:.3}s",
+        base.id,
+        base.objective,
+        base.construct_secs + base.ls_secs
+    );
+    let remap =
+        RemapRequest { id: req.id, deltas, threads: None, deadline_ms: req.deadline_ms };
+    let k = remap.deltas.len();
+    let resp = client.remap(&remap)?;
+    match &resp.error {
+        Some(e) => bail!("service error on REMAP: {e}"),
+        None => println!(
+            "remapped {k} deltas: objective {} -> {} (ls {:.3}s, {} evaluated)",
+            resp.objective_initial, resp.objective, resp.ls_secs, resp.stats.evaluated
+        ),
+    }
+    client.quit()?;
+    Ok(())
+}
+
+/// Delta source for `client remap`: an explicit `--deltas` file (one
+/// `u v w` triple per line, `#` comments), or `--drift K` deterministic
+/// random weight bumps on existing edges (default 8).
+fn load_deltas(args: &Args, comm: &Graph, rng: &mut Rng) -> Result<Vec<EdgeDelta>> {
+    if let Some(path) = args.options.get("deltas") {
+        let text = std::fs::read_to_string(path)?;
+        let mut deltas = Vec::new();
+        for line in text.lines() {
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = t.split_whitespace().collect();
+            if toks.len() != 3 {
+                bail!("bad delta line {t:?} (want: u v w)");
+            }
+            deltas.push(EdgeDelta {
+                u: toks[0].parse()?,
+                v: toks[1].parse()?,
+                w: toks[2].parse()?,
+            });
+        }
+        return Ok(deltas);
+    }
+    let k: usize = args.get_as("drift", 8);
+    let mut edges: Vec<(NodeId, NodeId, Weight)> = Vec::new();
+    for u in 0..comm.n() as NodeId {
+        for (v, w) in comm.edges(u) {
+            if v > u {
+                edges.push((u, v, w));
+            }
+        }
+    }
+    if edges.is_empty() {
+        bail!("instance has no edges to drift");
+    }
+    let mut deltas = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (u, v, w) = edges[rng.next_bounded(edges.len() as u64) as usize];
+        deltas.push(EdgeDelta { u, v, w: w + 1 + rng.next_bounded(4) });
+    }
+    Ok(deltas)
 }
 
 fn cmd_gen(args: &Args) -> Result<()> {

@@ -13,7 +13,7 @@
 //! baseline of Brandfass et al. (dense matrices, `O(n)` per update) used as
 //! the comparison point of Table 1/Figure 1.
 
-use crate::graph::{Graph, NodeId};
+use crate::graph::{AppliedEdge, Graph, NodeId};
 use crate::model::topology::{with_topology, Machine, Topology};
 
 /// An assignment of processes to PEs: `sigma[u]` = PE of process `u`
@@ -79,6 +79,26 @@ pub fn objective_t<T: Topology + ?Sized>(comm: &Graph, topo: &T, mapping: &Mappi
         }
     }
     j
+}
+
+/// Everything a [`SwapEngine`] accumulates that outlives the engine's borrow
+/// of the communication graph: the assignment, all `Γ`, the per-vertex move
+/// versions, the move epoch, and `J`.
+///
+/// This is the warm-start currency of the REMAP path
+/// ([`crate::api::MapSession::remap`]): the session captures these parts at a
+/// drained local optimum, patches the graph in place (which the engine's
+/// shared borrow would forbid while it lives), and resurrects the engine with
+/// [`SwapEngine::from_warm`]. The **version vector must round-trip** — a
+/// rebuilt engine zeroes it, which would make every stamp a previous search
+/// recorded compare as fresh and let stale cached gains be applied blind.
+#[derive(Debug, Clone)]
+pub struct WarmParts {
+    pub mapping: Mapping,
+    pub gamma: Vec<u64>,
+    pub version: Vec<u64>,
+    pub moves: u64,
+    pub j: u64,
 }
 
 /// The fast sparse swap engine (the paper's contribution, §3.2).
@@ -153,6 +173,76 @@ impl<'a> SwapEngine<'a> {
     /// reuse by the next repetition; see [`Self::with_gamma_buf`]).
     pub fn into_parts(self) -> (Mapping, Vec<u64>) {
         (Mapping { sigma: self.sigma }, self.gamma)
+    }
+
+    /// Decompose into the full warm state ([`WarmParts`]) so the engine can
+    /// be resurrected later with [`Self::from_warm`] without the `O(n + m)`
+    /// rebuild — and, crucially, without resetting the move versions.
+    pub fn into_warm_parts(self) -> WarmParts {
+        WarmParts {
+            mapping: Mapping { sigma: self.sigma },
+            gamma: self.gamma,
+            version: self.version,
+            moves: self.moves,
+            j: self.j,
+        }
+    }
+
+    /// Resurrect an engine from previously captured [`WarmParts`] in `O(1)`
+    /// (no Γ fill, no objective pass). The caller guarantees `parts` were
+    /// captured against a graph whose weights `gamma`/`j` still describe —
+    /// after an in-place graph patch, follow up with [`Self::apply_deltas`]
+    /// on the applied-edge records to bring Γ and J to the new weights.
+    pub fn from_warm(comm: &'a Graph, oracle: &'a Machine, parts: WarmParts) -> SwapEngine<'a> {
+        debug_assert_eq!(comm.n(), parts.mapping.n());
+        debug_assert_eq!(comm.n(), parts.gamma.len());
+        debug_assert_eq!(comm.n(), parts.version.len());
+        SwapEngine {
+            comm,
+            oracle,
+            sigma: parts.mapping.sigma,
+            gamma: parts.gamma,
+            version: parts.version,
+            moves: parts.moves,
+            j: parts.j,
+            swaps_applied: 0,
+        }
+    }
+
+    /// Patch `Γ` and `J` for a batch of edge-weight changes in `O(|Δ|)`
+    /// oracle queries — the REMAP alternative to the `O(n + m)` rebuild.
+    ///
+    /// Preconditions: `self.comm` already carries the **new** weights (the
+    /// records come out of [`Graph::apply_deltas`], which mutates the graph
+    /// and reports old→new per edge), while `Γ`/`J` still describe the old
+    /// ones. For each changed edge `{u, v}` the objective shifts by
+    /// `δ = (w_new − w_old) · D(σ(u), σ(v))`; `Γ(u)` and `Γ(v)` each absorb
+    /// the same `δ` (every edge is counted in both endpoints' Γ), so the
+    /// `ΣΓ = 2J` invariant is preserved term by term. Records are sequential,
+    /// so repeated updates of one pair telescope.
+    ///
+    /// Only the *endpoints'* move versions bump: σ is untouched, so the only
+    /// cached gains invalidated are those of moves having `u` or `v` as a
+    /// vertex — their rows are the only ones whose weights entered the gain.
+    /// The move epoch is unchanged (no move was applied). Inserts are just
+    /// `w_old = 0` records; deletes would be `w_new = 0` (the edge stays in
+    /// the CSR structure with weight 0, contributing nothing).
+    pub fn apply_deltas(&mut self, records: &[AppliedEdge]) {
+        let oracle = self.oracle;
+        with_topology!(oracle, t => {
+            for r in records {
+                if r.old_w == r.new_w {
+                    continue;
+                }
+                let d = t.distance(self.sigma[r.u as usize], self.sigma[r.v as usize]) as i64;
+                let delta = (r.new_w as i64 - r.old_w as i64) * d;
+                self.gamma[r.u as usize] = (self.gamma[r.u as usize] as i64 + delta) as u64;
+                self.gamma[r.v as usize] = (self.gamma[r.v as usize] as i64 + delta) as u64;
+                self.j = (self.j as i64 + delta) as u64;
+                self.version[r.u as usize] = self.version[r.u as usize].wrapping_add(1);
+                self.version[r.v as usize] = self.version[r.v as usize].wrapping_add(1);
+            }
+        });
     }
 
     /// Current objective `J`.
@@ -444,6 +534,26 @@ impl DenseEngine {
         self.sigma = mapping.sigma;
         self.j = dense_objective(&self.c, &self.d, &self.sigma, self.n);
         self.swaps_applied = 0;
+    }
+
+    /// Patch the dense `C` matrix and `J` for a batch of edge-weight changes
+    /// — the dense analogue of [`SwapEngine::apply_deltas`]. Unlike the
+    /// sparse engine this one owns its matrices, so the patch is entirely
+    /// self-contained: both mirror entries of `C` are overwritten and `J`
+    /// shifts by `(w_new − w_old) · D(σ(u), σ(v))` per record.
+    pub fn apply_deltas(&mut self, records: &[AppliedEdge]) {
+        let n = self.n;
+        for r in records {
+            let (u, v) = (r.u as usize, r.v as usize);
+            debug_assert!(u < n && v < n && u != v);
+            self.c[u * n + v] = r.new_w as u32;
+            self.c[v * n + u] = r.new_w as u32;
+            if r.old_w != r.new_w {
+                let d = self.d[self.sigma[u] as usize * n + self.sigma[v] as usize] as i64;
+                let delta = (r.new_w as i64 - r.old_w as i64) * d;
+                self.j = (self.j as i64 + delta) as u64;
+            }
+        }
     }
 
     /// Current objective.
@@ -966,6 +1076,127 @@ mod tests {
             last = eng.objective();
         }
         assert_eq!(eng.objective(), eng.recompute_objective());
+    }
+
+    #[test]
+    fn warm_roundtrip_preserves_full_engine_state() {
+        let (g, o) = setup(7, 50);
+        let mut rng = Rng::new(51);
+        let mut eng = SwapEngine::new(&g, &o, Mapping { sigma: rng.permutation(g.n()) });
+        for _ in 0..100 {
+            let u = rng.index(g.n()) as NodeId;
+            let mut v = rng.index(g.n()) as NodeId;
+            if u == v {
+                v = (v + 1) % g.n() as NodeId;
+            }
+            eng.do_swap(u, v);
+        }
+        let j = eng.objective();
+        let epoch = eng.moves_epoch();
+        let gammas: Vec<u64> = (0..g.n() as NodeId).map(|x| eng.gamma_of(x)).collect();
+        let versions: Vec<u64> = (0..g.n() as NodeId).map(|x| eng.version_of(x)).collect();
+        let warm = SwapEngine::from_warm(&g, &o, eng.into_warm_parts());
+        assert_eq!(warm.objective(), j);
+        assert_eq!(warm.moves_epoch(), epoch);
+        for x in 0..g.n() as NodeId {
+            assert_eq!(warm.gamma_of(x), gammas[x as usize], "gamma({x})");
+            assert_eq!(warm.version_of(x), versions[x as usize], "version({x})");
+        }
+        assert!(warm.gamma_invariant_holds());
+        assert_eq!(warm.objective(), warm.recompute_objective());
+    }
+
+    #[test]
+    fn delta_patch_matches_fresh_engine_on_updated_graph() {
+        use crate::graph::EdgeDelta;
+        let (g, o) = setup(7, 52);
+        let mut rng = Rng::new(53);
+        let mut eng = SwapEngine::new(&g, &o, Mapping { sigma: rng.permutation(g.n()) });
+        for _ in 0..60 {
+            let u = rng.index(g.n()) as NodeId;
+            let mut v = rng.index(g.n()) as NodeId;
+            if u == v {
+                v = (v + 1) % g.n() as NodeId;
+            }
+            eng.do_swap(u, v);
+        }
+        let parts = eng.into_warm_parts();
+        // a mixed batch: existing-edge updates, one zero-out, one insert
+        let a = 0 as NodeId;
+        let b = g.neighbors(a)[0];
+        let c = 1 as NodeId;
+        let d = g.neighbors(c)[0];
+        let mut far = 2 as NodeId; // endpoint pair guaranteed non-adjacent
+        while g.edge_weight(far, (far + 5) % g.n() as NodeId).is_some()
+            || far == (far + 5) % g.n() as NodeId
+        {
+            far += 1;
+        }
+        let mut g2 = g.clone();
+        let out = g2
+            .apply_deltas(&[
+                EdgeDelta { u: a, v: b, w: g.edge_weight(a, b).unwrap() + 7 },
+                EdgeDelta { u: c, v: d, w: 0 },
+                EdgeDelta { u: far, v: (far + 5) % g.n() as NodeId, w: 9 },
+            ])
+            .unwrap();
+        let mut warm = SwapEngine::from_warm(&g2, &o, parts);
+        let versions_before: Vec<u64> =
+            (0..g2.n() as NodeId).map(|x| warm.version_of(x)).collect();
+        let epoch = warm.moves_epoch();
+        warm.apply_deltas(&out.records);
+        // bit-identical to a from-scratch engine on the updated graph
+        let fresh = SwapEngine::new(&g2, &o, warm.mapping());
+        assert_eq!(warm.objective(), fresh.objective());
+        for x in 0..g2.n() as NodeId {
+            assert_eq!(warm.gamma_of(x), fresh.gamma_of(x), "gamma({x})");
+        }
+        assert!(warm.gamma_invariant_holds());
+        assert_eq!(warm.objective(), warm.recompute_objective());
+        // only delta endpoints' versions bumped; epoch untouched
+        assert_eq!(warm.moves_epoch(), epoch);
+        for x in 0..g2.n() as NodeId {
+            if out.touched.contains(&x) {
+                assert!(warm.version_of(x) > versions_before[x as usize], "version({x})");
+            } else {
+                assert_eq!(warm.version_of(x), versions_before[x as usize], "version({x})");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_delta_patch_matches_rebuild() {
+        use crate::graph::EdgeDelta;
+        let (g, o) = setup(6, 54);
+        let mut rng = Rng::new(55);
+        let m = Mapping { sigma: rng.permutation(g.n()) };
+        let mut dense = DenseEngine::new(&g, &o, m.clone());
+        let a = 0 as NodeId;
+        let b = g.neighbors(a)[0];
+        let mut g2 = g.clone();
+        let out = g2
+            .apply_deltas(&[
+                EdgeDelta { u: a, v: b, w: g.edge_weight(a, b).unwrap() + 3 },
+                EdgeDelta { u: 10, v: 50, w: 4 },
+            ])
+            .unwrap();
+        dense.apply_deltas(&out.records);
+        let rebuilt = DenseEngine::new(&g2, &o, m);
+        assert_eq!(dense.objective(), rebuilt.objective());
+        assert_eq!(dense.objective(), dense.recompute_objective());
+        // and the patched matrices keep agreeing with the sparse engine
+        let mut sparse = SwapEngine::new(&g2, &o, dense.mapping());
+        for _ in 0..50 {
+            let u = rng.index(g2.n()) as NodeId;
+            let mut v = rng.index(g2.n()) as NodeId;
+            if u == v {
+                v = (v + 1) % g2.n() as NodeId;
+            }
+            assert_eq!(sparse.swap_gain(u, v), dense.swap_gain(u, v), "gain ({u},{v})");
+            sparse.do_swap(u, v);
+            dense.do_swap(u, v);
+            assert_eq!(sparse.objective(), dense.objective());
+        }
     }
 
     #[test]

@@ -62,6 +62,23 @@ impl TriangleSet {
         }
         &self.cache.as_ref().unwrap().1
     }
+
+    /// Re-key the cached triangle set to `comm` *without* re-enumerating.
+    /// [`graph_key`] folds edge weights, so a weight-only delta batch
+    /// (REMAP's warm path) changes the key while leaving the triangle
+    /// *structure* — which is all this set records — untouched. The caller
+    /// guarantees exactly that; a structural change must go through
+    /// [`Self::get`], which rebuilds. Returns false (and retags nothing)
+    /// when the cache is empty.
+    pub fn retag(&mut self, comm: &Graph) -> bool {
+        match &mut self.cache {
+            Some((cached, _)) => {
+                *cached = graph_key(comm);
+                true
+            }
+            None => false,
+        }
+    }
 }
 
 /// Triangle-rotation search: enumerate the triangles of `G_C`, try both

@@ -434,6 +434,265 @@ fn apply_and_activate(
     }
 }
 
+/// The shared queue drain — free-running rounds (opt-in), the deterministic
+/// speculative prefetch, and the sequential pop/apply loop — extracted from
+/// `refine` so the warm-started REMAP path ([`GainCacheNc::refine_warm`])
+/// resumes the *identical* loop after its partial re-seed. A free function
+/// (not a method) because the caller holds a shared borrow of its own
+/// `pairs`/`tris` fields while lending the queue and the gain/stamp/queued
+/// arrays mutably — field-disjoint borrows that only split inside one
+/// function body.
+///
+/// On return the queue is empty (a certified local optimum) unless
+/// `stats.stopped` is set, in which case the remaining entries are left in
+/// place and the engine sits at the last applied move — a valid anytime
+/// mapping.
+#[allow(clippy::too_many_arguments)]
+fn drain(
+    engine: &mut dyn Swapper,
+    comm: &Graph,
+    pairs: &PairIndex,
+    tris: Option<&TriIndex>,
+    tri_list: &[(NodeId, NodeId, NodeId)],
+    np: usize,
+    versioned: bool,
+    threads: usize,
+    free: bool,
+    ctrl: &RunControl,
+    queue: &mut GainBucketQueue,
+    gain: &mut [i64],
+    stamp: &mut [[u64; 3]],
+    queued: &mut [bool],
+    spec_gain: &mut Vec<i64>,
+    spec_stamp: &mut Vec<[u64; 3]>,
+    spec_valid: &mut Vec<bool>,
+    stats: &mut SearchStats,
+) {
+    let nm = gain.len();
+    let armed = ctrl.armed();
+
+    // free-running parallel drain (opt-in): rounds of batched parallel
+    // evaluation against the frozen pre-batch state, then in-order
+    // applies revalidated per move against the live state. Applies may
+    // interleave differently than the sequential drain — the
+    // trajectory can diverge — but every applied move's gain is exact
+    // at apply time, and activate() re-queues everything an apply may
+    // have changed, so the sequential drain below (which then starts
+    // from an empty or quiescent queue) still certifies the
+    // union-neighborhood local optimum.
+    if free && threads > 1 {
+        let batch_cap = threads * FREE_BATCH_PER_THREAD;
+        let mut batch: Vec<u32> = Vec::with_capacity(batch_cap);
+        let mut results: Vec<(i64, [u64; 3])> = Vec::with_capacity(batch_cap);
+        loop {
+            // round boundary = move boundary: every apply below leaves a
+            // valid mapping, so stopping between rounds is safe
+            if armed {
+                if let Some(r) = ctrl.stop_reason() {
+                    stats.stopped = Some(r);
+                    return;
+                }
+            }
+            batch.clear();
+            while batch.len() < batch_cap {
+                let Some(id) = queue.pop() else { break };
+                queued[id as usize] = false;
+                batch.push(id);
+            }
+            if batch.is_empty() {
+                break;
+            }
+            results.clear();
+            results.resize(batch.len(), (0, [0; 3]));
+            let chunk = batch.len().div_ceil(threads);
+            {
+                let eng: &dyn Swapper = &*engine;
+                let epoch = stats.improved;
+                std::thread::scope(|s| {
+                    for (ids, out) in batch.chunks(chunk).zip(results.chunks_mut(chunk)) {
+                        s.spawn(move || {
+                            for (&id, slot) in ids.iter().zip(out.iter_mut()) {
+                                *slot = evaluate(
+                                    eng,
+                                    versioned,
+                                    epoch,
+                                    pairs,
+                                    tri_list,
+                                    np,
+                                    id as usize,
+                                );
+                            }
+                        });
+                    }
+                });
+            }
+            for (k, &id) in batch.iter().enumerate() {
+                let i = id as usize;
+                let (g, st) = results[k];
+                stats.evaluated += 1;
+                gain[i] = g;
+                stamp[i] = st;
+                if g <= 0 {
+                    continue;
+                }
+                let now = stamp_of(&*engine, versioned, stats.improved, pairs, tri_list, np, i);
+                if st == now {
+                    apply_and_activate(
+                        &mut *engine,
+                        comm,
+                        pairs,
+                        tris,
+                        tri_list,
+                        np,
+                        queue,
+                        queued,
+                        gain,
+                        stamp,
+                        versioned,
+                        &mut stats.improved,
+                        i,
+                        g,
+                    );
+                } else if !queued[i] {
+                    // went stale under an earlier apply of this batch:
+                    // back into the queue for the next round
+                    queued[i] = true;
+                    queue.push(id, g);
+                }
+            }
+        }
+    }
+
+    // deterministic speculative prefetch (threads > 1, default mode):
+    // between pops, peek the next entries in exact pop order and
+    // pre-evaluate the stale ones on worker threads into the side
+    // cache. Queue placement and the authoritative gain/stamp arrays
+    // are untouched, so the pop sequence below is exactly the
+    // sequential one; a side-cache hit substitutes for (and is counted
+    // as) the one evaluation the sequential drain would perform.
+    let par = threads > 1 && !free;
+    let (spec_batch, spec_window) = if par {
+        spec_gain.clear();
+        spec_gain.resize(nm, 0);
+        spec_stamp.clear();
+        spec_stamp.resize(nm, [0; 3]);
+        spec_valid.clear();
+        spec_valid.resize(nm, false);
+        (threads * SPEC_BATCH_PER_THREAD, threads * SPEC_WINDOW_PER_THREAD)
+    } else {
+        (0, 0)
+    };
+    let mut spec_ids: Vec<u32> = Vec::with_capacity(spec_batch);
+    let mut spec_out: Vec<(i64, [u64; 3])> = Vec::with_capacity(spec_batch);
+    let mut until_respec = 0usize;
+    // drain ticks for the control check: fresh pops apply without an
+    // evaluation, so `stats.evaluated` alone can stall between checks
+    let mut ticks = 0u64;
+
+    loop {
+        if par && until_respec == 0 && !queue.is_empty() {
+            // speculation round: pre-evaluate the stale upcoming pops
+            queue.peek_upcoming(spec_batch, &mut spec_ids);
+            spec_ids.retain(|&id| {
+                let i = id as usize;
+                let now = stamp_of(&*engine, versioned, stats.improved, pairs, tri_list, np, i);
+                stamp[i] != now && !(spec_valid[i] && spec_stamp[i] == now)
+            });
+            if spec_ids.len() >= 2 {
+                spec_out.clear();
+                spec_out.resize(spec_ids.len(), (0, [0; 3]));
+                let chunk = spec_ids.len().div_ceil(threads);
+                let eng: &dyn Swapper = &*engine;
+                let epoch = stats.improved;
+                std::thread::scope(|s| {
+                    for (ids, out) in spec_ids.chunks(chunk).zip(spec_out.chunks_mut(chunk)) {
+                        s.spawn(move || {
+                            for (&id, slot) in ids.iter().zip(out.iter_mut()) {
+                                *slot = evaluate(
+                                    eng,
+                                    versioned,
+                                    epoch,
+                                    pairs,
+                                    tri_list,
+                                    np,
+                                    id as usize,
+                                );
+                            }
+                        });
+                    }
+                });
+                for (&id, &(g, st)) in spec_ids.iter().zip(&spec_out) {
+                    let i = id as usize;
+                    spec_gain[i] = g;
+                    spec_stamp[i] = st;
+                    spec_valid[i] = true;
+                }
+            }
+            until_respec = spec_window;
+        }
+        let Some(i) = queue.pop() else { break };
+        ticks += 1;
+        if armed && ticks % control::CHECK_EVERY == 0 {
+            if let Some(r) = ctrl.stop_reason() {
+                stats.stopped = Some(r);
+                break;
+            }
+        }
+        until_respec = until_respec.saturating_sub(1);
+        let i = i as usize;
+        queued[i] = false;
+        let now = stamp_of(&*engine, versioned, stats.improved, pairs, tri_list, np, i);
+        let fresh = stamp[i] == now;
+        let g = if fresh {
+            gain[i]
+        } else {
+            // one evaluation, exactly where the sequential drain pays
+            // it — served from the speculative side cache when its
+            // stamp still matches (same state ⇒ same gain)
+            let (g, st) = if par && spec_valid[i] && spec_stamp[i] == now {
+                (spec_gain[i], now)
+            } else {
+                evaluate(&*engine, versioned, stats.improved, pairs, tri_list, np, i)
+            };
+            stats.evaluated += 1;
+            gain[i] = g;
+            stamp[i] = st;
+            g
+        };
+        if g <= 0 {
+            continue;
+        }
+        if !fresh {
+            // freshly re-evaluated and still improving: back into the
+            // queue at its true priority instead of applying out of
+            // order (it is popped right back when it is still the best)
+            queued[i] = true;
+            queue.push(i as u32, g);
+            continue;
+        }
+        // fresh and improving: the cached gain is exact — apply without
+        // paying a second evaluation (the dense engine's overrides skip
+        // the O(n) row scan its do_swap/do_rotate3 would burn
+        // recomputing g)
+        apply_and_activate(
+            &mut *engine,
+            comm,
+            pairs,
+            tris,
+            tri_list,
+            np,
+            queue,
+            queued,
+            gain,
+            stamp,
+            versioned,
+            &mut stats.improved,
+            i,
+            g,
+        );
+    }
+}
+
 /// The gain-cached refiner over the unified move class: `gc:nc<d>`
 /// (pair swaps only, [`Self::new`]) and `gc:nccyc<d>` (pair swaps *and*
 /// 3-cycle triangle rotations in one queue, [`Self::with_rotations`]) in
@@ -485,6 +744,13 @@ pub struct GainCacheNc {
     spec_gain: Vec<i64>,
     spec_stamp: Vec<[u64; 3]>,
     spec_valid: Vec<bool>,
+    /// True when the last [`Refiner::refine`] / [`Self::refine_warm`] call
+    /// ran its drain to completion (empty queue, no stop): at that point
+    /// the persisted gain/stamp/queued arrays describe a certified local
+    /// optimum — every stamp fresh, every gain exact and `≤ 0` — which is
+    /// the state [`Self::refine_warm`] is allowed to resume from. Any
+    /// early-stopped or partial run clears it.
+    quiescent: bool,
     /// Anytime stop token ([`Refiner::set_control`]); disarmed by default.
     ctrl: RunControl,
 }
@@ -578,6 +844,9 @@ impl Refiner for GainCacheNc {
     /// sequential drain.
     fn refine(&mut self, engine: &mut dyn Swapper, comm: &Graph, _rng: &mut Rng) -> SearchStats {
         let rot = self.rotations && engine.supports_rotate3();
+        // cleared up front so an early-stopped run can never leave a stale
+        // quiescence claim for refine_warm to resume from
+        self.quiescent = false;
         self.ensure_index(comm, rot);
         // the triangle coordinates live once, in the shared TriangleSet
         // cache (warm after ensure_index); the TriIndex holds only the CSR
@@ -669,231 +938,164 @@ impl Refiner for GainCacheNc {
         }
         stats.rounds = 1;
 
-        // free-running parallel drain (opt-in): rounds of batched parallel
-        // evaluation against the frozen pre-batch state, then in-order
-        // applies revalidated per move against the live state. Applies may
-        // interleave differently than the sequential drain — the
-        // trajectory can diverge — but every applied move's gain is exact
-        // at apply time, and activate() re-queues everything an apply may
-        // have changed, so the sequential drain below (which then starts
-        // from an empty or quiescent queue) still certifies the
-        // union-neighborhood local optimum.
-        if self.free && threads > 1 {
-            let batch_cap = threads * FREE_BATCH_PER_THREAD;
-            let mut batch: Vec<u32> = Vec::with_capacity(batch_cap);
-            let mut results: Vec<(i64, [u64; 3])> = Vec::with_capacity(batch_cap);
-            loop {
-                // round boundary = move boundary: every apply below leaves a
-                // valid mapping, so stopping between rounds is safe
-                if armed {
-                    if let Some(r) = self.ctrl.stop_reason() {
-                        stats.stopped = Some(r);
-                        return stats;
-                    }
-                }
-                batch.clear();
-                while batch.len() < batch_cap {
-                    let Some(id) = self.queue.pop() else { break };
-                    self.queued[id as usize] = false;
-                    batch.push(id);
-                }
-                if batch.is_empty() {
-                    break;
-                }
-                results.clear();
-                results.resize(batch.len(), (0, [0; 3]));
-                let chunk = batch.len().div_ceil(threads);
-                {
-                    let eng: &dyn Swapper = &*engine;
-                    let epoch = stats.improved;
-                    std::thread::scope(|s| {
-                        for (ids, out) in batch.chunks(chunk).zip(results.chunks_mut(chunk)) {
-                            s.spawn(move || {
-                                for (&id, slot) in ids.iter().zip(out.iter_mut()) {
-                                    *slot = evaluate(
-                                        eng,
-                                        versioned,
-                                        epoch,
-                                        pairs,
-                                        tri_list,
-                                        np,
-                                        id as usize,
-                                    );
-                                }
-                            });
-                        }
-                    });
-                }
-                for (k, &id) in batch.iter().enumerate() {
-                    let i = id as usize;
-                    let (g, st) = results[k];
-                    stats.evaluated += 1;
-                    self.gain[i] = g;
-                    self.stamp[i] = st;
-                    if g <= 0 {
-                        continue;
-                    }
-                    let now =
-                        stamp_of(&*engine, versioned, stats.improved, pairs, tri_list, np, i);
-                    if st == now {
-                        apply_and_activate(
-                            &mut *engine,
-                            comm,
-                            pairs,
-                            tris,
-                            tri_list,
-                            np,
-                            &mut self.queue,
-                            &mut self.queued,
-                            &mut self.gain,
-                            &mut self.stamp,
-                            versioned,
-                            &mut stats.improved,
-                            i,
-                            g,
-                        );
-                    } else if !self.queued[i] {
-                        // went stale under an earlier apply of this batch:
-                        // back into the queue for the next round
-                        self.queued[i] = true;
-                        self.queue.push(id, g);
-                    }
+        drain(
+            &mut *engine,
+            comm,
+            pairs,
+            tris,
+            tri_list,
+            np,
+            versioned,
+            threads,
+            self.free,
+            &self.ctrl,
+            &mut self.queue,
+            &mut self.gain,
+            &mut self.stamp,
+            &mut self.queued,
+            &mut self.spec_gain,
+            &mut self.spec_stamp,
+            &mut self.spec_valid,
+            &mut stats,
+        );
+        self.quiescent = stats.stopped.is_none();
+        stats
+    }
+
+    /// The REMAP warm resume: re-seed only the moves incident to `touched`
+    /// and drain from there, instead of the full `O(|moves|)` seeding sweep.
+    ///
+    /// Preconditions (any failure returns `None`, telling the caller to
+    /// fall back to a full [`Refiner::refine`]):
+    /// * the previous call on this refiner drained to quiescence
+    ///   ([`Self::quiescent`]) — its persisted gains are exact and `≤ 0`,
+    /// * the cached pair index matches the current `d` and `comm`'s vertex
+    ///   and edge counts, and
+    /// * `comm` is the *same graph, weight-patched only* — the caller's
+    ///   contract ([`crate::api::MapSession::remap`] only takes this path
+    ///   for weight-only delta batches on the session's own graph), since
+    ///   structural inserts shift the packed move-id space.
+    ///
+    /// Under that contract the cached pair/triangle sets are structurally
+    /// current, so they are re-keyed in place ([`TriangleSet::retag`])
+    /// rather than re-enumerated. `touched` lists the vertices whose
+    /// incident edge weights changed (deduplication not required): exactly
+    /// the moves incident to one of them can have gone stale or improving
+    /// — every other move's gain is unchanged and `≤ 0` — so re-stamping
+    /// and re-pushing those ids in ascending order rebuilds precisely the
+    /// queue a cold full seed on the patched graph would build, and the
+    /// drain trajectory (moves, final σ, final J) is bit-identical to the
+    /// cold path from the same start mapping. Only `evaluated` differs:
+    /// `O(|touched| · deg)` instead of `O(|moves|)`.
+    fn refine_warm(
+        &mut self,
+        engine: &mut dyn Swapper,
+        comm: &Graph,
+        touched: &[NodeId],
+    ) -> Option<SearchStats> {
+        let rot = self.rotations && engine.supports_rotate3();
+        if !self.quiescent || !self.queue.is_empty() {
+            return None;
+        }
+        self.quiescent = false;
+        {
+            let idx = self.pairs.as_ref()?;
+            if idx.d != self.d || idx.key.0 != comm.n() || idx.key.1 != comm.m() {
+                return None;
+            }
+            if rot && self.tris.is_none() {
+                return None;
+            }
+        }
+        // weight-only deltas changed the graph key but not the structure
+        // (the caller's contract): re-tag every cached index in place
+        let key = graph_key(comm);
+        self.pairs.as_mut().expect("checked above").key = key;
+        if rot {
+            self.tris.as_mut().expect("checked above").key = key;
+            if !self.tri_set.retag(comm) {
+                return None;
+            }
+        }
+        let tri_list: &[(NodeId, NodeId, NodeId)] =
+            if rot { self.tri_set.get(comm) } else { &[] };
+        let pairs = self.pairs.as_ref().expect("checked above");
+        let tris = if rot { self.tris.as_ref() } else { None };
+        let np = pairs.pairs.len();
+        let nm = np + 2 * tri_list.len();
+        if self.gain.len() != nm || self.stamp.len() != nm || self.queued.len() != nm {
+            return None;
+        }
+        let mut stats = SearchStats::default();
+        if nm == 0 {
+            self.quiescent = true;
+            return Some(stats);
+        }
+        let versioned = engine.supports_versions();
+        let threads = self.threads.max(1).min(nm);
+        let armed = self.ctrl.armed();
+
+        // partial re-seed: the incidence indexes answer "which moves did
+        // this edge touch" — collect them in ascending id order (matching
+        // the cold full seed's push order, hence the same bucket layout)
+        let mut ids: Vec<u32> = Vec::new();
+        for &x in touched {
+            if x as usize >= comm.n() {
+                return None;
+            }
+            ids.extend_from_slice(pairs.incident(x));
+            if let Some(ti) = tris {
+                for &t in ti.incident(x) {
+                    let base = (np + 2 * t as usize) as u32;
+                    ids.push(base);
+                    ids.push(base + 1);
                 }
             }
         }
-
-        // deterministic speculative prefetch (threads > 1, default mode):
-        // between pops, peek the next entries in exact pop order and
-        // pre-evaluate the stale ones on worker threads into the side
-        // cache. Queue placement and the authoritative gain/stamp arrays
-        // are untouched, so the pop sequence below is exactly the
-        // sequential one; a side-cache hit substitutes for (and is counted
-        // as) the one evaluation the sequential drain would perform.
-        let par = threads > 1 && !self.free;
-        let (spec_batch, spec_window) = if par {
-            self.spec_gain.clear();
-            self.spec_gain.resize(nm, 0);
-            self.spec_stamp.clear();
-            self.spec_stamp.resize(nm, [0; 3]);
-            self.spec_valid.clear();
-            self.spec_valid.resize(nm, false);
-            (threads * SPEC_BATCH_PER_THREAD, threads * SPEC_WINDOW_PER_THREAD)
-        } else {
-            (0, 0)
-        };
-        let mut spec_ids: Vec<u32> = Vec::with_capacity(spec_batch);
-        let mut spec_out: Vec<(i64, [u64; 3])> = Vec::with_capacity(spec_batch);
-        let mut until_respec = 0usize;
-        // drain ticks for the control check: fresh pops apply without an
-        // evaluation, so `stats.evaluated` alone can stall between checks
-        let mut ticks = 0u64;
-
-        loop {
-            if par && until_respec == 0 && !self.queue.is_empty() {
-                // speculation round: pre-evaluate the stale upcoming pops
-                self.queue.peek_upcoming(spec_batch, &mut spec_ids);
-                spec_ids.retain(|&id| {
-                    let i = id as usize;
-                    let now =
-                        stamp_of(&*engine, versioned, stats.improved, pairs, tri_list, np, i);
-                    self.stamp[i] != now && !(self.spec_valid[i] && self.spec_stamp[i] == now)
-                });
-                if spec_ids.len() >= 2 {
-                    spec_out.clear();
-                    spec_out.resize(spec_ids.len(), (0, [0; 3]));
-                    let chunk = spec_ids.len().div_ceil(threads);
-                    let eng: &dyn Swapper = &*engine;
-                    let epoch = stats.improved;
-                    std::thread::scope(|s| {
-                        for (ids, out) in
-                            spec_ids.chunks(chunk).zip(spec_out.chunks_mut(chunk))
-                        {
-                            s.spawn(move || {
-                                for (&id, slot) in ids.iter().zip(out.iter_mut()) {
-                                    *slot = evaluate(
-                                        eng,
-                                        versioned,
-                                        epoch,
-                                        pairs,
-                                        tri_list,
-                                        np,
-                                        id as usize,
-                                    );
-                                }
-                            });
-                        }
-                    });
-                    for (&id, &(g, st)) in spec_ids.iter().zip(&spec_out) {
-                        let i = id as usize;
-                        self.spec_gain[i] = g;
-                        self.spec_stamp[i] = st;
-                        self.spec_valid[i] = true;
-                    }
-                }
-                until_respec = spec_window;
+        ids.sort_unstable();
+        ids.dedup();
+        for &id in &ids {
+            let i = id as usize;
+            let (g, st) = evaluate(&*engine, versioned, stats.improved, pairs, tri_list, np, i);
+            stats.evaluated += 1;
+            self.gain[i] = g;
+            self.stamp[i] = st;
+            if g > 0 {
+                self.queued[i] = true;
+                self.queue.push(id, g);
             }
-            let Some(i) = self.queue.pop() else { break };
-            ticks += 1;
-            if armed && ticks % control::CHECK_EVERY == 0 {
+            if armed && stats.evaluated % control::CHECK_EVERY == 0 {
                 if let Some(r) = self.ctrl.stop_reason() {
                     stats.stopped = Some(r);
-                    break;
+                    stats.rounds = 1;
+                    return Some(stats);
                 }
             }
-            until_respec = until_respec.saturating_sub(1);
-            let i = i as usize;
-            self.queued[i] = false;
-            let now = stamp_of(&*engine, versioned, stats.improved, pairs, tri_list, np, i);
-            let fresh = self.stamp[i] == now;
-            let g = if fresh {
-                self.gain[i]
-            } else {
-                // one evaluation, exactly where the sequential drain pays
-                // it — served from the speculative side cache when its
-                // stamp still matches (same state ⇒ same gain)
-                let (g, st) = if par && self.spec_valid[i] && self.spec_stamp[i] == now {
-                    (self.spec_gain[i], now)
-                } else {
-                    evaluate(&*engine, versioned, stats.improved, pairs, tri_list, np, i)
-                };
-                stats.evaluated += 1;
-                self.gain[i] = g;
-                self.stamp[i] = st;
-                g
-            };
-            if g <= 0 {
-                continue;
-            }
-            if !fresh {
-                // freshly re-evaluated and still improving: back into the
-                // queue at its true priority instead of applying out of
-                // order (it is popped right back when it is still the best)
-                self.queued[i] = true;
-                self.queue.push(i as u32, g);
-                continue;
-            }
-            // fresh and improving: the cached gain is exact — apply without
-            // paying a second evaluation (the dense engine's overrides skip
-            // the O(n) row scan its do_swap/do_rotate3 would burn
-            // recomputing g)
-            apply_and_activate(
-                &mut *engine,
-                comm,
-                pairs,
-                tris,
-                tri_list,
-                np,
-                &mut self.queue,
-                &mut self.queued,
-                &mut self.gain,
-                &mut self.stamp,
-                versioned,
-                &mut stats.improved,
-                i,
-                g,
-            );
         }
-        stats
+        stats.rounds = 1;
+
+        drain(
+            &mut *engine,
+            comm,
+            pairs,
+            tris,
+            tri_list,
+            np,
+            versioned,
+            threads,
+            self.free,
+            &self.ctrl,
+            &mut self.queue,
+            &mut self.gain,
+            &mut self.stamp,
+            &mut self.queued,
+            &mut self.spec_gain,
+            &mut self.spec_stamp,
+            &mut self.spec_valid,
+            &mut stats,
+        );
+        self.quiescent = stats.stopped.is_none();
+        Some(stats)
     }
 }
 
@@ -1363,6 +1565,111 @@ mod tests {
         eng.mapping().validate().unwrap();
         assert_eq!(eng.objective(), eng.recompute_objective());
         assert_eq!(stats.improved, eng.swaps_applied);
+    }
+
+    #[test]
+    fn refine_warm_matches_cold_rebuild_bit_for_bit() {
+        // the REMAP correctness contract at the refiner level: drain to
+        // quiescence, weight-patch the graph, resume warm — the final
+        // mapping and objective must be bit-identical to a cold full-seed
+        // refine on the patched graph from the same σ, for both move
+        // classes and at T ∈ {1, 2, 4}, while evaluating strictly less
+        use crate::graph::EdgeDelta;
+        let (g, o) = setup(7, 140);
+        let m = {
+            let mut r = Rng::new(141);
+            Mapping { sigma: r.permutation(g.n()) }
+        };
+        for rot in [false, true] {
+            let mk = |d| if rot { GainCacheNc::with_rotations(d) } else { GainCacheNc::new(d) };
+            for t in [1usize, 2, 4] {
+                let mut refiner = mk(2).threads(t);
+                let mut eng = SwapEngine::new(&g, &o, m.clone());
+                refiner.refine(&mut eng, &g, &mut Rng::new(1));
+                let parts = eng.into_warm_parts();
+                let sigma_opt = parts.mapping.clone();
+
+                // weight-only drift on a handful of existing edges
+                let e1 = (0 as NodeId, g.neighbors(0)[0]);
+                let e2 = (5 as NodeId, g.neighbors(5)[0]);
+                let mut g2 = g.clone();
+                let out = g2
+                    .apply_deltas(&[
+                        EdgeDelta { u: e1.0, v: e1.1, w: g.edge_weight(e1.0, e1.1).unwrap() + 11 },
+                        EdgeDelta { u: e2.0, v: e2.1, w: 0 },
+                    ])
+                    .unwrap();
+                assert!(!out.structural);
+
+                let mut warm = SwapEngine::from_warm(&g2, &o, parts);
+                warm.apply_deltas(&out.records);
+                let ws = refiner
+                    .refine_warm(&mut warm, &g2, &out.touched)
+                    .expect("quiescent weight-only resume must be accepted");
+
+                let mut cold = SwapEngine::new(&g2, &o, sigma_opt);
+                let cs = mk(2).threads(t).refine(&mut cold, &g2, &mut Rng::new(1));
+
+                assert_eq!(warm.mapping(), cold.mapping(), "rot={rot} t={t}");
+                assert_eq!(warm.objective(), cold.objective(), "rot={rot} t={t}");
+                assert_eq!(ws.improved, cs.improved, "rot={rot} t={t}");
+                assert!(
+                    ws.evaluated < cs.evaluated,
+                    "partial re-seed must evaluate strictly less: rot={rot} t={t} \
+                     {} vs {}",
+                    ws.evaluated,
+                    cs.evaluated
+                );
+                assert_eq!(warm.objective(), warm.recompute_objective());
+
+                // empty-delta remap on the already-converged state: a pure
+                // no-op — nothing evaluated, nothing moved
+                let sigma_now = warm.mapping();
+                let j_now = warm.objective();
+                let ns = refiner
+                    .refine_warm(&mut warm, &g2, &[])
+                    .expect("empty-delta resume must be accepted");
+                assert_eq!(ns.evaluated, 0);
+                assert_eq!(ns.improved, 0);
+                assert_eq!(warm.mapping(), sigma_now);
+                assert_eq!(warm.objective(), j_now);
+            }
+        }
+    }
+
+    #[test]
+    fn refine_warm_refuses_without_quiescence_or_after_structural_change() {
+        use crate::graph::EdgeDelta;
+        let (g, o) = setup(6, 150);
+        let m = {
+            let mut r = Rng::new(151);
+            Mapping { sigma: r.permutation(g.n()) }
+        };
+        let mut gc = GainCacheNc::new(2);
+        let mut eng = SwapEngine::new(&g, &o, m);
+        assert!(
+            gc.refine_warm(&mut eng, &g, &[0, 1]).is_none(),
+            "no prior drain: must refuse"
+        );
+        gc.refine(&mut eng, &g, &mut Rng::new(1));
+        // a structural insert shifts the packed move-id space: must refuse
+        let mut far = 1 as NodeId;
+        while g.edge_weight(0, far).is_some() {
+            far += 1;
+        }
+        let mut g2 = g.clone();
+        let out = g2.apply_deltas(&[EdgeDelta { u: 0, v: far, w: 3 }]).unwrap();
+        assert!(out.structural);
+        let parts = eng.into_warm_parts();
+        let mut warm = SwapEngine::from_warm(&g2, &o, parts);
+        warm.apply_deltas(&out.records);
+        assert!(
+            gc.refine_warm(&mut warm, &g2, &out.touched).is_none(),
+            "structural delta: must refuse and fall back to a full refine"
+        );
+        // the fallback full refine still works and re-arms quiescence
+        gc.refine(&mut warm, &g2, &mut Rng::new(1));
+        assert!(gc.refine_warm(&mut warm, &g2, &[]).is_some());
     }
 
     #[test]

@@ -262,6 +262,24 @@ pub trait Refiner: Send {
     /// compiling — they simply run to convergence. A disarmed token
     /// restores the zero-overhead uncontrolled behavior.
     fn set_control(&mut self, _ctrl: &RunControl) {}
+    /// Warm-started refinement for the REMAP path: the engine was
+    /// resurrected at this refiner's own previous local optimum and then
+    /// delta-patched ([`SwapEngine::apply_deltas`]), and `touched` lists the
+    /// vertices whose incident edge weights changed. A refiner that keeps
+    /// enough state to resume — today only [`GainCacheNc`], whose persisted
+    /// gain/stamp arrays are exact at a completed drain — re-seeds just the
+    /// moves incident to `touched` and drains from there, returning
+    /// `Some(stats)`. The default (and any refiner whose preconditions are
+    /// not met) returns `None`, telling the caller to fall back to a full
+    /// [`Self::refine`].
+    fn refine_warm(
+        &mut self,
+        _engine: &mut dyn Swapper,
+        _comm: &Graph,
+        _touched: &[NodeId],
+    ) -> Option<SearchStats> {
+        None
+    }
 }
 
 /// The no-op refiner ([`Neighborhood::None`]): construction-only specs run

@@ -11,6 +11,9 @@
 //!   random machines, and machine folds are exact (fully exact for
 //!   hierarchies, representative-exact for grids/tori)
 //! * neighborhood nesting: N_C ⊆ N_C² ⊆ … (pair-set sizes monotone)
+//! * warm REMAP resume (`apply_deltas` + partial re-seed) lands on the
+//!   same union-neighborhood local optimum as a cold rebuild from the
+//!   same σ, on random rgg/gnp drifts and at T ∈ {1, 2, 4}
 
 use qapmap::gen::{gnp, random_geometric_graph};
 use qapmap::graph::{contract, Graph};
@@ -406,6 +409,102 @@ fn prop_free_running_drain_certifies_optimum_and_is_no_worse_in_aggregate() {
         geo_free <= geo_seq * 1.01,
         "free-running drain degraded aggregate quality: geomean {geo_free:.1} vs sequential {geo_seq:.1}"
     );
+}
+
+#[test]
+fn prop_remap_warm_resume_equals_cold_rebuild() {
+    // the REMAP correctness contract, swept over random instances: drain a
+    // gain-cache search to quiescence, weight-drift a random ≤5% of the
+    // edges, resume warm (engine delta-patch + partial re-seed of the
+    // delta-incident move ids) — the final mapping and objective must be
+    // bit-identical to a cold full-seed refine on the drifted graph started
+    // from the same σ, at T ∈ {1, 2, 4}, while evaluating strictly fewer
+    // moves; and the drained state must certify the union-neighborhood
+    // local optimum. The incremental fingerprint contract rides along.
+    use qapmap::graph::EdgeDelta;
+    use qapmap::mapping::refine::{comm_triangles, GainCacheNc, Refiner};
+    for seed in 320..328u64 {
+        let mut rng = Rng::new(seed);
+        let n = 64 << rng.index(2); // 64 or 128
+        let comm = random_comm(&mut rng, n);
+        let h = random_hierarchy(&mut rng, n);
+        let oracle = Machine::implicit(h);
+        let d = 1 + rng.index(2) as u32;
+        let rot = rng.chance(0.5);
+        let start = Mapping { sigma: rng.permutation(n) };
+
+        // random weight-only drift over existing edges (new weights ≥ 1,
+        // so the batch never inserts or removes edges)
+        let mut edges = Vec::new();
+        for u in 0..n as u32 {
+            for (v, w) in comm.edges(u) {
+                if v > u {
+                    edges.push((u, v, w));
+                }
+            }
+        }
+        assert!(!edges.is_empty(), "seed {seed}: degenerate instance");
+        let k = (edges.len() / 20).max(1);
+        let deltas: Vec<EdgeDelta> = (0..k)
+            .map(|_| {
+                let (u, v, w) = edges[rng.index(edges.len())];
+                EdgeDelta { u, v, w: 1 + rng.next_bounded(2 * w) }
+            })
+            .collect();
+        let mut g2 = comm.clone();
+        let out = g2.apply_deltas(&deltas).unwrap();
+        assert!(!out.structural, "seed {seed}: drift must stay weight-only");
+        assert_eq!(
+            comm.fingerprint().wrapping_add(out.fp_delta),
+            g2.fingerprint(),
+            "seed {seed}: incremental fingerprint diverged"
+        );
+
+        let mk = || if rot { GainCacheNc::with_rotations(d) } else { GainCacheNc::new(d) };
+        for t in [1usize, 2, 4] {
+            let mut refiner = mk().threads(t);
+            let mut eng = SwapEngine::new(&comm, &oracle, start.clone());
+            refiner.refine(&mut eng, &comm, &mut Rng::new(1));
+            let parts = eng.into_warm_parts();
+            let sigma_opt = parts.mapping.clone();
+
+            let mut warm = SwapEngine::from_warm(&g2, &oracle, parts);
+            warm.apply_deltas(&out.records);
+            let ws = refiner
+                .refine_warm(&mut warm, &g2, &out.touched)
+                .unwrap_or_else(|| panic!("seed {seed} t={t}: quiescent resume refused"));
+
+            let mut cold = SwapEngine::new(&g2, &oracle, sigma_opt);
+            let cs = mk().threads(t).refine(&mut cold, &g2, &mut Rng::new(1));
+
+            assert_eq!(warm.mapping(), cold.mapping(), "seed {seed} t={t} σ mismatch");
+            assert_eq!(warm.objective(), cold.objective(), "seed {seed} t={t} J mismatch");
+            assert_eq!(ws.improved, cs.improved, "seed {seed} t={t}");
+            assert!(
+                ws.evaluated < cs.evaluated,
+                "seed {seed} t={t}: partial re-seed must evaluate strictly less \
+                 ({} vs {})",
+                ws.evaluated,
+                cs.evaluated
+            );
+
+            // quiescence certificate on the drifted graph
+            for &(a, b) in &nc_pairs(&g2, d) {
+                assert!(warm.swap_gain(a, b) <= 0, "seed {seed} t={t}: improving pair");
+            }
+            if rot {
+                for &(a, b, c) in &comm_triangles(&g2) {
+                    assert!(warm.rotate3_gain(a, b, c) <= 0, "seed {seed} t={t}: rotation");
+                    assert!(
+                        warm.rotate3_gain(a, c, b) <= 0,
+                        "seed {seed} t={t}: reverse rotation"
+                    );
+                }
+            }
+            warm.mapping().validate().unwrap();
+            assert_eq!(warm.objective(), warm.recompute_objective(), "seed {seed} t={t}");
+        }
+    }
 }
 
 #[test]
