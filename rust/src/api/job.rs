@@ -45,8 +45,11 @@ pub enum VerifyPolicy {
 /// against and whether the default template had to be folded to fit.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MachineResolution {
-    /// Canonical machine grammar name (`Machine::spec`), or `"explicit"`
-    /// for raw-matrix machines the grammar cannot express.
+    /// Canonical machine grammar name (`Machine::spec`). Raw-matrix
+    /// machines carry the stable `explicit:<n>` placeholder (display-only:
+    /// `Machine::parse` rejects it, since the matrix is not
+    /// reconstructible from a name); folded or programmatic subsystem
+    /// trees, which have no grammar name either, fall back to their kind.
     pub spec: String,
     /// True when no machine was given and [`resolve_machine`] applied the
     /// default template.
@@ -60,9 +63,12 @@ pub struct MachineResolution {
 
 impl MachineResolution {
     /// Resolution for an explicitly supplied machine (nothing inferred).
+    /// `Machine::spec` covers every named machine including the
+    /// `explicit:<n>` placeholder; only nameless trees (folded or built
+    /// programmatically) fall back to the bare kind string.
     pub fn explicit(machine: &Machine) -> MachineResolution {
         MachineResolution {
-            spec: machine.spec().unwrap_or_else(|_| "explicit".to_string()),
+            spec: machine.spec().unwrap_or_else(|_| machine.kind().to_string()),
             inferred: false,
             partial_top_folded: false,
         }
@@ -477,7 +483,8 @@ impl MapResponse {
 /// instance, with a structured [`MachineResolution`] report instead of the
 /// old once-per-process flat-fallback warning.
 ///
-/// Precedence: `machine` (full grammar, e.g. `torus:4x4x4@1`) wins over
+/// Precedence: `machine` (full grammar, e.g. `torus:4x4x4@1` or
+/// `fattree:4,8:8@1:10:100`) wins over
 /// `s`/`d` (the paper's `--S`/`--D` hierarchy notation); when both are
 /// empty the default template `4:16:(n/64) @ 1:10:100` applies. When `n`
 /// does not divide the template, partial levels are *folded* by gcd
@@ -559,6 +566,46 @@ fn default_machine(n: usize) -> Result<Machine, String> {
     }
 }
 
+/// Resolve a *measured* row-major `n × n` distance matrix into a machine —
+/// the matrix-input sibling of [`resolve_machine`] for callers that probed
+/// their system instead of naming it. Recognized structure
+/// ([`crate::model::topology::infer::infer_machine`]: hierarchy, grid,
+/// torus) yields the structured machine with its grammar spec and
+/// `inferred = true`; a well-formed matrix in no family falls back to the
+/// raw [`crate::model::topology::ExplicitTopology`] (spec
+/// `explicit:<n>`, O(n²) memory — the resolution records the inference,
+/// so reports show the machine was *not* recognized). Malformed matrices
+/// (asymmetry, non-zero diagonal, degenerate sizes) are errors.
+pub fn resolve_matrix_machine(
+    n: usize,
+    matrix: &[crate::graph::Weight],
+) -> Result<(Machine, MachineResolution), String> {
+    use crate::model::topology::infer::{infer_machine, InferError};
+    use crate::model::topology::ExplicitTopology;
+    match infer_machine(n, matrix) {
+        Ok(m) => {
+            let m = m.into_machine();
+            let resolution = MachineResolution {
+                spec: m.spec()?,
+                inferred: true,
+                partial_top_folded: false,
+            };
+            Ok((m, resolution))
+        }
+        Err(InferError::Mixed { .. }) => {
+            let e = ExplicitTopology::from_matrix(n, matrix.to_vec())?;
+            let m = Machine::Explicit(e);
+            let resolution = MachineResolution {
+                spec: m.spec()?,
+                inferred: true,
+                partial_top_folded: false,
+            };
+            Ok((m, resolution))
+        }
+        Err(e) => Err(format!("matrix is not a usable distance matrix: {e:?}")),
+    }
+}
+
 fn gcd(a: u64, b: u64) -> u64 {
     if b == 0 {
         a
@@ -614,6 +661,34 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(err.contains("PEs"), "{err}");
+    }
+
+    #[test]
+    fn builder_accepts_tree_machines_and_resolution_names_them() {
+        let (g, _) = sample(64);
+        let job = MapJobBuilder::for_machine(g.clone(), Machine::parse("fattree:4,4:8").unwrap())
+            .build()
+            .unwrap();
+        assert_eq!(job.machine().kind(), "tree");
+        assert_eq!(job.machine().n_pes(), 64);
+        assert_eq!(job.machine_resolution().spec, "fattree:4,4:8@1:10:100");
+
+        // --machine resolution routes tree grammar through Machine::parse
+        let (m, r) = resolve_machine(64, "dragonfly:4,4:8@1:10:100", "", "").unwrap();
+        assert_eq!(m.kind(), "tree");
+        assert!(!r.inferred);
+        assert_eq!(r.spec, "dragonfly:4,4:8@1:10:100");
+        assert!(resolve_machine(65, "fattree:4,4:8", "", "").is_err());
+    }
+
+    #[test]
+    fn explicit_machine_resolution_uses_stable_placeholder() {
+        use crate::model::topology::ExplicitTopology;
+        let e = ExplicitTopology::from_matrix(2, vec![0, 5, 5, 0]).unwrap();
+        let r = MachineResolution::explicit(&Machine::Explicit(e));
+        assert_eq!(r.spec, "explicit:2");
+        // the placeholder is display-only: it never parses back
+        assert!(Machine::parse("explicit:2").is_err());
     }
 
     #[test]
@@ -795,6 +870,33 @@ mod tests {
         let (m, r) = resolve_machine(4, "torus:1x1x4", "", "").unwrap();
         assert_eq!(r.spec, "torus:4@1");
         assert_eq!(Machine::parse(&r.spec).unwrap(), m);
+    }
+
+    #[test]
+    fn resolve_matrix_machine_recognizes_structure_or_falls_back() {
+        use crate::model::topology::{GridTopology, Hierarchy, Topology};
+        // ultrametric probe → hierarchy with its grammar spec
+        let h = Hierarchy::new(vec![2, 2], vec![1, 10]).unwrap();
+        let (m, r) = resolve_matrix_machine(4, &h.explicit_matrix()).unwrap();
+        assert_eq!(m.kind(), "hier");
+        assert_eq!(r.spec, "hier:2:2@1:10");
+        assert!(r.inferred);
+
+        // Manhattan probe → grid
+        let g = GridTopology::new(vec![4, 2], 1).unwrap();
+        let (m, r) = resolve_matrix_machine(8, &g.explicit_matrix()).unwrap();
+        assert_eq!(m.kind(), "grid");
+        assert_eq!(r.spec, "grid:4x2@1");
+
+        // recognizable by neither family → explicit fallback, placeholder spec
+        let mixed = vec![0, 1, 3, 1, 0, 1, 3, 1, 0];
+        let (m, r) = resolve_matrix_machine(3, &mixed).unwrap();
+        assert_eq!(m.kind(), "explicit");
+        assert_eq!(r.spec, "explicit:3");
+        assert_eq!(m.distance(0, 2), 3);
+
+        // malformed matrices are errors, not fallbacks
+        assert!(resolve_matrix_machine(2, &[0, 1, 2, 0]).is_err());
     }
 
     #[test]

@@ -55,7 +55,8 @@ pub mod session;
 
 pub use crate::mapping::multilevel::LevelStat;
 pub use job::{
-    resolve_machine, MachineResolution, MapJob, MapJobBuilder, OracleMode, VerifyPolicy,
+    resolve_machine, resolve_matrix_machine, MachineResolution, MapJob, MapJobBuilder, OracleMode,
+    VerifyPolicy,
 };
 pub use report::{MapReport, RepStat};
 pub use session::{MapSession, RemapOutcome, VERIFY_RTOL};

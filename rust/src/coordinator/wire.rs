@@ -59,9 +59,12 @@
 //! The request header ends with optional `key=value` tokens — the same
 //! backward-compatible extension style as the `REP` lines below. A
 //! hierarchy machine travels in the classic `<S> <D>` tokens (old servers
-//! parse new clients' default-knob jobs unchanged); grids and tori put
-//! `-` placeholders there and carry the full machine grammar in a
-//! `machine=` token (e.g. `machine=torus:4x4x4@1`). `levels=` and
+//! parse new clients' default-knob jobs unchanged); grids, tori, and
+//! subsystem trees put `-` placeholders there and carry the full machine
+//! grammar in a `machine=` token (e.g. `machine=torus:4x4x4@1` or
+//! `machine=fattree:4,8:8@1:10:100`). Explicit-matrix machines have no
+//! grammar that reconstructs them, so [`write_request`] refuses them
+//! client-side with an error naming the kind. `levels=` and
 //! `coarsen_limit=` expose the V-cycle depth knobs; `threads=` carries the
 //! shared-memory thread budget (`0` = server auto-detect, values above
 //! [`crate::util::MAX_THREADS`] are rejected at parse time). Readers accept
@@ -191,6 +194,19 @@ pub fn write_request<W: Write>(w: &mut W, req: &MapRequest) -> Result<()> {
             let s: Vec<String> = h.s.iter().map(|x| x.to_string()).collect();
             let d: Vec<String> = h.d.iter().map(|x| x.to_string()).collect();
             (s.join(":"), d.join(":"), None)
+        }
+        Machine::Explicit(e) => {
+            use crate::model::topology::Topology;
+            // spec() yields the stable `explicit:<n>` placeholder, but the
+            // server cannot rebuild the n×n matrix from a name — refuse
+            // client-side with the machine kind spelled out instead of
+            // shipping a token the far end must reject.
+            bail!(
+                "explicit-matrix machine (explicit:{}) cannot travel on the wire: \
+                 the distance matrix is not reconstructible from its name; send a \
+                 structured spec (hier:/grid:/torus:/fattree:/dragonfly:) instead",
+                e.n_pes()
+            );
         }
         m => ("-".to_string(), "-".to_string(), Some(m.spec().map_err(|e| anyhow!(e))?)),
     };
@@ -1431,6 +1447,60 @@ mod tests {
             assert_eq!(back.levels, Some(3));
             assert_eq!(back.coarsen_limit, Some(16));
         }
+    }
+
+    #[test]
+    fn tree_machines_round_trip_via_machine_token() {
+        // fat-tree / dragonfly specs desugar to subsystem trees; the wire
+        // carries the original grammar string and the parse side rebuilds
+        // an identical machine (distances and all)
+        for spec in ["fattree:8,8:8@1:10:100", "dragonfly:4,4,4,4:8@1:20:400"] {
+            let mut req = sample_request();
+            req.machine = Machine::parse(spec).unwrap();
+            let mut buf = Vec::new();
+            write_request(&mut buf, &req).unwrap();
+            let header = std::str::from_utf8(&buf).unwrap().lines().next().unwrap().to_string();
+            assert!(header.contains(&format!("machine={spec}")), "{header}");
+            let back = read_request(&mut BufReader::new(&buf[..])).unwrap();
+            assert_eq!(back.machine, req.machine, "{spec}");
+            assert_eq!(back.machine.spec().unwrap(), spec);
+        }
+        // default distances canonicalize on the wire and still round-trip
+        let mut req = sample_request();
+        req.machine = Machine::parse("fattree:2,2:32").unwrap();
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req).unwrap();
+        let header = std::str::from_utf8(&buf).unwrap().lines().next().unwrap().to_string();
+        assert!(header.contains("machine=fattree:2,2:32@1:10:100"), "{header}");
+        assert_eq!(read_request(&mut BufReader::new(&buf[..])).unwrap().machine, req.machine);
+    }
+
+    #[test]
+    fn malformed_machine_specs_rejected_at_parse() {
+        for bad in [
+            "MAP v1 1 mm - - 1 0 0 4 0 machine=fattree:4,8\nEND\n",
+            "MAP v1 1 mm - - 1 0 0 4 0 machine=fattree:0,8:4\nEND\n",
+            "MAP v1 1 mm - - 1 0 0 4 0 machine=dragonfly:3,3:2@1:10\nEND\n",
+            "MAP v1 1 mm - - 1 0 0 4 0 machine=explicit:8\nEND\n",
+        ] {
+            assert!(
+                read_request(&mut BufReader::new(bad.as_bytes())).is_err(),
+                "{bad:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn explicit_machine_refused_client_side() {
+        use crate::model::topology::ExplicitTopology;
+        let mut req = sample_request();
+        let flat = vec![0, 5, 9, 5, 0, 9, 9, 9, 0];
+        req.machine = Machine::Explicit(ExplicitTopology::from_matrix(3, flat).unwrap());
+        let mut buf = Vec::new();
+        let err = write_request(&mut buf, &req).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("explicit-matrix machine (explicit:3)"), "{msg}");
+        assert!(msg.contains("fattree:"), "{msg}");
     }
 
     #[test]

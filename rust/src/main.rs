@@ -74,7 +74,8 @@ fn usage() {
         "qapmap — process mapping & sparse quadratic assignment\n\
          commands:\n  \
          map        --inst <name>|--graph <file.metis> --blocks <k>\n  \
-                    [--machine hier:4:16:2@1:10:100 | grid:8x8@1 | torus:4x4x4@1]\n  \
+                    [--machine hier:4:16:2@1:10:100 | grid:8x8@1 | torus:4x4x4@1\n  \
+                     | fattree:4,8:8@1:10:100 | dragonfly:4,4,4:8@1:10:100]\n  \
                     [--S a:b:c --D x:y:z]   (legacy hierarchy notation)\n  \
                     [--algo topdown+Nc10 | topdown+gc:nc10 | topdown+gc:nccyc10 | ml:topdown+Nc5]\n  \
                     [--seed 1] [--reps 1] [--threads 1]   (0 = auto-detect)\n  \
@@ -93,7 +94,8 @@ fn usage() {
          gen        --inst rgg12 --out file.metis [--seed 1]\n  \
          partition  --graph file.metis --blocks k [--out part.txt] [--epsilon 0.0]\n  \
          verify     --inst rgg8 --blocks 64 --S 4:16 --D 1:10 [--algo topdown]\n  \
-         infer      --matrix dist.txt   (whitespace-separated n*n matrix) — recover S/D"
+         infer      --matrix dist.txt   (whitespace-separated n*n matrix) —\n  \
+                    recognize a hierarchy (S/D), grid or torus"
     );
 }
 
@@ -456,9 +458,11 @@ fn cmd_partition(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Recover a hierarchy description from an explicit distance matrix
-/// (paper §5 future work; see `model::topology::infer`).
+/// Recognize an explicit distance matrix as a structured machine —
+/// hierarchy (paper §5 future work), grid or torus; see
+/// `model::topology::infer::infer_machine`.
 fn cmd_infer(args: &Args) -> Result<()> {
+    use qapmap::model::topology::infer::{infer_machine, InferError, InferredMachine};
     let path = args.options.get("matrix").ok_or_else(|| anyhow!("--matrix required"))?;
     let text = std::fs::read_to_string(path)?;
     let vals: Vec<u64> = text
@@ -469,8 +473,8 @@ fn cmd_infer(args: &Args) -> Result<()> {
     if n * n != vals.len() {
         bail!("{} entries is not a square matrix", vals.len());
     }
-    match qapmap::model::topology::infer::infer_hierarchy(n, &vals) {
-        Ok(h) => {
+    match infer_machine(n, &vals) {
+        Ok(InferredMachine::Hier(h)) => {
             let s: Vec<String> = h.s.iter().map(|x| x.to_string()).collect();
             let d: Vec<String> = h.d.iter().map(|x| x.to_string()).collect();
             println!("S = {}", s.join(":"));
@@ -478,6 +482,17 @@ fn cmd_infer(args: &Args) -> Result<()> {
             println!("({} PEs, {} levels)", h.n_pes(), h.levels());
             Ok(())
         }
+        Ok(m) => {
+            let machine = m.into_machine();
+            println!("machine = {}", machine.spec().map_err(|e| anyhow!(e))?);
+            println!("({} PEs, {})", machine.n_pes(), machine.kind());
+            Ok(())
+        }
+        Err(InferError::Mixed { hierarchy, lattice }) => bail!(
+            "matrix matches no structured machine family:\n  \
+             hierarchy: {hierarchy:?}\n  lattice: {lattice}\n\
+             use --explicit-distances to map against the raw matrix"
+        ),
         Err(e) => bail!("inference failed: {e:?} — use --explicit-distances instead"),
     }
 }

@@ -17,9 +17,9 @@
 //!   external comparison): simultaneously bisect process set and PE range.
 
 use super::algorithms::Construction;
-use crate::graph::{contract, induced_subgraph, Graph, NodeId};
-use crate::model::topology::{Hierarchy, Machine};
-use crate::partition::kway::{bisect_multilevel, exact_block_sizes};
+use crate::graph::{contract, induced_subgraph, Graph, NodeId, Weight};
+use crate::model::topology::{Hierarchy, Machine, SubsystemTree, Topology};
+use crate::partition::kway::{bisect_multilevel, exact_block_sizes, partition_exact_sizes};
 use crate::partition::{partition_kway, PartitionConfig};
 use crate::util::Rng;
 
@@ -33,7 +33,9 @@ use super::objective::Mapping;
 /// query — the session passes its cached oracle here.
 ///
 /// Non-hierarchical machines reuse the registry through their natural
-/// counterparts: Top-Down / Bottom-Up multisect grids and tori along their
+/// counterparts: Top-Down / Bottom-Up multisect non-uniform subsystem trees
+/// along the tree itself ([`top_down_tree`] / [`bottom_up_tree`] — unequal
+/// child blocks via exact-size partitions) and grids/tori along their
 /// dimensions (the [`recursion_levels`] pseudo-hierarchy — the recursions
 /// only consume fan-outs and contiguous PE ranges, which row-major grid
 /// slabs are), and GreedyAllC runs its direct oracle-driven form
@@ -54,8 +56,14 @@ pub fn initial(
             Some(h) => greedy_all_c(comm, h),
             None => greedy_all_c_generic(comm, oracle),
         },
-        Construction::TopDown => top_down(comm, &recursion_levels(machine), part_cfg, rng),
-        Construction::BottomUp => bottom_up(comm, &recursion_levels(machine), part_cfg, rng),
+        Construction::TopDown => match machine.tree() {
+            Some(t) => top_down_tree(comm, t, part_cfg, rng),
+            None => top_down(comm, &recursion_levels(machine), part_cfg, rng),
+        },
+        Construction::BottomUp => match machine.tree() {
+            Some(t) => bottom_up_tree(comm, t, part_cfg, rng),
+            None => bottom_up(comm, &recursion_levels(machine), part_cfg, rng),
+        },
         Construction::Rcb => rcb(comm, part_cfg, rng),
     }
 }
@@ -73,7 +81,9 @@ fn recursion_levels(machine: &Machine) -> Hierarchy {
         Machine::Hier(h) => return h.clone(),
         Machine::Grid(g) => g.dims().to_vec(),
         Machine::Torus(t) => t.dims().to_vec(),
-        Machine::Explicit(e) => vec![e.n_pes() as u64],
+        // subsystem trees are routed to the dedicated tree recursions by
+        // `initial`; a direct call degrades like an explicit machine
+        Machine::Tree(_) | Machine::Explicit(_) => vec![machine.n_pes() as u64],
     };
     // distances are never consulted by the recursions; any non-decreasing
     // placeholder satisfies the Hierarchy constructor
@@ -382,6 +392,64 @@ fn top_down_rec(
     }
 }
 
+/// Top-Down construction over a non-uniform [`SubsystemTree`]: at each
+/// inner subsystem, partition the induced communication subgraph into
+/// blocks of *exactly* the child subtrees' PE counts (unequal in general —
+/// [`partition_exact_sizes`]); each block recurses into its child, whose
+/// contiguous PE range the tree prescribes. The uniform case degenerates to
+/// [`top_down`]'s split shape level by level.
+pub fn top_down_tree(
+    comm: &Graph,
+    tree: &SubsystemTree,
+    cfg: &PartitionConfig,
+    rng: &mut Rng,
+) -> Mapping {
+    let n = comm.n();
+    assert_eq!(n, tree.n_pes(), "processes ({n}) != PEs ({})", tree.n_pes());
+    let mut sigma = vec![u32::MAX; n];
+    let nodes: Vec<NodeId> = (0..n as NodeId).collect();
+    top_down_tree_rec(comm, &nodes, tree, 0, &mut sigma, cfg, rng);
+    Mapping { sigma }
+}
+
+fn top_down_tree_rec(
+    orig: &Graph,
+    verts: &[NodeId],
+    tree: &SubsystemTree,
+    node: u32,
+    sigma: &mut [u32],
+    cfg: &PartitionConfig,
+    rng: &mut Rng,
+) {
+    let s = tree.nodes()[node as usize];
+    debug_assert_eq!(verts.len(), s.pe_count as usize);
+    if s.n_children == 0 {
+        // leaf subsystem: all PEs equidistant — any order is optimal
+        for (i, &v) in verts.iter().enumerate() {
+            sigma[v as usize] = s.pe_start + i as u32;
+        }
+        return;
+    }
+    if s.n_children == 1 {
+        top_down_tree_rec(orig, verts, tree, s.first_child, sigma, cfg, rng);
+        return;
+    }
+    let children: Vec<u32> = tree.children(node).collect();
+    let sizes: Vec<Weight> =
+        children.iter().map(|&c| tree.nodes()[c as usize].pe_count as Weight).collect();
+    let (sub, map) = induced_subgraph(orig, verts);
+    let part = partition_exact_sizes(&sub, &sizes, cfg, rng);
+    let mut members: Vec<Vec<NodeId>> =
+        sizes.iter().map(|&bs| Vec::with_capacity(bs as usize)).collect();
+    for v in 0..sub.n() {
+        members[part.block[v] as usize].push(map[v]);
+    }
+    for (b, member) in members.into_iter().enumerate() {
+        debug_assert_eq!(member.len() as Weight, sizes[b], "block {b} missed its size");
+        top_down_tree_rec(orig, &member, tree, children[b], sigma, cfg, rng);
+    }
+}
+
 /// Bottom-Up multilevel construction (§3.1): partition the communication
 /// graph into blocks of exactly `a_1` vertices, contract (summing parallel
 /// edges), repeat with `a_2`, …; unwinding the recursion assigns block
@@ -416,6 +484,67 @@ fn bottom_up_rec(g: &Graph, levels: &[u64], cfg: &PartitionConfig, rng: &mut Rng
     for v in 0..g.n() {
         let b = part.block[v] as usize;
         pos[v] = pos_of_block[b] * a as u32 + counter[b];
+        counter[b] += 1;
+    }
+    pos
+}
+
+/// Bottom-Up construction over a non-uniform [`SubsystemTree`]: partition
+/// into blocks of exactly the leaf sizes, contract, recurse on the
+/// leaf-folded machine ([`SubsystemTree::fold_leaves`], exact by
+/// ultrametricity), then unwind placing blocks by sequential allocation in
+/// coarse-position order — the unequal-blocks analogue of [`bottom_up`]'s
+/// `pos·a + rank` rule. When a block's size differs from the leaf at its
+/// assigned position the layout shears across leaf boundaries; downstream
+/// refinement absorbs that (the machine fold itself stays exact).
+pub fn bottom_up_tree(
+    comm: &Graph,
+    tree: &SubsystemTree,
+    cfg: &PartitionConfig,
+    rng: &mut Rng,
+) -> Mapping {
+    let n = comm.n();
+    assert_eq!(n, tree.n_pes(), "processes ({n}) != PEs ({})", tree.n_pes());
+    Mapping { sigma: bottom_up_tree_rec(comm, tree, cfg, rng) }
+}
+
+/// Returns the position (PE index) of each vertex of `g` under `tree`.
+fn bottom_up_tree_rec(
+    g: &Graph,
+    tree: &SubsystemTree,
+    cfg: &PartitionConfig,
+    rng: &mut Rng,
+) -> Vec<u32> {
+    let sizes = tree.leaf_sizes();
+    if g.n() <= 1 || sizes.len() < 2 {
+        // flat subsystem (single leaf): all PEs equidistant
+        return (0..g.n() as u32).collect();
+    }
+    debug_assert_eq!(sizes.iter().sum::<u64>(), g.n() as u64);
+    let k = sizes.len();
+    let wsizes: Vec<Weight> = sizes.iter().map(|&bs| bs as Weight).collect();
+    let part = partition_exact_sizes(g, &wsizes, cfg, rng);
+    let coarse = contract(g, &part.block, k);
+    let folded = tree.fold_leaves().expect("a multi-leaf non-unit tree folds its leaves");
+    let pos_of_block = bottom_up_tree_rec(&coarse, &folded, cfg, rng);
+    // sequential allocation: lay the blocks out in coarse-position order,
+    // each taking a consecutive fine range of its own size
+    let mut block_at_pos = vec![0u32; k];
+    for (b, &p) in pos_of_block.iter().enumerate() {
+        block_at_pos[p as usize] = b as u32;
+    }
+    let mut start = vec![0u32; k];
+    let mut acc = 0u32;
+    for &b in &block_at_pos {
+        start[b as usize] = acc;
+        acc += sizes[b as usize] as u32;
+    }
+    debug_assert_eq!(acc as usize, g.n(), "block sizes must tile the PEs");
+    let mut counter = vec![0u32; k];
+    let mut pos = vec![0u32; g.n()];
+    for v in 0..g.n() {
+        let b = part.block[v] as usize;
+        pos[v] = start[b] + counter[b];
         counter[b] += 1;
     }
     pos
@@ -604,7 +733,7 @@ mod tests {
         let mut rng = Rng::new(34);
         let g = random_geometric_graph(96, &mut rng);
         let cfg = PartitionConfig::perfectly_balanced();
-        for spec in ["grid:12x8@1", "torus:4x4x6@1"] {
+        for spec in ["grid:12x8@1", "torus:4x4x6@1", "fattree:4,8:8", "dragonfly:3,3,2:12"] {
             let machine = Machine::parse(spec).unwrap();
             for c in [
                 Construction::Identity,
@@ -634,6 +763,49 @@ mod tests {
         let j_td = objective(&g, &machine, &td);
         let j_rd = objective(&g, &machine, &rd);
         assert!((j_td as f64) < 0.8 * j_rd as f64, "topdown {j_td} vs random {j_rd}");
+    }
+
+    #[test]
+    fn fattree_topdown_beats_random_and_respects_pods() {
+        // unequal pods (32 and 64 PEs): the tree multisection must place
+        // heavy subgraphs inside pods, clearly beating random placement
+        let mut rng = Rng::new(36);
+        let g = random_geometric_graph(96, &mut rng);
+        let machine = Machine::parse("fattree:2,4:16@1:10:100").unwrap();
+        let cfg = PartitionConfig::perfectly_balanced();
+        let td = initial(&g, &machine, &machine, Construction::TopDown, &cfg, &mut rng);
+        td.validate().unwrap();
+        let rd = random(g.n(), &mut rng);
+        let j_td = objective(&g, &machine, &td);
+        let j_rd = objective(&g, &machine, &rd);
+        assert!((j_td as f64) < 0.8 * j_rd as f64, "topdown {j_td} vs random {j_rd}");
+        // intra-leaf traffic dominates random's, like the hierarchy case
+        let t = machine.tree().unwrap();
+        let intra = |m: &Mapping| {
+            let mut c = 0u64;
+            for u in 0..g.n() as NodeId {
+                for (v, w) in g.edges(u) {
+                    if v > u && t.same_leaf_group(m.sigma[u as usize], m.sigma[v as usize]) {
+                        c += w;
+                    }
+                }
+            }
+            c
+        };
+        assert!(intra(&td) > 2 * intra(&rd), "td {} vs random {}", intra(&td), intra(&rd));
+    }
+
+    #[test]
+    fn fattree_bottom_up_quality_reasonable() {
+        let mut rng = Rng::new(37);
+        let g = random_geometric_graph(96, &mut rng);
+        let machine = Machine::parse("fattree:2,4:16@1:10:100").unwrap();
+        let cfg = PartitionConfig::perfectly_balanced();
+        let bu = initial(&g, &machine, &machine, Construction::BottomUp, &cfg, &mut rng);
+        bu.validate().unwrap();
+        let j_bu = objective(&g, &machine, &bu);
+        let j_rd = objective(&g, &machine, &random(g.n(), &mut rng));
+        assert!((j_bu as f64) < 0.8 * j_rd as f64, "bottomup {j_bu} vs random {j_rd}");
     }
 
     #[test]

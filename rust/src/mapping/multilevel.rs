@@ -7,38 +7,42 @@
 //! solution-quality lever for these sparse QAPs. This module implements
 //! that V-cycle on top of the [`crate::mapping::refine`] framework:
 //!
-//! 1. **Coarsen** the communication graph with
-//!    [`crate::partition::coarsen::coarsen_groups`] — heavy-edge groupings
-//!    completed to *exact* clusterings, so every level shrinks by exactly
-//!    the machine's fold group. In lock-step, the machine topology is
-//!    **folded** through [`crate::model::topology::Topology::fold`]: each
-//!    group of `g` consecutive PEs becomes one coarse PE, where `g =
-//!    fold_group()` is chosen per topology (2 for even innermost structure;
-//!    the whole innermost level/dimension when odd, so `3:16:k` machines
-//!    coarsen in triples instead of bailing). Hierarchy folds are fully
-//!    exact; grid/torus folds are representative-exact (see the topology
-//!    module docs).
+//! 1. **Coarsen** the communication graph in lock-step with the machine.
+//!    Each step's shape comes from the machine as a
+//!    [`crate::model::topology::FoldPlan`]: uniform machines fold every
+//!    `g` consecutive PEs into one coarse PE (`FoldPlan::Uniform`, the
+//!    graph side matched by
+//!    [`crate::partition::coarsen::coarsen_groups`] — `g = 2` for even
+//!    innermost structure, the whole innermost level/dimension when odd,
+//!    so `3:16:k` machines coarsen in triples instead of bailing); a
+//!    [`crate::model::topology::SubsystemTree`] with coprime leaf sizes
+//!    folds whole *unequal* leaves (`FoldPlan::Blocks`, matched by
+//!    [`crate::partition::coarsen::coarsen_blocks`]). Hierarchy and tree
+//!    folds are fully exact; grid/torus folds are representative-exact
+//!    (see the topology module docs).
 //! 2. **Map** the coarsest graph with *any* existing construction
 //!    ([`crate::mapping::construct::initial`]) — at the coarsest level
 //!    `#processes == #PEs` again, so the whole §3.1 registry applies.
-//! 3. **Uncoarsen**: project level `l+1`'s mapping to level `l` (the `g`
-//!    fine members of a coarse vertex take the `g` PEs of its coarse PE)
-//!    and run the configured [`Refiner`] on the level-`l` graph with the
-//!    level-`l` folded machine — a proper V-cycle, with per-level
-//!    [`SearchStats`] surfaced as [`LevelStat`]s.
+//! 3. **Uncoarsen**: project level `l+1`'s mapping to level `l` by
+//!    sequential allocation (each coarse vertex's members, in id order,
+//!    take a consecutive fine-PE range laid out in coarse-PE order — the
+//!    classic `g·p + slot` rule in the uniform case) and run the
+//!    configured [`Refiner`] on the level-`l` graph with the level-`l`
+//!    folded machine — a proper V-cycle, with per-level [`SearchStats`]
+//!    surfaced as [`LevelStat`]s.
 //!
 //! Every projection yields a valid permutation by construction (exact
-//! grouping ⇒ exactly `g` members per coarse vertex ⇒ the fine PEs
-//! `g·p .. g·p+g` are each used once), and every level's refinement is
-//! monotone, both enforced by `debug_assert` here and by `tests/api.rs`.
+//! clustering ⇒ cluster sizes sum to the fine size ⇒ consecutive ranges
+//! tile the fine PEs), and every level's refinement is monotone, both
+//! enforced by `debug_assert` here and by `tests/api.rs`.
 
 use super::algorithms::{AlgorithmSpec, Neighborhood};
 use super::construct;
 use super::objective::{objective, Mapping, SwapEngine};
 use super::refine::{refiner_for, Refiner, SearchStats};
 use crate::graph::{Graph, NodeId};
-use crate::model::topology::{Hierarchy, Machine};
-use crate::partition::coarsen::coarsen_groups;
+use crate::model::topology::{FoldPlan, Machine};
+use crate::partition::coarsen::{coarsen_blocks, coarsen_groups};
 use crate::partition::PartitionConfig;
 use crate::util::{Rng, RunControl};
 
@@ -65,11 +69,12 @@ impl Default for MlConfig {
 pub struct MlLevel {
     /// Coarse communication graph.
     pub graph: Graph,
-    /// Vertex of the next-finer graph → vertex of [`Self::graph`]
-    /// (exactly [`Self::group`] fine members per coarse vertex).
+    /// Vertex of the next-finer graph → vertex of [`Self::graph`] (cluster
+    /// sizes follow [`Self::plan`]).
     pub map: Vec<u32>,
-    /// How many fine vertices/PEs merged into each coarse one at this step.
-    pub group: u64,
+    /// How the fine vertices/PEs merged into coarse ones at this step: a
+    /// uniform group size, or per-block sizes for non-uniform tree folds.
+    pub plan: FoldPlan,
     /// The machine folded to this level's size — it *is* this level's
     /// distance oracle (cached so repetitions share it).
     pub machine: Machine,
@@ -86,11 +91,12 @@ pub struct MlHierarchy {
 
 impl MlHierarchy {
     /// Coarsen `comm` (and fold `machine` in lock-step) until the limit,
-    /// the level cap, or an unfoldable machine stops it. Each step's group
-    /// size comes from the machine ([`Machine::fold_group`]), so graph and
-    /// machine always shrink by the same factor. Deterministic for a given
-    /// `rng` state; [`crate::api::MapSession`] builds it once per job and
-    /// reuses it across repetitions.
+    /// the level cap, or an unfoldable machine stops it. Each step's shape
+    /// comes from the machine ([`Machine::fold_plan`]), so graph and
+    /// machine always shrink together — by one group size on uniform
+    /// machines, by per-leaf block sizes on non-uniform subsystem trees.
+    /// Deterministic for a given `rng` state; [`crate::api::MapSession`]
+    /// builds it once per job and reuses it across repetitions.
     pub fn build(comm: &Graph, machine: &Machine, cfg: &MlConfig, rng: &mut Rng) -> MlHierarchy {
         debug_assert_eq!(comm.n(), machine.n_pes());
         let limit = cfg.coarsen_limit.max(2);
@@ -104,17 +110,22 @@ impl MlHierarchy {
                 if levels.len() >= cfg.max_levels || cur.n() <= limit {
                     None
                 } else {
-                    curm.fold_group().and_then(|g| {
-                        curm.fold(g).and_then(|m| {
-                            coarsen_groups(cur, g as usize, rng).map(|lvl| (lvl, g, m))
+                    curm.fold_plan().and_then(|plan| {
+                        curm.fold_by(&plan).and_then(|m| {
+                            let lvl = match &plan {
+                                FoldPlan::Uniform(g) => coarsen_groups(cur, *g as usize, rng),
+                                FoldPlan::Blocks(sizes) => coarsen_blocks(cur, sizes, rng),
+                            };
+                            lvl.map(|lvl| (lvl, plan, m))
                         })
                     })
                 }
             };
             match step {
-                Some((lvl, group, machine)) => {
+                Some((lvl, plan, machine)) => {
                     debug_assert_eq!(lvl.coarse.n(), machine.n_pes());
-                    levels.push(MlLevel { graph: lvl.coarse, map: lvl.map, group, machine });
+                    debug_assert_eq!(lvl.coarse.n(), plan.coarse_pes(lvl.map.len()));
+                    levels.push(MlLevel { graph: lvl.coarse, map: lvl.map, plan, machine });
                 }
                 None => break,
             }
@@ -177,13 +188,16 @@ const SUBTREE_MIN_BLOCK: usize = 16;
 /// Refine the top-level machine-subtree blocks of `sigma` independently,
 /// before the level's full refinement pass.
 ///
-/// The hierarchy distance between PEs in *different* top-level blocks is
-/// the constant outermost distance wherever the two vertices sit inside
-/// their blocks (the ultrametric property), so a move that stays inside one
+/// The machine distance between PEs in *different* top-level blocks is the
+/// constant outermost distance wherever the two vertices sit inside their
+/// blocks (the ultrametric property), so a move that stays inside one
 /// block leaves every cross-block term of J unchanged: the blocks are truly
-/// independent subproblems — each an induced subgraph mapped onto the
-/// sub-hierarchy with the outermost level dropped — and refining them
-/// concurrently is exact, not heuristic.
+/// independent subproblems — each an induced subgraph mapped onto its own
+/// sub-machine ([`Machine::top_blocks`]: the outermost hierarchy level
+/// dropped, or a subsystem tree's root child re-based to PE 0) — and
+/// refining them concurrently is exact, not heuristic. On non-uniform
+/// trees the blocks are generally *unequal*; per-block seeds stay fixed so
+/// results remain thread-invariant.
 ///
 /// Runs at every thread count — scoped worker threads at `threads > 1`,
 /// inline otherwise — with bit-identical results either way: per-block RNG
@@ -192,9 +206,10 @@ const SUBTREE_MIN_BLOCK: usize = 16;
 /// reproducible across `--threads` settings (tested in `tests/api.rs`).
 ///
 /// Skipped (returning zero stats, identically at every thread count) for
-/// machines without hierarchy structure, single-level hierarchies (all
-/// intra-block distances equal, so intra-block moves cannot change J),
-/// fewer than two blocks, or blocks under [`SUBTREE_MIN_BLOCK`].
+/// machines without top-level block structure (lattices, matrices,
+/// single-level hierarchies — all intra-block distances equal there) or
+/// when every block is under [`SUBTREE_MIN_BLOCK`]; individual blocks
+/// below the threshold are carried through unrefined.
 fn subtree_refine(
     graph: &Graph,
     oracle: &Machine,
@@ -208,36 +223,31 @@ fn subtree_refine(
     if matches!(spec.neighborhood, Neighborhood::None) {
         return out;
     }
-    let Some(h) = oracle.hier() else { return out };
-    if h.s.len() < 2 {
-        return out;
-    }
-    let k = *h.s.last().expect("non-empty hierarchy") as usize;
+    let Some(top) = oracle.top_blocks() else { return out };
     let n = graph.n();
-    if k < 2 || n % k != 0 {
+    let k = top.len();
+    let sizes: Vec<usize> = top.iter().map(|(_, m)| m.n_pes()).collect();
+    if sizes.iter().sum::<usize>() != n {
         return out;
     }
-    let bs = n / k;
-    if bs < SUBTREE_MIN_BLOCK {
+    if sizes.iter().all(|&bs| bs < SUBTREE_MIN_BLOCK) {
         return out;
     }
-    let Ok(sub) =
-        Hierarchy::new(h.s[..h.s.len() - 1].to_vec(), h.d[..h.d.len() - 1].to_vec())
-    else {
-        return out;
-    };
-    let sub_machine = Machine::Hier(sub);
-    debug_assert_eq!(sub_machine.n_pes(), bs);
 
     // partition the vertices by the top-level block their PE lives in
-    // (hierarchy PEs number depth-first, so block b is the contiguous PE
-    // range b·bs .. (b+1)·bs)
-    let mut members: Vec<Vec<NodeId>> = vec![Vec::with_capacity(bs); k];
-    for (u, &pe) in sigma.iter().enumerate() {
-        members[pe as usize / bs].push(u as NodeId);
+    // (subsystem PEs number depth-first, so block b is the contiguous PE
+    // range starting at its pe_start)
+    let mut block_of = vec![0u32; n];
+    for (b, (start, m)) in top.iter().enumerate() {
+        block_of[*start as usize..*start as usize + m.n_pes()].fill(b as u32);
     }
-    // σ is a bijection, so every block holds exactly bs vertices
-    debug_assert!(members.iter().all(|m| m.len() == bs));
+    let mut members: Vec<Vec<NodeId>> =
+        sizes.iter().map(|&bs| Vec::with_capacity(bs)).collect();
+    for (u, &pe) in sigma.iter().enumerate() {
+        members[block_of[pe as usize] as usize].push(u as NodeId);
+    }
+    // σ is a bijection, so every block holds exactly its PE count
+    debug_assert!(members.iter().zip(&sizes).all(|(m, &bs)| m.len() == bs));
     let mut local = vec![0u32; n];
     for verts in &members {
         for (i, &u) in verts.iter().enumerate() {
@@ -250,18 +260,21 @@ fn subtree_refine(
         verts: Vec<NodeId>,
         graph: Graph,
         start: Mapping,
+        base: u32,
+        machine: Machine,
     }
     let blocks: Vec<Block> = members
         .into_iter()
+        .zip(top)
         .enumerate()
-        .map(|(b, verts)| {
-            let base = (b * bs) as u32;
+        .map(|(b, (verts, (base, machine)))| {
+            let bs = machine.n_pes();
             let mut edges = Vec::new();
             let mut start = vec![0u32; bs];
             for &u in &verts {
                 start[local[u as usize] as usize] = sigma[u as usize] - base;
                 for (v, w) in graph.edges(u) {
-                    if v > u && sigma[v as usize] as usize / bs == b {
+                    if v > u && block_of[sigma[v as usize] as usize] == b as u32 {
                         edges.push((local[u as usize], local[v as usize], w));
                     }
                 }
@@ -270,6 +283,8 @@ fn subtree_refine(
                 verts,
                 graph: crate::graph::from_edges(bs, &edges),
                 start: Mapping { sigma: start },
+                base,
+                machine,
             }
         })
         .collect();
@@ -278,10 +293,14 @@ fn subtree_refine(
     // the per-block computation depends only on the block's own instance,
     // so inline and worker execution produce identical mappings
     let run_block = |b: usize, blk: &Block| -> (Mapping, SearchStats) {
-        let mut refiner = refiner_for(spec.neighborhood, spec.max_sweeps, &sub_machine);
+        if blk.graph.n() < SUBTREE_MIN_BLOCK {
+            // too small to pay the per-block setup — carried through as-is
+            return (blk.start.clone(), SearchStats::default());
+        }
+        let mut refiner = refiner_for(spec.neighborhood, spec.max_sweeps, &blk.machine);
         refiner.set_control(ctrl);
         let mut rng = Rng::new(salt.wrapping_add(b as u64));
-        let mut eng = SwapEngine::new(&blk.graph, &sub_machine, blk.start.clone());
+        let mut eng = SwapEngine::new(&blk.graph, &blk.machine, blk.start.clone());
         let j0 = eng.objective();
         let s = refiner.refine(&mut eng, &blk.graph, &mut rng);
         debug_assert!(eng.objective() <= j0, "block {b}: subtree refinement worsened");
@@ -309,30 +328,54 @@ fn subtree_refine(
     }
 
     // stitch the refined blocks back in block order
-    for (b, (blk, res)) in blocks.iter().zip(results).enumerate() {
+    for (blk, res) in blocks.iter().zip(results) {
         let (mapping, s) = res.expect("every block was refined");
-        let base = (b * bs) as u32;
         for (i, &u) in blk.verts.iter().enumerate() {
-            sigma[u as usize] = base + mapping.sigma[i];
+            sigma[u as usize] = blk.base + mapping.sigma[i];
         }
         out.absorb(&s);
     }
     out
 }
 
-/// Project a coarse mapping one level down: the `group` fine members of
-/// coarse vertex `c` (in id order) take PEs `group·σ_c(c) + 0 ..
-/// group·σ_c(c) + group`. A bijection in ⇒ a bijection out.
-pub fn project(map: &[u32], coarse_sigma: &[u32], group: u32) -> Vec<u32> {
-    let mut taken = vec![0u32; coarse_sigma.len()];
-    let mut sigma = vec![0u32; map.len()];
-    for (v, &c) in map.iter().enumerate() {
-        let slot = taken[c as usize];
-        taken[c as usize] += 1;
-        debug_assert!(slot < group, "coarse vertex {c} has more than {group} members");
-        sigma[v] = group * coarse_sigma[c as usize] + slot;
+/// Project a coarse mapping one level down by *sequential allocation*:
+/// invert `coarse_sigma` to find the cluster at each coarse PE, lay the
+/// clusters out over the fine PEs in coarse-PE order (cluster sizes are
+/// derived from `map`), and hand each cluster's members, in id order, its
+/// consecutive fine-PE range. A bijection in ⇒ a bijection out, for any
+/// cluster-size profile. On uniform levels (every cluster of size `g`)
+/// this reduces bit-for-bit to the classic `g·σ_c(c) + slot` rule.
+///
+/// Non-uniform caveat: a cluster's size need not match the machine-block
+/// size at its assigned coarse position, so the projected σ can shear
+/// across leaf boundaries — the coarse level is then an approximation the
+/// per-level refinement absorbs (the machine *fold* itself stays exact).
+pub fn project(map: &[u32], coarse_sigma: &[u32]) -> Vec<u32> {
+    let k = coarse_sigma.len();
+    let mut size = vec![0u32; k];
+    for &c in map {
+        size[c as usize] += 1;
     }
-    sigma
+    // cluster owning each coarse PE (coarse_sigma is a bijection)
+    let mut cluster_at = vec![0u32; k];
+    for (c, &p) in coarse_sigma.iter().enumerate() {
+        cluster_at[p as usize] = c as u32;
+    }
+    // next free fine PE per cluster, allocated in coarse-PE order
+    let mut next = vec![0u32; k];
+    let mut acc = 0u32;
+    for &c in &cluster_at {
+        next[c as usize] = acc;
+        acc += size[c as usize];
+    }
+    debug_assert_eq!(acc as usize, map.len(), "cluster sizes must tile the fine PEs");
+    map.iter()
+        .map(|&c| {
+            let pe = next[c as usize];
+            next[c as usize] += 1;
+            pe
+        })
+        .collect()
 }
 
 /// Run the uncoarsening half of the V-cycle: starting from a mapping of the
@@ -429,8 +472,8 @@ pub fn vcycle_refine(
         });
         if i < depth {
             let lvl = &ml.levels[depth - 1 - i];
-            sigma = project(&lvl.map, &mapping.sigma, lvl.group as u32);
-            raw = project(&lvl.map, &raw, lvl.group as u32);
+            sigma = project(&lvl.map, &mapping.sigma);
+            raw = project(&lvl.map, &raw);
         }
         level_mappings.push(mapping);
     }
@@ -540,7 +583,7 @@ mod tests {
         assert_eq!(ml.levels.len(), 3); // 256 -> 128 -> 64 -> 32
         let mut expect = 128;
         for lvl in &ml.levels {
-            assert_eq!(lvl.group, 2);
+            assert_eq!(lvl.plan, FoldPlan::Uniform(2));
             assert_eq!(lvl.graph.n(), expect);
             assert_eq!(lvl.machine.n_pes(), expect);
             assert_eq!(lvl.graph.validate(), Ok(()));
@@ -561,13 +604,42 @@ mod tests {
         let cfg = MlConfig { max_levels: 8, coarsen_limit: 8 };
         let ml = MlHierarchy::build(&g, &m, &cfg, &mut rng);
         let sizes: Vec<usize> = ml.levels.iter().map(|l| l.graph.n()).collect();
-        let groups: Vec<u64> = ml.levels.iter().map(|l| l.group).collect();
+        let plans: Vec<FoldPlan> = ml.levels.iter().map(|l| l.plan.clone()).collect();
         assert_eq!(sizes, vec![32, 16, 8]); // 96 -(÷3)-> 32 -(÷2)-> 16 -> 8
-        assert_eq!(groups, vec![3, 2, 2]);
+        assert_eq!(
+            plans,
+            vec![FoldPlan::Uniform(3), FoldPlan::Uniform(2), FoldPlan::Uniform(2)]
+        );
         for lvl in &ml.levels {
             assert_eq!(lvl.machine.n_pes(), lvl.graph.n());
         }
         assert_eq!(ml.levels[0].machine.hier().unwrap().s, vec![16, 2]);
+    }
+
+    #[test]
+    fn fattree_builds_with_unequal_block_plan() {
+        // fattree:3,5:2 = 16 PEs in pods of 3 and 5 leaves (2 PEs each).
+        // The gcd fold halves the uniform leaves first (16 -> 8, leaves
+        // become [3, 5]); with coprime leaf sizes the next step folds whole
+        // unequal leaves (8 -> 2) — both plan kinds in one hierarchy.
+        let mut rng = Rng::new(31);
+        let g = random_geometric_graph(16, &mut rng);
+        let m = Machine::parse("fattree:3,5:2").unwrap();
+        assert_eq!(m.n_pes(), 16);
+        let cfg = MlConfig { max_levels: 8, coarsen_limit: 2 };
+        let ml = MlHierarchy::build(&g, &m, &cfg, &mut rng);
+        let sizes: Vec<usize> = ml.levels.iter().map(|l| l.graph.n()).collect();
+        let plans: Vec<FoldPlan> = ml.levels.iter().map(|l| l.plan.clone()).collect();
+        assert_eq!(sizes, vec![8, 2]);
+        assert_eq!(plans, vec![FoldPlan::Uniform(2), FoldPlan::Blocks(vec![3, 5])]);
+        for lvl in &ml.levels {
+            assert_eq!(lvl.machine.n_pes(), lvl.graph.n());
+            assert_eq!(lvl.machine.kind(), "tree");
+            assert_eq!(lvl.graph.validate(), Ok(()));
+        }
+        // the folded 8-PE machine keeps the unequal pod structure
+        assert_eq!(ml.levels[0].machine.tree().unwrap().leaf_sizes(), vec![3, 5]);
+        assert_eq!(ml.coarsest().unwrap().graph.total_node_weight(), 16);
     }
 
     #[test]
@@ -588,17 +660,33 @@ mod tests {
     #[test]
     fn projection_is_a_bijection() {
         let map = vec![0, 2, 1, 2, 0, 1]; // 6 fine -> 3 coarse, 2 members each
-        let sigma = project(&map, &[2, 0, 1], 2);
+        let sigma = project(&map, &[2, 0, 1]);
         let m = Mapping { sigma };
         m.validate().unwrap();
-        // members in id order: vertex 0 (first of cluster 0 at PE 2) -> 4
+        // uniform case: bit-identical to the classic g·σ_c(c) + slot rule —
+        // vertex 0 (first of cluster 0 at PE 2) -> 2·2 + 0 = 4
         assert_eq!(m.sigma, vec![4, 2, 0, 3, 5, 1]);
         // and for a triple grouping
         let map3 = vec![0, 1, 0, 1, 1, 0]; // 6 fine -> 2 coarse, 3 members
-        let sigma3 = project(&map3, &[1, 0], 3);
+        let sigma3 = project(&map3, &[1, 0]);
         let m3 = Mapping { sigma: sigma3 };
         m3.validate().unwrap();
         assert_eq!(m3.sigma, vec![3, 0, 4, 1, 2, 5]);
+    }
+
+    #[test]
+    fn projection_handles_unequal_clusters() {
+        // clusters of size 1, 3, 2; coarse σ = [1, 2, 0]: sequential
+        // allocation lays cluster 2 (coarse PE 0) at fine 0..2, cluster 0
+        // (coarse PE 1) at fine 2..3, cluster 1 (coarse PE 2) at fine 3..6
+        let map = vec![1, 2, 0, 1, 2, 1];
+        let sigma = project(&map, &[1, 2, 0]);
+        Mapping { sigma: sigma.clone() }.validate().unwrap();
+        assert_eq!(sigma, vec![3, 0, 2, 4, 1, 5]);
+        // permuting the coarse mapping permutes the ranges, still bijective
+        let sigma2 = project(&map, &[0, 1, 2]);
+        Mapping { sigma: sigma2.clone() }.validate().unwrap();
+        assert_eq!(sigma2, vec![1, 4, 0, 2, 5, 3]);
     }
 
     #[test]
@@ -626,7 +714,13 @@ mod tests {
         let g = random_geometric_graph(96, &mut rng);
         let spec = AlgorithmSpec::parse("mm+Nc2").unwrap();
         let cfg = MlConfig { max_levels: 8, coarsen_limit: 8 };
-        for spec_str in ["hier:3:16:2@1:10:100", "grid:12x8@1", "torus:4x4x6@1"] {
+        for spec_str in [
+            "hier:3:16:2@1:10:100",
+            "grid:12x8@1",
+            "torus:4x4x6@1",
+            "fattree:4,8:8",
+            "dragonfly:3,3,2:12@1:10:100",
+        ] {
             let m = Machine::parse(spec_str).unwrap();
             assert_eq!(m.n_pes(), 96, "{spec_str}");
             let (ml, out) = run_vcycle(&g, &m, &spec, &cfg, 17, 18);
@@ -688,6 +782,57 @@ mod tests {
         for t in [1usize, 2, 4] {
             let mut refiners = level_refiners(&ml, &m, &spec);
             let mut rng = Rng::new(24);
+            let mut gamma = Vec::new();
+            let out = vcycle_refine(
+                &g,
+                &m,
+                &ml,
+                coarse.clone(),
+                &mut refiners,
+                &mut rng,
+                &mut gamma,
+                &spec,
+                t,
+                &RunControl::unlimited(),
+            );
+            out.mapping.validate().unwrap();
+            match &base {
+                None => base = Some(out),
+                Some(b) => {
+                    assert_eq!(out.mapping.sigma, b.mapping.sigma, "threads={t}");
+                    assert_eq!(out.objective, b.objective, "threads={t}");
+                    assert_eq!(out.levels, b.levels, "threads={t}");
+                }
+            }
+        }
+        let b = base.unwrap();
+        assert!(b.objective <= b.objective_initial);
+    }
+
+    #[test]
+    fn fattree_subtree_pre_pass_is_thread_invariant() {
+        // same contract as above, but the top-level blocks are *unequal*
+        // (pods of 48 and 80 PEs): per-block seeds stay fixed by block
+        // index, so worker scheduling still cannot leak into the result
+        let mut grng = Rng::new(41);
+        let g = random_geometric_graph(128, &mut grng);
+        let m = Machine::parse("fattree:3,5:16").unwrap();
+        assert_eq!(m.n_pes(), 128);
+        let spec = AlgorithmSpec::parse("topdown+Nc3").unwrap();
+        let cfg = MlConfig { max_levels: 8, coarsen_limit: 32 };
+        let mut hrng = Rng::new(42);
+        let ml = MlHierarchy::build(&g, &m, &cfg, &mut hrng);
+        assert!(!ml.levels.is_empty(), "fat-tree must coarsen");
+        let part = PartitionConfig::perfectly_balanced();
+        let coarse = {
+            let l = ml.coarsest().unwrap();
+            let mut crng = Rng::new(43);
+            construct::initial(&l.graph, &l.machine, &l.machine, spec.construction, &part, &mut crng)
+        };
+        let mut base: Option<VcycleOutcome> = None;
+        for t in [1usize, 2, 4] {
+            let mut refiners = level_refiners(&ml, &m, &spec);
+            let mut rng = Rng::new(44);
             let mut gamma = Vec::new();
             let out = vcycle_refine(
                 &g,

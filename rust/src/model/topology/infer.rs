@@ -18,8 +18,16 @@
 //! back to the explicit topology (grid/torus distances, for instance, are
 //! metric but never ultrametric, and correctly land in
 //! [`InferError::NotUltrametric`]).
+//!
+//! [`infer_machine`] goes beyond ultrametrics: when the hierarchy pass
+//! refuses, it tries to recognize the matrix as a Manhattan lattice — a
+//! uniform-link mesh ([`GridTopology`]) or wrap-around torus
+//! ([`TorusTopology`]) — by enumerating the ordered factorizations of `n`
+//! as candidate dimension vectors and verifying each candidate against the
+//! matrix in `O(n²)`. A matrix that is neither ultrametric nor a lattice
+//! gets [`InferError::Mixed`], carrying both refusals.
 
-use super::{Hierarchy, Topology};
+use super::{GridTopology, Hierarchy, Machine, Topology, TorusTopology};
 use crate::graph::Weight;
 
 /// Union-find with path halving.
@@ -58,6 +66,12 @@ pub enum InferError {
     NotUltrametric(String),
     /// Degenerate input (n < 2 or a single distance value of 0).
     Degenerate(String),
+    /// The matrix is a valid metric but matches *no* structured family:
+    /// not ultrametric (so no hierarchy) and no dimension vector
+    /// reproduces it under Manhattan or wrap-around distance (so no grid
+    /// or torus either). Carries both refusals so callers can report why
+    /// each family was ruled out.
+    Mixed { hierarchy: Box<InferError>, lattice: String },
 }
 
 /// Infer `Hierarchy` from a row-major `n x n` distance matrix.
@@ -178,6 +192,124 @@ pub fn infer_from_topology(t: &(impl Topology + ?Sized)) -> Result<Hierarchy, In
     infer_hierarchy(n, &t.explicit_matrix())
 }
 
+/// The structured machine a raw distance matrix was recognized as.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InferredMachine {
+    /// Ultrametric with uniform levels: a hierarchy `S@D`.
+    Hier(Hierarchy),
+    /// Manhattan distance on a mesh with one uniform link weight.
+    Grid(GridTopology),
+    /// Wrap-around Manhattan distance on a torus.
+    Torus(TorusTopology),
+}
+
+impl InferredMachine {
+    /// Wrap into the dispatching [`Machine`] enum.
+    pub fn into_machine(self) -> Machine {
+        match self {
+            InferredMachine::Hier(h) => Machine::Hier(h),
+            InferredMachine::Grid(g) => Machine::Grid(g),
+            InferredMachine::Torus(t) => Machine::Torus(t),
+        }
+    }
+
+    /// Family name (matches `Machine::kind`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            InferredMachine::Hier(_) => "hier",
+            InferredMachine::Grid(_) => "grid",
+            InferredMachine::Torus(_) => "torus",
+        }
+    }
+}
+
+/// Recognize a row-major `n × n` distance matrix as a structured machine:
+/// hierarchy first (the paper's §5 case), then Manhattan lattices.
+///
+/// The lattice pass takes the minimum non-zero entry as the link weight,
+/// enumerates every ordered factorization of `n` into factors ≥ 2 (the
+/// single-factor `[n]` gives the 1-D path/ring) as a candidate dimension
+/// vector, and verifies each candidate entry-for-entry. Grids are checked
+/// before tori, so shapes whose wrap-around never shortens a route (e.g.
+/// any dimension of 2) canonicalize to the grid form. Matrix-shape errors
+/// ([`InferError::NotADistanceMatrix`], [`InferError::Degenerate`])
+/// propagate unchanged; a well-formed matrix in neither family gets
+/// [`InferError::Mixed`].
+pub fn infer_machine(n: usize, matrix: &[Weight]) -> Result<InferredMachine, InferError> {
+    match infer_hierarchy(n, matrix) {
+        Ok(h) => Ok(InferredMachine::Hier(h)),
+        Err(e @ (InferError::NotADistanceMatrix(_) | InferError::Degenerate(_))) => Err(e),
+        Err(hier_err) => match infer_lattice(n, matrix) {
+            Some(m) => Ok(m),
+            None => Err(InferError::Mixed {
+                hierarchy: Box::new(hier_err),
+                lattice: format!(
+                    "no dimension vector of {n} reproduces the matrix under \
+                     Manhattan (grid) or wrap-around (torus) distance"
+                ),
+            }),
+        },
+    }
+}
+
+/// Try every ordered factorization of `n` as grid dims, then torus dims.
+/// The matrix has already passed the shape checks in [`infer_hierarchy`]
+/// (symmetric, zero diagonal, positive off-diagonal).
+fn infer_lattice(n: usize, matrix: &[Weight]) -> Option<InferredMachine> {
+    let link = matrix.iter().copied().filter(|&d| d > 0).min()?;
+    let candidates = ordered_factorizations(n as u64);
+    for dims in &candidates {
+        if let Ok(g) = GridTopology::new(dims.clone(), link) {
+            if matches_matrix(&g, n, matrix) {
+                return Some(InferredMachine::Grid(g));
+            }
+        }
+    }
+    for dims in &candidates {
+        if let Ok(t) = TorusTopology::new(dims.clone(), link) {
+            if matches_matrix(&t, n, matrix) {
+                return Some(InferredMachine::Torus(t));
+            }
+        }
+    }
+    None
+}
+
+/// All ordered sequences of factors ≥ 2 with product `n` (includes `[n]`).
+fn ordered_factorizations(n: u64) -> Vec<Vec<u64>> {
+    fn rec(n: u64, cur: &mut Vec<u64>, out: &mut Vec<Vec<u64>>) {
+        if n == 1 {
+            if !cur.is_empty() {
+                out.push(cur.clone());
+            }
+            return;
+        }
+        for f in 2..=n {
+            if n % f == 0 {
+                cur.push(f);
+                rec(n / f, cur, out);
+                cur.pop();
+            }
+        }
+    }
+    let mut out = Vec::new();
+    rec(n, &mut Vec::new(), &mut out);
+    out
+}
+
+/// `O(n²)` verification: the candidate's distance function must reproduce
+/// the matrix exactly (upper triangle suffices — symmetry is pre-checked).
+fn matches_matrix(t: &impl Topology, n: usize, matrix: &[Weight]) -> bool {
+    for p in 0..n {
+        for q in (p + 1)..n {
+            if t.distance(p as u32, q as u32) != matrix[p * n + q] {
+                return false;
+            }
+        }
+    }
+    true
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -261,6 +393,87 @@ mod tests {
         // zero distance between distinct PEs
         let m = vec![0, 0, 0, 0];
         assert!(matches!(infer_hierarchy(2, &m), Err(InferError::NotADistanceMatrix(_))));
+    }
+
+    #[test]
+    fn machine_inference_recovers_hierarchies_first() {
+        let h = Hierarchy::new(vec![4, 4], vec![1, 10]).unwrap();
+        let (n, m) = matrix_of(&h);
+        let got = infer_machine(n, &m).unwrap();
+        assert_eq!(got.kind(), "hier");
+        assert_eq!(got.clone().into_machine(), Machine::Hier(h));
+    }
+
+    #[test]
+    fn machine_inference_recovers_grids_and_tori() {
+        use crate::model::topology::TorusTopology;
+        // 4×2 mesh: not ultrametric, lattice pass recovers the exact dims
+        let g = GridTopology::new(vec![4, 2], 1).unwrap();
+        let got = infer_machine(g.n_pes(), &g.explicit_matrix()).unwrap();
+        assert_eq!(got, InferredMachine::Grid(g.clone()));
+        assert_eq!(got.into_machine().spec().unwrap(), "grid:4x2@1");
+
+        // 3-D mesh with a non-unit link
+        let g = GridTopology::new(vec![2, 3, 2], 5).unwrap();
+        let got = infer_machine(g.n_pes(), &g.explicit_matrix()).unwrap();
+        assert_eq!(got.into_machine().spec().unwrap(), "grid:2x3x2@5");
+
+        // a 6-ring: wrap-around shortens routes, so only the torus matches
+        let t = TorusTopology::new(vec![6], 2).unwrap();
+        let got = infer_machine(t.n_pes(), &t.explicit_matrix()).unwrap();
+        assert_eq!(got.kind(), "torus");
+        assert_eq!(got.into_machine().spec().unwrap(), "torus:6@2");
+
+        // dimensions of 2 never benefit from the wrap: the grid form is
+        // the canonical answer even for a torus input
+        let t = TorusTopology::new(vec![2, 2], 1).unwrap();
+        let got = infer_machine(t.n_pes(), &t.explicit_matrix()).unwrap();
+        assert_eq!(got.kind(), "grid");
+    }
+
+    #[test]
+    fn machine_inference_mixed_refusal_names_both_families() {
+        // valid symmetric matrix, but neither ultrametric nor any lattice
+        let m = vec![
+            0, 1, 3, //
+            1, 0, 1, //
+            3, 1, 0,
+        ];
+        match infer_machine(3, &m) {
+            Err(InferError::Mixed { hierarchy, lattice }) => {
+                assert!(matches!(*hierarchy, InferError::NotUltrametric(_)));
+                assert!(lattice.contains("Manhattan"), "{lattice}");
+            }
+            other => panic!("expected Mixed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn machine_inference_propagates_shape_errors_unwrapped() {
+        // asymmetry is a matrix problem, not a family mismatch
+        let m = vec![0, 1, 2, 0];
+        assert!(matches!(infer_machine(2, &m), Err(InferError::NotADistanceMatrix(_))));
+        assert!(matches!(infer_machine(1, &[0]), Err(InferError::Degenerate(_))));
+    }
+
+    #[test]
+    fn ordered_factorizations_enumerate_all_shapes() {
+        let mut f = ordered_factorizations(12);
+        f.sort();
+        assert_eq!(
+            f,
+            vec![
+                vec![2, 2, 3],
+                vec![2, 3, 2],
+                vec![2, 6],
+                vec![3, 2, 2],
+                vec![3, 4],
+                vec![4, 3],
+                vec![6, 2],
+                vec![12],
+            ]
+        );
+        assert_eq!(ordered_factorizations(7), vec![vec![7]]);
     }
 
     #[test]

@@ -13,6 +13,10 @@
 //!   machine in lock-step with the communication graph.
 //! * [`Hierarchy`] — the paper's implicit ultrametric oracle (including the
 //!   division-free shift fast path), moved here from `mapping::hierarchy`.
+//!   It stays the *uniform fast path* of the general subsystem tree.
+//! * [`SubsystemTree`] — non-uniform hierarchies: an arbitrary rooted tree
+//!   of subsystems with per-node fan-out and link weight, ultrametric by
+//!   construction. `fattree:` and `dragonfly:` grammar specs desugar to it.
 //! * [`GridTopology`] / [`TorusTopology`] — k-dimensional Manhattan /
 //!   wrap-around Manhattan distances (the Glantz et al. machine models).
 //! * [`ExplicitTopology`] — the memoized `n×n` matrix form. It is a
@@ -25,7 +29,7 @@
 //! ## Fold semantics
 //!
 //! `fold(g)` merges each group of `g` consecutive PEs `{g·p, …, g·p+g−1}`
-//! into coarse PE `p`. Two exactness guarantees, tested in
+//! into coarse PE `p`. Exactness guarantees, tested in
 //! `tests/properties.rs`:
 //!
 //! * **Hierarchies** fold *fully* exactly: `D_coarse(p, q) =
@@ -33,31 +37,49 @@
 //!   ultrametric property). Non-halving groups are supported — `g` may
 //!   consume the whole innermost level (and recurse outward), so odd
 //!   fan-out machines like `3:16:k` coarsen exactly instead of bailing.
+//! * **Subsystem trees** fold fully exactly too, but the step is not always
+//!   a uniform group: when leaf sizes share a gcd ≥ 2 the tree folds
+//!   uniformly like a hierarchy; otherwise the deepest layer folds *whole
+//!   leaves* — unequal blocks described by [`FoldPlan::Blocks`], with the
+//!   coarse distance equal to the LCA link of any representatives.
 //! * **Grids and tori** fold *representative*-exactly: `D_coarse(p, q) =
 //!   D(g·p + b, g·q + b)` for any common offset `b` (the innermost
 //!   dimension shrinks by `g` and its link weight scales by `g`). Mixed
 //!   offsets differ by at most `(g−1)·link`, the standard multilevel
 //!   approximation that per-level refinement absorbs.
 //!
+//! The V-cycle drives folding through [`Machine::fold_plan`] /
+//! [`Machine::fold_by`], which produce `Uniform(g)` for every machine
+//! except trees with coprime leaf sizes (the `Blocks` case).
+//!
 //! ## Machine grammar
 //!
 //! [`Machine::parse`] / [`Machine::spec`] round-trip the wire/CLI syntax:
 //!
 //! ```text
-//! hier:4:16:2@1:10:100     S = 4:16:2, D = 1:10:100
-//! hier:3:16:2              D defaults to 1:10:100:…
-//! grid:8x8@1               8×8 mesh, link weight 1 (default)
-//! torus:4x4x4@1            4×4×4 3-torus
+//! hier:4:16:2@1:10:100          S = 4:16:2, D = 1:10:100
+//! hier:3:16:2                   D defaults to 1:10:100:…
+//! grid:8x8@1                    8×8 mesh, link weight 1 (default)
+//! torus:4x4x4@1                 4×4×4 3-torus
+//! fattree:50,30:25@1:10:100     pods of 50 and 30 leaves, 25 PEs per
+//!                               leaf; intra-leaf 1, intra-pod 10,
+//!                               cross-pod 100 (@… defaults to 1:10:100)
+//! dragonfly:4,4,4:2@1:10:100    3 groups of 4 routers, 2 PEs per router
+//! explicit:<n>                  placeholder *name* of a matrix machine —
+//!                               parses to an error (the matrix itself
+//!                               never crosses the wire)
 //! ```
 
 pub mod cartesian;
 pub mod explicit;
 pub mod hierarchy;
 pub mod infer;
+pub mod subsystem;
 
 pub use cartesian::{GridTopology, TorusTopology};
 pub use explicit::ExplicitTopology;
 pub use hierarchy::Hierarchy;
+pub use subsystem::{Subsystem, SubsystemTree, TreeNode};
 
 use crate::graph::Weight;
 
@@ -103,8 +125,34 @@ pub trait Topology {
     /// Bytes of memory held (the scalability experiment's reported metric).
     fn memory_bytes(&self) -> usize;
 
-    /// Grammar tag (`"hier"`, `"grid"`, `"torus"`, `"explicit"`).
+    /// Grammar tag (`"hier"`, `"tree"`, `"grid"`, `"torus"`, `"explicit"`).
     fn kind(&self) -> &'static str;
+}
+
+/// One V-cycle machine-coarsening step, as the multilevel builder consumes
+/// it: which consecutive fine PEs merge into each coarse PE.
+///
+/// Every uniform machine (hierarchy, lattice, matrix) folds by a single
+/// group size; a [`SubsystemTree`] with coprime leaf sizes folds its whole
+/// (unequal) leaves instead. The graph side mirrors the plan:
+/// `coarsen_groups` for `Uniform`, `coarsen_blocks` for `Blocks`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FoldPlan {
+    /// Merge every `g` consecutive PEs into one coarse PE.
+    Uniform(u64),
+    /// Coarse PE `i` absorbs the next `sizes[i]` consecutive fine PEs (the
+    /// sizes sum to the fine PE count).
+    Blocks(Vec<u64>),
+}
+
+impl FoldPlan {
+    /// Number of coarse PEs this plan produces from `n` fine PEs.
+    pub fn coarse_pes(&self, n: usize) -> usize {
+        match self {
+            FoldPlan::Uniform(g) => n / *g as usize,
+            FoldPlan::Blocks(sizes) => sizes.len(),
+        }
+    }
 }
 
 /// Dispatch a [`Machine`] to its concrete topology **once**, binding `$t`
@@ -116,6 +164,7 @@ macro_rules! with_topology {
     ($machine:expr, $t:ident => $body:expr) => {
         match $machine {
             $crate::model::topology::Machine::Hier($t) => $body,
+            $crate::model::topology::Machine::Tree($t) => $body,
             $crate::model::topology::Machine::Grid($t) => $body,
             $crate::model::topology::Machine::Torus($t) => $body,
             $crate::model::topology::Machine::Explicit($t) => $body,
@@ -131,8 +180,13 @@ pub(crate) use with_topology;
 /// universal [`ExplicitTopology`] wrapper.)
 #[derive(Debug, Clone, PartialEq)]
 pub enum Machine {
-    /// Ultrametric hierarchy, queried online (§3.4's implicit oracle).
+    /// Uniform ultrametric hierarchy, queried online (§3.4's implicit
+    /// oracle; the shift fast path makes this the uniform fast path of the
+    /// general subsystem tree).
     Hier(Hierarchy),
+    /// Non-uniform subsystem tree (fat-tree / Dragonfly shapes), queried
+    /// online via an O(depth) LCA walk.
+    Tree(SubsystemTree),
     /// k-dimensional mesh, Manhattan distance.
     Grid(GridTopology),
     /// k-dimensional torus, wrap-around Manhattan distance.
@@ -162,12 +216,26 @@ impl Machine {
         }
     }
 
+    /// The underlying [`SubsystemTree`], when this machine is one (the
+    /// tree-aware construction recursion dispatches on it).
+    pub fn tree(&self) -> Option<&SubsystemTree> {
+        match self {
+            Machine::Tree(t) => Some(t),
+            _ => None,
+        }
+    }
+
     /// Parse the machine grammar (see module docs): `hier:<S>[@<D>]`,
-    /// `grid:<AxBx…>[@link]`, `torus:<AxBx…>[@link]`.
+    /// `grid:<AxBx…>[@link]`, `torus:<AxBx…>[@link]`,
+    /// `fattree:<p1,p2,…>:<leaf>[@d0:d1:d2]`,
+    /// `dragonfly:<g1,g2,…>:<routers>[@d0:d1:d2]`.
     pub fn parse(spec: &str) -> Result<Machine, String> {
-        let (kind, rest) = spec
-            .split_once(':')
-            .ok_or_else(|| format!("machine spec {spec:?} needs a kind prefix (hier:/grid:/torus:)"))?;
+        let (kind, rest) = spec.split_once(':').ok_or_else(|| {
+            format!(
+                "machine spec {spec:?} needs a kind prefix \
+                 (hier:/grid:/torus:/fattree:/dragonfly:)"
+            )
+        })?;
         match kind {
             "hier" => {
                 let (s, d) = match rest.split_once('@') {
@@ -189,13 +257,40 @@ impl Machine {
                 let (dims, link) = parse_dims(rest)?;
                 Ok(Machine::Torus(TorusTopology::new(dims, link)?))
             }
-            other => Err(format!("unknown machine kind {other:?} (want hier/grid/torus)")),
+            "fattree" | "dragonfly" => {
+                let (body, d) = match rest.split_once('@') {
+                    Some((b, d)) => (b, parse_tree_dists(kind, d)?),
+                    None => (rest, [1, 10, 100]),
+                };
+                let (groups_s, leaf_s) = body.split_once(':').ok_or_else(|| {
+                    format!("{kind} spec {rest:?} wants <g1,g2,…>:<leaf>[@d0:d1:d2]")
+                })?;
+                let groups = groups_s
+                    .split(',')
+                    .map(|t| t.parse::<u64>().map_err(|e| format!("bad group size {t:?}: {e}")))
+                    .collect::<Result<Vec<u64>, String>>()?;
+                let leaf = leaf_s
+                    .parse::<u64>()
+                    .map_err(|e| format!("bad leaf size {leaf_s:?}: {e}"))?;
+                Ok(Machine::Tree(SubsystemTree::three_level(kind, &groups, leaf, d)?))
+            }
+            "explicit" => Err(format!(
+                "explicit-matrix machine {spec:?} cannot be reconstructed from its name: \
+                 the matrix is not part of the grammar — send S/D or a structured spec \
+                 (hier:/grid:/torus:/fattree:/dragonfly:) instead"
+            )),
+            other => Err(format!(
+                "unknown machine kind {other:?} (want hier/grid/torus/fattree/dragonfly)"
+            )),
         }
     }
 
-    /// Canonical grammar name (inverse of [`Self::parse`]). Errors for
-    /// machines the grammar cannot express (explicit matrices; folded
-    /// grids with anisotropic links) — those never cross the wire.
+    /// Canonical grammar name (inverse of [`Self::parse`]). Explicit
+    /// machines get the *stable placeholder* `explicit:<n>` — a display
+    /// name that deliberately does not parse back (the matrix itself is
+    /// not serialized). Errors for machines the grammar cannot express at
+    /// all (folded grids with anisotropic links; folded or programmatic
+    /// subsystem trees) — those never cross the wire.
     pub fn spec(&self) -> Result<String, String> {
         match self {
             Machine::Hier(h) => {
@@ -203,11 +298,12 @@ impl Machine {
                 let d: Vec<String> = h.d.iter().map(|x| x.to_string()).collect();
                 Ok(format!("hier:{}@{}", s.join(":"), d.join(":")))
             }
+            Machine::Tree(t) => t.spec_str().map(str::to_string).ok_or_else(|| {
+                "folded or programmatic subsystem trees have no grammar name".to_string()
+            }),
             Machine::Grid(g) => Ok(format!("grid:{}", fmt_dims(g.dims(), g.links())?)),
             Machine::Torus(t) => Ok(format!("torus:{}", fmt_dims(t.dims(), t.links())?)),
-            Machine::Explicit(_) => {
-                Err("explicit-matrix machines have no grammar name".to_string())
-            }
+            Machine::Explicit(e) => Ok(format!("explicit:{}", e.n_pes())),
         }
     }
 
@@ -242,9 +338,56 @@ impl Machine {
     pub fn fold(&self, group: u64) -> Option<Machine> {
         match self {
             Machine::Hier(h) => h.fold(group).map(Machine::Hier),
+            Machine::Tree(t) => Topology::fold(t, group).map(Machine::Tree),
             Machine::Grid(g) => g.fold(group).map(Machine::Grid),
             Machine::Torus(t) => t.fold(group).map(Machine::Torus),
             Machine::Explicit(e) => e.fold(group).map(Machine::Explicit),
+        }
+    }
+
+    /// The V-cycle coarsening step for this machine: a uniform group for
+    /// every machine except subsystem trees with coprime leaf sizes, which
+    /// fold whole (unequal) leaves. `None` when the machine cannot coarsen.
+    pub fn fold_plan(&self) -> Option<FoldPlan> {
+        match self {
+            Machine::Tree(t) => t.fold_plan(),
+            m => m.fold_group().map(FoldPlan::Uniform),
+        }
+    }
+
+    /// Apply a [`FoldPlan`] produced by [`Self::fold_plan`].
+    pub fn fold_by(&self, plan: &FoldPlan) -> Option<Machine> {
+        match plan {
+            FoldPlan::Uniform(g) => self.fold(*g),
+            FoldPlan::Blocks(sizes) => match self {
+                Machine::Tree(t) => t.fold_blocks(sizes).map(Machine::Tree),
+                _ => None,
+            },
+        }
+    }
+
+    /// The machine's disjoint top-level blocks, as `(pe_start, standalone
+    /// sub-machine)` pairs — the units the parallel V-cycle subtree
+    /// pre-pass maps independently. For a uniform hierarchy these are the
+    /// `a_k` equal outermost subsystems (all sharing one sub-hierarchy);
+    /// for a subsystem tree, the root's children (generally *unequal*).
+    /// `None` for lattices, matrices, and machines without ≥ 2 blocks.
+    pub fn top_blocks(&self) -> Option<Vec<(u32, Machine)>> {
+        match self {
+            Machine::Hier(h) if h.s.len() >= 2 && *h.s.last().unwrap() >= 2 => {
+                let k = *h.s.last().unwrap();
+                let sub = Hierarchy::new(
+                    h.s[..h.s.len() - 1].to_vec(),
+                    h.d[..h.d.len() - 1].to_vec(),
+                )
+                .ok()?;
+                let bs = sub.n_pes() as u32;
+                Some((0..k as u32).map(|b| (b * bs, Machine::Hier(sub.clone()))).collect())
+            }
+            Machine::Tree(t) => t
+                .top_blocks()
+                .map(|v| v.into_iter().map(|(s, sub)| (s, Machine::Tree(sub))).collect()),
+            _ => None,
         }
     }
 }
@@ -285,6 +428,19 @@ fn parse_dims(s: &str) -> Result<(Vec<u64>, Weight), String> {
     Ok((dims, link))
 }
 
+/// Parse the `d0:d1:d2` distance triple of a `fattree:`/`dragonfly:` spec.
+fn parse_tree_dists(kind: &str, s: &str) -> Result<[Weight; 3], String> {
+    let parts: Vec<&str> = s.split(':').collect();
+    if parts.len() != 3 {
+        return Err(format!("{kind} wants exactly three distances d0:d1:d2, got {s:?}"));
+    }
+    let mut d = [0 as Weight; 3];
+    for (i, t) in parts.iter().enumerate() {
+        d[i] = t.parse::<Weight>().map_err(|e| format!("bad distance {t:?}: {e}"))?;
+    }
+    Ok(d)
+}
+
 /// Canonical `AxBxC@link` form; errors when the per-dimension links differ
 /// (a folded machine — never named on the wire).
 fn fmt_dims(dims: &[u64], links: &[Weight]) -> Result<String, String> {
@@ -310,6 +466,9 @@ mod tests {
             "grid:16@2",
             "torus:4x4x4@1",
             "torus:6x10@5",
+            "fattree:50,30:25@1:10:100",
+            "fattree:3:5@2:2:4",
+            "dragonfly:4,4,4:2@1:10:100",
         ] {
             let m = Machine::parse(spec).unwrap();
             assert_eq!(m.spec().unwrap(), spec, "roundtrip {spec}");
@@ -359,6 +518,15 @@ mod tests {
         // grid/torus without @link default to link 1
         assert_eq!(Machine::parse("grid:8x8").unwrap().spec().unwrap(), "grid:8x8@1");
         assert_eq!(Machine::parse("torus:4x4").unwrap().spec().unwrap(), "torus:4x4@1");
+        // tree machines without @D default to 1:10:100
+        assert_eq!(
+            Machine::parse("fattree:2,3:4").unwrap().spec().unwrap(),
+            "fattree:2,3:4@1:10:100"
+        );
+        assert_eq!(
+            Machine::parse("dragonfly:4,4:2").unwrap().spec().unwrap(),
+            "dragonfly:4,4:2@1:10:100"
+        );
     }
 
     #[test]
@@ -367,6 +535,9 @@ mod tests {
         assert_eq!(Machine::parse("grid:8x8@1").unwrap().n_pes(), 64);
         assert_eq!(Machine::parse("torus:4x4x4@1").unwrap().n_pes(), 64);
         assert_eq!(Machine::parse("grid:77@1").unwrap().n_pes(), 77);
+        // fattree n = leaf · Σ p_i
+        assert_eq!(Machine::parse("fattree:50,30:25").unwrap().n_pes(), 2000);
+        assert_eq!(Machine::parse("dragonfly:4,4,4:2").unwrap().n_pes(), 24);
     }
 
     #[test]
@@ -385,19 +556,33 @@ mod tests {
             "grid:8x8@x",
             "torus:@1",
             "torus:4xx4",
+            "fattree",
+            "fattree:4",           // missing leaf size
+            "fattree:2,x:4",       // bad group size
+            "fattree:2,3:0",       // zero leaf
+            "fattree:2,0:4",       // zero group
+            "fattree:2,3:4@1:10",  // wants three distances
+            "fattree:2,3:4@10:1:100", // decreasing distances
+            "dragonfly::4",
+            "explicit:8",          // placeholder name never parses back
         ] {
             assert!(Machine::parse(bad).is_err(), "{bad:?} must not parse");
         }
+        // the explicit-placeholder rejection names the machine kind
+        let err = Machine::parse("explicit:8").unwrap_err();
+        assert!(err.contains("explicit-matrix"), "{err}");
     }
 
     #[test]
-    fn explicit_machines_have_no_spec() {
+    fn explicit_machines_have_stable_placeholder_spec() {
         let h = Hierarchy::new(vec![2, 2], vec![1, 10]).unwrap();
         let e = Machine::explicit(&h);
-        assert!(e.spec().is_err());
+        assert_eq!(e.spec().unwrap(), "explicit:4");
         assert_eq!(e.kind(), "explicit");
         assert_eq!(e.n_pes(), 4);
         assert_eq!(e.distance(0, 3), 10);
+        // the placeholder is a display name, not a round-trippable spec
+        assert!(Machine::parse(&e.spec().unwrap()).is_err());
     }
 
     #[test]
@@ -418,11 +603,69 @@ mod tests {
 
         let torus = Machine::parse("torus:4x4x4@1").unwrap();
         assert_eq!(torus.fold(4).unwrap().n_pes(), 16);
+
+        // uniform-leaf fat-tree halves like a hierarchy
+        let ft = Machine::parse("fattree:2,3:4").unwrap();
+        assert_eq!(ft.fold_group(), Some(2));
+        assert_eq!(ft.fold(2).unwrap().n_pes(), 10);
+    }
+
+    #[test]
+    fn fold_plans_match_machine_shape() {
+        // every uniform machine plans a uniform fold
+        let hier = Machine::parse("hier:4:16:2@1:10:100").unwrap();
+        assert_eq!(hier.fold_plan(), Some(FoldPlan::Uniform(2)));
+        assert_eq!(hier.fold_by(&FoldPlan::Uniform(2)).unwrap().n_pes(), 64);
+        let grid = Machine::parse("grid:8x8@1").unwrap();
+        assert_eq!(grid.fold_plan(), Some(FoldPlan::Uniform(2)));
+        // a tree with coprime leaf sizes plans a per-block fold
+        let ft = Machine::parse("fattree:2,3:1@1:10:100").unwrap();
+        assert_eq!(ft.fold_plan(), Some(FoldPlan::Blocks(vec![2, 3])));
+        let coarse = ft.fold_by(&FoldPlan::Blocks(vec![2, 3])).unwrap();
+        assert_eq!(coarse.n_pes(), 2);
+        // the plan must match the machine: a foreign block plan is rejected
+        assert!(ft.fold_by(&FoldPlan::Blocks(vec![1, 4])).is_none());
+        assert!(hier.fold_by(&FoldPlan::Blocks(vec![64, 64])).is_none());
+    }
+
+    #[test]
+    fn top_blocks_cover_hier_and_tree() {
+        // hierarchy: a_k equal blocks sharing one sub-hierarchy
+        let hier = Machine::parse("hier:4:16:2@1:10:100").unwrap();
+        let blocks = hier.top_blocks().unwrap();
+        assert_eq!(blocks.len(), 2);
+        assert_eq!(blocks[0].0, 0);
+        assert_eq!(blocks[1].0, 64);
+        assert_eq!(blocks[0].1.spec().unwrap(), "hier:4:16@1:10");
+        // tree: the root's (unequal) children
+        let ft = Machine::parse("fattree:2,3:4").unwrap();
+        let blocks = ft.top_blocks().unwrap();
+        assert_eq!(blocks.len(), 2);
+        assert_eq!((blocks[0].0, blocks[0].1.n_pes()), (0, 8));
+        assert_eq!((blocks[1].0, blocks[1].1.n_pes()), (8, 12));
+        for (start, sub) in &blocks {
+            for p in 0..sub.n_pes() as u32 {
+                for q in 0..sub.n_pes() as u32 {
+                    assert_eq!(sub.distance(p, q), ft.distance(start + p, start + q));
+                }
+            }
+        }
+        // lattices and matrices have no subtree blocks
+        assert!(Machine::parse("grid:8x8").unwrap().top_blocks().is_none());
+        assert!(Machine::explicit(&Hierarchy::new(vec![4], vec![1]).unwrap())
+            .top_blocks()
+            .is_none());
     }
 
     #[test]
     fn implicit_and_explicit_constructors_agree() {
-        for spec in ["hier:2:3:2@1:7:42", "grid:3x5@2", "torus:5x4@3"] {
+        for spec in [
+            "hier:2:3:2@1:7:42",
+            "grid:3x5@2",
+            "torus:5x4@3",
+            "fattree:2,3:4@1:10:100",
+            "dragonfly:3,2:2@2:5:9",
+        ] {
             let m = Machine::parse(spec).unwrap();
             let e = Machine::explicit(&m);
             let n = m.n_pes() as u32;

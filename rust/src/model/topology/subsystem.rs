@@ -1,0 +1,705 @@
+//! Non-uniform machine hierarchies: the subsystem tree.
+//!
+//! [`Hierarchy`] models a *uniform* fan-out per level (`S = a1:a2:…`), which
+//! cannot express fat-tree pods of unequal size or Dragonfly group structure
+//! — the machines that actually serve heavy traffic (ROADMAP item 4,
+//! arXiv:2001.07134). [`SubsystemTree`] generalizes it: an arbitrary rooted
+//! tree of subsystems, each with its own fan-out and link weight, ultrametric
+//! by construction (every child's link is at most its parent's). The distance
+//! between two PEs is the link weight of their lowest common subsystem — the
+//! same "innermost differing level" rule as the paper's `D`, just without the
+//! uniformity assumption.
+//!
+//! Representation: a flattened `Vec<Subsystem>` (children contiguous, parent
+//! links, depths) plus a per-PE `leaf_of` index, so `distance(p, q)` is an
+//! O(depth) LCA walk and total memory is `O(n)` — the implicit-oracle
+//! property that lets fat-trees scale to 10⁵–10⁶ PEs where the explicit
+//! matrix OOMs (`benches/scalability.rs`).
+//!
+//! ## Grammar desugaring
+//!
+//! `fattree:p1,…,pk:leaf@d0:d1:d2` desugars to a depth-3 tree: a root
+//! (cross-pod distance `d2`) over `k` pods, pod `i` holding `p_i` leaf
+//! switches (intra-pod distance `d1`) of `leaf` PEs each (intra-leaf `d0`).
+//! `dragonfly:g1,…,gk:r@d0:d1:d2` is the same shape with groups/routers
+//! naming (global links `d2`, intra-group `d1`, intra-router `d0`) — an
+//! ultrametric approximation of the min-hop Dragonfly metric, which is what
+//! the mapping algorithms consume.
+//!
+//! ## Folding
+//!
+//! Trees fold exactly, like hierarchies, by ultrametricity:
+//!
+//! * when the gcd `g` of all leaf sizes is ≥ 2, groups of `g` consecutive
+//!   PEs always lie inside one leaf, so dividing every leaf by `g` is a
+//!   *fully exact* fold (`fold(g)`);
+//! * otherwise the deepest layer folds *whole leaves* — every leaf becomes
+//!   one coarse PE ([`SubsystemTree::fold_leaves`]), and the coarse distance
+//!   between two coarse PEs is the LCA link of any fine representatives,
+//!   again exact. The coarse PE count equals the leaf count, so the
+//!   V-cycle's graph coarsening must produce *unequal* cluster sizes —
+//!   [`crate::partition::coarsen::coarsen_blocks`] — described by
+//!   [`FoldPlan::Blocks`].
+//!
+//! Folded trees canonicalize: a subsystem whose children are all single PEs
+//! becomes a leaf, single-child subsystems collapse into their child, so the
+//! chain always terminates and never grows.
+
+use super::{FoldPlan, Topology};
+use crate::graph::Weight;
+
+/// One node of a [`SubsystemTree`]: a subsystem of the machine.
+///
+/// Children are stored contiguously (`first_child .. first_child +
+/// n_children`); `n_children == 0` marks a *leaf* subsystem holding
+/// `pe_count` directly attached PEs. Every subsystem covers the contiguous
+/// PE range `pe_start .. pe_start + pe_count`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Subsystem {
+    /// Parent node index (`u32::MAX` for the root).
+    pub parent: u32,
+    /// Distance between two PEs whose lowest common subsystem is this node
+    /// (for a leaf: the intra-leaf distance).
+    pub link: Weight,
+    /// Depth from the root (root = 0).
+    pub depth: u32,
+    /// First PE covered by this subtree.
+    pub pe_start: u32,
+    /// Number of PEs covered by this subtree.
+    pub pe_count: u32,
+    /// Index of the first child in the flattened node array.
+    pub first_child: u32,
+    /// Number of children (0 for leaf subsystems).
+    pub n_children: u32,
+}
+
+/// Recursive builder form of a subsystem tree (the shape grammar arms and
+/// programmatic constructions produce before flattening).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TreeNode {
+    /// A leaf subsystem: `pes` directly attached PEs, pairwise `link` apart.
+    Leaf { pes: u64, link: Weight },
+    /// An inner subsystem: children diverge at distance `link`.
+    Inner { link: Weight, children: Vec<TreeNode> },
+}
+
+impl TreeNode {
+    fn link(&self) -> Weight {
+        match self {
+            TreeNode::Leaf { link, .. } | TreeNode::Inner { link, .. } => *link,
+        }
+    }
+
+    fn pes(&self) -> u64 {
+        match self {
+            TreeNode::Leaf { pes, .. } => *pes,
+            TreeNode::Inner { children, .. } => children.iter().map(TreeNode::pes).sum(),
+        }
+    }
+
+    /// Canonical form: single-child subsystems collapse into their child
+    /// (the outer link separates nothing) and a subsystem whose children
+    /// are all single PEs becomes a leaf (a unit leaf's link is
+    /// unobservable). Keeps folded trees from growing degenerate layers.
+    fn canonicalize(self) -> TreeNode {
+        match self {
+            TreeNode::Leaf { .. } => self,
+            TreeNode::Inner { link, children } => {
+                let children: Vec<TreeNode> =
+                    children.into_iter().map(TreeNode::canonicalize).collect();
+                if children.len() == 1 {
+                    return children.into_iter().next().unwrap();
+                }
+                if children.iter().all(|c| matches!(c, TreeNode::Leaf { pes: 1, .. })) {
+                    return TreeNode::Leaf { pes: children.len() as u64, link };
+                }
+                TreeNode::Inner { link, children }
+            }
+        }
+    }
+}
+
+/// A non-uniform machine hierarchy: flattened subsystem tree with an O(n)
+/// footprint and an O(depth) LCA distance oracle. See the module docs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SubsystemTree {
+    /// Flattened nodes; index 0 is the root, children contiguous.
+    nodes: Vec<Subsystem>,
+    /// Leaf node indices in PE order (`leaves[i]` covers the i-th leaf
+    /// block of consecutive PEs).
+    leaves: Vec<u32>,
+    /// Per-PE index of the covering leaf node.
+    leaf_of: Vec<u32>,
+    /// Total PEs.
+    n: usize,
+    /// The canonical grammar spec this tree desugared from (`fattree:…` /
+    /// `dragonfly:…`); `None` for folded or programmatic trees, which
+    /// never cross the wire.
+    spec: Option<String>,
+}
+
+impl SubsystemTree {
+    /// Flatten (and canonicalize) a recursive [`TreeNode`] description.
+    ///
+    /// Validation: every leaf holds ≥ 1 PE, every inner node has ≥ 1 child,
+    /// links are ultrametric (`child.link ≤ parent.link`), and the total PE
+    /// count fits in `u32`.
+    pub fn from_node(root: TreeNode, spec: Option<String>) -> Result<SubsystemTree, String> {
+        let root = root.canonicalize();
+        let total = root.pes();
+        if total == 0 {
+            return Err("subsystem tree covers zero PEs".into());
+        }
+        if total > u32::MAX as u64 {
+            return Err(format!("subsystem tree has {total} PEs (max {})", u32::MAX));
+        }
+        let mut nodes = vec![Subsystem {
+            parent: u32::MAX,
+            link: root.link(),
+            depth: 0,
+            pe_start: 0,
+            pe_count: total as u32,
+            first_child: 0,
+            n_children: 0,
+        }];
+        // stack of (node index, builder node); children of a node are pushed
+        // consecutively, so `first_child .. first_child + n_children` holds
+        let mut work: Vec<(usize, TreeNode)> = vec![(0, root)];
+        while let Some((idx, node)) = work.pop() {
+            match node {
+                TreeNode::Leaf { pes, .. } => {
+                    if pes == 0 {
+                        return Err("leaf subsystem with zero PEs".into());
+                    }
+                }
+                TreeNode::Inner { children, .. } => {
+                    if children.is_empty() {
+                        return Err("inner subsystem with no children".into());
+                    }
+                    let parent_link = nodes[idx].link;
+                    let depth = nodes[idx].depth + 1;
+                    let mut start = nodes[idx].pe_start;
+                    nodes[idx].first_child = nodes.len() as u32;
+                    nodes[idx].n_children = children.len() as u32;
+                    for child in children {
+                        // a unit leaf's link is unobservable — normalize it
+                        // to the parent's so equality and validation are
+                        // canonical
+                        let link = if matches!(child, TreeNode::Leaf { pes: 1, .. }) {
+                            parent_link
+                        } else {
+                            child.link()
+                        };
+                        if link > parent_link {
+                            return Err(format!(
+                                "not ultrametric: child link {link} exceeds parent link \
+                                 {parent_link}"
+                            ));
+                        }
+                        let count = child.pes() as u32;
+                        let child_idx = nodes.len();
+                        nodes.push(Subsystem {
+                            parent: idx as u32,
+                            link,
+                            depth,
+                            pe_start: start,
+                            pe_count: count,
+                            first_child: 0,
+                            n_children: 0,
+                        });
+                        start += count;
+                        work.push((child_idx, child));
+                    }
+                }
+            }
+        }
+        let mut leaves: Vec<u32> = (0..nodes.len() as u32)
+            .filter(|&i| nodes[i as usize].n_children == 0)
+            .collect();
+        leaves.sort_unstable_by_key(|&i| nodes[i as usize].pe_start);
+        let mut leaf_of = vec![0u32; total as usize];
+        for &l in &leaves {
+            let s = &nodes[l as usize];
+            leaf_of[s.pe_start as usize..(s.pe_start + s.pe_count) as usize].fill(l);
+        }
+        Ok(SubsystemTree { nodes, leaves, leaf_of, n: total as usize, spec })
+    }
+
+    /// Desugar a depth-3 fat-tree/Dragonfly shape: `groups[i]` leaf blocks
+    /// of `leaf` PEs each under group `i`; distances `d = [intra-leaf,
+    /// intra-group, cross-group]`. `kind` ("fattree"/"dragonfly") only
+    /// names the canonical spec — the desugared shape is identical.
+    pub fn three_level(
+        kind: &str,
+        groups: &[u64],
+        leaf: u64,
+        d: [Weight; 3],
+    ) -> Result<SubsystemTree, String> {
+        if groups.is_empty() {
+            return Err(format!("{kind} spec needs at least one group"));
+        }
+        if groups.iter().any(|&p| p == 0) || leaf == 0 {
+            return Err(format!("{kind} group sizes and leaf size must be positive"));
+        }
+        if d[0] > d[1] || d[1] > d[2] {
+            return Err(format!(
+                "{kind} distances must be non-decreasing (got {}:{}:{})",
+                d[0], d[1], d[2]
+            ));
+        }
+        let children = groups
+            .iter()
+            .map(|&p| TreeNode::Inner {
+                link: d[1],
+                children: vec![TreeNode::Leaf { pes: leaf, link: d[0] }; p as usize],
+            })
+            .collect();
+        let spec = format!(
+            "{kind}:{}:{leaf}@{}:{}:{}",
+            groups.iter().map(|p| p.to_string()).collect::<Vec<_>>().join(","),
+            d[0],
+            d[1],
+            d[2]
+        );
+        SubsystemTree::from_node(TreeNode::Inner { link: d[2], children }, Some(spec))
+    }
+
+    /// Embed a uniform [`super::Hierarchy`] as a subsystem tree (the
+    /// uniform special case — used by the equivalence property tests; the
+    /// engines keep using `Hierarchy` directly for its shift fast path).
+    pub fn from_hierarchy(h: &super::Hierarchy) -> SubsystemTree {
+        // S is innermost-first: build from the leaf upward
+        let mut node = TreeNode::Leaf { pes: h.s[0], link: h.d[0] };
+        for (&a, &d) in h.s.iter().zip(h.d.iter()).skip(1) {
+            node = TreeNode::Inner { link: d, children: vec![node; a as usize] };
+        }
+        SubsystemTree::from_node(node, None).expect("valid hierarchy embeds")
+    }
+
+    /// The canonical grammar spec, when this tree desugared from one.
+    pub fn spec_str(&self) -> Option<&str> {
+        self.spec.as_deref()
+    }
+
+    /// Flattened nodes (root at index 0, children contiguous).
+    pub fn nodes(&self) -> &[Subsystem] {
+        &self.nodes
+    }
+
+    /// Child node indices of node `i`.
+    pub fn children(&self, i: u32) -> std::ops::Range<u32> {
+        let s = &self.nodes[i as usize];
+        s.first_child..s.first_child + s.n_children
+    }
+
+    /// Leaf node indices in PE order.
+    pub fn leaves(&self) -> &[u32] {
+        &self.leaves
+    }
+
+    /// PE counts of the leaf subsystems, in PE order — the per-block group
+    /// sizes the V-cycle's coarsening and projection consume.
+    pub fn leaf_sizes(&self) -> Vec<u64> {
+        self.leaves.iter().map(|&l| self.nodes[l as usize].pe_count as u64).collect()
+    }
+
+    /// True iff `p` and `q` share a leaf subsystem (the Brandfass et al.
+    /// pair-skip rule generalized to non-uniform trees).
+    #[inline]
+    pub fn same_leaf_group(&self, p: u32, q: u32) -> bool {
+        self.leaf_of[p as usize] == self.leaf_of[q as usize]
+    }
+
+    /// Rebuild node `i`'s subtree as a builder node (PE-range rebased).
+    fn to_node(&self, i: u32) -> TreeNode {
+        let s = &self.nodes[i as usize];
+        if s.n_children == 0 {
+            TreeNode::Leaf { pes: s.pe_count as u64, link: s.link }
+        } else {
+            TreeNode::Inner {
+                link: s.link,
+                children: self.children(i).map(|c| self.to_node(c)).collect(),
+            }
+        }
+    }
+
+    /// Extract node `i`'s subtree as a standalone machine over PEs
+    /// `0 .. pe_count` (used by the parallel subtree pre-pass).
+    pub fn subtree(&self, i: u32) -> SubsystemTree {
+        SubsystemTree::from_node(self.to_node(i), None)
+            .expect("subtree of a valid tree is valid")
+    }
+
+    /// The root's direct children as `(pe_start, standalone sub-machine)`
+    /// blocks — the disjoint top-level blocks the parallel V-cycle pre-pass
+    /// maps independently. `None` when the root has < 2 children (no
+    /// independent blocks to exploit).
+    pub fn top_blocks(&self) -> Option<Vec<(u32, SubsystemTree)>> {
+        if self.nodes[0].n_children < 2 {
+            return None;
+        }
+        Some(
+            self.children(0)
+                .map(|c| (self.nodes[c as usize].pe_start, self.subtree(c)))
+                .collect(),
+        )
+    }
+
+    /// Fold every leaf subsystem into one coarse PE — the deepest-layer
+    /// fold, exact by ultrametricity: the coarse distance between two
+    /// coarse PEs is `D(p, q)` for *any* fine representatives `p, q` of the
+    /// two leaves (their LCA link does not depend on the choice). `None`
+    /// when every leaf is already a single PE (nothing shrinks).
+    pub fn fold_leaves(&self) -> Option<SubsystemTree> {
+        if self.n == self.leaves.len() {
+            return None;
+        }
+        let folded = |i: u32| -> TreeNode { self.fold_node(i) };
+        SubsystemTree::from_node(folded(0), None).ok()
+    }
+
+    fn fold_node(&self, i: u32) -> TreeNode {
+        let s = &self.nodes[i as usize];
+        if s.n_children == 0 {
+            TreeNode::Leaf { pes: 1, link: s.link }
+        } else {
+            TreeNode::Inner {
+                link: s.link,
+                children: self.children(i).map(|c| self.fold_node(c)).collect(),
+            }
+        }
+    }
+
+    /// Fold by explicit per-block sizes: valid only for this tree's own
+    /// leaf sizes (the [`FoldPlan::Blocks`] contract), in which case it is
+    /// [`Self::fold_leaves`].
+    pub fn fold_blocks(&self, sizes: &[u64]) -> Option<SubsystemTree> {
+        if sizes != self.leaf_sizes().as_slice() {
+            return None;
+        }
+        self.fold_leaves()
+    }
+
+    /// The V-cycle coarsening step for this machine: a uniform group fold
+    /// when the gcd of all leaf sizes allows one (halving where even, like
+    /// [`super::Hierarchy`]), else fold whole (unequal) leaves.
+    pub fn fold_plan(&self) -> Option<FoldPlan> {
+        if let Some(g) = Topology::fold_group(self) {
+            return Some(FoldPlan::Uniform(g));
+        }
+        if self.leaves.len() >= 2 && self.n > self.leaves.len() {
+            return Some(FoldPlan::Blocks(self.leaf_sizes()));
+        }
+        None
+    }
+}
+
+impl Topology for SubsystemTree {
+    fn n_pes(&self) -> usize {
+        self.n
+    }
+
+    /// O(depth) LCA walk: the distance is the link weight of the lowest
+    /// common subsystem of the two PEs' leaves.
+    #[inline]
+    fn distance(&self, p: u32, q: u32) -> Weight {
+        if p == q {
+            return 0;
+        }
+        let mut a = self.leaf_of[p as usize] as usize;
+        let mut b = self.leaf_of[q as usize] as usize;
+        while self.nodes[a].depth > self.nodes[b].depth {
+            a = self.nodes[a].parent as usize;
+        }
+        while self.nodes[b].depth > self.nodes[a].depth {
+            b = self.nodes[b].parent as usize;
+        }
+        while a != b {
+            a = self.nodes[a].parent as usize;
+            b = self.nodes[b].parent as usize;
+        }
+        self.nodes[a].link
+    }
+
+    /// Uniform group size when the gcd `g` of all leaf sizes is ≥ 2 (halve
+    /// where even, fold `g` where odd — mirroring the hierarchy rule);
+    /// `None` when leaf sizes are coprime (the non-uniform
+    /// [`FoldPlan::Blocks`] path takes over) or nothing shrinks.
+    fn fold_group(&self) -> Option<u64> {
+        let g = self.leaf_sizes().into_iter().fold(0u64, gcd);
+        if g < 2 {
+            return None;
+        }
+        Some(if g % 2 == 0 { 2 } else { g })
+    }
+
+    /// Divide every leaf by `group` (each group of `group` consecutive PEs
+    /// lies inside one leaf, so this is fully exact). `None` unless `group`
+    /// divides every leaf size.
+    fn fold(&self, group: u64) -> Option<SubsystemTree> {
+        if group < 2 {
+            return None;
+        }
+        if self.leaves.iter().any(|&l| self.nodes[l as usize].pe_count as u64 % group != 0) {
+            return None;
+        }
+        let node = self.fold_div(0, group);
+        SubsystemTree::from_node(node, None).ok()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.nodes.len() * std::mem::size_of::<Subsystem>()
+            + (self.leaf_of.len() + self.leaves.len()) * std::mem::size_of::<u32>()
+    }
+
+    fn kind(&self) -> &'static str {
+        "tree"
+    }
+}
+
+impl SubsystemTree {
+    fn fold_div(&self, i: u32, group: u64) -> TreeNode {
+        let s = &self.nodes[i as usize];
+        if s.n_children == 0 {
+            TreeNode::Leaf { pes: s.pe_count as u64 / group, link: s.link }
+        } else {
+            TreeNode::Inner {
+                link: s.link,
+                children: self.children(i).map(|c| self.fold_div(c, group)).collect(),
+            }
+        }
+    }
+}
+
+fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::topology::{ExplicitTopology, Hierarchy};
+
+    fn fat(groups: &[u64], leaf: u64) -> SubsystemTree {
+        SubsystemTree::three_level("fattree", groups, leaf, [1, 10, 100]).unwrap()
+    }
+
+    #[test]
+    fn fat_tree_distances_by_level() {
+        // pods of 2 and 3 leaves, 4 PEs per leaf: n = 20
+        let t = fat(&[2, 3], 4);
+        assert_eq!(t.n_pes(), 20);
+        assert_eq!(t.distance(0, 0), 0);
+        assert_eq!(t.distance(0, 3), 1); // same leaf
+        assert_eq!(t.distance(0, 4), 10); // same pod, different leaf
+        assert_eq!(t.distance(3, 7), 10);
+        assert_eq!(t.distance(0, 8), 100); // different pod
+        assert_eq!(t.distance(7, 19), 100);
+        assert_eq!(t.distance(8, 19), 10); // both inside the 3-leaf pod
+    }
+
+    #[test]
+    fn distance_is_symmetric_and_ultrametric() {
+        let t = fat(&[3, 2, 4], 3);
+        let n = t.n_pes() as u32;
+        for p in 0..n {
+            for q in 0..n {
+                assert_eq!(t.distance(p, q), t.distance(q, p), "({p},{q})");
+                for r in 0..n {
+                    // ultrametric: d(p,q) ≤ max(d(p,r), d(r,q))
+                    assert!(
+                        t.distance(p, q) <= t.distance(p, r).max(t.distance(r, q)),
+                        "({p},{q},{r})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_tree_matches_hierarchy() {
+        let h = Hierarchy::new(vec![4, 16, 2], vec![1, 10, 100]).unwrap();
+        let t = SubsystemTree::from_hierarchy(&h);
+        assert_eq!(t.n_pes(), h.n_pes());
+        assert_eq!(
+            ExplicitTopology::materialize(&t),
+            ExplicitTopology::materialize(&h)
+        );
+        // and the leaf-group skip rule agrees
+        for (p, q) in [(0u32, 3u32), (3, 4), (124, 127), (63, 64)] {
+            assert_eq!(t.same_leaf_group(p, q), h.same_leaf_group(p, q), "({p},{q})");
+        }
+    }
+
+    #[test]
+    fn canonicalization_collapses_degenerate_layers() {
+        // unit leaves under a pod collapse into one leaf
+        let t = SubsystemTree::three_level("fattree", &[2, 3], 1, [1, 10, 100]).unwrap();
+        assert_eq!(t.n_pes(), 5);
+        assert_eq!(t.leaf_sizes(), vec![2, 3]);
+        assert_eq!(t.distance(0, 1), 10); // pod link, the unit-leaf one is gone
+        assert_eq!(t.distance(0, 2), 100);
+        // single-child chains collapse into the child
+        let chain = TreeNode::Inner {
+            link: 100,
+            children: vec![TreeNode::Inner {
+                link: 10,
+                children: vec![TreeNode::Leaf { pes: 4, link: 1 }],
+            }],
+        };
+        let c = SubsystemTree::from_node(chain, None).unwrap();
+        assert_eq!(c.n_pes(), 4);
+        assert_eq!(c.nodes().len(), 1);
+        assert_eq!(c.distance(0, 3), 1);
+    }
+
+    #[test]
+    fn rejects_non_ultrametric_and_empty() {
+        let bad = TreeNode::Inner {
+            link: 5,
+            children: vec![
+                TreeNode::Leaf { pes: 2, link: 9 }, // child farther than parent
+                TreeNode::Leaf { pes: 2, link: 1 },
+            ],
+        };
+        assert!(SubsystemTree::from_node(bad, None).is_err());
+        assert!(SubsystemTree::from_node(TreeNode::Leaf { pes: 0, link: 1 }, None).is_err());
+        assert!(SubsystemTree::three_level("fattree", &[], 4, [1, 10, 100]).is_err());
+        assert!(SubsystemTree::three_level("fattree", &[2, 0], 4, [1, 10, 100]).is_err());
+        assert!(SubsystemTree::three_level("fattree", &[2, 2], 4, [10, 1, 100]).is_err());
+    }
+
+    #[test]
+    fn uniform_gcd_fold_is_fully_exact() {
+        // leaf sizes 4 and 6: gcd 2 → halving fold, exact for all offsets
+        let mixed = TreeNode::Inner {
+            link: 100,
+            children: vec![
+                TreeNode::Leaf { pes: 4, link: 1 },
+                TreeNode::Leaf { pes: 6, link: 2 },
+            ],
+        };
+        let t = SubsystemTree::from_node(mixed, None).unwrap();
+        assert_eq!(Topology::fold_group(&t), Some(2));
+        let c = Topology::fold(&t, 2).unwrap();
+        assert_eq!(c.n_pes(), 5);
+        for p in 0..5u32 {
+            for q in 0..5u32 {
+                if p == q {
+                    continue;
+                }
+                for b in 0..2u32 {
+                    for b2 in 0..2u32 {
+                        assert_eq!(
+                            c.distance(p, q),
+                            t.distance(2 * p + b, 2 * q + b2),
+                            "({p},{q}) offsets ({b},{b2})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn leaf_fold_is_exact_per_representative() {
+        // coprime leaf sizes (3, 5, 4): no uniform fold — whole leaves fold
+        let t = SubsystemTree::three_level("fattree", &[1, 2], 1, [1, 10, 100]).unwrap();
+        assert!(t.fold_plan().is_none() || t.n_pes() > t.leaves().len());
+        let mixed = TreeNode::Inner {
+            link: 100,
+            children: vec![
+                TreeNode::Inner {
+                    link: 10,
+                    children: vec![
+                        TreeNode::Leaf { pes: 3, link: 1 },
+                        TreeNode::Leaf { pes: 5, link: 1 },
+                    ],
+                },
+                TreeNode::Leaf { pes: 4, link: 2 },
+            ],
+        };
+        let t = SubsystemTree::from_node(mixed, None).unwrap();
+        assert_eq!(Topology::fold_group(&t), None);
+        let plan = t.fold_plan().unwrap();
+        assert_eq!(plan, FoldPlan::Blocks(vec![3, 5, 4]));
+        let c = t.fold_leaves().unwrap();
+        assert_eq!(c.n_pes(), 3);
+        // coarse distance = fine distance of any representatives
+        let starts = [0u32, 3, 8];
+        let sizes = [3u32, 5, 4];
+        for p in 0..3u32 {
+            for q in 0..3u32 {
+                if p == q {
+                    continue;
+                }
+                for b in 0..sizes[p as usize] {
+                    for b2 in 0..sizes[q as usize] {
+                        assert_eq!(
+                            c.distance(p, q),
+                            t.distance(starts[p as usize] + b, starts[q as usize] + b2)
+                        );
+                    }
+                }
+            }
+        }
+        // the folded tree canonicalized: 2+1 coarse PEs, pod link survives
+        assert_eq!(c.distance(0, 1), 10);
+        assert_eq!(c.distance(0, 2), 100);
+    }
+
+    #[test]
+    fn fold_chain_terminates() {
+        let mut t = fat(&[3, 5, 2], 4);
+        let mut n = t.n_pes();
+        let mut steps = 0;
+        while let Some(plan) = t.fold_plan() {
+            let c = match &plan {
+                FoldPlan::Uniform(g) => Topology::fold(&t, *g).unwrap(),
+                FoldPlan::Blocks(sizes) => t.fold_blocks(sizes).unwrap(),
+            };
+            assert!(c.n_pes() < n, "fold must shrink ({} -> {})", n, c.n_pes());
+            n = c.n_pes();
+            t = c;
+            steps += 1;
+            assert!(steps < 64, "fold chain must terminate");
+        }
+        assert!(steps >= 2);
+    }
+
+    #[test]
+    fn top_blocks_rebase_to_zero() {
+        let t = fat(&[2, 3], 4);
+        let blocks = t.top_blocks().unwrap();
+        assert_eq!(blocks.len(), 2);
+        assert_eq!(blocks[0].0, 0);
+        assert_eq!(blocks[1].0, 8);
+        assert_eq!(blocks[0].1.n_pes(), 8);
+        assert_eq!(blocks[1].1.n_pes(), 12);
+        // block distances match the parent tree's intra-block distances
+        for (start, sub) in &blocks {
+            for p in 0..sub.n_pes() as u32 {
+                for q in 0..sub.n_pes() as u32 {
+                    assert_eq!(sub.distance(p, q), t.distance(start + p, start + q));
+                }
+            }
+        }
+        // a single flat leaf has no blocks
+        let flat = SubsystemTree::from_node(TreeNode::Leaf { pes: 8, link: 1 }, None).unwrap();
+        assert!(flat.top_blocks().is_none());
+    }
+
+    #[test]
+    fn memory_is_linear_not_quadratic() {
+        let groups: Vec<u64> = (0..64).map(|i| 8 + (i % 5)).collect();
+        let t = SubsystemTree::three_level("fattree", &groups, 16, [1, 10, 100]).unwrap();
+        let n = t.n_pes();
+        assert!(n > 8_000);
+        // far below the n² matrix (which would be ≥ n²·8 bytes)
+        assert!(t.memory_bytes() < 64 * n, "tree holds {} bytes", t.memory_bytes());
+    }
+}

@@ -213,6 +213,96 @@ pub fn coarsen_groups(g: &Graph, group: usize, rng: &mut Rng) -> Option<Level> {
     Some(Level { coarse, map })
 }
 
+/// Heavy-edge grouping with *per-cluster* targets: cluster `c` (in cluster
+/// creation order) absorbs exactly `sizes[c]` vertices, generalizing
+/// [`coarsen_groups`] to the unequal blocks of a non-uniform
+/// [`crate::model::topology::SubsystemTree`] fold (leaf `c` of the machine
+/// folds to coarse PE `c` with `sizes[c]` fine PEs). The greedy affinity
+/// rule and the id-order pool completion are identical to
+/// [`coarsen_groups`]; only the stopping size per cluster differs. The
+/// coarse graph has exactly `sizes.len()` vertices. Deterministic for a
+/// given RNG state. Returns `None` unless `sizes` has at least 2 entries,
+/// every entry is positive, the entries sum to `n`, and at least one entry
+/// exceeds 1 (all-unit sizes would not shrink the graph). All-equal sizes
+/// delegate to [`coarsen_groups`], bit-for-bit.
+pub fn coarsen_blocks(g: &Graph, sizes: &[u64], rng: &mut Rng) -> Option<Level> {
+    let n = g.n();
+    if sizes.len() < 2 || sizes.iter().any(|&s| s == 0) {
+        return None;
+    }
+    if sizes.iter().sum::<u64>() != n as u64 || sizes.len() == n {
+        return None;
+    }
+    if sizes.iter().all(|&s| s == sizes[0]) {
+        return coarsen_groups(g, sizes[0] as usize, rng);
+    }
+    let mut map = vec![u32::MAX; n];
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut affinity = vec![0u64; n];
+    let mut touched: Vec<u32> = Vec::new();
+    let mut next_fill = 0usize;
+    let mut cluster = 0u32;
+    for &seed in &order {
+        if map[seed as usize] != u32::MAX {
+            continue;
+        }
+        debug_assert!((cluster as usize) < sizes.len());
+        let target = sizes[cluster as usize] as usize;
+        map[seed as usize] = cluster;
+        let mut members = 1usize;
+        let mut frontier = seed;
+        loop {
+            for (u, w) in g.edges(frontier) {
+                if map[u as usize] == u32::MAX {
+                    if affinity[u as usize] == 0 {
+                        touched.push(u);
+                    }
+                    affinity[u as usize] += w;
+                }
+            }
+            if members == target {
+                break;
+            }
+            let mut best: Option<(u32, u64)> = None;
+            for &u in &touched {
+                if map[u as usize] != u32::MAX {
+                    continue;
+                }
+                let w = affinity[u as usize];
+                let better = match best {
+                    None => true,
+                    Some((bu, bw)) => w > bw || (w == bw && u < bu),
+                };
+                if better {
+                    best = Some((u, w));
+                }
+            }
+            frontier = match best {
+                Some((u, _)) => u,
+                None => {
+                    while next_fill < n && map[next_fill] != u32::MAX {
+                        next_fill += 1;
+                    }
+                    debug_assert!(next_fill < n, "sizes summing to n leave enough fill vertices");
+                    next_fill as u32
+                }
+            };
+            map[frontier as usize] = cluster;
+            members += 1;
+        }
+        for &u in &touched {
+            affinity[u as usize] = 0;
+        }
+        touched.clear();
+        cluster += 1;
+    }
+    debug_assert_eq!(cluster as usize, sizes.len());
+    let coarse = contract(g, &map, cluster as usize);
+    debug_assert_eq!(coarse.n(), sizes.len());
+    Some(Level { coarse, map })
+}
+
 /// Coarsen until at most `limit` vertices remain or the matching stalls.
 /// Returns the levels from finest to coarsest (empty if `g` is small).
 pub fn coarsen_to(g: &Graph, limit: usize, rng: &mut Rng) -> Vec<Level> {
@@ -387,6 +477,63 @@ mod tests {
         let g = grid2d(6, 6);
         let a = coarsen_groups(&g, 3, &mut Rng::new(15)).unwrap();
         let b = coarsen_groups(&g, 3, &mut Rng::new(15)).unwrap();
+        assert_eq!(a.map, b.map);
+    }
+
+    #[test]
+    fn blocks_hit_exact_unequal_sizes() {
+        let g = grid2d(6, 6); // 36 vertices
+        for sizes in [vec![12u64, 24], vec![3, 5, 7, 21], vec![1, 35], vec![10, 1, 25]] {
+            let mut rng = Rng::new(20);
+            let level = coarsen_blocks(&g, &sizes, &mut rng).unwrap();
+            assert_eq!(level.coarse.n(), sizes.len(), "sizes {sizes:?}");
+            assert_eq!(level.coarse.total_node_weight(), 36, "sizes {sizes:?}");
+            assert_eq!(level.coarse.validate(), Ok(()), "sizes {sizes:?}");
+            let mut counts = vec![0u64; level.coarse.n()];
+            for &c in &level.map {
+                counts[c as usize] += 1;
+            }
+            assert_eq!(counts, sizes, "cluster c must get exactly sizes[c] members");
+        }
+    }
+
+    #[test]
+    fn blocks_of_equal_sizes_match_groups_bit_for_bit() {
+        let g = grid2d(6, 6);
+        let a = coarsen_blocks(&g, &[12, 12, 12], &mut Rng::new(21)).unwrap();
+        let b = coarsen_groups(&g, 12, &mut Rng::new(21)).unwrap();
+        assert_eq!(a.map, b.map);
+        assert_eq!(a.coarse, b.coarse);
+    }
+
+    #[test]
+    fn blocks_handle_edgeless_and_star() {
+        let g = from_edges(9, &[]);
+        let level = coarsen_blocks(&g, &[4, 5], &mut Rng::new(22)).unwrap();
+        assert_eq!(level.coarse.n(), 2);
+        assert_eq!(level.coarse.m(), 0);
+        let edges: Vec<(u32, u32, u64)> = (1..15u32).map(|i| (0, i, 1)).collect();
+        let star = from_edges(15, &edges);
+        let level = coarsen_blocks(&star, &[3, 5, 7], &mut Rng::new(23)).unwrap();
+        assert_eq!(level.coarse.n(), 3);
+        assert_eq!(level.coarse.validate(), Ok(()));
+    }
+
+    #[test]
+    fn blocks_reject_bad_sizes() {
+        let g = from_edges(10, &[]);
+        let mut rng = Rng::new(24);
+        assert!(coarsen_blocks(&g, &[3, 5], &mut rng).is_none()); // sum != n
+        assert!(coarsen_blocks(&g, &[10], &mut rng).is_none()); // single block
+        assert!(coarsen_blocks(&g, &[0, 10], &mut rng).is_none()); // zero size
+        assert!(coarsen_blocks(&g, &[1; 10], &mut rng).is_none()); // no shrink
+    }
+
+    #[test]
+    fn blocks_are_deterministic() {
+        let g = grid2d(6, 6);
+        let a = coarsen_blocks(&g, &[7, 9, 20], &mut Rng::new(25)).unwrap();
+        let b = coarsen_blocks(&g, &[7, 9, 20], &mut Rng::new(25)).unwrap();
         assert_eq!(a.map, b.map);
     }
 

@@ -74,6 +74,42 @@ pub fn recursive_bisection(g: &Graph, k: usize, cfg: &PartitionConfig, rng: &mut
     Partition { block, k }
 }
 
+/// Recursive bisection into `sizes.len()` blocks where block `b` gets
+/// exactly `sizes[b]` vertices — the unequal-blocks generalization of
+/// [`recursive_bisection`] that machine-aware multi-section over a
+/// non-uniform [`crate::model::topology::SubsystemTree`] needs (child
+/// subtrees prescribe the block sizes). `sizes` must sum to `g.n()` and
+/// every entry must be positive.
+pub fn partition_exact_sizes(
+    g: &Graph,
+    sizes: &[Weight],
+    cfg: &PartitionConfig,
+    rng: &mut Rng,
+) -> Partition {
+    assert!(!sizes.is_empty(), "at least one block");
+    assert!(sizes.iter().all(|&s| s > 0), "block sizes must be positive: {sizes:?}");
+    assert_eq!(sizes.iter().sum::<Weight>(), g.n() as Weight, "sizes must sum to n");
+    let owned;
+    let g = if cfg.by_count && g.node_weights().iter().any(|&w| w != 1) {
+        let mut b = Builder::new(g.n());
+        for v in 0..g.n() as NodeId {
+            for (u, w) in g.edges(v) {
+                if v < u {
+                    b.add_edge(v, u, w);
+                }
+            }
+        }
+        owned = b.build();
+        &owned
+    } else {
+        g
+    };
+    let mut block = vec![0u32; g.n()];
+    let nodes: Vec<NodeId> = (0..g.n() as NodeId).collect();
+    split_recursive(g, &nodes, sizes, 0, &mut block, cfg, rng);
+    Partition { block, k: sizes.len() }
+}
+
 /// Recursively split the subgraph induced by `nodes` into blocks
 /// `first_block..first_block + sizes.len()` with the given exact sizes.
 fn split_recursive(
@@ -150,6 +186,30 @@ mod tests {
         let p = recursive_bisection(&g, 2, &cfg, &mut rng);
         let counts = p.block_weights(&g, true);
         assert_eq!(counts, vec![4, 4]);
+    }
+
+    #[test]
+    fn exact_sizes_partition_hits_prescription() {
+        let g = grid2d(10, 7); // 70 vertices
+        let mut rng = Rng::new(5);
+        let sizes: Vec<Weight> = vec![10, 25, 35];
+        let p = partition_exact_sizes(&g, &sizes, &PartitionConfig::default(), &mut rng);
+        assert_eq!(p.k, 3);
+        let w = p.block_weights(&g, true);
+        assert_eq!(w, sizes);
+        // equal prescription agrees with the k-way entry point's sizes
+        let q = partition_exact_sizes(&g, &[10; 7], &PartitionConfig::default(), &mut Rng::new(6));
+        assert_eq!(q.block_weights(&g, true), vec![10; 7]);
+    }
+
+    #[test]
+    fn exact_sizes_single_block_and_determinism() {
+        let g = grid2d(6, 6);
+        let p = partition_exact_sizes(&g, &[36], &PartitionConfig::default(), &mut Rng::new(7));
+        assert!(p.block.iter().all(|&b| b == 0));
+        let a = partition_exact_sizes(&g, &[7, 9, 20], &PartitionConfig::default(), &mut Rng::new(8));
+        let b = partition_exact_sizes(&g, &[7, 9, 20], &PartitionConfig::default(), &mut Rng::new(8));
+        assert_eq!(a.block, b.block);
     }
 
     #[test]

@@ -809,3 +809,65 @@ fn grid_and_torus_sessions_are_deterministic() {
         a.mapping.validate().unwrap();
     }
 }
+
+#[test]
+fn fattree_sessions_thread_invariant_gc_ml_and_remap() {
+    // the tentpole's determinism contract under a NON-uniform machine: gc,
+    // ml and delta-patched remap sessions reproduce the T=1 bits at
+    // T ∈ {1, 2, 4} on a fat-tree with unequal pods (48 and 80 PEs — the
+    // parallel subtree pre-pass now runs over unequal top-level blocks,
+    // with per-block seeds keeping results thread-invariant)
+    use qapmap::graph::EdgeDelta;
+    let mut rng = Rng::new(60);
+    let g = random_geometric_graph(128, &mut rng);
+    let machine = Machine::parse("fattree:3,5:16@1:10:100").unwrap(); // 16·(3+5) = 128
+    assert_eq!(machine.n_pes(), 128);
+
+    // one fixed weight-only drift batch, shared by every thread count
+    let mut edges = Vec::new();
+    for u in 0..g.n() as u32 {
+        for (v, w) in g.edges(u) {
+            if v > u {
+                edges.push((u, v, w));
+            }
+        }
+    }
+    let mut drng = Rng::new(62);
+    let deltas: Vec<EdgeDelta> = (0..(edges.len() / 50).max(4))
+        .map(|_| {
+            let (u, v, w) = edges[drng.index(edges.len())];
+            EdgeDelta { u, v, w: w + 1 + drng.next_bounded(3) }
+        })
+        .collect();
+
+    for algo in ["topdown+gc:nccyc2", "topdown+gc:nc2", "ml:topdown+gc:nc2", "ml:topdown+Nc2"] {
+        let mk = |t: usize| {
+            MapJobBuilder::for_machine(g.clone(), machine.clone())
+                .algorithm_name(algo)
+                .unwrap()
+                .repetitions(2)
+                .coarsen_limit(16)
+                .seed(61)
+                .threads(t)
+                .build()
+                .unwrap()
+        };
+        let run_all = |t: usize| {
+            let mut s = MapSession::new(mk(t));
+            let cold = s.run();
+            cold.mapping.validate().unwrap();
+            let out = s.remap(&deltas).unwrap();
+            out.report.mapping.validate().unwrap();
+            (
+                cold.mapping.sigma.clone(),
+                cold.objective,
+                out.report.mapping.sigma.clone(),
+                out.report.objective,
+            )
+        };
+        let base = run_all(1);
+        for t in [2usize, 4] {
+            assert_eq!(run_all(t), base, "{algo} T={t}");
+        }
+    }
+}

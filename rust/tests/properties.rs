@@ -296,6 +296,154 @@ fn prop_machine_folds_are_exact() {
     }
 }
 
+/// Random non-uniform subsystem tree via the `fattree:`/`dragonfly:`
+/// grammar (random pod counts and sizes, random increasing distances).
+fn random_tree_machine(rng: &mut Rng) -> Machine {
+    let kind = if rng.chance(0.5) { "fattree" } else { "dragonfly" };
+    let k = 2 + rng.index(4); // 2..=5 pods
+    let groups: Vec<String> = (0..k).map(|_| (1 + rng.index(6)).to_string()).collect();
+    let leaf = 1 + rng.index(8);
+    let d0 = 1 + rng.next_bounded(4);
+    let d1 = d0 + 1 + rng.next_bounded(10);
+    let d2 = d1 + 1 + rng.next_bounded(50);
+    Machine::parse(&format!("{kind}:{}:{leaf}@{d0}:{d1}:{d2}", groups.join(",")))
+        .unwrap_or_else(|e| panic!("generated spec must parse: {e}"))
+}
+
+#[test]
+fn prop_subsystem_trees_agree_with_explicit_matrix() {
+    // every desugared fattree/dragonfly spec answers bit-for-bit like its
+    // memoized ExplicitTopology, entry for entry
+    for seed in 400..415u64 {
+        let mut rng = Rng::new(seed);
+        let m = random_tree_machine(&mut rng);
+        let n = m.n_pes() as u32;
+        let e = Machine::explicit(&m);
+        for p in 0..n {
+            for q in 0..n {
+                assert_eq!(m.distance(p, q), e.distance(p, q), "seed {seed} ({p},{q})");
+            }
+        }
+        // ultrametric by construction
+        for _ in 0..300 {
+            let p = rng.next_bounded(n as u64) as u32;
+            let q = rng.next_bounded(n as u64) as u32;
+            let r = rng.next_bounded(n as u64) as u32;
+            assert_eq!(m.distance(p, q), m.distance(q, p), "seed {seed}");
+            assert_eq!(m.distance(p, q) == 0, p == q, "seed {seed}");
+            assert!(
+                m.distance(p, q) <= m.distance(p, r).max(m.distance(r, q)),
+                "seed {seed}: not ultrametric at ({p},{q},{r})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_tree_fold_chains_are_exact() {
+    // run random non-uniform trees down the FoldPlan chain: uniform folds
+    // are exact over ALL member-offset pairs (ultrametricity), and
+    // unequal-block folds are exact over all members of each leaf block
+    use qapmap::model::topology::FoldPlan;
+    for seed in 415..430u64 {
+        let mut rng = Rng::new(seed);
+        let mut fine = random_tree_machine(&mut rng);
+        let mut steps = 0usize;
+        while let Some(plan) = fine.fold_plan() {
+            let coarse = match fine.fold_by(&plan) {
+                Some(c) => c,
+                None => break,
+            };
+            let starts: Vec<u64> = match &plan {
+                FoldPlan::Uniform(g) => {
+                    (0..coarse.n_pes() as u64).map(|p| p * g).collect()
+                }
+                FoldPlan::Blocks(sizes) => sizes
+                    .iter()
+                    .scan(0u64, |acc, &s| {
+                        let st = *acc;
+                        *acc += s;
+                        Some(st)
+                    })
+                    .collect(),
+            };
+            let size_of = |p: usize| -> u64 {
+                match &plan {
+                    FoldPlan::Uniform(g) => *g,
+                    FoldPlan::Blocks(sizes) => sizes[p],
+                }
+            };
+            assert_eq!(plan.coarse_pes(fine.n_pes()), coarse.n_pes(), "seed {seed}");
+            for p in 0..coarse.n_pes() {
+                for q in 0..coarse.n_pes() {
+                    if p == q {
+                        assert_eq!(coarse.distance(p as u32, q as u32), 0);
+                        continue;
+                    }
+                    for bp in 0..size_of(p) {
+                        for bq in 0..size_of(q) {
+                            assert_eq!(
+                                coarse.distance(p as u32, q as u32),
+                                fine.distance(
+                                    (starts[p] + bp) as u32,
+                                    (starts[q] + bq) as u32
+                                ),
+                                "seed {seed} step {steps}: ({p},{q}) offsets ({bp},{bq})"
+                            );
+                        }
+                    }
+                }
+            }
+            fine = coarse;
+            steps += 1;
+            assert!(steps < 64, "seed {seed}: fold chain must terminate");
+        }
+        assert!(fine.n_pes() >= 1, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_uniform_hierarchy_externally_unchanged() {
+    // the refactor's regression anchor: the paper's uniform spec parses to
+    // the Hier variant (not a tree), with the exact distances and fold
+    // chain it always had — and its SubsystemTree embedding agrees
+    // distance-for-distance (the uniform special case)
+    use qapmap::model::topology::{FoldPlan, SubsystemTree};
+    let m = Machine::parse("hier:4:16:2@1:10:100").unwrap();
+    let h = m.hier().expect("uniform specs must stay on the Hierarchy fast path").clone();
+    assert_eq!(m.n_pes(), 128);
+    assert_eq!(m.spec().unwrap(), "hier:4:16:2@1:10:100");
+    // spot-check the classic distances
+    assert_eq!(m.distance(0, 1), 1); // same leaf group of 4
+    assert_eq!(m.distance(0, 4), 10); // same middle subsystem
+    assert_eq!(m.distance(0, 64), 100); // across the top split
+    assert_eq!(m.distance(127, 126), 1);
+    // fold chain: uniform plans only, same coarse sizes as ever
+    let mut sizes = Vec::new();
+    let mut fine = m.clone();
+    while let Some(plan) = fine.fold_plan() {
+        assert!(matches!(plan, FoldPlan::Uniform(_)), "uniform machines fold uniformly");
+        fine = match fine.fold_by(&plan) {
+            Some(c) => c,
+            None => break,
+        };
+        sizes.push(fine.n_pes());
+    }
+    assert!(!sizes.is_empty(), "hier:4:16:2 must fold at least once");
+    assert!(sizes.windows(2).all(|w| w[1] < w[0]));
+    // tree embedding of the same hierarchy: identical metric
+    let t = SubsystemTree::from_hierarchy(&h);
+    for p in 0..128u32 {
+        for q in 0..128u32 {
+            assert_eq!(
+                m.distance(p, q),
+                qapmap::model::topology::Topology::distance(&t, p, q),
+                "({p},{q})"
+            );
+        }
+    }
+}
+
 #[test]
 fn prop_neighborhood_nesting() {
     for seed in 85..95u64 {
